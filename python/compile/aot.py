@@ -1,0 +1,123 @@
+"""AOT compiler: lower every L1/L2 entry point to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``: jax>=0.5
+emits protos with 64-bit instruction ids which the rust side's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``).  The text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Run via ``make artifacts`` -> ``python -m compile.aot --out ../artifacts``.
+Python never runs after this point: the rust binary loads the text artifacts
+through PJRT and is self-contained.
+
+Artifacts (all f32, tupled outputs):
+  routing_step_n{N}_w{W}.hlo.txt   (phi, lam, cap, adj, eta) -> (phi', cost, t, F)
+  mirror_step_r{R}_k{K}.hlo.txt    (phi, delta, mask, eta)   -> (phi',)
+  cost_eval_n{N}.hlo.txt           (flow, cap, mask)         -> (total, d, dprime)
+  dnn_{version}_b{B}.hlo.txt       (frames,)                 -> (enhanced,)
+  manifest.json                    shape/arity metadata for the rust registry
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Shape buckets.  N covers every experiment in the paper: the augmented graph
+# of ER(n<=40) with W=3 has n + 1 + W <= 44 nodes; named topologies <= 26.
+ROUTING_BUCKETS = ((32, 3), (48, 3), (64, 3))
+MIRROR_BUCKETS = ((64, 32), (128, 64), (256, 64))
+COST_BUCKETS = (32, 48, 64)
+DNN_BATCHES = (1, 8)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, args) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def emit(out_dir: str) -> dict:
+    manifest = {"format": "hlo-text", "entries": {}}
+
+    def write(name: str, fn, args, meta: dict):
+        t0 = time.time()
+        text = lower_entry(fn, args)
+        # Self-check: HLO text elides large constants; any `constant({...})`
+        # would silently corrupt the artifact on the rust side.
+        if "constant({...})" in text:
+            raise RuntimeError(
+                f"{name}: elided large constant in HLO text - pass the data "
+                "as a parameter instead (see make_dnn)")
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        meta = dict(meta)
+        meta["file"] = f"{name}.hlo.txt"
+        meta["inputs"] = [list(a.shape) for a in args]
+        manifest["entries"][name] = meta
+        print(f"  {name:28s} {len(text):>9d} chars  {time.time()-t0:5.1f}s")
+
+    for n, w in ROUTING_BUCKETS:
+        fn, args = model.make_routing_step(n, w)
+        write(f"routing_step_n{n}_w{w}", fn, args,
+              {"kind": "routing_step", "n": n, "w": w, "outputs": 4})
+
+    for r, k in MIRROR_BUCKETS:
+        fn, args = model.make_mirror_step(r, k)
+        write(f"mirror_step_r{r}_k{k}", fn, args,
+              {"kind": "mirror_step", "rows": r, "k": k, "outputs": 1})
+
+    for n in COST_BUCKETS:
+        fn, args = model.make_cost_eval(n)
+        write(f"cost_eval_n{n}", fn, args,
+              {"kind": "cost_eval", "n": n, "outputs": 3})
+
+    for version, _h, _d in model.DNN_VERSIONS:
+        params = None
+        for b in DNN_BATCHES:
+            fn, args, params = model.make_dnn(version, b)
+            write(f"dnn_{version}_b{b}", fn, args,
+                  {"kind": "dnn", "version": version, "batch": b,
+                   "frame_dim": model.FRAME_DIM, "outputs": 1,
+                   "weights_file": f"dnn_{version}.weights.bin",
+                   "weight_shapes": [list(s.shape) for wt, bias in params
+                                     for s in (wt, bias)],
+                   "flops_per_frame": model.dnn_flops(version)})
+        # Sidecar: flat little-endian f32 weights in argument order.
+        import numpy as np
+        flat = np.concatenate([np.asarray(t, dtype="<f4").ravel()
+                               for wt, bias in params for t in (wt, bias)])
+        flat.tofile(os.path.join(out_dir, f"dnn_{version}.weights.bin"))
+        print(f"  dnn_{version}.weights.bin        {flat.nbytes:>9d} bytes")
+
+    return manifest
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--out", default="../artifacts")
+    args = p.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    print(f"[aot] lowering artifacts -> {args.out}")
+    manifest = emit(args.out)
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"[aot] wrote manifest with {len(manifest['entries'])} entries")
+
+
+if __name__ == "__main__":
+    main()

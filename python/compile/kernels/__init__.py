@@ -1,0 +1,5 @@
+"""Layer-1 Pallas kernels (build-time only; AOT-lowered into artifacts/)."""
+
+from . import ref  # noqa: F401
+from .mirror_step import mirror_step  # noqa: F401
+from .cost_eval import cost_eval  # noqa: F401

@@ -1,0 +1,98 @@
+"""Pallas kernel: batched masked exponentiated-gradient update (paper eq. 22).
+
+This is the inner-loop hot spot of OMD-RT: every routing iteration, every
+(node, session) pair re-weights its out-neighbour simplex by
+``phi * exp(-eta * delta)`` and renormalizes.  Rows are (node, session) pairs,
+columns are candidate next hops padded to ``K`` lanes.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the update is a
+bandwidth-bound fused row-softmax.  We tile rows into VMEM blocks of
+``BLOCK_ROWS`` whole rows (K is padded to the 128-lane vector width by the
+caller), so each element makes exactly one HBM->VMEM->HBM round trip and the
+exp/mask/normalize chain is fused in-register.  ``interpret=True`` is
+mandatory on this CPU image — real TPU lowering emits a Mosaic custom call the
+CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import _MASK_PENALTY, MAX_EXP_SPAN, PHI_FLOOR
+
+# Rows per VMEM block.  At K=128 lanes this is 64*128*4B*3 inputs ~= 96 KiB of
+# VMEM per block — comfortably inside the ~16 MiB VMEM budget with double
+# buffering, and large enough to amortize grid overhead.
+DEFAULT_BLOCK_ROWS = 64
+
+
+def _mirror_kernel(phi_ref, delta_ref, mask_ref, eta_ref, out_ref):
+    """One [BLOCK_ROWS, K] tile: fused mask + capped exp-reweight + normalize.
+
+    Applies the same per-row trust region as the rust native path
+    (`routing::omd::MAX_EXP_SPAN`): the exponent span of one update is
+    capped, bounding the per-iteration multiplicative change of any lane.
+    """
+    mask = mask_ref[...]
+    phi = phi_ref[...] * mask
+    eta = eta_ref[0]
+    live = (phi > 0).astype(phi.dtype)
+    z = -eta * delta_ref[...]
+    zmax = jnp.max(jnp.where(live > 0, z, -jnp.inf), axis=-1, keepdims=True)
+    zmin = jnp.min(jnp.where(live > 0, z, jnp.inf), axis=-1, keepdims=True)
+    zmax = jnp.where(jnp.isfinite(zmax), zmax, 0.0)
+    zmin = jnp.where(jnp.isfinite(zmin), zmin, 0.0)
+    span = zmax - zmin
+    scale = jnp.where(span > MAX_EXP_SPAN, MAX_EXP_SPAN / jnp.maximum(span, 1e-30), 1.0)
+    zs = jnp.where(mask > 0, (z - zmax) * scale, -_MASK_PENALTY)
+    w = phi * jnp.exp(zs)
+    s = jnp.sum(w, axis=-1, keepdims=True)
+    out = jnp.where(s > 0, w / jnp.where(s > 0, s, 1.0), phi)
+    out = out * mask
+    out = jnp.where((live > 0) & (out < PHI_FLOOR), PHI_FLOOR, out)
+    s2 = jnp.sum(out, axis=-1, keepdims=True)
+    out = jnp.where(s2 > 0, out / jnp.where(s2 > 0, s2, 1.0), out)
+    out_ref[...] = out * mask
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def mirror_step(phi: jnp.ndarray, delta: jnp.ndarray, mask: jnp.ndarray,
+                eta: jnp.ndarray, *, block_rows: int | None = None) -> jnp.ndarray:
+    """Apply the OMD routing update to a [R, K] batch of simplex rows.
+
+    Functionally identical to :func:`compile.kernels.ref.mirror_step_ref`.
+    If ``block_rows`` is given it must divide R (the AOT shapes guarantee
+    this; the rust caller pads with masked zero rows); by default the largest
+    divisor of R not exceeding :data:`DEFAULT_BLOCK_ROWS` is used.
+    """
+    r, k = phi.shape
+    if block_rows is None:
+        block_rows = DEFAULT_BLOCK_ROWS
+        while r % block_rows != 0:
+            block_rows //= 2
+        block_rows = max(block_rows, 1)
+        if r % block_rows != 0:
+            block_rows = 1
+    if r % block_rows != 0:
+        raise ValueError(f"rows {r} not a multiple of block_rows {block_rows}")
+    eta = jnp.asarray(eta, jnp.float32).reshape((1,))
+    grid = (r // block_rows,)
+    row_spec = pl.BlockSpec((block_rows, k), lambda i: (i, 0))
+    return pl.pallas_call(
+        _mirror_kernel,
+        grid=grid,
+        in_specs=[
+            row_spec,
+            row_spec,
+            row_spec,
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=row_spec,
+        out_shape=jax.ShapeDtypeStruct((r, k), jnp.float32),
+        interpret=True,
+    )(phi.astype(jnp.float32), delta.astype(jnp.float32),
+      mask.astype(jnp.float32), eta)

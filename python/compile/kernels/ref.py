@@ -1,0 +1,107 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every Pallas kernel in this package has an exact functional twin here, written
+with plain ``jax.numpy`` ops only.  ``python/tests`` asserts kernel == ref via
+``numpy.testing.assert_allclose`` over hypothesis-generated shapes/values, and
+the L2 model (:mod:`compile.model`) is itself validated against compositions
+of these references.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Large positive constant used to zero out masked lanes inside exp() without
+# producing inf/NaN under f32.
+_MASK_PENALTY = 60.0
+
+# Per-row trust region: the exponent span of one update is capped at this
+# value (multiplicative change per lane bounded by e^±MAX_EXP_SPAN per
+# iteration). Must match rust's `routing::omd::MAX_EXP_SPAN` — the native
+# and XLA hot paths apply the identical rule. Rationale: exp-family
+# marginals can exceed e^30 early on; an uncapped step zeroes lanes that
+# multiplicative updates can never resurrect.
+MAX_EXP_SPAN = 40.0
+
+# Interior floor: after each update every live lane keeps at least this
+# fraction of the row's mass (matches rust's `routing::omd::PHI_FLOOR`).
+PHI_FLOOR = 1e-12
+
+
+def mirror_step_ref(phi: jnp.ndarray, delta: jnp.ndarray, mask: jnp.ndarray,
+                    eta: jnp.ndarray) -> jnp.ndarray:
+    """Batched masked exponentiated-gradient (online mirror descent) update.
+
+    Implements eq. (22) of the paper for a batch of rows, where each row is one
+    (node i, session w) pair and the K columns are candidate next hops::
+
+        phi'_ij = phi_ij * exp(-eta * delta_ij) / sum_j phi_ij * exp(-eta * delta_ij)
+
+    Masked-out lanes (mask == 0) contribute nothing and stay 0.  Rows whose
+    masked weight sum underflows keep their input row (this mirrors the
+    t_i(w) == 0 "don't care" convention of the paper: such rows are never fed
+    to the kernel with meaningful gradients).
+
+    Args:
+      phi:   [R, K] f32, current routing fractions (each row sums to 1 over mask).
+      delta: [R, K] f32, marginal costs ``delta_phi_ij(w)``.
+      mask:  [R, K] f32 in {0, 1}, allowed next-hop lanes.
+      eta:   scalar f32 step size.
+
+    Returns:
+      [R, K] f32 updated fractions, row-normalized over the mask.
+    """
+    phi = phi * mask
+    live = (phi > 0).astype(phi.dtype)
+    z = -eta * delta
+    # Stabilize: per-row max/min over *live* lanes, exponent span capped at
+    # MAX_EXP_SPAN (trust region; see module docstring).
+    zmax = jnp.max(jnp.where(live > 0, z, -jnp.inf), axis=-1, keepdims=True)
+    zmin = jnp.min(jnp.where(live > 0, z, jnp.inf), axis=-1, keepdims=True)
+    zmax = jnp.where(jnp.isfinite(zmax), zmax, 0.0)
+    zmin = jnp.where(jnp.isfinite(zmin), zmin, 0.0)
+    span = zmax - zmin
+    scale = jnp.where(span > MAX_EXP_SPAN, MAX_EXP_SPAN / jnp.maximum(span, 1e-30), 1.0)
+    zs = jnp.where(mask > 0, (z - zmax) * scale, -_MASK_PENALTY)
+    w = phi * jnp.exp(zs)
+    s = jnp.sum(w, axis=-1, keepdims=True)
+    out = jnp.where(s > 0, w / jnp.where(s > 0, s, 1.0), phi)
+    out = out * mask
+    # interior floor + renormalize (live lanes only)
+    out = jnp.where((live > 0) & (out < PHI_FLOOR), PHI_FLOOR, out)
+    s2 = jnp.sum(out, axis=-1, keepdims=True)
+    out = jnp.where(s2 > 0, out / jnp.where(s2 > 0, s2, 1.0), out)
+    return out * mask
+
+
+def cost_eval_ref(flow: jnp.ndarray, cap: jnp.ndarray,
+                  mask: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Exponential link-cost family ``D_ij = exp(F_ij / C_ij)`` (paper §IV).
+
+    Returns, masked to real links:
+      total: scalar  sum of link costs,
+      d:     [...] per-link cost,
+      dprime:[...] per-link marginal cost  dD/dF = exp(F/C)/C.
+    """
+    safe_cap = jnp.where(cap > 0, cap, 1.0)
+    ratio = flow / safe_cap
+    d = jnp.exp(ratio) * mask
+    dprime = (jnp.exp(ratio) / safe_cap) * mask
+    total = jnp.sum(d)
+    return total, d, dprime
+
+
+def queue_cost_ref(flow: jnp.ndarray, cap: jnp.ndarray, mask: jnp.ndarray,
+                   eps: float = 1e-3) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """M/M/1 queueing cost ``D_ij = F / (C - F)`` with a capped barrier.
+
+    The hard constraint F < C is softened by clamping the denominator at
+    ``eps * C`` so AOT-compiled artifacts never emit inf (the optimizer keeps
+    flows strictly inside capacity once it converges).
+    """
+    safe_cap = jnp.where(cap > 0, cap, 1.0)
+    slack = jnp.maximum(safe_cap - flow, eps * safe_cap)
+    d = (flow / slack) * mask
+    dprime = (safe_cap / (slack * slack)) * mask
+    total = jnp.sum(d)
+    return total, d, dprime

@@ -1,0 +1,124 @@
+"""Tiny python twin of the rust graph substrate, for L2 tests only.
+
+Builds the augmented graph (virtual source node 0, virtual destinations at
+the end) and per-session DAG masks with the same strictly-closer-to-
+destination rule the rust side uses (DESIGN.md §4), so routing_step tests
+exercise realistic inputs.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+
+import numpy as np
+
+
+def bfs_dist_to(adj_rev: list[list[int]], dst: int, n: int) -> np.ndarray:
+    dist = np.full(n, np.inf)
+    dist[dst] = 0
+    q = deque([dst])
+    while q:
+        u = q.popleft()
+        for v in adj_rev[u]:
+            if dist[v] == np.inf:
+                dist[v] = dist[u] + 1
+                q.append(v)
+    return dist
+
+
+def build_augmented(n_real: int, edges: list[tuple[int, int]],
+                    placements: list[int], w: int, cap_real: dict | float = 10.0,
+                    cap_src: float = 1e6, cap_comp: float = 10.0):
+    """Return (n_total, adj [W,N,N], cap [N,N]) for the augmented graph.
+
+    Node layout: 0 = S (virtual source), 1..n_real = real devices,
+    n_real+1 .. n_real+w = D_1..D_w.  ``placements[i]`` is the version hosted
+    by real device i (0-based).  S connects to every device hosting version 0
+    (the "smallest model in proximity" convention of the paper); every device
+    connects to its own D_w via a virtual computation link.
+    """
+    n = 1 + n_real + w
+    src = 0
+
+    def dnode(wv):
+        return 1 + n_real + wv
+
+    # adjacency of the augmented directed graph (session-agnostic)
+    out = [[] for _ in range(n)]
+    inn = [[] for _ in range(n)]
+    cap = np.zeros((n, n), np.float32)
+
+    def add(u, v, c):
+        out[u].append(v)
+        inn[v].append(u)
+        cap[u, v] = c
+
+    for (u, v) in edges:
+        c = cap_real[(u, v)] if isinstance(cap_real, dict) else cap_real
+        add(1 + u, 1 + v, c)
+    for i, p in enumerate(placements):
+        if p == 0:
+            add(src, 1 + i, cap_src)
+        add(1 + i, dnode(p), cap_comp)
+
+    # per-session DAG masks: edge (u,v) allowed for session wv iff v is
+    # strictly closer to D_wv than u, with the constraint that a device
+    # hosting version wv only forwards to D_wv.
+    adj = np.zeros((w, n, n), np.float32)
+    for wv in range(w):
+        dist = bfs_dist_to(inn, dnode(wv), n)
+        for u in range(n):
+            if u == dnode(wv):
+                continue
+            hosts = u > 0 and u <= n_real and placements[u - 1] == wv
+            for v in out[u]:
+                if hosts and v != dnode(wv):
+                    continue
+                if v <= n_real and v >= 1 and placements[v - 1] == wv and v != dnode(wv):
+                    # relaying into a same-version device means consumption
+                    pass
+                if dist[v] < dist[u]:
+                    adj[wv, u, v] = 1.0
+    return n, adj, cap
+
+
+def uniform_phi(adj: np.ndarray) -> np.ndarray:
+    """Paper's initializer: uniform over each node's allowed out-lanes."""
+    deg = adj.sum(axis=2, keepdims=True)
+    phi = np.divide(adj, deg, out=np.zeros_like(adj), where=deg > 0)
+    return phi.astype(np.float32)
+
+
+def diamond(w: int = 2):
+    """4 real nodes: 0 -> {1,2} -> 3; versions: node0 v0, node3 v1, relay mid."""
+    edges = [(0, 1), (0, 2), (1, 3), (2, 3)]
+    placements = [0, 0, 0, 1][:4]
+    return build_augmented(4, edges, placements, w)
+
+
+def random_er(rng: np.random.Generator, n_real: int, p: float, w: int):
+    """Connected-ER with symmetric directed edges + random placements.
+
+    Keeps resampling until strongly connected enough that every session DAG
+    reaches all nodes (checked by the caller via mask row sums).
+    """
+    while True:
+        edges = []
+        for u in range(n_real):
+            for v in range(u + 1, n_real):
+                if rng.random() < p:
+                    edges.append((u, v))
+                    edges.append((v, u))
+        placements = [rng.integers(0, w) for _ in range(n_real)]
+        for wv in range(w):
+            if wv not in placements:
+                placements[int(rng.integers(0, n_real))] = wv
+        if 0 not in placements:
+            placements[0] = 0
+        n, adj, cap = build_augmented(
+            n_real, edges, [int(x) for x in placements], w,
+            cap_real=float(rng.random() * 10 + 5))
+        # usable iff the source can reach every destination
+        ok = all(adj[wv, 0].sum() > 0 for wv in range(w))
+        if ok:
+            return n, adj, cap

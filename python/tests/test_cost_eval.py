@@ -1,0 +1,65 @@
+"""L1 cost_eval Pallas kernel vs references, plus cost-family properties."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.cost_eval import cost_eval
+from compile.kernels.ref import cost_eval_ref, queue_cost_ref
+
+
+def random_links(rng, n):
+    mask = (rng.random((n, n)) < 0.3).astype(np.float32)
+    np.fill_diagonal(mask, 0)
+    cap = (rng.random((n, n)) * 20 + 1).astype(np.float32) * mask
+    flow = (rng.random((n, n)) * 10).astype(np.float32) * mask
+    return flow, cap, mask
+
+
+@pytest.mark.parametrize("n", [4, 16, 32, 64])
+def test_matches_ref(n):
+    rng = np.random.default_rng(n)
+    flow, cap, mask = random_links(rng, n)
+    total, d, dp = cost_eval(jnp.array(flow), jnp.array(cap), jnp.array(mask))
+    rt, rd, rdp = cost_eval_ref(jnp.array(flow), jnp.array(cap), jnp.array(mask))
+    np.testing.assert_allclose(float(total), float(rt), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(rd), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(dp), np.asarray(rdp), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 48), seed=st.integers(0, 2**31 - 1))
+def test_property_sweep(n, seed):
+    rng = np.random.default_rng(seed)
+    flow, cap, mask = random_links(rng, n)
+    total, d, dp = cost_eval(jnp.array(flow), jnp.array(cap), jnp.array(mask))
+    d, dp = np.asarray(d), np.asarray(dp)
+    # masked out links contribute nothing
+    assert np.all(d * (1 - mask) == 0)
+    # marginal cost positive on live links
+    assert np.all(dp[mask > 0] > 0)
+    # convexity in F: D(F) grows at least linearly with marginal at 0
+    assert float(total) >= mask.sum() - 1e-3  # exp(0)=1 per live link at F=0... lower bound
+
+
+def test_zero_flow_cost_is_edge_count():
+    n = 8
+    mask = np.ones((n, n), np.float32)
+    cap = np.full((n, n), 5.0, np.float32)
+    flow = np.zeros((n, n), np.float32)
+    total, d, dp = cost_eval(jnp.array(flow), jnp.array(cap), jnp.array(mask))
+    np.testing.assert_allclose(float(total), n * n, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(dp), 1.0 / cap, rtol=1e-6)
+
+
+def test_queue_cost_ref_barrier():
+    flow = jnp.array([[4.999]], jnp.float32)
+    cap = jnp.array([[5.0]], jnp.float32)
+    mask = jnp.ones((1, 1), jnp.float32)
+    total, d, dp = queue_cost_ref(flow, cap, mask)
+    assert float(total) > 100  # near-saturated link is very expensive
+    assert np.isfinite(float(total))
+    # beyond capacity still finite (clamped barrier)
+    total2, _, _ = queue_cost_ref(jnp.array([[7.0]], jnp.float32), cap, mask)
+    assert np.isfinite(float(total2))

@@ -1,0 +1,58 @@
+"""Served DNN family: shapes, determinism, version ordering, arg specs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+@pytest.mark.parametrize("version", [v for v, _, _ in model.DNN_VERSIONS])
+def test_forward_shape(version):
+    params = model.dnn_params(version)
+    x = jnp.ones((2, model.FRAME_DIM), jnp.float32)
+    y = model.mlp_forward(params, x)
+    assert y.shape == (2, model.FRAME_DIM)
+    assert np.all(np.isfinite(np.asarray(y)))
+
+
+def test_params_deterministic():
+    a = model.dnn_params("small")
+    b = model.dnn_params("small")
+    for (w1, b1), (w2, b2) in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(w1), np.asarray(w2))
+
+
+def test_versions_distinct():
+    a = model.dnn_params("small")
+    b = model.dnn_params("medium")
+    assert a[0][0].shape != b[0][0].shape
+
+
+def test_flops_strictly_increasing():
+    f = [model.dnn_flops(v) for v, _, _ in model.DNN_VERSIONS]
+    assert f[0] < f[1] < f[2]
+    assert f[2] / f[0] > 10  # the versions differ by >1 order of magnitude
+
+
+def test_make_dnn_arg_specs_match_params():
+    fn, args, params = model.make_dnn("small", 4)
+    assert args[0].shape == (4, model.FRAME_DIM)
+    flat_shapes = [a.shape for a in args[1:]]
+    expect = [s.shape for wt, b in params for s in (wt, b)]
+    assert flat_shapes == expect
+    # and the fn actually runs with those params
+    x = jnp.zeros((4, model.FRAME_DIM), jnp.float32)
+    flat = [t for wt, b in params for t in (wt, b)]
+    (y,) = fn(x, *flat)
+    assert y.shape == (4, model.FRAME_DIM)
+
+
+def test_residual_head_zero_weights_identity():
+    # with zero weights the network is the identity (residual head)
+    params = [(jnp.zeros((model.FRAME_DIM, 16)), jnp.zeros(16)),
+              (jnp.zeros((16, model.FRAME_DIM)), jnp.zeros(model.FRAME_DIM))]
+    x = jnp.arange(model.FRAME_DIM, dtype=jnp.float32)[None, :]
+    y = model.mlp_forward(params, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x))

@@ -1,0 +1,81 @@
+"""L1 mirror_step Pallas kernel vs pure-jnp reference (hypothesis sweeps)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.mirror_step import mirror_step
+from compile.kernels.ref import mirror_step_ref
+
+
+def random_instance(rng, r, k, full_mask=False):
+    mask = np.ones((r, k), np.float32) if full_mask else \
+        (rng.random((r, k)) < 0.6).astype(np.float32)
+    mask[:, 0] = 1.0  # every row keeps at least one lane
+    phi = rng.random((r, k)).astype(np.float32) * mask
+    phi /= np.maximum(phi.sum(1, keepdims=True), 1e-9)
+    delta = (rng.random((r, k)) * 5.0).astype(np.float32)
+    return phi, delta, mask
+
+
+@pytest.mark.parametrize("r,k", [(8, 4), (64, 32), (128, 64), (256, 64)])
+def test_matches_ref(r, k):
+    rng = np.random.default_rng(r * 1000 + k)
+    phi, delta, mask = random_instance(rng, r, k)
+    out = mirror_step(jnp.array(phi), jnp.array(delta), jnp.array(mask), 0.3)
+    ref = mirror_step_ref(jnp.array(phi), jnp.array(delta), jnp.array(mask), 0.3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    r_pow=st.integers(1, 5),
+    k=st.integers(2, 40),
+    eta=st.floats(0.0, 5.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_sweep(r_pow, k, eta, seed):
+    r = 2 ** r_pow
+    rng = np.random.default_rng(seed)
+    phi, delta, mask = random_instance(rng, r, k)
+    out = np.asarray(mirror_step(jnp.array(phi), jnp.array(delta),
+                                 jnp.array(mask), eta))
+    ref = np.asarray(mirror_step_ref(jnp.array(phi), jnp.array(delta),
+                                     jnp.array(mask), eta))
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
+    # Invariants: rows stay on the simplex, masked lanes stay zero.
+    np.testing.assert_allclose(out.sum(1), np.ones(r), rtol=1e-4, atol=1e-4)
+    assert np.all(out * (1 - mask) == 0)
+    assert np.all(out >= 0)
+
+
+def test_zero_eta_is_identity():
+    rng = np.random.default_rng(7)
+    phi, delta, mask = random_instance(rng, 64, 16)
+    out = np.asarray(mirror_step(jnp.array(phi), jnp.array(delta),
+                                 jnp.array(mask), 0.0))
+    np.testing.assert_allclose(out, phi, rtol=1e-5, atol=1e-6)
+
+
+def test_prefers_cheaper_lane():
+    # Two lanes, lane 1 has much larger marginal cost -> weight moves to lane 0.
+    phi = jnp.full((4, 2), 0.5, jnp.float32)
+    delta = jnp.array([[0.0, 10.0]] * 4, jnp.float32)
+    mask = jnp.ones((4, 2), jnp.float32)
+    out = np.asarray(mirror_step(phi, delta, mask, 1.0))
+    assert np.all(out[:, 0] > 0.99)
+
+
+def test_degenerate_single_lane_row():
+    phi = jnp.array([[1.0, 0.0]] * 2, jnp.float32)
+    delta = jnp.array([[3.0, 1.0]] * 2, jnp.float32)
+    mask = jnp.array([[1.0, 0.0]] * 2, jnp.float32)
+    out = np.asarray(mirror_step(phi, delta, mask, 2.0))
+    np.testing.assert_allclose(out, np.array([[1.0, 0.0]] * 2), atol=1e-6)
+
+
+def test_non_divisible_rows_raise():
+    phi = jnp.ones((3, 4), jnp.float32) / 4
+    with pytest.raises(ValueError):
+        mirror_step(phi, phi, jnp.ones((3, 4), jnp.float32), 1.0, block_rows=2)

@@ -1,0 +1,116 @@
+"""L2 routing_step: pallas path == jnp oracle path; paper invariants hold."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from tests import netutil
+
+
+def run_step(phi, lam, cap, adj, eta, use_pallas):
+    return model.routing_step(
+        jnp.array(phi), jnp.array(lam, jnp.float32), jnp.array(cap),
+        jnp.array(adj), jnp.float32(eta), use_pallas=use_pallas)
+
+
+def test_pallas_matches_oracle_diamond():
+    n, adj, cap = netutil.diamond()
+    phi = netutil.uniform_phi(adj)
+    lam = np.array([3.0, 2.0], np.float32)
+    outs_p = run_step(phi, lam, cap, adj, 0.2, True)
+    outs_j = run_step(phi, lam, cap, adj, 0.2, False)
+    for a, b in zip(outs_p, outs_j):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), n_real=st.integers(4, 10))
+def test_pallas_matches_oracle_random(seed, n_real):
+    rng = np.random.default_rng(seed)
+    n, adj, cap = netutil.random_er(rng, n_real, 0.5, 2)
+    phi = netutil.uniform_phi(adj)
+    lam = np.array([2.0, 1.0], np.float32)
+    outs_p = run_step(phi, lam, cap, adj, 0.1, True)
+    outs_j = run_step(phi, lam, cap, adj, 0.1, False)
+    for a, b in zip(outs_p, outs_j):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+def test_flow_conservation():
+    """All admitted traffic reaches the virtual destinations (eq. 1)."""
+    n, adj, cap = netutil.diamond()
+    phi = netutil.uniform_phi(adj)
+    lam = np.array([3.0, 2.0], np.float32)
+    _, _, t, flows = run_step(phi, lam, cap, adj, 0.1, False)
+    t = np.asarray(t)
+    w = adj.shape[0]
+    for wv in range(w):
+        dnode = n - w + wv
+        np.testing.assert_allclose(t[wv, dnode], lam[wv], rtol=1e-5)
+    # total link flow out of S equals total admitted rate
+    flows = np.asarray(flows)
+    np.testing.assert_allclose(flows[0].sum(), lam.sum(), rtol=1e-5)
+
+
+def test_cost_decreases_over_iterations():
+    """Monotone descent (Theorem 4's eq. 67) for small eta."""
+    rng = np.random.default_rng(42)
+    n, adj, cap = netutil.random_er(rng, 8, 0.5, 2)
+    phi = netutil.uniform_phi(adj)
+    lam = np.array([4.0, 3.0], np.float32)
+    costs = []
+    for _ in range(20):
+        phi_n, cost, _, _ = run_step(phi, lam, cap, adj, 0.05, False)
+        costs.append(float(cost))
+        phi = np.asarray(phi_n)
+    diffs = np.diff(costs)
+    assert np.all(diffs <= 1e-5), f"cost increased: {costs}"
+    assert costs[-1] < costs[0]
+
+
+def test_simplex_preserved():
+    n, adj, cap = netutil.diamond()
+    phi = netutil.uniform_phi(adj)
+    lam = np.array([3.0, 2.0], np.float32)
+    phi_n, _, _, _ = run_step(phi, lam, cap, adj, 0.5, False)
+    phi_n = np.asarray(phi_n)
+    rowsum = phi_n.sum(axis=2)
+    live = netutil.uniform_phi(adj).sum(axis=2) > 0
+    np.testing.assert_allclose(rowsum[live], 1.0, rtol=1e-4, atol=1e-4)
+    assert np.all(phi_n >= 0)
+    assert np.all(phi_n * (1 - adj) == 0)
+
+
+def test_stationarity_at_convergence():
+    """At the fixed point, marginals are equalized on each live row (Thm 3)."""
+    rng = np.random.default_rng(3)
+    n, adj, cap = netutil.random_er(rng, 6, 0.6, 2)
+    phi = netutil.uniform_phi(adj)
+    lam = np.array([2.0, 2.0], np.float32)
+    for _ in range(400):
+        phi_n, cost, t, _ = run_step(phi, lam, cap, adj, 0.3, False)
+        phi = np.asarray(phi_n)
+    # recompute marginals at the fixed point via one more oracle step pieces
+    phi_j = jnp.array(phi)
+    t = model.propagate_rates(phi_j, jnp.array(lam), n)
+    flows = model.link_flows(phi_j, t)
+    from compile.kernels.ref import cost_eval_ref
+    union = (adj.sum(0) > 0).astype(np.float32)
+    _, _, dprime = cost_eval_ref(flows, jnp.array(cap), jnp.array(union))
+    r = model.marginal_sweep(phi_j, dprime, n)
+    delta = np.asarray(model.routing_marginals(dprime, r))
+    t = np.asarray(t)
+    for wv in range(adj.shape[0]):
+        for i in range(n):
+            lanes = adj[wv, i] > 0
+            if t[wv, i] < 1e-6 or lanes.sum() < 2:
+                continue
+            support = lanes & (phi[wv, i] > 1e-4)
+            if support.sum() < 2:
+                continue
+            vals = delta[wv, i][support]
+            # equalized within tolerance on the support (eq. 17)
+            assert vals.max() - vals.min() < 0.05 * max(1.0, abs(vals).max()), \
+                f"w={wv} i={i} delta spread {vals}"

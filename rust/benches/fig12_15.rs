@@ -1,0 +1,27 @@
+//! Bench: regenerate **Figs. 12–15** — OMD-RT vs SGP convergence on the
+//! four named topologies (Abilene / Balanced-tree / Fog / GEANT) with
+//! Table II parameters.
+//!
+//! Expected shape (paper): OMD-RT approaches OPT within ~50 iterations on
+//! every topology; SGP converges more slowly.
+
+use jowr::config::ExperimentConfig;
+use jowr::experiments;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let cfg = ExperimentConfig::paper_default();
+    let iters = if quick { 30 } else { 100 };
+    println!("=== fig12-15: named topologies ({iters} iters) ===");
+    experiments::table2();
+    let results = experiments::fig12_15(&cfg, iters);
+    assert_eq!(results.len(), 4);
+    for (name, s, opt_cost) in &results {
+        let omd = s.get("omd_rt").unwrap();
+        let last = *omd.last().unwrap();
+        let gap = (last - opt_cost) / opt_cost;
+        println!("{name}: OMD final gap to OPT = {gap:.2e}");
+        assert!(gap < 0.02, "{name}: OMD should approach OPT (gap {gap})");
+    }
+    println!("fig12_15 OK");
+}

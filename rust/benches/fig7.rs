@@ -1,0 +1,35 @@
+//! Bench: regenerate **Fig. 7** — OMD-RT vs SGP vs OPT convergence on
+//! Connected-ER(25, 0.2), λ=60, W=3, D=exp(F/C).
+//!
+//! Expected shape (paper): both converge to OPT; OMD-RT dominates the first
+//! ~10 iterations and is essentially at OPT by iteration 50 while SGP is
+//! still converging.
+
+use jowr::config::ExperimentConfig;
+use jowr::experiments;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let cfg = ExperimentConfig::paper_default();
+    let iters = if quick { 30 } else { 200 };
+    println!("=== fig7: routing convergence (ER(25,0.2), {iters} iters) ===");
+    let (s, opt_cost) = experiments::fig7(&cfg, iters);
+    let omd = s.get("omd_rt").unwrap();
+    let sgp = s.get("sgp").unwrap();
+    // paper-shape assertions
+    let at10 = 10.min(omd.len() - 1);
+    println!(
+        "iter 10: OMD {:.4}  SGP {:.4}  |  iter 50: OMD {:.4}  SGP {:.4}  |  OPT {:.4}",
+        omd[at10],
+        sgp[at10],
+        omd[50.min(omd.len() - 1)],
+        sgp[50.min(sgp.len() - 1)],
+        opt_cost
+    );
+    assert!(omd[at10] <= sgp[at10] + 1e-9, "OMD must dominate SGP early");
+    let omd50 = omd[50.min(omd.len() - 1)];
+    let gap = (omd50 - opt_cost) / opt_cost;
+    println!("OMD@50 relative gap to OPT: {:.2e}", gap);
+    assert!(gap < 0.01, "OMD should nearly reach OPT by iter 50 (gap {gap})");
+    println!("fig7 OK");
+}

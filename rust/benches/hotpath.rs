@@ -1,0 +1,100 @@
+//! Bench: hot-path microbenchmarks + native-vs-XLA ablation.
+//!
+//! Covers the per-iteration cost breakdown of OMD-RT (flow propagation,
+//! marginal sweep, mirror update) on paper-sized instances, and compares
+//! the native rust mirror/routing step against the AOT-compiled XLA
+//! artifacts when `artifacts/` is present. Feeds EXPERIMENTS.md §Perf.
+
+use jowr::config::ExperimentConfig;
+use jowr::model::flow::{self, Phi};
+use jowr::prelude::*;
+use jowr::routing::marginal;
+use jowr::routing::Router;
+use jowr::util::bench::Bencher;
+use jowr::util::rng::Rng;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut b = if quick { Bencher::quick() } else { Bencher::default() };
+
+    for &n in &[25usize, 40] {
+        let mut cfg = ExperimentConfig::paper_default();
+        cfg.n_nodes = n;
+        let mut rng = Rng::seed_from(cfg.seed);
+        let problem = cfg.build_problem(&mut rng);
+        let lam = problem.uniform_allocation();
+        let phi = Phi::uniform(&problem.net);
+        let t = flow::node_rates(&problem.net, &phi, &lam);
+        let flows = flow::edge_flows(&problem.net, &phi, &t);
+
+        println!("--- ER({n}) hot path ---");
+        b.bench(&format!("n{n}/flow_propagation"), || {
+            flow::node_rates(&problem.net, &phi, &lam)
+        });
+        b.bench(&format!("n{n}/edge_flows"), || {
+            flow::edge_flows(&problem.net, &phi, &t)
+        });
+        b.bench(&format!("n{n}/marginal_broadcast"), || {
+            marginal::compute(&problem.net, problem.cost, &phi, &flows)
+        });
+        b.bench(&format!("n{n}/omd_full_iteration"), || {
+            let mut r = OmdRouter::new(0.5);
+            let mut p = phi.clone();
+            r.step(&problem, &lam, &mut p);
+            p
+        });
+        b.bench(&format!("n{n}/sgp_full_iteration"), || {
+            let mut r = SgpRouter::new();
+            let mut p = phi.clone();
+            r.step(&problem, &lam, &mut p);
+            p
+        });
+
+        // native vs XLA ablation (skipped gracefully without artifacts)
+        match jowr::runtime::XlaRuntime::try_default() {
+            Some(mut rt) => {
+                match jowr::runtime::routing_step::DenseNet::build(&rt, &problem) {
+                    Ok(dense) => {
+                        // warm compile
+                        let mut p = phi.clone();
+                        let _ = jowr::runtime::routing_step::routing_step_xla(
+                            &mut rt, &dense, &problem, &mut p, &lam, 0.5,
+                        );
+                        b.bench(&format!("n{n}/xla_routing_step"), || {
+                            let mut p = phi.clone();
+                            jowr::runtime::routing_step::routing_step_xla(
+                                &mut rt, &dense, &problem, &mut p, &lam, 0.5,
+                            )
+                            .expect("xla routing step")
+                        });
+                    }
+                    Err(e) => println!("(xla routing_step unavailable: {e})"),
+                }
+            }
+            None => println!("(artifacts/ not built — skipping XLA ablation)"),
+        }
+    }
+
+    // summary table
+    println!("\n=== hotpath summary ===");
+    for m in &b.results {
+        println!("{}", m.report());
+    }
+    // shape assertion: one OMD iteration must be far cheaper than one SGP
+    // iteration (the Fig. 9 effect at micro scale)
+    let omd = b
+        .results
+        .iter()
+        .find(|m| m.name == "n40/omd_full_iteration")
+        .map(|m| m.median_s());
+    let sgp = b
+        .results
+        .iter()
+        .find(|m| m.name == "n40/sgp_full_iteration")
+        .map(|m| m.median_s());
+    if let (Some(o), Some(s)) = (omd, sgp) {
+        println!("n40 per-iteration speedup OMD vs SGP: {:.1}x", s / o);
+        assert!(s / o > 3.0, "OMD iteration should be much cheaper than SGP");
+    }
+    println!("hotpath OK");
+}

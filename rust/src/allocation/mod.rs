@@ -1,0 +1,82 @@
+//! Workload allocation layer (paper §III-A / §III-C).
+//!
+//! * [`gsoma::GsOma`] — Algorithm 1: nested-loop gradient sampling + online
+//!   mirror ascent, with the routing oracle run to convergence per sample.
+//! * [`omad::Omad`] — Algorithm 3: single-loop variant, one routing
+//!   iteration per allocation step.
+//! * [`project`] — Euclidean projection onto `[δ, λ−δ]^W ∩ {Σ = λ}`.
+//! * [`oracle`] — the *unknown utility* boundary: allocators only ever see
+//!   observed `U(Λ)` values, never the utility functions.
+
+pub mod gsoma;
+pub mod omad;
+pub mod oracle;
+pub mod project;
+
+pub use oracle::{AnalyticOracle, SingleStepOracle, UtilityOracle};
+
+/// Trajectory of an allocation run.
+#[derive(Clone, Debug)]
+pub struct AllocationState {
+    /// Final allocation Λ.
+    pub lam: Vec<f64>,
+    /// Observed total network utility per outer iteration (the Fig. 10/11
+    /// trajectory: `U(Λ^t, φ(Λ^t))` evaluated at the iterate itself).
+    pub trajectory: Vec<f64>,
+    /// Outer iterations performed.
+    pub iterations: usize,
+    /// Total routing iterations consumed across all oracle calls (the
+    /// nested- vs single-loop comparison metric).
+    pub routing_iterations: usize,
+    pub elapsed_s: f64,
+}
+
+/// A workload allocation algorithm operating against an opaque utility
+/// oracle (the only window onto the unknown utility functions).
+pub trait Allocator {
+    fn name(&self) -> &'static str;
+
+    /// Run up to `max_outer` outer iterations from the paper's uniform
+    /// initializer `Λ¹ = (λ/W)·1`.
+    fn run(&mut self, oracle: &mut dyn UtilityOracle, max_outer: usize) -> AllocationState;
+}
+
+/// Online mirror ascent update on the λ-scaled simplex (paper eq. 10).
+pub fn mirror_ascent_update(lam: &mut [f64], grad: &[f64], eta: f64, total: f64) {
+    debug_assert_eq!(lam.len(), grad.len());
+    // stabilize: shift by max exponent
+    let zmax = grad
+        .iter()
+        .map(|g| eta * g)
+        .fold(f64::NEG_INFINITY, f64::max);
+    let mut sum = 0.0;
+    for (l, g) in lam.iter_mut().zip(grad) {
+        *l *= (eta * g - zmax).exp();
+        sum += *l;
+    }
+    if sum > 0.0 {
+        let scale = total / sum;
+        lam.iter_mut().for_each(|l| *l *= scale);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mirror_ascent_preserves_total_and_prefers_high_gradient() {
+        let mut lam = vec![20.0, 20.0, 20.0];
+        mirror_ascent_update(&mut lam, &[1.0, 0.0, -1.0], 0.5, 60.0);
+        assert!((lam.iter().sum::<f64>() - 60.0).abs() < 1e-9);
+        assert!(lam[0] > lam[1] && lam[1] > lam[2]);
+    }
+
+    #[test]
+    fn mirror_ascent_zero_grad_identity() {
+        let mut lam = vec![10.0, 30.0, 20.0];
+        mirror_ascent_update(&mut lam, &[0.0, 0.0, 0.0], 1.0, 60.0);
+        assert!((lam[0] - 10.0).abs() < 1e-9);
+        assert!((lam[1] - 30.0).abs() < 1e-9);
+    }
+}

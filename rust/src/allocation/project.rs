@@ -1,0 +1,137 @@
+//! Euclidean projection onto the capped simplex
+//! `{ x : Σ x_w = total,  lo ≤ x_w ≤ hi }` — the paper's projection step
+//! `P_{[δ, λ−δ]^W}` (Algorithm 1 line 9), which keeps every perturbed
+//! allocation `Λ ± δ e_w` inside the domain `[0, λ]^W`.
+//!
+//! The KKT solution is `x_w(ν) = clamp(y_w − ν, lo, hi)` with the scalar
+//! dual ν chosen so the sum constraint holds; `Σ x(ν)` is non-increasing in
+//! ν, so ν is found by bisection to machine precision.
+
+/// Project `y` onto `{Σ = total, lo ≤ x ≤ hi}` (requires feasibility:
+/// `d·lo ≤ total ≤ d·hi`).
+pub fn project_capped_simplex(y: &[f64], total: f64, lo: f64, hi: f64) -> Vec<f64> {
+    let d = y.len();
+    assert!(d > 0);
+    assert!(lo <= hi);
+    assert!(
+        d as f64 * lo <= total + 1e-9 && total <= d as f64 * hi + 1e-9,
+        "infeasible box-simplex: d={d} lo={lo} hi={hi} total={total}"
+    );
+    let eval = |nu: f64| -> f64 { y.iter().map(|&v| (v - nu).clamp(lo, hi)).sum() };
+    // bracket ν
+    let ymin = y.iter().cloned().fold(f64::INFINITY, f64::min);
+    let ymax = y.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let mut a = ymin - hi - 1.0; // sum = d*hi ≥ total
+    let mut b = ymax - lo + 1.0; // sum = d*lo ≤ total
+    for _ in 0..200 {
+        let mid = 0.5 * (a + b);
+        if eval(mid) >= total {
+            a = mid;
+        } else {
+            b = mid;
+        }
+        if b - a < 1e-14 * (1.0 + ymax.abs()) {
+            break;
+        }
+    }
+    let nu = 0.5 * (a + b);
+    let mut x: Vec<f64> = y.iter().map(|&v| (v - nu).clamp(lo, hi)).collect();
+    // exact-sum cleanup: distribute the residual over non-saturated entries
+    let resid = total - x.iter().sum::<f64>();
+    if resid.abs() > 1e-12 {
+        let free: Vec<usize> = (0..d)
+            .filter(|&i| x[i] > lo + 1e-12 && x[i] < hi - 1e-12)
+            .collect();
+        if !free.is_empty() {
+            let share = resid / free.len() as f64;
+            for i in free {
+                x[i] = (x[i] + share).clamp(lo, hi);
+            }
+        }
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+    use crate::util::rng::Rng;
+
+    fn check_feasible(x: &[f64], total: f64, lo: f64, hi: f64) {
+        assert!((x.iter().sum::<f64>() - total).abs() < 1e-8, "sum {:?}", x);
+        for &v in x {
+            assert!(v >= lo - 1e-9 && v <= hi + 1e-9, "bounds {v}");
+        }
+    }
+
+    #[test]
+    fn identity_on_feasible_points() {
+        let y = vec![10.0, 20.0, 30.0];
+        let x = project_capped_simplex(&y, 60.0, 1.0, 59.0);
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a - b).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn clamps_and_redistributes() {
+        // one coordinate wants everything; caps force spread
+        let y = vec![100.0, 0.0, 0.0];
+        let x = project_capped_simplex(&y, 60.0, 1.0, 58.0);
+        check_feasible(&x, 60.0, 1.0, 58.0);
+        assert!((x[0] - 58.0).abs() < 1e-8);
+        assert!((x[1] - 1.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn property_feasibility_and_optimality() {
+        testkit::forall(7, 100, 8, |g| {
+            let d = g.usize_in(2, 8);
+            let total = g.f64_in(5.0, 100.0);
+            let lo = g.f64_in(0.0, total / d as f64 * 0.9);
+            let hi = g.f64_in(total / d as f64 * 1.1, total);
+            let y: Vec<f64> = (0..d).map(|_| g.f64_in(-50.0, 150.0)).collect();
+            let x = project_capped_simplex(&y, total, lo, hi);
+            let sum: f64 = x.iter().sum();
+            crate::prop_assert_close!(sum, total, 1e-7);
+            for &v in &x {
+                crate::prop_assert!(
+                    v >= lo - 1e-8 && v <= hi + 1e-8,
+                    "bound violated: {v} not in [{lo},{hi}]"
+                );
+            }
+            // optimality via random feasible comparisons
+            let mut rng = Rng::seed_from(g.rng.next_u64());
+            let dist = |a: &[f64]| -> f64 {
+                a.iter().zip(&y).map(|(p, q)| (p - q) * (p - q)).sum()
+            };
+            let dx = dist(&x);
+            for _ in 0..20 {
+                let mut z: Vec<f64> =
+                    (0..d).map(|_| rng.uniform(lo, hi)).collect();
+                // rescale into the box-simplex via the projection itself
+                z = project_capped_simplex(&z, total, lo, hi);
+                crate::prop_assert!(
+                    dx <= dist(&z) + 1e-6,
+                    "not the nearest point: {dx} > {}",
+                    dist(&z)
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tight_box_forces_uniform() {
+        let y = vec![5.0, 1.0, 0.0];
+        let x = project_capped_simplex(&y, 6.0, 2.0, 2.0);
+        check_feasible(&x, 6.0, 2.0, 2.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "infeasible")]
+    fn rejects_infeasible_box() {
+        project_capped_simplex(&[1.0, 1.0], 10.0, 0.0, 1.0);
+    }
+}

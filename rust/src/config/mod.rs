@@ -1,0 +1,197 @@
+//! Experiment configuration (JSON files + CLI overrides).
+//!
+//! One [`ExperimentConfig`] describes a JOWR instance: topology, sizes,
+//! rates, cost family, utility family, algorithm hyper-parameters, seed.
+//! Every figure harness in [`crate::experiments`] starts from
+//! [`ExperimentConfig::paper_default`] (the Section-IV setup) and overrides
+//! the handful of fields that figure sweeps.
+
+use std::path::Path;
+
+use crate::graph::augmented::{AugmentedNet, Placement};
+use crate::graph::topologies;
+use crate::model::cost::CostKind;
+use crate::model::Problem;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// "er" or a named topology ("abilene", "tree", "fog", "geant").
+    pub topology: String,
+    /// ER node count (ignored for named topologies).
+    pub n_nodes: usize,
+    /// ER link probability.
+    pub p_link: f64,
+    /// Mean link capacity C̄.
+    pub cap_mean: f64,
+    /// Number of DNN versions W.
+    pub n_versions: usize,
+    /// Total task input rate λ.
+    pub total_rate: f64,
+    pub cost: CostKind,
+    /// Utility family name for allocation experiments.
+    pub utility: String,
+    /// OMD-RT step size.
+    pub eta_routing: f64,
+    /// Allocation step size.
+    pub eta_alloc: f64,
+    /// Gradient-sampling disturbance δ.
+    pub delta: f64,
+    pub seed: u64,
+}
+
+impl ExperimentConfig {
+    /// The paper's Section-IV default: Connected-ER(25, 0.2), λ=60, W=3,
+    /// C̄=10, `D_ij = exp(F/C)`.
+    pub fn paper_default() -> Self {
+        ExperimentConfig {
+            topology: "er".into(),
+            n_nodes: 25,
+            p_link: 0.2,
+            cap_mean: 10.0,
+            n_versions: 3,
+            total_rate: 60.0,
+            cost: CostKind::Exp,
+            utility: "log".into(),
+            eta_routing: 0.5,
+            eta_alloc: 0.05,
+            delta: 0.5,
+            seed: 42,
+        }
+    }
+
+    /// Build the problem instance (network + rate + cost) for this config.
+    pub fn build_problem(&self, rng: &mut Rng) -> Problem {
+        let real = match self.topology.as_str() {
+            "er" => topologies::connected_er_graph(self.n_nodes, self.p_link, self.cap_mean, rng),
+            name => topologies::by_name(name, self.cap_mean, rng)
+                .unwrap_or_else(|| panic!("unknown topology '{name}'")),
+        };
+        let placement = Placement::random(real.n_nodes(), self.n_versions, rng);
+        let net = AugmentedNet::build(&real, &placement, self.cap_mean, rng);
+        Problem::new(net, self.total_rate, self.cost)
+    }
+
+    /// Parse from JSON text; missing keys fall back to `paper_default`.
+    pub fn from_json(text: &str) -> Result<Self, String> {
+        let j = Json::parse(text).map_err(|e| e.to_string())?;
+        let mut c = Self::paper_default();
+        if let Some(s) = j.get("topology").as_str() {
+            c.topology = s.to_string();
+        }
+        if let Some(x) = j.get("n_nodes").as_usize() {
+            c.n_nodes = x;
+        }
+        if let Some(x) = j.get("p_link").as_f64() {
+            c.p_link = x;
+        }
+        if let Some(x) = j.get("cap_mean").as_f64() {
+            c.cap_mean = x;
+        }
+        if let Some(x) = j.get("n_versions").as_usize() {
+            c.n_versions = x;
+        }
+        if let Some(x) = j.get("total_rate").as_f64() {
+            c.total_rate = x;
+        }
+        if let Some(s) = j.get("cost").as_str() {
+            c.cost = CostKind::parse(s).ok_or_else(|| format!("bad cost '{s}'"))?;
+        }
+        if let Some(s) = j.get("utility").as_str() {
+            c.utility = s.to_string();
+        }
+        if let Some(x) = j.get("eta_routing").as_f64() {
+            c.eta_routing = x;
+        }
+        if let Some(x) = j.get("eta_alloc").as_f64() {
+            c.eta_alloc = x;
+        }
+        if let Some(x) = j.get("delta").as_f64() {
+            c.delta = x;
+        }
+        if let Some(x) = j.get("seed").as_f64() {
+            c.seed = x as u64;
+        }
+        Ok(c)
+    }
+
+    pub fn from_file(path: &Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        Self::from_json(&text)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("topology", Json::from(self.topology.as_str())),
+            ("n_nodes", Json::from(self.n_nodes)),
+            ("p_link", Json::from(self.p_link)),
+            ("cap_mean", Json::from(self.cap_mean)),
+            ("n_versions", Json::from(self.n_versions)),
+            ("total_rate", Json::from(self.total_rate)),
+            (
+                "cost",
+                Json::from(match self.cost {
+                    CostKind::Exp => "exp",
+                    CostKind::Queue => "queue",
+                    CostKind::Linear => "linear",
+                    CostKind::Cubic => "cubic",
+                }),
+            ),
+            ("utility", Json::from(self.utility.as_str())),
+            ("eta_routing", Json::from(self.eta_routing)),
+            ("eta_alloc", Json::from(self.eta_alloc)),
+            ("delta", Json::from(self.delta)),
+            ("seed", Json::from(self.seed as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_builds() {
+        let c = ExperimentConfig::paper_default();
+        let mut rng = Rng::seed_from(c.seed);
+        let p = c.build_problem(&mut rng);
+        assert_eq!(p.n_versions(), 3);
+        assert_eq!(p.total_rate, 60.0);
+        assert_eq!(p.net.n_real, 25);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = ExperimentConfig::paper_default();
+        let text = c.to_json().to_string();
+        let c2 = ExperimentConfig::from_json(&text).unwrap();
+        assert_eq!(c2.n_nodes, c.n_nodes);
+        assert_eq!(c2.cost, c.cost);
+        assert_eq!(c2.utility, c.utility);
+        assert_eq!(c2.seed, c.seed);
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let c = ExperimentConfig::from_json(r#"{"n_nodes": 40, "cost": "queue"}"#).unwrap();
+        assert_eq!(c.n_nodes, 40);
+        assert_eq!(c.cost, CostKind::Queue);
+        assert_eq!(c.total_rate, 60.0);
+    }
+
+    #[test]
+    fn named_topology_builds() {
+        let mut c = ExperimentConfig::paper_default();
+        c.topology = "abilene".into();
+        c.cap_mean = 15.0;
+        let mut rng = Rng::seed_from(1);
+        let p = c.build_problem(&mut rng);
+        assert_eq!(p.net.n_real, 11);
+    }
+
+    #[test]
+    fn bad_cost_rejected() {
+        assert!(ExperimentConfig::from_json(r#"{"cost": "nope"}"#).is_err());
+    }
+}

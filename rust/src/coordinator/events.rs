@@ -1,0 +1,112 @@
+//! Topology-change events (the Fig. 11 perturbation and the
+//! `examples/topology_change.rs` scenario).
+
+use crate::config::ExperimentConfig;
+use crate::model::Problem;
+use crate::util::rng::Rng;
+
+/// A scheduled network change at a given outer iteration.
+#[derive(Clone, Debug)]
+pub enum NetworkEvent {
+    /// Regenerate the ER topology with a fresh seed (the paper's Fig. 11
+    /// "change the network topology at the 50-th allocation iteration").
+    Rewire { seed: u64 },
+    /// Scale every link capacity by `factor` (congestion shock).
+    CapacityScale { factor: f64 },
+}
+
+/// An ordered schedule of events keyed by outer iteration.
+#[derive(Clone, Debug, Default)]
+pub struct EventSchedule {
+    events: Vec<(usize, NetworkEvent)>,
+}
+
+impl EventSchedule {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn at(mut self, iter: usize, ev: NetworkEvent) -> Self {
+        self.events.push((iter, ev));
+        self.events.sort_by_key(|(i, _)| *i);
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Events firing exactly at `iter`.
+    pub fn fire(&self, iter: usize) -> impl Iterator<Item = &NetworkEvent> {
+        self.events.iter().filter(move |(i, _)| *i == iter).map(|(_, e)| e)
+    }
+
+    /// Apply one event to a problem, producing the new problem instance.
+    pub fn apply(cfg: &ExperimentConfig, problem: &Problem, ev: &NetworkEvent) -> Problem {
+        match ev {
+            NetworkEvent::Rewire { seed } => {
+                let mut rng = Rng::seed_from(*seed);
+                cfg.build_problem(&mut rng)
+            }
+            NetworkEvent::CapacityScale { factor } => {
+                let mut net = problem.net.clone();
+                let mut g = crate::graph::DiGraph::with_nodes(net.graph.n_nodes());
+                for e in net.graph.edges() {
+                    g.add_edge(e.src, e.dst, e.capacity * factor);
+                }
+                net.graph = g;
+                net.rebuild_session_dags();
+                Problem::new(net, problem.total_rate, problem.cost)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::cost::CostKind;
+
+    #[test]
+    fn schedule_fires_in_order() {
+        let s = EventSchedule::new()
+            .at(50, NetworkEvent::Rewire { seed: 9 })
+            .at(10, NetworkEvent::CapacityScale { factor: 0.5 });
+        assert_eq!(s.fire(10).count(), 1);
+        assert_eq!(s.fire(50).count(), 1);
+        assert_eq!(s.fire(11).count(), 0);
+        assert!(!s.is_empty());
+    }
+
+    #[test]
+    fn rewire_changes_topology() {
+        let cfg = ExperimentConfig::paper_default();
+        let mut rng = Rng::seed_from(cfg.seed);
+        let p = cfg.build_problem(&mut rng);
+        let p2 = EventSchedule::apply(&cfg, &p, &NetworkEvent::Rewire { seed: 777 });
+        assert_eq!(p2.total_rate, p.total_rate);
+        // almost surely a different edge set
+        assert!(
+            p2.net.graph.n_edges() != p.net.graph.n_edges()
+                || p2.net
+                    .graph
+                    .edges()
+                    .iter()
+                    .zip(p.net.graph.edges())
+                    .any(|(a, b)| a != b)
+        );
+    }
+
+    #[test]
+    fn capacity_scale_preserves_structure() {
+        let cfg = ExperimentConfig::paper_default();
+        let mut rng = Rng::seed_from(1);
+        let p = cfg.build_problem(&mut rng);
+        let p2 = EventSchedule::apply(&cfg, &p, &NetworkEvent::CapacityScale { factor: 2.0 });
+        assert_eq!(p2.net.graph.n_edges(), p.net.graph.n_edges());
+        assert_eq!(p2.cost, CostKind::Exp);
+        for (a, b) in p2.net.graph.edges().iter().zip(p.net.graph.edges()) {
+            assert!((a.capacity - 2.0 * b.capacity).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,53 @@
+//! Wire protocol between node actors (paper §III-B "marginal cost
+//! broadcast" + control-plane messages).
+//!
+//! The broadcast protocol (footnote 6): the last node of each path to `D_w`
+//! starts by announcing `∂D/∂r = 0`; every node that has received the
+//! marginals of **all** its session out-neighbours combines them with its
+//! local `D'_ij` (eq. 21) and announces its own marginal upstream. On a
+//! session DAG this terminates in depth(DAG) rounds.
+
+/// Node-to-node and leader-to-node messages.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    /// Downstream node `from` (augmented node id) announces
+    /// `∂D/∂r_from(w) = value` to an upstream neighbour.
+    Marginal { w: usize, from: usize, value: f64 },
+    /// Leader round kick-off + the mirror step size for this round.
+    BeginRound { round: u64, eta: f64 },
+    /// One upstream neighbour's session-`w` flow contribution over one
+    /// in-edge (exactly one per (session, in-edge) per round).
+    Ingress { w: usize, rate: f64 },
+    /// Node reports its updated rows to the leader:
+    /// (session, edge, fraction) triples.
+    RowsReport { from: usize, rows: Vec<(usize, usize, f64)> },
+    /// Orderly shutdown.
+    Shutdown,
+}
+
+impl Msg {
+    /// Approximate wire size in bytes (for the communication-overhead
+    /// accounting; marginals piggyback on task messages per footnote 6).
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            Msg::Marginal { .. } => 8 + 2 * 4,
+            Msg::BeginRound { .. } => 16,
+            Msg::Ingress { .. } => 12,
+            Msg::RowsReport { rows, .. } => 8 + rows.len() * 20,
+            Msg::Shutdown => 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_bytes_scale_with_payload() {
+        let small = Msg::RowsReport { from: 0, rows: vec![(0, 0, 0.5)] };
+        let big = Msg::RowsReport { from: 0, rows: vec![(0, 0, 0.5); 10] };
+        assert!(big.wire_bytes() > small.wire_bytes());
+        assert!(Msg::Shutdown.wire_bytes() >= 1);
+    }
+}

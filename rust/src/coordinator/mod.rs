@@ -1,0 +1,19 @@
+//! Distributed CEC coordinator (the paper's system layer).
+//!
+//! * [`net`] — the message fabric: per-node inboxes over std channels, with
+//!   delivered-message accounting (the communication-overhead metric).
+//! * [`messages`] — the wire protocol between node actors.
+//! * [`node`] — one actor per edge device: holds its own routing rows,
+//!   computes local marginals, participates in the broadcast protocol.
+//! * [`leader`] — the controller at the virtual source: drives allocation
+//!   (GS-OMA / OMAD) rounds and topology-change events.
+//! * [`serving`] — discrete-event serving simulator (Poisson arrivals,
+//!   queues, real DNN execution via the PJRT runtime) producing *measured*
+//!   utilities for the online learner.
+
+pub mod events;
+pub mod leader;
+pub mod messages;
+pub mod net;
+pub mod node;
+pub mod serving;

@@ -1,0 +1,109 @@
+//! Message fabric: per-node inboxes over std mpsc channels, with global
+//! delivered-message / byte accounting (the communication-overhead metric
+//! the paper reports qualitatively in §III-B footnote 4/6).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use super::messages::Msg;
+
+/// Shared counters for fabric traffic.
+#[derive(Debug, Default)]
+pub struct Counters {
+    pub messages: AtomicU64,
+    pub bytes: AtomicU64,
+}
+
+impl Counters {
+    pub fn snapshot(&self) -> (u64, u64) {
+        (self.messages.load(Ordering::Relaxed), self.bytes.load(Ordering::Relaxed))
+    }
+}
+
+/// Addressed sender set. Address 0..n are node actors; the leader has its
+/// own inbox at [`Fabric::LEADER`].
+#[derive(Clone)]
+pub struct Fabric {
+    senders: Vec<Sender<Msg>>,
+    leader: Sender<Msg>,
+    pub counters: Arc<Counters>,
+}
+
+impl Fabric {
+    /// Build a fabric for `n` node actors (+ the leader). Returns the fabric
+    /// plus each actor's receiver and the leader's receiver.
+    pub fn new(n: usize) -> (Fabric, Vec<Receiver<Msg>>, Receiver<Msg>) {
+        let mut senders = Vec::with_capacity(n);
+        let mut receivers = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = channel();
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        let (ltx, lrx) = channel();
+        let fabric = Fabric { senders, leader: ltx, counters: Arc::new(Counters::default()) };
+        (fabric, receivers, lrx)
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Send to node actor `to` (counted).
+    pub fn send(&self, to: usize, msg: Msg) {
+        self.counters.messages.fetch_add(1, Ordering::Relaxed);
+        self.counters.bytes.fetch_add(msg.wire_bytes() as u64, Ordering::Relaxed);
+        // a closed inbox during shutdown is not an error
+        let _ = self.senders[to].send(msg);
+    }
+
+    /// Send to the leader (counted).
+    pub fn send_leader(&self, msg: Msg) {
+        self.counters.messages.fetch_add(1, Ordering::Relaxed);
+        self.counters.bytes.fetch_add(msg.wire_bytes() as u64, Ordering::Relaxed);
+        let _ = self.leader.send(msg);
+    }
+
+    /// Broadcast to every node actor.
+    pub fn broadcast(&self, msg: Msg) {
+        for i in 0..self.senders.len() {
+            self.send(i, msg.clone());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counting_and_delivery() {
+        let (fabric, rxs, lrx) = Fabric::new(2);
+        fabric.send(0, Msg::BeginRound { round: 1, eta: 0.5 });
+        fabric.send(1, Msg::Shutdown);
+        fabric.send_leader(Msg::RowsReport { from: 1, rows: vec![(0, 0, 1.0)] });
+        assert_eq!(rxs[0].try_recv().unwrap(), Msg::BeginRound { round: 1, eta: 0.5 });
+        assert_eq!(rxs[1].try_recv().unwrap(), Msg::Shutdown);
+        assert!(matches!(lrx.try_recv().unwrap(), Msg::RowsReport { from: 1, .. }));
+        let (msgs, bytes) = fabric.counters.snapshot();
+        assert_eq!(msgs, 3);
+        assert!(bytes > 0);
+    }
+
+    #[test]
+    fn broadcast_reaches_all() {
+        let (fabric, rxs, _lrx) = Fabric::new(3);
+        fabric.broadcast(Msg::Ingress { w: 0, rate: 0.5 });
+        for rx in &rxs {
+            assert_eq!(rx.try_recv().unwrap(), Msg::Ingress { w: 0, rate: 0.5 });
+        }
+    }
+
+    #[test]
+    fn send_to_dropped_inbox_is_ok() {
+        let (fabric, rxs, _lrx) = Fabric::new(1);
+        drop(rxs);
+        fabric.send(0, Msg::Shutdown); // must not panic
+    }
+}

@@ -1,0 +1,305 @@
+//! One actor per edge device: holds only *local* state (its own routing
+//! rows, its out-link capacities), learns `t_i(w)` from upstream ingress
+//! messages, computes its link marginals locally, participates in the
+//! marginal-cost broadcast, and applies the eq.-(22) mirror update to its
+//! own rows — exactly the distributed node-based scheme of Algorithm 2.
+//!
+//! The actor's arithmetic must agree with [`crate::routing::omd`] to the
+//! last bit; the integration tests cross-check distributed vs centralized
+//! trajectories.
+
+use std::sync::mpsc::Receiver;
+
+use super::messages::Msg;
+use super::net::Fabric;
+use crate::model::cost::CostKind;
+use crate::routing::omd::OmdRouter;
+
+/// Where an out-edge leads, from the actor's perspective.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Peer {
+    /// A real device actor (actor index).
+    Actor(usize),
+    /// The virtual destination `D_w` (marginal is 0, no messages needed).
+    Destination,
+    /// The virtual source / leader (marginals are reported to the leader).
+    Leader,
+}
+
+/// One out-edge of this node inside one session's DAG.
+#[derive(Clone, Debug)]
+pub struct OutLane {
+    pub edge_id: usize,
+    pub dst: Peer,
+    pub capacity: f64,
+}
+
+/// Static per-epoch description of one node's view of the network.
+#[derive(Clone, Debug)]
+pub struct NodeSpec {
+    /// Actor index (= augmented node id − 1).
+    pub actor: usize,
+    /// Augmented-graph node id (for message attribution).
+    pub node_id: usize,
+    pub n_sessions: usize,
+    pub cost: CostKind,
+    /// `lanes[w]` — session w's usable out-edges.
+    pub lanes: Vec<Vec<OutLane>>,
+    /// `in_peers[w]` — upstream peers (for the marginal broadcast).
+    pub in_peers: Vec<Vec<Peer>>,
+    /// Initial routing fractions per session (parallel to `lanes`).
+    pub phi0: Vec<Vec<f64>>,
+}
+
+impl NodeSpec {
+    fn expected_ingress(&self, w: usize) -> usize {
+        self.in_peers[w].len()
+    }
+
+    fn expected_marginals(&self, w: usize) -> usize {
+        self.lanes[w].iter().filter(|l| matches!(l.dst, Peer::Actor(_))).count()
+    }
+}
+
+/// Per-round mutable state.
+struct RoundState {
+    eta: f64,
+    /// accumulated ingress per session + received count
+    t: Vec<f64>,
+    t_seen: Vec<usize>,
+    /// downstream marginals per (session, edge slot); None until received
+    r_down: Vec<Vec<Option<f64>>>,
+    /// link marginals D' per (session, edge slot); computed once flows known
+    dprime: Vec<Vec<f64>>,
+    flows_done: bool,
+    sent_ingress: Vec<bool>,
+    sent_marginal: Vec<bool>,
+    reported: bool,
+}
+
+impl RoundState {
+    fn new(spec: &NodeSpec, eta: f64) -> Self {
+        let w = spec.n_sessions;
+        RoundState {
+            eta,
+            t: vec![0.0; w],
+            t_seen: vec![0; w],
+            r_down: (0..w)
+                .map(|i| {
+                    spec.lanes[i]
+                        .iter()
+                        .map(|l| match l.dst {
+                            Peer::Actor(_) => None,
+                            // destination / leader lanes have r = 0 (eq. 20)
+                            _ => Some(0.0),
+                        })
+                        .collect()
+                })
+                .collect(),
+            dprime: (0..w).map(|i| vec![0.0; spec.lanes[i].len()]).collect(),
+            flows_done: false,
+            sent_ingress: vec![false; w],
+            sent_marginal: vec![false; w],
+            reported: false,
+        }
+    }
+}
+
+/// The node actor. `run` consumes the inbox until `Shutdown`.
+pub struct NodeActor {
+    pub spec: NodeSpec,
+    /// Current routing fractions (persist across rounds — warm state).
+    pub phi: Vec<Vec<f64>>,
+}
+
+impl NodeActor {
+    pub fn new(spec: NodeSpec) -> Self {
+        let phi = spec.phi0.clone();
+        NodeActor { spec, phi }
+    }
+
+    pub fn run(mut self, inbox: Receiver<Msg>, fabric: Fabric) {
+        let mut round: Option<RoundState> = None;
+        let mut pending: Vec<Msg> = Vec::new();
+        while let Ok(msg) = inbox.recv() {
+            match msg {
+                Msg::Shutdown => break,
+                Msg::BeginRound { eta, .. } => {
+                    let mut st = RoundState::new(&self.spec, eta);
+                    // replay any messages that raced ahead of BeginRound
+                    for m in pending.drain(..) {
+                        self.handle(&mut st, m, &fabric);
+                    }
+                    self.progress(&mut st, &fabric);
+                    round = Some(st);
+                }
+                m => match round {
+                    Some(ref mut st) if !st.reported => {
+                        self.handle(st, m, &fabric);
+                        self.progress(st, &fabric);
+                    }
+                    // between rounds: buffer until the next BeginRound
+                    _ => pending.push(m),
+                },
+            }
+            if let Some(ref st) = round {
+                if st.reported {
+                    round = None;
+                }
+            }
+        }
+    }
+
+    fn handle(&mut self, st: &mut RoundState, msg: Msg, _fabric: &Fabric) {
+        match msg {
+            Msg::Ingress { w, rate } => {
+                st.t[w] += rate;
+                st.t_seen[w] += 1;
+            }
+            Msg::Marginal { w, from, value } => {
+                // locate the lane pointing at `from`
+                for (slot, lane) in self.spec.lanes[w].iter().enumerate() {
+                    if let Peer::Actor(a) = lane.dst {
+                        if a + 1 == from {
+                            st.r_down[w][slot] = Some(value);
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// Drive the per-round state machine as far as possible.
+    fn progress(&mut self, st: &mut RoundState, fabric: &Fabric) {
+        let spec = &self.spec;
+        let w_cnt = spec.n_sessions;
+
+        // 1. forward ingress downstream as soon as a session's own ingress
+        //    is complete
+        for w in 0..w_cnt {
+            if !st.sent_ingress[w] && st.t_seen[w] == spec.expected_ingress(w) {
+                st.sent_ingress[w] = true;
+                for (slot, lane) in spec.lanes[w].iter().enumerate() {
+                    if let Peer::Actor(a) = lane.dst {
+                        fabric.send(a, Msg::Ingress { w, rate: st.t[w] * self.phi[w][slot] });
+                    }
+                }
+            }
+        }
+
+        // 2. once *all* sessions' ingress arrived, link flows (and hence the
+        //    local marginals D'_ij) are known
+        if !st.flows_done && (0..w_cnt).all(|w| st.sent_ingress[w]) {
+            st.flows_done = true;
+            // F_e sums every session's contribution on the shared physical
+            // edge; sessions may share an edge id
+            let mut flow_of: std::collections::HashMap<usize, f64> =
+                std::collections::HashMap::new();
+            for w in 0..w_cnt {
+                for (slot, lane) in spec.lanes[w].iter().enumerate() {
+                    *flow_of.entry(lane.edge_id).or_insert(0.0) +=
+                        st.t[w] * self.phi[w][slot];
+                }
+            }
+            for w in 0..w_cnt {
+                for (slot, lane) in spec.lanes[w].iter().enumerate() {
+                    let f = flow_of[&lane.edge_id];
+                    st.dprime[w][slot] = spec.cost.derivative(f, lane.capacity);
+                }
+            }
+        }
+
+        if !st.flows_done {
+            return;
+        }
+
+        // 3. marginal broadcast: session done when every downstream marginal
+        //    arrived
+        for w in 0..w_cnt {
+            if st.sent_marginal[w] {
+                continue;
+            }
+            let got = st.r_down[w].iter().filter(|r| r.is_some()).count()
+                - (spec.lanes[w].len() - spec.expected_marginals(w));
+            if got < spec.expected_marginals(w) {
+                continue;
+            }
+            // r_i(w) = Σ φ (D' + r_down)   (eq. 21)
+            let r_i: f64 = spec.lanes[w]
+                .iter()
+                .enumerate()
+                .map(|(slot, _)| {
+                    self.phi[w][slot] * (st.dprime[w][slot] + st.r_down[w][slot].unwrap())
+                })
+                .sum();
+            st.sent_marginal[w] = true;
+            for peer in &spec.in_peers[w] {
+                match peer {
+                    Peer::Actor(a) => fabric.send(
+                        *a,
+                        Msg::Marginal { w, from: spec.node_id, value: r_i },
+                    ),
+                    Peer::Leader => fabric.send_leader(Msg::Marginal {
+                        w,
+                        from: spec.node_id,
+                        value: r_i,
+                    }),
+                    Peer::Destination => {}
+                }
+            }
+        }
+
+        // 4. when every session's marginals are settled, apply the mirror
+        //    update (Algorithm 2 lines 4–5) and report
+        if !st.reported && (0..w_cnt).all(|w| st.sent_marginal[w]) {
+            st.reported = true;
+            for w in 0..w_cnt {
+                // paper: only nodes with t_i(w) > 0 and a real choice update
+                if st.t[w] > 0.0 && spec.lanes[w].len() >= 2 {
+                    let delta: Vec<f64> = spec.lanes[w]
+                        .iter()
+                        .enumerate()
+                        .map(|(slot, _)| st.dprime[w][slot] + st.r_down[w][slot].unwrap())
+                        .collect();
+                    OmdRouter::update_row(&mut self.phi[w], &delta, st.eta);
+                }
+            }
+            let mut rows: Vec<(usize, usize, f64)> = Vec::new();
+            for w in 0..w_cnt {
+                for (slot, lane) in spec.lanes[w].iter().enumerate() {
+                    rows.push((w, lane.edge_id, self.phi[w][slot]));
+                }
+            }
+            fabric.send_leader(Msg::RowsReport { from: spec.node_id, rows });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_expected_counts() {
+        let spec = NodeSpec {
+            actor: 0,
+            node_id: 1,
+            n_sessions: 2,
+            cost: CostKind::Exp,
+            lanes: vec![
+                vec![
+                    OutLane { edge_id: 0, dst: Peer::Actor(1), capacity: 10.0 },
+                    OutLane { edge_id: 1, dst: Peer::Destination, capacity: 5.0 },
+                ],
+                vec![OutLane { edge_id: 2, dst: Peer::Actor(2), capacity: 10.0 }],
+            ],
+            in_peers: vec![vec![Peer::Leader], vec![Peer::Leader, Peer::Actor(3)]],
+            phi0: vec![vec![0.5, 0.5], vec![1.0]],
+        };
+        assert_eq!(spec.expected_ingress(0), 1);
+        assert_eq!(spec.expected_ingress(1), 2);
+        assert_eq!(spec.expected_marginals(0), 1);
+        assert_eq!(spec.expected_marginals(1), 1);
+    }
+}

@@ -1,0 +1,546 @@
+//! Discrete-event serving simulator: the *measured-utility* path.
+//!
+//! This is the end-to-end story of the paper made concrete: frames arrive
+//! at the controller as a Poisson stream, are admitted to version-`w`
+//! sessions according to Λ, hop through the network along φ (FIFO links,
+//! transmission time = size/С), and are finally served by the hosting
+//! device's DNN — whose inference latency comes from an
+//! [`InferenceEngine`] (either the analytic FLOPs model or the real
+//! AOT-compiled DNN executed through PJRT, see [`crate::runtime::dnn`]).
+//!
+//! The resulting **measured utility** (quality-weighted goodput minus a
+//! latency penalty) instantiates the unknown `u_w`: the online learner
+//! (GS-OMA/OMAD) optimizes it from observations alone.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::super::allocation::UtilityOracle;
+use crate::graph::augmented::AugmentedNet;
+use crate::model::flow::Phi;
+use crate::model::Problem;
+use crate::routing::omd::OmdRouter;
+use crate::routing::Router;
+use crate::util::rng::Rng;
+
+/// Provides per-frame inference latency for a DNN version.
+pub trait InferenceEngine {
+    fn infer_latency(&mut self, version: usize) -> f64;
+
+    /// Latency of serving `batch` frames together (dynamic batching).
+    /// Default: no batching benefit. Real engines override this (the XLA
+    /// engine dispatches to the AOT `dnn_*_b8` artifact).
+    fn infer_batch_latency(&mut self, version: usize, batch: usize) -> f64 {
+        (0..batch).map(|_| self.infer_latency(version)).sum()
+    }
+
+    /// Human-readable backend name (for reports).
+    fn backend(&self) -> &'static str;
+}
+
+/// Analytic engine: latency = FLOPs / device_flops, with multiplicative
+/// jitter. Default FLOPs match the AOT DNN family (small/medium/large).
+pub struct AnalyticEngine {
+    pub flops: Vec<f64>,
+    pub device_flops: f64,
+    pub jitter: f64,
+    rng: Rng,
+}
+
+impl AnalyticEngine {
+    pub fn new(n_versions: usize, seed: u64) -> Self {
+        // FLOPs of the L2 DNN family (see python/compile/model.py):
+        // small ~0.56 MFLOP, medium ~3.7 MFLOP, large ~14.7 MFLOP per frame
+        let base = [0.56e6, 3.7e6, 14.7e6];
+        let flops = (0..n_versions).map(|w| base[w.min(2)] * (1.0 + w as f64 * 0.1)).collect();
+        AnalyticEngine { flops, device_flops: 2.0e9, jitter: 0.1, rng: Rng::seed_from(seed) }
+    }
+}
+
+impl InferenceEngine for AnalyticEngine {
+    fn infer_latency(&mut self, version: usize) -> f64 {
+        let base = self.flops[version] / self.device_flops;
+        base * (1.0 + self.jitter * self.rng.normal().abs())
+    }
+
+    fn infer_batch_latency(&mut self, version: usize, batch: usize) -> f64 {
+        // batching amortizes fixed overhead: marginal frame costs 70%
+        let base = self.flops[version] / self.device_flops;
+        let eff = base * (1.0 + 0.7 * (batch.max(1) as f64 - 1.0));
+        eff * (1.0 + self.jitter * self.rng.normal().abs())
+    }
+
+    fn backend(&self) -> &'static str {
+        "analytic"
+    }
+}
+
+/// Simulation parameters.
+#[derive(Clone, Debug)]
+pub struct ServeParams {
+    /// Simulated horizon per observation window (seconds).
+    pub sim_time: f64,
+    /// Frame size in capacity units (link tx time = size / C).
+    pub frame_size: f64,
+    /// Per-version quality score (the "revenue" of serving one frame with
+    /// version w; higher versions are worth more).
+    pub quality: Vec<f64>,
+    /// Utility penalty per second of mean end-to-end latency.
+    pub latency_penalty: f64,
+    /// Dynamic batching: max frames a host serves in one DNN invocation.
+    pub max_batch: usize,
+}
+
+impl ServeParams {
+    pub fn default_for(n_versions: usize) -> Self {
+        ServeParams {
+            sim_time: 30.0,
+            frame_size: 0.05,
+            quality: (0..n_versions).map(|w| 1.0 + 1.5 * w as f64).collect(),
+            latency_penalty: 40.0,
+            max_batch: 8,
+        }
+    }
+}
+
+/// Outcome of one simulated window.
+#[derive(Clone, Debug, Default)]
+pub struct ServeReport {
+    pub completed: Vec<u64>,
+    pub dropped: u64,
+    pub mean_latency_s: f64,
+    pub p50_latency_s: f64,
+    pub p99_latency_s: f64,
+    pub throughput_fps: f64,
+    pub utility: f64,
+}
+
+#[derive(Clone, Debug)]
+enum EvKind {
+    /// A frame arrives at `node` (session `w`, admitted at `t0`).
+    AtNode { frame: usize, node: usize },
+    /// A batch finished DNN service at its host.
+    ServedBatch { node: usize, frames: Vec<usize> },
+}
+
+#[derive(Clone, Debug)]
+struct Ev {
+    time: f64,
+    seq: u64,
+    kind: EvKind,
+}
+
+impl PartialEq for Ev {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Ev {}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Ev {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap via reverse on time, tie-break by seq for determinism
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+struct FrameState {
+    w: usize,
+    admitted_at: f64,
+}
+
+/// Run one serving window: Poisson arrivals at total rate λ split by Λ,
+/// hop-by-hop forwarding sampled from φ, FIFO links, FIFO DNN servers.
+pub fn simulate(
+    problem: &Problem,
+    phi: &Phi,
+    lam: &[f64],
+    engine: &mut dyn InferenceEngine,
+    params: &ServeParams,
+    rng: &mut Rng,
+) -> ServeReport {
+    let net = &problem.net;
+    let w_cnt = net.n_versions();
+    let total: f64 = lam.iter().sum();
+    let mut queue: BinaryHeap<Ev> = BinaryHeap::new();
+    let mut seq = 0u64;
+    let push = |q: &mut BinaryHeap<Ev>, time: f64, kind: EvKind, seq: &mut u64| {
+        *seq += 1;
+        q.push(Ev { time, seq: *seq, kind });
+    };
+
+    // schedule Poisson arrivals over the window
+    let mut frames: Vec<FrameState> = Vec::new();
+    let mut t = 0.0;
+    if total > 0.0 {
+        loop {
+            t += rng.exponential(total);
+            if t >= params.sim_time {
+                break;
+            }
+            // session by allocation share
+            let mut x = rng.f64() * total;
+            let mut w = 0;
+            for (i, &l) in lam.iter().enumerate() {
+                if x < l {
+                    w = i;
+                    break;
+                }
+                x -= l;
+                w = i;
+            }
+            let frame = frames.len();
+            frames.push(FrameState { w, admitted_at: t });
+            push(&mut queue, t, EvKind::AtNode { frame, node: AugmentedNet::SOURCE }, &mut seq);
+        }
+    }
+
+    let mut link_free = vec![0.0f64; net.graph.n_edges()];
+    let mut host_busy = vec![false; net.n_nodes()];
+    let mut host_queue: Vec<std::collections::VecDeque<usize>> =
+        vec![std::collections::VecDeque::new(); net.n_nodes()];
+    let mut latencies: Vec<f64> = Vec::new();
+    let mut completed = vec![0u64; w_cnt];
+    let mut dropped = 0u64;
+
+    while let Some(ev) = queue.pop() {
+        match ev.kind {
+            EvKind::AtNode { frame, node } => {
+                let w = frames[frame].w;
+                if node == net.dnode(w) {
+                    // reached the virtual destination: already served
+                    continue;
+                }
+                // host of version w about to forward over its computation
+                // link: service happens at the host
+                let lanes: Vec<(usize, f64)> = phi.row(net, w, node).collect();
+                if lanes.is_empty() {
+                    dropped += 1;
+                    continue;
+                }
+                // sample next hop by φ
+                let sum: f64 = lanes.iter().map(|(_, f)| f).sum();
+                let mut x = rng.f64() * sum.max(1e-300);
+                let mut chosen = lanes[0].0;
+                for &(e, f) in &lanes {
+                    if x < f {
+                        chosen = e;
+                        break;
+                    }
+                    x -= f;
+                    chosen = e;
+                }
+                let edge = net.graph.edge(chosen);
+                if edge.dst == net.dnode(w) {
+                    // computation link: the host's DNN server with dynamic
+                    // batching — an idle server starts immediately, a busy
+                    // one queues the frame for the next batch
+                    if host_busy[node] {
+                        host_queue[node].push_back(frame);
+                    } else {
+                        host_busy[node] = true;
+                        let service = engine.infer_batch_latency(w, 1);
+                        push(
+                            &mut queue,
+                            ev.time + service,
+                            EvKind::ServedBatch { node, frames: vec![frame] },
+                            &mut seq,
+                        );
+                    }
+                } else {
+                    // communication link: FIFO transmission
+                    let tx = params.frame_size / edge.capacity;
+                    let start = link_free[chosen].max(ev.time);
+                    link_free[chosen] = start + tx;
+                    push(
+                        &mut queue,
+                        start + tx,
+                        EvKind::AtNode { frame, node: edge.dst },
+                        &mut seq,
+                    );
+                }
+            }
+            EvKind::ServedBatch { node, frames: batch } => {
+                for &frame in &batch {
+                    let st = &frames[frame];
+                    completed[st.w] += 1;
+                    latencies.push(ev.time - st.admitted_at);
+                }
+                // pull the next batch off the host's queue
+                if host_queue[node].is_empty() {
+                    host_busy[node] = false;
+                } else {
+                    let take = params.max_batch.min(host_queue[node].len()).max(1);
+                    let next: Vec<usize> =
+                        (0..take).filter_map(|_| host_queue[node].pop_front()).collect();
+                    let w = frames[next[0]].w;
+                    let service = engine.infer_batch_latency(w, next.len());
+                    push(
+                        &mut queue,
+                        ev.time + service,
+                        EvKind::ServedBatch { node, frames: next },
+                        &mut seq,
+                    );
+                }
+            }
+        }
+    }
+
+    let mean_latency = crate::util::stats::mean(&latencies);
+    let done: u64 = completed.iter().sum();
+    let throughput = done as f64 / params.sim_time;
+    let goodput_value: f64 = completed
+        .iter()
+        .enumerate()
+        .map(|(w, &c)| params.quality[w] * c as f64 / params.sim_time)
+        .sum();
+    let utility = goodput_value - params.latency_penalty * mean_latency;
+    ServeReport {
+        completed,
+        dropped,
+        mean_latency_s: mean_latency,
+        p50_latency_s: crate::util::stats::percentile(&latencies, 50.0),
+        p99_latency_s: crate::util::stats::percentile(&latencies, 99.0),
+        throughput_fps: throughput,
+        utility,
+    }
+}
+
+/// A [`UtilityOracle`] whose observations are *measured* from the serving
+/// simulator (the end-to-end driver's oracle). Routing advances one OMD
+/// iteration per observation (single-loop style).
+pub struct MeasuredOracle<E: InferenceEngine> {
+    pub problem: Problem,
+    pub params: ServeParams,
+    pub engine: E,
+    router: OmdRouter,
+    phi: Phi,
+    rng: Rng,
+    routing_iters: usize,
+    observations: usize,
+    /// Last serving report (for end-to-end latency/throughput logging).
+    pub last_report: Option<ServeReport>,
+}
+
+impl<E: InferenceEngine> MeasuredOracle<E> {
+    pub fn new(problem: Problem, params: ServeParams, engine: E, eta: f64, seed: u64) -> Self {
+        let phi = Phi::uniform(&problem.net);
+        MeasuredOracle {
+            problem,
+            params,
+            engine,
+            router: OmdRouter::new(eta),
+            phi,
+            rng: Rng::seed_from(seed),
+            routing_iters: 0,
+            observations: 0,
+            last_report: None,
+        }
+    }
+
+    pub fn phi(&self) -> &Phi {
+        &self.phi
+    }
+}
+
+impl<E: InferenceEngine> UtilityOracle for MeasuredOracle<E> {
+    fn observe(&mut self, lam: &[f64]) -> f64 {
+        self.observations += 1;
+        self.routing_iters += 1;
+        self.router.step(&self.problem, lam, &mut self.phi);
+        let report = simulate(
+            &self.problem,
+            &self.phi,
+            lam,
+            &mut self.engine,
+            &self.params,
+            &mut self.rng,
+        );
+        let u = report.utility;
+        self.last_report = Some(report);
+        u
+    }
+
+    fn total_rate(&self) -> f64 {
+        self.problem.total_rate
+    }
+
+    fn n_versions(&self) -> usize {
+        self.problem.n_versions()
+    }
+
+    fn routing_iterations(&self) -> usize {
+        self.routing_iters
+    }
+
+    fn observations(&self) -> usize {
+        self.observations
+    }
+
+    fn on_topology_change(&mut self, problem: &Problem) {
+        self.problem = problem.clone();
+        self.phi = Phi::uniform(&self.problem.net);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::topologies;
+    use crate::model::cost::CostKind;
+    use crate::util::rng::Rng;
+
+    fn mk_problem(seed: u64) -> Problem {
+        let mut rng = Rng::seed_from(seed);
+        let net = topologies::connected_er(10, 0.3, 3, &mut rng);
+        Problem::new(net, 60.0, CostKind::Exp)
+    }
+
+    #[test]
+    fn all_frames_accounted() {
+        let p = mk_problem(1);
+        let phi = Phi::uniform(&p.net);
+        let lam = p.uniform_allocation();
+        let mut eng = AnalyticEngine::new(3, 7);
+        let mut rng = Rng::seed_from(9);
+        let params = ServeParams { sim_time: 5.0, ..ServeParams::default_for(3) };
+        let rep = simulate(&p, &phi, &lam, &mut eng, &params, &mut rng);
+        let done: u64 = rep.completed.iter().sum();
+        assert!(done > 0, "nothing served");
+        assert_eq!(rep.dropped, 0, "frames dropped on a valid topology");
+        // Poisson(λ·T) sanity: within 5 sigma
+        let expect: f64 = 60.0 * 5.0;
+        let sigma = expect.sqrt();
+        assert!(
+            (done as f64 - expect).abs() < 5.0 * sigma,
+            "completed {done} vs expected {expect}"
+        );
+        assert!(rep.mean_latency_s > 0.0);
+        assert!(rep.p99_latency_s >= rep.p50_latency_s);
+    }
+
+    #[test]
+    fn allocation_shifts_completions() {
+        let p = mk_problem(2);
+        let phi = Phi::uniform(&p.net);
+        let mut eng = AnalyticEngine::new(3, 7);
+        let mut rng = Rng::seed_from(11);
+        let params = ServeParams { sim_time: 10.0, ..ServeParams::default_for(3) };
+        let rep = simulate(&p, &phi, &[50.0, 5.0, 5.0], &mut eng, &params, &mut rng);
+        assert!(
+            rep.completed[0] > rep.completed[1] + rep.completed[2],
+            "{:?}",
+            rep.completed
+        );
+    }
+
+    #[test]
+    fn measured_oracle_runs_and_counts() {
+        let p = mk_problem(3);
+        let params = ServeParams { sim_time: 3.0, ..ServeParams::default_for(3) };
+        let mut o = MeasuredOracle::new(p, params, AnalyticEngine::new(3, 5), 0.3, 13);
+        let lam = [20.0, 20.0, 20.0];
+        let u = o.observe(&lam);
+        assert!(u.is_finite());
+        assert_eq!(o.observations(), 1);
+        assert_eq!(o.routing_iterations(), 1);
+        assert!(o.last_report.is_some());
+    }
+
+    #[test]
+    fn deterministic_given_seeds() {
+        let p = mk_problem(4);
+        let phi = Phi::uniform(&p.net);
+        let lam = p.uniform_allocation();
+        let params = ServeParams { sim_time: 3.0, ..ServeParams::default_for(3) };
+        let run = || {
+            let mut eng = AnalyticEngine::new(3, 7);
+            let mut rng = Rng::seed_from(21);
+            simulate(&p, &phi, &lam, &mut eng, &params, &mut rng)
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.mean_latency_s, b.mean_latency_s);
+    }
+}
+
+#[cfg(test)]
+mod batching_tests {
+    use super::*;
+    use crate::graph::topologies;
+    use crate::model::cost::CostKind;
+    use crate::util::rng::Rng;
+
+    fn mk_problem(seed: u64) -> Problem {
+        let mut rng = Rng::seed_from(seed);
+        let net = topologies::connected_er(8, 0.35, 3, &mut rng);
+        Problem::new(net, 60.0, CostKind::Exp)
+    }
+
+    #[test]
+    fn dynamic_batching_raises_saturated_throughput() {
+        // slow hosts saturate; batching amortizes per-invocation overhead so
+        // the batched run completes strictly more frames
+        let p = mk_problem(1);
+        let phi = Phi::uniform(&p.net);
+        let lam = p.uniform_allocation();
+        let run = |max_batch: usize| {
+            let mut eng = AnalyticEngine::new(3, 7);
+            eng.device_flops = 1.0e8; // saturated servers
+            let mut rng = Rng::seed_from(5);
+            let params = ServeParams {
+                sim_time: 20.0,
+                max_batch,
+                ..ServeParams::default_for(3)
+            };
+            simulate(&p, &phi, &lam, &mut eng, &params, &mut rng)
+        };
+        let unbatched = run(1);
+        let batched = run(8);
+        // the DES drains every admitted frame in both runs; the batching
+        // win shows up as queueing delay (and hence measured utility)
+        assert_eq!(
+            batched.completed.iter().sum::<u64>(),
+            unbatched.completed.iter().sum::<u64>()
+        );
+        assert!(
+            batched.mean_latency_s < 0.8 * unbatched.mean_latency_s,
+            "batching should cut queueing delay: {} vs {}",
+            batched.mean_latency_s,
+            unbatched.mean_latency_s
+        );
+        assert!(batched.utility > unbatched.utility);
+    }
+
+    #[test]
+    fn batch_latency_default_is_linear() {
+        struct Fixed;
+        impl InferenceEngine for Fixed {
+            fn infer_latency(&mut self, _v: usize) -> f64 {
+                0.01
+            }
+            fn backend(&self) -> &'static str {
+                "fixed"
+            }
+        }
+        let mut f = Fixed;
+        assert!((f.infer_batch_latency(0, 5) - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn analytic_batching_is_sublinear() {
+        let mut eng = AnalyticEngine::new(3, 3);
+        eng.jitter = 0.0;
+        let one = eng.infer_batch_latency(2, 1);
+        let eight = eng.infer_batch_latency(2, 8);
+        assert!(eight < 8.0 * one, "batching must amortize: {eight} vs {}", 8.0 * one);
+        assert!(eight > one);
+    }
+}

@@ -1,0 +1,86 @@
+//! Terminal line plots for the figure harnesses (no plotting deps offline).
+
+/// Render multiple named series as an ASCII chart.
+pub fn plot(title: &str, series: &[(&str, &[f64])], width: usize, height: usize) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("── {title} ──\n"));
+    let all: Vec<f64> = series
+        .iter()
+        .flat_map(|(_, s)| s.iter().copied())
+        .filter(|v| v.is_finite())
+        .collect();
+    if all.is_empty() {
+        out.push_str("(no data)\n");
+        return out;
+    }
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &v in &all {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    if (hi - lo).abs() < 1e-15 {
+        hi = lo + 1.0;
+    }
+    let max_len = series.iter().map(|(_, s)| s.len()).max().unwrap_or(1).max(2);
+    let marks = ['*', '+', 'o', 'x', '#', '@'];
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, s)) in series.iter().enumerate() {
+        let mark = marks[si % marks.len()];
+        for (i, &v) in s.iter().enumerate() {
+            if !v.is_finite() {
+                continue;
+            }
+            let x = (i * (width - 1)) / (max_len - 1).max(1);
+            let yf = (v - lo) / (hi - lo);
+            let y = height - 1 - ((yf * (height - 1) as f64).round() as usize).min(height - 1);
+            grid[y][x] = mark;
+        }
+    }
+    for (r, row) in grid.iter().enumerate() {
+        let label = if r == 0 {
+            format!("{hi:>12.4}")
+        } else if r == height - 1 {
+            format!("{lo:>12.4}")
+        } else {
+            " ".repeat(12)
+        };
+        out.push_str(&format!("{label} │{}\n", row.iter().collect::<String>()));
+    }
+    out.push_str(&format!("{} └{}\n", " ".repeat(12), "─".repeat(width)));
+    let legend: Vec<String> = series
+        .iter()
+        .enumerate()
+        .map(|(i, (n, _))| format!("{} {}", marks[i % marks.len()], n))
+        .collect();
+    out.push_str(&format!("{} {}\n", " ".repeat(13), legend.join("   ")));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_series() {
+        let a = [10.0, 8.0, 6.0, 5.0, 4.5];
+        let b = [10.0, 9.5, 9.0, 8.8, 8.7];
+        let s = plot("conv", &[("omd", &a), ("sgp", &b)], 40, 10);
+        assert!(s.contains("omd"));
+        assert!(s.contains('*'));
+        assert!(s.contains('+'));
+        assert!(s.lines().count() > 10);
+    }
+
+    #[test]
+    fn empty_is_safe() {
+        let s = plot("none", &[("x", &[])], 10, 5);
+        assert!(s.contains("no data"));
+    }
+
+    #[test]
+    fn constant_series_safe() {
+        let a = [3.0, 3.0, 3.0];
+        let s = plot("const", &[("c", &a)], 20, 6);
+        assert!(s.contains('*'));
+    }
+}

@@ -1,0 +1,370 @@
+//! Figure/table harnesses: one function per experiment in the paper's
+//! evaluation (Section IV + Appendix F). Each regenerates the figure's data
+//! (CSV under `results/`), prints an ASCII rendition, and returns the raw
+//! series for the bench targets and tests.
+
+pub mod asciiplot;
+
+use crate::allocation::{
+    gsoma::GsOma, omad::Omad, Allocator, AnalyticOracle, SingleStepOracle, UtilityOracle,
+};
+use crate::config::ExperimentConfig;
+use crate::coordinator::events::{EventSchedule, NetworkEvent};
+use crate::graph::topologies;
+use crate::metrics::SeriesSet;
+use crate::model::utility::family;
+use crate::model::Problem;
+use crate::routing::{omd::OmdRouter, opt::OptRouter, sgp::SgpRouter, Router};
+use crate::util::rng::Rng;
+
+/// Where CSVs land (`results/figN.csv`).
+pub fn results_dir() -> std::path::PathBuf {
+    std::env::var("JOWR_RESULTS").map(Into::into).unwrap_or_else(|_| "results".into())
+}
+
+fn save(set: &SeriesSet, name: &str) {
+    let path = results_dir().join(name);
+    if let Err(e) = set.write_csv(&path) {
+        crate::log_warn!("could not write {}: {e}", path.display());
+    } else {
+        println!("  wrote {}", path.display());
+    }
+}
+
+/// **Fig. 7** — OMD-RT vs SGP convergence on Connected-ER(25, 0.2) with the
+/// centralized OPT line. Returns (series, opt_cost).
+pub fn fig7(cfg: &ExperimentConfig, iters: usize) -> (SeriesSet, f64) {
+    let mut rng = Rng::seed_from(cfg.seed);
+    let problem = cfg.build_problem(&mut rng);
+    let lam = problem.uniform_allocation();
+
+    let omd = OmdRouter::new(cfg.eta_routing).solve(&problem, &lam, iters);
+    let sgp = SgpRouter::new().solve(&problem, &lam, iters);
+    let opt = OptRouter::new().solve(&problem, &lam);
+
+    let mut s = SeriesSet::new();
+    s.set("omd_rt", pad_to(&omd.trajectory, iters + 1));
+    s.set("sgp", pad_to(&sgp.trajectory, iters + 1));
+    s.set("opt", vec![opt.cost; iters + 1]);
+    save(&s, "fig7.csv");
+    println!(
+        "{}",
+        asciiplot::plot(
+            "Fig.7 total network cost vs routing iteration",
+            &[
+                ("OMD-RT", s.get("omd_rt").unwrap()),
+                ("SGP", s.get("sgp").unwrap()),
+                ("OPT", s.get("opt").unwrap()),
+            ],
+            64,
+            18,
+        )
+    );
+    (s, opt.cost)
+}
+
+/// Extend a (possibly early-converged) trajectory to `len` by holding the
+/// final value — matches how the paper plots flat converged tails.
+fn pad_to(tr: &[f64], len: usize) -> Vec<f64> {
+    let mut v = tr.to_vec();
+    let last = *v.last().unwrap_or(&0.0);
+    while v.len() < len {
+        v.push(last);
+    }
+    v
+}
+
+/// One row of the Fig. 8/9 sweep.
+#[derive(Clone, Debug)]
+pub struct SizeRow {
+    pub n: usize,
+    pub cost_omd: f64,
+    pub cost_sgp: f64,
+    pub cost_opt: f64,
+    pub time_omd_s: f64,
+    pub time_sgp_s: f64,
+    pub time_opt_s: f64,
+}
+
+/// **Figs. 8 + 9** — final cost and wall-clock vs network size
+/// (n ∈ {20,25,30,35,40}, 50 routing iterations each, per the paper).
+pub fn fig8_9(cfg: &ExperimentConfig, sizes: &[usize], iters: usize) -> Vec<SizeRow> {
+    let mut rows = Vec::new();
+    println!(
+        "{:>4} {:>12} {:>12} {:>12} {:>12} {:>12} {:>12}",
+        "n", "cost(OMD)", "cost(SGP)", "cost(OPT)", "t(OMD)s", "t(SGP)s", "t(OPT)s"
+    );
+    for &n in sizes {
+        let mut c = cfg.clone();
+        c.n_nodes = n;
+        let mut rng = Rng::seed_from(cfg.seed + n as u64);
+        let problem = c.build_problem(&mut rng);
+        let lam = problem.uniform_allocation();
+        let omd = OmdRouter::new(cfg.eta_routing).solve(&problem, &lam, iters);
+        let sgp = SgpRouter::new().solve(&problem, &lam, iters);
+        let opt = OptRouter::new().solve(&problem, &lam);
+        let row = SizeRow {
+            n,
+            cost_omd: omd.cost,
+            cost_sgp: sgp.cost,
+            cost_opt: opt.cost,
+            time_omd_s: omd.elapsed_s,
+            time_sgp_s: sgp.elapsed_s,
+            time_opt_s: opt.elapsed_s,
+        };
+        println!(
+            "{:>4} {:>12.4} {:>12.4} {:>12.4} {:>12.6} {:>12.6} {:>12.6}",
+            row.n,
+            row.cost_omd,
+            row.cost_sgp,
+            row.cost_opt,
+            row.time_omd_s,
+            row.time_sgp_s,
+            row.time_opt_s
+        );
+        rows.push(row);
+    }
+    let mut s = SeriesSet::new();
+    s.set("n", rows.iter().map(|r| r.n as f64).collect());
+    s.set("cost_omd", rows.iter().map(|r| r.cost_omd).collect());
+    s.set("cost_sgp", rows.iter().map(|r| r.cost_sgp).collect());
+    s.set("cost_opt", rows.iter().map(|r| r.cost_opt).collect());
+    s.set("time_omd_s", rows.iter().map(|r| r.time_omd_s).collect());
+    s.set("time_sgp_s", rows.iter().map(|r| r.time_sgp_s).collect());
+    s.set("time_opt_s", rows.iter().map(|r| r.time_opt_s).collect());
+    save(&s, "fig8_9.csv");
+    rows
+}
+
+/// **Fig. 10** — GS-OMA (nested loop) under the four unknown utility
+/// families. Returns the per-family utility trajectories.
+pub fn fig10(cfg: &ExperimentConfig, outer_iters: usize) -> SeriesSet {
+    let mut s = SeriesSet::new();
+    for fam in crate::model::utility::FAMILIES {
+        let mut rng = Rng::seed_from(cfg.seed);
+        let problem = cfg.build_problem(&mut rng);
+        let utilities = family(fam, cfg.n_versions, cfg.total_rate).unwrap();
+        let mut oracle = AnalyticOracle::new(problem, utilities);
+        let mut alg = GsOma::new(cfg.delta, cfg.eta_alloc);
+        let st = alg.run(&mut oracle, outer_iters);
+        s.set(fam, pad_to(&st.trajectory, outer_iters + 1));
+        println!(
+            "  {fam:<10} U: {:.4} -> {:.4}  ({} outer iters, {} routing iters)",
+            st.trajectory[0],
+            st.trajectory.last().unwrap(),
+            st.iterations,
+            st.routing_iterations
+        );
+    }
+    save(&s, "fig10.csv");
+    let names: Vec<(&str, &[f64])> = crate::model::utility::FAMILIES
+        .iter()
+        .map(|f| (*f, s.get(f).unwrap()))
+        .collect();
+    println!(
+        "{}",
+        asciiplot::plot("Fig.10 total network utility (4 utility families)", &names, 64, 18)
+    );
+    s
+}
+
+/// **Fig. 11** — nested vs single loop with a topology change at
+/// `change_at`. Returns (series, nested routing iters, single routing iters).
+pub fn fig11(
+    cfg: &ExperimentConfig,
+    outer_iters: usize,
+    change_at: usize,
+) -> (SeriesSet, usize, usize) {
+    let utilities = family(&cfg.utility, cfg.n_versions, cfg.total_rate).unwrap();
+    let schedule =
+        EventSchedule::new().at(change_at, NetworkEvent::Rewire { seed: cfg.seed + 1000 });
+
+    let run = |single: bool| -> (Vec<f64>, usize) {
+        let mut rng = Rng::seed_from(cfg.seed);
+        let mut problem = cfg.build_problem(&mut rng);
+        let total = cfg.total_rate;
+        let w = cfg.n_versions;
+        let mut lam = vec![total / w as f64; w];
+        let mut traj = Vec::with_capacity(outer_iters);
+        if single {
+            let mut oracle = SingleStepOracle::new(problem.clone(), utilities.clone(), cfg.eta_routing);
+            let alg = Omad::new(cfg.delta, cfg.eta_alloc);
+            for t in 0..outer_iters {
+                for ev in schedule.fire(t) {
+                    problem = EventSchedule::apply(cfg, &problem, ev);
+                    oracle.on_topology_change(&problem);
+                }
+                traj.push(crate::allocation::UtilityOracle::observe(&mut oracle, &lam));
+                let (next, _) = alg.outer_step(&mut oracle, &lam);
+                lam = next;
+            }
+            (traj, crate::allocation::UtilityOracle::routing_iterations(&oracle))
+        } else {
+            let mut oracle = AnalyticOracle::new(problem.clone(), utilities.clone());
+            let alg = GsOma::new(cfg.delta, cfg.eta_alloc);
+            for t in 0..outer_iters {
+                for ev in schedule.fire(t) {
+                    problem = EventSchedule::apply(cfg, &problem, ev);
+                    oracle.on_topology_change(&problem);
+                }
+                traj.push(crate::allocation::UtilityOracle::observe(&mut oracle, &lam));
+                let (next, _) = alg.outer_step(&mut oracle, &lam);
+                lam = next;
+            }
+            (traj, crate::allocation::UtilityOracle::routing_iterations(&oracle))
+        }
+    };
+
+    let (nested, nested_routing) = run(false);
+    let (single, single_routing) = run(true);
+    let mut s = SeriesSet::new();
+    s.set("nested_loop", nested);
+    s.set("single_loop", single);
+    save(&s, "fig11.csv");
+    println!(
+        "{}",
+        asciiplot::plot(
+            &format!("Fig.11 nested vs single loop (topology change at t={change_at})"),
+            &[
+                ("nested", s.get("nested_loop").unwrap()),
+                ("single", s.get("single_loop").unwrap()),
+            ],
+            64,
+            18,
+        )
+    );
+    println!(
+        "  routing iterations: nested {nested_routing} vs single {single_routing} ({}x fewer)",
+        nested_routing / single_routing.max(1)
+    );
+    (s, nested_routing, single_routing)
+}
+
+/// **Figs. 12–15** — OMD-RT vs SGP on the four named topologies with
+/// Table II parameters. Returns per-topology series.
+pub fn fig12_15(cfg: &ExperimentConfig, iters: usize) -> Vec<(String, SeriesSet, f64)> {
+    let mut out = Vec::new();
+    for &(name, _n, _e, cbar) in topologies::TABLE2.iter() {
+        let mut c = cfg.clone();
+        c.topology = name.to_string();
+        c.cap_mean = cbar;
+        let mut rng = Rng::seed_from(cfg.seed);
+        let problem = c.build_problem(&mut rng);
+        let lam = problem.uniform_allocation();
+        let omd = OmdRouter::new(cfg.eta_routing).solve(&problem, &lam, iters);
+        let sgp = SgpRouter::new().solve(&problem, &lam, iters);
+        let opt = OptRouter::new().solve(&problem, &lam);
+        let mut s = SeriesSet::new();
+        s.set("omd_rt", pad_to(&omd.trajectory, iters + 1));
+        s.set("sgp", pad_to(&sgp.trajectory, iters + 1));
+        s.set("opt", vec![opt.cost; iters + 1]);
+        save(&s, &format!("fig12_15_{name}.csv"));
+        println!(
+            "{}",
+            asciiplot::plot(
+                &format!("Figs.12-15 {name}: cost vs iteration"),
+                &[
+                    ("OMD-RT", s.get("omd_rt").unwrap()),
+                    ("SGP", s.get("sgp").unwrap()),
+                    ("OPT", s.get("opt").unwrap()),
+                ],
+                64,
+                14,
+            )
+        );
+        out.push((name.to_string(), s, opt.cost));
+    }
+    out
+}
+
+/// **Table II** — verify and print the named-topology parameters.
+pub fn table2() -> Vec<(String, usize, usize, f64)> {
+    let mut rows = Vec::new();
+    println!("{:<16} {:>5} {:>5} {:>8}", "Topology", "|N|", "|E|", "C̄");
+    for &(name, n, e, cbar) in topologies::TABLE2.iter() {
+        let mut rng = Rng::seed_from(1);
+        let g = topologies::by_name(name, cbar, &mut rng).unwrap();
+        assert_eq!(g.n_nodes(), n, "{name} |N| mismatch");
+        assert_eq!(g.n_edges(), 2 * e, "{name} |E| mismatch");
+        println!("{name:<16} {n:>5} {e:>5} {cbar:>8.1}");
+        rows.push((name.to_string(), n, e, cbar));
+    }
+    rows
+}
+
+/// Check a problem's OMD solution satisfies Theorem 3 stationarity within
+/// `tol` (used by harness self-checks).
+pub fn check_stationarity(problem: &Problem, iters: usize, tol: f64) -> bool {
+    let lam = problem.uniform_allocation();
+    let sol = OmdRouter::new(0.5).solve(problem, &lam, iters);
+    let t = crate::model::flow::node_rates(&problem.net, &sol.phi, &lam);
+    let flows = crate::model::flow::edge_flows(&problem.net, &sol.phi, &t);
+    let m = crate::routing::marginal::compute(&problem.net, problem.cost, &sol.phi, &flows);
+    for w in 0..problem.n_versions() {
+        for &i in problem.net.session_routers(w) {
+            if t[w][i] < 1e-6 {
+                continue;
+            }
+            let vals: Vec<f64> = problem
+                .net
+                .session_out(w, i)
+                .filter(|&e| sol.phi.frac[w][e] > 1e-4)
+                .map(|e| m.delta(&problem.net, w, e))
+                .collect();
+            if vals.len() < 2 {
+                continue;
+            }
+            let hi = vals.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let lo = vals.iter().cloned().fold(f64::INFINITY, f64::min);
+            if hi - lo > tol * hi.max(1.0) {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quiet_cfg() -> ExperimentConfig {
+        let mut c = ExperimentConfig::paper_default();
+        c.n_nodes = 10;
+        c
+    }
+
+    #[test]
+    fn fig7_shape() {
+        let (s, opt_cost) = fig7(&quiet_cfg(), 15);
+        let omd = s.get("omd_rt").unwrap();
+        assert_eq!(omd.len(), 16);
+        assert!(omd.last().unwrap() >= &opt_cost || (omd.last().unwrap() - opt_cost).abs() < 1e-3);
+        // OMD descends
+        assert!(omd.last().unwrap() < &omd[0]);
+    }
+
+    #[test]
+    fn fig8_9_rows() {
+        let rows = fig8_9(&quiet_cfg(), &[8, 10], 10);
+        assert_eq!(rows.len(), 2);
+        for r in rows {
+            assert!(r.cost_opt <= r.cost_omd + 1e-6);
+            assert!(r.time_omd_s > 0.0 && r.time_sgp_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn table2_matches() {
+        let rows = table2();
+        assert_eq!(rows.len(), 4);
+    }
+
+    #[test]
+    fn stationarity_check_works() {
+        let cfg = quiet_cfg();
+        let mut rng = Rng::seed_from(cfg.seed);
+        let p = cfg.build_problem(&mut rng);
+        assert!(check_stationarity(&p, 3000, 0.02));
+    }
+}

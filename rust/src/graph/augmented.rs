@@ -1,0 +1,380 @@
+//! Augmented-graph construction (paper §II-C, Fig. 2).
+//!
+//! The real device network is extended with a virtual source `S` (the
+//! controller admitting the total rate λ) and one virtual destination `D_w`
+//! per DNN version. Computation cost at device `i` hosting version `w`
+//! becomes the communication cost of virtual link `(i, D_w)` (eq. 6).
+//!
+//! Node layout (shared with the L2 dense encoding in
+//! `python/compile/model.py`):
+//!
+//! ```text
+//! 0            = S  (virtual source)
+//! 1 ..= n_real = real devices (device d -> node d+1)
+//! n_real+1+w   = D_w (virtual destination of session w)
+//! ```
+//!
+//! Each session `w` is additionally restricted to its **session DAG**: edge
+//! `(i, j)` is usable iff `hop(j, D_w) < hop(i, D_w)` (strictly closer), and
+//! a device hosting version `w` forwards session-`w` traffic only to `D_w`.
+//! This realizes Gallager's loop-free routing-variable sets (DESIGN.md §4):
+//! flow propagation and the marginal-cost broadcast terminate in ≤ DAG-depth
+//! steps, and strong connectivity guarantees every reachable node keeps at
+//! least one usable out-edge.
+
+use super::{DiGraph, EdgeId, NodeId};
+use crate::util::rng::Rng;
+
+/// Which DNN version each real device hosts (one version per device; a
+/// device with capacity for several models is modelled as several virtual
+/// devices per the paper §II-A).
+#[derive(Clone, Debug)]
+pub struct Placement {
+    pub version_of: Vec<usize>,
+    pub n_versions: usize,
+}
+
+impl Placement {
+    pub fn new(version_of: Vec<usize>, n_versions: usize) -> Self {
+        assert!(version_of.iter().all(|&v| v < n_versions));
+        for w in 0..n_versions {
+            assert!(
+                version_of.contains(&w),
+                "version {w} has no hosting device"
+            );
+        }
+        Placement { version_of, n_versions }
+    }
+
+    /// Paper's experiment setup: each device uniformly hosts one of the
+    /// `n_versions` models, with every version hosted somewhere and version 0
+    /// guaranteed at device 0 (the controller's proximate "smallest model"
+    /// entry point).
+    pub fn random(n_devices: usize, n_versions: usize, rng: &mut Rng) -> Placement {
+        assert!(n_devices >= n_versions);
+        loop {
+            let mut v: Vec<usize> = (0..n_devices).map(|_| rng.below(n_versions)).collect();
+            v[0] = 0;
+            let all = (0..n_versions).all(|w| v.contains(&w));
+            if all {
+                return Placement::new(v, n_versions);
+            }
+        }
+    }
+
+    pub fn hosts(&self, w: usize) -> impl Iterator<Item = usize> + '_ {
+        self.version_of
+            .iter()
+            .enumerate()
+            .filter(move |&(_, &v)| v == w)
+            .map(|(d, _)| d)
+    }
+}
+
+/// The augmented CEC network: graph, placement, per-session DAG masks.
+#[derive(Clone, Debug)]
+pub struct AugmentedNet {
+    pub graph: DiGraph,
+    pub placement: Placement,
+    pub n_real: usize,
+    /// `session_edges[w][e]` — edge `e` usable by session `w`.
+    pub session_edges: Vec<Vec<bool>>,
+    /// Per-session topological order of the session DAG (sources first).
+    pub session_topo: Vec<Vec<NodeId>>,
+    /// Edge ids of virtual links, for cost attribution diagnostics.
+    pub virtual_edges: Vec<EdgeId>,
+    /// `session_lanes[w][i]` — cached usable out-edges (hot-path: avoids
+    /// re-filtering adjacency on every routing iteration).
+    pub session_lanes: Vec<Vec<Vec<EdgeId>>>,
+    /// Cached router lists per session (nodes with ≥1 usable out-edge,
+    /// excluding D_w).
+    pub routers: Vec<Vec<NodeId>>,
+    /// Edges usable by at least one session (the cost-bearing edge set).
+    pub union_edges: Vec<EdgeId>,
+}
+
+/// Capacity assigned to S->device admission links (effectively unconstrained:
+/// admission is limited by λ, not by the virtual source links).
+pub const SOURCE_CAP: f64 = 1e6;
+
+impl AugmentedNet {
+    pub const SOURCE: NodeId = 0;
+
+    #[inline]
+    pub fn dnode(&self, w: usize) -> NodeId {
+        self.n_real + 1 + w
+    }
+
+    #[inline]
+    pub fn n_versions(&self) -> usize {
+        self.placement.n_versions
+    }
+
+    #[inline]
+    pub fn n_nodes(&self) -> usize {
+        self.graph.n_nodes()
+    }
+
+    /// Real device `d`'s node id in the augmented graph.
+    #[inline]
+    pub fn device_node(&self, d: usize) -> NodeId {
+        d + 1
+    }
+
+    /// Build from the real network. `comp_cap_mean` is the mean computing
+    /// capacity C_i (drawn per device like link capacities, paper eq. 6).
+    pub fn build(
+        real: &DiGraph,
+        placement: &Placement,
+        comp_cap_mean: f64,
+        rng: &mut Rng,
+    ) -> AugmentedNet {
+        let n_real = real.n_nodes();
+        let w_cnt = placement.n_versions;
+        let n_total = 1 + n_real + w_cnt;
+        let mut g = DiGraph::with_nodes(n_total);
+
+        // real links, shifted by +1
+        for e in real.edges() {
+            g.add_edge(e.src + 1, e.dst + 1, e.capacity);
+        }
+        let mut virtual_edges = Vec::new();
+        // S -> every device hosting version 0 (paper: the controller directly
+        // reaches the devices with the smallest model in proximity)
+        for d in placement.hosts(0) {
+            virtual_edges.push(g.add_edge(Self::SOURCE, d + 1, SOURCE_CAP));
+        }
+        // computation links device -> D_{version(device)}
+        for (d, &v) in placement.version_of.iter().enumerate() {
+            let cap = rng.uniform(0.2 * comp_cap_mean, 1.8 * comp_cap_mean);
+            virtual_edges.push(g.add_edge(d + 1, n_real + 1 + v, cap));
+        }
+
+        let mut net = AugmentedNet {
+            graph: g,
+            placement: placement.clone(),
+            n_real,
+            session_edges: Vec::new(),
+            session_topo: Vec::new(),
+            virtual_edges,
+            session_lanes: Vec::new(),
+            routers: Vec::new(),
+            union_edges: Vec::new(),
+        };
+        net.rebuild_session_dags();
+        net
+    }
+
+    /// (Re)compute the per-session DAG masks + topological orders. Called at
+    /// construction and after any topology change.
+    pub fn rebuild_session_dags(&mut self) {
+        let w_cnt = self.n_versions();
+        let mut session_edges = Vec::with_capacity(w_cnt);
+        let mut session_topo = Vec::with_capacity(w_cnt);
+        for w in 0..w_cnt {
+            let dw = self.dnode(w);
+            let dist = self.graph.dist_to(dw);
+            let mut mask = vec![false; self.graph.n_edges()];
+            for (eid, e) in self.graph.edges().iter().enumerate() {
+                let (du, dv) = (dist[e.src], dist[e.dst]);
+                let (du, dv) = match (du, dv) {
+                    (Some(a), Some(b)) => (a, b),
+                    _ => continue,
+                };
+                if dv >= du {
+                    continue; // not strictly closer -> would allow loops
+                }
+                // a device hosting w only forwards session w to D_w
+                if let Some(d) = self.device_of(e.src) {
+                    if self.placement.version_of[d] == w && e.dst != dw {
+                        continue;
+                    }
+                }
+                // session w traffic never enters a *different* destination
+                if e.dst > self.n_real && e.dst != dw {
+                    continue;
+                }
+                mask[eid] = true;
+            }
+            let topo = self
+                .graph
+                .topo_order(&mask)
+                .expect("session DAG must be acyclic by construction");
+            session_edges.push(mask);
+            session_topo.push(topo);
+        }
+        self.session_edges = session_edges;
+        self.session_topo = session_topo;
+        // hot-path caches
+        self.session_lanes = (0..w_cnt)
+            .map(|w| {
+                (0..self.graph.n_nodes())
+                    .map(|i| {
+                        self.graph
+                            .out_edges(i)
+                            .iter()
+                            .copied()
+                            .filter(|&e| self.session_edges[w][e])
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect();
+        self.routers = (0..w_cnt)
+            .map(|w| {
+                (0..self.graph.n_nodes())
+                    .filter(|&i| i != self.dnode(w) && !self.session_lanes[w][i].is_empty())
+                    .collect()
+            })
+            .collect();
+        self.union_edges = (0..self.graph.n_edges())
+            .filter(|&e| (0..w_cnt).any(|w| self.session_edges[w][e]))
+            .collect();
+    }
+
+    /// Real device index of augmented node `i` (None for S / D_w).
+    #[inline]
+    pub fn device_of(&self, i: NodeId) -> Option<usize> {
+        if i >= 1 && i <= self.n_real {
+            Some(i - 1)
+        } else {
+            None
+        }
+    }
+
+    /// Out-edges of node `i` usable by session `w` (cached).
+    pub fn session_out(&self, w: usize, i: NodeId) -> impl Iterator<Item = EdgeId> + '_ {
+        self.session_lanes[w][i].iter().copied()
+    }
+
+    /// Cached usable out-edge slice for (session, node).
+    #[inline]
+    pub fn lanes(&self, w: usize, i: NodeId) -> &[EdgeId] {
+        &self.session_lanes[w][i]
+    }
+
+    /// Every (node, usable-out-degree>0) pair for session `w`, excluding D_w
+    /// (cached).
+    pub fn session_routers(&self, w: usize) -> &[NodeId] {
+        &self.routers[w]
+    }
+
+    /// Sanity diagnostics used by tests and the CLI `topo` command.
+    pub fn validate(&self) -> Result<(), String> {
+        for w in 0..self.n_versions() {
+            let dw = self.dnode(w);
+            // source must reach the destination inside the session DAG
+            if self.session_out(w, Self::SOURCE).next().is_none() {
+                return Err(format!("session {w}: source has no usable out-edge"));
+            }
+            // every node with a usable in-edge must have a usable out-edge
+            // (flow can't get stuck), except D_w
+            let mask = &self.session_edges[w];
+            for i in 0..self.n_nodes() {
+                if i == dw {
+                    continue;
+                }
+                let has_in = self.graph.in_edges(i).iter().any(|&e| mask[e]);
+                let has_out = self.graph.out_edges(i).iter().any(|&e| mask[e]);
+                if has_in && !has_out {
+                    return Err(format!("session {w}: node {i} is a dead end"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::topologies;
+
+    fn er_net(seed: u64) -> AugmentedNet {
+        let mut rng = Rng::seed_from(seed);
+        topologies::connected_er(12, 0.3, 3, &mut rng)
+    }
+
+    #[test]
+    fn layout_and_counts() {
+        let net = er_net(3);
+        assert_eq!(net.n_nodes(), 12 + 1 + 3);
+        assert_eq!(net.dnode(0), 13);
+        assert_eq!(net.device_node(0), 1);
+        assert_eq!(net.device_of(1), Some(0));
+        assert_eq!(net.device_of(0), None);
+        assert_eq!(net.device_of(13), None);
+    }
+
+    #[test]
+    fn placement_random_covers_all_versions() {
+        let mut rng = Rng::seed_from(5);
+        for _ in 0..20 {
+            let p = Placement::random(8, 3, &mut rng);
+            for w in 0..3 {
+                assert!(p.hosts(w).next().is_some());
+            }
+            assert_eq!(p.version_of[0], 0);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "no hosting device")]
+    fn placement_rejects_missing_version() {
+        Placement::new(vec![0, 0, 0], 2);
+    }
+
+    #[test]
+    fn session_dags_valid() {
+        for seed in 0..10u64 {
+            let net = er_net(seed);
+            net.validate().unwrap();
+            for w in 0..net.n_versions() {
+                // acyclic by construction
+                assert!(net.graph.topo_order(&net.session_edges[w]).is_some());
+                // hosts of w only point at D_w for session w
+                for d in net.placement.hosts(w) {
+                    let node = net.device_node(d);
+                    for e in net.session_out(w, node) {
+                        assert_eq!(net.graph.edge(e).dst, net.dnode(w));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn session_edges_strictly_decrease_distance() {
+        let net = er_net(8);
+        for w in 0..net.n_versions() {
+            let dist = net.graph.dist_to(net.dnode(w));
+            for (eid, used) in net.session_edges[w].iter().enumerate() {
+                if *used {
+                    let e = net.graph.edge(eid);
+                    assert!(dist[e.dst].unwrap() < dist[e.src].unwrap());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn source_cap_is_unconstraining() {
+        let net = er_net(2);
+        for &e in &net.virtual_edges {
+            let edge = net.graph.edge(e);
+            if edge.src == AugmentedNet::SOURCE {
+                assert_eq!(edge.capacity, SOURCE_CAP);
+            }
+        }
+    }
+
+    #[test]
+    fn routers_listed_for_each_session() {
+        let net = er_net(4);
+        for w in 0..net.n_versions() {
+            let routers = net.session_routers(w);
+            assert!(routers.contains(&AugmentedNet::SOURCE));
+            assert!(!routers.contains(&net.dnode(w)));
+        }
+    }
+}

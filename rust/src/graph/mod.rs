@@ -1,0 +1,256 @@
+//! Directed-graph substrate: the CEC network topology layer.
+
+pub mod augmented;
+pub mod paths;
+pub mod topologies;
+
+/// Node identifier (index into the graph's node table).
+pub type NodeId = usize;
+/// Edge identifier (index into the graph's edge table).
+pub type EdgeId = usize;
+
+/// A directed edge with a fixed capacity `C_ij` (bits/sec in the paper).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Edge {
+    pub src: NodeId,
+    pub dst: NodeId,
+    pub capacity: f64,
+}
+
+/// Compact directed graph with O(1) out/in neighbour iteration.
+///
+/// Nodes are dense indices `0..n`. Edges are stored once; adjacency lists
+/// hold edge ids so per-edge state (flows, costs) lives in parallel vectors
+/// indexed by [`EdgeId`].
+#[derive(Clone, Debug, Default)]
+pub struct DiGraph {
+    edges: Vec<Edge>,
+    out_adj: Vec<Vec<EdgeId>>,
+    in_adj: Vec<Vec<EdgeId>>,
+}
+
+impl DiGraph {
+    pub fn with_nodes(n: usize) -> Self {
+        DiGraph {
+            edges: Vec::new(),
+            out_adj: vec![Vec::new(); n],
+            in_adj: vec![Vec::new(); n],
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.out_adj.len()
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Append a node, returning its id.
+    pub fn add_node(&mut self) -> NodeId {
+        self.out_adj.push(Vec::new());
+        self.in_adj.push(Vec::new());
+        self.out_adj.len() - 1
+    }
+
+    /// Add a directed edge; duplicate (src, dst) pairs are rejected.
+    pub fn add_edge(&mut self, src: NodeId, dst: NodeId, capacity: f64) -> EdgeId {
+        assert!(src < self.n_nodes() && dst < self.n_nodes(), "edge endpoints out of range");
+        assert_ne!(src, dst, "self-loops are not allowed");
+        debug_assert!(
+            self.find_edge(src, dst).is_none(),
+            "duplicate edge ({src},{dst})"
+        );
+        let id = self.edges.len();
+        self.edges.push(Edge { src, dst, capacity });
+        self.out_adj[src].push(id);
+        self.in_adj[dst].push(id);
+        id
+    }
+
+    pub fn edge(&self, e: EdgeId) -> &Edge {
+        &self.edges[e]
+    }
+
+    pub fn edges(&self) -> &[Edge] {
+        &self.edges
+    }
+
+    pub fn find_edge(&self, src: NodeId, dst: NodeId) -> Option<EdgeId> {
+        self.out_adj[src].iter().copied().find(|&e| self.edges[e].dst == dst)
+    }
+
+    /// Outgoing edge ids of `i` (the paper's `O(i)`).
+    pub fn out_edges(&self, i: NodeId) -> &[EdgeId] {
+        &self.out_adj[i]
+    }
+
+    /// Incoming edge ids of `i` (the paper's `I(i)`).
+    pub fn in_edges(&self, i: NodeId) -> &[EdgeId] {
+        &self.in_adj[i]
+    }
+
+    pub fn out_neighbors(&self, i: NodeId) -> impl Iterator<Item = NodeId> + '_ {
+        self.out_adj[i].iter().map(move |&e| self.edges[e].dst)
+    }
+
+    pub fn in_neighbors(&self, i: NodeId) -> impl Iterator<Item = NodeId> + '_ {
+        self.in_adj[i].iter().map(move |&e| self.edges[e].src)
+    }
+
+    /// BFS hop distances from every node *to* `target` (follows edges
+    /// forward; computed by BFS on reversed edges).
+    pub fn dist_to(&self, target: NodeId) -> Vec<Option<u32>> {
+        let mut dist = vec![None; self.n_nodes()];
+        dist[target] = Some(0);
+        let mut queue = std::collections::VecDeque::from([target]);
+        while let Some(u) = queue.pop_front() {
+            let du = dist[u].unwrap();
+            for &e in &self.in_adj[u] {
+                let v = self.edges[e].src;
+                if dist[v].is_none() {
+                    dist[v] = Some(du + 1);
+                    queue.push_back(v);
+                }
+            }
+        }
+        dist
+    }
+
+    /// BFS hop distances from `source` to every node.
+    pub fn dist_from(&self, source: NodeId) -> Vec<Option<u32>> {
+        let mut dist = vec![None; self.n_nodes()];
+        dist[source] = Some(0);
+        let mut queue = std::collections::VecDeque::from([source]);
+        while let Some(u) = queue.pop_front() {
+            let du = dist[u].unwrap();
+            for &e in &self.out_adj[u] {
+                let v = self.edges[e].dst;
+                if dist[v].is_none() {
+                    dist[v] = Some(du + 1);
+                    queue.push_back(v);
+                }
+            }
+        }
+        dist
+    }
+
+    /// Is the graph strongly connected? (Kosaraju-lite: forward + backward BFS
+    /// from node 0 both reach everything.)
+    pub fn strongly_connected(&self) -> bool {
+        if self.n_nodes() == 0 {
+            return true;
+        }
+        self.dist_from(0).iter().all(Option::is_some)
+            && self.dist_to(0).iter().all(Option::is_some)
+    }
+
+    /// Kahn topological sort restricted to an edge subset mask; `None` if the
+    /// sub-graph has a cycle.
+    pub fn topo_order(&self, edge_mask: &[bool]) -> Option<Vec<NodeId>> {
+        assert_eq!(edge_mask.len(), self.edges.len());
+        let n = self.n_nodes();
+        let mut indeg = vec![0usize; n];
+        for (e, edge) in self.edges.iter().enumerate() {
+            if edge_mask[e] {
+                indeg[edge.dst] += 1;
+            }
+        }
+        let mut queue: std::collections::VecDeque<NodeId> =
+            (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(u) = queue.pop_front() {
+            order.push(u);
+            for &e in &self.out_adj[u] {
+                if edge_mask[e] {
+                    let v = self.edges[e].dst;
+                    indeg[v] -= 1;
+                    if indeg[v] == 0 {
+                        queue.push_back(v);
+                    }
+                }
+            }
+        }
+        if order.len() == n {
+            Some(order)
+        } else {
+            None
+        }
+    }
+
+    /// Mean link capacity (diagnostics / Table II verification).
+    pub fn mean_capacity(&self) -> f64 {
+        if self.edges.is_empty() {
+            return 0.0;
+        }
+        self.edges.iter().map(|e| e.capacity).sum::<f64>() / self.edges.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn triangle() -> DiGraph {
+        let mut g = DiGraph::with_nodes(3);
+        g.add_edge(0, 1, 1.0);
+        g.add_edge(1, 2, 2.0);
+        g.add_edge(2, 0, 3.0);
+        g
+    }
+
+    #[test]
+    fn construction_and_adjacency() {
+        let g = triangle();
+        assert_eq!(g.n_nodes(), 3);
+        assert_eq!(g.n_edges(), 3);
+        assert_eq!(g.out_neighbors(0).collect::<Vec<_>>(), vec![1]);
+        assert_eq!(g.in_neighbors(0).collect::<Vec<_>>(), vec![2]);
+        assert_eq!(g.edge(g.find_edge(1, 2).unwrap()).capacity, 2.0);
+        assert!(g.find_edge(2, 1).is_none());
+    }
+
+    #[test]
+    fn distances() {
+        let g = triangle();
+        let d = g.dist_to(2);
+        assert_eq!(d[2], Some(0));
+        assert_eq!(d[1], Some(1));
+        assert_eq!(d[0], Some(2));
+        let f = g.dist_from(0);
+        assert_eq!(f[2], Some(2));
+    }
+
+    #[test]
+    fn strong_connectivity() {
+        assert!(triangle().strongly_connected());
+        let mut g = DiGraph::with_nodes(2);
+        g.add_edge(0, 1, 1.0);
+        assert!(!g.strongly_connected());
+    }
+
+    #[test]
+    fn topo_sort_dag_and_cycle() {
+        let mut g = DiGraph::with_nodes(3);
+        g.add_edge(0, 1, 1.0);
+        g.add_edge(1, 2, 1.0);
+        let order = g.topo_order(&[true, true]).unwrap();
+        assert_eq!(order, vec![0, 1, 2]);
+        let t = triangle();
+        assert!(t.topo_order(&[true, true, true]).is_none());
+        // cycle broken by mask
+        assert!(t.topo_order(&[true, true, false]).is_some());
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_self_loop() {
+        let mut g = DiGraph::with_nodes(1);
+        g.add_edge(0, 0, 1.0);
+    }
+
+    #[test]
+    fn mean_capacity_ok() {
+        assert!((triangle().mean_capacity() - 2.0).abs() < 1e-12);
+    }
+}

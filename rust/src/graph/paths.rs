@@ -1,0 +1,120 @@
+//! Path enumeration over session DAGs — the substrate of the centralized
+//! OPT baseline (the paper's Fig. 7 "OPT": the operator knows the whole
+//! topology, enumerates every S→D_w path, and solves the convex path-flow
+//! program).
+
+use super::augmented::AugmentedNet;
+use super::{EdgeId, NodeId};
+
+/// One source→destination path as a sequence of edge ids.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Path {
+    pub session: usize,
+    pub edges: Vec<EdgeId>,
+}
+
+/// Enumerate every path `S -> D_w` inside session `w`'s DAG, up to `cap`
+/// paths (DAGs keep this finite; `cap` guards pathological ER draws).
+pub fn enumerate_paths(net: &AugmentedNet, w: usize, cap: usize) -> Vec<Path> {
+    let mut out = Vec::new();
+    let mut stack: Vec<EdgeId> = Vec::new();
+    dfs(net, w, AugmentedNet::SOURCE, net.dnode(w), &mut stack, &mut out, cap);
+    out
+}
+
+fn dfs(
+    net: &AugmentedNet,
+    w: usize,
+    u: NodeId,
+    target: NodeId,
+    stack: &mut Vec<EdgeId>,
+    out: &mut Vec<Path>,
+    cap: usize,
+) {
+    if out.len() >= cap {
+        return;
+    }
+    if u == target {
+        out.push(Path { session: w, edges: stack.clone() });
+        return;
+    }
+    for e in net.session_out(w, u) {
+        stack.push(e);
+        dfs(net, w, net.graph.edge(e).dst, target, stack, out, cap);
+        stack.pop();
+        if out.len() >= cap {
+            return;
+        }
+    }
+}
+
+/// Count paths without materializing them (DP over the DAG topo order).
+pub fn count_paths(net: &AugmentedNet, w: usize) -> u64 {
+    let n = net.n_nodes();
+    let mut count = vec![0u64; n];
+    count[net.dnode(w)] = 1;
+    // reverse topological order: destinations first
+    for &i in net.session_topo[w].iter().rev() {
+        if i == net.dnode(w) {
+            continue;
+        }
+        let mut c = 0u64;
+        for e in net.session_out(w, i) {
+            c = c.saturating_add(count[net.graph.edge(e).dst]);
+        }
+        count[i] = c;
+    }
+    count[AugmentedNet::SOURCE]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::topologies;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn paths_reach_destination_and_match_count() {
+        let mut rng = Rng::seed_from(12);
+        let net = topologies::connected_er(10, 0.35, 3, &mut rng);
+        for w in 0..3 {
+            let paths = enumerate_paths(&net, w, 1_000_000);
+            assert_eq!(paths.len() as u64, count_paths(&net, w));
+            assert!(!paths.is_empty());
+            for p in &paths {
+                // starts at S, ends at D_w, contiguous
+                let first = net.graph.edge(p.edges[0]);
+                assert_eq!(first.src, AugmentedNet::SOURCE);
+                let last = net.graph.edge(*p.edges.last().unwrap());
+                assert_eq!(last.dst, net.dnode(w));
+                for win in p.edges.windows(2) {
+                    assert_eq!(net.graph.edge(win[0]).dst, net.graph.edge(win[1]).src);
+                }
+                // all edges belong to the session DAG
+                assert!(p.edges.iter().all(|&e| net.session_edges[w][e]));
+            }
+        }
+    }
+
+    #[test]
+    fn cap_limits_enumeration() {
+        let mut rng = Rng::seed_from(99);
+        let net = topologies::connected_er(14, 0.4, 3, &mut rng);
+        let some = enumerate_paths(&net, 0, 5);
+        assert!(some.len() <= 5);
+    }
+
+    #[test]
+    fn paths_are_simple() {
+        // DAG property: no node repeats within a path
+        let mut rng = Rng::seed_from(21);
+        let net = topologies::connected_er(9, 0.4, 2, &mut rng);
+        for p in enumerate_paths(&net, 1, 10_000) {
+            let mut seen = std::collections::HashSet::new();
+            seen.insert(AugmentedNet::SOURCE);
+            for &e in &p.edges {
+                assert!(seen.insert(net.graph.edge(e).dst), "node repeated");
+            }
+        }
+    }
+}

@@ -1,0 +1,244 @@
+//! Topology generators for every network family in the paper's evaluation
+//! (Section IV + Appendix F, Table II).
+//!
+//! All generators produce the *real* device network as a [`DiGraph`] in which
+//! each physical link is a pair of directed edges with the same capacity.
+//! Capacities are drawn uniformly with mean `cap_mean`, truncated to
+//! `[0.2, 1.8] * cap_mean` (the paper draws from `[0, 2C̄]`; we keep the mean
+//! but stay away from 0 so the exp link cost remains finite in f32 on the
+//! XLA hot path — see DESIGN.md §3).
+
+use super::DiGraph;
+use crate::util::rng::Rng;
+
+/// Draw a truncated-uniform capacity with mean `cap_mean`.
+fn draw_cap(rng: &mut Rng, cap_mean: f64) -> f64 {
+    rng.uniform(0.2 * cap_mean, 1.8 * cap_mean)
+}
+
+/// Add an undirected (bidirectional) link with one sampled capacity.
+fn add_link(g: &mut DiGraph, rng: &mut Rng, u: usize, v: usize, cap_mean: f64) {
+    let c = draw_cap(rng, cap_mean);
+    g.add_edge(u, v, c);
+    g.add_edge(v, u, c);
+}
+
+fn from_pairs(n: usize, pairs: &[(usize, usize)], cap_mean: f64, rng: &mut Rng) -> DiGraph {
+    let mut g = DiGraph::with_nodes(n);
+    for &(u, v) in pairs {
+        add_link(&mut g, rng, u, v, cap_mean);
+    }
+    debug_assert!(g.strongly_connected(), "named topology must be connected");
+    g
+}
+
+/// **Connected-ER(n, p)** — connectivity-guaranteed Erdős–Rényi: sample each
+/// undirected pair with probability `p`, resample until connected.
+/// The paper's default experiment: n=25, p=0.2, C̄=10.
+pub fn connected_er_graph(n: usize, p: f64, cap_mean: f64, rng: &mut Rng) -> DiGraph {
+    assert!(n >= 2);
+    loop {
+        let mut g = DiGraph::with_nodes(n);
+        for u in 0..n {
+            for v in (u + 1)..n {
+                if rng.chance(p) {
+                    add_link(&mut g, rng, u, v, cap_mean);
+                }
+            }
+        }
+        if g.n_edges() > 0 && g.strongly_connected() {
+            return g;
+        }
+    }
+}
+
+/// **Abilene** (Fig. 3; Table II: |N|=11, |E|=14, C̄=15) — the Internet2
+/// predecessor backbone. Node order: Seattle, Sunnyvale, Denver, LA,
+/// Houston, Kansas City, Indianapolis, Atlanta, Chicago, New York,
+/// Washington DC.
+pub fn abilene(cap_mean: f64, rng: &mut Rng) -> DiGraph {
+    const PAIRS: [(usize, usize); 14] = [
+        (0, 1), // Seattle - Sunnyvale
+        (0, 2), // Seattle - Denver
+        (1, 3), // Sunnyvale - LA
+        (1, 2), // Sunnyvale - Denver
+        (3, 4), // LA - Houston
+        (2, 5), // Denver - Kansas City
+        (4, 5), // Houston - Kansas City
+        (4, 7), // Houston - Atlanta
+        (5, 6), // Kansas City - Indianapolis
+        (6, 7), // Indianapolis - Atlanta
+        (6, 8), // Indianapolis - Chicago
+        (8, 9), // Chicago - New York
+        (7, 10), // Atlanta - Washington DC
+        (9, 10), // New York - Washington DC
+    ];
+    from_pairs(11, &PAIRS, cap_mean, rng)
+}
+
+/// **Balanced-tree** (Fig. 4; Table II: |N|=14, |E|=23, C̄=10) — a complete
+/// binary tree over 14 nodes (13 tree links) augmented with 10 deterministic
+/// sibling/cousin cross-links to reach Table II's 23 physical links.
+pub fn balanced_tree(cap_mean: f64, rng: &mut Rng) -> DiGraph {
+    let mut pairs: Vec<(usize, usize)> = Vec::new();
+    // complete binary tree, nodes 0..14, children of i: 2i+1, 2i+2
+    for i in 0..14usize {
+        for c in [2 * i + 1, 2 * i + 2] {
+            if c < 14 {
+                pairs.push((i, c));
+            }
+        }
+    }
+    // cross links: siblings at each level + level-skipping chords
+    let cross: [(usize, usize); 10] =
+        [(1, 2), (3, 4), (5, 6), (7, 8), (9, 10), (11, 12), (3, 5), (4, 6), (7, 11), (8, 12)];
+    pairs.extend_from_slice(&cross);
+    assert_eq!(pairs.len(), 23);
+    from_pairs(14, &pairs, cap_mean, rng)
+}
+
+/// **Fog** (Fig. 5; Table II: |N|=15, |E|=30, C̄=10) — the layered
+/// fog-computing sample of Kamran et al. (DECO): 8 leaf edge devices, 4 fog
+/// nodes, 2 aggregation nodes, 1 cloud root; leaves dual-homed to fog layer,
+/// fog nodes in a ring and dual-homed to aggregation, aggregation to cloud.
+pub fn fog(cap_mean: f64, rng: &mut Rng) -> DiGraph {
+    // layout: 0..8 leaves, 8..12 fog, 12..14 aggregation, 14 cloud
+    let mut pairs: Vec<(usize, usize)> = Vec::new();
+    for leaf in 0..8usize {
+        let f1 = 8 + leaf / 2;
+        let f2 = 8 + (leaf / 2 + 1) % 4;
+        pairs.push((leaf, f1));
+        pairs.push((leaf, f2));
+    }
+    for f in 0..4usize {
+        pairs.push((8 + f, 8 + (f + 1) % 4)); // fog ring
+        pairs.push((8 + f, 12 + f % 2)); // fog -> aggregation
+    }
+    pairs.push((12, 13));
+    pairs.push((12, 14));
+    pairs.push((13, 14));
+    // cross-tier shortcuts to reach 30 links (all distinct from the above)
+    pairs.push((8, 13));
+    pairs.push((9, 12));
+    pairs.push((0, 10));
+    assert_eq!(pairs.len(), 30);
+    from_pairs(15, &pairs, cap_mean, rng)
+}
+
+/// **GEANT** (Fig. 6; Table II: |N|=22, |E|=33, C̄=10) — pan-European
+/// research network; we use the 22-PoP abstraction with 33 physical links
+/// (a ring backbone with meshed core chords), matching Table II's
+/// cardinalities.
+pub fn geant(cap_mean: f64, rng: &mut Rng) -> DiGraph {
+    let mut pairs: Vec<(usize, usize)> = Vec::new();
+    for i in 0..22usize {
+        pairs.push((i, (i + 1) % 22)); // 22-node ring
+    }
+    // 11 core chords
+    let chords: [(usize, usize); 11] = [
+        (0, 11),
+        (2, 9),
+        (4, 13),
+        (6, 15),
+        (8, 17),
+        (10, 19),
+        (1, 12),
+        (3, 16),
+        (5, 18),
+        (7, 20),
+        (14, 21),
+    ];
+    pairs.extend_from_slice(&chords);
+    assert_eq!(pairs.len(), 33);
+    from_pairs(22, &pairs, cap_mean, rng)
+}
+
+/// Named lookup used by the CLI and the fig12–15 bench.
+pub fn by_name(name: &str, cap_mean: f64, rng: &mut Rng) -> Option<DiGraph> {
+    match name {
+        "abilene" => Some(abilene(cap_mean, rng)),
+        "tree" | "balanced-tree" => Some(balanced_tree(cap_mean, rng)),
+        "fog" => Some(fog(cap_mean, rng)),
+        "geant" => Some(geant(cap_mean, rng)),
+        _ => None,
+    }
+}
+
+/// Table II defaults: (name, |N|, undirected |E|, C̄).
+pub const TABLE2: [(&str, usize, usize, f64); 4] = [
+    ("abilene", 11, 14, 15.0),
+    ("tree", 14, 23, 10.0),
+    ("fog", 15, 30, 10.0),
+    ("geant", 22, 33, 10.0),
+];
+
+/// Convenience: build the paper's default experiment network
+/// (Connected-ER(n, p) + random placements) as an [`super::augmented::AugmentedNet`].
+pub fn connected_er(
+    n: usize,
+    p: f64,
+    n_versions: usize,
+    rng: &mut Rng,
+) -> super::augmented::AugmentedNet {
+    let g = connected_er_graph(n, p, 10.0, rng);
+    let placements = super::augmented::Placement::random(n, n_versions, rng);
+    super::augmented::AugmentedNet::build(&g, &placements, 10.0, rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_cardinalities() {
+        let mut rng = Rng::seed_from(1);
+        for &(name, n, e, cbar) in TABLE2.iter() {
+            let g = by_name(name, cbar, &mut rng).unwrap();
+            assert_eq!(g.n_nodes(), n, "{name} |N|");
+            assert_eq!(g.n_edges(), 2 * e, "{name} |E| (directed)");
+            assert!(g.strongly_connected(), "{name} connectivity");
+            let mc = g.mean_capacity();
+            assert!((mc - cbar).abs() < cbar * 0.35, "{name} mean cap {mc} vs {cbar}");
+        }
+    }
+
+    #[test]
+    fn er_connected_and_sized() {
+        let mut rng = Rng::seed_from(7);
+        for &n in &[10usize, 25, 40] {
+            let g = connected_er_graph(n, 0.2, 10.0, &mut rng);
+            assert_eq!(g.n_nodes(), n);
+            assert!(g.strongly_connected());
+            // bidirectional pairing: every edge has its reverse with equal cap
+            for e in g.edges() {
+                let rid = g.find_edge(e.dst, e.src).expect("reverse edge");
+                assert_eq!(g.edge(rid).capacity, e.capacity);
+            }
+        }
+    }
+
+    #[test]
+    fn er_deterministic_per_seed() {
+        let g1 = connected_er_graph(15, 0.3, 10.0, &mut Rng::seed_from(5));
+        let g2 = connected_er_graph(15, 0.3, 10.0, &mut Rng::seed_from(5));
+        assert_eq!(g1.n_edges(), g2.n_edges());
+        for (a, b) in g1.edges().iter().zip(g2.edges()) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn capacities_truncated_mean_ok() {
+        let mut rng = Rng::seed_from(11);
+        let g = connected_er_graph(30, 0.3, 10.0, &mut rng);
+        for e in g.edges() {
+            assert!(e.capacity >= 2.0 && e.capacity <= 18.0);
+        }
+    }
+
+    #[test]
+    fn unknown_name_is_none() {
+        let mut rng = Rng::seed_from(1);
+        assert!(by_name("nope", 10.0, &mut rng).is_none());
+    }
+}

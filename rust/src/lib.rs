@@ -1,0 +1,58 @@
+//! # jowr — Joint Optimization of Workload allocation and Routing in CEC
+//!
+//! A production-grade reproduction of *"Online Optimization of DNN Inference
+//! Network Utility in Collaborative Edge Computing"* (Li, Ouyang, Zeng, Liao,
+//! Zhou, Chen; 2024).
+//!
+//! The crate is the Layer-3 **rust coordinator** of a three-layer stack:
+//!
+//! * **L3 (this crate)** — the CEC control plane: graph/topology substrate,
+//!   flow model, marginal-cost broadcast, the paper's OMD-RT routing and
+//!   GS-OMA / OMAD allocation algorithms, the SGP / GP / OPT baselines, an
+//!   actor-based distributed runtime, and a discrete-event serving simulator.
+//! * **L2 (python/compile/model.py)** — a full OMD-RT iteration as a JAX
+//!   tensor program plus the served DNN family, AOT-lowered to HLO text.
+//! * **L1 (python/compile/kernels)** — Pallas kernels for the mirror-descent
+//!   update and link-cost evaluation.
+//!
+//! Python never runs at request time: [`runtime`] loads the AOT artifacts
+//! through the PJRT C API (`xla` crate) and the binary is self-contained.
+//!
+//! Quickstart (see `examples/quickstart.rs`):
+//!
+//! ```no_run
+//! use jowr::prelude::*;
+//! let mut rng = Rng::seed_from(7);
+//! let net = topologies::connected_er(25, 0.2, 3, &mut rng);
+//! let problem = Problem::new(net, 60.0, CostKind::Exp);
+//! let mut omd = OmdRouter::new(0.1);
+//! let sol = omd.solve(&problem, &problem.uniform_allocation(), 50);
+//! println!("total network cost = {}", sol.cost);
+//! ```
+
+pub mod allocation;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod graph;
+pub mod metrics;
+pub mod model;
+pub mod routing;
+pub mod runtime;
+pub mod testkit;
+pub mod util;
+
+/// Convenience re-exports for examples / benches / the CLI.
+pub mod prelude {
+    pub use crate::allocation::{gsoma::GsOma, omad::Omad, Allocator, UtilityOracle};
+    pub use crate::graph::augmented::{AugmentedNet, Placement};
+    pub use crate::graph::topologies;
+    pub use crate::graph::DiGraph;
+    pub use crate::model::cost::CostKind;
+    pub use crate::model::utility::{Utility, UtilityKind};
+    pub use crate::model::Problem;
+    pub use crate::routing::{
+        gp::GpRouter, omd::OmdRouter, opt::OptRouter, sgp::SgpRouter, Router, RoutingState,
+    };
+    pub use crate::util::rng::Rng;
+}

@@ -1,0 +1,321 @@
+//! `jowr` — CLI launcher for the JOWR system.
+//!
+//! ```text
+//! jowr fig --id 7 [--iters 200] [--seed 42]       regenerate a paper figure
+//! jowr fig --id all                               every figure + table
+//! jowr topo --name abilene | --all                topology stats (Table II)
+//! jowr route [--n 25] [--p 0.2] [--algo omd|sgp|gp|opt] [--iters 50]
+//! jowr allocate [--family log] [--algo gsoma|omad] [--iters 60]
+//! jowr serve [--sim-time 20] [--iters 40] [--xla] end-to-end serving demo
+//! jowr runtime-check                              AOT artifact smoke test
+//! jowr config --dump                              print the default config
+//! ```
+
+use jowr::allocation::{gsoma::GsOma, omad::Omad, Allocator, AnalyticOracle, SingleStepOracle};
+use jowr::config::ExperimentConfig;
+use jowr::coordinator::serving::{AnalyticEngine, MeasuredOracle, ServeParams};
+use jowr::experiments;
+use jowr::graph::topologies;
+use jowr::model::utility::family;
+use jowr::prelude::*;
+use jowr::routing::Router;
+use jowr::util::cli::Args;
+
+fn main() {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        usage();
+        std::process::exit(2);
+    }
+    let cmd = argv.remove(0);
+    let args = match Args::parse(argv) {
+        Ok(a) => a,
+        Err(e) => die(&e),
+    };
+    let result = match cmd.as_str() {
+        "fig" => cmd_fig(&args),
+        "topo" => cmd_topo(&args),
+        "route" => cmd_route(&args),
+        "dist" => cmd_dist(&args),
+        "allocate" => cmd_allocate(&args),
+        "serve" => cmd_serve(&args),
+        "runtime-check" => cmd_runtime_check(&args),
+        "config" => cmd_config(&args),
+        "help" | "--help" | "-h" => {
+            usage();
+            Ok(())
+        }
+        other => Err(format!("unknown subcommand '{other}' (try `jowr help`)")),
+    };
+    if let Err(e) = result.and_then(|_| args.finish()) {
+        die(&e);
+    }
+}
+
+fn die(msg: &str) -> ! {
+    eprintln!("error: {msg}");
+    std::process::exit(2)
+}
+
+fn usage() {
+    println!(
+        "jowr — online optimization of DNN inference network utility in CEC\n\n\
+         subcommands:\n  \
+         fig --id 7|8|9|10|11|12|all    regenerate paper figures\n  \
+         topo --name <x> | --all        topology stats (Table II)\n  \
+         route [--algo omd|sgp|gp|opt]  run one routing solve\n  \
+         dist [--rounds 50]             distributed OMD-RT (actors + comm stats)\n  \
+         allocate [--algo gsoma|omad]   run one allocation solve\n  \
+         serve [--xla]                  end-to-end serving demo\n  \
+         runtime-check                  AOT artifact smoke test\n  \
+         config --dump                  print default config JSON"
+    );
+}
+
+fn load_cfg(args: &Args) -> Result<ExperimentConfig, String> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::from_file(std::path::Path::new(path))?,
+        None => ExperimentConfig::paper_default(),
+    };
+    cfg.n_nodes = args.usize_or("n", cfg.n_nodes)?;
+    cfg.p_link = args.f64_or("p", cfg.p_link)?;
+    cfg.total_rate = args.f64_or("rate", cfg.total_rate)?;
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    if let Some(f) = args.get("family") {
+        cfg.utility = f.to_string();
+    }
+    Ok(cfg)
+}
+
+fn cmd_fig(args: &Args) -> Result<(), String> {
+    let cfg = load_cfg(args)?;
+    let id = args.get_or("id", "all").to_string();
+    let iters = args.usize_or("iters", 0)?;
+    let run = |which: &str| match which {
+        "7" => {
+            experiments::fig7(&cfg, if iters > 0 { iters } else { 200 });
+        }
+        "8" | "9" => {
+            experiments::fig8_9(&cfg, &[20, 25, 30, 35, 40], if iters > 0 { iters } else { 50 });
+        }
+        "10" => {
+            experiments::fig10(&cfg, if iters > 0 { iters } else { 60 });
+        }
+        "11" => {
+            experiments::fig11(&cfg, if iters > 0 { iters } else { 100 }, 50);
+        }
+        "12" | "13" | "14" | "15" => {
+            experiments::fig12_15(&cfg, if iters > 0 { iters } else { 100 });
+        }
+        _ => {}
+    };
+    match id.as_str() {
+        "all" => {
+            experiments::table2();
+            for f in ["7", "8", "10", "11", "12"] {
+                run(f);
+            }
+        }
+        other => run(other),
+    }
+    Ok(())
+}
+
+fn cmd_topo(args: &Args) -> Result<(), String> {
+    if args.flag("all") {
+        experiments::table2();
+        return Ok(());
+    }
+    let name = args.get("name").ok_or("need --name or --all")?.to_string();
+    let mut rng = Rng::seed_from(args.u64_or("seed", 1)?);
+    let g = topologies::by_name(&name, 10.0, &mut rng)
+        .ok_or_else(|| format!("unknown topology '{name}'"))?;
+    println!("{name}: |N|={} |E|={} (directed), C̄={:.2}", g.n_nodes(), g.n_edges(), g.mean_capacity());
+    for e in g.edges() {
+        println!("  {} -> {}  C={:.2}", e.src, e.dst, e.capacity);
+    }
+    Ok(())
+}
+
+fn cmd_route(args: &Args) -> Result<(), String> {
+    let cfg = load_cfg(args)?;
+    let iters = args.usize_or("iters", 50)?;
+    let algo = args.get_or("algo", "omd").to_string();
+    let mut rng = Rng::seed_from(cfg.seed);
+    let problem = cfg.build_problem(&mut rng);
+    let lam = problem.uniform_allocation();
+    println!(
+        "routing on {} (n_real={}, λ={}, W={}) with {algo}, {iters} iters",
+        cfg.topology, problem.net.n_real, cfg.total_rate, cfg.n_versions
+    );
+    let sol = match algo.as_str() {
+        "omd" => OmdRouter::new(cfg.eta_routing).solve(&problem, &lam, iters),
+        "sgp" => SgpRouter::new().solve(&problem, &lam, iters),
+        "gp" => GpRouter::new(0.002).solve(&problem, &lam, iters),
+        "opt" => {
+            let o = OptRouter::new().solve(&problem, &lam);
+            println!(
+                "OPT cost {:.6} in {} iterations ({:.3}s)",
+                o.cost, o.iterations, o.elapsed_s
+            );
+            return Ok(());
+        }
+        other => return Err(format!("unknown algo '{other}'")),
+    };
+    println!(
+        "cost {:.6} -> {:.6} in {} iters ({:.4}s)",
+        sol.trajectory[0], sol.cost, sol.iterations, sol.elapsed_s
+    );
+    Ok(())
+}
+
+fn cmd_dist(args: &Args) -> Result<(), String> {
+    let cfg = load_cfg(args)?;
+    let rounds = args.usize_or("rounds", 50)?;
+    let mut rng = Rng::seed_from(cfg.seed);
+    let problem = cfg.build_problem(&mut rng);
+    let lam = problem.uniform_allocation();
+    println!(
+        "distributed OMD-RT: {} node actors + leader, {rounds} barriered rounds",
+        problem.net.n_real
+    );
+    let dist = jowr::coordinator::leader::DistributedOmd::new(cfg.eta_routing);
+    let (sol, comm) = dist.solve(&problem, &lam, rounds);
+    println!(
+        "cost {:.6} -> {:.6} in {:.3}s",
+        sol.trajectory[0], sol.cost, sol.elapsed_s
+    );
+    println!(
+        "communication: {} messages, {} bytes total ({:.1} msgs/round, {:.1} B/round/device)",
+        comm.messages,
+        comm.bytes,
+        comm.messages as f64 / rounds as f64,
+        comm.bytes as f64 / rounds as f64 / problem.net.n_real as f64
+    );
+    // cross-check against the centralized solver
+    let central = OmdRouter::new(cfg.eta_routing).solve(&problem, &lam, rounds);
+    let rel = (sol.cost - central.cost).abs() / central.cost.abs().max(1.0);
+    println!("centralized cross-check: cost {:.6} (rel diff {rel:.2e})", central.cost);
+    Ok(())
+}
+
+fn cmd_allocate(args: &Args) -> Result<(), String> {
+    let cfg = load_cfg(args)?;
+    let iters = args.usize_or("iters", 60)?;
+    let algo = args.get_or("algo", "gsoma").to_string();
+    let mut rng = Rng::seed_from(cfg.seed);
+    let problem = cfg.build_problem(&mut rng);
+    let utilities = family(&cfg.utility, cfg.n_versions, cfg.total_rate)
+        .ok_or_else(|| format!("unknown utility family '{}'", cfg.utility))?;
+    let st = match algo.as_str() {
+        "gsoma" => {
+            let mut o = AnalyticOracle::new(problem, utilities);
+            GsOma::new(cfg.delta, cfg.eta_alloc).run(&mut o, iters)
+        }
+        "omad" => {
+            let mut o = SingleStepOracle::new(problem, utilities, cfg.eta_routing);
+            Omad::new(cfg.delta, cfg.eta_alloc).run(&mut o, iters)
+        }
+        other => return Err(format!("unknown algo '{other}'")),
+    };
+    println!(
+        "{algo} ({} utility): U {:.4} -> {:.4} in {} outer iters, {} routing iters ({:.3}s)",
+        cfg.utility,
+        st.trajectory[0],
+        st.trajectory.last().unwrap(),
+        st.iterations,
+        st.routing_iterations,
+        st.elapsed_s
+    );
+    println!("final Λ = {:?}", st.lam);
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let cfg = load_cfg(args)?;
+    let iters = args.usize_or("iters", 40)?;
+    let sim_time = args.f64_or("sim-time", 10.0)?;
+    let use_xla = args.flag("xla");
+    let mut rng = Rng::seed_from(cfg.seed);
+    let problem = cfg.build_problem(&mut rng);
+    let params = ServeParams { sim_time, ..ServeParams::default_for(cfg.n_versions) };
+    let mut alg = Omad::new(cfg.delta, 0.03);
+    let st = if use_xla {
+        let engine = jowr::runtime::dnn::XlaEngine::load_default(cfg.n_versions)
+            .map_err(|e| format!("xla engine: {e:#}"))?;
+        println!("serving with measured DNN latencies (backend: xla-pjrt)");
+        let mut oracle = MeasuredOracle::new(problem, params, engine, cfg.eta_routing, cfg.seed);
+        let st = alg.run(&mut oracle, iters);
+        if let Some(rep) = &oracle.last_report {
+            print_report(rep);
+        }
+        st
+    } else {
+        println!("serving with the analytic inference engine (pass --xla for real DNNs)");
+        let engine = AnalyticEngine::new(cfg.n_versions, cfg.seed);
+        let mut oracle = MeasuredOracle::new(problem, params, engine, cfg.eta_routing, cfg.seed);
+        let st = alg.run(&mut oracle, iters);
+        if let Some(rep) = &oracle.last_report {
+            print_report(rep);
+        }
+        st
+    };
+    println!(
+        "measured utility {:.4} -> {:.4}; final Λ = {:?}",
+        st.trajectory[0],
+        st.trajectory.last().unwrap(),
+        st.lam
+    );
+    Ok(())
+}
+
+fn print_report(rep: &jowr::coordinator::serving::ServeReport) {
+    println!(
+        "last window: {:.1} fps, latency p50 {:.2}ms p99 {:.2}ms, completed {:?}, dropped {}",
+        rep.throughput_fps,
+        rep.p50_latency_s * 1e3,
+        rep.p99_latency_s * 1e3,
+        rep.completed,
+        rep.dropped
+    );
+}
+
+fn cmd_runtime_check(args: &Args) -> Result<(), String> {
+    let _ = args;
+    let dir = jowr::runtime::XlaRuntime::default_dir();
+    let mut rt = jowr::runtime::XlaRuntime::load(&dir)
+        .map_err(|e| format!("load artifacts from {}: {e:#}", dir.display()))?;
+    println!("manifest: {} entries", rt.manifest.entries.len());
+    // mirror step smoke: move mass to the cheap lane
+    let rows = 4;
+    let k = 2;
+    let phi = vec![0.5f32; rows * k];
+    let delta: Vec<f32> = (0..rows * k).map(|i| if i % 2 == 0 { 0.0 } else { 5.0 }).collect();
+    let mask = vec![1.0f32; rows * k];
+    let out = jowr::runtime::mirror::mirror_step_xla(&mut rt, &phi, &delta, &mask, 1.0, rows, k)
+        .map_err(|e| format!("mirror step: {e:#}"))?;
+    if !(out[0] > 0.9 && out[1] < 0.1) {
+        return Err(format!("mirror step numerics wrong: {out:?}"));
+    }
+    println!("mirror_step OK ({:?}...)", &out[..2]);
+    // dnn smoke
+    let v = jowr::runtime::dnn::DnnVersion::load(&mut rt, "small", 1)
+        .map_err(|e| format!("dnn load: {e:#}"))?;
+    let frames = vec![0.25f32; v.frame_dim];
+    let (out, dt) = v.enhance(&mut rt, &frames).map_err(|e| format!("dnn run: {e:#}"))?;
+    println!(
+        "dnn_small OK: {} outputs, finite={}, {:.3}ms",
+        out.len(),
+        out.iter().all(|x| x.is_finite()),
+        dt * 1e3
+    );
+    println!("runtime-check OK");
+    Ok(())
+}
+
+fn cmd_config(args: &Args) -> Result<(), String> {
+    if args.flag("dump") {
+        println!("{}", ExperimentConfig::paper_default().to_json());
+    }
+    Ok(())
+}

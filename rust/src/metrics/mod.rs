@@ -1,0 +1,133 @@
+//! Metrics: named time series + CSV/JSON export for every experiment.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// A set of named series (columns), written as CSV with an index column.
+#[derive(Clone, Debug, Default)]
+pub struct SeriesSet {
+    series: BTreeMap<String, Vec<f64>>,
+}
+
+impl SeriesSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, name: &str, value: f64) {
+        self.series.entry(name.to_string()).or_default().push(value);
+    }
+
+    pub fn set(&mut self, name: &str, values: Vec<f64>) {
+        self.series.insert(name.to_string(), values);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&[f64]> {
+        self.series.get(name).map(|v| v.as_slice())
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.series.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.series.values().map(|v| v.len()).max().unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// CSV with a leading `iter` column; ragged series pad with blanks.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("iter");
+        for name in self.series.keys() {
+            out.push(',');
+            out.push_str(name);
+        }
+        out.push('\n');
+        let rows = self.len();
+        for r in 0..rows {
+            out.push_str(&r.to_string());
+            for v in self.series.values() {
+                out.push(',');
+                if let Some(x) = v.get(r) {
+                    out.push_str(&format!("{x}"));
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_csv().as_bytes())
+    }
+
+    /// Summary JSON: per-series {n, mean, median, min, max, last}.
+    pub fn summary(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        for (name, v) in &self.series {
+            obj.insert(
+                name.clone(),
+                Json::obj(vec![
+                    ("n", Json::from(v.len())),
+                    ("mean", Json::from(stats::mean(v))),
+                    ("median", Json::from(stats::median(v))),
+                    ("min", Json::from(stats::min(v))),
+                    ("max", Json::from(stats::max(v))),
+                    ("last", Json::from(v.last().copied().unwrap_or(0.0))),
+                ]),
+            );
+        }
+        Json::Obj(obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_csv() {
+        let mut s = SeriesSet::new();
+        s.push("omd", 1.0);
+        s.push("omd", 0.5);
+        s.push("sgp", 2.0);
+        let csv = s.to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "iter,omd,sgp");
+        assert_eq!(lines[1], "0,1,2");
+        assert_eq!(lines[2], "1,0.5,");
+    }
+
+    #[test]
+    fn summary_fields() {
+        let mut s = SeriesSet::new();
+        s.set("x", vec![1.0, 3.0]);
+        let j = s.summary();
+        assert_eq!(j.get("x").get("mean").as_f64().unwrap(), 2.0);
+        assert_eq!(j.get("x").get("last").as_f64().unwrap(), 3.0);
+        assert_eq!(j.get("x").get("n").as_usize().unwrap(), 2);
+    }
+
+    #[test]
+    fn write_csv_roundtrip() {
+        let mut s = SeriesSet::new();
+        s.set("a", vec![1.5]);
+        let dir = std::env::temp_dir().join("jowr_metrics_test");
+        let p = dir.join("out.csv");
+        s.write_csv(&p).unwrap();
+        let back = std::fs::read_to_string(&p).unwrap();
+        assert!(back.contains("1.5"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

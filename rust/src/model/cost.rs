@@ -1,0 +1,164 @@
+//! Link cost families `D_ij(F_ij, C_ij)` (paper §II-D).
+//!
+//! All families are increasing, continuously differentiable and convex in
+//! `F` for fixed `C` — the property Theorems 1/3 rest on. The paper's
+//! experiments use the exponential family `exp(F/C)`; the M/M/1 queueing
+//! delay `F/(C−F)` and a linear energy model are provided for the cost-model
+//! ablation bench.
+
+/// Which convex link-cost family to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CostKind {
+    /// `D = exp(F/C)` — the paper's experimental choice (soft capacity).
+    Exp,
+    /// `D = F / (C - F)` — M/M/1 expected queueing delay (hard capacity,
+    /// softened by a clamped barrier like the L1 kernel's `queue_cost_ref`).
+    Queue,
+    /// `D = a·F` with `a = 1/C` — linear energy/transmission cost.
+    Linear,
+    /// `D = (F/C)^3` — polynomial congestion cost (ablation).
+    Cubic,
+}
+
+impl CostKind {
+    pub fn parse(s: &str) -> Option<CostKind> {
+        match s {
+            "exp" => Some(CostKind::Exp),
+            "queue" | "mm1" => Some(CostKind::Queue),
+            "linear" => Some(CostKind::Linear),
+            "cubic" => Some(CostKind::Cubic),
+            _ => None,
+        }
+    }
+
+    /// Cost `D(F, C)`.
+    #[inline]
+    pub fn value(&self, f: f64, c: f64) -> f64 {
+        debug_assert!(f >= -1e-9, "negative flow {f}");
+        debug_assert!(c > 0.0, "non-positive capacity {c}");
+        match self {
+            CostKind::Exp => (f / c).exp(),
+            CostKind::Queue => {
+                let slack = (c - f).max(1e-3 * c);
+                f / slack
+            }
+            CostKind::Linear => f / c,
+            CostKind::Cubic => {
+                let r = f / c;
+                r * r * r
+            }
+        }
+    }
+
+    /// Marginal cost `∂D/∂F` — the `D'_ij` of eq. (19).
+    #[inline]
+    pub fn derivative(&self, f: f64, c: f64) -> f64 {
+        match self {
+            CostKind::Exp => (f / c).exp() / c,
+            CostKind::Queue => {
+                let slack = (c - f).max(1e-3 * c);
+                c / (slack * slack)
+            }
+            CostKind::Linear => 1.0 / c,
+            CostKind::Cubic => 3.0 * (f / c) * (f / c) / c,
+        }
+    }
+
+    /// Upper bound on `∂²D/∂F²` over `[0, f_max]` — used by the SGP
+    /// baseline's diagonal Hessian scaling (Xi & Yeh style).
+    pub fn second_derivative_bound(&self, f_max: f64, c: f64) -> f64 {
+        match self {
+            CostKind::Exp => (f_max / c).exp() / (c * c),
+            CostKind::Queue => {
+                let slack = (c - f_max).max(1e-3 * c);
+                2.0 * c / (slack * slack * slack)
+            }
+            CostKind::Linear => 0.0,
+            CostKind::Cubic => 6.0 * (f_max / c) / (c * c),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const KINDS: [CostKind; 4] =
+        [CostKind::Exp, CostKind::Queue, CostKind::Linear, CostKind::Cubic];
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(CostKind::parse("exp"), Some(CostKind::Exp));
+        assert_eq!(CostKind::parse("mm1"), Some(CostKind::Queue));
+        assert_eq!(CostKind::parse("linear"), Some(CostKind::Linear));
+        assert_eq!(CostKind::parse("cubic"), Some(CostKind::Cubic));
+        assert_eq!(CostKind::parse("x"), None);
+    }
+
+    #[test]
+    fn increasing_in_flow() {
+        for k in KINDS {
+            let c = 10.0;
+            let mut prev = k.value(0.0, c);
+            for i in 1..=20 {
+                let f = i as f64 * 0.4;
+                let v = k.value(f, c);
+                assert!(v >= prev - 1e-12, "{k:?} not increasing at F={f}");
+                prev = v;
+            }
+        }
+    }
+
+    #[test]
+    fn derivative_matches_finite_difference() {
+        for k in KINDS {
+            let c = 8.0;
+            for &f in &[0.5, 2.0, 5.0] {
+                let h = 1e-6;
+                let fd = (k.value(f + h, c) - k.value(f - h, c)) / (2.0 * h);
+                let d = k.derivative(f, c);
+                assert!(
+                    (fd - d).abs() <= 1e-4 * d.abs().max(1.0),
+                    "{k:?} F={f}: fd={fd} analytic={d}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn convex_along_flow() {
+        // midpoint convexity on a grid
+        for k in KINDS {
+            let c = 10.0;
+            for i in 0..15 {
+                let a = i as f64 * 0.5;
+                let b = a + 3.0;
+                let mid = k.value((a + b) / 2.0, c);
+                let chord = 0.5 * (k.value(a, c) + k.value(b, c));
+                assert!(mid <= chord + 1e-9, "{k:?} not convex at [{a},{b}]");
+            }
+        }
+    }
+
+    #[test]
+    fn second_derivative_bound_dominates() {
+        for k in KINDS {
+            let c = 10.0;
+            let f_max = 8.0;
+            let bound = k.second_derivative_bound(f_max, c);
+            for i in 0..=16 {
+                let f = f_max * i as f64 / 16.0;
+                let h = 1e-4;
+                let dd =
+                    (k.derivative(f + h, c) - k.derivative(f - h, c)) / (2.0 * h);
+                assert!(dd <= bound * (1.0 + 1e-3) + 1e-9, "{k:?} F={f}: {dd} > {bound}");
+            }
+        }
+    }
+
+    #[test]
+    fn queue_cost_finite_past_capacity() {
+        let v = CostKind::Queue.value(15.0, 10.0);
+        assert!(v.is_finite() && v > 0.0);
+    }
+}

@@ -1,0 +1,253 @@
+//! Flow algebra over the augmented graph (paper §II-C, eqs. 1–4).
+//!
+//! Given routing variables φ and an allocation Λ, computes per-session node
+//! ingress rates `t_i(w)`, total link flows `F_ij`, and the total network
+//! cost `Σ D_ij(F_ij, C_ij)`. All sweeps run in session-DAG topological
+//! order, so they are exact in one pass (no fixed-point iteration).
+
+use crate::graph::augmented::AugmentedNet;
+use crate::model::cost::CostKind;
+use crate::model::Problem;
+
+/// Routing configuration φ: `frac[w][e]` is the fraction of session `w`'s
+/// traffic at `src(e)` forwarded over edge `e` (Gallager's routing variables,
+/// eq. 2). For every node with usable out-edges the fractions over those
+/// edges sum to 1; fractions are 0 on edges outside the session DAG.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Phi {
+    pub frac: Vec<Vec<f64>>,
+}
+
+impl Phi {
+    /// Paper's initializer: uniform over each node's usable out-edges
+    /// (`φ¹_i(w) = 1/|O_w(i)|`).
+    pub fn uniform(net: &AugmentedNet) -> Phi {
+        let w_cnt = net.n_versions();
+        let mut frac = vec![vec![0.0; net.graph.n_edges()]; w_cnt];
+        for (w, row) in frac.iter_mut().enumerate() {
+            for i in 0..net.n_nodes() {
+                let outs: Vec<usize> = net.session_out(w, i).collect();
+                if !outs.is_empty() {
+                    let f = 1.0 / outs.len() as f64;
+                    for e in outs {
+                        row[e] = f;
+                    }
+                }
+            }
+        }
+        Phi { frac }
+    }
+
+    /// Row of fractions for (session, node) as (edge, value) pairs.
+    pub fn row<'a>(
+        &'a self,
+        net: &'a AugmentedNet,
+        w: usize,
+        i: usize,
+    ) -> impl Iterator<Item = (usize, f64)> + 'a {
+        net.session_out(w, i).map(move |e| (e, self.frac[w][e]))
+    }
+
+    /// Check simplex feasibility (eq. 3) for every routing node.
+    pub fn is_feasible(&self, net: &AugmentedNet, tol: f64) -> Result<(), String> {
+        for w in 0..net.n_versions() {
+            for e in 0..net.graph.n_edges() {
+                let v = self.frac[w][e];
+                if !net.session_edges[w][e] {
+                    if v != 0.0 {
+                        return Err(format!("session {w}: mass {v} on non-DAG edge {e}"));
+                    }
+                } else if !(-tol..=1.0 + tol).contains(&v) {
+                    return Err(format!("session {w}: fraction {v} out of [0,1] on edge {e}"));
+                }
+            }
+            for &i in net.session_routers(w) {
+                let s: f64 = self.row(net, w, i).map(|(_, v)| v).sum();
+                if (s - 1.0).abs() > tol {
+                    return Err(format!("session {w}: node {i} row sums to {s}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Result of a flow evaluation.
+#[derive(Clone, Debug)]
+pub struct FlowEval {
+    /// `t[w][i]` — session `w`'s total ingress rate at node `i` (eq. 1).
+    pub t: Vec<Vec<f64>>,
+    /// `flows[e]` — total flow `F_ij` on edge `e` (eq. 4).
+    pub flows: Vec<f64>,
+    /// Total network cost `Σ_(i,j) D_ij(F_ij, C_ij)` over *used* edges.
+    pub cost: f64,
+}
+
+/// Per-session ingress rates by forward topological sweep.
+pub fn node_rates(net: &AugmentedNet, phi: &Phi, lam: &[f64]) -> Vec<Vec<f64>> {
+    let w_cnt = net.n_versions();
+    assert_eq!(lam.len(), w_cnt);
+    let mut t = vec![vec![0.0; net.n_nodes()]; w_cnt];
+    for w in 0..w_cnt {
+        t[w][AugmentedNet::SOURCE] = lam[w];
+        for &i in &net.session_topo[w] {
+            let ti = t[w][i];
+            if ti <= 0.0 {
+                continue;
+            }
+            for (e, f) in phi.row(net, w, i) {
+                let dst = net.graph.edge(e).dst;
+                t[w][dst] += ti * f;
+            }
+        }
+    }
+    t
+}
+
+/// Total link flows from node rates.
+pub fn edge_flows(net: &AugmentedNet, phi: &Phi, t: &[Vec<f64>]) -> Vec<f64> {
+    let mut flows = vec![0.0; net.graph.n_edges()];
+    for w in 0..net.n_versions() {
+        for i in 0..net.n_nodes() {
+            let ti = t[w][i];
+            if ti <= 0.0 {
+                continue;
+            }
+            for (e, f) in phi.row(net, w, i) {
+                flows[e] += ti * f;
+            }
+        }
+    }
+    flows
+}
+
+/// Total network cost; only edges carrying any session's DAG are counted
+/// (unused physical links cost nothing at F=0 under all families except Exp,
+/// where exp(0)=1 — we follow the paper and sum over the *augmented* edge
+/// set restricted to session-usable links, a constant set per topology).
+pub fn total_cost(net: &AugmentedNet, cost: CostKind, flows: &[f64]) -> f64 {
+    let mut sum = 0.0;
+    for &e in &net.union_edges {
+        sum += cost.value(flows[e], net.graph.edge(e).capacity);
+    }
+    sum
+}
+
+/// Full evaluation Λ, φ → (t, F, cost).
+pub fn evaluate(problem: &Problem, phi: &Phi, lam: &[f64]) -> FlowEval {
+    let net = &problem.net;
+    let t = node_rates(net, phi, lam);
+    let flows = edge_flows(net, phi, &t);
+    let cost = total_cost(net, problem.cost, &flows);
+    FlowEval { t, flows, cost }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::topologies;
+    use crate::model::Problem;
+    use crate::util::rng::Rng;
+
+    fn problem(seed: u64, n: usize) -> Problem {
+        let mut rng = Rng::seed_from(seed);
+        let net = topologies::connected_er(n, 0.3, 3, &mut rng);
+        Problem::new(net, 60.0, CostKind::Exp)
+    }
+
+    #[test]
+    fn uniform_phi_feasible() {
+        let p = problem(1, 12);
+        let phi = Phi::uniform(&p.net);
+        phi.is_feasible(&p.net, 1e-9).unwrap();
+    }
+
+    #[test]
+    fn conservation_all_traffic_reaches_destinations() {
+        let p = problem(2, 12);
+        let phi = Phi::uniform(&p.net);
+        let lam = p.uniform_allocation();
+        let ev = evaluate(&p, &phi, &lam);
+        for w in 0..p.n_versions() {
+            let dw = p.net.dnode(w);
+            assert!(
+                (ev.t[w][dw] - lam[w]).abs() < 1e-9,
+                "session {w}: {} != {}",
+                ev.t[w][dw],
+                lam[w]
+            );
+        }
+        // flow out of the source equals λ
+        let out: f64 = p
+            .net
+            .graph
+            .out_edges(AugmentedNet::SOURCE)
+            .iter()
+            .map(|&e| ev.flows[e])
+            .sum();
+        assert!((out - 60.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_node_conservation() {
+        let p = problem(3, 10);
+        let phi = Phi::uniform(&p.net);
+        let lam = p.uniform_allocation();
+        let ev = evaluate(&p, &phi, &lam);
+        for w in 0..p.n_versions() {
+            for i in 0..p.net.n_nodes() {
+                if i == AugmentedNet::SOURCE || i == p.net.dnode(w) {
+                    continue;
+                }
+                let inflow: f64 = p
+                    .net
+                    .graph
+                    .in_edges(i)
+                    .iter()
+                    .filter(|&&e| p.net.session_edges[w][e])
+                    .map(|&e| {
+                        let src = p.net.graph.edge(e).src;
+                        ev.t[w][src] * phi.frac[w][e]
+                    })
+                    .sum();
+                assert!((inflow - ev.t[w][i]).abs() < 1e-9, "w={w} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn cost_positive_and_scales_with_rate() {
+        let p = problem(4, 10);
+        let phi = Phi::uniform(&p.net);
+        let c1 = evaluate(&p, &phi, &[10.0, 10.0, 10.0]).cost;
+        let c2 = evaluate(&p, &phi, &[20.0, 20.0, 20.0]).cost;
+        assert!(c1 > 0.0);
+        assert!(c2 > c1);
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        let p = problem(5, 8);
+        let mut phi = Phi::uniform(&p.net);
+        // corrupt one live row
+        let w = 0;
+        let i = p.net.session_routers(w)[0];
+        let e = p.net.session_out(w, i).next().unwrap();
+        phi.frac[w][e] += 0.5;
+        assert!(phi.is_feasible(&p.net, 1e-9).is_err());
+        // mass outside the DAG
+        let mut phi2 = Phi::uniform(&p.net);
+        if let Some(bad) = (0..p.net.graph.n_edges()).find(|&e| !p.net.session_edges[0][e]) {
+            phi2.frac[0][bad] = 0.1;
+            assert!(phi2.is_feasible(&p.net, 1e-9).is_err());
+        }
+    }
+
+    #[test]
+    fn zero_allocation_zero_flow() {
+        let p = problem(6, 8);
+        let phi = Phi::uniform(&p.net);
+        let ev = evaluate(&p, &phi, &[0.0, 0.0, 0.0]);
+        assert!(ev.flows.iter().all(|&f| f == 0.0));
+    }
+}

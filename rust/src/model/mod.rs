@@ -1,0 +1,63 @@
+//! Problem model: cost functions, utility functions, flow algebra, and the
+//! [`Problem`] bundle handed to routers/allocators.
+
+pub mod cost;
+pub mod flow;
+pub mod noise;
+pub mod utility;
+
+use crate::graph::augmented::AugmentedNet;
+use cost::CostKind;
+
+/// A JOWR problem instance: the augmented network, the total admissible task
+/// input rate λ, and the link cost family.
+#[derive(Clone, Debug)]
+pub struct Problem {
+    pub net: AugmentedNet,
+    /// Total DNN inference task input rate λ (e.g. 60 fps in the paper).
+    pub total_rate: f64,
+    pub cost: CostKind,
+}
+
+impl Problem {
+    pub fn new(net: AugmentedNet, total_rate: f64, cost: CostKind) -> Self {
+        assert!(total_rate > 0.0);
+        net.validate().expect("invalid augmented network");
+        Problem { net, total_rate, cost }
+    }
+
+    #[inline]
+    pub fn n_versions(&self) -> usize {
+        self.net.n_versions()
+    }
+
+    /// Paper's allocation initializer: `Λ¹ = (λ/W)·1`.
+    pub fn uniform_allocation(&self) -> Vec<f64> {
+        vec![self.total_rate / self.n_versions() as f64; self.n_versions()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::topologies;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn uniform_allocation_sums_to_rate() {
+        let mut rng = Rng::seed_from(2);
+        let net = topologies::connected_er(10, 0.3, 3, &mut rng);
+        let p = Problem::new(net, 60.0, CostKind::Exp);
+        let a = p.uniform_allocation();
+        assert_eq!(a.len(), 3);
+        assert!((a.iter().sum::<f64>() - 60.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_nonpositive_rate() {
+        let mut rng = Rng::seed_from(2);
+        let net = topologies::connected_er(10, 0.3, 3, &mut rng);
+        Problem::new(net, 0.0, CostKind::Exp);
+    }
+}

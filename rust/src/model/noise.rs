@@ -1,0 +1,120 @@
+//! Time-variant link capacities (paper §II-A): "in practical scenarios with
+//! time-variant link capacity and random noise, our online optimization
+//! approach can still work, assuming the link capacity has a constant mean
+//! `C_ij` with a zero-mean noise."
+//!
+//! [`NoisyCostObserver`] perturbs every capacity multiplicatively per
+//! observation round (truncated-normal, mean 1), so routers/oracles see
+//! noisy costs and marginals while the *true* mean problem stays fixed —
+//! the online-robustness experiment the paper gestures at.
+
+use crate::model::Problem;
+use crate::util::rng::Rng;
+
+/// Produces per-round noisy instantiations of a mean problem.
+#[derive(Clone, Debug)]
+pub struct NoisyCostObserver {
+    /// The mean problem (ground truth).
+    pub mean: Problem,
+    /// Relative capacity noise σ (multiplicative, truncated at ±3σ and
+    /// floored so capacities stay positive).
+    pub sigma: f64,
+    rng: Rng,
+    pub rounds: usize,
+}
+
+impl NoisyCostObserver {
+    pub fn new(mean: Problem, sigma: f64, seed: u64) -> Self {
+        assert!((0.0..0.33).contains(&sigma), "sigma must keep capacities positive");
+        NoisyCostObserver { mean, sigma, rng: Rng::seed_from(seed), rounds: 0 }
+    }
+
+    /// Draw one noisy snapshot of the network (capacities jittered around
+    /// their means; topology and session structure unchanged).
+    pub fn sample(&mut self) -> Problem {
+        self.rounds += 1;
+        let mut net = self.mean.net.clone();
+        let mut g = crate::graph::DiGraph::with_nodes(net.graph.n_nodes());
+        for e in net.graph.edges() {
+            let z = self.rng.normal().clamp(-3.0, 3.0);
+            let factor = (1.0 + self.sigma * z).max(0.1);
+            g.add_edge(e.src, e.dst, e.capacity * factor);
+        }
+        net.graph = g;
+        // session DAGs depend only on connectivity, which is unchanged, but
+        // rebuild keeps the caches coherent with the new graph object
+        net.rebuild_session_dags();
+        Problem::new(net, self.mean.total_rate, self.mean.cost)
+    }
+
+    /// Evaluate φ on the *mean* problem (the ground-truth objective).
+    pub fn mean_cost(&self, phi: &crate::model::flow::Phi, lam: &[f64]) -> f64 {
+        crate::model::flow::evaluate(&self.mean, phi, lam).cost
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::topologies;
+    use crate::model::cost::CostKind;
+    use crate::model::flow::Phi;
+    use crate::routing::omd::OmdRouter;
+    use crate::routing::Router;
+
+    fn mk_problem(seed: u64) -> Problem {
+        let mut rng = Rng::seed_from(seed);
+        let net = topologies::connected_er(10, 0.3, 3, &mut rng);
+        Problem::new(net, 60.0, CostKind::Exp)
+    }
+
+    #[test]
+    fn noise_preserves_structure_and_mean() {
+        let p = mk_problem(1);
+        let mut obs = NoisyCostObserver::new(p.clone(), 0.1, 7);
+        let mut mean_caps = vec![0.0; p.net.graph.n_edges()];
+        let rounds = 400;
+        for _ in 0..rounds {
+            let q = obs.sample();
+            assert_eq!(q.net.graph.n_edges(), p.net.graph.n_edges());
+            for (e, edge) in q.net.graph.edges().iter().enumerate() {
+                mean_caps[e] += edge.capacity / rounds as f64;
+            }
+        }
+        // empirical mean within 5% of the true mean capacity per edge
+        for (e, edge) in p.net.graph.edges().iter().enumerate() {
+            let rel = (mean_caps[e] - edge.capacity).abs() / edge.capacity;
+            assert!(rel < 0.05, "edge {e}: empirical {} vs mean {}", mean_caps[e], edge.capacity);
+        }
+    }
+
+    #[test]
+    fn omd_converges_under_capacity_noise() {
+        // each routing iteration sees a different noisy network; the mean
+        // cost of the iterate must still approach the mean-problem optimum
+        let p = mk_problem(2);
+        let lam = p.uniform_allocation();
+        let clean = OmdRouter::new(0.3).solve(&p, &lam, 2000);
+
+        let mut obs = NoisyCostObserver::new(p.clone(), 0.1, 13);
+        let mut router = OmdRouter::fixed(0.05);
+        let mut phi = Phi::uniform(&p.net);
+        for _ in 0..2000 {
+            let noisy = obs.sample();
+            router.step(&noisy, &lam, &mut phi);
+        }
+        let noisy_final = obs.mean_cost(&phi, &lam);
+        let rel = (noisy_final - clean.cost) / clean.cost;
+        assert!(
+            rel < 0.05,
+            "noisy-trained φ mean cost {noisy_final} vs clean optimum {}",
+            clean.cost
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "sigma")]
+    fn rejects_excessive_noise() {
+        NoisyCostObserver::new(mk_problem(3), 0.5, 1);
+    }
+}

@@ -1,0 +1,148 @@
+//! Task utility functions `u_w(λ_w)` (paper §II-B, Fig. 10's four families).
+//!
+//! The optimizer never evaluates these directly: they are hidden behind the
+//! [`crate::allocation::UtilityOracle`], which only exposes *observed* total
+//! utility values — exactly the paper's "unknown utility function" setting.
+//! This module is the ground truth used to *instantiate* oracles and to
+//! verify convergence against analytically-known optima in tests.
+
+/// The four families evaluated in Fig. 10. All satisfy Assumptions 1–3
+/// (monotone increasing, concave, Lipschitz, bounded on `[0, λ]`) for the
+/// parameter ranges used in the experiments.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum UtilityKind {
+    /// `u(λ) = a·λ`
+    Linear { a: f64 },
+    /// `u(λ) = a·√(λ + b) − a·√b` (the paper's shifted square root)
+    Sqrt { a: f64, b: f64 },
+    /// `u(λ) = −a·λ² + b·λ`, concave increasing on `[0, b/(2a)]`
+    Quadratic { a: f64, b: f64 },
+    /// `u(λ) = a·log(b·λ + 1)`
+    Log { a: f64, b: f64 },
+}
+
+/// A single DNN version's utility function.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Utility {
+    pub kind: UtilityKind,
+}
+
+impl Utility {
+    pub fn new(kind: UtilityKind) -> Self {
+        Utility { kind }
+    }
+
+    /// `u_w(λ_w)`.
+    pub fn value(&self, x: f64) -> f64 {
+        debug_assert!(x >= -1e-9);
+        match self.kind {
+            UtilityKind::Linear { a } => a * x,
+            UtilityKind::Sqrt { a, b } => a * (x + b).sqrt() - a * b.sqrt(),
+            UtilityKind::Quadratic { a, b } => -a * x * x + b * x,
+            UtilityKind::Log { a, b } => a * (b * x + 1.0).ln(),
+        }
+    }
+
+    /// `u'_w(λ_w)` — used only by tests / ground-truth optima, never by the
+    /// online algorithms (which learn from observations).
+    pub fn derivative(&self, x: f64) -> f64 {
+        match self.kind {
+            UtilityKind::Linear { a } => a,
+            UtilityKind::Sqrt { a, b } => 0.5 * a / (x + b).sqrt(),
+            UtilityKind::Quadratic { a, b } => -2.0 * a * x + b,
+            UtilityKind::Log { a, b } => a * b / (b * x + 1.0),
+        }
+    }
+
+    /// Does this instance satisfy Assumption 1 (monotone increasing +
+    /// concave) on `[0, lambda]`?
+    pub fn is_valid_on(&self, lambda: f64) -> bool {
+        match self.kind {
+            UtilityKind::Linear { a } => a > 0.0,
+            UtilityKind::Sqrt { a, b } => a > 0.0 && b >= 0.0,
+            UtilityKind::Quadratic { a, b } => a >= 0.0 && b > 0.0 && b >= 2.0 * a * lambda,
+            UtilityKind::Log { a, b } => a > 0.0 && b > 0.0,
+        }
+    }
+}
+
+/// Build one utility per version from a family name, with the per-version
+/// parameters `(a_w, b_w)` diversified the way Fig. 10 does (larger models
+/// yield higher marginal utility).
+pub fn family(name: &str, n_versions: usize, lambda: f64) -> Option<Vec<Utility>> {
+    let mk = |w: usize| -> Option<UtilityKind> {
+        let i = w as f64 + 1.0;
+        match name {
+            "linear" => Some(UtilityKind::Linear { a: 1.0 + 0.8 * i }),
+            "sqrt" => Some(UtilityKind::Sqrt { a: 6.0 + 2.0 * i, b: 1.0 + i }),
+            // keep quadratic concave-increasing on [0, λ]: b ≥ 2aλ
+            "quadratic" => {
+                let a = 0.01 * i;
+                Some(UtilityKind::Quadratic { a, b: 2.0 * a * lambda + 1.5 * i })
+            }
+            "log" => Some(UtilityKind::Log { a: 8.0 + 4.0 * i, b: 0.5 + 0.3 * i }),
+            _ => None,
+        }
+    };
+    (0..n_versions).map(|w| mk(w).map(Utility::new)).collect()
+}
+
+pub const FAMILIES: [&str; 4] = ["linear", "sqrt", "quadratic", "log"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn families_valid_and_monotone() {
+        let lambda = 60.0;
+        for name in FAMILIES {
+            let us = family(name, 3, lambda).unwrap();
+            assert_eq!(us.len(), 3);
+            for u in &us {
+                assert!(u.is_valid_on(lambda), "{name} invalid");
+                assert!((u.value(0.0)).abs() < 1e-12, "{name} u(0) != 0");
+                let mut prev = u.value(0.0);
+                for i in 1..=30 {
+                    let x = lambda * i as f64 / 30.0;
+                    let v = u.value(x);
+                    assert!(v >= prev - 1e-9, "{name} not increasing");
+                    prev = v;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn concavity_midpoint() {
+        for name in FAMILIES {
+            for u in family(name, 3, 60.0).unwrap() {
+                for i in 0..10 {
+                    let a = 6.0 * i as f64;
+                    let b = a + 6.0;
+                    let mid = u.value((a + b) / 2.0);
+                    let chord = 0.5 * (u.value(a) + u.value(b));
+                    assert!(mid >= chord - 1e-9, "{name} not concave");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn derivative_matches_fd() {
+        for name in FAMILIES {
+            for u in family(name, 3, 60.0).unwrap() {
+                for &x in &[1.0, 10.0, 30.0] {
+                    let h = 1e-6;
+                    let fd = (u.value(x + h) - u.value(x - h)) / (2.0 * h);
+                    assert!((fd - u.derivative(x)).abs() < 1e-5 * fd.abs().max(1.0));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_family_none() {
+        assert!(family("cosine", 3, 60.0).is_none());
+    }
+}

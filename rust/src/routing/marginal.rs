@@ -1,0 +1,160 @@
+//! Marginal-cost computation (paper eqs. 18–21, Gallager's recursion).
+//!
+//! `δφ_ij(w) = D'_ij + ∂D/∂r_j(w)` where the downstream marginal
+//! `∂D/∂r_j(w)` is computed by the **broadcast protocol**: destinations
+//! announce 0, every node combines its out-edges' marginals weighted by its
+//! own routing fractions and forwards the result upstream. Here the
+//! recursion runs in reverse session-DAG topological order (the distributed
+//! message-passing twin lives in [`crate::coordinator`] and must agree with
+//! this module exactly — a cross-checked invariant in the integration
+//! tests).
+
+use crate::graph::augmented::AugmentedNet;
+use crate::model::cost::CostKind;
+use crate::model::flow::Phi;
+
+/// Marginal costs at a given operating point (Λ, φ).
+#[derive(Clone, Debug)]
+pub struct Marginals {
+    /// `dprime[e]` — link marginal `∂D_ij/∂F_ij`.
+    pub dprime: Vec<f64>,
+    /// `r[w][i]` — node marginal `∂D/∂r_i(w)` (eq. 20–21).
+    pub r: Vec<Vec<f64>>,
+}
+
+impl Marginals {
+    /// Routing-variable marginal `δφ_ij(w)` for edge `e` (eq. 19).
+    #[inline]
+    pub fn delta(&self, net: &AugmentedNet, w: usize, e: usize) -> f64 {
+        self.dprime[e] + self.r[w][net.graph.edge(e).dst]
+    }
+
+    /// Full gradient `∂D/∂φ_ij(w) = t_i(w) · δφ_ij(w)` (eq. 18).
+    #[inline]
+    pub fn grad(&self, net: &AugmentedNet, w: usize, e: usize, t_i: f64) -> f64 {
+        t_i * self.delta(net, w, e)
+    }
+}
+
+/// Compute all marginals by one reverse sweep per session.
+pub fn compute(
+    net: &AugmentedNet,
+    cost: CostKind,
+    phi: &Phi,
+    flows: &[f64],
+) -> Marginals {
+    let ne = net.graph.n_edges();
+    let mut dprime = vec![0.0; ne];
+    for &e in &net.union_edges {
+        dprime[e] = cost.derivative(flows[e], net.graph.edge(e).capacity);
+    }
+
+    let mut r = vec![vec![0.0; net.n_nodes()]; net.n_versions()];
+    for w in 0..net.n_versions() {
+        // reverse topological order: D_w first (r = 0 there by eq. 20)
+        for &i in net.session_topo[w].iter().rev() {
+            if i == net.dnode(w) {
+                continue;
+            }
+            let mut acc = 0.0;
+            for (e, f) in phi.row(net, w, i) {
+                if f > 0.0 {
+                    acc += f * (dprime[e] + r[w][net.graph.edge(e).dst]);
+                }
+            }
+            r[w][i] = acc;
+        }
+    }
+    Marginals { dprime, r }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::topologies;
+    use crate::model::flow::{self, Phi};
+    use crate::model::Problem;
+    use crate::util::rng::Rng;
+
+    fn setup(seed: u64) -> (Problem, Phi, Vec<f64>, flow::FlowEval) {
+        let mut rng = Rng::seed_from(seed);
+        let net = topologies::connected_er(10, 0.35, 3, &mut rng);
+        let p = Problem::new(net, 30.0, CostKind::Exp);
+        let phi = Phi::uniform(&p.net);
+        let lam = p.uniform_allocation();
+        let ev = flow::evaluate(&p, &phi, &lam);
+        (p, phi, lam, ev)
+    }
+
+    #[test]
+    fn destination_marginal_is_zero() {
+        let (p, phi, _lam, ev) = setup(1);
+        let m = compute(&p.net, p.cost, &phi, &ev.flows);
+        for w in 0..p.n_versions() {
+            assert_eq!(m.r[w][p.net.dnode(w)], 0.0);
+        }
+    }
+
+    #[test]
+    fn recursion_consistency() {
+        // r_i(w) must equal Σ_j φ_ij (D'_ij + r_j(w)) at every node (eq. 21)
+        let (p, phi, _lam, ev) = setup(2);
+        let m = compute(&p.net, p.cost, &phi, &ev.flows);
+        for w in 0..p.n_versions() {
+            for i in 0..p.net.n_nodes() {
+                if i == p.net.dnode(w) {
+                    continue;
+                }
+                let expect: f64 = phi
+                    .row(&p.net, w, i)
+                    .map(|(e, f)| f * (m.dprime[e] + m.r[w][p.net.graph.edge(e).dst]))
+                    .sum();
+                assert!((m.r[w][i] - expect).abs() < 1e-12, "w={w} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        // ∂D/∂φ_ij(w) ≈ (D(φ+h·e_ij·renorm) − D(φ)) / h on an *unnormalized*
+        // perturbation: perturb φ_ij by +h and φ_ik (another lane) by −h;
+        // directional derivative should equal t_i(δ_ij − δ_ik).
+        let (p, phi, lam, ev) = setup(3);
+        let m = compute(&p.net, p.cost, &phi, &ev.flows);
+        let t = flow::node_rates(&p.net, &phi, &lam);
+        for w in 0..p.n_versions() {
+            for &i in p.net.session_routers(w) {
+                let lanes: Vec<usize> = p.net.session_out(w, i).collect();
+                if lanes.len() < 2 || t[w][i] < 1e-9 {
+                    continue;
+                }
+                let (e1, e2) = (lanes[0], lanes[1]);
+                let h = 1e-7;
+                let mut phi2 = phi.clone();
+                phi2.frac[w][e1] += h;
+                phi2.frac[w][e2] -= h;
+                let ev2 = flow::evaluate(&p, &phi2, &lam);
+                let fd = (ev2.cost - ev.cost) / h;
+                let analytic = t[w][i] * (m.delta(&p.net, w, e1) - m.delta(&p.net, w, e2));
+                assert!(
+                    (fd - analytic).abs() < 1e-3 * analytic.abs().max(1.0),
+                    "w={w} i={i}: fd={fd} analytic={analytic}"
+                );
+                return; // one verified row per run is enough here
+            }
+        }
+    }
+
+    #[test]
+    fn marginals_positive_on_live_edges() {
+        let (p, phi, _lam, ev) = setup(4);
+        let m = compute(&p.net, p.cost, &phi, &ev.flows);
+        for w in 0..p.n_versions() {
+            for (e, used) in p.net.session_edges[w].iter().enumerate() {
+                if *used {
+                    assert!(m.delta(&p.net, w, e) > 0.0);
+                }
+            }
+        }
+    }
+}

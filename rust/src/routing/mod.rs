@@ -1,0 +1,156 @@
+//! Routing algorithms for the optimal-routing problem `P2` (paper §III-B).
+//!
+//! * [`omd::OmdRouter`] — **OMD-RT** (Algorithm 2), the paper's contribution.
+//! * [`sgp::SgpRouter`] — scaled gradient projection baseline ([13], Xi&Yeh).
+//! * [`gp::GpRouter`] — vanilla Gallager gradient projection (ablation).
+//! * [`opt::OptRouter`] — centralized path-flow solve (the "OPT" line).
+
+pub mod gp;
+pub mod marginal;
+pub mod omd;
+pub mod opt;
+pub mod sgp;
+
+use crate::model::flow::{self, Phi};
+use crate::model::Problem;
+
+/// Result of a routing run.
+#[derive(Clone, Debug)]
+pub struct RoutingState {
+    pub phi: Phi,
+    /// Final total network cost `D(Λ, φ)`.
+    pub cost: f64,
+    /// Cost *before* each iteration's update (the Fig. 7 trajectory;
+    /// `trajectory[0]` is the initial cost, last entry equals `cost`).
+    pub trajectory: Vec<f64>,
+    /// Iterations actually performed (may stop early on convergence).
+    pub iterations: usize,
+    /// Wall-clock seconds spent inside the solver.
+    pub elapsed_s: f64,
+}
+
+/// A distributed routing algorithm: iterates routing variables φ toward the
+/// minimizer of the total network cost for a fixed allocation Λ.
+pub trait Router {
+    fn name(&self) -> &'static str;
+
+    /// Perform **one** routing iteration in place, returning the total cost
+    /// evaluated *before* the update (matching the paper's per-iteration
+    /// convergence plots).
+    fn step(&mut self, problem: &Problem, lam: &[f64], phi: &mut Phi) -> f64;
+
+    /// Iterate up to `max_iters`, stopping early when φ stops changing
+    /// (`Line 6` of Algorithm 2: `φ^{k+1} == φ^k`).
+    fn solve(&mut self, problem: &Problem, lam: &[f64], max_iters: usize) -> RoutingState {
+        let mut phi = Phi::uniform(&problem.net);
+        self.solve_from(problem, lam, &mut phi, max_iters)
+    }
+
+    /// Like [`Router::solve`] but warm-started from (and updating) `phi`.
+    fn solve_from(
+        &mut self,
+        problem: &Problem,
+        lam: &[f64],
+        phi: &mut Phi,
+        max_iters: usize,
+    ) -> RoutingState {
+        let t0 = std::time::Instant::now();
+        let mut trajectory = Vec::with_capacity(max_iters + 1);
+        let mut iterations = 0;
+        for _ in 0..max_iters {
+            let prev = phi.clone();
+            let cost_before = self.step(problem, lam, phi);
+            trajectory.push(cost_before);
+            iterations += 1;
+            if phi_close(&prev, phi, CONVERGENCE_TOL) {
+                break;
+            }
+        }
+        let final_cost = flow::evaluate(problem, phi, lam).cost;
+        trajectory.push(final_cost);
+        RoutingState {
+            phi: phi.clone(),
+            cost: final_cost,
+            trajectory,
+            iterations,
+            elapsed_s: t0.elapsed().as_secs_f64(),
+        }
+    }
+}
+
+/// Stopping tolerance on `‖φ^{k+1} − φ^k‖_∞` (the paper's exact-equality
+/// stop, relaxed to floating point).
+pub const CONVERGENCE_TOL: f64 = 1e-10;
+
+/// Max-norm closeness of two routing configurations.
+pub fn phi_close(a: &Phi, b: &Phi, tol: f64) -> bool {
+    a.frac
+        .iter()
+        .zip(&b.frac)
+        .all(|(ra, rb)| ra.iter().zip(rb).all(|(x, y)| (x - y).abs() <= tol))
+}
+
+/// Euclidean projection onto the probability simplex `{x ≥ 0, Σx = 1}`
+/// (Held–Wolfe–Crowder; O(d log d)). Shared by the GP and SGP baselines.
+pub fn project_simplex(y: &[f64]) -> Vec<f64> {
+    let d = y.len();
+    assert!(d > 0);
+    let mut u: Vec<f64> = y.to_vec();
+    u.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let mut css = 0.0;
+    let mut rho = 0;
+    let mut theta = 0.0;
+    for (i, &ui) in u.iter().enumerate() {
+        css += ui;
+        let th = (css - 1.0) / (i + 1) as f64;
+        if ui - th > 0.0 {
+            rho = i + 1;
+            theta = th;
+        }
+    }
+    debug_assert!(rho > 0);
+    y.iter().map(|&x| (x - theta).max(0.0)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simplex_projection_identity_on_feasible() {
+        let x = vec![0.2, 0.3, 0.5];
+        let p = project_simplex(&x);
+        for (a, b) in x.iter().zip(&p) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn simplex_projection_feasible_output() {
+        let cases = [vec![5.0, -3.0, 0.1], vec![0.0, 0.0], vec![-1.0, -2.0, -3.0, 10.0]];
+        for y in cases {
+            let p = project_simplex(&y);
+            assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9, "{p:?}");
+            assert!(p.iter().all(|&v| v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn simplex_projection_is_nearest_point() {
+        // brute-force check on a 2-simplex grid
+        let y = vec![0.9, 0.4, -0.2];
+        let p = project_simplex(&y);
+        let dist =
+            |x: &[f64]| x.iter().zip(&y).map(|(a, b)| (a - b) * (a - b)).sum::<f64>();
+        let dp = dist(&p);
+        let mut best = f64::INFINITY;
+        let g = 60;
+        for i in 0..=g {
+            for j in 0..=(g - i) {
+                let x = [i as f64 / g as f64, j as f64 / g as f64, (g - i - j) as f64 / g as f64];
+                best = best.min(dist(&x));
+            }
+        }
+        assert!(dp <= best + 1e-3, "projection {dp} vs grid best {best}");
+    }
+}

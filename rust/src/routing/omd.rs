@@ -1,0 +1,289 @@
+//! **OMD-RT** — the paper's optimal distributed routing algorithm
+//! (Algorithm 2): online mirror descent with the exponentiated-gradient
+//! update (eq. 22) on each node's out-neighbour simplex.
+//!
+//! Per iteration, per (session, node) row:
+//!
+//! ```text
+//! φ_ij ← φ_ij · exp(−η · δφ_ij) / Σ_j φ_ij · exp(−η · δφ_ij)
+//! ```
+//!
+//! The update is a softmax — no projection, no QP — which is the source of
+//! the paper's ~3-orders-of-magnitude per-iteration runtime advantage over
+//! SGP (Fig. 9). The same update can be executed on the XLA hot path via
+//! the AOT-compiled L1 Pallas kernel (see [`crate::runtime::mirror`]); this
+//! module is the native implementation and the numerical ground truth.
+
+use super::{marginal, Router};
+use crate::model::flow::{self, Phi};
+use crate::model::Problem;
+
+/// Numerical-stability shift: exponents are shifted by the row max before
+/// exponentiation (mirrors the L1 kernel's `_MASK_PENALTY` scheme).
+const EXP_SHIFT_MIN_SUM: f64 = 1e-300;
+
+/// Per-row trust region: the exponent *span* of one update is capped at
+/// this value, bounding the multiplicative change of any lane to `e^±SPAN`
+/// per iteration. Without it, the exp cost family's enormous early
+/// marginals (`exp(F/C)/C` can exceed e³⁰ on a congested virtual link)
+/// drive lanes to exactly 0 in one step — and multiplicative updates can
+/// never resurrect a zero lane, freezing OMD at a non-optimal point. This
+/// is the practical instantiation of the paper's `η_k ≤ c/L_D` condition
+/// (the local gradient scale *is* the Lipschitz constant): the step
+/// direction is preserved, only its magnitude is clamped. The L1 Pallas
+/// kernel applies the identical rule (see `mirror_step.py`).
+pub const MAX_EXP_SPAN: f64 = 40.0;
+
+/// Interior floor: after each update every live lane keeps at least this
+/// fraction of the row's mass. Mirror descent's convergence theory assumes
+/// iterates stay in the simplex *interior* (the Bregman divergence to the
+/// optimum must stay finite); numerically, a lane that underflows to ~0 can
+/// take arbitrarily many iterations to revive, and the `φ^{k+1} == φ^k`
+/// stop then fires at a non-optimal fixed point. A 1e-12 floor is far below
+/// any cost-relevant flow yet keeps every lane one good gradient away from
+/// revival. Identical constant in the L1 kernel.
+pub const PHI_FLOOR: f64 = 1e-12;
+
+#[derive(Clone, Debug)]
+pub struct OmdRouter {
+    /// Base mirror-descent step size η (paper: constant `η_k ≤ c/L_D`).
+    pub eta: f64,
+    /// Backtracking adaptation (default on): `L_D` is unknown in practice,
+    /// so the `η_k ≤ c/L_D` condition is enforced by feedback — halve η
+    /// whenever the observed total cost *increased* since the previous
+    /// iteration, creep back up (×1.05, capped at the base η) while it
+    /// decreases. The cost signal is already available at every node scale
+    /// (the leader aggregates it alongside the marginal broadcast).
+    pub adaptive: bool,
+    eta_cur: f64,
+    last_cost: Option<f64>,
+    k: usize,
+    scratch_row: Vec<f64>,
+    scratch_delta: Vec<f64>,
+}
+
+impl OmdRouter {
+    pub fn new(eta: f64) -> Self {
+        OmdRouter {
+            eta,
+            adaptive: true,
+            eta_cur: eta,
+            last_cost: None,
+            k: 0,
+            scratch_row: Vec::new(),
+            scratch_delta: Vec::new(),
+        }
+    }
+
+    /// Fixed-step variant (theory experiments; requires η ≤ c/L_D).
+    pub fn fixed(eta: f64) -> Self {
+        OmdRouter { adaptive: false, ..Self::new(eta) }
+    }
+
+    /// The η the *next* update will use.
+    pub fn current_eta(&self) -> f64 {
+        self.eta_cur
+    }
+
+    /// Shared backtracking rule (also used verbatim by the distributed
+    /// leader so both implementations stay in lockstep).
+    pub fn adapt_eta(eta_cur: f64, eta_base: f64, last_cost: Option<f64>, cost: f64) -> f64 {
+        match last_cost {
+            Some(lc) if cost > lc * (1.0 + 1e-12) => (eta_cur * 0.5).max(1e-9),
+            Some(_) => (eta_cur * 1.05).min(eta_base),
+            None => eta_cur,
+        }
+    }
+
+    /// The eq. (22) update for one row, in place. Exposed for reuse by the
+    /// coordinator actors (each node runs exactly this on its own state).
+    pub fn update_row(phi_row: &mut [f64], delta: &[f64], eta: f64) {
+        debug_assert_eq!(phi_row.len(), delta.len());
+        let (mut zmax, mut zmin) = (f64::NEG_INFINITY, f64::INFINITY);
+        for (&d, &p) in delta.iter().zip(phi_row.iter()) {
+            if p > 0.0 {
+                let z = -eta * d;
+                zmax = zmax.max(z);
+                zmin = zmin.min(z);
+            }
+        }
+        if !zmax.is_finite() {
+            return; // empty row
+        }
+        let span = zmax - zmin;
+        let scale = if span > MAX_EXP_SPAN { MAX_EXP_SPAN / span } else { 1.0 };
+        let mut sum = 0.0;
+        for (p, &d) in phi_row.iter_mut().zip(delta) {
+            *p *= ((-eta * d - zmax) * scale).exp();
+            sum += *p;
+        }
+        if sum > EXP_SHIFT_MIN_SUM {
+            for p in phi_row.iter_mut() {
+                *p /= sum;
+            }
+            // interior floor + renormalize (see PHI_FLOOR)
+            let mut sum2 = 0.0;
+            for p in phi_row.iter_mut() {
+                if *p > 0.0 && *p < PHI_FLOOR {
+                    *p = PHI_FLOOR;
+                }
+                sum2 += *p;
+            }
+            for p in phi_row.iter_mut() {
+                *p /= sum2;
+            }
+        }
+    }
+}
+
+impl Router for OmdRouter {
+    fn name(&self) -> &'static str {
+        "OMD-RT"
+    }
+
+    fn step(&mut self, problem: &Problem, lam: &[f64], phi: &mut Phi) -> f64 {
+        let net = &problem.net;
+        let t = flow::node_rates(net, phi, lam);
+        let flows = flow::edge_flows(net, phi, &t);
+        let cost_before = flow::total_cost(net, problem.cost, &flows);
+        let m = marginal::compute(net, problem.cost, phi, &flows);
+
+        if self.adaptive {
+            self.eta_cur = Self::adapt_eta(self.eta_cur, self.eta, self.last_cost, cost_before);
+        }
+        self.last_cost = Some(cost_before);
+        let eta = self.eta_cur;
+        self.k += 1;
+        // scratch buffers live on self: zero allocations in the hot loop
+        let mut row = std::mem::take(&mut self.scratch_row);
+        let mut delta = std::mem::take(&mut self.scratch_delta);
+        for w in 0..net.n_versions() {
+            for &i in net.session_routers(w) {
+                // Algorithm 2 line 5: only nodes with t_i(w) > 0 update.
+                if t[w][i] <= 0.0 {
+                    continue;
+                }
+                let lanes = net.lanes(w, i);
+                if lanes.len() < 2 {
+                    continue; // single lane is pinned at 1
+                }
+                row.clear();
+                delta.clear();
+                for &e in lanes {
+                    row.push(phi.frac[w][e]);
+                    delta.push(m.delta(net, w, e));
+                }
+                Self::update_row(&mut row, &delta, eta);
+                for (&e, &v) in lanes.iter().zip(&row) {
+                    phi.frac[w][e] = v;
+                }
+            }
+        }
+        self.scratch_row = row;
+        self.scratch_delta = delta;
+        cost_before
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::topologies;
+    use crate::model::cost::CostKind;
+    use crate::util::rng::Rng;
+
+    fn problem(seed: u64, n: usize) -> Problem {
+        let mut rng = Rng::seed_from(seed);
+        let net = topologies::connected_er(n, 0.3, 3, &mut rng);
+        Problem::new(net, 60.0, CostKind::Exp)
+    }
+
+    #[test]
+    fn update_row_moves_to_cheap_lane() {
+        let mut row = vec![0.5, 0.5];
+        OmdRouter::update_row(&mut row, &[0.0, 10.0], 1.0);
+        assert!(row[0] > 0.99);
+        assert!((row.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn update_row_zero_eta_identity() {
+        let mut row = vec![0.3, 0.7];
+        OmdRouter::update_row(&mut row, &[5.0, 1.0], 0.0);
+        assert!((row[0] - 0.3).abs() < 1e-12 && (row[1] - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn monotone_descent() {
+        // Theorem 4's eq. (67): cost never increases for small enough η.
+        let p = problem(1, 12);
+        let lam = p.uniform_allocation();
+        let mut router = OmdRouter::new(0.05);
+        let sol = router.solve(&p, &lam, 60);
+        for w in sol.trajectory.windows(2) {
+            assert!(w[1] <= w[0] + 1e-9, "cost increased: {} -> {}", w[0], w[1]);
+        }
+        assert!(sol.cost < sol.trajectory[0]);
+    }
+
+    #[test]
+    fn feasibility_preserved() {
+        let p = problem(2, 10);
+        let lam = p.uniform_allocation();
+        let mut router = OmdRouter::new(0.3);
+        let sol = router.solve(&p, &lam, 100);
+        sol.phi.is_feasible(&p.net, 1e-9).unwrap();
+    }
+
+    #[test]
+    fn stationarity_at_convergence() {
+        // Theorem 3 / eq. (17): on the support, marginals equalize.
+        let p = problem(3, 8);
+        let lam = p.uniform_allocation();
+        let mut router = OmdRouter::new(0.5);
+        let sol = router.solve(&p, &lam, 3000);
+        let t = flow::node_rates(&p.net, &sol.phi, &lam);
+        let flows = flow::edge_flows(&p.net, &sol.phi, &t);
+        let m = marginal::compute(&p.net, p.cost, &sol.phi, &flows);
+        for w in 0..p.n_versions() {
+            for &i in p.net.session_routers(w) {
+                if t[w][i] < 1e-6 {
+                    continue;
+                }
+                let vals: Vec<f64> = p
+                    .net
+                    .session_out(w, i)
+                    .filter(|&e| sol.phi.frac[w][e] > 1e-4)
+                    .map(|e| m.delta(&p.net, w, e))
+                    .collect();
+                if vals.len() < 2 {
+                    continue;
+                }
+                let spread = vals.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+                    - vals.iter().cloned().fold(f64::INFINITY, f64::min);
+                let scale = vals.iter().cloned().fold(f64::NEG_INFINITY, f64::max).max(1.0);
+                assert!(spread < 0.02 * scale, "w={w} i={i} spread={spread} vals={vals:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn solve_converges_and_stops_early() {
+        let p = problem(4, 10);
+        let lam = p.uniform_allocation();
+        let mut router = OmdRouter::new(0.5);
+        let sol = router.solve(&p, &lam, 100_000);
+        assert!(sol.iterations < 100_000, "did not converge early");
+    }
+
+    #[test]
+    fn warm_start_resumes() {
+        let p = problem(5, 10);
+        let lam = p.uniform_allocation();
+        let mut r1 = OmdRouter::new(0.3);
+        let mut phi = Phi::uniform(&p.net);
+        let a = r1.solve_from(&p, &lam, &mut phi, 10);
+        let b = r1.solve_from(&p, &lam, &mut phi, 10);
+        assert!(b.cost <= a.cost + 1e-9);
+    }
+}

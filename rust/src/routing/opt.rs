@@ -1,0 +1,275 @@
+//! **OPT** — centralized optimal routing (the Fig. 7 reference line).
+//!
+//! The operator is assumed to know the whole topology: it enumerates every
+//! `S → D_w` path (finite on the session DAGs), then solves the convex
+//! path-flow program
+//!
+//! ```text
+//! min_{x ≥ 0}  Σ_e D_e(F_e(x), C_e)    s.t.  Σ_{p ∈ w} x_p = λ_w  ∀w
+//! ```
+//!
+//! with high-precision entropic mirror descent over each session's path
+//! simplex (run to stationarity; tolerances far below anything the
+//! distributed algorithms reach). The result serves as ground truth for
+//! Theorems 3/4 convergence checks and the "OPT" line in Figs. 7–8.
+
+use crate::graph::paths::{enumerate_paths, Path};
+use crate::model::flow::Phi;
+use crate::model::Problem;
+
+/// Centralized solution.
+#[derive(Clone, Debug)]
+pub struct OptSolution {
+    pub cost: f64,
+    /// Per-session per-path flows.
+    pub path_flows: Vec<Vec<f64>>,
+    pub paths: Vec<Vec<Path>>,
+    pub iterations: usize,
+    pub elapsed_s: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct OptRouter {
+    /// Path enumeration cap per session (guards pathological instances).
+    pub max_paths: usize,
+    /// Mirror-descent iterations.
+    pub max_iters: usize,
+    /// Stationarity tolerance on the max marginal spread.
+    pub tol: f64,
+}
+
+impl Default for OptRouter {
+    fn default() -> Self {
+        OptRouter { max_paths: 500_000, max_iters: 20_000, tol: 1e-9 }
+    }
+}
+
+impl OptRouter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Solve the path-flow program for allocation `lam`.
+    pub fn solve(&self, problem: &Problem, lam: &[f64]) -> OptSolution {
+        let t0 = std::time::Instant::now();
+        let net = &problem.net;
+        let w_cnt = net.n_versions();
+        assert_eq!(lam.len(), w_cnt);
+
+        let paths: Vec<Vec<Path>> = (0..w_cnt)
+            .map(|w| {
+                let p = enumerate_paths(net, w, self.max_paths);
+                assert!(
+                    p.len() < self.max_paths,
+                    "path enumeration cap hit for session {w}"
+                );
+                p
+            })
+            .collect();
+
+        // x[w][p]: start uniform on each session's path simplex
+        let mut x: Vec<Vec<f64>> = paths
+            .iter()
+            .zip(lam)
+            .map(|(ps, &l)| vec![l / ps.len() as f64; ps.len()])
+            .collect();
+
+        let ne = net.graph.n_edges();
+        let mut flows = vec![0.0; ne];
+        let mut iterations = 0;
+        let mut eta = 0.2;
+        let mut last_cost = f64::INFINITY;
+        for it in 0..self.max_iters {
+            iterations = it + 1;
+            // edge flows from path flows
+            flows.iter_mut().for_each(|f| *f = 0.0);
+            for (ps, xs) in paths.iter().zip(&x) {
+                for (p, &xp) in ps.iter().zip(xs) {
+                    if xp > 0.0 {
+                        for &e in &p.edges {
+                            flows[e] += xp;
+                        }
+                    }
+                }
+            }
+            let cost = crate::model::flow::total_cost(net, problem.cost, &flows);
+            // per-edge marginals -> per-path marginals
+            let dprime: Vec<f64> = net
+                .graph
+                .edges()
+                .iter()
+                .enumerate()
+                .map(|(e, edge)| {
+                    if (0..w_cnt).any(|w| net.session_edges[w][e]) {
+                        problem.cost.derivative(flows[e], edge.capacity)
+                    } else {
+                        0.0
+                    }
+                })
+                .collect();
+
+            let mut spread_max = 0.0f64;
+            for (w, (ps, xs)) in paths.iter().zip(&mut x).enumerate() {
+                if lam[w] <= 0.0 {
+                    continue;
+                }
+                let marg: Vec<f64> = ps
+                    .iter()
+                    .map(|p| p.edges.iter().map(|&e| dprime[e]).sum::<f64>())
+                    .collect();
+                // stationarity: marginal spread over the support
+                let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+                for (m, &xp) in marg.iter().zip(xs.iter()) {
+                    if xp > 1e-9 * lam[w] {
+                        lo = lo.min(*m);
+                        hi = hi.max(*m);
+                    }
+                }
+                spread_max = spread_max.max((hi - lo) / hi.abs().max(1.0));
+                // entropic mirror step on the scaled simplex, with the same
+                // exponent-span trust region + interior floor as OMD-RT
+                // (multiplicative updates must never zero a path for good)
+                let mmin = marg.iter().cloned().fold(f64::INFINITY, f64::min);
+                let mmax = marg.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let span = eta * (mmax - mmin);
+                let escale = if span > crate::routing::omd::MAX_EXP_SPAN {
+                    crate::routing::omd::MAX_EXP_SPAN / span
+                } else {
+                    1.0
+                };
+                let mut sum = 0.0;
+                for (xp, m) in xs.iter_mut().zip(&marg) {
+                    *xp *= (-eta * (m - mmin) * escale).exp();
+                    sum += *xp;
+                }
+                if sum > 0.0 {
+                    let scale = lam[w] / sum;
+                    let floor = crate::routing::omd::PHI_FLOOR * lam[w];
+                    let mut sum2 = 0.0;
+                    for xp in xs.iter_mut() {
+                        *xp = (*xp * scale).max(floor);
+                        sum2 += *xp;
+                    }
+                    let rescale = lam[w] / sum2;
+                    xs.iter_mut().for_each(|xp| *xp *= rescale);
+                }
+            }
+            if spread_max < self.tol {
+                break;
+            }
+            // simple adaptive step: back off if cost went up
+            if cost > last_cost + 1e-12 {
+                eta *= 0.7;
+            }
+            last_cost = cost;
+        }
+
+        // final evaluation
+        flows.iter_mut().for_each(|f| *f = 0.0);
+        for (ps, xs) in paths.iter().zip(&x) {
+            for (p, &xp) in ps.iter().zip(xs) {
+                for &e in &p.edges {
+                    flows[e] += xp;
+                }
+            }
+        }
+        let cost = crate::model::flow::total_cost(net, problem.cost, &flows);
+        OptSolution {
+            cost,
+            path_flows: x,
+            paths,
+            iterations,
+            elapsed_s: t0.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// Convert the path-flow solution back to node-based routing variables φ
+    /// (for cross-validation with the distributed algorithms).
+    pub fn to_phi(&self, problem: &Problem, sol: &OptSolution) -> Phi {
+        let net = &problem.net;
+        let ne = net.graph.n_edges();
+        let w_cnt = net.n_versions();
+        let mut per_edge = vec![vec![0.0; ne]; w_cnt];
+        for (w, (ps, xs)) in sol.paths.iter().zip(&sol.path_flows).enumerate() {
+            for (p, &xp) in ps.iter().zip(xs) {
+                for &e in &p.edges {
+                    per_edge[w][e] += xp;
+                }
+            }
+        }
+        let mut phi = Phi::uniform(net);
+        for w in 0..w_cnt {
+            for i in 0..net.n_nodes() {
+                let lanes: Vec<usize> = net.session_out(w, i).collect();
+                if lanes.is_empty() {
+                    continue;
+                }
+                let out: f64 = lanes.iter().map(|&e| per_edge[w][e]).sum();
+                if out > 1e-12 {
+                    for &e in &lanes {
+                        phi.frac[w][e] = per_edge[w][e] / out;
+                    }
+                }
+            }
+        }
+        phi
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::topologies;
+    use crate::model::cost::CostKind;
+    use crate::model::flow;
+    use crate::routing::omd::OmdRouter;
+    use crate::routing::Router;
+    use crate::util::rng::Rng;
+
+    fn problem(seed: u64, n: usize) -> Problem {
+        let mut rng = Rng::seed_from(seed);
+        let net = topologies::connected_er(n, 0.3, 3, &mut rng);
+        Problem::new(net, 60.0, CostKind::Exp)
+    }
+
+    #[test]
+    fn opt_is_a_lower_bound_and_omd_reaches_it() {
+        let p = problem(1, 10);
+        let lam = p.uniform_allocation();
+        let opt = OptRouter::new().solve(&p, &lam);
+        let omd = OmdRouter::new(0.5).solve(&p, &lam, 5000);
+        assert!(
+            opt.cost <= omd.cost + 1e-6,
+            "OPT {} must lower-bound OMD {}",
+            opt.cost,
+            omd.cost
+        );
+        let rel = (omd.cost - opt.cost) / opt.cost;
+        assert!(rel < 5e-3, "OMD {} should match OPT {} (rel {rel})", omd.cost, opt.cost);
+    }
+
+    #[test]
+    fn path_flows_conserve_allocation() {
+        let p = problem(2, 8);
+        let lam = p.uniform_allocation();
+        let sol = OptRouter::new().solve(&p, &lam);
+        for (w, xs) in sol.path_flows.iter().enumerate() {
+            let s: f64 = xs.iter().sum();
+            assert!((s - lam[w]).abs() < 1e-6, "session {w}: {s} vs {}", lam[w]);
+            assert!(xs.iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn to_phi_reproduces_cost() {
+        let p = problem(3, 8);
+        let lam = p.uniform_allocation();
+        let router = OptRouter::new();
+        let sol = router.solve(&p, &lam);
+        let phi = router.to_phi(&p, &sol);
+        phi.is_feasible(&p.net, 1e-6).unwrap();
+        let ev = flow::evaluate(&p, &phi, &lam);
+        let rel = (ev.cost - sol.cost).abs() / sol.cost;
+        assert!(rel < 1e-6, "phi cost {} vs path cost {}", ev.cost, sol.cost);
+    }
+}

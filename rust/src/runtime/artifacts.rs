@@ -1,0 +1,168 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime (names, kinds, shapes, sidecar files).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+/// One artifact entry from `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Entry {
+    pub file: String,
+    pub kind: String,
+    pub outputs: usize,
+    /// Input shapes in argument order.
+    pub inputs: Vec<Vec<usize>>,
+    /// Kind-specific integers (n, w, rows, k, batch, ...).
+    pub dims: BTreeMap<String, usize>,
+    /// DNN only: weights sidecar + per-tensor shapes.
+    pub weights_file: Option<String>,
+    pub weight_shapes: Vec<Vec<usize>>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub entries: BTreeMap<String, Entry>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest json: {e}"))?;
+        let entries_obj = j
+            .get("entries")
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest missing 'entries'"))?;
+        let mut entries = BTreeMap::new();
+        for (name, e) in entries_obj {
+            let shapes = |key: &str| -> Vec<Vec<usize>> {
+                e.get(key)
+                    .as_arr()
+                    .map(|a| {
+                        a.iter()
+                            .map(|s| {
+                                s.as_arr()
+                                    .map(|d| d.iter().filter_map(Json::as_usize).collect())
+                                    .unwrap_or_default()
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default()
+            };
+            let mut dims = BTreeMap::new();
+            for key in ["n", "w", "rows", "k", "batch", "frame_dim", "flops_per_frame"] {
+                if let Some(v) = e.get(key).as_usize() {
+                    dims.insert(key.to_string(), v);
+                }
+            }
+            entries.insert(
+                name.clone(),
+                Entry {
+                    file: e
+                        .get("file")
+                        .as_str()
+                        .ok_or_else(|| anyhow!("entry '{name}' missing file"))?
+                        .to_string(),
+                    kind: e.get("kind").as_str().unwrap_or("unknown").to_string(),
+                    outputs: e.get("outputs").as_usize().unwrap_or(1),
+                    inputs: shapes("inputs"),
+                    dims,
+                    weights_file: e.get("weights_file").as_str().map(str::to_string),
+                    weight_shapes: shapes("weight_shapes"),
+                },
+            );
+        }
+        Ok(Manifest { entries })
+    }
+
+    /// Entries of a given kind, sorted by name.
+    pub fn by_kind<'a>(&'a self, kind: &'a str) -> impl Iterator<Item = (&'a String, &'a Entry)> {
+        self.entries.iter().filter(move |(_, e)| e.kind == kind)
+    }
+
+    /// Smallest `routing_step` bucket with `n >= need_n` and `w == need_w`.
+    pub fn routing_bucket(&self, need_n: usize, need_w: usize) -> Option<(String, usize)> {
+        self.by_kind("routing_step")
+            .filter_map(|(name, e)| {
+                let n = *e.dims.get("n")?;
+                let w = *e.dims.get("w")?;
+                (w == need_w && n >= need_n).then(|| (name.clone(), n))
+            })
+            .min_by_key(|&(_, n)| n)
+    }
+
+    /// Smallest `mirror_step` bucket with `rows >= r` and `k >= k_need`.
+    pub fn mirror_bucket(&self, r: usize, k_need: usize) -> Option<(String, usize, usize)> {
+        self.by_kind("mirror_step")
+            .filter_map(|(name, e)| {
+                let rows = *e.dims.get("rows")?;
+                let k = *e.dims.get("k")?;
+                (rows >= r && k >= k_need).then(|| (name.clone(), rows, k))
+            })
+            .min_by_key(|&(_, rows, k)| rows * k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text",
+      "entries": {
+        "routing_step_n32_w3": {"file": "r32.hlo.txt", "kind": "routing_step",
+          "n": 32, "w": 3, "outputs": 4,
+          "inputs": [[3,32,32],[3],[32,32],[3,32,32],[]]},
+        "routing_step_n64_w3": {"file": "r64.hlo.txt", "kind": "routing_step",
+          "n": 64, "w": 3, "outputs": 4, "inputs": []},
+        "mirror_step_r64_k32": {"file": "m.hlo.txt", "kind": "mirror_step",
+          "rows": 64, "k": 32, "outputs": 1, "inputs": []},
+        "dnn_small_b1": {"file": "d.hlo.txt", "kind": "dnn", "batch": 1,
+          "frame_dim": 1024, "outputs": 1, "weights_file": "w.bin",
+          "weight_shapes": [[1024,128],[128]], "inputs": [[1,1024]]}
+      }
+    }"#;
+
+    #[test]
+    fn parse_entries() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 4);
+        let r = &m.entries["routing_step_n32_w3"];
+        assert_eq!(r.outputs, 4);
+        assert_eq!(r.dims["n"], 32);
+        assert_eq!(r.inputs[0], vec![3, 32, 32]);
+        let d = &m.entries["dnn_small_b1"];
+        assert_eq!(d.weights_file.as_deref(), Some("w.bin"));
+        assert_eq!(d.weight_shapes, vec![vec![1024, 128], vec![128]]);
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.routing_bucket(20, 3).unwrap().1, 32);
+        assert_eq!(m.routing_bucket(33, 3).unwrap().1, 64);
+        assert!(m.routing_bucket(100, 3).is_none());
+        assert!(m.routing_bucket(20, 5).is_none());
+        assert_eq!(m.mirror_bucket(10, 10).unwrap().1, 64);
+        assert!(m.mirror_bucket(300, 10).is_none());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        let p = std::path::Path::new("artifacts/manifest.json");
+        if p.exists() {
+            let m = Manifest::load(p).unwrap();
+            assert!(m.routing_bucket(30, 3).is_some());
+            assert!(m.mirror_bucket(64, 32).is_some());
+            assert!(m.by_kind("dnn").count() >= 6);
+        }
+    }
+}

@@ -1,0 +1,50 @@
+//! XLA-backed mirror step: the L1 Pallas kernel on the rust hot path.
+//!
+//! Pads a `[rows, k]` batch of simplex rows up to the smallest AOT bucket
+//! and executes `mirror_step_r{R}_k{K}.hlo.txt`. Padding rows/lanes carry
+//! `mask = 0`, which the kernel treats as dead lanes (output stays 0), so
+//! unpadding is a plain slice copy.
+
+use anyhow::{anyhow, Result};
+
+use super::{literal_f32, scalar_f32, XlaRuntime};
+
+/// One batched mirror update via the AOT kernel.
+pub fn mirror_step_xla(
+    rt: &mut XlaRuntime,
+    phi: &[f32],
+    delta: &[f32],
+    mask: &[f32],
+    eta: f32,
+    rows: usize,
+    k: usize,
+) -> Result<Vec<f32>> {
+    assert_eq!(phi.len(), rows * k);
+    assert_eq!(delta.len(), rows * k);
+    assert_eq!(mask.len(), rows * k);
+    let (name, br, bk) = rt
+        .manifest
+        .mirror_bucket(rows, k)
+        .ok_or_else(|| anyhow!("no mirror_step bucket for rows={rows} k={k}"))?;
+
+    let pad = |src: &[f32]| -> Vec<f32> {
+        let mut out = vec![0.0f32; br * bk];
+        for r in 0..rows {
+            out[r * bk..r * bk + k].copy_from_slice(&src[r * k..(r + 1) * k]);
+        }
+        out
+    };
+    let inputs = [
+        literal_f32(&pad(phi), &[br as i64, bk as i64])?,
+        literal_f32(&pad(delta), &[br as i64, bk as i64])?,
+        literal_f32(&pad(mask), &[br as i64, bk as i64])?,
+        scalar_f32(eta),
+    ];
+    let outs = rt.execute_f32(&name, &inputs)?;
+    let full = &outs[0];
+    let mut result = vec![0.0f32; rows * k];
+    for r in 0..rows {
+        result[r * k..(r + 1) * k].copy_from_slice(&full[r * bk..r * bk + k]);
+    }
+    Ok(result)
+}

@@ -1,0 +1,179 @@
+//! PJRT runtime: load the AOT-compiled HLO-text artifacts and execute them
+//! from the rust request path (python never runs here).
+//!
+//! Pattern (see `/opt/xla-example/load_hlo`): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`. The
+//! interchange format is HLO **text** because the crate's xla_extension
+//! 0.5.1 rejects jax≥0.5 serialized protos (64-bit instruction ids).
+//!
+//! Executables are compiled once per artifact and cached for the lifetime
+//! of the runtime (one compiled executable per model/shape variant).
+
+pub mod artifacts;
+pub mod dnn;
+pub mod mirror;
+pub mod routing_step;
+pub mod xla_router;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use artifacts::Manifest;
+
+/// A live PJRT CPU runtime bound to one artifacts directory.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl XlaRuntime {
+    /// Default artifacts directory (`$JOWR_ARTIFACTS` or `./artifacts`).
+    pub fn default_dir() -> PathBuf {
+        std::env::var("JOWR_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Load the manifest and initialize the PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(XlaRuntime { client, manifest, dir: dir.to_path_buf(), cache: HashMap::new() })
+    }
+
+    /// `Some(runtime)` if the default artifacts directory is present —
+    /// callers degrade to the native rust implementation otherwise.
+    pub fn try_default() -> Option<Self> {
+        let dir = Self::default_dir();
+        if dir.join("manifest.json").exists() {
+            match Self::load(&dir) {
+                Ok(rt) => Some(rt),
+                Err(e) => {
+                    crate::log_warn!("artifacts present but runtime failed to load: {e:#}");
+                    None
+                }
+            }
+        } else {
+            None
+        }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Compile (or fetch from cache) one artifact's executable.
+    pub fn prepare(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let entry = self
+            .manifest
+            .entries
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        let path = self.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact with the given inputs; returns the flattened
+    /// tuple outputs as host literals.
+    pub fn execute(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.prepare(name)?;
+        let exe = self.cache.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result of {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: always a tuple
+        lit.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))
+    }
+
+    /// Convenience: execute and read every output as `Vec<f32>`.
+    pub fn execute_f32(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<Vec<f32>>> {
+        self.execute(name, inputs)?
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("read output: {e:?}")))
+            .collect()
+    }
+
+    /// Upload a host f32 tensor to a device-resident buffer (done once for
+    /// static inputs like DNN weights — the request path then avoids all
+    /// host-side copies).
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload: {e:?}"))
+    }
+
+    /// Execute with device-resident buffers (hot path for repeated calls
+    /// with static weights).
+    pub fn execute_buffers(
+        &mut self,
+        name: &str,
+        inputs: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::Literal>> {
+        self.prepare(name)?;
+        let exe = self.cache.get(name).unwrap();
+        let result = exe
+            .execute_b::<&xla::PjRtBuffer>(inputs)
+            .map_err(|e| anyhow!("execute_b {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result of {name}: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))
+    }
+
+    pub fn is_cached(&self, name: &str) -> bool {
+        self.cache.contains_key(name)
+    }
+}
+
+/// Build an f32 literal of the given shape from a host slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let numel: i64 = dims.iter().product();
+    if numel as usize != data.len() {
+        return Err(anyhow!("shape {:?} wants {} elements, got {}", dims, numel, data.len()));
+    }
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// Scalar f32 literal.
+pub fn scalar_f32(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_shape_checked() {
+        assert!(literal_f32(&[1.0, 2.0], &[2, 2]).is_err());
+        assert!(literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).is_ok());
+    }
+
+    #[test]
+    fn default_dir_env_override() {
+        std::env::set_var("JOWR_ARTIFACTS", "/tmp/custom_artifacts");
+        assert_eq!(XlaRuntime::default_dir(), PathBuf::from("/tmp/custom_artifacts"));
+        std::env::remove_var("JOWR_ARTIFACTS");
+    }
+}

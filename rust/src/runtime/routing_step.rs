@@ -1,0 +1,144 @@
+//! XLA-backed full routing iteration: the L2 `routing_step` artifact (one
+//! complete OMD-RT iteration — flow propagation, cost, marginal sweep,
+//! mirror update — as a single compiled tensor program).
+//!
+//! The dense encoding matches `python/compile/model.py`: node ids are the
+//! augmented-graph ids (S = 0, devices 1..=n_real, D_w at the end), padded
+//! up to the artifact's bucket size N. Only the exponential cost family is
+//! compiled into the artifact (the paper's experimental choice).
+
+use anyhow::{anyhow, Result};
+
+use super::{literal_f32, scalar_f32, XlaRuntime};
+use crate::graph::augmented::AugmentedNet;
+use crate::model::cost::CostKind;
+use crate::model::flow::Phi;
+use crate::model::Problem;
+
+/// Dense encoding of one problem instance, reusable across iterations.
+pub struct DenseNet {
+    pub artifact: String,
+    /// Bucket size N.
+    pub n: usize,
+    pub w: usize,
+    /// Real node count of the augmented graph.
+    pub n_nodes: usize,
+    pub adj: Vec<f32>,
+    pub cap: Vec<f32>,
+    /// (w, i, j) -> edge id, for decoding φ back to edge space.
+    edge_of: Vec<Vec<Option<usize>>>,
+}
+
+impl DenseNet {
+    pub fn build(rt: &XlaRuntime, problem: &Problem) -> Result<DenseNet> {
+        if problem.cost != CostKind::Exp {
+            return Err(anyhow!("routing_step artifact is compiled for the exp cost family"));
+        }
+        let net = &problem.net;
+        let n_nodes = net.n_nodes();
+        let w_cnt = net.n_versions();
+        let (artifact, n) = rt
+            .manifest
+            .routing_bucket(n_nodes, w_cnt)
+            .ok_or_else(|| anyhow!("no routing_step bucket for n={n_nodes} w={w_cnt}"))?;
+
+        // The artifact's forward/reverse sweeps run MAX_SWEEP_DEPTH (=16)
+        // steps (see python/compile/model.py); exact iff every session DAG
+        // is at most that deep. Distances strictly decrease per hop, so the
+        // max hop distance to D_w bounds the depth.
+        const MAX_SWEEP_DEPTH: u32 = 16;
+        for w in 0..w_cnt {
+            let depth = net
+                .graph
+                .dist_to(net.dnode(w))
+                .into_iter()
+                .flatten()
+                .max()
+                .unwrap_or(0);
+            if depth > MAX_SWEEP_DEPTH {
+                return Err(anyhow!(
+                    "session {w} DAG depth {depth} exceeds the artifact sweep bound \
+                     {MAX_SWEEP_DEPTH}"
+                ));
+            }
+        }
+
+        let mut adj = vec![0.0f32; w_cnt * n * n];
+        let mut cap = vec![0.0f32; n * n];
+        let mut edge_of = vec![vec![None; n * n]; w_cnt];
+        for (e, edge) in net.graph.edges().iter().enumerate() {
+            cap[edge.src * n + edge.dst] = edge.capacity as f32;
+            for w in 0..w_cnt {
+                if net.session_edges[w][e] {
+                    adj[(w * n + edge.src) * n + edge.dst] = 1.0;
+                    edge_of[w][edge.src * n + edge.dst] = Some(e);
+                }
+            }
+        }
+        Ok(DenseNet { artifact, n, w: w_cnt, n_nodes, adj, cap, edge_of })
+    }
+
+    /// Encode φ (edge space) into the dense `[W, N, N]` layout.
+    pub fn encode_phi(&self, net: &AugmentedNet, phi: &Phi) -> Vec<f32> {
+        let n = self.n;
+        let mut out = vec![0.0f32; self.w * n * n];
+        for w in 0..self.w {
+            for (e, edge) in net.graph.edges().iter().enumerate() {
+                if net.session_edges[w][e] {
+                    out[(w * n + edge.src) * n + edge.dst] = phi.frac[w][e] as f32;
+                }
+            }
+        }
+        out
+    }
+
+    /// Decode a dense `[W, N, N]` φ back into edge space.
+    pub fn decode_phi(&self, _net: &AugmentedNet, dense: &[f32], phi: &mut Phi) {
+        let n = self.n;
+        for w in 0..self.w {
+            for (ij, eid) in self.edge_of[w].iter().enumerate() {
+                if let Some(e) = eid {
+                    phi.frac[w][*e] = dense[w * n * n + ij] as f64;
+                }
+            }
+        }
+    }
+}
+
+/// Output of one XLA routing iteration.
+pub struct XlaStep {
+    /// Total network cost at the *input* φ.
+    pub cost: f64,
+    /// Per-session node ingress rates `t[w * N + i]` (bucket-padded).
+    pub t: Vec<f32>,
+    /// Link flow matrix `[N, N]` (bucket-padded).
+    pub flows: Vec<f32>,
+}
+
+/// Execute one full routing iteration on the XLA runtime, updating `phi` in
+/// place. Numerics are f32 (the artifact's dtype); the native f64 path in
+/// [`crate::routing::omd`] remains the precision ground truth.
+pub fn routing_step_xla(
+    rt: &mut XlaRuntime,
+    dense: &DenseNet,
+    problem: &Problem,
+    phi: &mut Phi,
+    lam: &[f64],
+    eta: f64,
+) -> Result<XlaStep> {
+    let n = dense.n;
+    let mut lam32: Vec<f32> = lam.iter().map(|&x| x as f32).collect();
+    lam32.resize(dense.w, 0.0);
+    let phi_in = dense.encode_phi(&problem.net, phi);
+    let inputs = [
+        literal_f32(&phi_in, &[dense.w as i64, n as i64, n as i64])?,
+        literal_f32(&lam32, &[dense.w as i64])?,
+        literal_f32(&dense.cap, &[n as i64, n as i64])?,
+        literal_f32(&dense.adj, &[dense.w as i64, n as i64, n as i64])?,
+        scalar_f32(eta as f32),
+    ];
+    let outs = rt.execute_f32(&dense.artifact, &inputs)?;
+    // outputs: (phi', cost, t, flows)
+    dense.decode_phi(&problem.net, &outs[0], phi);
+    Ok(XlaStep { cost: outs[1][0] as f64, t: outs[2].clone(), flows: outs[3].clone() })
+}

@@ -1,0 +1,102 @@
+//! [`XlaRouter`] — the full OMD-RT loop running on the AOT-compiled XLA
+//! path: every iteration is one `routing_step` artifact execution (flow
+//! propagation + cost + marginal sweep + L1 mirror kernel, fused in a
+//! single compiled program).
+//!
+//! This is the accelerator-shaped formulation of Algorithm 2 (dense
+//! `[W,N,N]` tensors feeding the MXU on a real TPU); on this CPU image it
+//! exists for the native-vs-XLA parity tests and the hot-path ablation.
+//! It implements the same [`Router`] trait as the native solver, including
+//! the backtracking step-size adaptation, so it can be dropped into any
+//! experiment harness.
+
+use anyhow::Result;
+
+use super::routing_step::{routing_step_xla, DenseNet};
+use super::XlaRuntime;
+use crate::model::flow::Phi;
+use crate::model::Problem;
+use crate::routing::omd::OmdRouter;
+use crate::routing::Router;
+
+/// OMD-RT with every iteration executed through PJRT.
+pub struct XlaRouter {
+    rt: XlaRuntime,
+    dense: Option<DenseNet>,
+    pub eta: f64,
+    pub adaptive: bool,
+    eta_cur: f64,
+    last_cost: Option<f64>,
+}
+
+impl XlaRouter {
+    /// Build from the default artifacts directory.
+    pub fn new(eta: f64) -> Result<XlaRouter> {
+        let rt = XlaRuntime::load(&XlaRuntime::default_dir())?;
+        Ok(XlaRouter { rt, dense: None, eta, adaptive: true, eta_cur: eta, last_cost: None })
+    }
+
+    /// Pre-encode (and compile) for a problem; called lazily by `step`.
+    pub fn prepare(&mut self, problem: &Problem) -> Result<()> {
+        if self
+            .dense
+            .as_ref()
+            .map(|d| d.n_nodes != problem.net.n_nodes())
+            .unwrap_or(true)
+        {
+            self.dense = Some(DenseNet::build(&self.rt, problem)?);
+        }
+        Ok(())
+    }
+}
+
+impl Router for XlaRouter {
+    fn name(&self) -> &'static str {
+        "OMD-RT(xla)"
+    }
+
+    fn step(&mut self, problem: &Problem, lam: &[f64], phi: &mut Phi) -> f64 {
+        self.prepare(problem).expect("xla router prepare");
+        let dense = self.dense.as_ref().unwrap();
+        // probe the cost at the current φ to drive the adaptive step
+        // (returned by the artifact itself; the first call uses η as-is)
+        let eta = self.eta_cur;
+        let step = routing_step_xla(&mut self.rt, dense, problem, phi, lam, eta)
+            .expect("xla routing step");
+        if self.adaptive {
+            self.eta_cur =
+                OmdRouter::adapt_eta(self.eta_cur, self.eta, self.last_cost, step.cost);
+        }
+        self.last_cost = Some(step.cost);
+        step.cost
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::topologies;
+    use crate::model::cost::CostKind;
+    use crate::util::rng::Rng;
+
+    fn mk_problem(seed: u64, n: usize) -> Problem {
+        let mut rng = Rng::seed_from(seed);
+        let net = topologies::connected_er(n, 0.3, 3, &mut rng);
+        Problem::new(net, 60.0, CostKind::Exp)
+    }
+
+    #[test]
+    fn xla_router_converges_near_native() {
+        let Ok(mut router) = XlaRouter::new(0.3) else {
+            eprintln!("SKIP: artifacts not built");
+            return;
+        };
+        let p = mk_problem(3, 10);
+        let lam = p.uniform_allocation();
+        let xla = router.solve(&p, &lam, 200);
+        let native = OmdRouter::new(0.3).solve(&p, &lam, 200);
+        let rel = (xla.cost - native.cost).abs() / native.cost;
+        assert!(rel < 5e-3, "xla {} vs native {}", xla.cost, native.cost);
+        xla.phi.is_feasible(&p.net, 1e-3).unwrap();
+    }
+}

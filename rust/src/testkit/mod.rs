@@ -1,0 +1,176 @@
+//! Minimal property-based testing harness (substitute for the unavailable
+//! `proptest`).
+//!
+//! A [`Gen`] draws structured random inputs from a seeded [`Rng`];
+//! [`forall`] runs a predicate over many cases and, on failure, retries the
+//! failing seed with progressively simpler sizes ("shrinking-lite") before
+//! reporting the minimal reproducer seed. All failures print an exact
+//! `seed=` line so any case can be replayed deterministically.
+
+use crate::util::rng::Rng;
+
+/// Size-aware generator context.
+pub struct Gen<'a> {
+    pub rng: &'a mut Rng,
+    /// Complexity budget (shrunk on failure replays).
+    pub size: usize,
+}
+
+impl<'a> Gen<'a> {
+    pub fn new(rng: &'a mut Rng, size: usize) -> Self {
+        Gen { rng, size }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi >= lo);
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    /// A vector of length in [1, size.max(1)] drawn by `f`.
+    pub fn vec<T>(&mut self, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let n = self.usize_in(1, self.size.max(1));
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    /// A probability-simplex vector of dimension `d` (positive, sums to 1).
+    pub fn simplex(&mut self, d: usize) -> Vec<f64> {
+        let mut v: Vec<f64> = (0..d).map(|_| self.rng.exponential(1.0) + 1e-9).collect();
+        let s: f64 = v.iter().sum();
+        v.iter_mut().for_each(|x| *x /= s);
+        v
+    }
+}
+
+/// Outcome of a property run.
+#[derive(Debug)]
+pub struct PropError {
+    pub seed: u64,
+    pub size: usize,
+    pub case: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for PropError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "property failed (case {} seed={} size={}): {}",
+            self.case, self.seed, self.size, self.msg
+        )
+    }
+}
+
+/// Run `prop` over `cases` generated inputs. `prop` returns `Err(msg)` to
+/// signal failure. On failure the same seed is replayed at smaller sizes to
+/// find a simpler reproducer.
+pub fn forall<F>(base_seed: u64, cases: usize, size: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::seed_from(seed);
+        let mut g = Gen::new(&mut rng, size);
+        if let Err(msg) = prop(&mut g) {
+            // shrinking-lite: replay with smaller sizes, keep the smallest failure
+            let mut best = PropError { seed, size, case, msg };
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut rng2 = Rng::seed_from(seed);
+                let mut g2 = Gen::new(&mut rng2, s);
+                if let Err(m2) = prop(&mut g2) {
+                    best = PropError { seed, size: s, case, msg: m2 };
+                }
+                s /= 2;
+            }
+            panic!("{best}");
+        }
+    }
+}
+
+/// Assert with formatted message, returning `Err` for use inside `forall`.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Assert two floats are within `tol`.
+#[macro_export]
+macro_rules! prop_assert_close {
+    ($a:expr, $b:expr, $tol:expr) => {{
+        let (a, b) = ($a, $b);
+        if (a - b).abs() > $tol {
+            return Err(format!(
+                "{} = {} != {} = {} (tol {})",
+                stringify!($a),
+                a,
+                stringify!($b),
+                b,
+                $tol
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        forall(1, 50, 10, |g| {
+            let x = g.f64_in(0.0, 1.0);
+            prop_assert!((0.0..1.0).contains(&x), "x out of range: {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn simplex_sums_to_one() {
+        forall(2, 50, 8, |g| {
+            let d = g.usize_in(1, 12);
+            let v = g.simplex(d);
+            let s: f64 = v.iter().sum();
+            prop_assert_close!(s, 1.0, 1e-9);
+            prop_assert!(v.iter().all(|&x| x > 0.0), "non-positive entry");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failures() {
+        forall(3, 50, 10, |g| {
+            let x = g.usize_in(0, 100);
+            prop_assert!(x < 95, "x too big: {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let mut log1 = Vec::new();
+        forall(99, 5, 4, |g| {
+            log1.push(g.usize_in(0, 1000));
+            Ok(())
+        });
+        let mut log2 = Vec::new();
+        forall(99, 5, 4, |g| {
+            log2.push(g.usize_in(0, 1000));
+            Ok(())
+        });
+        assert_eq!(log1, log2);
+    }
+}

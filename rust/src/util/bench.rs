@@ -1,0 +1,145 @@
+//! Micro/macro benchmark harness (substitute for the unavailable `criterion`).
+//!
+//! Warms up, then runs timed samples until a wall-clock budget or sample cap
+//! is hit, and reports median / MAD / min. Used by every `rust/benches/*`
+//! target (all built with `harness = false`).
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats;
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub samples: Vec<f64>, // seconds per iteration
+}
+
+impl Measurement {
+    pub fn median_s(&self) -> f64 {
+        stats::median(&self.samples)
+    }
+    pub fn mad_s(&self) -> f64 {
+        stats::mad(&self.samples)
+    }
+    pub fn min_s(&self) -> f64 {
+        stats::min(&self.samples)
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} median {:>12}  mad {:>10}  min {:>12}  (n={})",
+            self.name,
+            fmt_time(self.median_s()),
+            fmt_time(self.mad_s()),
+            fmt_time(self.min_s()),
+            self.samples.len()
+        )
+    }
+}
+
+/// Human time formatting (ns/µs/ms/s).
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+/// Benchmark runner with a per-case time budget.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub max_samples: usize,
+    pub results: Vec<Measurement>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            max_samples: 200,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(20),
+            budget: Duration::from_millis(300),
+            max_samples: 50,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, which performs one logical iteration and returns a value
+    /// that is black-boxed to prevent dead-code elimination.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &Measurement {
+        // Warmup.
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            black_box(f());
+        }
+        // Timed samples.
+        let mut samples = Vec::new();
+        let b0 = Instant::now();
+        while b0.elapsed() < self.budget && samples.len() < self.max_samples {
+            let t = Instant::now();
+            black_box(f());
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        self.results.push(Measurement { name: name.to_string(), samples });
+        let m = self.results.last().unwrap();
+        println!("{}", m.report());
+        m
+    }
+
+    /// Wall-clock a one-shot closure (for end-to-end figure harnesses).
+    pub fn once<T, F: FnOnce() -> T>(name: &str, f: F) -> (T, f64) {
+        let t = Instant::now();
+        let v = f();
+        let dt = t.elapsed().as_secs_f64();
+        println!("{:<40} {:>12}", name, fmt_time(dt));
+        (v, dt)
+    }
+}
+
+/// Opaque value sink (stable `std::hint::black_box`).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(1),
+            budget: Duration::from_millis(20),
+            max_samples: 10,
+            results: vec![],
+        };
+        let m = b.bench("noop-sum", || (0..100u64).sum::<u64>());
+        assert!(!m.samples.is_empty());
+        assert!(m.median_s() >= 0.0);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_time(5e-9).ends_with("ns"));
+        assert!(fmt_time(5e-6).ends_with("µs"));
+        assert!(fmt_time(5e-3).ends_with("ms"));
+        assert!(fmt_time(5.0).ends_with('s'));
+    }
+}

@@ -1,0 +1,9 @@
+//! Environment substrates built in-repo (the offline registry has no `rand`,
+//! `serde`, `clap`, `criterion`, or `log` — see DESIGN.md §3).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,123 @@
+//! Integration: GS-OMA / OMAD against the ground-truth optimum computed by
+//! brute-force grid search over the allocation simplex (the utility
+//! functions are known to the *test*, never to the algorithm).
+
+use jowr::allocation::{
+    gsoma::GsOma, omad::Omad, Allocator, AnalyticOracle, SingleStepOracle, UtilityOracle,
+};
+use jowr::model::utility::{family, FAMILIES};
+use jowr::prelude::*;
+use jowr::routing::Router;
+use jowr::util::rng::Rng;
+
+fn mk_problem(seed: u64, n: usize) -> Problem {
+    let mut rng = Rng::seed_from(seed);
+    let net = topologies::connected_er(n, 0.3, 3, &mut rng);
+    Problem::new(net, 60.0, CostKind::Exp)
+}
+
+/// Brute-force U(Λ, φ*(Λ)) over a simplex grid (test-side ground truth).
+fn grid_optimum(problem: &Problem, fam: &str, step: f64) -> (Vec<f64>, f64) {
+    let us = family(fam, 3, problem.total_rate).unwrap();
+    let total = problem.total_rate;
+    let mut best = (vec![total / 3.0; 3], f64::NEG_INFINITY);
+    let mut a = step;
+    while a < total - step {
+        let mut b = step;
+        while a + b < total - step {
+            let c = total - a - b;
+            let lam = vec![a, b, c];
+            let mut router = OmdRouter::new(0.5);
+            let sol = router.solve(problem, &lam, 1500);
+            let u: f64 =
+                lam.iter().zip(&us).map(|(&l, uf)| uf.value(l)).sum::<f64>() - sol.cost;
+            if u > best.1 {
+                best = (lam, u);
+            }
+            b += step;
+        }
+        a += step;
+    }
+    best
+}
+
+#[test]
+fn gsoma_reaches_grid_optimum_log() {
+    let p = mk_problem(1, 8);
+    let (lam_star, u_star) = grid_optimum(&p, "log", 6.0);
+    let mut oracle = AnalyticOracle::new(p, family("log", 3, 60.0).unwrap());
+    let mut alg = GsOma::new(0.4, 0.06);
+    let st = alg.run(&mut oracle, 80);
+    let u_final = *st.trajectory.last().unwrap();
+    assert!(
+        u_final >= u_star - 0.05 * u_star.abs().max(1.0),
+        "GS-OMA U {} vs grid optimum {} at {:?} (got {:?})",
+        u_final,
+        u_star,
+        lam_star,
+        st.lam
+    );
+}
+
+#[test]
+fn omad_reaches_grid_optimum_log() {
+    let p = mk_problem(1, 8);
+    let (_lam_star, u_star) = grid_optimum(&p, "log", 6.0);
+    let mut oracle = SingleStepOracle::new(p, family("log", 3, 60.0).unwrap(), 0.5);
+    let mut alg = Omad::new(0.4, 0.06);
+    let st = alg.run(&mut oracle, 400);
+    let u_final = *st.trajectory.last().unwrap();
+    assert!(
+        u_final >= u_star - 0.05 * u_star.abs().max(1.0),
+        "OMAD U {} vs grid optimum {}",
+        u_final,
+        u_star
+    );
+}
+
+#[test]
+fn every_family_improves_and_respects_constraints() {
+    for fam in FAMILIES {
+        let p = mk_problem(3, 10);
+        let mut oracle = AnalyticOracle::new(p, family(fam, 3, 60.0).unwrap());
+        let mut alg = GsOma::new(0.5, 0.05);
+        let st = alg.run(&mut oracle, 25);
+        let sum: f64 = st.lam.iter().sum();
+        assert!((sum - 60.0).abs() < 1e-6, "{fam}: Σλ = {sum}");
+        assert!(st.lam.iter().all(|&l| l >= 0.5 - 1e-9), "{fam}: box violated {:?}", st.lam);
+        assert!(
+            st.trajectory.last().unwrap() >= &(st.trajectory[0] - 1e-6),
+            "{fam}: no improvement"
+        );
+    }
+}
+
+#[test]
+fn nested_and_single_loop_agree() {
+    let p = mk_problem(5, 10);
+    let us = family("log", 3, 60.0).unwrap();
+    let mut o1 = AnalyticOracle::new(p.clone(), us.clone());
+    let st1 = GsOma::new(0.3, 0.06).run(&mut o1, 60);
+    let mut o2 = SingleStepOracle::new(p, us, 0.5);
+    let st2 = Omad::new(0.3, 0.06).run(&mut o2, 400);
+    let (u1, u2) = (*st1.trajectory.last().unwrap(), *st2.trajectory.last().unwrap());
+    let rel = (u1 - u2).abs() / u1.abs().max(1.0);
+    assert!(rel < 0.03, "nested {u1} vs single {u2}");
+    // and single loop is far cheaper in routing iterations
+    assert!(o2.routing_iterations() * 5 < o1.routing_iterations());
+}
+
+#[test]
+fn allocation_shifts_toward_higher_utility_version() {
+    // log family gives version 2 the highest marginal utility; with a
+    // generous network the optimizer should allocate it the most traffic
+    let p = mk_problem(7, 14);
+    let mut oracle = AnalyticOracle::new(p, family("log", 3, 60.0).unwrap());
+    let mut alg = GsOma::new(0.4, 0.08);
+    let st = alg.run(&mut oracle, 60);
+    assert!(
+        st.lam[2] >= st.lam[0] - 1.0,
+        "version 2 should attract at least as much as version 0: {:?}",
+        st.lam
+    );
+}

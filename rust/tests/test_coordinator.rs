@@ -1,0 +1,93 @@
+//! Integration: the distributed actor implementation is *exactly* the
+//! centralized algorithm (message passing changes the plumbing, not the
+//! math), and the serving pipeline composes with the optimizer.
+
+use jowr::allocation::{omad::Omad, UtilityOracle};
+use jowr::coordinator::leader::DistributedOmd;
+use jowr::coordinator::serving::{AnalyticEngine, MeasuredOracle, ServeParams};
+use jowr::prelude::*;
+use jowr::routing::Router;
+use jowr::util::rng::Rng;
+
+fn mk_problem(seed: u64, n: usize) -> Problem {
+    let mut rng = Rng::seed_from(seed);
+    let net = topologies::connected_er(n, 0.3, 3, &mut rng);
+    Problem::new(net, 60.0, CostKind::Exp)
+}
+
+#[test]
+fn distributed_equals_centralized_across_instances() {
+    for seed in [1u64, 9, 23] {
+        let p = mk_problem(seed, 9);
+        let lam = p.uniform_allocation();
+        let (d, comm) = DistributedOmd::new(0.3).solve(&p, &lam, 15);
+        let c = OmdRouter::new(0.3).solve(&p, &lam, 15);
+        for (i, (a, b)) in d.trajectory.iter().zip(&c.trajectory).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-6 * b.abs().max(1.0),
+                "seed {seed} iter {i}: {a} vs {b}"
+            );
+        }
+        assert!(comm.messages > 0 && comm.bytes > 0);
+    }
+}
+
+#[test]
+fn communication_overhead_is_linear_in_rounds_and_edges() {
+    let p = mk_problem(3, 8);
+    let lam = p.uniform_allocation();
+    let (_s, c5) = DistributedOmd::new(0.2).solve(&p, &lam, 5);
+    let (_s, c10) = DistributedOmd::new(0.2).solve(&p, &lam, 10);
+    let per_round5 = c5.messages as f64 / 5.0;
+    let per_round10 = c10.messages as f64 / 10.0;
+    let rel = (per_round5 - per_round10).abs() / per_round10;
+    assert!(rel < 0.25, "per-round message cost should be stable: {per_round5} vs {per_round10}");
+}
+
+#[test]
+fn serving_oracle_drives_allocation_learning() {
+    // end-to-end: measured utilities only, no analytic functions anywhere
+    let p = mk_problem(5, 10);
+    let params = ServeParams { sim_time: 8.0, ..ServeParams::default_for(3) };
+    let mut oracle = MeasuredOracle::new(p, params, AnalyticEngine::new(3, 3), 0.3, 17);
+    let mut alg = Omad::new(1.5, 0.02);
+    let mut lam = vec![20.0, 20.0, 20.0];
+    let mut first = None;
+    for _ in 0..25 {
+        let u = oracle.observe(&lam);
+        first.get_or_insert(u);
+        let (next, _) = alg.outer_step(&mut oracle, &lam);
+        lam = next;
+    }
+    let last_avg: f64 = (0..5).map(|_| oracle.observe(&lam)).sum::<f64>() / 5.0;
+    // learning under measurement noise: average improvement, generous slack
+    assert!(
+        last_avg > first.unwrap() - 2.0,
+        "measured utility regressed: {} -> {last_avg}",
+        first.unwrap()
+    );
+    assert!((lam.iter().sum::<f64>() - 60.0).abs() < 1e-6);
+    let rep = oracle.last_report.as_ref().unwrap();
+    assert!(rep.throughput_fps > 0.0);
+}
+
+#[test]
+fn serving_respects_allocation_mass() {
+    // completions track the allocation proportions over a long window
+    let p = mk_problem(8, 10);
+    let phi = jowr::model::flow::Phi::uniform(&p.net);
+    let mut eng = AnalyticEngine::new(3, 4);
+    let mut rng = Rng::seed_from(5);
+    let params = ServeParams { sim_time: 40.0, ..ServeParams::default_for(3) };
+    let lam = [40.0, 15.0, 5.0];
+    let rep =
+        jowr::coordinator::serving::simulate(&p, &phi, &lam, &mut eng, &params, &mut rng);
+    let done: u64 = rep.completed.iter().sum();
+    assert!(done > 0);
+    let share0 = rep.completed[0] as f64 / done as f64;
+    assert!(
+        (share0 - 40.0 / 60.0).abs() < 0.08,
+        "version-0 share {share0} should be ~2/3 ({:?})",
+        rep.completed
+    );
+}

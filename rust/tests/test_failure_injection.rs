@@ -1,0 +1,144 @@
+//! Failure injection + degenerate-input hardening: the system must stay
+//! sane (no panics, invariants preserved) under inputs well outside the
+//! paper's nominal operating point.
+
+use jowr::allocation::{gsoma::GsOma, omad::Omad, Allocator, AnalyticOracle, SingleStepOracle};
+use jowr::coordinator::serving::{AnalyticEngine, ServeParams};
+use jowr::model::flow::{self, Phi};
+use jowr::model::utility::family;
+use jowr::prelude::*;
+use jowr::routing::Router;
+use jowr::util::rng::Rng;
+
+fn mk_problem(seed: u64, n: usize, rate: f64) -> Problem {
+    let mut rng = Rng::seed_from(seed);
+    let net = topologies::connected_er(n, 0.3, 3, &mut rng);
+    Problem::new(net, rate, CostKind::Exp)
+}
+
+#[test]
+fn extreme_congestion_converges_finite() {
+    // λ = 600 on a C̄ = 10 network: every link far beyond capacity; the exp
+    // cost explodes but stays finite, and OMD still descends
+    let p = mk_problem(1, 10, 600.0);
+    let lam = p.uniform_allocation();
+    let sol = OmdRouter::new(0.5).solve(&p, &lam, 500);
+    assert!(sol.cost.is_finite());
+    assert!(sol.cost <= sol.trajectory[0]);
+    sol.phi.is_feasible(&p.net, 1e-9).unwrap();
+}
+
+#[test]
+fn near_zero_rate_is_stable() {
+    let p = mk_problem(2, 8, 1e-6);
+    let lam = p.uniform_allocation();
+    let sol = OmdRouter::new(0.5).solve(&p, &lam, 100);
+    assert!(sol.cost.is_finite());
+    sol.phi.is_feasible(&p.net, 1e-9).unwrap();
+}
+
+#[test]
+fn all_mass_on_one_version() {
+    // degenerate allocation: sessions with λ_w = 0 must not break flows,
+    // marginals, or the mirror update
+    let p = mk_problem(3, 10, 60.0);
+    let lam = vec![60.0, 0.0, 0.0];
+    let sol = OmdRouter::new(0.3).solve(&p, &lam, 300);
+    let ev = flow::evaluate(&p, &sol.phi, &lam);
+    assert!((ev.t[0][p.net.dnode(0)] - 60.0).abs() < 1e-9);
+    assert_eq!(ev.t[1][p.net.dnode(1)], 0.0);
+    assert!(sol.cost.is_finite());
+}
+
+#[test]
+fn single_device_per_version_minimal_network() {
+    // the smallest legal CEC: 3 devices, one per version, ring-connected
+    let mut g = jowr::graph::DiGraph::with_nodes(3);
+    for (u, v) in [(0, 1), (1, 2), (2, 0), (1, 0), (2, 1), (0, 2)] {
+        g.add_edge(u, v, 10.0);
+    }
+    let placement = jowr::graph::augmented::Placement::new(vec![0, 1, 2], 3);
+    let mut rng = Rng::seed_from(4);
+    let net = jowr::graph::augmented::AugmentedNet::build(&g, &placement, 10.0, &mut rng);
+    let p = Problem::new(net, 30.0, CostKind::Exp);
+    let lam = p.uniform_allocation();
+    let sol = OmdRouter::new(0.3).solve(&p, &lam, 500);
+    let opt = OptRouter::new().solve(&p, &lam);
+    assert!((sol.cost - opt.cost).abs() / opt.cost < 1e-2);
+}
+
+#[test]
+fn repeated_topology_changes_do_not_leak_state() {
+    let cfg = jowr::config::ExperimentConfig::paper_default();
+    let us = family("log", 3, 60.0).unwrap();
+    let mut rng = Rng::seed_from(5);
+    let mut problem = {
+        let mut c = cfg.clone();
+        c.n_nodes = 10;
+        c.build_problem(&mut rng)
+    };
+    let mut oracle = SingleStepOracle::new(problem.clone(), us, 0.3);
+    let alg = Omad::new(0.5, 0.05);
+    let mut lam = vec![20.0, 20.0, 20.0];
+    for epoch in 0..5u64 {
+        // rewire every epoch
+        let mut c = cfg.clone();
+        c.n_nodes = 10;
+        c.seed = 100 + epoch;
+        let mut rng2 = Rng::seed_from(c.seed);
+        problem = c.build_problem(&mut rng2);
+        jowr::allocation::UtilityOracle::on_topology_change(&mut oracle, &problem);
+        for _ in 0..10 {
+            let (next, _) = alg.outer_step(&mut oracle, &lam);
+            lam = next;
+            assert!((lam.iter().sum::<f64>() - 60.0).abs() < 1e-6);
+            assert!(lam.iter().all(|l| l.is_finite() && *l >= 0.0));
+        }
+    }
+}
+
+#[test]
+fn serving_with_saturated_hosts_drops_nothing_but_queues() {
+    // inference far slower than arrivals: frames must queue (latency grows)
+    // but every admitted frame is eventually served within the window stats
+    let p = mk_problem(6, 8, 60.0);
+    let phi = Phi::uniform(&p.net);
+    let mut eng = AnalyticEngine::new(3, 7);
+    eng.device_flops = 2.0e7; // 100x slower devices
+    let mut rng = Rng::seed_from(8);
+    let params = ServeParams { sim_time: 5.0, ..ServeParams::default_for(3) };
+    let lam = p.uniform_allocation();
+    let rep = jowr::coordinator::serving::simulate(&p, &phi, &lam, &mut eng, &params, &mut rng);
+    assert_eq!(rep.dropped, 0);
+    assert!(rep.p99_latency_s > rep.p50_latency_s);
+    assert!(rep.utility.is_finite());
+}
+
+#[test]
+fn gsoma_survives_tiny_delta_and_huge_eta() {
+    let p = mk_problem(7, 8, 60.0);
+    let us = family("log", 3, 60.0).unwrap();
+    let mut oracle = AnalyticOracle::new(p, us);
+    // pathological hyper-parameters: must not panic or go non-finite
+    let mut alg = GsOma::new(1e-4, 50.0);
+    let st = alg.run(&mut oracle, 10);
+    assert!(st.lam.iter().all(|l| l.is_finite()));
+    assert!((st.lam.iter().sum::<f64>() - 60.0).abs() < 1e-6);
+}
+
+#[test]
+fn corrupt_manifest_rejected_cleanly() {
+    let dir = std::env::temp_dir().join("jowr_corrupt_manifest");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), "{ not json").unwrap();
+    let err = jowr::runtime::XlaRuntime::load(&dir);
+    assert!(err.is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn unknown_artifact_errors_not_panics() {
+    if let Some(mut rt) = jowr::runtime::XlaRuntime::try_default() {
+        assert!(rt.execute("nonexistent_artifact", &[]).is_err());
+    }
+}

@@ -1,0 +1,197 @@
+//! Property-based tests over randomized instances (testkit harness):
+//! flow conservation, simplex invariants, monotone descent, convexity,
+//! DAG acyclicity — the paper's structural assumptions, fuzzed.
+
+use jowr::graph::augmented::{AugmentedNet, Placement};
+use jowr::graph::topologies;
+use jowr::model::flow::{self, Phi};
+use jowr::model::Problem;
+use jowr::prelude::*;
+use jowr::routing::omd::OmdRouter;
+use jowr::routing::Router;
+use jowr::testkit::{forall, Gen};
+use jowr::util::rng::Rng;
+use jowr::{prop_assert, prop_assert_close};
+
+fn random_problem(g: &mut Gen) -> Problem {
+    let n = g.usize_in(5, 14);
+    let p = g.f64_in(0.25, 0.6);
+    let w = g.usize_in(2, 4);
+    let seed = g.rng.next_u64();
+    let mut rng = Rng::seed_from(seed);
+    let net = topologies::connected_er(n, p, w, &mut rng);
+    Problem::new(net, g.f64_in(10.0, 80.0), CostKind::Exp)
+}
+
+/// A random feasible φ (not just the uniform initializer).
+fn random_phi(g: &mut Gen, net: &AugmentedNet) -> Phi {
+    let mut phi = Phi::uniform(net);
+    for w in 0..net.n_versions() {
+        for i in 0..net.n_nodes() {
+            let lanes: Vec<usize> = net.session_out(w, i).collect();
+            if lanes.len() < 2 {
+                continue;
+            }
+            let weights = g.simplex(lanes.len());
+            for (e, x) in lanes.iter().zip(weights) {
+                phi.frac[w][*e] = x;
+            }
+        }
+    }
+    phi
+}
+
+#[test]
+fn prop_flow_conservation_under_random_phi() {
+    forall(101, 40, 8, |g| {
+        let p = random_problem(g);
+        let phi = random_phi(g, &p.net);
+        phi.is_feasible(&p.net, 1e-9).map_err(|e| e.to_string())?;
+        let lam = p.uniform_allocation();
+        let ev = flow::evaluate(&p, &phi, &lam);
+        for w in 0..p.n_versions() {
+            prop_assert_close!(ev.t[w][p.net.dnode(w)], lam[w], 1e-8);
+        }
+        // non-negative flows bounded by admitted traffic on real links
+        for &f in &ev.flows {
+            prop_assert!(f >= -1e-12, "negative flow {f}");
+            prop_assert!(f <= p.total_rate + 1e-6, "flow {f} exceeds λ");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mirror_update_preserves_simplex() {
+    forall(202, 60, 10, |g| {
+        let d = g.usize_in(2, 10);
+        let mut row = g.simplex(d);
+        let delta: Vec<f64> = (0..d).map(|_| g.f64_in(-100.0, 1e6)).collect();
+        let eta = g.f64_in(0.0, 10.0);
+        OmdRouter::update_row(&mut row, &delta, eta);
+        let sum: f64 = row.iter().sum();
+        prop_assert_close!(sum, 1.0, 1e-9);
+        for &x in &row {
+            prop_assert!(x >= 0.0, "negative fraction {x}");
+            prop_assert!(x.is_finite(), "non-finite fraction");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_session_dags_acyclic_and_reachable() {
+    forall(303, 40, 8, |g| {
+        let n = g.usize_in(4, 16);
+        let pr = g.f64_in(0.2, 0.7);
+        let w = g.usize_in(2, 4);
+        let seed = g.rng.next_u64();
+        let mut rng = Rng::seed_from(seed);
+        let graph = topologies::connected_er_graph(n, pr, 10.0, &mut rng);
+        let placement = Placement::random(n, w, &mut rng);
+        let net = AugmentedNet::build(&graph, &placement, 10.0, &mut rng);
+        net.validate().map_err(|e| e)?;
+        for sess in 0..w {
+            prop_assert!(
+                net.graph.topo_order(&net.session_edges[sess]).is_some(),
+                "session {sess} DAG has a cycle"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_omd_descends_with_small_step() {
+    forall(404, 12, 6, |g| {
+        let p = random_problem(g);
+        let lam = p.uniform_allocation();
+        let mut router = OmdRouter::fixed(0.02);
+        let mut phi = Phi::uniform(&p.net);
+        let mut prev = f64::INFINITY;
+        for _ in 0..15 {
+            let cost = router.step(&p, &lam, &mut phi);
+            prop_assert!(cost <= prev + 1e-9, "cost increased {prev} -> {cost}");
+            prev = cost;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cost_convex_along_phi_segments() {
+    // D(Λ, φ) is convex in φ (Theorem 3): check midpoint convexity along
+    // random feasible segments
+    forall(505, 25, 8, |g| {
+        let p = random_problem(g);
+        let lam = p.uniform_allocation();
+        let a = random_phi(g, &p.net);
+        let b = random_phi(g, &p.net);
+        let mut mid = a.clone();
+        for w in 0..p.n_versions() {
+            for e in 0..p.net.graph.n_edges() {
+                mid.frac[w][e] = 0.5 * (a.frac[w][e] + b.frac[w][e]);
+            }
+        }
+        let ca = flow::evaluate(&p, &a, &lam).cost;
+        let cb = flow::evaluate(&p, &b, &lam).cost;
+        let cm = flow::evaluate(&p, &mid, &lam).cost;
+        prop_assert!(
+            cm <= 0.5 * (ca + cb) + 1e-6 * (ca + cb),
+            "convexity violated: D(mid)={cm} > ({ca}+{cb})/2"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_allocation_perturbation_feasible() {
+    forall(606, 60, 8, |g| {
+        let w = g.usize_in(2, 6);
+        let total = g.f64_in(10.0, 100.0);
+        let lam = {
+            let s = g.simplex(w);
+            s.into_iter().map(|x| x * total).collect::<Vec<f64>>()
+        };
+        let delta = g.f64_in(0.01, total / w as f64 / 2.0);
+        for idx in 0..w {
+            for sign in [1.0, -1.0] {
+                let v = jowr::allocation::gsoma::perturb(&lam, idx, sign * delta, total);
+                let sum: f64 = v.iter().sum();
+                prop_assert_close!(sum, total, 1e-7);
+                for &x in &v {
+                    prop_assert!(x >= -1e-12, "negative allocation {x}");
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_utility_families_satisfy_assumptions() {
+    // Assumptions 1-3 on every family instance over random λ ranges
+    forall(707, 40, 8, |g| {
+        let total = g.f64_in(10.0, 120.0);
+        let w = g.usize_in(2, 5);
+        for fam in jowr::model::utility::FAMILIES {
+            let us = jowr::model::utility::family(fam, w, total).unwrap();
+            for u in &us {
+                prop_assert!(u.is_valid_on(total), "{fam} invalid on [0,{total}]");
+                // monotone + concave via random triples
+                let x1 = g.f64_in(0.0, total / 2.0);
+                let x2 = x1 + g.f64_in(0.01, total / 2.0);
+                prop_assert!(
+                    u.value(x2) >= u.value(x1) - 1e-9,
+                    "{fam} not increasing on [{x1},{x2}]"
+                );
+                let mid = u.value(0.5 * (x1 + x2));
+                prop_assert!(
+                    mid >= 0.5 * (u.value(x1) + u.value(x2)) - 1e-9,
+                    "{fam} not concave"
+                );
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,131 @@
+//! Integration: every routing algorithm reaches the unique optimum
+//! (Theorem 3) on every topology family, and the optimality conditions
+//! hold at the converged point.
+
+use jowr::model::flow;
+use jowr::prelude::*;
+use jowr::routing::marginal;
+use jowr::routing::Router;
+use jowr::util::rng::Rng;
+
+fn er_problem(seed: u64, n: usize, w: usize) -> Problem {
+    let mut rng = Rng::seed_from(seed);
+    let net = topologies::connected_er(n, 0.3, w, &mut rng);
+    Problem::new(net, 60.0, CostKind::Exp)
+}
+
+#[test]
+fn omd_sgp_opt_agree_on_er() {
+    for seed in [1u64, 2, 3] {
+        let p = er_problem(seed, 12, 3);
+        let lam = p.uniform_allocation();
+        let omd = OmdRouter::new(0.5).solve(&p, &lam, 4000);
+        let sgp = SgpRouter::new().solve(&p, &lam, 4000);
+        let opt = OptRouter::new().solve(&p, &lam);
+        let rel_omd = (omd.cost - opt.cost) / opt.cost;
+        let rel_sgp = (sgp.cost - opt.cost) / opt.cost;
+        assert!(rel_omd.abs() < 5e-3, "seed {seed}: OMD {} vs OPT {}", omd.cost, opt.cost);
+        assert!(rel_sgp.abs() < 5e-3, "seed {seed}: SGP {} vs OPT {}", sgp.cost, opt.cost);
+        assert!(omd.cost >= opt.cost - 1e-6, "OPT must lower-bound");
+    }
+}
+
+#[test]
+fn all_named_topologies_converge() {
+    for &(name, _n, _e, cbar) in topologies::TABLE2.iter() {
+        let mut rng = Rng::seed_from(5);
+        let g = topologies::by_name(name, cbar, &mut rng).unwrap();
+        let placement =
+            jowr::graph::augmented::Placement::random(g.n_nodes(), 3, &mut rng);
+        let net = jowr::graph::augmented::AugmentedNet::build(&g, &placement, cbar, &mut rng);
+        let p = Problem::new(net, 60.0, CostKind::Exp);
+        let lam = p.uniform_allocation();
+        let omd = OmdRouter::new(0.5).solve(&p, &lam, 3000);
+        let opt = OptRouter::new().solve(&p, &lam);
+        let rel = (omd.cost - opt.cost) / opt.cost;
+        assert!(rel.abs() < 1e-2, "{name}: OMD {} vs OPT {} (rel {rel})", omd.cost, opt.cost);
+        omd.phi.is_feasible(&p.net, 1e-9).unwrap();
+    }
+}
+
+#[test]
+fn optimality_conditions_hold_at_convergence() {
+    // Theorem 3 eq. (17): on each live row, marginals equal on the support
+    // and no unused lane has a strictly smaller marginal.
+    let p = er_problem(7, 10, 3);
+    let lam = p.uniform_allocation();
+    let sol = OmdRouter::new(0.5).solve(&p, &lam, 6000);
+    let t = flow::node_rates(&p.net, &sol.phi, &lam);
+    let flows = flow::edge_flows(&p.net, &sol.phi, &t);
+    let m = marginal::compute(&p.net, p.cost, &sol.phi, &flows);
+    for w in 0..p.n_versions() {
+        for &i in p.net.session_routers(w) {
+            if t[w][i] < 1e-6 {
+                continue;
+            }
+            let support: Vec<f64> = p
+                .net
+                .session_out(w, i)
+                .filter(|&e| sol.phi.frac[w][e] > 1e-3)
+                .map(|e| m.delta(&p.net, w, e))
+                .collect();
+            if support.len() < 2 {
+                continue;
+            }
+            let hi = support.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let lo = support.iter().cloned().fold(f64::INFINITY, f64::min);
+            assert!(
+                hi - lo < 0.03 * hi.max(1.0),
+                "w={w} i={i}: support marginals not equalized ({support:?})"
+            );
+            // unused lanes must not be strictly better (within tolerance)
+            for e in p.net.session_out(w, i) {
+                if sol.phi.frac[w][e] <= 1e-3 {
+                    let d = m.delta(&p.net, w, e);
+                    assert!(
+                        d >= lo - 0.05 * lo.abs().max(1.0),
+                        "w={w} i={i}: unused lane {e} has smaller marginal {d} < {lo}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn cost_families_all_converge() {
+    for kind in [CostKind::Exp, CostKind::Queue, CostKind::Linear, CostKind::Cubic] {
+        let mut rng = Rng::seed_from(11);
+        let net = topologies::connected_er(10, 0.35, 3, &mut rng);
+        let p = Problem::new(net, 30.0, kind);
+        let lam = p.uniform_allocation();
+        let sol = OmdRouter::new(0.3).solve(&p, &lam, 2000);
+        assert!(sol.cost <= sol.trajectory[0] + 1e-9, "{kind:?} did not improve");
+        sol.phi.is_feasible(&p.net, 1e-9).unwrap();
+        // conservation regardless of cost family
+        let ev = flow::evaluate(&p, &sol.phi, &lam);
+        for w in 0..3 {
+            assert!((ev.t[w][p.net.dnode(w)] - lam[w]).abs() < 1e-9);
+        }
+    }
+}
+
+#[test]
+fn gp_converges_but_slower_than_omd() {
+    let p = er_problem(13, 10, 3);
+    let lam = p.uniform_allocation();
+    let omd = OmdRouter::new(0.5).solve(&p, &lam, 40);
+    let gp = GpRouter::new(0.002).solve(&p, &lam, 40);
+    assert!(omd.cost <= gp.cost + 1e-9, "OMD {} vs GP {}", omd.cost, gp.cost);
+}
+
+#[test]
+fn more_versions_than_three() {
+    // W = 4 sessions exercise the generic session machinery
+    let p = er_problem(17, 14, 4);
+    let lam = p.uniform_allocation();
+    let sol = OmdRouter::new(0.5).solve(&p, &lam, 2000);
+    let opt = OptRouter::new().solve(&p, &lam);
+    let rel = (sol.cost - opt.cost) / opt.cost;
+    assert!(rel.abs() < 1e-2, "W=4: OMD {} vs OPT {}", sol.cost, opt.cost);
+}
