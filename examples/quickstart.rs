@@ -1,56 +1,80 @@
-//! Quickstart: build the paper's default CEC network, run the single-loop
-//! OMAD optimizer end-to-end, and print the utility trajectory plus the
-//! final allocation/routing summary.
+//! Quickstart: describe the paper's default scenario with the `Scenario`
+//! builder, run the single-loop OMAD optimizer as a streaming, step-driven
+//! session run, and print the utility trajectory plus the final
+//! allocation/routing summary.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
-use jowr::allocation::{omad::Omad, Allocator, SingleStepOracle, UtilityOracle};
-use jowr::model::utility::family;
+use std::ops::ControlFlow;
+
 use jowr::prelude::*;
 
-fn main() {
-    // 1. the paper's default setup: Connected-ER(25, 0.2), λ = 60 fps, W = 3
-    let mut rng = Rng::seed_from(42);
-    let net = topologies::connected_er(25, 0.2, 3, &mut rng);
+fn main() -> Result<(), SessionError> {
+    // 1. the paper's default setup — Connected-ER(25, 0.2), λ = 60 fps,
+    //    W = 3 — validated up front: a typo'd topology/utility/cost name
+    //    is an Err here, not a panic mid-experiment
+    let session = Scenario::paper_default().utility("log").seed(42).build()?;
     println!(
         "network: {} devices (+S+{} destinations), {} directed links",
-        net.n_real,
-        net.n_versions(),
-        net.graph.n_edges()
+        session.problem.net.n_real,
+        session.problem.net.n_versions(),
+        session.problem.net.graph.n_edges()
     );
-    let problem = Problem::new(net, 60.0, CostKind::Exp);
 
-    // 2. hidden utility functions (log family) behind the oracle boundary —
-    //    the optimizer only ever sees observed utility values
-    let utilities = family("log", 3, 60.0).unwrap();
-    let mut oracle = SingleStepOracle::new(problem, utilities, 0.5);
-
-    // 3. run the single-loop optimizer (Algorithm 3)
-    let mut alg = Omad::new(0.5, 0.05);
-    let st = alg.run(&mut oracle, 150);
-
-    println!("\nutility trajectory (every 10th outer iteration):");
-    for (i, u) in st.trajectory.iter().enumerate().step_by(10) {
-        println!("  t={i:>4}  U = {u:.4}");
+    // 2. the single-loop optimizer (Algorithm 3) by registry name, with
+    //    observers recording the trajectory and printing progress — custom
+    //    telemetry composes without touching solver code
+    struct PrintEvery(usize);
+    impl Observer for PrintEvery {
+        fn on_step(&mut self, info: &StepInfo<'_>) {
+            if info.iter % self.0 == 1 {
+                println!("  t={:>4}  U = {:.4}", info.iter - 1, info.objective);
+            }
+        }
     }
+    let mut traj = Trajectory::default();
+    let mut printer = PrintEvery(10);
+    let mut run = session
+        .allocation_run("omad", 150)?
+        .observe(&mut traj)
+        .observe(&mut printer);
+
+    // 3. step-driven execution: the caller owns the loop, so it can
+    //    interleave checkpointing or topology events between iterations
+    let report = loop {
+        match run.step() {
+            ControlFlow::Continue(()) => {}
+            ControlFlow::Break(report) => break report,
+        }
+    };
+    drop(run); // release the observers before reading the trajectory
+
     println!(
-        "\nconverged in {} outer iterations ({} total routing iterations, {:.3}s)",
-        st.iterations, st.routing_iterations, st.elapsed_s
+        "\nutility trajectory: {:.4} -> {:.4} over {} recorded points",
+        traj.values[0],
+        traj.values.last().unwrap(),
+        traj.values.len()
     );
-    println!("final allocation Λ* = {:?}", st.lam);
-    let total: f64 = st.lam.iter().sum();
+    println!(
+        "\nstopped ({:?}) after {} outer iterations ({} total routing iterations, {:.3}s)",
+        report.stop, report.iterations, report.routing_iterations, report.elapsed_s
+    );
+    println!("final allocation Λ* = {:?}", report.lam);
+    let total: f64 = report.lam.iter().sum();
     println!("allocation sums to λ = {total}");
 
     // 4. inspect the converged routing: per-version serving rates
-    let phi = oracle.phi().clone();
-    let ev = jowr::model::flow::evaluate(&oracle.problem, &phi, &st.lam);
-    println!("\nper-version delivered rates at the virtual destinations:");
-    for w in 0..3 {
-        let dw = oracle.problem.net.dnode(w);
-        println!("  version {w}: {:.3} fps (allocated {:.3})", ev.t[w][dw], st.lam[w]);
+    if let Some(phi) = &report.phi {
+        let ev = jowr::model::flow::evaluate(&session.problem, phi, &report.lam);
+        println!("\nper-version delivered rates at the virtual destinations:");
+        for w in 0..session.problem.n_versions() {
+            let dw = session.problem.net.dnode(w);
+            println!("  version {w}: {:.3} fps (allocated {:.3})", ev.t[w][dw], report.lam[w]);
+        }
+        println!("total network cost at Λ*: {:.4}", ev.cost);
     }
-    println!("total network cost at Λ*: {:.4}", ev.cost);
-    println!("observed total network utility: {:.4}", oracle.observe(&st.lam));
+    println!("observed total network utility: {:.4}", report.objective);
+    Ok(())
 }

@@ -6,33 +6,29 @@
 //! cargo run --release --example topology_change
 //! ```
 
-use jowr::allocation::{omad::Omad, SingleStepOracle, UtilityOracle};
-use jowr::config::ExperimentConfig;
 use jowr::coordinator::events::{EventSchedule, NetworkEvent};
-use jowr::model::utility::family;
 use jowr::prelude::*;
 
-fn main() {
-    let mut cfg = ExperimentConfig::paper_default();
-    cfg.n_nodes = 20;
-    let mut rng = Rng::seed_from(cfg.seed);
-    let mut problem = cfg.build_problem(&mut rng);
-    let utilities = family("log", 3, cfg.total_rate).unwrap();
+fn main() -> Result<(), SessionError> {
+    let session = Scenario::paper_default().nodes(20).build()?;
+    let cfg = session.cfg.clone();
+    let mut problem = session.problem.clone();
 
     // two disruptions: a full rewire at t=60, a capacity crunch at t=120
     let schedule = EventSchedule::new()
         .at(60, NetworkEvent::Rewire { seed: 4242 })
         .at(120, NetworkEvent::CapacityScale { factor: 0.6 });
 
-    let mut oracle = SingleStepOracle::new(problem.clone(), utilities, cfg.eta_routing);
-    let alg = Omad::new(cfg.delta, 0.05);
+    // single-loop allocator + its persistent-routing oracle, by name
+    let alg = session.allocator("omad")?;
+    let mut oracle = session.oracle_for("omad")?;
     let mut lam = vec![cfg.total_rate / 3.0; 3];
 
     println!("t      U(Λ,φ)     Λ                               event");
     for t in 0..180usize {
         let mut fired = String::new();
         for ev in schedule.fire(t) {
-            problem = EventSchedule::apply(&cfg, &problem, ev);
+            problem = EventSchedule::apply(&cfg, &problem, ev)?;
             oracle.on_topology_change(&problem);
             fired = format!("{ev:?}");
         }
@@ -43,7 +39,7 @@ fn main() {
                 lam[0], lam[1], lam[2]
             );
         }
-        let (next, _) = alg.outer_step(&mut oracle, &lam);
+        let (next, _) = alg.outer_step(oracle.as_mut(), &lam);
         lam = next;
     }
     println!(
@@ -52,4 +48,5 @@ fn main() {
         oracle.observations()
     );
     println!("final Λ = [{:.2}, {:.2}, {:.2}]", lam[0], lam[1], lam[2]);
+    Ok(())
 }

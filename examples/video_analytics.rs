@@ -11,33 +11,44 @@
 //!    routing from *measured* utility observations only;
 //! 4. latency percentiles + throughput are reported per learning phase.
 //!
-//! Falls back to the analytic engine when `artifacts/` is absent so the
-//! example always runs; build artifacts first for the real-DNN path:
+//! Falls back to the analytic engine when `artifacts/` is absent (or when
+//! the crate is built without the `xla` feature) so the example always
+//! runs; build artifacts first for the real-DNN path:
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example video_analytics
+//! make artifacts && cargo run --release --features xla --example video_analytics
 //! ```
 
-use jowr::allocation::{omad::Omad, UtilityOracle};
-use jowr::coordinator::serving::{
-    AnalyticEngine, InferenceEngine, MeasuredOracle, ServeParams,
-};
-use jowr::model::utility::family;
+use jowr::allocation::AnalyticOracle;
+use jowr::coordinator::serving::{AnalyticEngine, InferenceEngine, MeasuredOracle, ServeParams};
 use jowr::prelude::*;
 
-fn run<E: InferenceEngine>(engine: E, label: &str) {
-    let mut rng = Rng::seed_from(7);
-    let net = topologies::connected_er(15, 0.3, 3, &mut rng);
-    let problem = Problem::new(net, 60.0, CostKind::Exp);
+fn run<E: InferenceEngine>(engine: E, label: &str) -> Result<(), SessionError> {
+    let session = Scenario::paper_default()
+        .nodes(15)
+        .link_probability(0.3)
+        .capacity(10.0)
+        .seed(7)
+        .delta(1.0)
+        .build()?;
     println!("serving backend: {label}");
     println!(
         "network: {} devices, λ = 60 fps across versions [small, medium, large]",
-        problem.net.n_real
+        session.problem.net.n_real
     );
 
     let params = ServeParams { sim_time: 15.0, ..ServeParams::default_for(3) };
-    let mut oracle = MeasuredOracle::new(problem, params, engine, 0.5, 99);
-    let alg = Omad::new(1.0, 0.03);
+    // the measured oracle serves with any registered router — OMD-RT here
+    let mut oracle = MeasuredOracle::with_router(
+        session.problem.clone(),
+        params,
+        engine,
+        session.router("omd")?,
+        99,
+    );
+    // legacy tuning for the measured path: a smaller outer step than the
+    // analytic experiments
+    let alg = registry::allocator_with("omad", &Hyper { eta_alloc: 0.03, ..session.hyper() })?;
 
     // learning phases: report measured serving quality as the learner runs
     let phases = 4usize;
@@ -77,15 +88,20 @@ fn run<E: InferenceEngine>(engine: E, label: &str) {
     println!("allocation spread after learning: {spread:.2} fps");
 
     // cross-check vs the analytic-oracle optimum on the same network
-    let mut rng2 = Rng::seed_from(7);
-    let net2 = topologies::connected_er(15, 0.3, 3, &mut rng2);
-    let p2 = Problem::new(net2, 60.0, CostKind::Exp);
-    let mut exact = jowr::allocation::AnalyticOracle::new(p2, family("log", 3, 60.0).unwrap());
+    let check = Scenario::paper_default()
+        .nodes(15)
+        .link_probability(0.3)
+        .capacity(10.0)
+        .seed(7)
+        .build()?;
+    let mut exact = AnalyticOracle::new(check.problem.clone(), check.utilities()?);
     let exact_u = exact.observe(&lam);
     println!("(analytic-utility cross-check at Λ*: U = {exact_u:.3})");
+    Ok(())
 }
 
-fn main() {
+fn main() -> Result<(), SessionError> {
+    #[cfg(feature = "xla")]
     match jowr::runtime::dnn::XlaEngine::load_default(3) {
         Ok(engine) => {
             println!("loaded AOT DNN artifacts (PJRT CPU)");
@@ -98,11 +114,13 @@ fn main() {
                     v.batch
                 );
             }
-            run(engine, "xla-pjrt (measured DNN latency)");
+            return run(engine, "xla-pjrt (measured DNN latency)");
         }
         Err(e) => {
             println!("artifacts not available ({e:#}); using the analytic engine");
-            run(AnalyticEngine::new(3, 5), "analytic FLOPs model");
         }
     }
+    #[cfg(not(feature = "xla"))]
+    println!("built without the xla feature; using the analytic engine");
+    run(AnalyticEngine::new(3, 5), "analytic FLOPs model")
 }

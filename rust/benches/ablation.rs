@@ -6,48 +6,60 @@
 //!    at comparable per-iteration budgets (the paper's Remark 2).
 //! 3. **Cost family** — convergence across exp / M/M/1 / linear / cubic
 //!    link costs (the model's generality claim, §II-D).
+//!
+//! All solver variants come from the registry (`omd`, `omd-fixed`, `gp`)
+//! with per-ablation hyper-parameter overrides.
 
-use jowr::config::ExperimentConfig;
 use jowr::prelude::*;
-use jowr::routing::Router;
-use jowr::util::rng::Rng;
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let iters = if quick { 50 } else { 200 };
-    let cfg = ExperimentConfig::paper_default();
-    let mut rng = Rng::seed_from(cfg.seed);
-    let problem = cfg.build_problem(&mut rng);
-    let lam = problem.uniform_allocation();
-    let opt = OptRouter::new().solve(&problem, &lam);
+    let session = Scenario::paper_default().build().expect("scenario");
+    let lam = session.uniform_allocation();
+    let opt = OptRouter::new().solve(&session.problem, &lam);
     println!("OPT reference cost: {:.4}\n", opt.cost);
 
     println!("--- ablation 1: step-size policy (final cost after {iters} iters) ---");
-    let adaptive = OmdRouter::new(0.5).solve(&problem, &lam, iters);
-    println!("{:<28} {:>12.4}  (gap {:.2e})", "adaptive eta=0.5 (ships)", adaptive.cost,
-             rel(adaptive.cost, opt.cost));
+    let adaptive = session.routing_run("omd", iters).unwrap().finish();
+    println!(
+        "{:<28} {:>12.4}  (gap {:.2e})",
+        "adaptive eta=0.5 (ships)",
+        adaptive.objective,
+        rel(adaptive.objective, opt.cost)
+    );
     for eta in [0.5, 0.1, 0.02] {
-        let fixed = OmdRouter::fixed(eta).solve(&problem, &lam, iters);
-        println!("{:<28} {:>12.4}  (gap {:.2e})", format!("fixed eta={eta}"), fixed.cost,
-                 rel(fixed.cost, opt.cost));
+        let h = Hyper { eta_routing: eta, ..session.hyper() };
+        let router = registry::router_with("omd-fixed", &h).expect("registry omd-fixed");
+        let fixed = RoutingRun::new(&session.problem, router, lam.clone(), iters).finish();
+        println!(
+            "{:<28} {:>12.4}  (gap {:.2e})",
+            format!("fixed eta={eta}"),
+            fixed.objective,
+            rel(fixed.objective, opt.cost)
+        );
     }
     assert!(
-        rel(adaptive.cost, opt.cost) < 0.02,
+        rel(adaptive.objective, opt.cost) < 0.02,
         "adaptive policy must stay near OPT"
     );
 
     println!("\n--- ablation 2: geometry (cost after 10 iterations) ---");
-    let omd10 = OmdRouter::new(0.5).solve(&problem, &lam, 10);
-    println!("{:<28} {:>12.4}", "OMD (entropic mirror)", omd10.cost);
+    let omd10 = session.routing_run("omd", 10).unwrap().finish();
+    println!("{:<28} {:>12.4}", "OMD (entropic mirror)", omd10.objective);
+    let gp_cost = |eta: f64| -> f64 {
+        let h = Hyper { eta_gp: eta, ..session.hyper() };
+        let router = registry::router_with("gp", &h).expect("registry gp");
+        RoutingRun::new(&session.problem, router, lam.clone(), 10).finish().objective
+    };
     for eta in [0.01, 0.002, 0.0005] {
-        let gp10 = GpRouter::new(eta).solve(&problem, &lam, 10);
-        println!("{:<28} {:>12.4}", format!("GP (euclidean, eta={eta})"), gp10.cost);
+        println!("{:<28} {:>12.4}", format!("GP (euclidean, eta={eta})"), gp_cost(eta));
     }
     // robustness claim: a *single untuned* OMD beats most GP step choices;
     // only a per-instance-tuned GP can be competitive early
     let beaten = [0.01, 0.002, 0.0005]
         .iter()
-        .filter(|&&e| GpRouter::new(e).solve(&problem, &lam, 10).cost >= omd10.cost - 1e-9)
+        .filter(|&&e| gp_cost(e) >= omd10.objective - 1e-9)
         .count();
     assert!(
         beaten >= 2,
@@ -56,20 +68,17 @@ fn main() {
 
     println!("\n--- ablation 3: cost families (OMD convergence) ---");
     for kind in [CostKind::Exp, CostKind::Queue, CostKind::Linear, CostKind::Cubic] {
-        let mut rng = Rng::seed_from(cfg.seed);
-        let mut c2 = cfg.clone();
-        c2.cost = kind;
-        let p = c2.build_problem(&mut rng);
-        let lam = p.uniform_allocation();
-        let sol = OmdRouter::new(0.3).solve(&p, &lam, iters);
+        let s = Scenario::paper_default().cost(kind).eta_routing(0.3).build().expect("scenario");
+        let mut traj = Trajectory::default();
+        let sol = s.routing_run("omd", iters).unwrap().observe(&mut traj).finish();
         println!(
             "{:<28} {:>12.4} -> {:>12.4}  ({} iters)",
             format!("{kind:?}"),
-            sol.trajectory[0],
-            sol.cost,
+            traj.values[0],
+            sol.objective,
             sol.iterations
         );
-        assert!(sol.cost <= sol.trajectory[0] + 1e-9, "{kind:?} did not improve");
+        assert!(sol.objective <= traj.values[0] + 1e-9, "{kind:?} did not improve");
     }
     println!("\nablation OK");
 }

@@ -16,7 +16,7 @@ fn main() {
     }
     let iters = if quick { 15 } else { 60 };
     println!("=== fig10: GS-OMA under 4 unknown utility families ({iters} outer iters) ===");
-    let s = experiments::fig10(&cfg, iters);
+    let s = experiments::fig10(&cfg, iters).expect("fig10 scenario");
     for fam in FAMILIES {
         let tr = s.get(fam).unwrap();
         let (first, last) = (tr[0], *tr.last().unwrap());

@@ -19,7 +19,8 @@ fn main() {
     let iters = if quick { 30 } else { 100 };
     let change_at = iters / 2;
     println!("=== fig11: nested vs single loop (topology change at {change_at}) ===");
-    let (s, nested_routing, single_routing) = experiments::fig11(&cfg, iters, change_at);
+    let (s, nested_routing, single_routing) =
+        experiments::fig11(&cfg, iters, change_at).expect("fig11 scenario");
     let nested = s.get("nested_loop").unwrap();
     let single = s.get("single_loop").unwrap();
     // both settle to comparable utility before the change

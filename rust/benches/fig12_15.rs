@@ -14,7 +14,7 @@ fn main() {
     let iters = if quick { 30 } else { 100 };
     println!("=== fig12-15: named topologies ({iters} iters) ===");
     experiments::table2();
-    let results = experiments::fig12_15(&cfg, iters);
+    let results = experiments::fig12_15(&cfg, iters).expect("fig12_15 scenario");
     assert_eq!(results.len(), 4);
     for (name, s, opt_cost) in &results {
         let omd = s.get("omd_rt").unwrap();

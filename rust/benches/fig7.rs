@@ -13,7 +13,7 @@ fn main() {
     let cfg = ExperimentConfig::paper_default();
     let iters = if quick { 30 } else { 200 };
     println!("=== fig7: routing convergence (ER(25,0.2), {iters} iters) ===");
-    let (s, opt_cost) = experiments::fig7(&cfg, iters);
+    let (s, opt_cost) = experiments::fig7(&cfg, iters).expect("fig7 scenario");
     let omd = s.get("omd_rt").unwrap();
     let sgp = s.get("sgp").unwrap();
     // paper-shape assertions

@@ -13,7 +13,7 @@ fn main() {
     let cfg = ExperimentConfig::paper_default();
     let sizes: &[usize] = if quick { &[15, 20] } else { &[20, 25, 30, 35, 40] };
     println!("=== fig8/9: cost + running time vs network size ===");
-    let rows = experiments::fig8_9(&cfg, sizes, 50);
+    let rows = experiments::fig8_9(&cfg, sizes, 50).expect("fig8_9 scenario");
     for r in &rows {
         assert!(r.cost_opt <= r.cost_omd + 1e-6, "OPT must lower-bound OMD at n={}", r.n);
         let gap = (r.cost_omd - r.cost_opt) / r.cost_opt;

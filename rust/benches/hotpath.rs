@@ -5,24 +5,19 @@
 //! the native rust mirror/routing step against the AOT-compiled XLA
 //! artifacts when `artifacts/` is present. Feeds EXPERIMENTS.md §Perf.
 
-use jowr::config::ExperimentConfig;
 use jowr::model::flow::{self, Phi};
 use jowr::prelude::*;
 use jowr::routing::marginal;
-use jowr::routing::Router;
 use jowr::util::bench::Bencher;
-use jowr::util::rng::Rng;
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let mut b = if quick { Bencher::quick() } else { Bencher::default() };
 
     for &n in &[25usize, 40] {
-        let mut cfg = ExperimentConfig::paper_default();
-        cfg.n_nodes = n;
-        let mut rng = Rng::seed_from(cfg.seed);
-        let problem = cfg.build_problem(&mut rng);
-        let lam = problem.uniform_allocation();
+        let session = Scenario::paper_default().nodes(n).build().expect("scenario");
+        let problem = &session.problem;
+        let lam = session.uniform_allocation();
         let phi = Phi::uniform(&problem.net);
         let t = flow::node_rates(&problem.net, &phi, &lam);
         let flows = flow::edge_flows(&problem.net, &phi, &t);
@@ -38,32 +33,34 @@ fn main() {
             marginal::compute(&problem.net, problem.cost, &phi, &flows)
         });
         b.bench(&format!("n{n}/omd_full_iteration"), || {
-            let mut r = OmdRouter::new(0.5);
+            // registry-built router, one streaming iteration
+            let mut r = session.router("omd").expect("registry omd");
             let mut p = phi.clone();
-            r.step(&problem, &lam, &mut p);
+            r.step(problem, &lam, &mut p);
             p
         });
         b.bench(&format!("n{n}/sgp_full_iteration"), || {
-            let mut r = SgpRouter::new();
+            let mut r = session.router("sgp").expect("registry sgp");
             let mut p = phi.clone();
-            r.step(&problem, &lam, &mut p);
+            r.step(problem, &lam, &mut p);
             p
         });
 
         // native vs XLA ablation (skipped gracefully without artifacts)
+        #[cfg(feature = "xla")]
         match jowr::runtime::XlaRuntime::try_default() {
             Some(mut rt) => {
-                match jowr::runtime::routing_step::DenseNet::build(&rt, &problem) {
+                match jowr::runtime::routing_step::DenseNet::build(&rt, problem) {
                     Ok(dense) => {
                         // warm compile
                         let mut p = phi.clone();
                         let _ = jowr::runtime::routing_step::routing_step_xla(
-                            &mut rt, &dense, &problem, &mut p, &lam, 0.5,
+                            &mut rt, &dense, problem, &mut p, &lam, 0.5,
                         );
                         b.bench(&format!("n{n}/xla_routing_step"), || {
                             let mut p = phi.clone();
                             jowr::runtime::routing_step::routing_step_xla(
-                                &mut rt, &dense, &problem, &mut p, &lam, 0.5,
+                                &mut rt, &dense, problem, &mut p, &lam, 0.5,
                             )
                             .expect("xla routing step")
                         });
@@ -73,6 +70,8 @@ fn main() {
             }
             None => println!("(artifacts/ not built — skipping XLA ablation)"),
         }
+        #[cfg(not(feature = "xla"))]
+        println!("(built without the xla feature — skipping XLA ablation)");
     }
 
     // summary table

@@ -10,7 +10,7 @@
 //! moving (line 10).
 
 use super::project::project_capped_simplex;
-use super::{mirror_ascent_update, AllocationState, Allocator, UtilityOracle};
+use super::{mirror_ascent_update, Allocator, UtilityOracle};
 
 #[derive(Clone, Debug)]
 pub struct GsOma {
@@ -26,33 +26,6 @@ pub struct GsOma {
 impl GsOma {
     pub fn new(delta: f64, eta: f64) -> Self {
         GsOma { delta, eta, stop_tol: 1e-9 }
-    }
-
-    /// One outer iteration: sample 2W observations, estimate the gradient,
-    /// update + project. Returns (new Λ, gradient estimate).
-    pub fn outer_step(
-        &self,
-        oracle: &mut dyn UtilityOracle,
-        lam: &[f64],
-    ) -> (Vec<f64>, Vec<f64>) {
-        let w_cnt = lam.len();
-        let total = oracle.total_rate();
-        let mut grad = vec![0.0; w_cnt];
-        for w in 0..w_cnt {
-            // Λ±(t): perturb coordinate w, renormalizing the rest so the
-            // probe stays on the Σ=λ simplex (the flow model requires exact
-            // conservation; the ±δ probes shift mass to/from the others).
-            let up = perturb(lam, w, self.delta, total);
-            let dn = perturb(lam, w, -self.delta, total);
-            let u_plus = oracle.observe(&up);
-            let u_minus = oracle.observe(&dn);
-            grad[w] = (u_plus - u_minus) / (2.0 * self.delta);
-        }
-        let mut next = lam.to_vec();
-        mirror_ascent_update(&mut next, &grad, self.eta, total);
-        let next =
-            project_capped_simplex(&next, total, self.delta, total - self.delta);
-        (next, grad)
     }
 }
 
@@ -87,36 +60,30 @@ impl Allocator for GsOma {
         "GS-OMA"
     }
 
-    fn run(&mut self, oracle: &mut dyn UtilityOracle, max_outer: usize) -> AllocationState {
-        let t0 = std::time::Instant::now();
-        let w_cnt = oracle.n_versions();
+    /// One outer iteration: sample 2W observations, estimate the gradient,
+    /// update + project. Returns (new Λ, gradient estimate).
+    fn outer_step(&self, oracle: &mut dyn UtilityOracle, lam: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        let w_cnt = lam.len();
         let total = oracle.total_rate();
-        let mut lam = vec![total / w_cnt as f64; w_cnt];
-        let mut trajectory = Vec::with_capacity(max_outer);
-        let mut iterations = 0;
-        for _ in 0..max_outer {
-            iterations += 1;
-            // trajectory point: utility observed at the iterate itself
-            trajectory.push(oracle.observe(&lam));
-            let (next, _grad) = self.outer_step(oracle, &lam);
-            let moved = next
-                .iter()
-                .zip(&lam)
-                .map(|(a, b)| (a - b).abs())
-                .fold(0.0f64, f64::max);
-            lam = next;
-            if moved < self.stop_tol {
-                break;
-            }
+        let mut grad = vec![0.0; w_cnt];
+        for w in 0..w_cnt {
+            // Λ±(t): perturb coordinate w, renormalizing the rest so the
+            // probe stays on the Σ=λ simplex (the flow model requires exact
+            // conservation; the ±δ probes shift mass to/from the others).
+            let up = perturb(lam, w, self.delta, total);
+            let dn = perturb(lam, w, -self.delta, total);
+            let u_plus = oracle.observe(&up);
+            let u_minus = oracle.observe(&dn);
+            grad[w] = (u_plus - u_minus) / (2.0 * self.delta);
         }
-        trajectory.push(oracle.observe(&lam));
-        AllocationState {
-            lam,
-            trajectory,
-            iterations,
-            routing_iterations: oracle.routing_iterations(),
-            elapsed_s: t0.elapsed().as_secs_f64(),
-        }
+        let mut next = lam.to_vec();
+        mirror_ascent_update(&mut next, &grad, self.eta, total);
+        let next = project_capped_simplex(&next, total, self.delta, total - self.delta);
+        (next, grad)
+    }
+
+    fn stop_tol(&self) -> f64 {
+        self.stop_tol
     }
 }
 

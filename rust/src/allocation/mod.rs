@@ -33,12 +33,54 @@ pub struct AllocationState {
 
 /// A workload allocation algorithm operating against an opaque utility
 /// oracle (the only window onto the unknown utility functions).
+///
+/// Implementors provide the per-iteration [`Allocator::outer_step`]; the
+/// iteration loop itself (shared by GS-OMA and OMAD, and by the streaming
+/// [`crate::session::AllocationRun`]) is the provided [`Allocator::run`].
 pub trait Allocator {
     fn name(&self) -> &'static str;
 
+    /// One outer iteration: estimate the utility gradient by sampling the
+    /// oracle, update + project Λ. Returns `(next Λ, gradient estimate)`.
+    fn outer_step(&self, oracle: &mut dyn UtilityOracle, lam: &[f64]) -> (Vec<f64>, Vec<f64>);
+
+    /// Stop when `‖Λ^{t+1} − Λ^t‖_∞` falls below this (the paper's
+    /// exact-equality stop, relaxed to floating point).
+    fn stop_tol(&self) -> f64;
+
     /// Run up to `max_outer` outer iterations from the paper's uniform
     /// initializer `Λ¹ = (λ/W)·1`.
-    fn run(&mut self, oracle: &mut dyn UtilityOracle, max_outer: usize) -> AllocationState;
+    fn run(&mut self, oracle: &mut dyn UtilityOracle, max_outer: usize) -> AllocationState {
+        let t0 = std::time::Instant::now();
+        let w_cnt = oracle.n_versions();
+        let total = oracle.total_rate();
+        let mut lam = vec![total / w_cnt as f64; w_cnt];
+        let mut trajectory = Vec::with_capacity(max_outer);
+        let mut iterations = 0;
+        for _ in 0..max_outer {
+            iterations += 1;
+            // trajectory point: utility observed at the iterate itself
+            trajectory.push(oracle.observe(&lam));
+            let (next, _grad) = self.outer_step(&mut *oracle, &lam);
+            let moved = next
+                .iter()
+                .zip(&lam)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f64, f64::max);
+            lam = next;
+            if moved < self.stop_tol() {
+                break;
+            }
+        }
+        trajectory.push(oracle.observe(&lam));
+        AllocationState {
+            lam,
+            trajectory,
+            iterations,
+            routing_iterations: oracle.routing_iterations(),
+            elapsed_s: t0.elapsed().as_secs_f64(),
+        }
+    }
 }
 
 /// Online mirror ascent update on the λ-scaled simplex (paper eq. 10).

@@ -9,7 +9,7 @@
 
 use super::gsoma::perturb;
 use super::project::project_capped_simplex;
-use super::{mirror_ascent_update, AllocationState, Allocator, UtilityOracle};
+use super::{mirror_ascent_update, Allocator, UtilityOracle};
 
 #[derive(Clone, Debug)]
 pub struct Omad {
@@ -25,13 +25,15 @@ impl Omad {
     pub fn new(delta: f64, eta_outer: f64) -> Self {
         Omad { delta, eta_outer, stop_tol: 1e-10 }
     }
+}
+
+impl Allocator for Omad {
+    fn name(&self) -> &'static str {
+        "OMAD"
+    }
 
     /// One single-loop iteration against the (stateful) oracle.
-    pub fn outer_step(
-        &self,
-        oracle: &mut dyn UtilityOracle,
-        lam: &[f64],
-    ) -> (Vec<f64>, Vec<f64>) {
+    fn outer_step(&self, oracle: &mut dyn UtilityOracle, lam: &[f64]) -> (Vec<f64>, Vec<f64>) {
         let total = oracle.total_rate();
         let w_cnt = lam.len();
         let mut grad = vec![0.0; w_cnt];
@@ -46,46 +48,12 @@ impl Omad {
         }
         let mut next = lam.to_vec();
         mirror_ascent_update(&mut next, &grad, self.eta_outer, total);
-        let next =
-            project_capped_simplex(&next, total, self.delta, total - self.delta);
+        let next = project_capped_simplex(&next, total, self.delta, total - self.delta);
         (next, grad)
     }
-}
 
-impl Allocator for Omad {
-    fn name(&self) -> &'static str {
-        "OMAD"
-    }
-
-    fn run(&mut self, oracle: &mut dyn UtilityOracle, max_outer: usize) -> AllocationState {
-        let t0 = std::time::Instant::now();
-        let w_cnt = oracle.n_versions();
-        let total = oracle.total_rate();
-        let mut lam = vec![total / w_cnt as f64; w_cnt];
-        let mut trajectory = Vec::with_capacity(max_outer);
-        let mut iterations = 0;
-        for _ in 0..max_outer {
-            iterations += 1;
-            trajectory.push(oracle.observe(&lam));
-            let (next, _grad) = self.outer_step(oracle, &lam);
-            let moved = next
-                .iter()
-                .zip(&lam)
-                .map(|(a, b)| (a - b).abs())
-                .fold(0.0f64, f64::max);
-            lam = next;
-            if moved < self.stop_tol {
-                break;
-            }
-        }
-        trajectory.push(oracle.observe(&lam));
-        AllocationState {
-            lam,
-            trajectory,
-            iterations,
-            routing_iterations: oracle.routing_iterations(),
-            elapsed_s: t0.elapsed().as_secs_f64(),
-        }
+    fn stop_tol(&self) -> f64 {
+        self.stop_tol
     }
 }
 

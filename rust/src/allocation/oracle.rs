@@ -38,6 +38,12 @@ pub trait UtilityOracle {
     /// Notify the oracle that the network topology changed (Fig. 11's
     /// perturbation at outer iteration 50). Default: no-op.
     fn on_topology_change(&mut self, _problem: &Problem) {}
+
+    /// The oracle's persistent routing state, when it keeps one (single-step
+    /// and measured oracles do; the run-to-convergence oracle does not).
+    fn current_phi(&self) -> Option<&Phi> {
+        None
+    }
 }
 
 /// Assumption 4's oracle 𝔒 for the **nested loop**: every observation runs
@@ -174,6 +180,10 @@ impl UtilityOracle for SingleStepOracle {
         // routing state re-initialized on the new topology (the Fig. 11
         // "worse initial point" effect for the single loop)
         self.phi = Phi::uniform(&self.problem.net);
+    }
+
+    fn current_phi(&self) -> Option<&Phi> {
+        Some(&self.phi)
     }
 }
 

@@ -12,6 +12,7 @@ use crate::graph::augmented::{AugmentedNet, Placement};
 use crate::graph::topologies;
 use crate::model::cost::CostKind;
 use crate::model::Problem;
+use crate::session::SessionError;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -62,15 +63,17 @@ impl ExperimentConfig {
     }
 
     /// Build the problem instance (network + rate + cost) for this config.
-    pub fn build_problem(&self, rng: &mut Rng) -> Problem {
+    /// Fails cleanly on an unknown topology name instead of panicking; use
+    /// [`crate::session::Scenario`] for full up-front validation.
+    pub fn build_problem(&self, rng: &mut Rng) -> Result<Problem, SessionError> {
         let real = match self.topology.as_str() {
             "er" => topologies::connected_er_graph(self.n_nodes, self.p_link, self.cap_mean, rng),
             name => topologies::by_name(name, self.cap_mean, rng)
-                .unwrap_or_else(|| panic!("unknown topology '{name}'")),
+                .ok_or_else(|| SessionError::UnknownTopology { name: name.to_string() })?,
         };
         let placement = Placement::random(real.n_nodes(), self.n_versions, rng);
         let net = AugmentedNet::build(&real, &placement, self.cap_mean, rng);
-        Problem::new(net, self.total_rate, self.cost)
+        Ok(Problem::new(net, self.total_rate, self.cost))
     }
 
     /// Parse from JSON text; missing keys fall back to `paper_default`.
@@ -110,8 +113,11 @@ impl ExperimentConfig {
         if let Some(x) = j.get("delta").as_f64() {
             c.delta = x;
         }
-        if let Some(x) = j.get("seed").as_f64() {
-            c.seed = x as u64;
+        if !matches!(j.get("seed"), Json::Null) {
+            c.seed = j
+                .get("seed")
+                .as_u64()
+                .ok_or_else(|| format!("bad seed '{}' (not a u64)", j.get("seed")))?;
         }
         Ok(c)
     }
@@ -142,7 +148,9 @@ impl ExperimentConfig {
             ("eta_routing", Json::from(self.eta_routing)),
             ("eta_alloc", Json::from(self.eta_alloc)),
             ("delta", Json::from(self.delta)),
-            ("seed", Json::from(self.seed as f64)),
+            // u64-safe: seeds beyond 2^53 are not representable as JSON
+            // numbers and round-trip as decimal strings
+            ("seed", Json::from_u64(self.seed)),
         ])
     }
 }
@@ -155,10 +163,19 @@ mod tests {
     fn default_builds() {
         let c = ExperimentConfig::paper_default();
         let mut rng = Rng::seed_from(c.seed);
-        let p = c.build_problem(&mut rng);
+        let p = c.build_problem(&mut rng).unwrap();
         assert_eq!(p.n_versions(), 3);
         assert_eq!(p.total_rate, 60.0);
         assert_eq!(p.net.n_real, 25);
+    }
+
+    #[test]
+    fn unknown_topology_is_a_clean_error() {
+        let mut c = ExperimentConfig::paper_default();
+        c.topology = "hypercube".into();
+        let mut rng = Rng::seed_from(1);
+        let err = c.build_problem(&mut rng).unwrap_err();
+        assert!(err.to_string().contains("hypercube"), "{err}");
     }
 
     #[test]
@@ -186,12 +203,34 @@ mod tests {
         c.topology = "abilene".into();
         c.cap_mean = 15.0;
         let mut rng = Rng::seed_from(1);
-        let p = c.build_problem(&mut rng);
+        let p = c.build_problem(&mut rng).unwrap();
         assert_eq!(p.net.n_real, 11);
     }
 
     #[test]
     fn bad_cost_rejected() {
         assert!(ExperimentConfig::from_json(r#"{"cost": "nope"}"#).is_err());
+    }
+
+    #[test]
+    fn large_seed_roundtrips_losslessly() {
+        // seeds >= 2^53 used to be corrupted by the f64 JSON path
+        for seed in [u64::MAX, (1u64 << 53) + 1, 2u64.pow(60) + 12345, 42] {
+            let mut c = ExperimentConfig::paper_default();
+            c.seed = seed;
+            let text = c.to_json().to_string();
+            let c2 = ExperimentConfig::from_json(&text).unwrap();
+            assert_eq!(c2.seed, seed, "json was: {text}");
+        }
+    }
+
+    #[test]
+    fn numeric_and_string_seeds_both_parse() {
+        let c = ExperimentConfig::from_json(r#"{"seed": 7}"#).unwrap();
+        assert_eq!(c.seed, 7);
+        let c = ExperimentConfig::from_json(r#"{"seed": "18446744073709551615"}"#).unwrap();
+        assert_eq!(c.seed, u64::MAX);
+        assert!(ExperimentConfig::from_json(r#"{"seed": -3}"#).is_err());
+        assert!(ExperimentConfig::from_json(r#"{"seed": 1.5}"#).is_err());
     }
 }

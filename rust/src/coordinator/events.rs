@@ -3,6 +3,7 @@
 
 use crate::config::ExperimentConfig;
 use crate::model::Problem;
+use crate::session::SessionError;
 use crate::util::rng::Rng;
 
 /// A scheduled network change at a given outer iteration.
@@ -42,7 +43,13 @@ impl EventSchedule {
     }
 
     /// Apply one event to a problem, producing the new problem instance.
-    pub fn apply(cfg: &ExperimentConfig, problem: &Problem, ev: &NetworkEvent) -> Problem {
+    /// Fails only when a rewire's config has become invalid (e.g. an
+    /// unknown topology name).
+    pub fn apply(
+        cfg: &ExperimentConfig,
+        problem: &Problem,
+        ev: &NetworkEvent,
+    ) -> Result<Problem, SessionError> {
         match ev {
             NetworkEvent::Rewire { seed } => {
                 let mut rng = Rng::seed_from(*seed);
@@ -56,7 +63,7 @@ impl EventSchedule {
                 }
                 net.graph = g;
                 net.rebuild_session_dags();
-                Problem::new(net, problem.total_rate, problem.cost)
+                Ok(Problem::new(net, problem.total_rate, problem.cost))
             }
         }
     }
@@ -82,8 +89,8 @@ mod tests {
     fn rewire_changes_topology() {
         let cfg = ExperimentConfig::paper_default();
         let mut rng = Rng::seed_from(cfg.seed);
-        let p = cfg.build_problem(&mut rng);
-        let p2 = EventSchedule::apply(&cfg, &p, &NetworkEvent::Rewire { seed: 777 });
+        let p = cfg.build_problem(&mut rng).unwrap();
+        let p2 = EventSchedule::apply(&cfg, &p, &NetworkEvent::Rewire { seed: 777 }).unwrap();
         assert_eq!(p2.total_rate, p.total_rate);
         // almost surely a different edge set
         assert!(
@@ -101,8 +108,9 @@ mod tests {
     fn capacity_scale_preserves_structure() {
         let cfg = ExperimentConfig::paper_default();
         let mut rng = Rng::seed_from(1);
-        let p = cfg.build_problem(&mut rng);
-        let p2 = EventSchedule::apply(&cfg, &p, &NetworkEvent::CapacityScale { factor: 2.0 });
+        let p = cfg.build_problem(&mut rng).unwrap();
+        let p2 =
+            EventSchedule::apply(&cfg, &p, &NetworkEvent::CapacityScale { factor: 2.0 }).unwrap();
         assert_eq!(p2.net.graph.n_edges(), p.net.graph.n_edges());
         assert_eq!(p2.cost, CostKind::Exp);
         for (a, b) in p2.net.graph.edges().iter().zip(p.net.graph.edges()) {

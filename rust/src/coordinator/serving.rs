@@ -320,7 +320,7 @@ pub struct MeasuredOracle<E: InferenceEngine> {
     pub problem: Problem,
     pub params: ServeParams,
     pub engine: E,
-    router: OmdRouter,
+    router: Box<dyn Router>,
     phi: Phi,
     rng: Rng,
     routing_iters: usize,
@@ -330,13 +330,28 @@ pub struct MeasuredOracle<E: InferenceEngine> {
 }
 
 impl<E: InferenceEngine> MeasuredOracle<E> {
+    /// Default wiring: OMD-RT with step size `eta` (the paper's serving
+    /// setup).
     pub fn new(problem: Problem, params: ServeParams, engine: E, eta: f64, seed: u64) -> Self {
+        Self::with_router(problem, params, engine, Box::new(OmdRouter::new(eta)), seed)
+    }
+
+    /// Serve with any registered routing algorithm (see
+    /// [`crate::session::registry`]): the serving loop advances it one
+    /// iteration per observation, whatever its update rule.
+    pub fn with_router(
+        problem: Problem,
+        params: ServeParams,
+        engine: E,
+        router: Box<dyn Router>,
+        seed: u64,
+    ) -> Self {
         let phi = Phi::uniform(&problem.net);
         MeasuredOracle {
             problem,
             params,
             engine,
-            router: OmdRouter::new(eta),
+            router,
             phi,
             rng: Rng::seed_from(seed),
             routing_iters: 0,
@@ -387,6 +402,10 @@ impl<E: InferenceEngine> UtilityOracle for MeasuredOracle<E> {
     fn on_topology_change(&mut self, problem: &Problem) {
         self.problem = problem.clone();
         self.phi = Phi::uniform(&self.problem.net);
+    }
+
+    fn current_phi(&self) -> Option<&Phi> {
+        Some(&self.phi)
     }
 }
 

@@ -2,20 +2,23 @@
 //! evaluation (Section IV + Appendix F). Each regenerates the figure's data
 //! (CSV under `results/`), prints an ASCII rendition, and returns the raw
 //! series for the bench targets and tests.
+//!
+//! All harnesses run on the [`crate::session`] API: scenarios are built
+//! (and validated) with [`Scenario`], solvers come from the registry by
+//! name, and trajectories are recorded by [`Trajectory`] observers on
+//! streaming runs — no harness constructs algorithms or dispatches on
+//! algorithm names by hand.
 
 pub mod asciiplot;
 
-use crate::allocation::{
-    gsoma::GsOma, omad::Omad, Allocator, AnalyticOracle, SingleStepOracle, UtilityOracle,
-};
+use crate::allocation::{Allocator, UtilityOracle};
 use crate::config::ExperimentConfig;
 use crate::coordinator::events::{EventSchedule, NetworkEvent};
 use crate::graph::topologies;
 use crate::metrics::SeriesSet;
-use crate::model::utility::family;
 use crate::model::Problem;
-use crate::routing::{omd::OmdRouter, opt::OptRouter, sgp::SgpRouter, Router};
-use crate::util::rng::Rng;
+use crate::routing::{omd::OmdRouter, opt::OptRouter, Router};
+use crate::session::{registry, Scenario, SessionError, Trajectory};
 
 /// Where CSVs land (`results/figN.csv`).
 pub fn results_dir() -> std::path::PathBuf {
@@ -33,18 +36,20 @@ fn save(set: &SeriesSet, name: &str) {
 
 /// **Fig. 7** — OMD-RT vs SGP convergence on Connected-ER(25, 0.2) with the
 /// centralized OPT line. Returns (series, opt_cost).
-pub fn fig7(cfg: &ExperimentConfig, iters: usize) -> (SeriesSet, f64) {
-    let mut rng = Rng::seed_from(cfg.seed);
-    let problem = cfg.build_problem(&mut rng);
-    let lam = problem.uniform_allocation();
+pub fn fig7(cfg: &ExperimentConfig, iters: usize) -> Result<(SeriesSet, f64), SessionError> {
+    let session = Scenario::from_config(cfg.clone()).build()?;
+    let lam = session.uniform_allocation();
 
-    let omd = OmdRouter::new(cfg.eta_routing).solve(&problem, &lam, iters);
-    let sgp = SgpRouter::new().solve(&problem, &lam, iters);
-    let opt = OptRouter::new().solve(&problem, &lam);
+    let mut omd = Trajectory::default();
+    session.routing_run("omd", iters)?.observe(&mut omd).finish();
+    let mut sgp = Trajectory::default();
+    session.routing_run("sgp", iters)?.observe(&mut sgp).finish();
+    // the OPT reference line keeps the exact path-flow objective
+    let opt = OptRouter::new().solve(&session.problem, &lam);
 
     let mut s = SeriesSet::new();
-    s.set("omd_rt", pad_to(&omd.trajectory, iters + 1));
-    s.set("sgp", pad_to(&sgp.trajectory, iters + 1));
+    s.set("omd_rt", pad_to(&omd.values, iters + 1));
+    s.set("sgp", pad_to(&sgp.values, iters + 1));
     s.set("opt", vec![opt.cost; iters + 1]);
     save(&s, "fig7.csv");
     println!(
@@ -60,7 +65,7 @@ pub fn fig7(cfg: &ExperimentConfig, iters: usize) -> (SeriesSet, f64) {
             18,
         )
     );
-    (s, opt.cost)
+    Ok((s, opt.cost))
 }
 
 /// Extend a (possibly early-converged) trajectory to `len` by holding the
@@ -88,25 +93,29 @@ pub struct SizeRow {
 
 /// **Figs. 8 + 9** — final cost and wall-clock vs network size
 /// (n ∈ {20,25,30,35,40}, 50 routing iterations each, per the paper).
-pub fn fig8_9(cfg: &ExperimentConfig, sizes: &[usize], iters: usize) -> Vec<SizeRow> {
+pub fn fig8_9(
+    cfg: &ExperimentConfig,
+    sizes: &[usize],
+    iters: usize,
+) -> Result<Vec<SizeRow>, SessionError> {
     let mut rows = Vec::new();
     println!(
         "{:>4} {:>12} {:>12} {:>12} {:>12} {:>12} {:>12}",
         "n", "cost(OMD)", "cost(SGP)", "cost(OPT)", "t(OMD)s", "t(SGP)s", "t(OPT)s"
     );
     for &n in sizes {
-        let mut c = cfg.clone();
-        c.n_nodes = n;
-        let mut rng = Rng::seed_from(cfg.seed + n as u64);
-        let problem = c.build_problem(&mut rng);
-        let lam = problem.uniform_allocation();
-        let omd = OmdRouter::new(cfg.eta_routing).solve(&problem, &lam, iters);
-        let sgp = SgpRouter::new().solve(&problem, &lam, iters);
-        let opt = OptRouter::new().solve(&problem, &lam);
+        let session = Scenario::from_config(cfg.clone())
+            .nodes(n)
+            .seed(cfg.seed + n as u64)
+            .build()?;
+        let lam = session.uniform_allocation();
+        let omd = session.routing_run("omd", iters)?.finish();
+        let sgp = session.routing_run("sgp", iters)?.finish();
+        let opt = OptRouter::new().solve(&session.problem, &lam);
         let row = SizeRow {
             n,
-            cost_omd: omd.cost,
-            cost_sgp: sgp.cost,
+            cost_omd: omd.objective,
+            cost_sgp: sgp.objective,
             cost_opt: opt.cost,
             time_omd_s: omd.elapsed_s,
             time_sgp_s: sgp.elapsed_s,
@@ -133,27 +142,24 @@ pub fn fig8_9(cfg: &ExperimentConfig, sizes: &[usize], iters: usize) -> Vec<Size
     s.set("time_sgp_s", rows.iter().map(|r| r.time_sgp_s).collect());
     s.set("time_opt_s", rows.iter().map(|r| r.time_opt_s).collect());
     save(&s, "fig8_9.csv");
-    rows
+    Ok(rows)
 }
 
 /// **Fig. 10** — GS-OMA (nested loop) under the four unknown utility
 /// families. Returns the per-family utility trajectories.
-pub fn fig10(cfg: &ExperimentConfig, outer_iters: usize) -> SeriesSet {
+pub fn fig10(cfg: &ExperimentConfig, outer_iters: usize) -> Result<SeriesSet, SessionError> {
     let mut s = SeriesSet::new();
     for fam in crate::model::utility::FAMILIES {
-        let mut rng = Rng::seed_from(cfg.seed);
-        let problem = cfg.build_problem(&mut rng);
-        let utilities = family(fam, cfg.n_versions, cfg.total_rate).unwrap();
-        let mut oracle = AnalyticOracle::new(problem, utilities);
-        let mut alg = GsOma::new(cfg.delta, cfg.eta_alloc);
-        let st = alg.run(&mut oracle, outer_iters);
-        s.set(fam, pad_to(&st.trajectory, outer_iters + 1));
+        let session = Scenario::from_config(cfg.clone()).utility(fam).build()?;
+        let mut traj = Trajectory::default();
+        let report = session.allocation_run("gsoma", outer_iters)?.observe(&mut traj).finish();
+        s.set(fam, pad_to(&traj.values, outer_iters + 1));
         println!(
             "  {fam:<10} U: {:.4} -> {:.4}  ({} outer iters, {} routing iters)",
-            st.trajectory[0],
-            st.trajectory.last().unwrap(),
-            st.iterations,
-            st.routing_iterations
+            traj.values[0],
+            traj.values.last().unwrap(),
+            report.iterations,
+            report.routing_iterations
         );
     }
     save(&s, "fig10.csv");
@@ -165,7 +171,7 @@ pub fn fig10(cfg: &ExperimentConfig, outer_iters: usize) -> SeriesSet {
         "{}",
         asciiplot::plot("Fig.10 total network utility (4 utility families)", &names, 64, 18)
     );
-    s
+    Ok(s)
 }
 
 /// **Fig. 11** — nested vs single loop with a topology change at
@@ -174,49 +180,35 @@ pub fn fig11(
     cfg: &ExperimentConfig,
     outer_iters: usize,
     change_at: usize,
-) -> (SeriesSet, usize, usize) {
-    let utilities = family(&cfg.utility, cfg.n_versions, cfg.total_rate).unwrap();
+) -> Result<(SeriesSet, usize, usize), SessionError> {
     let schedule =
         EventSchedule::new().at(change_at, NetworkEvent::Rewire { seed: cfg.seed + 1000 });
 
-    let run = |single: bool| -> (Vec<f64>, usize) {
-        let mut rng = Rng::seed_from(cfg.seed);
-        let mut problem = cfg.build_problem(&mut rng);
+    // identical harness for both loops: the registry picks the algorithm,
+    // the session pairs it with its matching oracle
+    let run = |algo: &str| -> Result<(Vec<f64>, usize), SessionError> {
+        let session = Scenario::from_config(cfg.clone()).build()?;
+        let allocator: Box<dyn Allocator> = registry::allocator_with(algo, &session.hyper())?;
+        let mut oracle: Box<dyn UtilityOracle> = session.oracle_for(algo)?;
+        let mut problem = session.problem.clone();
         let total = cfg.total_rate;
         let w = cfg.n_versions;
         let mut lam = vec![total / w as f64; w];
         let mut traj = Vec::with_capacity(outer_iters);
-        if single {
-            let mut oracle = SingleStepOracle::new(problem.clone(), utilities.clone(), cfg.eta_routing);
-            let alg = Omad::new(cfg.delta, cfg.eta_alloc);
-            for t in 0..outer_iters {
-                for ev in schedule.fire(t) {
-                    problem = EventSchedule::apply(cfg, &problem, ev);
-                    oracle.on_topology_change(&problem);
-                }
-                traj.push(crate::allocation::UtilityOracle::observe(&mut oracle, &lam));
-                let (next, _) = alg.outer_step(&mut oracle, &lam);
-                lam = next;
+        for t in 0..outer_iters {
+            for ev in schedule.fire(t) {
+                problem = EventSchedule::apply(cfg, &problem, ev)?;
+                oracle.on_topology_change(&problem);
             }
-            (traj, crate::allocation::UtilityOracle::routing_iterations(&oracle))
-        } else {
-            let mut oracle = AnalyticOracle::new(problem.clone(), utilities.clone());
-            let alg = GsOma::new(cfg.delta, cfg.eta_alloc);
-            for t in 0..outer_iters {
-                for ev in schedule.fire(t) {
-                    problem = EventSchedule::apply(cfg, &problem, ev);
-                    oracle.on_topology_change(&problem);
-                }
-                traj.push(crate::allocation::UtilityOracle::observe(&mut oracle, &lam));
-                let (next, _) = alg.outer_step(&mut oracle, &lam);
-                lam = next;
-            }
-            (traj, crate::allocation::UtilityOracle::routing_iterations(&oracle))
+            traj.push(oracle.observe(&lam));
+            let (next, _) = allocator.outer_step(oracle.as_mut(), &lam);
+            lam = next;
         }
+        Ok((traj, oracle.routing_iterations()))
     };
 
-    let (nested, nested_routing) = run(false);
-    let (single, single_routing) = run(true);
+    let (nested, nested_routing) = run("gsoma")?;
+    let (single, single_routing) = run("omad")?;
     let mut s = SeriesSet::new();
     s.set("nested_loop", nested);
     s.set("single_loop", single);
@@ -237,26 +229,27 @@ pub fn fig11(
         "  routing iterations: nested {nested_routing} vs single {single_routing} ({}x fewer)",
         nested_routing / single_routing.max(1)
     );
-    (s, nested_routing, single_routing)
+    Ok((s, nested_routing, single_routing))
 }
 
 /// **Figs. 12–15** — OMD-RT vs SGP on the four named topologies with
 /// Table II parameters. Returns per-topology series.
-pub fn fig12_15(cfg: &ExperimentConfig, iters: usize) -> Vec<(String, SeriesSet, f64)> {
+pub fn fig12_15(
+    cfg: &ExperimentConfig,
+    iters: usize,
+) -> Result<Vec<(String, SeriesSet, f64)>, SessionError> {
     let mut out = Vec::new();
     for &(name, _n, _e, cbar) in topologies::TABLE2.iter() {
-        let mut c = cfg.clone();
-        c.topology = name.to_string();
-        c.cap_mean = cbar;
-        let mut rng = Rng::seed_from(cfg.seed);
-        let problem = c.build_problem(&mut rng);
-        let lam = problem.uniform_allocation();
-        let omd = OmdRouter::new(cfg.eta_routing).solve(&problem, &lam, iters);
-        let sgp = SgpRouter::new().solve(&problem, &lam, iters);
-        let opt = OptRouter::new().solve(&problem, &lam);
+        let session = Scenario::from_config(cfg.clone()).topology(name).capacity(cbar).build()?;
+        let lam = session.uniform_allocation();
+        let mut omd = Trajectory::default();
+        session.routing_run("omd", iters)?.observe(&mut omd).finish();
+        let mut sgp = Trajectory::default();
+        session.routing_run("sgp", iters)?.observe(&mut sgp).finish();
+        let opt = OptRouter::new().solve(&session.problem, &lam);
         let mut s = SeriesSet::new();
-        s.set("omd_rt", pad_to(&omd.trajectory, iters + 1));
-        s.set("sgp", pad_to(&sgp.trajectory, iters + 1));
+        s.set("omd_rt", pad_to(&omd.values, iters + 1));
+        s.set("sgp", pad_to(&sgp.values, iters + 1));
         s.set("opt", vec![opt.cost; iters + 1]);
         save(&s, &format!("fig12_15_{name}.csv"));
         println!(
@@ -274,7 +267,7 @@ pub fn fig12_15(cfg: &ExperimentConfig, iters: usize) -> Vec<(String, SeriesSet,
         );
         out.push((name.to_string(), s, opt.cost));
     }
-    out
+    Ok(out)
 }
 
 /// **Table II** — verify and print the named-topology parameters.
@@ -282,7 +275,7 @@ pub fn table2() -> Vec<(String, usize, usize, f64)> {
     let mut rows = Vec::new();
     println!("{:<16} {:>5} {:>5} {:>8}", "Topology", "|N|", "|E|", "C̄");
     for &(name, n, e, cbar) in topologies::TABLE2.iter() {
-        let mut rng = Rng::seed_from(1);
+        let mut rng = crate::util::rng::Rng::seed_from(1);
         let g = topologies::by_name(name, cbar, &mut rng).unwrap();
         assert_eq!(g.n_nodes(), n, "{name} |N| mismatch");
         assert_eq!(g.n_edges(), 2 * e, "{name} |E| mismatch");
@@ -327,6 +320,7 @@ pub fn check_stationarity(problem: &Problem, iters: usize, tol: f64) -> bool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
 
     fn quiet_cfg() -> ExperimentConfig {
         let mut c = ExperimentConfig::paper_default();
@@ -336,7 +330,7 @@ mod tests {
 
     #[test]
     fn fig7_shape() {
-        let (s, opt_cost) = fig7(&quiet_cfg(), 15);
+        let (s, opt_cost) = fig7(&quiet_cfg(), 15).unwrap();
         let omd = s.get("omd_rt").unwrap();
         assert_eq!(omd.len(), 16);
         assert!(omd.last().unwrap() >= &opt_cost || (omd.last().unwrap() - opt_cost).abs() < 1e-3);
@@ -346,7 +340,7 @@ mod tests {
 
     #[test]
     fn fig8_9_rows() {
-        let rows = fig8_9(&quiet_cfg(), &[8, 10], 10);
+        let rows = fig8_9(&quiet_cfg(), &[8, 10], 10).unwrap();
         assert_eq!(rows.len(), 2);
         for r in rows {
             assert!(r.cost_opt <= r.cost_omd + 1e-6);
@@ -361,10 +355,18 @@ mod tests {
     }
 
     #[test]
+    fn harnesses_propagate_bad_configs() {
+        let mut c = quiet_cfg();
+        c.topology = "nope".into();
+        assert!(fig7(&c, 3).is_err());
+        assert!(fig10(&c, 2).is_err());
+    }
+
+    #[test]
     fn stationarity_check_works() {
         let cfg = quiet_cfg();
         let mut rng = Rng::seed_from(cfg.seed);
-        let p = cfg.build_problem(&mut rng);
+        let p = cfg.build_problem(&mut rng).unwrap();
         assert!(check_stationarity(&p, 3000, 0.02));
     }
 }

@@ -153,6 +153,12 @@ pub fn geant(cap_mean: f64, rng: &mut Rng) -> DiGraph {
     from_pairs(22, &pairs, cap_mean, rng)
 }
 
+/// Every name accepted by topology construction: the synthetic `"er"`
+/// family (handled by `ExperimentConfig::build_problem`) plus the
+/// [`by_name`] lookups. Keep in sync with the `match` in [`by_name`]; the
+/// session error messages derive their suggestions from this list.
+pub const KNOWN_NAMES: [&str; 6] = ["er", "abilene", "tree", "balanced-tree", "fog", "geant"];
+
 /// Named lookup used by the CLI and the fig12–15 bench.
 pub fn by_name(name: &str, cap_mean: f64, rng: &mut Rng) -> Option<DiGraph> {
     match name {

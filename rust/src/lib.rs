@@ -15,20 +15,51 @@
 //! * **L1 (python/compile/kernels)** — Pallas kernels for the mirror-descent
 //!   update and link-cost evaluation.
 //!
-//! Python never runs at request time: [`runtime`] loads the AOT artifacts
-//! through the PJRT C API (`xla` crate) and the binary is self-contained.
+//! Python never runs at request time: the optional [`runtime`] module
+//! (behind the `xla` cargo feature, which additionally needs the external
+//! `xla` + `anyhow` crates) loads the AOT artifacts through the PJRT C API
+//! so the binary is self-contained.
 //!
-//! Quickstart (see `examples/quickstart.rs`):
+//! ## The session API
+//!
+//! All entry points go through [`session`]: describe a scenario with the
+//! typed [`session::Scenario`] builder, validate it into a
+//! [`session::Session`], and instantiate any registered algorithm *by name*
+//! from the [`session::registry`]. Execution is streaming and step-driven:
+//! a run advances one iteration per `step()`, stop rules decide
+//! termination, and observers record trajectories (see
+//! `examples/quickstart.rs`):
 //!
 //! ```no_run
 //! use jowr::prelude::*;
-//! let mut rng = Rng::seed_from(7);
-//! let net = topologies::connected_er(25, 0.2, 3, &mut rng);
-//! let problem = Problem::new(net, 60.0, CostKind::Exp);
-//! let mut omd = OmdRouter::new(0.1);
-//! let sol = omd.solve(&problem, &problem.uniform_allocation(), 50);
-//! println!("total network cost = {}", sol.cost);
+//!
+//! # fn main() -> Result<(), SessionError> {
+//! // the paper's Section-IV scenario, validated up front
+//! let session = Scenario::paper_default().utility("log").seed(7).build()?;
+//!
+//! // any registered router by name: "omd" | "omd-fixed" | "sgp" | "gp" | "opt"
+//! let mut traj = Trajectory::default();
+//! let report = session.routing_run("omd", 50)?.observe(&mut traj).finish();
+//! println!("total network cost {:.4} -> {:.4}", traj.values[0], report.objective);
+//!
+//! // allocation runs pair the allocator with its matching utility oracle
+//! let report = session.allocation_run("omad", 100)?.finish();
+//! println!("final allocation Λ = {:?} ({:?})", report.lam, report.stop);
+//! # Ok(())
+//! # }
 //! ```
+//!
+//! ### Deprecation path
+//!
+//! Direct construction — `OmdRouter::new(0.1).solve(&problem, &lam, 50)` —
+//! still works and remains the right tool *inside* algorithm code, but it
+//! is deprecated as an application entry point: it bypasses scenario
+//! validation, hard-codes the algorithm choice, and bakes trajectory
+//! collection into the solver. New code should build a
+//! [`session::Scenario`] and drive a [`session::RoutingRun`] /
+//! [`session::AllocationRun`]; the legacy `RoutingState` /
+//! `AllocationState` structs are retained for the distributed coordinator
+//! and will eventually fold into [`session::RunReport`].
 
 pub mod allocation;
 pub mod config;
@@ -38,7 +69,9 @@ pub mod graph;
 pub mod metrics;
 pub mod model;
 pub mod routing;
+#[cfg(feature = "xla")]
 pub mod runtime;
+pub mod session;
 pub mod testkit;
 pub mod util;
 
@@ -54,5 +87,10 @@ pub mod prelude {
     pub use crate::routing::{
         gp::GpRouter, omd::OmdRouter, opt::OptRouter, sgp::SgpRouter, Router, RoutingState,
     };
+    pub use crate::session::run::{
+        AllocationRun, Deadline, MaxIters, Observer, Progress, RoutingRun, RunReport, StepInfo,
+        StopReason, StopRule, Tolerance, ToleranceStrict, Trajectory,
+    };
+    pub use crate::session::{registry, Hyper, Scenario, Session, SessionError};
     pub use crate::util::rng::Rng;
 }

@@ -4,21 +4,23 @@
 //! jowr fig --id 7 [--iters 200] [--seed 42]       regenerate a paper figure
 //! jowr fig --id all                               every figure + table
 //! jowr topo --name abilene | --all                topology stats (Table II)
-//! jowr route [--n 25] [--p 0.2] [--algo omd|sgp|gp|opt] [--iters 50]
-//! jowr allocate [--family log] [--algo gsoma|omad] [--iters 60]
+//! jowr route [--n 25] [--p 0.2] [--algo <router>] [--iters 50]
+//! jowr allocate [--family log] [--algo <allocator>] [--iters 60]
+//! jowr solvers                                    list the solver registry
 //! jowr serve [--sim-time 20] [--iters 40] [--xla] end-to-end serving demo
 //! jowr runtime-check                              AOT artifact smoke test
 //! jowr config --dump                              print the default config
 //! ```
+//!
+//! Algorithm dispatch goes through the solver registry
+//! (`jowr::session::registry`): an unknown `--algo` is a clean error
+//! listing the registered names, never a panic.
 
-use jowr::allocation::{gsoma::GsOma, omad::Omad, Allocator, AnalyticOracle, SingleStepOracle};
 use jowr::config::ExperimentConfig;
 use jowr::coordinator::serving::{AnalyticEngine, MeasuredOracle, ServeParams};
 use jowr::experiments;
 use jowr::graph::topologies;
-use jowr::model::utility::family;
 use jowr::prelude::*;
-use jowr::routing::Router;
 use jowr::util::cli::Args;
 
 fn main() {
@@ -38,6 +40,7 @@ fn main() {
         "route" => cmd_route(&args),
         "dist" => cmd_dist(&args),
         "allocate" => cmd_allocate(&args),
+        "solvers" => cmd_solvers(&args),
         "serve" => cmd_serve(&args),
         "runtime-check" => cmd_runtime_check(&args),
         "config" => cmd_config(&args),
@@ -63,12 +66,15 @@ fn usage() {
          subcommands:\n  \
          fig --id 7|8|9|10|11|12|all    regenerate paper figures\n  \
          topo --name <x> | --all        topology stats (Table II)\n  \
-         route [--algo omd|sgp|gp|opt]  run one routing solve\n  \
+         route [--algo {routers}]\n                                 run one routing solve\n  \
          dist [--rounds 50]             distributed OMD-RT (actors + comm stats)\n  \
-         allocate [--algo gsoma|omad]   run one allocation solve\n  \
-         serve [--xla]                  end-to-end serving demo\n  \
+         allocate [--algo {allocators}]\n                                 run one allocation solve\n  \
+         solvers                        list the solver registry\n  \
+         serve [--xla] [--router omd]   end-to-end serving demo\n  \
          runtime-check                  AOT artifact smoke test\n  \
-         config --dump                  print default config JSON"
+         config --dump                  print default config JSON",
+        routers = registry::router_names().join("|"),
+        allocators = registry::allocator_names().join("|"),
     );
 }
 
@@ -87,36 +93,49 @@ fn load_cfg(args: &Args) -> Result<ExperimentConfig, String> {
     Ok(cfg)
 }
 
+/// Build the validated session for this invocation's config + overrides.
+fn load_session(args: &Args) -> Result<Session, String> {
+    let cfg = load_cfg(args)?;
+    Ok(Scenario::from_config(cfg).build()?)
+}
+
 fn cmd_fig(args: &Args) -> Result<(), String> {
     let cfg = load_cfg(args)?;
     let id = args.get_or("id", "all").to_string();
     let iters = args.usize_or("iters", 0)?;
-    let run = |which: &str| match which {
-        "7" => {
-            experiments::fig7(&cfg, if iters > 0 { iters } else { 200 });
+    let run = |which: &str| -> Result<(), String> {
+        match which {
+            "7" => {
+                experiments::fig7(&cfg, if iters > 0 { iters } else { 200 })?;
+            }
+            "8" | "9" => {
+                experiments::fig8_9(
+                    &cfg,
+                    &[20, 25, 30, 35, 40],
+                    if iters > 0 { iters } else { 50 },
+                )?;
+            }
+            "10" => {
+                experiments::fig10(&cfg, if iters > 0 { iters } else { 60 })?;
+            }
+            "11" => {
+                experiments::fig11(&cfg, if iters > 0 { iters } else { 100 }, 50)?;
+            }
+            "12" | "13" | "14" | "15" => {
+                experiments::fig12_15(&cfg, if iters > 0 { iters } else { 100 })?;
+            }
+            _ => {}
         }
-        "8" | "9" => {
-            experiments::fig8_9(&cfg, &[20, 25, 30, 35, 40], if iters > 0 { iters } else { 50 });
-        }
-        "10" => {
-            experiments::fig10(&cfg, if iters > 0 { iters } else { 60 });
-        }
-        "11" => {
-            experiments::fig11(&cfg, if iters > 0 { iters } else { 100 }, 50);
-        }
-        "12" | "13" | "14" | "15" => {
-            experiments::fig12_15(&cfg, if iters > 0 { iters } else { 100 });
-        }
-        _ => {}
+        Ok(())
     };
     match id.as_str() {
         "all" => {
             experiments::table2();
             for f in ["7", "8", "10", "11", "12"] {
-                run(f);
+                run(f)?;
             }
         }
-        other => run(other),
+        other => run(other)?,
     }
     Ok(())
 }
@@ -129,8 +148,13 @@ fn cmd_topo(args: &Args) -> Result<(), String> {
     let name = args.get("name").ok_or("need --name or --all")?.to_string();
     let mut rng = Rng::seed_from(args.u64_or("seed", 1)?);
     let g = topologies::by_name(&name, 10.0, &mut rng)
-        .ok_or_else(|| format!("unknown topology '{name}'"))?;
-    println!("{name}: |N|={} |E|={} (directed), C̄={:.2}", g.n_nodes(), g.n_edges(), g.mean_capacity());
+        .ok_or_else(|| String::from(SessionError::UnknownTopology { name: name.clone() }))?;
+    println!(
+        "{name}: |N|={} |E|={} (directed), C̄={:.2}",
+        g.n_nodes(),
+        g.n_edges(),
+        g.mean_capacity()
+    );
     for e in g.edges() {
         println!("  {} -> {}  C={:.2}", e.src, e.dst, e.capacity);
     }
@@ -138,49 +162,39 @@ fn cmd_topo(args: &Args) -> Result<(), String> {
 }
 
 fn cmd_route(args: &Args) -> Result<(), String> {
-    let cfg = load_cfg(args)?;
+    let session = load_session(args)?;
     let iters = args.usize_or("iters", 50)?;
     let algo = args.get_or("algo", "omd").to_string();
-    let mut rng = Rng::seed_from(cfg.seed);
-    let problem = cfg.build_problem(&mut rng);
-    let lam = problem.uniform_allocation();
     println!(
         "routing on {} (n_real={}, λ={}, W={}) with {algo}, {iters} iters",
-        cfg.topology, problem.net.n_real, cfg.total_rate, cfg.n_versions
+        session.cfg.topology,
+        session.problem.net.n_real,
+        session.cfg.total_rate,
+        session.cfg.n_versions
     );
-    let sol = match algo.as_str() {
-        "omd" => OmdRouter::new(cfg.eta_routing).solve(&problem, &lam, iters),
-        "sgp" => SgpRouter::new().solve(&problem, &lam, iters),
-        "gp" => GpRouter::new(0.002).solve(&problem, &lam, iters),
-        "opt" => {
-            let o = OptRouter::new().solve(&problem, &lam);
-            println!(
-                "OPT cost {:.6} in {} iterations ({:.3}s)",
-                o.cost, o.iterations, o.elapsed_s
-            );
-            return Ok(());
-        }
-        other => return Err(format!("unknown algo '{other}'")),
-    };
+    let mut traj = Trajectory::default();
+    let report = session.routing_run(&algo, iters)?.observe(&mut traj).finish();
+    // "steps" = streaming iterations: for iterative routers this is the
+    // algorithm's iteration count; OPT runs its whole centralized solve
+    // inside the first step
     println!(
-        "cost {:.6} -> {:.6} in {} iters ({:.4}s)",
-        sol.trajectory[0], sol.cost, sol.iterations, sol.elapsed_s
+        "cost {:.6} -> {:.6} in {} steps ({:.4}s, stop: {:?})",
+        traj.values[0], report.objective, report.iterations, report.elapsed_s, report.stop
     );
     Ok(())
 }
 
 fn cmd_dist(args: &Args) -> Result<(), String> {
-    let cfg = load_cfg(args)?;
+    let session = load_session(args)?;
     let rounds = args.usize_or("rounds", 50)?;
-    let mut rng = Rng::seed_from(cfg.seed);
-    let problem = cfg.build_problem(&mut rng);
-    let lam = problem.uniform_allocation();
+    let problem = &session.problem;
+    let lam = session.uniform_allocation();
     println!(
         "distributed OMD-RT: {} node actors + leader, {rounds} barriered rounds",
         problem.net.n_real
     );
-    let dist = jowr::coordinator::leader::DistributedOmd::new(cfg.eta_routing);
-    let (sol, comm) = dist.solve(&problem, &lam, rounds);
+    let dist = jowr::coordinator::leader::DistributedOmd::new(session.cfg.eta_routing);
+    let (sol, comm) = dist.solve(problem, &lam, rounds);
     println!(
         "cost {:.6} -> {:.6} in {:.3}s",
         sol.trajectory[0], sol.cost, sol.elapsed_s
@@ -192,68 +206,81 @@ fn cmd_dist(args: &Args) -> Result<(), String> {
         comm.messages as f64 / rounds as f64,
         comm.bytes as f64 / rounds as f64 / problem.net.n_real as f64
     );
-    // cross-check against the centralized solver
-    let central = OmdRouter::new(cfg.eta_routing).solve(&problem, &lam, rounds);
-    let rel = (sol.cost - central.cost).abs() / central.cost.abs().max(1.0);
-    println!("centralized cross-check: cost {:.6} (rel diff {rel:.2e})", central.cost);
+    // cross-check against the centralized solver from the registry
+    let central = session.routing_run("omd", rounds)?.finish();
+    let rel = (sol.cost - central.objective).abs() / central.objective.abs().max(1.0);
+    println!(
+        "centralized cross-check: cost {:.6} (rel diff {rel:.2e})",
+        central.objective
+    );
     Ok(())
 }
 
 fn cmd_allocate(args: &Args) -> Result<(), String> {
-    let cfg = load_cfg(args)?;
+    let session = load_session(args)?;
     let iters = args.usize_or("iters", 60)?;
     let algo = args.get_or("algo", "gsoma").to_string();
-    let mut rng = Rng::seed_from(cfg.seed);
-    let problem = cfg.build_problem(&mut rng);
-    let utilities = family(&cfg.utility, cfg.n_versions, cfg.total_rate)
-        .ok_or_else(|| format!("unknown utility family '{}'", cfg.utility))?;
-    let st = match algo.as_str() {
-        "gsoma" => {
-            let mut o = AnalyticOracle::new(problem, utilities);
-            GsOma::new(cfg.delta, cfg.eta_alloc).run(&mut o, iters)
-        }
-        "omad" => {
-            let mut o = SingleStepOracle::new(problem, utilities, cfg.eta_routing);
-            Omad::new(cfg.delta, cfg.eta_alloc).run(&mut o, iters)
-        }
-        other => return Err(format!("unknown algo '{other}'")),
-    };
+    let mut traj = Trajectory::default();
+    let report = session.allocation_run(&algo, iters)?.observe(&mut traj).finish();
     println!(
         "{algo} ({} utility): U {:.4} -> {:.4} in {} outer iters, {} routing iters ({:.3}s)",
-        cfg.utility,
-        st.trajectory[0],
-        st.trajectory.last().unwrap(),
-        st.iterations,
-        st.routing_iterations,
-        st.elapsed_s
+        session.cfg.utility,
+        traj.values[0],
+        traj.values.last().unwrap(),
+        report.iterations,
+        report.routing_iterations,
+        report.elapsed_s
     );
-    println!("final Λ = {:?}", st.lam);
+    println!("final Λ = {:?}", report.lam);
+    Ok(())
+}
+
+fn cmd_solvers(args: &Args) -> Result<(), String> {
+    let _ = args;
+    println!("routers:");
+    for e in registry::ROUTERS.iter() {
+        println!("  {:<10} {}", e.name, e.description);
+        for (k, v) in e.defaults {
+            println!("  {:<10}   default {k} = {v}", "");
+        }
+    }
+    println!("allocators:");
+    for e in registry::ALLOCATORS.iter() {
+        let loop_kind = if e.single_loop { "single-loop" } else { "nested-loop" };
+        println!("  {:<10} {} [{loop_kind}]", e.name, e.description);
+        for (k, v) in e.defaults {
+            println!("  {:<10}   default {k} = {v}", "");
+        }
+    }
     Ok(())
 }
 
 fn cmd_serve(args: &Args) -> Result<(), String> {
-    let cfg = load_cfg(args)?;
+    let session = load_session(args)?;
+    let cfg = &session.cfg;
     let iters = args.usize_or("iters", 40)?;
     let sim_time = args.f64_or("sim-time", 10.0)?;
+    let router_name = args.get_or("router", "omd").to_string();
     let use_xla = args.flag("xla");
-    let mut rng = Rng::seed_from(cfg.seed);
-    let problem = cfg.build_problem(&mut rng);
     let params = ServeParams { sim_time, ..ServeParams::default_for(cfg.n_versions) };
-    let mut alg = Omad::new(cfg.delta, 0.03);
+    // the paper's serving setup uses a smaller outer step than the
+    // analytic experiments
+    let mut alg = registry::allocator_with(
+        args.get_or("algo", "omad"),
+        &Hyper { eta_alloc: 0.03, ..session.hyper() },
+    )?;
     let st = if use_xla {
-        let engine = jowr::runtime::dnn::XlaEngine::load_default(cfg.n_versions)
-            .map_err(|e| format!("xla engine: {e:#}"))?;
-        println!("serving with measured DNN latencies (backend: xla-pjrt)");
-        let mut oracle = MeasuredOracle::new(problem, params, engine, cfg.eta_routing, cfg.seed);
-        let st = alg.run(&mut oracle, iters);
-        if let Some(rep) = &oracle.last_report {
-            print_report(rep);
-        }
-        st
+        serve_xla(&session, &router_name, params, alg.as_mut(), iters)?
     } else {
         println!("serving with the analytic inference engine (pass --xla for real DNNs)");
         let engine = AnalyticEngine::new(cfg.n_versions, cfg.seed);
-        let mut oracle = MeasuredOracle::new(problem, params, engine, cfg.eta_routing, cfg.seed);
+        let mut oracle = MeasuredOracle::with_router(
+            session.problem.clone(),
+            params,
+            engine,
+            session.router(&router_name)?,
+            cfg.seed,
+        );
         let st = alg.run(&mut oracle, iters);
         if let Some(rep) = &oracle.last_report {
             print_report(rep);
@@ -269,6 +296,45 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+#[cfg(feature = "xla")]
+fn serve_xla(
+    session: &Session,
+    router_name: &str,
+    params: ServeParams,
+    alg: &mut dyn Allocator,
+    iters: usize,
+) -> Result<jowr::allocation::AllocationState, String> {
+    let cfg = &session.cfg;
+    let engine = jowr::runtime::dnn::XlaEngine::load_default(cfg.n_versions)
+        .map_err(|e| format!("xla engine: {e:#}"))?;
+    println!("serving with measured DNN latencies (backend: xla-pjrt)");
+    let mut oracle = MeasuredOracle::with_router(
+        session.problem.clone(),
+        params,
+        engine,
+        session.router(router_name)?,
+        cfg.seed,
+    );
+    let st = alg.run(&mut oracle, iters);
+    if let Some(rep) = &oracle.last_report {
+        print_report(rep);
+    }
+    Ok(st)
+}
+
+#[cfg(not(feature = "xla"))]
+fn serve_xla(
+    _session: &Session,
+    _router_name: &str,
+    _params: ServeParams,
+    _alg: &mut dyn Allocator,
+    _iters: usize,
+) -> Result<jowr::allocation::AllocationState, String> {
+    Err("this build has no XLA runtime (rebuild with `--features xla` after adding the \
+         `xla` and `anyhow` dependencies)"
+        .into())
+}
+
 fn print_report(rep: &jowr::coordinator::serving::ServeReport) {
     println!(
         "last window: {:.1} fps, latency p50 {:.2}ms p99 {:.2}ms, completed {:?}, dropped {}",
@@ -280,6 +346,7 @@ fn print_report(rep: &jowr::coordinator::serving::ServeReport) {
     );
 }
 
+#[cfg(feature = "xla")]
 fn cmd_runtime_check(args: &Args) -> Result<(), String> {
     let _ = args;
     let dir = jowr::runtime::XlaRuntime::default_dir();
@@ -311,6 +378,14 @@ fn cmd_runtime_check(args: &Args) -> Result<(), String> {
     );
     println!("runtime-check OK");
     Ok(())
+}
+
+#[cfg(not(feature = "xla"))]
+fn cmd_runtime_check(args: &Args) -> Result<(), String> {
+    let _ = args;
+    Err("this build has no XLA runtime (rebuild with `--features xla` after adding the \
+         `xla` and `anyhow` dependencies)"
+        .into())
 }
 
 fn cmd_config(args: &Args) -> Result<(), String> {

@@ -21,6 +21,10 @@ pub enum CostKind {
 }
 
 impl CostKind {
+    /// Every name [`CostKind::parse`] accepts; keep in sync with its
+    /// `match`. Error messages derive their suggestions from this list.
+    pub const NAMES: [&'static str; 5] = ["exp", "queue", "mm1", "linear", "cubic"];
+
     pub fn parse(s: &str) -> Option<CostKind> {
         match s {
             "exp" => Some(CostKind::Exp),

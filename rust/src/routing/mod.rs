@@ -4,6 +4,13 @@
 //! * [`sgp::SgpRouter`] — scaled gradient projection baseline ([13], Xi&Yeh).
 //! * [`gp::GpRouter`] — vanilla Gallager gradient projection (ablation).
 //! * [`opt::OptRouter`] — centralized path-flow solve (the "OPT" line).
+//!
+//! Prefer constructing routers by name through
+//! [`crate::session::registry`] and driving them with
+//! [`crate::session::RoutingRun`]; direct `OmdRouter::new(η).solve(...)`
+//! construction remains supported for algorithm-internal code and
+//! fine-grained control, but new entry points should go through the
+//! session API (see the deprecation note in the crate docs).
 
 pub mod gp;
 pub mod marginal;
@@ -14,7 +21,10 @@ pub mod sgp;
 use crate::model::flow::{self, Phi};
 use crate::model::Problem;
 
-/// Result of a routing run.
+/// Result of a legacy `Router::solve` run. The session API reports runs
+/// through the unified [`crate::session::RunReport`] instead, with
+/// trajectories recorded by [`crate::session::run::Observer`]s; this struct
+/// is kept for the distributed coordinator and warm-start interop.
 #[derive(Clone, Debug)]
 pub struct RoutingState {
     pub phi: Phi,

@@ -36,11 +36,16 @@ pub struct OptRouter {
     pub max_iters: usize,
     /// Stationarity tolerance on the max marginal spread.
     pub tol: f64,
+    /// Streaming adapter memo: the `(Λ, φ*)` of the last full solve. A
+    /// `Router::step` whose inputs still match is a cheap evaluation; any
+    /// change to Λ or an externally reset φ (e.g. a topology change)
+    /// triggers a fresh solve.
+    streaming_cache: Option<(Vec<f64>, Phi)>,
 }
 
 impl Default for OptRouter {
     fn default() -> Self {
-        OptRouter { max_paths: 500_000, max_iters: 20_000, tol: 1e-9 }
+        OptRouter { max_paths: 500_000, max_iters: 20_000, tol: 1e-9, streaming_cache: None }
     }
 }
 
@@ -213,6 +218,34 @@ impl OptRouter {
             }
         }
         phi
+    }
+}
+
+/// Registry adapter: a [`crate::routing::Router::step`] performs the full
+/// centralized solve and installs the resulting φ*; while Λ and φ stay
+/// unchanged, subsequent steps are cheap evaluations that leave φ fixed,
+/// so `step`-driven runs converge at the next iteration (φ stops moving)
+/// without re-running the solve. A changed Λ (e.g. an allocator's ±δ
+/// probes) or an externally reset φ (topology change) re-solves. The
+/// returned value is — per the `Router` contract — the cost *before* the
+/// update.
+impl crate::routing::Router for OptRouter {
+    fn name(&self) -> &'static str {
+        "OPT"
+    }
+
+    fn step(&mut self, problem: &Problem, lam: &[f64], phi: &mut Phi) -> f64 {
+        let cost_before = crate::model::flow::evaluate(problem, phi, lam).cost;
+        let cached = self
+            .streaming_cache
+            .as_ref()
+            .is_some_and(|(l, p)| l.as_slice() == lam && p == &*phi);
+        if !cached {
+            let sol = self.solve(problem, lam);
+            *phi = self.to_phi(problem, &sol);
+            self.streaming_cache = Some((lam.to_vec(), phi.clone()));
+        }
+        cost_before
     }
 }
 

@@ -1,0 +1,92 @@
+//! Error type for scenario construction and solver lookup.
+//!
+//! Every fallible step of a session — topology lookup, utility-family
+//! lookup, solver-registry lookup, scenario validation — reports through
+//! [`SessionError`], so callers (the CLI, harnesses, library users) get a
+//! clean `Result` end-to-end instead of a `panic!` deep inside problem
+//! construction.
+
+use std::fmt;
+
+/// What went wrong while building a [`crate::session::Scenario`] or looking
+/// up a solver in the [`crate::session::registry`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SessionError {
+    /// No router registered under this name.
+    UnknownRouter { name: String },
+    /// No allocator registered under this name.
+    UnknownAllocator { name: String },
+    /// No topology generator known under this name.
+    UnknownTopology { name: String },
+    /// No utility family known under this name.
+    UnknownUtility { name: String },
+    /// No link-cost family known under this name.
+    UnknownCost { name: String },
+    /// A scenario parameter is out of its valid range.
+    InvalidScenario { what: String },
+}
+
+impl fmt::Display for SessionError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SessionError::UnknownRouter { name } => write!(
+                f,
+                "unknown router '{name}' (known: {})",
+                crate::session::registry::router_names().join(", ")
+            ),
+            SessionError::UnknownAllocator { name } => write!(
+                f,
+                "unknown allocator '{name}' (known: {})",
+                crate::session::registry::allocator_names().join(", ")
+            ),
+            SessionError::UnknownTopology { name } => write!(
+                f,
+                "unknown topology '{name}' (known: {})",
+                crate::graph::topologies::KNOWN_NAMES.join(", ")
+            ),
+            SessionError::UnknownUtility { name } => write!(
+                f,
+                "unknown utility family '{name}' (known: {})",
+                crate::model::utility::FAMILIES.join(", ")
+            ),
+            SessionError::UnknownCost { name } => write!(
+                f,
+                "unknown cost family '{name}' (known: {})",
+                crate::model::cost::CostKind::NAMES.join(", ")
+            ),
+            SessionError::InvalidScenario { what } => write!(f, "invalid scenario: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for SessionError {}
+
+/// Lets `?` propagate a [`SessionError`] inside the CLI's string-error
+/// plumbing.
+impl From<SessionError> for String {
+    fn from(e: SessionError) -> String {
+        e.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn messages_name_the_offender_and_the_alternatives() {
+        let e = SessionError::UnknownRouter { name: "nope".into() };
+        let msg = e.to_string();
+        assert!(msg.contains("nope"), "{msg}");
+        assert!(msg.contains("omd"), "{msg}");
+        let e = SessionError::UnknownAllocator { name: "bad".into() };
+        let msg = e.to_string();
+        assert!(msg.contains("bad") && msg.contains("gsoma"), "{msg}");
+    }
+
+    #[test]
+    fn converts_into_cli_string_errors() {
+        let s: String = SessionError::UnknownTopology { name: "x".into() }.into();
+        assert!(s.contains('x'));
+    }
+}

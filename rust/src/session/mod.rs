@@ -1,0 +1,368 @@
+//! Unified session API: typed scenario construction, the solver registry,
+//! and streaming step-driven runs.
+//!
+//! The paper's contribution is a *cross-layer* optimizer — allocation
+//! (GS-OMA / OMAD) and routing (OMD-RT / SGP / GP / OPT) composed over one
+//! flow model. This module is the single front door to that machinery:
+//!
+//! 1. **[`Scenario`]** — a builder describing an experiment (topology,
+//!    rates, cost/utility families, hyper-parameters, seed). Validation is
+//!    fallible end-to-end: [`Scenario::build`] returns `Result` instead of
+//!    panicking deep inside problem construction.
+//! 2. **[`Session`]** — a validated scenario with its [`Problem`] instance
+//!    built. Owns oracle selection and solver instantiation by name via
+//!    the [`registry`].
+//! 3. **[`RoutingRun`] / [`AllocationRun`]** — resumable streaming
+//!    execution: `step()` advances one iteration, [`run::StopRule`]s decide
+//!    termination, [`run::Observer`]s record trajectories and telemetry,
+//!    and the result is a unified [`RunReport`].
+//!
+//! ```no_run
+//! use jowr::prelude::*;
+//!
+//! # fn main() -> Result<(), SessionError> {
+//! let session = Scenario::paper_default()
+//!     .topology("er")
+//!     .utility("log")
+//!     .seed(7)
+//!     .build()?;
+//! let mut traj = Trajectory::default();
+//! let report = session.routing_run("omd", 50)?.observe(&mut traj).finish();
+//! println!("cost {:.4} -> {:.4} ({:?})", traj.values[0], report.objective, report.stop);
+//! # Ok(())
+//! # }
+//! ```
+
+pub mod error;
+pub mod registry;
+pub mod run;
+
+pub use error::SessionError;
+pub use registry::Hyper;
+pub use run::{AllocationRun, RoutingRun, RunReport, StepInfo, StopReason, Trajectory};
+
+use crate::allocation::{AnalyticOracle, SingleStepOracle, UtilityOracle};
+use crate::allocation::Allocator;
+use crate::config::ExperimentConfig;
+use crate::model::cost::CostKind;
+use crate::model::utility::{family, Utility};
+use crate::model::Problem;
+use crate::routing::Router;
+use crate::util::rng::Rng;
+
+/// Builder for a JOWR experiment scenario. Setters are chainable; nothing
+/// is validated until [`Scenario::build`].
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    cfg: ExperimentConfig,
+    cost_name: Option<String>,
+}
+
+impl Scenario {
+    /// The paper's Section-IV defaults: Connected-ER(25, 0.2), λ=60, W=3,
+    /// C̄=10, `D_ij = exp(F/C)`, log utilities, seed 42.
+    pub fn paper_default() -> Self {
+        Scenario { cfg: ExperimentConfig::paper_default(), cost_name: None }
+    }
+
+    /// Start from an existing config (e.g. loaded from a JSON file).
+    pub fn from_config(cfg: ExperimentConfig) -> Self {
+        Scenario { cfg, cost_name: None }
+    }
+
+    /// Topology generator: `"er"` or a named topology
+    /// (`"abilene"`, `"tree"`, `"fog"`, `"geant"`).
+    pub fn topology(mut self, name: &str) -> Self {
+        self.cfg.topology = name.to_string();
+        self
+    }
+
+    /// ER node count (ignored for named topologies).
+    pub fn nodes(mut self, n: usize) -> Self {
+        self.cfg.n_nodes = n;
+        self
+    }
+
+    /// ER link probability.
+    pub fn link_probability(mut self, p: f64) -> Self {
+        self.cfg.p_link = p;
+        self
+    }
+
+    /// Mean link capacity C̄.
+    pub fn capacity(mut self, cap_mean: f64) -> Self {
+        self.cfg.cap_mean = cap_mean;
+        self
+    }
+
+    /// Number of DNN versions W.
+    pub fn versions(mut self, w: usize) -> Self {
+        self.cfg.n_versions = w;
+        self
+    }
+
+    /// Total task input rate λ.
+    pub fn rate(mut self, total: f64) -> Self {
+        self.cfg.total_rate = total;
+        self
+    }
+
+    /// Link cost family (typed).
+    pub fn cost(mut self, kind: CostKind) -> Self {
+        self.cfg.cost = kind;
+        self.cost_name = None;
+        self
+    }
+
+    /// Link cost family by name (`"exp"`, `"queue"`, `"linear"`,
+    /// `"cubic"`); validated at [`Scenario::build`].
+    pub fn cost_named(mut self, name: &str) -> Self {
+        self.cost_name = Some(name.to_string());
+        self
+    }
+
+    /// Utility family by name (`"linear"`, `"sqrt"`, `"quadratic"`,
+    /// `"log"`); validated at [`Scenario::build`].
+    pub fn utility(mut self, name: &str) -> Self {
+        self.cfg.utility = name.to_string();
+        self
+    }
+
+    /// OMD-RT step size η.
+    pub fn eta_routing(mut self, eta: f64) -> Self {
+        self.cfg.eta_routing = eta;
+        self
+    }
+
+    /// Allocation step size.
+    pub fn eta_alloc(mut self, eta: f64) -> Self {
+        self.cfg.eta_alloc = eta;
+        self
+    }
+
+    /// Gradient-sampling disturbance δ.
+    pub fn delta(mut self, delta: f64) -> Self {
+        self.cfg.delta = delta;
+        self
+    }
+
+    /// RNG seed for topology generation and placements.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Validate every field and build the problem instance.
+    pub fn build(mut self) -> Result<Session, SessionError> {
+        if let Some(name) = &self.cost_name {
+            self.cfg.cost = CostKind::parse(name)
+                .ok_or_else(|| SessionError::UnknownCost { name: name.clone() })?;
+        }
+        let cfg = self.cfg;
+        if cfg.n_versions == 0 {
+            return Err(invalid("n_versions must be >= 1"));
+        }
+        if !(cfg.total_rate > 0.0) {
+            return Err(invalid(&format!("total_rate must be > 0 (got {})", cfg.total_rate)));
+        }
+        if !(cfg.cap_mean > 0.0) {
+            return Err(invalid(&format!("cap_mean must be > 0 (got {})", cfg.cap_mean)));
+        }
+        if cfg.topology == "er" {
+            if cfg.n_nodes < 2 {
+                return Err(invalid(&format!("ER topology needs >= 2 nodes (got {})", cfg.n_nodes)));
+            }
+            if !(cfg.p_link > 0.0 && cfg.p_link <= 1.0) {
+                return Err(invalid(&format!("p_link must be in (0, 1] (got {})", cfg.p_link)));
+            }
+        }
+        if !(cfg.eta_routing > 0.0) {
+            return Err(invalid(&format!("eta_routing must be > 0 (got {})", cfg.eta_routing)));
+        }
+        if !(cfg.eta_alloc > 0.0) {
+            return Err(invalid(&format!("eta_alloc must be > 0 (got {})", cfg.eta_alloc)));
+        }
+        // the allocation projection onto [δ, λ−δ]^W requires W·δ ≤ λ
+        if !(cfg.delta > 0.0 && cfg.n_versions as f64 * cfg.delta <= cfg.total_rate) {
+            return Err(invalid(&format!(
+                "delta must satisfy 0 < n_versions*delta <= total_rate (delta {}, W {}, rate {})",
+                cfg.delta, cfg.n_versions, cfg.total_rate
+            )));
+        }
+        // utility families are consumed lazily by allocation runs, but an
+        // unknown name should fail loudly here, not mid-experiment
+        family(&cfg.utility, cfg.n_versions, cfg.total_rate)
+            .ok_or_else(|| SessionError::UnknownUtility { name: cfg.utility.clone() })?;
+        let mut rng = Rng::seed_from(cfg.seed);
+        let problem = cfg.build_problem(&mut rng)?;
+        Ok(Session { cfg, problem })
+    }
+}
+
+fn invalid(what: &str) -> SessionError {
+    SessionError::InvalidScenario { what: what.to_string() }
+}
+
+/// A validated scenario with its problem instance built: the factory for
+/// solvers, oracles, and streaming runs.
+#[derive(Clone, Debug)]
+pub struct Session {
+    pub cfg: ExperimentConfig,
+    pub problem: Problem,
+}
+
+impl Session {
+    /// Hyper-parameters derived from this session's config.
+    pub fn hyper(&self) -> Hyper {
+        Hyper::from_config(&self.cfg)
+    }
+
+    /// The paper's allocation initializer `Λ¹ = (λ/W)·1`.
+    pub fn uniform_allocation(&self) -> Vec<f64> {
+        self.problem.uniform_allocation()
+    }
+
+    /// The (hidden) ground-truth utility functions for this scenario.
+    pub fn utilities(&self) -> Result<Vec<Utility>, SessionError> {
+        family(&self.cfg.utility, self.cfg.n_versions, self.cfg.total_rate)
+            .ok_or_else(|| SessionError::UnknownUtility { name: self.cfg.utility.clone() })
+    }
+
+    /// Instantiate a router by registry name with this session's
+    /// hyper-parameters.
+    pub fn router(&self, name: &str) -> Result<Box<dyn Router>, SessionError> {
+        registry::router_with(name, &self.hyper())
+    }
+
+    /// Instantiate an allocator by registry name with this session's
+    /// hyper-parameters.
+    pub fn allocator(&self, name: &str) -> Result<Box<dyn Allocator>, SessionError> {
+        registry::allocator_with(name, &self.hyper())
+    }
+
+    /// The utility oracle matching an allocator: single-loop algorithms get
+    /// the persistent single-step oracle (`K = 1` routing per observation),
+    /// nested-loop algorithms the run-to-convergence oracle.
+    pub fn oracle_for(&self, allocator: &str) -> Result<Box<dyn UtilityOracle>, SessionError> {
+        let entry = registry::allocator_entry(allocator)
+            .ok_or_else(|| SessionError::UnknownAllocator { name: allocator.to_string() })?;
+        let utilities = self.utilities()?;
+        if entry.single_loop {
+            Ok(Box::new(SingleStepOracle::new(
+                self.problem.clone(),
+                utilities,
+                self.cfg.eta_routing,
+            )))
+        } else {
+            let mut oracle = AnalyticOracle::new(self.problem.clone(), utilities);
+            oracle.router_eta = self.cfg.eta_routing;
+            Ok(Box::new(oracle))
+        }
+    }
+
+    /// A streaming routing run of `algo` on the uniform allocation, with
+    /// the legacy convergence tolerance and an iteration budget.
+    pub fn routing_run(
+        &self,
+        algo: &str,
+        max_iters: usize,
+    ) -> Result<RoutingRun<'_>, SessionError> {
+        Ok(RoutingRun::new(
+            &self.problem,
+            self.router(algo)?,
+            self.uniform_allocation(),
+            max_iters,
+        ))
+    }
+
+    /// A streaming allocation run of `algo` with its matching oracle, from
+    /// the uniform initializer.
+    pub fn allocation_run<'o>(
+        &self,
+        algo: &str,
+        max_outer: usize,
+    ) -> Result<AllocationRun<'o>, SessionError> {
+        // full feasibility of the projection box [δ, λ−δ]^W: the lower
+        // bound needs W·δ ≤ λ (checked at build), the upper needs
+        // λ ≤ W·(λ−δ) — which rules out W = 1 for any δ > 0
+        let (w, total, delta) = (self.cfg.n_versions as f64, self.cfg.total_rate, self.cfg.delta);
+        if total > w * (total - delta) {
+            let what = format!(
+                "allocation domain is infeasible: delta {delta}, W {w}, rate {total} \
+                 violate rate <= W*(rate - delta); reduce delta or add versions"
+            );
+            return Err(SessionError::InvalidScenario { what });
+        }
+        Ok(AllocationRun::new(self.allocator(algo)?, self.oracle_for(algo)?, max_outer))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_default_builds() {
+        let s = Scenario::paper_default().build().unwrap();
+        assert_eq!(s.problem.net.n_real, 25);
+        assert_eq!(s.cfg.n_versions, 3);
+    }
+
+    #[test]
+    fn unknown_names_fail_at_build() {
+        assert!(matches!(
+            Scenario::paper_default().topology("moebius").build(),
+            Err(SessionError::UnknownTopology { .. })
+        ));
+        assert!(matches!(
+            Scenario::paper_default().utility("cosine").build(),
+            Err(SessionError::UnknownUtility { .. })
+        ));
+        assert!(matches!(
+            Scenario::paper_default().cost_named("tanh").build(),
+            Err(SessionError::UnknownCost { .. })
+        ));
+    }
+
+    #[test]
+    fn invalid_parameters_fail_at_build() {
+        assert!(Scenario::paper_default().versions(0).build().is_err());
+        assert!(Scenario::paper_default().rate(0.0).build().is_err());
+        assert!(Scenario::paper_default().rate(f64::NAN).build().is_err());
+        assert!(Scenario::paper_default().link_probability(0.0).build().is_err());
+        assert!(Scenario::paper_default().link_probability(1.5).build().is_err());
+        assert!(Scenario::paper_default().nodes(1).build().is_err());
+        assert!(Scenario::paper_default().eta_routing(0.0).build().is_err());
+        assert!(Scenario::paper_default().delta(1e9).build().is_err());
+    }
+
+    #[test]
+    fn allocation_feasibility_is_enforced() {
+        // W·δ > λ fails at build (the projection's lower-bound condition)
+        assert!(Scenario::paper_default().delta(25.0).build().is_err());
+        // routing-only W=1 sessions build, but allocation runs are
+        // rejected (λ ≤ W·(λ−δ) cannot hold for W=1, δ>0)
+        let s = Scenario::paper_default().versions(1).build().unwrap();
+        assert!(s.routing_run("omd", 3).is_ok());
+        assert!(s.allocation_run("omad", 3).is_err());
+    }
+
+    #[test]
+    fn cost_named_is_applied() {
+        let s = Scenario::paper_default().cost_named("queue").build().unwrap();
+        assert_eq!(s.cfg.cost, CostKind::Queue);
+    }
+
+    #[test]
+    fn named_topology_builds() {
+        let s = Scenario::paper_default().topology("abilene").capacity(15.0).build().unwrap();
+        assert_eq!(s.problem.net.n_real, 11);
+    }
+
+    #[test]
+    fn session_construction_is_seed_deterministic() {
+        let a = Scenario::paper_default().seed(9).build().unwrap();
+        let b = Scenario::paper_default().seed(9).build().unwrap();
+        assert_eq!(a.problem.net.graph.n_edges(), b.problem.net.graph.n_edges());
+    }
+}

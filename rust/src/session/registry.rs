@@ -1,0 +1,265 @@
+//! Solver registry: every routing and allocation algorithm in the crate,
+//! addressable by name, with human-readable descriptions and default
+//! hyper-parameters.
+//!
+//! The registry replaces the ad-hoc string-`match` dispatch that every entry
+//! point (CLI, figure harnesses, benches, examples) used to re-implement.
+//! New algorithms — e.g. congestion-aware routing variants or learned
+//! path-selection policies — plug in by adding one [`RouterEntry`] /
+//! [`AllocatorEntry`] here and become reachable from *every* entry point at
+//! once.
+
+use super::error::SessionError;
+use crate::allocation::{gsoma::GsOma, omad::Omad, Allocator};
+use crate::config::ExperimentConfig;
+use crate::routing::{gp::GpRouter, omd::OmdRouter, opt::OptRouter, sgp::SgpRouter, Router};
+
+/// Paper Section-IV default hyper-parameters — the single source of truth
+/// shared by [`Hyper::default`] and the registry entries' `defaults`
+/// metadata.
+pub const DEFAULT_ETA_ROUTING: f64 = 0.5;
+pub const DEFAULT_ETA_GP: f64 = 0.002;
+pub const DEFAULT_ETA_ALLOC: f64 = 0.05;
+pub const DEFAULT_DELTA: f64 = 0.5;
+
+/// Hyper-parameters handed to solver constructors. The paper's Section-IV
+/// defaults; [`Hyper::from_config`] lifts an [`ExperimentConfig`].
+#[derive(Clone, Copy, Debug)]
+pub struct Hyper {
+    /// OMD-RT mirror-descent step size η.
+    pub eta_routing: f64,
+    /// Euclidean step size for the GP ablation baseline (a different scale
+    /// from η: GP lacks the entropic geometry, see the paper's Remark 2).
+    pub eta_gp: f64,
+    /// Allocation (mirror-ascent) step size.
+    pub eta_alloc: f64,
+    /// Gradient-sampling disturbance δ.
+    pub delta: f64,
+}
+
+impl Default for Hyper {
+    fn default() -> Self {
+        Hyper {
+            eta_routing: DEFAULT_ETA_ROUTING,
+            eta_gp: DEFAULT_ETA_GP,
+            eta_alloc: DEFAULT_ETA_ALLOC,
+            delta: DEFAULT_DELTA,
+        }
+    }
+}
+
+impl Hyper {
+    pub fn from_config(cfg: &ExperimentConfig) -> Self {
+        Hyper {
+            eta_routing: cfg.eta_routing,
+            eta_alloc: cfg.eta_alloc,
+            delta: cfg.delta,
+            ..Hyper::default()
+        }
+    }
+}
+
+/// One registered routing algorithm.
+pub struct RouterEntry {
+    pub name: &'static str,
+    pub description: &'static str,
+    /// `(hyper-parameter, default)` pairs the constructor consumes.
+    pub defaults: &'static [(&'static str, f64)],
+    make: fn(&Hyper) -> Box<dyn Router>,
+}
+
+impl RouterEntry {
+    pub fn instantiate(&self, h: &Hyper) -> Box<dyn Router> {
+        (self.make)(h)
+    }
+}
+
+/// One registered allocation algorithm.
+pub struct AllocatorEntry {
+    pub name: &'static str,
+    pub description: &'static str,
+    pub defaults: &'static [(&'static str, f64)],
+    /// Single-loop algorithms advance a persistent routing state one
+    /// iteration per observation and pair with the single-step oracle;
+    /// nested-loop algorithms pair with the run-to-convergence oracle.
+    pub single_loop: bool,
+    make: fn(&Hyper) -> Box<dyn Allocator>,
+}
+
+impl AllocatorEntry {
+    pub fn instantiate(&self, h: &Hyper) -> Box<dyn Allocator> {
+        (self.make)(h)
+    }
+}
+
+fn make_omd(h: &Hyper) -> Box<dyn Router> {
+    Box::new(OmdRouter::new(h.eta_routing))
+}
+
+fn make_omd_fixed(h: &Hyper) -> Box<dyn Router> {
+    Box::new(OmdRouter::fixed(h.eta_routing))
+}
+
+fn make_sgp(_h: &Hyper) -> Box<dyn Router> {
+    Box::new(SgpRouter::new())
+}
+
+fn make_gp(h: &Hyper) -> Box<dyn Router> {
+    Box::new(GpRouter::new(h.eta_gp))
+}
+
+fn make_opt(_h: &Hyper) -> Box<dyn Router> {
+    Box::new(OptRouter::new())
+}
+
+fn make_gsoma(h: &Hyper) -> Box<dyn Allocator> {
+    Box::new(GsOma::new(h.delta, h.eta_alloc))
+}
+
+fn make_omad(h: &Hyper) -> Box<dyn Allocator> {
+    Box::new(Omad::new(h.delta, h.eta_alloc))
+}
+
+/// Every registered router, in presentation order.
+pub static ROUTERS: [RouterEntry; 5] = [
+    RouterEntry {
+        name: "omd",
+        description: "OMD-RT (Algorithm 2): entropic mirror descent with backtracking step size",
+        defaults: &[("eta_routing", DEFAULT_ETA_ROUTING)],
+        make: make_omd,
+    },
+    RouterEntry {
+        name: "omd-fixed",
+        description: "OMD-RT with a fixed step size (theory experiments; requires eta <= c/L_D)",
+        defaults: &[("eta_routing", DEFAULT_ETA_ROUTING)],
+        make: make_omd_fixed,
+    },
+    RouterEntry {
+        name: "sgp",
+        description: "Scaled gradient projection baseline (Xi & Yeh [13])",
+        defaults: &[],
+        make: make_sgp,
+    },
+    RouterEntry {
+        name: "gp",
+        description: "Vanilla Gallager gradient projection (geometry ablation)",
+        defaults: &[("eta_gp", DEFAULT_ETA_GP)],
+        make: make_gp,
+    },
+    RouterEntry {
+        name: "opt",
+        description: "Centralized path-flow solve (the OPT reference line)",
+        defaults: &[],
+        make: make_opt,
+    },
+];
+
+/// Every registered allocator, in presentation order.
+pub static ALLOCATORS: [AllocatorEntry; 2] = [
+    AllocatorEntry {
+        name: "gsoma",
+        description: "GS-OMA (Algorithm 1): nested loop, routing run to convergence per sample",
+        defaults: &[("delta", DEFAULT_DELTA), ("eta_alloc", DEFAULT_ETA_ALLOC)],
+        single_loop: false,
+        make: make_gsoma,
+    },
+    AllocatorEntry {
+        name: "omad",
+        description: "OMAD (Algorithm 3): single loop, one routing iteration per observation",
+        defaults: &[("delta", DEFAULT_DELTA), ("eta_alloc", DEFAULT_ETA_ALLOC)],
+        single_loop: true,
+        make: make_omad,
+    },
+];
+
+/// Registry entry for a router name, if registered.
+pub fn router_entry(name: &str) -> Option<&'static RouterEntry> {
+    ROUTERS.iter().find(|e| e.name == name)
+}
+
+/// Registry entry for an allocator name, if registered.
+pub fn allocator_entry(name: &str) -> Option<&'static AllocatorEntry> {
+    ALLOCATORS.iter().find(|e| e.name == name)
+}
+
+/// All registered router names.
+pub fn router_names() -> Vec<&'static str> {
+    ROUTERS.iter().map(|e| e.name).collect()
+}
+
+/// All registered allocator names.
+pub fn allocator_names() -> Vec<&'static str> {
+    ALLOCATORS.iter().map(|e| e.name).collect()
+}
+
+/// Instantiate a router by name with the paper-default hyper-parameters.
+pub fn router(name: &str) -> Result<Box<dyn Router>, SessionError> {
+    router_with(name, &Hyper::default())
+}
+
+/// Instantiate a router by name with explicit hyper-parameters.
+pub fn router_with(name: &str, h: &Hyper) -> Result<Box<dyn Router>, SessionError> {
+    router_entry(name)
+        .map(|e| e.instantiate(h))
+        .ok_or_else(|| SessionError::UnknownRouter { name: name.to_string() })
+}
+
+/// Instantiate an allocator by name with the paper-default hyper-parameters.
+pub fn allocator(name: &str) -> Result<Box<dyn Allocator>, SessionError> {
+    allocator_with(name, &Hyper::default())
+}
+
+/// Instantiate an allocator by name with explicit hyper-parameters.
+pub fn allocator_with(name: &str, h: &Hyper) -> Result<Box<dyn Allocator>, SessionError> {
+    allocator_entry(name)
+        .map(|e| e.instantiate(h))
+        .ok_or_else(|| SessionError::UnknownAllocator { name: name.to_string() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_instantiates_and_reports_its_name() {
+        let h = Hyper::default();
+        for e in ROUTERS.iter() {
+            let r = e.instantiate(&h);
+            assert!(!r.name().is_empty(), "{}", e.name);
+            assert!(!e.description.is_empty());
+        }
+        for e in ALLOCATORS.iter() {
+            let a = e.instantiate(&h);
+            assert!(!a.name().is_empty(), "{}", e.name);
+        }
+    }
+
+    #[test]
+    fn names_are_unique() {
+        let mut names = router_names();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), ROUTERS.len());
+        let mut names = allocator_names();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), ALLOCATORS.len());
+    }
+
+    #[test]
+    fn unknown_names_are_clean_errors() {
+        assert!(matches!(router("nope"), Err(SessionError::UnknownRouter { .. })));
+        assert!(matches!(allocator("nope"), Err(SessionError::UnknownAllocator { .. })));
+    }
+
+    #[test]
+    fn hyper_lifts_config() {
+        let mut cfg = ExperimentConfig::paper_default();
+        cfg.eta_routing = 0.25;
+        cfg.delta = 0.1;
+        let h = Hyper::from_config(&cfg);
+        assert_eq!(h.eta_routing, 0.25);
+        assert_eq!(h.delta, 0.1);
+        assert_eq!(h.eta_gp, 0.002);
+    }
+}

@@ -1,0 +1,460 @@
+//! Streaming, step-driven execution: one iteration at a time, with
+//! pluggable stop rules and observer callbacks.
+//!
+//! A run is a resumable handle — [`RoutingRun`] / [`AllocationRun`] — whose
+//! [`step`](RoutingRun::step) advances the underlying algorithm by exactly
+//! one iteration and returns [`ControlFlow::Continue`] until a
+//! [`StopRule`] fires, at which point it returns
+//! [`ControlFlow::Break`] with the unified [`RunReport`]. Trajectories and
+//! metrics are recorded by [`Observer`]s (e.g. [`Trajectory`]) instead of
+//! being baked into each algorithm, so telemetry composes without touching
+//! solver code.
+//!
+//! Driven to completion with the default rules, a run reproduces the legacy
+//! `Router::solve` / `Allocator::run` loops *bit for bit* (same oracle call
+//! order, same floating-point operations) — verified by
+//! `tests/test_session.rs`.
+
+use std::ops::ControlFlow;
+use std::time::Instant;
+
+use crate::allocation::{Allocator, UtilityOracle};
+use crate::model::flow::{self, Phi};
+use crate::model::Problem;
+use crate::routing::{Router, CONVERGENCE_TOL};
+
+/// Why a run stopped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StopReason {
+    /// The iterate stopped moving (`‖x^{k+1} − x^k‖_∞ ≤ tol`).
+    Converged,
+    /// The iteration budget was exhausted.
+    MaxIters,
+    /// The wall-clock deadline passed.
+    Deadline,
+}
+
+/// Unified final report of a routing or allocation run (the successor of
+/// the legacy `RoutingState` / `AllocationState` pair; trajectories live in
+/// observers, not here).
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    /// Algorithm name as reported by the solver.
+    pub algo: String,
+    /// Final objective: total network cost for routing runs, observed total
+    /// network utility for allocation runs.
+    pub objective: f64,
+    /// Final allocation Λ (the fixed input allocation for routing runs).
+    pub lam: Vec<f64>,
+    /// Final routing state, when the run exposes one.
+    pub phi: Option<Phi>,
+    /// Iterations performed.
+    pub iterations: usize,
+    /// Total routing iterations consumed (equals `iterations` for routing
+    /// runs; counts oracle-internal routing work for allocation runs).
+    pub routing_iterations: usize,
+    pub stop: StopReason,
+    pub elapsed_s: f64,
+}
+
+/// Per-iteration snapshot handed to stop rules and observers.
+#[derive(Clone, Copy, Debug)]
+pub struct StepInfo<'a> {
+    /// 1-based count of completed iterations.
+    pub iter: usize,
+    /// Objective observed at this iteration (cost *before* the update for
+    /// routing, utility *at the iterate* for allocation — matching the
+    /// paper's per-iteration convergence plots).
+    pub objective: f64,
+    /// `‖x^{k+1} − x^k‖_∞` for this iteration's update.
+    pub moved: f64,
+    /// Wall-clock seconds since the run started.
+    pub elapsed_s: f64,
+    /// Current allocation Λ.
+    pub lam: &'a [f64],
+}
+
+/// Decides when a run is finished. Rules are checked in registration order
+/// after every iteration; the first to fire wins.
+pub trait StopRule {
+    fn check(&mut self, info: &StepInfo<'_>) -> Option<StopReason>;
+}
+
+/// Stop after a fixed number of iterations.
+#[derive(Clone, Copy, Debug)]
+pub struct MaxIters(pub usize);
+
+impl StopRule for MaxIters {
+    fn check(&mut self, info: &StepInfo<'_>) -> Option<StopReason> {
+        (info.iter >= self.0).then_some(StopReason::MaxIters)
+    }
+}
+
+/// Stop when the iterate stops moving: `‖x^{k+1} − x^k‖_∞ ≤ tol` (the
+/// paper's exact-equality stop, relaxed to floating point; inclusive,
+/// matching the legacy `phi_close` check of `Router::solve`).
+#[derive(Clone, Copy, Debug)]
+pub struct Tolerance(pub f64);
+
+impl StopRule for Tolerance {
+    fn check(&mut self, info: &StepInfo<'_>) -> Option<StopReason> {
+        (info.moved <= self.0).then_some(StopReason::Converged)
+    }
+}
+
+/// Strict variant: stop when `‖x^{k+1} − x^k‖_∞ < tol` — the boundary
+/// behavior of the legacy `Allocator::run` loop.
+#[derive(Clone, Copy, Debug)]
+pub struct ToleranceStrict(pub f64);
+
+impl StopRule for ToleranceStrict {
+    fn check(&mut self, info: &StepInfo<'_>) -> Option<StopReason> {
+        (info.moved < self.0).then_some(StopReason::Converged)
+    }
+}
+
+/// Stop once the run has consumed a wall-clock budget (seconds).
+#[derive(Clone, Copy, Debug)]
+pub struct Deadline(pub f64);
+
+impl StopRule for Deadline {
+    fn check(&mut self, info: &StepInfo<'_>) -> Option<StopReason> {
+        (info.elapsed_s >= self.0).then_some(StopReason::Deadline)
+    }
+}
+
+/// Telemetry callback invoked after every iteration and once at the end.
+pub trait Observer {
+    fn on_step(&mut self, info: &StepInfo<'_>);
+    fn on_finish(&mut self, _report: &RunReport) {}
+}
+
+/// Records the objective at every iteration plus the final objective —
+/// exactly the legacy `trajectory` field of `RoutingState` /
+/// `AllocationState`.
+#[derive(Clone, Debug, Default)]
+pub struct Trajectory {
+    pub values: Vec<f64>,
+}
+
+impl Observer for Trajectory {
+    fn on_step(&mut self, info: &StepInfo<'_>) {
+        self.values.push(info.objective);
+    }
+
+    fn on_finish(&mut self, report: &RunReport) {
+        self.values.push(report.objective);
+    }
+}
+
+/// Prints a progress line every `every` iterations (CLI telemetry).
+#[derive(Clone, Copy, Debug)]
+pub struct Progress {
+    pub every: usize,
+}
+
+impl Observer for Progress {
+    fn on_step(&mut self, info: &StepInfo<'_>) {
+        if self.every > 0 && info.iter % self.every == 0 {
+            println!(
+                "  iter {:>5}  objective {:>14.6}  moved {:.2e}  ({:.3}s)",
+                info.iter, info.objective, info.moved, info.elapsed_s
+            );
+        }
+    }
+}
+
+/// Max-norm distance between two routing configurations.
+fn phi_moved(a: &Phi, b: &Phi) -> f64 {
+    a.frac
+        .iter()
+        .zip(&b.frac)
+        .flat_map(|(ra, rb)| ra.iter().zip(rb))
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f64, f64::max)
+}
+
+/// Max-norm distance between two allocations.
+fn lam_moved(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f64, f64::max)
+}
+
+/// A resumable routing run: minimizes `D(Λ, φ)` one iteration per
+/// [`step`](RoutingRun::step) for a fixed allocation Λ.
+pub struct RoutingRun<'a> {
+    problem: &'a Problem,
+    router: Box<dyn Router>,
+    lam: Vec<f64>,
+    phi: Phi,
+    max_iters: usize,
+    stop_rules: Vec<Box<dyn StopRule + 'a>>,
+    observers: Vec<&'a mut dyn Observer>,
+    t0: Instant,
+    iter: usize,
+    finished: Option<RunReport>,
+}
+
+impl<'a> RoutingRun<'a> {
+    /// A run from the paper's uniform initializer `φ¹`, stopping on
+    /// convergence ([`Tolerance`] at the legacy `CONVERGENCE_TOL`) or after
+    /// `max_iters` iterations — the exact semantics of the legacy
+    /// `Router::solve`.
+    pub fn new(
+        problem: &'a Problem,
+        router: Box<dyn Router>,
+        lam: Vec<f64>,
+        max_iters: usize,
+    ) -> Self {
+        let phi = Phi::uniform(&problem.net);
+        RoutingRun {
+            problem,
+            router,
+            lam,
+            phi,
+            max_iters,
+            stop_rules: vec![Box::new(Tolerance(CONVERGENCE_TOL)), Box::new(MaxIters(max_iters))],
+            observers: Vec::new(),
+            t0: Instant::now(),
+            iter: 0,
+            finished: None,
+        }
+    }
+
+    /// Start from (and take ownership of) an existing routing state instead
+    /// of the uniform initializer.
+    pub fn warm_start(mut self, phi: Phi) -> Self {
+        self.phi = phi;
+        self
+    }
+
+    /// Add a stop rule (checked after the defaults).
+    pub fn stop_when(mut self, rule: impl StopRule + 'a) -> Self {
+        self.stop_rules.push(Box::new(rule));
+        self
+    }
+
+    /// Add a wall-clock budget in seconds.
+    pub fn deadline(self, seconds: f64) -> Self {
+        self.stop_when(Deadline(seconds))
+    }
+
+    /// Attach an observer.
+    pub fn observe(mut self, obs: &'a mut dyn Observer) -> Self {
+        self.observers.push(obs);
+        self
+    }
+
+    /// Current routing state.
+    pub fn phi(&self) -> &Phi {
+        &self.phi
+    }
+
+    /// Advance by one routing iteration. Returns
+    /// [`ControlFlow::Break`] with the final report once a stop rule fires;
+    /// further calls return the same report without advancing.
+    pub fn step(&mut self) -> ControlFlow<RunReport> {
+        if let Some(report) = &self.finished {
+            return ControlFlow::Break(report.clone());
+        }
+        // legacy `solve(.., 0)` performs zero iterations; honor a zero
+        // budget before doing any work
+        if self.max_iters == 0 {
+            let report = self.make_report(StopReason::MaxIters);
+            self.finished = Some(report.clone());
+            return ControlFlow::Break(report);
+        }
+        let prev = self.phi.clone();
+        let cost_before = self.router.step(self.problem, &self.lam, &mut self.phi);
+        self.iter += 1;
+        let info = StepInfo {
+            iter: self.iter,
+            objective: cost_before,
+            moved: phi_moved(&prev, &self.phi),
+            elapsed_s: self.t0.elapsed().as_secs_f64(),
+            lam: &self.lam,
+        };
+        for obs in self.observers.iter_mut() {
+            obs.on_step(&info);
+        }
+        let fired = self.stop_rules.iter_mut().find_map(|r| r.check(&info));
+        match fired {
+            None => ControlFlow::Continue(()),
+            Some(stop) => {
+                let report = self.make_report(stop);
+                self.finished = Some(report.clone());
+                ControlFlow::Break(report)
+            }
+        }
+    }
+
+    fn make_report(&mut self, stop: StopReason) -> RunReport {
+        let final_cost = flow::evaluate(self.problem, &self.phi, &self.lam).cost;
+        let report = RunReport {
+            algo: self.router.name().to_string(),
+            objective: final_cost,
+            lam: self.lam.clone(),
+            phi: Some(self.phi.clone()),
+            iterations: self.iter,
+            routing_iterations: self.iter,
+            stop,
+            elapsed_s: self.t0.elapsed().as_secs_f64(),
+        };
+        for obs in self.observers.iter_mut() {
+            obs.on_finish(&report);
+        }
+        report
+    }
+
+    /// Drive the run to completion.
+    pub fn finish(mut self) -> RunReport {
+        loop {
+            if let ControlFlow::Break(report) = self.step() {
+                return report;
+            }
+        }
+    }
+}
+
+/// A resumable allocation run: maximizes the observed total network utility
+/// one outer iteration per [`step`](AllocationRun::step), querying the
+/// oracle exactly like the legacy `Allocator::run` loop.
+pub struct AllocationRun<'a> {
+    allocator: Box<dyn Allocator>,
+    oracle: Box<dyn UtilityOracle>,
+    lam: Vec<f64>,
+    max_outer: usize,
+    stop_rules: Vec<Box<dyn StopRule + 'a>>,
+    observers: Vec<&'a mut dyn Observer>,
+    t0: Instant,
+    iter: usize,
+    finished: Option<RunReport>,
+}
+
+impl<'a> AllocationRun<'a> {
+    /// A run from the paper's uniform initializer `Λ¹ = (λ/W)·1`, stopping
+    /// when Λ stops moving (the allocator's own tolerance) or after
+    /// `max_outer` outer iterations — the exact semantics of the legacy
+    /// `Allocator::run`.
+    pub fn new(
+        allocator: Box<dyn Allocator>,
+        oracle: Box<dyn UtilityOracle>,
+        max_outer: usize,
+    ) -> Self {
+        let w_cnt = oracle.n_versions();
+        let total = oracle.total_rate();
+        let lam = vec![total / w_cnt as f64; w_cnt];
+        let tol = allocator.stop_tol();
+        AllocationRun {
+            allocator,
+            oracle,
+            lam,
+            max_outer,
+            // strict (<) matches the legacy Allocator::run boundary
+            stop_rules: vec![Box::new(ToleranceStrict(tol)), Box::new(MaxIters(max_outer))],
+            observers: Vec::new(),
+            t0: Instant::now(),
+            iter: 0,
+            finished: None,
+        }
+    }
+
+    /// Start from an existing allocation instead of the uniform initializer.
+    pub fn warm_start(mut self, lam: Vec<f64>) -> Self {
+        self.lam = lam;
+        self
+    }
+
+    /// Add a stop rule (checked after the defaults).
+    pub fn stop_when(mut self, rule: impl StopRule + 'a) -> Self {
+        self.stop_rules.push(Box::new(rule));
+        self
+    }
+
+    /// Add a wall-clock budget in seconds.
+    pub fn deadline(self, seconds: f64) -> Self {
+        self.stop_when(Deadline(seconds))
+    }
+
+    /// Attach an observer.
+    pub fn observe(mut self, obs: &'a mut dyn Observer) -> Self {
+        self.observers.push(obs);
+        self
+    }
+
+    /// Current allocation Λ.
+    pub fn lam(&self) -> &[f64] {
+        &self.lam
+    }
+
+    /// The oracle driving this run (e.g. to inject topology changes via
+    /// [`UtilityOracle::on_topology_change`]).
+    pub fn oracle_mut(&mut self) -> &mut dyn UtilityOracle {
+        self.oracle.as_mut()
+    }
+
+    /// Advance by one outer iteration (one utility observation at the
+    /// iterate plus one gradient-sampling update).
+    pub fn step(&mut self) -> ControlFlow<RunReport> {
+        if let Some(report) = &self.finished {
+            return ControlFlow::Break(report.clone());
+        }
+        // legacy `run(.., 0)` performs zero outer iterations (one final
+        // observation only); honor a zero budget before doing any work
+        if self.max_outer == 0 {
+            let report = self.make_report(StopReason::MaxIters);
+            self.finished = Some(report.clone());
+            return ControlFlow::Break(report);
+        }
+        let u_at_iterate = self.oracle.observe(&self.lam);
+        let (next, _grad) = self.allocator.outer_step(self.oracle.as_mut(), &self.lam);
+        let moved = lam_moved(&next, &self.lam);
+        self.lam = next;
+        self.iter += 1;
+        let info = StepInfo {
+            iter: self.iter,
+            objective: u_at_iterate,
+            moved,
+            elapsed_s: self.t0.elapsed().as_secs_f64(),
+            lam: &self.lam,
+        };
+        for obs in self.observers.iter_mut() {
+            obs.on_step(&info);
+        }
+        let fired = self.stop_rules.iter_mut().find_map(|r| r.check(&info));
+        match fired {
+            None => ControlFlow::Continue(()),
+            Some(stop) => {
+                let report = self.make_report(stop);
+                self.finished = Some(report.clone());
+                ControlFlow::Break(report)
+            }
+        }
+    }
+
+    fn make_report(&mut self, stop: StopReason) -> RunReport {
+        let final_u = self.oracle.observe(&self.lam);
+        let report = RunReport {
+            algo: self.allocator.name().to_string(),
+            objective: final_u,
+            lam: self.lam.clone(),
+            phi: self.oracle.current_phi().cloned(),
+            iterations: self.iter,
+            routing_iterations: self.oracle.routing_iterations(),
+            stop,
+            elapsed_s: self.t0.elapsed().as_secs_f64(),
+        };
+        for obs in self.observers.iter_mut() {
+            obs.on_finish(&report);
+        }
+        report
+    }
+
+    /// Drive the run to completion.
+    pub fn finish(mut self) -> RunReport {
+        loop {
+            if let ControlFlow::Break(report) = self.step() {
+                return report;
+            }
+        }
+    }
+}

@@ -41,6 +41,31 @@ impl Json {
         self.as_f64().map(|x| x as usize)
     }
 
+    /// Lossless u64 accessor: accepts integral non-negative numbers
+    /// *strictly below* 2^53 (where every integer is exactly representable
+    /// as `f64` — at 2^53 itself, 2^53+1 already collapses onto the same
+    /// double, so the boundary cannot be trusted) and decimal strings (the
+    /// serialization of larger values, see [`Json::from_u64`]).
+    pub fn as_u64(&self) -> Option<u64> {
+        const MAX_EXACT: f64 = 9_007_199_254_740_992.0; // 2^53
+        match self {
+            Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 && *x < MAX_EXACT => Some(*x as u64),
+            Json::Str(s) => s.parse().ok(),
+            _ => None,
+        }
+    }
+
+    /// Lossless u64 constructor: a JSON number when strictly below 2^53, a
+    /// decimal string from 2^53 up (JSON numbers are doubles; larger
+    /// integers would be silently corrupted).
+    pub fn from_u64(x: u64) -> Json {
+        if x < (1u64 << 53) {
+            Json::Num(x as f64)
+        } else {
+            Json::Str(x.to_string())
+        }
+    }
+
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -418,6 +443,28 @@ mod tests {
         let v = Json::Str("a\"b\\c\nd".into());
         assert_eq!(v.to_string(), r#""a\"b\\c\nd""#);
         assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
+    }
+
+    #[test]
+    fn u64_roundtrip_beyond_f64_precision() {
+        for x in [0u64, 42, 1 << 53, (1 << 53) + 1, u64::MAX] {
+            let j = Json::from_u64(x);
+            let text = j.to_string();
+            let back = Json::parse(&text).unwrap();
+            assert_eq!(back.as_u64(), Some(x), "via {text}");
+        }
+    }
+
+    #[test]
+    fn as_u64_rejects_lossy_values() {
+        assert_eq!(Json::Num(-1.0).as_u64(), None);
+        assert_eq!(Json::Num(1.5).as_u64(), None);
+        assert_eq!(Json::Num(1e18).as_u64(), None, "beyond exact f64 range");
+        // 2^53 itself is rejected: a hand-written 2^53+1 parses to the
+        // same double, so the boundary value is ambiguous
+        assert_eq!(Json::Num(9_007_199_254_740_992.0).as_u64(), None);
+        assert_eq!(Json::Str("not a number".into()).as_u64(), None);
+        assert_eq!(Json::Null.as_u64(), None);
     }
 
     #[test]

@@ -75,7 +75,7 @@ fn repeated_topology_changes_do_not_leak_state() {
     let mut problem = {
         let mut c = cfg.clone();
         c.n_nodes = 10;
-        c.build_problem(&mut rng)
+        c.build_problem(&mut rng).unwrap()
     };
     let mut oracle = SingleStepOracle::new(problem.clone(), us, 0.3);
     let alg = Omad::new(0.5, 0.05);
@@ -86,7 +86,7 @@ fn repeated_topology_changes_do_not_leak_state() {
         c.n_nodes = 10;
         c.seed = 100 + epoch;
         let mut rng2 = Rng::seed_from(c.seed);
-        problem = c.build_problem(&mut rng2);
+        problem = c.build_problem(&mut rng2).unwrap();
         jowr::allocation::UtilityOracle::on_topology_change(&mut oracle, &problem);
         for _ in 0..10 {
             let (next, _) = alg.outer_step(&mut oracle, &lam);
@@ -127,6 +127,7 @@ fn gsoma_survives_tiny_delta_and_huge_eta() {
 }
 
 #[test]
+#[cfg(feature = "xla")]
 fn corrupt_manifest_rejected_cleanly() {
     let dir = std::env::temp_dir().join("jowr_corrupt_manifest");
     std::fs::create_dir_all(&dir).unwrap();
@@ -137,8 +138,19 @@ fn corrupt_manifest_rejected_cleanly() {
 }
 
 #[test]
+#[cfg(feature = "xla")]
 fn unknown_artifact_errors_not_panics() {
     if let Some(mut rt) = jowr::runtime::XlaRuntime::try_default() {
         assert!(rt.execute("nonexistent_artifact", &[]).is_err());
     }
+}
+
+#[test]
+fn unknown_solver_names_error_cleanly() {
+    // registry dispatch: bad names are Err, not panic, everywhere
+    let session = Scenario::paper_default().nodes(8).build().unwrap();
+    assert!(session.router("definitely-not-a-router").is_err());
+    assert!(session.allocator("definitely-not-an-allocator").is_err());
+    assert!(session.routing_run("nope", 5).is_err());
+    assert!(session.allocation_run("nope", 5).is_err());
 }

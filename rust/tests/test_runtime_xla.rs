@@ -1,9 +1,10 @@
 //! Integration: the AOT artifacts round-trip through PJRT with numerics
 //! matching the native rust implementation (L1/L2 vs L3 cross-validation).
 //!
-//! These tests require `make artifacts`; they are skipped (with a loud
-//! message) when `artifacts/manifest.json` is absent so `cargo test` still
-//! runs on a fresh clone.
+//! These tests require the `xla` cargo feature plus `make artifacts`; they
+//! are skipped (with a loud message) when `artifacts/manifest.json` is
+//! absent so `cargo test` still runs on a fresh clone.
+#![cfg(feature = "xla")]
 
 use jowr::model::flow::{self, Phi};
 use jowr::prelude::*;

@@ -1,0 +1,266 @@
+//! Integration: the unified session API.
+//!
+//! Covers registry lookup (known + unknown names), `Scenario` builder
+//! validation, and — the load-bearing guarantee — that streaming
+//! `Run::step()`-driven execution reproduces the legacy `Router::solve` /
+//! `Allocator::run` loops bit for bit on seeded problems, both cold and
+//! warm-started.
+
+use std::ops::ControlFlow;
+
+use jowr::allocation::AnalyticOracle;
+use jowr::model::flow::Phi;
+use jowr::prelude::*;
+
+fn small_session() -> Session {
+    Scenario::paper_default().nodes(12).seed(7).build().unwrap()
+}
+
+#[test]
+fn registry_lists_all_paper_algorithms() {
+    for name in ["omd", "omd-fixed", "sgp", "gp", "opt"] {
+        let r = registry::router(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(!r.name().is_empty());
+        let entry = registry::router_entry(name).unwrap();
+        assert!(!entry.description.is_empty());
+    }
+    for name in ["gsoma", "omad"] {
+        let a = registry::allocator(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(!a.name().is_empty());
+    }
+}
+
+#[test]
+fn registry_unknown_names_are_errors_with_suggestions() {
+    let err = registry::router("omd2").unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("omd2") && msg.contains("sgp"), "{msg}");
+    let err = registry::allocator("gs-oma").unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("gs-oma") && msg.contains("gsoma"), "{msg}");
+}
+
+#[test]
+fn scenario_builder_validates_everything() {
+    assert!(Scenario::paper_default().build().is_ok());
+    assert!(Scenario::paper_default().topology("nope").build().is_err());
+    assert!(Scenario::paper_default().utility("nope").build().is_err());
+    assert!(Scenario::paper_default().cost_named("nope").build().is_err());
+    assert!(Scenario::paper_default().versions(0).build().is_err());
+    assert!(Scenario::paper_default().rate(-1.0).build().is_err());
+    assert!(Scenario::paper_default().link_probability(2.0).build().is_err());
+    assert!(Scenario::paper_default().eta_routing(-0.5).build().is_err());
+    assert!(Scenario::paper_default().delta(40.0).build().is_err());
+}
+
+#[test]
+fn every_router_runs_by_name_through_the_session() {
+    let session = small_session();
+    for name in registry::router_names() {
+        let report = session
+            .routing_run(name, 5)
+            .unwrap_or_else(|e| panic!("{name}: {e}"))
+            .finish();
+        assert!(report.objective.is_finite(), "{name}");
+        assert!(report.iterations >= 1 && report.iterations <= 5, "{name}");
+        let phi = report.phi.expect("routing runs expose phi");
+        phi.is_feasible(&session.problem.net, 1e-9).unwrap_or_else(|e| panic!("{name}: {e}"));
+    }
+}
+
+#[test]
+fn both_allocators_run_by_name_through_the_session() {
+    let session = Scenario::paper_default().nodes(8).seed(3).build().unwrap();
+    for name in registry::allocator_names() {
+        let report = session
+            .allocation_run(name, 4)
+            .unwrap_or_else(|e| panic!("{name}: {e}"))
+            .finish();
+        assert!(report.objective.is_finite(), "{name}");
+        let total: f64 = report.lam.iter().sum();
+        assert!((total - session.cfg.total_rate).abs() < 1e-6, "{name}: {total}");
+    }
+}
+
+#[test]
+fn streaming_routing_run_matches_legacy_solve_bit_for_bit() {
+    let session = small_session();
+    let lam = session.uniform_allocation();
+
+    // legacy path: Router::solve from the uniform initializer
+    let mut legacy_router = OmdRouter::new(session.cfg.eta_routing);
+    let legacy = legacy_router.solve(&session.problem, &lam, 40);
+
+    // session path: streaming run + trajectory observer
+    let mut traj = Trajectory::default();
+    let report = session.routing_run("omd", 40).unwrap().observe(&mut traj).finish();
+
+    assert_eq!(report.iterations, legacy.iterations);
+    assert_eq!(report.objective.to_bits(), legacy.cost.to_bits());
+    assert_eq!(traj.values.len(), legacy.trajectory.len());
+    for (i, (a, b)) in traj.values.iter().zip(&legacy.trajectory).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "trajectory diverged at {i}: {a} vs {b}");
+    }
+    let phi = report.phi.unwrap();
+    for (ra, rb) in phi.frac.iter().zip(&legacy.phi.frac) {
+        for (a, b) in ra.iter().zip(rb) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}
+
+#[test]
+fn warm_started_run_matches_legacy_solve_from_bit_for_bit() {
+    let session = small_session();
+    let lam = session.uniform_allocation();
+
+    // evolve a warm routing state through the session API
+    let warm = session.routing_run("omd", 15).unwrap().finish().phi.unwrap();
+
+    // legacy continuation: fresh router, warm phi
+    let mut phi_legacy = warm.clone();
+    let mut legacy_router = OmdRouter::new(session.cfg.eta_routing);
+    let legacy = legacy_router.solve_from(&session.problem, &lam, &mut phi_legacy, 25);
+
+    // streaming continuation: fresh router, same warm phi
+    let mut traj = Trajectory::default();
+    let report = session
+        .routing_run("omd", 25)
+        .unwrap()
+        .warm_start(warm)
+        .observe(&mut traj)
+        .finish();
+
+    assert_eq!(report.iterations, legacy.iterations);
+    assert_eq!(report.objective.to_bits(), legacy.cost.to_bits());
+    for (a, b) in traj.values.iter().zip(&legacy.trajectory) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+#[test]
+fn streaming_allocation_run_matches_legacy_run_bit_for_bit() {
+    let session = Scenario::paper_default().nodes(8).seed(5).build().unwrap();
+
+    // legacy path: Allocator::run against a fresh analytic oracle
+    let mut oracle = AnalyticOracle::new(session.problem.clone(), session.utilities().unwrap());
+    oracle.router_eta = session.cfg.eta_routing;
+    let mut legacy_alg = GsOma::new(session.cfg.delta, session.cfg.eta_alloc);
+    let legacy = legacy_alg.run(&mut oracle, 8);
+
+    // session path: the oracle/allocator pair is wired by name
+    let mut traj = Trajectory::default();
+    let report = session.allocation_run("gsoma", 8).unwrap().observe(&mut traj).finish();
+
+    assert_eq!(report.iterations, legacy.iterations);
+    assert_eq!(report.routing_iterations, legacy.routing_iterations);
+    assert_eq!(traj.values.len(), legacy.trajectory.len());
+    for (a, b) in traj.values.iter().zip(&legacy.trajectory) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    for (a, b) in report.lam.iter().zip(&legacy.lam) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+#[test]
+fn step_returns_continue_until_a_stop_rule_fires() {
+    let session = small_session();
+    let mut run = session.routing_run("omd", 6).unwrap();
+    let mut continues = 0;
+    let report = loop {
+        match run.step() {
+            ControlFlow::Continue(()) => continues += 1,
+            ControlFlow::Break(report) => break report,
+        }
+    };
+    assert_eq!(continues, report.iterations - 1, "the stopping step is included");
+    // stepping a finished run re-reports without advancing
+    let again = match run.step() {
+        ControlFlow::Break(r) => r,
+        ControlFlow::Continue(()) => panic!("finished run must not continue"),
+    };
+    assert_eq!(again.iterations, report.iterations);
+}
+
+#[test]
+fn stop_rules_fire_with_the_right_reason() {
+    let session = small_session();
+    // iteration budget
+    let r = session.routing_run("omd", 3).unwrap().finish();
+    assert_eq!(r.stop, StopReason::MaxIters);
+    assert_eq!(r.iterations, 3);
+    // convergence (generous budget, adaptive OMD stalls out)
+    let r = session.routing_run("omd", 100_000).unwrap().finish();
+    assert_eq!(r.stop, StopReason::Converged);
+    assert!(r.iterations < 100_000);
+    // wall-clock deadline beats the iteration budget
+    let r = session.routing_run("omd", 1_000_000).unwrap().deadline(0.0).finish();
+    assert_eq!(r.stop, StopReason::Deadline);
+    assert_eq!(r.iterations, 1);
+}
+
+#[test]
+fn zero_iteration_budget_matches_legacy_semantics() {
+    let session = small_session();
+    let lam = session.uniform_allocation();
+    // legacy solve(.., 0): zero iterations, trajectory = [initial cost]
+    let legacy = OmdRouter::new(session.cfg.eta_routing).solve(&session.problem, &lam, 0);
+    let mut traj = Trajectory::default();
+    let report = session.routing_run("omd", 0).unwrap().observe(&mut traj).finish();
+    assert_eq!(report.iterations, 0);
+    assert_eq!(report.stop, StopReason::MaxIters);
+    assert_eq!(legacy.iterations, 0);
+    assert_eq!(traj.values.len(), legacy.trajectory.len());
+    assert_eq!(traj.values[0].to_bits(), legacy.trajectory[0].to_bits());
+}
+
+#[test]
+fn opt_through_the_registry_matches_the_direct_solver() {
+    let session = Scenario::paper_default().nodes(10).seed(1).build().unwrap();
+    let lam = session.uniform_allocation();
+    let direct = OptRouter::new().solve(&session.problem, &lam);
+    let report = session.routing_run("opt", 3).unwrap().finish();
+    let rel = (report.objective - direct.cost).abs() / direct.cost.abs().max(1.0);
+    assert!(rel < 1e-6, "registry OPT {} vs direct {}", report.objective, direct.cost);
+    // the full solve happens in one step; the second detects the fixed point
+    assert!(report.iterations <= 2, "{}", report.iterations);
+}
+
+#[test]
+fn observers_see_every_step_and_the_finish() {
+    struct Counter {
+        steps: usize,
+        finished: usize,
+        last_iter: usize,
+    }
+    impl Observer for Counter {
+        fn on_step(&mut self, info: &StepInfo<'_>) {
+            self.steps += 1;
+            self.last_iter = info.iter;
+            assert!(info.objective.is_finite());
+            assert!(info.moved >= 0.0);
+        }
+        fn on_finish(&mut self, report: &RunReport) {
+            self.finished += 1;
+            assert_eq!(self.last_iter, report.iterations);
+        }
+    }
+    let session = small_session();
+    let mut counter = Counter { steps: 0, finished: 0, last_iter: 0 };
+    let report = session.routing_run("sgp", 5).unwrap().observe(&mut counter).finish();
+    assert_eq!(counter.steps, report.iterations);
+    assert_eq!(counter.finished, 1);
+}
+
+#[test]
+fn allocation_run_exposes_phi_for_single_loop_oracles() {
+    let session = Scenario::paper_default().nodes(8).seed(2).build().unwrap();
+    let report = session.allocation_run("omad", 3).unwrap().finish();
+    let phi: Phi = report.phi.expect("single-step oracle keeps a persistent phi");
+    phi.is_feasible(&session.problem.net, 1e-9).unwrap();
+    // the nested-loop oracle re-solves from scratch per observation and
+    // keeps no persistent routing state
+    let report = session.allocation_run("gsoma", 3).unwrap().finish();
+    assert!(report.phi.is_none());
+}
