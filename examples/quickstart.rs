@@ -65,15 +65,24 @@ fn main() -> Result<(), SessionError> {
     let total: f64 = report.lam.iter().sum();
     println!("allocation sums to λ = {total}");
 
-    // 4. inspect the converged routing: per-version serving rates
+    // 4. inspect the converged routing with the same fused FlowEngine
+    //    sweep the solvers run on. Sessions sweep in parallel when you ask
+    //    for workers — `.workers(k)` on the Scenario (0 = auto) or
+    //    `--workers k` on the CLI — and results are bit-identical at any
+    //    worker count, so parallelism is purely a wall-clock knob.
     if let Some(phi) = &report.phi {
-        let ev = jowr::model::flow::evaluate(&session.problem, phi, &report.lam);
+        let mut engine = FlowEngine::new();
+        let cost = engine.evaluate_cost(&session.problem, phi, &report.lam);
         println!("\nper-version delivered rates at the virtual destinations:");
         for w in 0..session.problem.n_versions() {
             let dw = session.problem.net.dnode(w);
-            println!("  version {w}: {:.3} fps (allocated {:.3})", ev.t[w][dw], report.lam[w]);
+            println!(
+                "  version {w}: {:.3} fps (allocated {:.3})",
+                engine.node_rate(w, dw),
+                report.lam[w]
+            );
         }
-        println!("total network cost at Λ*: {:.4}", ev.cost);
+        println!("total network cost at Λ*: {cost:.4}");
     }
     println!("observed total network utility: {:.4}", report.objective);
     Ok(())

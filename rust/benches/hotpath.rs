@@ -1,14 +1,29 @@
-//! Bench: hot-path microbenchmarks + native-vs-XLA ablation.
+//! Bench: hot-path microbenchmarks — fused engine vs legacy four-sweep —
+//! plus the native-vs-XLA ablation.
 //!
-//! Covers the per-iteration cost breakdown of OMD-RT (flow propagation,
-//! marginal sweep, mirror update) on paper-sized instances, and compares
-//! the native rust mirror/routing step against the AOT-compiled XLA
-//! artifacts when `artifacts/` is present. Feeds EXPERIMENTS.md §Perf.
+//! Covers the per-iteration cost breakdown of OMD-RT on paper-sized
+//! instances three ways:
+//!
+//! * the **reference** sweeps (`flow::node_rates` / `flow::edge_flows` /
+//!   `flow::total_cost` / `marginal::compute`, freshly allocated every
+//!   call — the pre-engine hot path),
+//! * the **engine** fused forward+reverse sweep ([`FlowEngine::prepare`])
+//!   at 1, 2, and 4 workers (thread-scaling rows), and
+//! * full `omd_full_iteration` / `sgp_full_iteration` solver steps, with a
+//!   faithfully reconstructed legacy OMD iteration as the baseline.
+//!
+//! Emits every measurement plus the engine-vs-legacy speedups as JSON to
+//! `BENCH_hotpath.json` (written to the current directory) and asserts the
+//! two shape invariants: the fused single-threaded engine beats the legacy
+//! four-sweep iteration, and one OMD iteration stays far cheaper than one
+//! SGP iteration (the Fig. 9 effect at micro scale). Run with `--quick`
+//! for the CI smoke configuration.
 
 use jowr::model::flow::{self, Phi};
 use jowr::prelude::*;
 use jowr::routing::marginal;
 use jowr::util::bench::Bencher;
+use jowr::util::json::Json;
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
@@ -23,27 +38,61 @@ fn main() {
         let flows = flow::edge_flows(&problem.net, &phi, &t);
 
         println!("--- ER({n}) hot path ---");
-        b.bench(&format!("n{n}/flow_propagation"), || {
+        // reference sweeps (the pre-engine implementation, kept as the
+        // equivalence baseline)
+        b.bench(&format!("n{n}/ref_flow_propagation"), || {
             flow::node_rates(&problem.net, &phi, &lam)
         });
-        b.bench(&format!("n{n}/edge_flows"), || {
+        b.bench(&format!("n{n}/ref_edge_flows"), || {
             flow::edge_flows(&problem.net, &phi, &t)
         });
-        b.bench(&format!("n{n}/marginal_broadcast"), || {
+        b.bench(&format!("n{n}/ref_marginal_broadcast"), || {
             marginal::compute(&problem.net, problem.cost, &phi, &flows)
         });
-        b.bench(&format!("n{n}/omd_full_iteration"), || {
-            // registry-built router, one streaming iteration
-            let mut r = session.router("omd").expect("registry omd");
-            let mut p = phi.clone();
-            r.step(problem, &lam, &mut p);
-            p
+        b.bench(&format!("n{n}/ref_four_sweep"), || {
+            let t = flow::node_rates(&problem.net, &phi, &lam);
+            let flows = flow::edge_flows(&problem.net, &phi, &t);
+            let cost = flow::total_cost(&problem.net, problem.cost, &flows);
+            let m = marginal::compute(&problem.net, problem.cost, &phi, &flows);
+            (cost, m.dprime.len())
         });
+
+        // engine fused sweeps + thread scaling (per-session parallelism;
+        // results are bit-identical at every worker count)
+        let mut cost_w1 = 0.0;
+        for &workers in &[1usize, 2, 4] {
+            let mut eng = FlowEngine::new().with_workers(workers);
+            let c = eng.prepare(problem, &phi, &lam); // warm-up: allocate once
+            if workers == 1 {
+                cost_w1 = c;
+            } else {
+                assert_eq!(
+                    c.to_bits(),
+                    cost_w1.to_bits(),
+                    "engine must be bit-identical at {workers} workers"
+                );
+            }
+            b.bench(&format!("n{n}/engine_fused_prepare_w{workers}"), || {
+                eng.prepare(problem, &phi, &lam)
+            });
+        }
+
+        // full solver iterations: engine-backed registry router vs the
+        // reconstructed legacy iteration (four sweeps + eq. 22 row update)
+        let mut p_buf = phi.clone();
+        let mut omd = session.router("omd").expect("registry omd");
+        b.bench(&format!("n{n}/omd_full_iteration"), || {
+            p_buf.clone_from(&phi);
+            omd.step(problem, &lam, &mut p_buf)
+        });
+        b.bench(&format!("n{n}/omd_legacy_iteration"), || {
+            p_buf.clone_from(&phi);
+            legacy_omd_iteration(problem, &lam, &mut p_buf, session.cfg.eta_routing)
+        });
+        let mut sgp = session.router("sgp").expect("registry sgp");
         b.bench(&format!("n{n}/sgp_full_iteration"), || {
-            let mut r = session.router("sgp").expect("registry sgp");
-            let mut p = phi.clone();
-            r.step(problem, &lam, &mut p);
-            p
+            p_buf.clone_from(&phi);
+            sgp.step(problem, &lam, &mut p_buf)
         });
 
         // native vs XLA ablation (skipped gracefully without artifacts)
@@ -79,21 +128,120 @@ fn main() {
     for m in &b.results {
         println!("{}", m.report());
     }
-    // shape assertion: one OMD iteration must be far cheaper than one SGP
-    // iteration (the Fig. 9 effect at micro scale)
-    let omd = b
-        .results
-        .iter()
-        .find(|m| m.name == "n40/omd_full_iteration")
-        .map(|m| m.median_s());
-    let sgp = b
-        .results
-        .iter()
-        .find(|m| m.name == "n40/sgp_full_iteration")
-        .map(|m| m.median_s());
+
+    // speedup rows: engine vs legacy, per instance size + thread scaling
+    let mut speedups: Vec<(String, f64)> = Vec::new();
+    for &n in &[25usize, 40] {
+        if let (Some(sweep_ref), Some(sweep_eng)) = (
+            median(&b, &format!("n{n}/ref_four_sweep")),
+            median(&b, &format!("n{n}/engine_fused_prepare_w1")),
+        ) {
+            speedups.push((format!("n{n}/fused_sweep_vs_reference"), sweep_ref / sweep_eng));
+        }
+        if let (Some(legacy), Some(engine)) = (
+            median(&b, &format!("n{n}/omd_legacy_iteration")),
+            median(&b, &format!("n{n}/omd_full_iteration")),
+        ) {
+            speedups.push((format!("n{n}/omd_engine_vs_legacy"), legacy / engine));
+        }
+        if let Some(w1) = median(&b, &format!("n{n}/engine_fused_prepare_w1")) {
+            for &workers in &[2usize, 4] {
+                if let Some(wk) = median(&b, &format!("n{n}/engine_fused_prepare_w{workers}")) {
+                    speedups.push((format!("n{n}/thread_scaling_w{workers}"), w1 / wk));
+                }
+            }
+        }
+    }
+    for (name, x) in &speedups {
+        println!("{name:<40} {x:.2}x");
+    }
+
+    // JSON dump for the perf trajectory (BENCH_*.json)
+    let results = Json::Arr(
+        b.results
+            .iter()
+            .map(|m| {
+                Json::obj(vec![
+                    ("name", Json::from(m.name.as_str())),
+                    ("median_s", Json::from(m.median_s())),
+                    ("mad_s", Json::from(m.mad_s())),
+                    ("min_s", Json::from(m.min_s())),
+                    ("samples", Json::from(m.samples.len())),
+                ])
+            })
+            .collect(),
+    );
+    let speedup_json =
+        Json::Obj(speedups.iter().map(|(k, v)| (k.clone(), Json::from(*v))).collect());
+    let doc = Json::obj(vec![
+        ("bench", Json::from("hotpath")),
+        ("quick", Json::from(quick)),
+        ("results", results),
+        ("speedups", speedup_json),
+    ]);
+    match std::fs::write("BENCH_hotpath.json", doc.to_string()) {
+        Ok(()) => println!("\nwrote BENCH_hotpath.json"),
+        Err(e) => println!("\n(could not write BENCH_hotpath.json: {e})"),
+    }
+
+    // shape assertions
+    for &n in &[25usize, 40] {
+        let engine = median(&b, &format!("n{n}/omd_full_iteration"));
+        let legacy = median(&b, &format!("n{n}/omd_legacy_iteration"));
+        if let (Some(e), Some(l)) = (engine, legacy) {
+            println!("n{n} OMD iteration engine vs legacy: {:.2}x", l / e);
+            assert!(
+                e < l,
+                "fused engine ({e:.3e}s) must beat legacy four-sweep ({l:.3e}s) at n={n}"
+            );
+        }
+    }
+    // one OMD iteration must stay far cheaper than one SGP iteration
+    // (the Fig. 9 effect at micro scale)
+    let omd = median(&b, "n40/omd_full_iteration");
+    let sgp = median(&b, "n40/sgp_full_iteration");
     if let (Some(o), Some(s)) = (omd, sgp) {
         println!("n40 per-iteration speedup OMD vs SGP: {:.1}x", s / o);
         assert!(s / o > 3.0, "OMD iteration should be much cheaper than SGP");
     }
     println!("hotpath OK");
+}
+
+fn median(b: &Bencher, name: &str) -> Option<f64> {
+    b.results.iter().find(|m| m.name == name).map(|m| m.median_s())
+}
+
+/// The pre-engine OMD-RT iteration, reconstructed verbatim: four separate
+/// reference sweeps over freshly allocated nested state, then the eq. 22
+/// row update over `session_routers`.
+fn legacy_omd_iteration(problem: &Problem, lam: &[f64], phi: &mut Phi, eta: f64) -> f64 {
+    let net = &problem.net;
+    let t = flow::node_rates(net, phi, lam);
+    let flows = flow::edge_flows(net, phi, &t);
+    let cost_before = flow::total_cost(net, problem.cost, &flows);
+    let m = marginal::compute(net, problem.cost, phi, &flows);
+    let mut row = Vec::new();
+    let mut delta = Vec::new();
+    for w in 0..net.n_versions() {
+        for &i in net.session_routers(w) {
+            if t[w][i] <= 0.0 {
+                continue;
+            }
+            let lanes = net.lanes(w, i);
+            if lanes.len() < 2 {
+                continue;
+            }
+            row.clear();
+            delta.clear();
+            for &e in lanes {
+                row.push(phi.frac[w][e]);
+                delta.push(m.delta(net, w, e));
+            }
+            jowr::routing::omd::OmdRouter::update_row(&mut row, &delta, eta);
+            for (&e, &v) in lanes.iter().zip(&row) {
+                phi.frac[w][e] = v;
+            }
+        }
+    }
+    cost_before
 }

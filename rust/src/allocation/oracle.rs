@@ -9,7 +9,7 @@
 //! serving simulator with real DNN latencies — lives in
 //! [`crate::coordinator::serving`].
 
-use crate::model::flow::{self, Phi};
+use crate::model::flow::Phi;
 use crate::model::utility::Utility;
 use crate::model::Problem;
 use crate::routing::omd::OmdRouter;
@@ -153,10 +153,12 @@ impl UtilityOracle for SingleStepOracle {
     fn observe(&mut self, lam: &[f64]) -> f64 {
         self.observations += 1;
         self.routing_iters += 1;
-        // one mirror-descent routing iteration on the persistent state
+        // one mirror-descent routing iteration on the persistent state,
+        // then one fused forward sweep for the post-step cost — reusing
+        // the router's engine workspaces (no second workspace set)
         self.router.step(&self.problem, lam, &mut self.phi);
-        let ev = flow::evaluate(&self.problem, &self.phi, lam);
-        self.true_task_utility(lam) - ev.cost
+        let cost = self.router.engine_mut().evaluate_cost(&self.problem, &self.phi, lam);
+        self.true_task_utility(lam) - cost
     }
 
     fn total_rate(&self) -> f64 {

@@ -40,6 +40,10 @@ pub struct ExperimentConfig {
     /// Gradient-sampling disturbance δ.
     pub delta: f64,
     pub seed: u64,
+    /// Engine worker threads for the per-session flow/marginal sweeps
+    /// (`0` = auto-detect, `1` = single-threaded). Results are
+    /// bit-identical at any value; this only trades wall-clock for cores.
+    pub workers: usize,
 }
 
 impl ExperimentConfig {
@@ -59,6 +63,7 @@ impl ExperimentConfig {
             eta_alloc: 0.05,
             delta: 0.5,
             seed: 42,
+            workers: 1,
         }
     }
 
@@ -113,6 +118,9 @@ impl ExperimentConfig {
         if let Some(x) = j.get("delta").as_f64() {
             c.delta = x;
         }
+        if let Some(x) = j.get("workers").as_usize() {
+            c.workers = x;
+        }
         if !matches!(j.get("seed"), Json::Null) {
             c.seed = j
                 .get("seed")
@@ -148,6 +156,7 @@ impl ExperimentConfig {
             ("eta_routing", Json::from(self.eta_routing)),
             ("eta_alloc", Json::from(self.eta_alloc)),
             ("delta", Json::from(self.delta)),
+            ("workers", Json::from(self.workers)),
             // u64-safe: seeds beyond 2^53 are not representable as JSON
             // numbers and round-trip as decimal strings
             ("seed", Json::from_u64(self.seed)),
@@ -180,13 +189,15 @@ mod tests {
 
     #[test]
     fn json_roundtrip() {
-        let c = ExperimentConfig::paper_default();
+        let mut c = ExperimentConfig::paper_default();
+        c.workers = 4;
         let text = c.to_json().to_string();
         let c2 = ExperimentConfig::from_json(&text).unwrap();
         assert_eq!(c2.n_nodes, c.n_nodes);
         assert_eq!(c2.cost, c.cost);
         assert_eq!(c2.utility, c.utility);
         assert_eq!(c2.seed, c.seed);
+        assert_eq!(c2.workers, 4);
     }
 
     #[test]

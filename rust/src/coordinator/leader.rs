@@ -10,8 +10,9 @@ use std::sync::mpsc::Receiver;
 use super::messages::Msg;
 use super::net::Fabric;
 use super::node::{NodeActor, NodeSpec, OutLane, Peer};
+use crate::engine::FlowEngine;
 use crate::graph::augmented::AugmentedNet;
-use crate::model::flow::{self, Phi};
+use crate::model::flow::Phi;
 use crate::model::Problem;
 use crate::routing::omd::OmdRouter;
 use crate::routing::RoutingState;
@@ -124,8 +125,11 @@ impl DistributedOmd {
         let mut trajectory = Vec::with_capacity(rounds + 1);
         let mut eta_cur = self.eta;
         let mut last_cost = None;
+        // leader-side cost telemetry via the fused engine sweep (the
+        // distributed algorithm itself stays message-passing only)
+        let mut engine = FlowEngine::new();
         for round in 0..rounds {
-            let cost = flow::evaluate(problem, &phi, lam).cost;
+            let cost = engine.evaluate_cost(problem, &phi, lam);
             trajectory.push(cost);
             // same backtracking rule as the centralized router: the leader
             // aggregates the total cost along the broadcast tree
@@ -135,7 +139,7 @@ impl DistributedOmd {
                 problem, lam, &mut phi, &s_lanes, &fabric, &leader_rx, round as u64, eta_cur,
             );
         }
-        let final_cost = flow::evaluate(problem, &phi, lam).cost;
+        let final_cost = engine.evaluate_cost(problem, &phi, lam);
         trajectory.push(final_cost);
 
         fabric.broadcast(Msg::Shutdown);

@@ -1,0 +1,479 @@
+//! # FlowEngine — the per-iteration numerical core
+//!
+//! Every solver iteration in this crate needs the same four quantities at
+//! the current operating point `(Λ, φ)`:
+//!
+//! * per-session node ingress rates `t_i(w)` (paper eq. 1–3),
+//! * total link flows `F_ij` (eq. 4),
+//! * the total network cost `Σ D_ij(F_ij, C_ij)` (the objective of P2),
+//! * the marginals `D'_ij` and `∂D/∂r_i(w)` (eqs. 18–21, Gallager's
+//!   broadcast recursion).
+//!
+//! The reference implementations in [`crate::model::flow`] and
+//! [`crate::routing::marginal`] compute them as four separate sweeps over
+//! nested `Vec<Vec<f64>>` state, re-allocated on every call. This module
+//! replaces that hot path with an engine that owns flat, reusable
+//! workspaces and runs exactly **two fused sweeps** per iteration over the
+//! flat CSR lane index ([`FlowCsr`]) precomputed by
+//! [`AugmentedNet::rebuild_session_dags`]:
+//!
+//! * **Forward sweep** ([`FlowEngine::forward_sweep`]) — one pass per
+//!   session in forward topological row order computes `t_i(w)` (eq. 1),
+//!   the per-session link flows, and — after a fixed-order reduction
+//!   across sessions — `F_ij` (eq. 4) and the total cost, all at once.
+//! * **Reverse sweep** ([`FlowEngine::reverse_sweep`]) — one pass in
+//!   reverse row order computes the link marginals `D'_ij` (the derivative
+//!   in eq. 19) and broadcasts the node marginals
+//!   `∂D/∂r_i(w) = Σ_j φ_ij (D'_ij + ∂D/∂r_j(w))` (eqs. 20–21) upstream.
+//!
+//! [`FlowEngine::prepare`] runs both and leaves every quantity readable
+//! through `O(1)` accessors — this is what [`crate::routing::omd::OmdRouter`]
+//! and the other routers call once per iteration before their row updates
+//! (eq. 18: `∂D/∂φ_ij(w) = t_i(w)·δφ_ij(w)`).
+//!
+//! ## Determinism and parallelism
+//!
+//! The per-session sweeps are independent (the paper's sessions only couple
+//! through `F_ij`, which the engine reduces sequentially in session order),
+//! so the engine distributes sessions over `std::thread::scope` workers.
+//! Worker assignment affects scheduling only: each session's floating-point
+//! operations are identical on any thread, and the cross-session flow
+//! reduction and cost sum always run on the caller thread in ascending
+//! session order — engine results are **bit-identical at any worker
+//! count** (asserted by `tests/test_engine_equivalence.rs`). The worker
+//! count comes from `Scenario::workers` / the CLI `--workers` flag through
+//! the solver registry; `0` means auto (`std::thread::available_parallelism`).
+//!
+//! After the first call on a given topology the engine performs **zero
+//! allocations**: workspaces are sized by [`FlowEngine::bind`] and reused
+//! until the topology shape changes.
+
+use crate::graph::augmented::{AugmentedNet, FlowCsr};
+use crate::model::cost::CostKind;
+use crate::model::flow::Phi;
+use crate::model::Problem;
+
+/// Fused flow/marginal evaluator with engine-owned flat workspaces.
+///
+/// See the [module docs](self) for the sweep structure. A `FlowEngine` is
+/// cheap to construct (workspaces are allocated lazily on first use) and is
+/// typically owned by a solver for its whole lifetime.
+#[derive(Clone, Debug)]
+pub struct FlowEngine {
+    /// Requested worker threads for the per-session sweeps (0 = auto).
+    workers: usize,
+    /// Cached auto-detected core count (0 = not yet queried); avoids a
+    /// `available_parallelism` syscall on every sweep when `workers == 0`.
+    workers_auto: usize,
+    n_nodes: usize,
+    n_edges: usize,
+    w_cnt: usize,
+    /// `t[w*n_nodes + i]` — session ingress rates (eq. 1).
+    t: Vec<f64>,
+    /// `r[w*n_nodes + i]` — node marginals `∂D/∂r_i(w)` (eqs. 20–21).
+    r: Vec<f64>,
+    /// Per-session flow partials, session-major (`w*n_edges + e`).
+    sess_flows: Vec<f64>,
+    /// Total link flows `F_ij` (eq. 4).
+    flows: Vec<f64>,
+    /// Link marginals `D'_ij` (eq. 19).
+    dprime: Vec<f64>,
+    /// Total network cost at the last forward sweep.
+    cost: f64,
+}
+
+impl Default for FlowEngine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FlowEngine {
+    /// A single-threaded engine (workspaces allocated on first use).
+    pub fn new() -> Self {
+        FlowEngine {
+            workers: 1,
+            workers_auto: 0,
+            n_nodes: 0,
+            n_edges: 0,
+            w_cnt: 0,
+            t: Vec::new(),
+            r: Vec::new(),
+            sess_flows: Vec::new(),
+            flows: Vec::new(),
+            dprime: Vec::new(),
+            cost: 0.0,
+        }
+    }
+
+    /// Builder-style worker-count override (`0` = auto-detect).
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    /// Set the worker count for subsequent sweeps (`0` = auto-detect).
+    pub fn set_workers(&mut self, workers: usize) {
+        self.workers = workers;
+    }
+
+    /// Requested worker count (`0` = auto).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// (Re)size the workspaces for `net`'s shape. Idempotent and cheap when
+    /// the shape is unchanged — the hot loops allocate nothing after the
+    /// first call.
+    pub fn bind(&mut self, net: &AugmentedNet) {
+        let (nn, ne, wc) = (net.n_nodes(), net.graph.n_edges(), net.n_versions());
+        if self.n_nodes != nn || self.n_edges != ne || self.w_cnt != wc {
+            self.n_nodes = nn;
+            self.n_edges = ne;
+            self.w_cnt = wc;
+            self.t = vec![0.0; wc * nn];
+            self.r = vec![0.0; wc * nn];
+            self.sess_flows = vec![0.0; wc * ne];
+            self.flows = vec![0.0; ne];
+            self.dprime = vec![0.0; ne];
+        }
+    }
+
+    fn effective_workers(&mut self, n_units: usize) -> usize {
+        let requested = if self.workers == 0 {
+            if self.workers_auto == 0 {
+                self.workers_auto =
+                    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            }
+            self.workers_auto
+        } else {
+            self.workers
+        };
+        requested.clamp(1, n_units.max(1))
+    }
+
+    /// Fused forward sweep (eqs. 1 + 4 + the P2 objective): per-session
+    /// ingress rates, link flows, and total cost in one pass per session.
+    /// Returns the total network cost.
+    pub fn forward_sweep(
+        &mut self,
+        net: &AugmentedNet,
+        cost: CostKind,
+        phi: &Phi,
+        lam: &[f64],
+    ) -> f64 {
+        self.bind(net);
+        assert_eq!(lam.len(), self.w_cnt);
+        let (nn, ne) = (self.n_nodes, self.n_edges);
+        let workers = self.effective_workers(self.w_cnt);
+        let csr = &net.csr;
+        {
+            let mut units: Vec<ForwardUnit<'_>> = self
+                .t
+                .chunks_mut(nn)
+                .zip(self.sess_flows.chunks_mut(ne))
+                .zip(phi.frac.iter().zip(lam))
+                .enumerate()
+                .map(|(w, ((t_w, f_w), (phi_w, &lam_w)))| ForwardUnit {
+                    w,
+                    lam_w,
+                    phi_w,
+                    t_w,
+                    f_w,
+                })
+                .collect();
+            run_units(workers, &mut units, |u| forward_session(csr, u));
+        }
+        // Deterministic reduction: total flows accumulate per edge in
+        // ascending session order on the caller thread, exactly like the
+        // reference `flow::edge_flows` — independent of the worker count.
+        self.flows.fill(0.0);
+        for w in 0..self.w_cnt {
+            let f_w = &self.sess_flows[w * ne..(w + 1) * ne];
+            let (l0, l1) = csr.session_lane_span[w];
+            for &e in &csr.lane_edge[l0..l1] {
+                self.flows[e] += f_w[e];
+            }
+        }
+        // Cost over the session-usable edge set, in `union_edges` order
+        // (mirrors the reference `flow::total_cost`).
+        let mut total = 0.0;
+        for &e in &net.union_edges {
+            total += cost.value(self.flows[e], net.graph.edge(e).capacity);
+        }
+        self.cost = total;
+        total
+    }
+
+    /// Fused reverse sweep (eqs. 18–21): link marginals `D'_ij` plus the
+    /// broadcast node marginals `∂D/∂r_i(w)`, one reverse pass per session.
+    /// Requires a prior [`FlowEngine::forward_sweep`] on the same state.
+    pub fn reverse_sweep(&mut self, net: &AugmentedNet, cost: CostKind, phi: &Phi) {
+        assert_eq!(self.n_edges, net.graph.n_edges(), "reverse_sweep before forward_sweep");
+        let nn = self.n_nodes;
+        self.dprime.fill(0.0);
+        for &e in &net.union_edges {
+            self.dprime[e] = cost.derivative(self.flows[e], net.graph.edge(e).capacity);
+        }
+        let workers = self.effective_workers(self.w_cnt);
+        let csr = &net.csr;
+        let dprime = &self.dprime;
+        let mut units: Vec<ReverseUnit<'_>> = self
+            .r
+            .chunks_mut(nn)
+            .zip(phi.frac.iter())
+            .enumerate()
+            .map(|(w, (r_w, phi_w))| ReverseUnit { w, phi_w, r_w })
+            .collect();
+        run_units(workers, &mut units, |u| reverse_session(csr, dprime, u));
+    }
+
+    /// One full evaluation at `(Λ, φ)`: fused forward + reverse sweep.
+    /// Returns the total network cost; rates, flows, and marginals stay
+    /// readable through the accessors until the next sweep.
+    pub fn prepare(&mut self, problem: &Problem, phi: &Phi, lam: &[f64]) -> f64 {
+        let cost = self.forward_sweep(&problem.net, problem.cost, phi, lam);
+        self.reverse_sweep(&problem.net, problem.cost, phi);
+        cost
+    }
+
+    /// Forward sweep only: the total network cost at `(Λ, φ)` (the fused
+    /// replacement for `flow::evaluate(..).cost`).
+    pub fn evaluate_cost(&mut self, problem: &Problem, phi: &Phi, lam: &[f64]) -> f64 {
+        self.forward_sweep(&problem.net, problem.cost, phi, lam)
+    }
+
+    /// Session `w`'s ingress rate at node `i` — `t_i(w)`, eq. 1.
+    #[inline]
+    pub fn node_rate(&self, w: usize, i: usize) -> f64 {
+        self.t[w * self.n_nodes + i]
+    }
+
+    /// Session `w`'s ingress-rate row (all nodes).
+    #[inline]
+    pub fn rates(&self, w: usize) -> &[f64] {
+        &self.t[w * self.n_nodes..(w + 1) * self.n_nodes]
+    }
+
+    /// Node marginal `∂D/∂r_i(w)` — eqs. 20–21.
+    #[inline]
+    pub fn node_marginal(&self, w: usize, i: usize) -> f64 {
+        self.r[w * self.n_nodes + i]
+    }
+
+    /// Session `w`'s node-marginal row (all nodes).
+    #[inline]
+    pub fn marginals(&self, w: usize) -> &[f64] {
+        &self.r[w * self.n_nodes..(w + 1) * self.n_nodes]
+    }
+
+    /// Total link flows `F_ij` — eq. 4.
+    #[inline]
+    pub fn flows(&self) -> &[f64] {
+        &self.flows
+    }
+
+    /// Link marginals `D'_ij` — the derivative term of eq. 19.
+    #[inline]
+    pub fn dprime(&self) -> &[f64] {
+        &self.dprime
+    }
+
+    /// Total network cost at the last forward sweep.
+    #[inline]
+    pub fn cost(&self) -> f64 {
+        self.cost
+    }
+
+    /// Routing-variable marginal `δφ_ij(w)` for CSR lane `k` (eq. 19) —
+    /// pure index arithmetic on the flat workspaces.
+    #[inline]
+    pub fn lane_delta(&self, csr: &FlowCsr, w: usize, k: usize) -> f64 {
+        self.dprime[csr.lane_edge[k]] + self.r[w * self.n_nodes + csr.lane_dst[k]]
+    }
+
+    /// Routing-variable marginal `δφ_ij(w)` for edge `e` (eq. 19).
+    #[inline]
+    pub fn edge_delta(&self, net: &AugmentedNet, w: usize, e: usize) -> f64 {
+        self.dprime[e] + self.node_marginal(w, net.graph.edge(e).dst)
+    }
+
+    /// Full gradient `∂D/∂φ_ij(w) = t_i(w)·δφ_ij(w)` (eq. 18).
+    #[inline]
+    pub fn edge_grad(&self, net: &AugmentedNet, w: usize, e: usize, t_i: f64) -> f64 {
+        t_i * self.edge_delta(net, w, e)
+    }
+}
+
+/// Mutable per-session view for the forward sweep.
+struct ForwardUnit<'a> {
+    w: usize,
+    lam_w: f64,
+    phi_w: &'a [f64],
+    t_w: &'a mut [f64],
+    f_w: &'a mut [f64],
+}
+
+/// Mutable per-session view for the reverse sweep.
+struct ReverseUnit<'a> {
+    w: usize,
+    phi_w: &'a [f64],
+    r_w: &'a mut [f64],
+}
+
+/// Forward topological pass for one session: rates + per-session flows.
+fn forward_session(csr: &FlowCsr, u: &mut ForwardUnit<'_>) {
+    u.t_w.fill(0.0);
+    let (l0, l1) = csr.session_lane_span[u.w];
+    for &e in &csr.lane_edge[l0..l1] {
+        u.f_w[e] = 0.0;
+    }
+    u.t_w[AugmentedNet::SOURCE] = u.lam_w;
+    for row in csr.rows(u.w) {
+        let ti = u.t_w[row.node];
+        if ti <= 0.0 {
+            continue;
+        }
+        for k in row.start..row.end {
+            let c = ti * u.phi_w[csr.lane_edge[k]];
+            u.f_w[csr.lane_edge[k]] = c;
+            u.t_w[csr.lane_dst[k]] += c;
+        }
+    }
+}
+
+/// Reverse topological pass for one session: the eq. 20–21 broadcast.
+fn reverse_session(csr: &FlowCsr, dprime: &[f64], u: &mut ReverseUnit<'_>) {
+    u.r_w.fill(0.0);
+    for row in csr.rows(u.w).iter().rev() {
+        let mut acc = 0.0;
+        for k in row.start..row.end {
+            let f = u.phi_w[csr.lane_edge[k]];
+            if f > 0.0 {
+                acc += f * (dprime[csr.lane_edge[k]] + u.r_w[csr.lane_dst[k]]);
+            }
+        }
+        u.r_w[row.node] = acc;
+    }
+}
+
+/// Run every unit exactly once, distributed over at most `workers` scoped
+/// threads. The unit→thread assignment affects scheduling only: callers
+/// combine unit outputs in a fixed session order afterwards, which is what
+/// makes engine results bit-identical at any worker count.
+fn run_units<T: Send, F: Fn(&mut T) + Sync>(workers: usize, units: &mut [T], f: F) {
+    if workers <= 1 || units.len() <= 1 {
+        for u in units.iter_mut() {
+            f(u);
+        }
+        return;
+    }
+    let chunk = units.len().div_ceil(workers);
+    let f = &f;
+    std::thread::scope(|scope| {
+        for group in units.chunks_mut(chunk) {
+            scope.spawn(move || {
+                for u in group.iter_mut() {
+                    f(u);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::topologies;
+    use crate::model::flow;
+    use crate::routing::marginal;
+    use crate::util::rng::Rng;
+
+    fn problem(seed: u64, n: usize) -> Problem {
+        let mut rng = Rng::seed_from(seed);
+        let net = topologies::connected_er(n, 0.3, 3, &mut rng);
+        Problem::new(net, 60.0, CostKind::Exp)
+    }
+
+    #[test]
+    fn matches_reference_evaluation() {
+        let p = problem(1, 12);
+        let phi = Phi::uniform(&p.net);
+        let lam = p.uniform_allocation();
+        let ev = flow::evaluate(&p, &phi, &lam);
+        let m = marginal::compute(&p.net, p.cost, &phi, &ev.flows);
+
+        let mut eng = FlowEngine::new();
+        let cost = eng.prepare(&p, &phi, &lam);
+        assert!((cost - ev.cost).abs() <= 1e-12 * ev.cost.abs().max(1.0));
+        for w in 0..p.n_versions() {
+            for i in 0..p.net.n_nodes() {
+                assert!((eng.node_rate(w, i) - ev.t[w][i]).abs() <= 1e-12, "t w={w} i={i}");
+                assert!((eng.node_marginal(w, i) - m.r[w][i]).abs() <= 1e-12, "r w={w} i={i}");
+            }
+        }
+        for e in 0..p.net.graph.n_edges() {
+            assert!((eng.flows()[e] - ev.flows[e]).abs() <= 1e-12, "F e={e}");
+            assert!((eng.dprime()[e] - m.dprime[e]).abs() <= 1e-12, "D' e={e}");
+        }
+    }
+
+    #[test]
+    fn bit_identical_across_worker_counts() {
+        let p = problem(2, 14);
+        let phi = Phi::uniform(&p.net);
+        let lam = p.uniform_allocation();
+        let mut reference = FlowEngine::new();
+        let c1 = reference.prepare(&p, &phi, &lam);
+        for workers in [2usize, 3, 4, 0] {
+            let mut eng = FlowEngine::new().with_workers(workers);
+            let c = eng.prepare(&p, &phi, &lam);
+            assert_eq!(c.to_bits(), c1.to_bits(), "cost at workers={workers}");
+            for (a, b) in eng.flows().iter().zip(reference.flows()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "flows at workers={workers}");
+            }
+            for w in 0..p.n_versions() {
+                for (a, b) in eng.rates(w).iter().zip(reference.rates(w)) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "t at workers={workers}");
+                }
+                for (a, b) in eng.marginals(w).iter().zip(reference.marginals(w)) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "r at workers={workers}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rebinds_after_topology_change() {
+        let p1 = problem(3, 10);
+        let p2 = problem(4, 14);
+        let mut eng = FlowEngine::new();
+        let phi1 = Phi::uniform(&p1.net);
+        let c1 = eng.prepare(&p1, &phi1, &p1.uniform_allocation());
+        let phi2 = Phi::uniform(&p2.net);
+        let c2 = eng.prepare(&p2, &phi2, &p2.uniform_allocation());
+        assert!(c1.is_finite() && c2.is_finite());
+        // and back: workspaces resize both ways
+        let c1b = eng.prepare(&p1, &phi1, &p1.uniform_allocation());
+        assert_eq!(c1.to_bits(), c1b.to_bits());
+    }
+
+    #[test]
+    fn lane_delta_equals_edge_delta() {
+        let p = problem(5, 10);
+        let phi = Phi::uniform(&p.net);
+        let lam = p.uniform_allocation();
+        let mut eng = FlowEngine::new();
+        eng.prepare(&p, &phi, &lam);
+        let csr = &p.net.csr;
+        for w in 0..p.n_versions() {
+            for row in csr.rows(w) {
+                for k in row.start..row.end {
+                    let by_lane = eng.lane_delta(csr, w, k);
+                    let by_edge = eng.edge_delta(&p.net, w, csr.lane_edge[k]);
+                    assert_eq!(by_lane.to_bits(), by_edge.to_bits());
+                }
+            }
+        }
+    }
+}

@@ -71,6 +71,67 @@ impl Placement {
     }
 }
 
+/// One routing row of the flat CSR lane index: node `node` owns the
+/// contiguous lane range `start..end` into [`FlowCsr::lane_edge`] /
+/// [`FlowCsr::lane_dst`].
+#[derive(Clone, Copy, Debug)]
+pub struct CsrRow {
+    pub node: NodeId,
+    pub start: usize,
+    pub end: usize,
+}
+
+impl CsrRow {
+    /// Number of usable out-lanes in this row.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+}
+
+/// Flat CSR-style lane index over every session DAG — the hot-path
+/// substrate of [`crate::engine`].
+///
+/// All usable (session, node, out-edge) lanes live in one flat edge-id
+/// array, grouped per session with rows in **forward topological order**,
+/// so the per-iteration sweeps are pure index arithmetic: no adjacency
+/// re-filtering, no iterator chains, no per-row allocation. `lane_dst`
+/// mirrors `lane_edge` with each lane's destination node so the sweeps
+/// never chase the edge table.
+#[derive(Clone, Debug, Default)]
+pub struct FlowCsr {
+    /// Flat lane edge ids (session-major, rows in forward topo order).
+    pub lane_edge: Vec<EdgeId>,
+    /// Destination node of each lane (parallel to `lane_edge`).
+    pub lane_dst: Vec<NodeId>,
+    /// Flat row table; row `r` owns lanes `rows[r].start..rows[r].end`.
+    pub rows: Vec<CsrRow>,
+    /// Per-session `(first_row, end_row)` ranges into `rows`.
+    pub session_rows: Vec<(usize, usize)>,
+    /// Per-session `(first_lane, end_lane)` ranges into `lane_edge`.
+    pub session_lane_span: Vec<(usize, usize)>,
+}
+
+impl FlowCsr {
+    /// Rows of session `w` in forward topological order.
+    #[inline]
+    pub fn rows(&self, w: usize) -> &[CsrRow] {
+        let (a, b) = self.session_rows[w];
+        &self.rows[a..b]
+    }
+
+    /// Total number of lanes across all sessions.
+    #[inline]
+    pub fn n_lanes(&self) -> usize {
+        self.lane_edge.len()
+    }
+}
+
 /// The augmented CEC network: graph, placement, per-session DAG masks.
 #[derive(Clone, Debug)]
 pub struct AugmentedNet {
@@ -91,6 +152,9 @@ pub struct AugmentedNet {
     pub routers: Vec<Vec<NodeId>>,
     /// Edges usable by at least one session (the cost-bearing edge set).
     pub union_edges: Vec<EdgeId>,
+    /// Flat CSR lane index (per-session topo-ordered rows) consumed by
+    /// [`crate::engine::FlowEngine`]'s fused sweeps.
+    pub csr: FlowCsr,
 }
 
 /// Capacity assigned to S->device admission links (effectively unconstrained:
@@ -160,6 +224,7 @@ impl AugmentedNet {
             session_lanes: Vec::new(),
             routers: Vec::new(),
             union_edges: Vec::new(),
+            csr: FlowCsr::default(),
         };
         net.rebuild_session_dags();
         net
@@ -230,6 +295,38 @@ impl AugmentedNet {
         self.union_edges = (0..self.graph.n_edges())
             .filter(|&e| (0..w_cnt).any(|w| self.session_edges[w][e]))
             .collect();
+        self.rebuild_csr();
+    }
+
+    /// Flatten the per-session lane caches into the CSR index. Row order is
+    /// the forward topological order of each session DAG (restricted to
+    /// nodes with ≥1 usable out-lane), and the lanes of a row keep the
+    /// adjacency-filter order of `session_lanes` — so sweeps over the CSR
+    /// visit exactly the same lanes in exactly the same order as the
+    /// reference implementations in [`crate::model::flow`] and
+    /// [`crate::routing::marginal`].
+    fn rebuild_csr(&mut self) {
+        let w_cnt = self.n_versions();
+        let mut csr = FlowCsr::default();
+        for w in 0..w_cnt {
+            let row_first = csr.rows.len();
+            let lane_first = csr.lane_edge.len();
+            for &i in &self.session_topo[w] {
+                let lanes = &self.session_lanes[w][i];
+                if lanes.is_empty() {
+                    continue;
+                }
+                let start = csr.lane_edge.len();
+                for &e in lanes {
+                    csr.lane_edge.push(e);
+                    csr.lane_dst.push(self.graph.edge(e).dst);
+                }
+                csr.rows.push(CsrRow { node: i, start, end: csr.lane_edge.len() });
+            }
+            csr.session_rows.push((row_first, csr.rows.len()));
+            csr.session_lane_span.push((lane_first, csr.lane_edge.len()));
+        }
+        self.csr = csr;
     }
 
     /// Real device index of augmented node `i` (None for S / D_w).
@@ -364,6 +461,47 @@ mod tests {
             let edge = net.graph.edge(e);
             if edge.src == AugmentedNet::SOURCE {
                 assert_eq!(edge.capacity, SOURCE_CAP);
+            }
+        }
+    }
+
+    #[test]
+    fn csr_mirrors_session_lanes_in_topo_order() {
+        for seed in 0..6u64 {
+            let net = er_net(seed);
+            for w in 0..net.n_versions() {
+                let rows = net.csr.rows(w);
+                // same node set as the cached router list
+                let mut row_nodes: Vec<usize> = rows.iter().map(|r| r.node).collect();
+                row_nodes.sort_unstable();
+                let mut routers = net.session_routers(w).to_vec();
+                routers.sort_unstable();
+                assert_eq!(row_nodes, routers, "w={w}");
+                // rows follow the session topo order
+                let pos: std::collections::HashMap<usize, usize> = net.session_topo[w]
+                    .iter()
+                    .enumerate()
+                    .map(|(k, &i)| (i, k))
+                    .collect();
+                for pair in rows.windows(2) {
+                    assert!(pos[&pair[0].node] < pos[&pair[1].node]);
+                }
+                // each row's lanes equal the cached lane list, in order,
+                // with matching destinations
+                for row in rows {
+                    let lanes = &net.csr.lane_edge[row.start..row.end];
+                    assert_eq!(lanes, net.lanes(w, row.node));
+                    for k in row.start..row.end {
+                        assert_eq!(
+                            net.csr.lane_dst[k],
+                            net.graph.edge(net.csr.lane_edge[k]).dst
+                        );
+                    }
+                }
+                // session lane span covers exactly the session's rows
+                let (a, b) = net.csr.session_lane_span[w];
+                assert_eq!(a, rows.first().map_or(b, |r| r.start));
+                assert_eq!(b, rows.last().map_or(a, |r| r.end));
             }
         }
     }

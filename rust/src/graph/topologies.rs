@@ -153,11 +153,32 @@ pub fn geant(cap_mean: f64, rng: &mut Rng) -> DiGraph {
     from_pairs(22, &pairs, cap_mean, rng)
 }
 
+/// **Line(n)** — a bidirectional chain `0 — 1 — … — n−1`: the deepest
+/// session DAGs per node count (worst case for the topological sweeps,
+/// used by the engine equivalence property tests).
+pub fn line(n: usize, cap_mean: f64, rng: &mut Rng) -> DiGraph {
+    assert!(n >= 2);
+    let pairs: Vec<(usize, usize)> = (0..n - 1).map(|i| (i, i + 1)).collect();
+    from_pairs(n, &pairs, cap_mean, rng)
+}
+
+/// **Star(n)** — hub node 0 with `n − 1` bidirectional spokes: the
+/// shallowest nontrivial session DAGs (every route is hub-mediated).
+pub fn star(n: usize, cap_mean: f64, rng: &mut Rng) -> DiGraph {
+    assert!(n >= 3);
+    let pairs: Vec<(usize, usize)> = (1..n).map(|v| (0, v)).collect();
+    from_pairs(n, &pairs, cap_mean, rng)
+}
+
+/// Canonical node count for the named `"line"` / `"star"` lookups.
+pub const LINE_STAR_DEFAULT_N: usize = 10;
+
 /// Every name accepted by topology construction: the synthetic `"er"`
 /// family (handled by `ExperimentConfig::build_problem`) plus the
 /// [`by_name`] lookups. Keep in sync with the `match` in [`by_name`]; the
 /// session error messages derive their suggestions from this list.
-pub const KNOWN_NAMES: [&str; 6] = ["er", "abilene", "tree", "balanced-tree", "fog", "geant"];
+pub const KNOWN_NAMES: [&str; 8] =
+    ["er", "abilene", "tree", "balanced-tree", "fog", "geant", "line", "star"];
 
 /// Named lookup used by the CLI and the fig12–15 bench.
 pub fn by_name(name: &str, cap_mean: f64, rng: &mut Rng) -> Option<DiGraph> {
@@ -166,6 +187,8 @@ pub fn by_name(name: &str, cap_mean: f64, rng: &mut Rng) -> Option<DiGraph> {
         "tree" | "balanced-tree" => Some(balanced_tree(cap_mean, rng)),
         "fog" => Some(fog(cap_mean, rng)),
         "geant" => Some(geant(cap_mean, rng)),
+        "line" => Some(line(LINE_STAR_DEFAULT_N, cap_mean, rng)),
+        "star" => Some(star(LINE_STAR_DEFAULT_N, cap_mean, rng)),
         _ => None,
     }
 }
@@ -246,5 +269,25 @@ mod tests {
     fn unknown_name_is_none() {
         let mut rng = Rng::seed_from(1);
         assert!(by_name("nope", 10.0, &mut rng).is_none());
+    }
+
+    #[test]
+    fn line_and_star_shapes() {
+        let mut rng = Rng::seed_from(3);
+        let l = line(7, 10.0, &mut rng);
+        assert_eq!(l.n_nodes(), 7);
+        assert_eq!(l.n_edges(), 2 * 6);
+        assert!(l.strongly_connected());
+        let s = star(7, 10.0, &mut rng);
+        assert_eq!(s.n_nodes(), 7);
+        assert_eq!(s.n_edges(), 2 * 6);
+        assert!(s.strongly_connected());
+        // every spoke touches the hub
+        for e in s.edges() {
+            assert!(e.src == 0 || e.dst == 0);
+        }
+        // named lookups resolve
+        assert!(by_name("line", 10.0, &mut rng).is_some());
+        assert!(by_name("star", 10.0, &mut rng).is_some());
     }
 }

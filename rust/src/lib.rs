@@ -10,6 +10,9 @@
 //!   flow model, marginal-cost broadcast, the paper's OMD-RT routing and
 //!   GS-OMA / OMAD allocation algorithms, the SGP / GP / OPT baselines, an
 //!   actor-based distributed runtime, and a discrete-event serving simulator.
+//!   All per-iteration numerics run on the [`engine::FlowEngine`] — fused
+//!   forward/reverse sweeps over a flat CSR lane index, session-parallel
+//!   (`--workers`), bit-identical at any worker count.
 //! * **L2 (python/compile/model.py)** — a full OMD-RT iteration as a JAX
 //!   tensor program plus the served DNN family, AOT-lowered to HLO text.
 //! * **L1 (python/compile/kernels)** — Pallas kernels for the mirror-descent
@@ -64,6 +67,7 @@
 pub mod allocation;
 pub mod config;
 pub mod coordinator;
+pub mod engine;
 pub mod experiments;
 pub mod graph;
 pub mod metrics;
@@ -78,6 +82,7 @@ pub mod util;
 /// Convenience re-exports for examples / benches / the CLI.
 pub mod prelude {
     pub use crate::allocation::{gsoma::GsOma, omad::Omad, Allocator, UtilityOracle};
+    pub use crate::engine::FlowEngine;
     pub use crate::graph::augmented::{AugmentedNet, Placement};
     pub use crate::graph::topologies;
     pub use crate::graph::DiGraph;

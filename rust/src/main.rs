@@ -72,7 +72,10 @@ fn usage() {
          solvers                        list the solver registry\n  \
          serve [--xla] [--router omd]   end-to-end serving demo\n  \
          runtime-check                  AOT artifact smoke test\n  \
-         config --dump                  print default config JSON",
+         config --dump                  print default config JSON\n\n\
+         common options: --n <nodes> --p <link prob> --rate <λ> --seed <s>\n\
+         --workers <k>: engine threads for the per-session flow/marginal\n\
+         sweeps (0 = auto; results are bit-identical at any worker count)",
         routers = registry::router_names().join("|"),
         allocators = registry::allocator_names().join("|"),
     );
@@ -87,6 +90,9 @@ fn load_cfg(args: &Args) -> Result<ExperimentConfig, String> {
     cfg.p_link = args.f64_or("p", cfg.p_link)?;
     cfg.total_rate = args.f64_or("rate", cfg.total_rate)?;
     cfg.seed = args.u64_or("seed", cfg.seed)?;
+    // engine worker threads for the per-session sweeps (0 = auto);
+    // results are bit-identical at any value
+    cfg.workers = args.usize_or("workers", cfg.workers)?;
     if let Some(f) = args.get("family") {
         cfg.utility = f.to_string();
     }

@@ -1,9 +1,17 @@
-//! Flow algebra over the augmented graph (paper §II-C, eqs. 1–4).
+//! Flow algebra over the augmented graph (paper §II-C, eqs. 1–4) —
+//! **reference implementation**.
 //!
 //! Given routing variables φ and an allocation Λ, computes per-session node
 //! ingress rates `t_i(w)`, total link flows `F_ij`, and the total network
 //! cost `Σ D_ij(F_ij, C_ij)`. All sweeps run in session-DAG topological
 //! order, so they are exact in one pass (no fixed-point iteration).
+//!
+//! These free functions are the plain, allocating formulation the paper
+//! states directly; the production hot path is the fused, workspace-reusing
+//! [`crate::engine::FlowEngine`] forward sweep, which every solver now
+//! uses. Keep this module simple: `tests/test_engine_equivalence.rs` pins
+//! the engine against it (1e-12) across topologies, cost families, and
+//! seeds, so it doubles as the executable specification.
 
 use crate::graph::augmented::AugmentedNet;
 use crate::model::cost::CostKind;

@@ -6,19 +6,27 @@
 //! (OMD-RT) fits the simplex geometry and converges far faster than the
 //! canonical gradient projection at the same step size.
 
-use super::{marginal, project_simplex, Router};
-use crate::model::flow::{self, Phi};
+use super::{project_simplex, Router};
+use crate::engine::FlowEngine;
+use crate::model::flow::Phi;
 use crate::model::Problem;
 
 #[derive(Clone, Debug)]
 pub struct GpRouter {
     /// Euclidean step size.
     pub eta: f64,
+    engine: FlowEngine,
 }
 
 impl GpRouter {
     pub fn new(eta: f64) -> Self {
-        GpRouter { eta }
+        GpRouter { eta, engine: FlowEngine::new() }
+    }
+
+    /// Worker threads for the engine's per-session sweeps (`0` = auto).
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.engine.set_workers(workers);
+        self
     }
 }
 
@@ -29,27 +37,26 @@ impl Router for GpRouter {
 
     fn step(&mut self, problem: &Problem, lam: &[f64], phi: &mut Phi) -> f64 {
         let net = &problem.net;
-        let t = flow::node_rates(net, phi, lam);
-        let flows = flow::edge_flows(net, phi, &t);
-        let cost_before = flow::total_cost(net, problem.cost, &flows);
-        let m = marginal::compute(net, problem.cost, phi, &flows);
+        let cost_before = self.engine.prepare(problem, phi, lam);
 
+        let csr = &net.csr;
         for w in 0..net.n_versions() {
-            for &i in net.session_routers(w) {
-                if t[w][i] <= 0.0 {
+            let frac = &mut phi.frac[w];
+            for r in csr.rows(w) {
+                let ti = self.engine.node_rate(w, r.node);
+                if ti <= 0.0 || r.len() < 2 {
                     continue;
                 }
-                let lanes: Vec<usize> = net.session_out(w, i).collect();
-                if lanes.len() < 2 {
-                    continue;
-                }
-                let y: Vec<f64> = lanes
-                    .iter()
-                    .map(|&e| phi.frac[w][e] - self.eta * m.grad(net, w, e, t[w][i]))
+                let y: Vec<f64> = (r.start..r.end)
+                    .map(|k| {
+                        // same association as the legacy `η·(t_i·δφ)` gradient
+                        frac[csr.lane_edge[k]]
+                            - self.eta * (ti * self.engine.lane_delta(csr, w, k))
+                    })
                     .collect();
                 let proj = project_simplex(&y);
-                for (&e, &v) in lanes.iter().zip(&proj) {
-                    phi.frac[w][e] = v;
+                for (k, &v) in (r.start..r.end).zip(&proj) {
+                    frac[csr.lane_edge[k]] = v;
                 }
             }
         }

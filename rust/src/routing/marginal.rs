@@ -1,4 +1,7 @@
-//! Marginal-cost computation (paper eqs. 18–21, Gallager's recursion).
+//! Marginal-cost computation (paper eqs. 18–21, Gallager's recursion) —
+//! **reference implementation**. The production hot path is the fused
+//! [`crate::engine::FlowEngine`] reverse sweep, pinned against this module
+//! by `tests/test_engine_equivalence.rs`.
 //!
 //! `δφ_ij(w) = D'_ij + ∂D/∂r_j(w)` where the downstream marginal
 //! `∂D/∂r_j(w)` is computed by the **broadcast protocol**: destinations

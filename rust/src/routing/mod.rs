@@ -11,6 +11,11 @@
 //! construction remains supported for algorithm-internal code and
 //! fine-grained control, but new entry points should go through the
 //! session API (see the deprecation note in the crate docs).
+//!
+//! All per-iteration numerics (rates, flows, cost, marginals) go through
+//! [`crate::engine::FlowEngine`]'s fused sweeps; the free functions in
+//! [`crate::model::flow`] and [`marginal`] remain as the plain reference
+//! implementations the engine is pinned against.
 
 pub mod gp;
 pub mod marginal;
@@ -18,7 +23,8 @@ pub mod omd;
 pub mod opt;
 pub mod sgp;
 
-use crate::model::flow::{self, Phi};
+use crate::engine::FlowEngine;
+use crate::model::flow::Phi;
 use crate::model::Problem;
 
 /// Result of a legacy `Router::solve` run. The session API reports runs
@@ -76,7 +82,9 @@ pub trait Router {
                 break;
             }
         }
-        let final_cost = flow::evaluate(problem, phi, lam).cost;
+        // engine-based final evaluation — the same fused sweep the session
+        // API's `RoutingRun` report uses, so both paths stay bit-identical
+        let final_cost = FlowEngine::new().evaluate_cost(problem, phi, lam);
         trajectory.push(final_cost);
         RoutingState {
             phi: phi.clone(),

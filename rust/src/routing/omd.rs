@@ -14,8 +14,9 @@
 //! the AOT-compiled L1 Pallas kernel (see [`crate::runtime::mirror`]); this
 //! module is the native implementation and the numerical ground truth.
 
-use super::{marginal, Router};
-use crate::model::flow::{self, Phi};
+use super::Router;
+use crate::engine::FlowEngine;
+use crate::model::flow::Phi;
 use crate::model::Problem;
 
 /// Numerical-stability shift: exponents are shifted by the row max before
@@ -58,6 +59,7 @@ pub struct OmdRouter {
     eta_cur: f64,
     last_cost: Option<f64>,
     k: usize,
+    engine: FlowEngine,
     scratch_row: Vec<f64>,
     scratch_delta: Vec<f64>,
 }
@@ -70,6 +72,7 @@ impl OmdRouter {
             eta_cur: eta,
             last_cost: None,
             k: 0,
+            engine: FlowEngine::new(),
             scratch_row: Vec::new(),
             scratch_delta: Vec::new(),
         }
@@ -78,6 +81,18 @@ impl OmdRouter {
     /// Fixed-step variant (theory experiments; requires η ≤ c/L_D).
     pub fn fixed(eta: f64) -> Self {
         OmdRouter { adaptive: false, ..Self::new(eta) }
+    }
+
+    /// Worker threads for the engine's per-session sweeps (`0` = auto).
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.engine.set_workers(workers);
+        self
+    }
+
+    /// The engine evaluating this router's iterations (e.g. to share it
+    /// for a post-step cost evaluation without a second workspace set).
+    pub fn engine_mut(&mut self) -> &mut FlowEngine {
+        &mut self.engine
     }
 
     /// The η the *next* update will use.
@@ -143,10 +158,8 @@ impl Router for OmdRouter {
 
     fn step(&mut self, problem: &Problem, lam: &[f64], phi: &mut Phi) -> f64 {
         let net = &problem.net;
-        let t = flow::node_rates(net, phi, lam);
-        let flows = flow::edge_flows(net, phi, &t);
-        let cost_before = flow::total_cost(net, problem.cost, &flows);
-        let m = marginal::compute(net, problem.cost, phi, &flows);
+        // fused forward + reverse sweep: t, F, cost, D', r in two passes
+        let cost_before = self.engine.prepare(problem, phi, lam);
 
         if self.adaptive {
             self.eta_cur = Self::adapt_eta(self.eta_cur, self.eta, self.last_cost, cost_before);
@@ -157,25 +170,26 @@ impl Router for OmdRouter {
         // scratch buffers live on self: zero allocations in the hot loop
         let mut row = std::mem::take(&mut self.scratch_row);
         let mut delta = std::mem::take(&mut self.scratch_delta);
+        let csr = &net.csr;
         for w in 0..net.n_versions() {
-            for &i in net.session_routers(w) {
-                // Algorithm 2 line 5: only nodes with t_i(w) > 0 update.
-                if t[w][i] <= 0.0 {
-                    continue;
-                }
-                let lanes = net.lanes(w, i);
-                if lanes.len() < 2 {
+            let frac = &mut phi.frac[w];
+            for r in csr.rows(w) {
+                if r.len() < 2 {
                     continue; // single lane is pinned at 1
+                }
+                // Algorithm 2 line 5: only nodes with t_i(w) > 0 update.
+                if self.engine.node_rate(w, r.node) <= 0.0 {
+                    continue;
                 }
                 row.clear();
                 delta.clear();
-                for &e in lanes {
-                    row.push(phi.frac[w][e]);
-                    delta.push(m.delta(net, w, e));
+                for k in r.start..r.end {
+                    row.push(frac[csr.lane_edge[k]]);
+                    delta.push(self.engine.lane_delta(csr, w, k));
                 }
                 Self::update_row(&mut row, &delta, eta);
-                for (&e, &v) in lanes.iter().zip(&row) {
-                    phi.frac[w][e] = v;
+                for (k, &v) in (r.start..r.end).zip(&row) {
+                    frac[csr.lane_edge[k]] = v;
                 }
             }
         }
@@ -190,6 +204,8 @@ mod tests {
     use super::*;
     use crate::graph::topologies;
     use crate::model::cost::CostKind;
+    use crate::model::flow;
+    use crate::routing::marginal;
     use crate::util::rng::Rng;
 
     fn problem(seed: u64, n: usize) -> Problem {

@@ -13,6 +13,7 @@
 //! distributed algorithms reach). The result serves as ground truth for
 //! Theorems 3/4 convergence checks and the "OPT" line in Figs. 7–8.
 
+use crate::engine::FlowEngine;
 use crate::graph::paths::{enumerate_paths, Path};
 use crate::model::flow::Phi;
 use crate::model::Problem;
@@ -41,17 +42,30 @@ pub struct OptRouter {
     /// change to Λ or an externally reset φ (e.g. a topology change)
     /// triggers a fresh solve.
     streaming_cache: Option<(Vec<f64>, Phi)>,
+    engine: FlowEngine,
 }
 
 impl Default for OptRouter {
     fn default() -> Self {
-        OptRouter { max_paths: 500_000, max_iters: 20_000, tol: 1e-9, streaming_cache: None }
+        OptRouter {
+            max_paths: 500_000,
+            max_iters: 20_000,
+            tol: 1e-9,
+            streaming_cache: None,
+            engine: FlowEngine::new(),
+        }
     }
 }
 
 impl OptRouter {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Worker threads for the engine's per-session sweeps (`0` = auto).
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.engine.set_workers(workers);
+        self
     }
 
     /// Solve the path-flow program for allocation `lam`.
@@ -235,7 +249,7 @@ impl crate::routing::Router for OptRouter {
     }
 
     fn step(&mut self, problem: &Problem, lam: &[f64], phi: &mut Phi) -> f64 {
-        let cost_before = crate::model::flow::evaluate(problem, phi, lam).cost;
+        let cost_before = self.engine.evaluate_cost(problem, phi, lam);
         let cached = self
             .streaming_cache
             .as_ref()

@@ -21,9 +21,10 @@
 //! costs a DP over the session DAG per iteration. Both are counted in the
 //! Fig. 9 runtime comparison.
 
-use super::{marginal, project_simplex, Router};
+use super::{project_simplex, Router};
+use crate::engine::FlowEngine;
 use crate::graph::augmented::AugmentedNet;
-use crate::model::flow::{self, Phi};
+use crate::model::flow::Phi;
 use crate::model::Problem;
 
 #[derive(Clone, Debug)]
@@ -35,17 +36,24 @@ pub struct SgpRouter {
     pub qp_tol: f64,
     /// Inner QP solver iteration cap.
     pub qp_max_iters: usize,
+    engine: FlowEngine,
 }
 
 impl Default for SgpRouter {
     fn default() -> Self {
-        SgpRouter { scale: 1.0, qp_tol: 1e-10, qp_max_iters: 400 }
+        SgpRouter { scale: 1.0, qp_tol: 1e-10, qp_max_iters: 400, engine: FlowEngine::new() }
     }
 }
 
 impl SgpRouter {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Worker threads for the engine's per-session sweeps (`0` = auto).
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.engine.set_workers(workers);
+        self
     }
 
     /// Max remaining hops from each node to `D_w` inside the session DAG
@@ -97,10 +105,7 @@ impl Router for SgpRouter {
 
     fn step(&mut self, problem: &Problem, lam: &[f64], phi: &mut Phi) -> f64 {
         let net = &problem.net;
-        let t = flow::node_rates(net, phi, lam);
-        let flows = flow::edge_flows(net, phi, &t);
-        let cost_before = flow::total_cost(net, problem.cost, &flows);
-        let m = marginal::compute(net, problem.cost, phi, &flows);
+        let cost_before = self.engine.prepare(problem, phi, lam);
 
         // Hessian-bound ingredients ([13]'s extra system information):
         // per-edge second-derivative bounds at the current operating point
@@ -113,25 +118,24 @@ impl Router for SgpRouter {
             .map(|e| problem.cost.second_derivative_bound(flows_cap(total, e.capacity), e.capacity))
             .collect();
 
+        let csr = &net.csr;
         for w in 0..net.n_versions() {
             let hops = Self::max_hops(net, w);
-            for &i in net.session_routers(w) {
-                let ti = t[w][i];
-                if ti <= 0.0 {
+            for r in csr.rows(w) {
+                let ti = self.engine.node_rate(w, r.node);
+                if ti <= 0.0 || r.len() < 2 {
                     continue;
                 }
-                let lanes: Vec<usize> = net.session_out(w, i).collect();
-                if lanes.len() < 2 {
-                    continue;
-                }
+                let lanes = &csr.lane_edge[r.start..r.end];
                 let x0: Vec<f64> = lanes.iter().map(|&e| phi.frac[w][e]).collect();
-                let g: Vec<f64> = lanes.iter().map(|&e| m.grad(net, w, e, ti)).collect();
+                let g: Vec<f64> = (r.start..r.end)
+                    .map(|k| ti * self.engine.lane_delta(csr, w, k))
+                    .collect();
                 // diagonal scaling M_jj = scale · t_i · h_j · D̄''_(downstream max)
-                let mm: Vec<f64> = lanes
-                    .iter()
-                    .map(|&e| {
-                        let j = net.graph.edge(e).dst;
-                        let dd = downstream_dd_bound(net, w, e, &ddmax);
+                let mm: Vec<f64> = (r.start..r.end)
+                    .map(|k| {
+                        let j = csr.lane_dst[k];
+                        let dd = downstream_dd_bound(net, w, csr.lane_edge[k], &ddmax);
                         (self.scale * ti * ti * (hops[j] + 1.0) * dd).max(1e-9)
                     })
                     .collect();

@@ -152,6 +152,14 @@ impl Scenario {
         self
     }
 
+    /// Engine worker threads for the per-session flow/marginal sweeps
+    /// (`0` = auto-detect, `1` = single-threaded default). Solver results
+    /// are bit-identical at any worker count.
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.cfg.workers = workers;
+        self
+    }
+
     /// Validate every field and build the problem instance.
     pub fn build(mut self) -> Result<Session, SessionError> {
         if let Some(name) = &self.cost_name {

@@ -35,6 +35,9 @@ pub struct Hyper {
     pub eta_alloc: f64,
     /// Gradient-sampling disturbance δ.
     pub delta: f64,
+    /// [`crate::engine::FlowEngine`] worker threads for the per-session
+    /// sweeps (`0` = auto-detect). Bit-identical results at any value.
+    pub workers: usize,
 }
 
 impl Default for Hyper {
@@ -44,6 +47,7 @@ impl Default for Hyper {
             eta_gp: DEFAULT_ETA_GP,
             eta_alloc: DEFAULT_ETA_ALLOC,
             delta: DEFAULT_DELTA,
+            workers: 1,
         }
     }
 }
@@ -54,6 +58,7 @@ impl Hyper {
             eta_routing: cfg.eta_routing,
             eta_alloc: cfg.eta_alloc,
             delta: cfg.delta,
+            workers: cfg.workers,
             ..Hyper::default()
         }
     }
@@ -93,23 +98,23 @@ impl AllocatorEntry {
 }
 
 fn make_omd(h: &Hyper) -> Box<dyn Router> {
-    Box::new(OmdRouter::new(h.eta_routing))
+    Box::new(OmdRouter::new(h.eta_routing).with_workers(h.workers))
 }
 
 fn make_omd_fixed(h: &Hyper) -> Box<dyn Router> {
-    Box::new(OmdRouter::fixed(h.eta_routing))
+    Box::new(OmdRouter::fixed(h.eta_routing).with_workers(h.workers))
 }
 
-fn make_sgp(_h: &Hyper) -> Box<dyn Router> {
-    Box::new(SgpRouter::new())
+fn make_sgp(h: &Hyper) -> Box<dyn Router> {
+    Box::new(SgpRouter::new().with_workers(h.workers))
 }
 
 fn make_gp(h: &Hyper) -> Box<dyn Router> {
-    Box::new(GpRouter::new(h.eta_gp))
+    Box::new(GpRouter::new(h.eta_gp).with_workers(h.workers))
 }
 
-fn make_opt(_h: &Hyper) -> Box<dyn Router> {
-    Box::new(OptRouter::new())
+fn make_opt(h: &Hyper) -> Box<dyn Router> {
+    Box::new(OptRouter::new().with_workers(h.workers))
 }
 
 fn make_gsoma(h: &Hyper) -> Box<dyn Allocator> {
@@ -261,5 +266,6 @@ mod tests {
         assert_eq!(h.eta_routing, 0.25);
         assert_eq!(h.delta, 0.1);
         assert_eq!(h.eta_gp, 0.002);
+        assert_eq!(h.workers, cfg.workers);
     }
 }

@@ -10,6 +10,13 @@
 //! being baked into each algorithm, so telemetry composes without touching
 //! solver code.
 //!
+//! Both run kinds share one [`RunCore`]: the run-loop *protocol* — stop
+//! rules, observer fan-out, report caching, the zero-budget edge case —
+//! lives in exactly one place, parameterized over the per-iteration
+//! advance (a routing step vs. an allocation outer step). Final-report
+//! objectives are evaluated by the fused [`crate::engine::FlowEngine`]
+//! sweep, the same code path the legacy `Router::solve` epilogue uses.
+//!
 //! Driven to completion with the default rules, a run reproduces the legacy
 //! `Router::solve` / `Allocator::run` loops *bit for bit* (same oracle call
 //! order, same floating-point operations) — verified by
@@ -19,7 +26,8 @@ use std::ops::ControlFlow;
 use std::time::Instant;
 
 use crate::allocation::{Allocator, UtilityOracle};
-use crate::model::flow::{self, Phi};
+use crate::engine::FlowEngine;
+use crate::model::flow::Phi;
 use crate::model::Problem;
 use crate::routing::{Router, CONVERGENCE_TOL};
 
@@ -179,6 +187,78 @@ fn lam_moved(a: &[f64], b: &[f64]) -> f64 {
     a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f64, f64::max)
 }
 
+/// The run-loop protocol shared by [`RoutingRun`] and [`AllocationRun`]:
+/// stop rules, observers, the iteration/clock bookkeeping, and final-report
+/// caching. The per-iteration *advance* is the only thing the two run
+/// kinds implement themselves.
+struct RunCore<'a> {
+    stop_rules: Vec<Box<dyn StopRule + 'a>>,
+    observers: Vec<&'a mut dyn Observer>,
+    t0: Instant,
+    iter: usize,
+    finished: Option<RunReport>,
+}
+
+impl<'a> RunCore<'a> {
+    fn new(stop_rules: Vec<Box<dyn StopRule + 'a>>) -> Self {
+        RunCore { stop_rules, observers: Vec::new(), t0: Instant::now(), iter: 0, finished: None }
+    }
+
+    /// Re-report a finished run without advancing it.
+    fn replay_finished(&self) -> Option<ControlFlow<RunReport>> {
+        self.finished.as_ref().map(|r| ControlFlow::Break(r.clone()))
+    }
+
+    fn elapsed_s(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    /// Step epilogue: count the iteration, fan out to observers, and check
+    /// the stop rules in registration order.
+    fn record_step(&mut self, objective: f64, moved: f64, lam: &[f64]) -> Option<StopReason> {
+        self.iter += 1;
+        let info = StepInfo {
+            iter: self.iter,
+            objective,
+            moved,
+            elapsed_s: self.elapsed_s(),
+            lam,
+        };
+        for obs in self.observers.iter_mut() {
+            obs.on_step(&info);
+        }
+        self.stop_rules.iter_mut().find_map(|r| r.check(&info))
+    }
+
+    /// Assemble, cache, and broadcast the final report. `routing_iters`
+    /// defaults to the iteration count (routing runs).
+    fn finish(
+        &mut self,
+        algo: &str,
+        objective: f64,
+        lam: Vec<f64>,
+        phi: Option<Phi>,
+        routing_iters: Option<usize>,
+        stop: StopReason,
+    ) -> RunReport {
+        let report = RunReport {
+            algo: algo.to_string(),
+            objective,
+            lam,
+            phi,
+            iterations: self.iter,
+            routing_iterations: routing_iters.unwrap_or(self.iter),
+            stop,
+            elapsed_s: self.elapsed_s(),
+        };
+        for obs in self.observers.iter_mut() {
+            obs.on_finish(&report);
+        }
+        self.finished = Some(report.clone());
+        report
+    }
+}
+
 /// A resumable routing run: minimizes `D(Λ, φ)` one iteration per
 /// [`step`](RoutingRun::step) for a fixed allocation Λ.
 pub struct RoutingRun<'a> {
@@ -187,11 +267,8 @@ pub struct RoutingRun<'a> {
     lam: Vec<f64>,
     phi: Phi,
     max_iters: usize,
-    stop_rules: Vec<Box<dyn StopRule + 'a>>,
-    observers: Vec<&'a mut dyn Observer>,
-    t0: Instant,
-    iter: usize,
-    finished: Option<RunReport>,
+    engine: FlowEngine,
+    core: RunCore<'a>,
 }
 
 impl<'a> RoutingRun<'a> {
@@ -205,18 +282,17 @@ impl<'a> RoutingRun<'a> {
         lam: Vec<f64>,
         max_iters: usize,
     ) -> Self {
-        let phi = Phi::uniform(&problem.net);
         RoutingRun {
             problem,
             router,
             lam,
-            phi,
+            phi: Phi::uniform(&problem.net),
             max_iters,
-            stop_rules: vec![Box::new(Tolerance(CONVERGENCE_TOL)), Box::new(MaxIters(max_iters))],
-            observers: Vec::new(),
-            t0: Instant::now(),
-            iter: 0,
-            finished: None,
+            engine: FlowEngine::new(),
+            core: RunCore::new(vec![
+                Box::new(Tolerance(CONVERGENCE_TOL)),
+                Box::new(MaxIters(max_iters)),
+            ]),
         }
     }
 
@@ -229,7 +305,7 @@ impl<'a> RoutingRun<'a> {
 
     /// Add a stop rule (checked after the defaults).
     pub fn stop_when(mut self, rule: impl StopRule + 'a) -> Self {
-        self.stop_rules.push(Box::new(rule));
+        self.core.stop_rules.push(Box::new(rule));
         self
     }
 
@@ -240,7 +316,7 @@ impl<'a> RoutingRun<'a> {
 
     /// Attach an observer.
     pub fn observe(mut self, obs: &'a mut dyn Observer) -> Self {
-        self.observers.push(obs);
+        self.core.observers.push(obs);
         self
     }
 
@@ -253,56 +329,33 @@ impl<'a> RoutingRun<'a> {
     /// [`ControlFlow::Break`] with the final report once a stop rule fires;
     /// further calls return the same report without advancing.
     pub fn step(&mut self) -> ControlFlow<RunReport> {
-        if let Some(report) = &self.finished {
-            return ControlFlow::Break(report.clone());
+        if let Some(done) = self.core.replay_finished() {
+            return done;
         }
         // legacy `solve(.., 0)` performs zero iterations; honor a zero
         // budget before doing any work
         if self.max_iters == 0 {
-            let report = self.make_report(StopReason::MaxIters);
-            self.finished = Some(report.clone());
-            return ControlFlow::Break(report);
+            return ControlFlow::Break(self.make_report(StopReason::MaxIters));
         }
         let prev = self.phi.clone();
         let cost_before = self.router.step(self.problem, &self.lam, &mut self.phi);
-        self.iter += 1;
-        let info = StepInfo {
-            iter: self.iter,
-            objective: cost_before,
-            moved: phi_moved(&prev, &self.phi),
-            elapsed_s: self.t0.elapsed().as_secs_f64(),
-            lam: &self.lam,
-        };
-        for obs in self.observers.iter_mut() {
-            obs.on_step(&info);
-        }
-        let fired = self.stop_rules.iter_mut().find_map(|r| r.check(&info));
-        match fired {
+        let moved = phi_moved(&prev, &self.phi);
+        match self.core.record_step(cost_before, moved, &self.lam) {
             None => ControlFlow::Continue(()),
-            Some(stop) => {
-                let report = self.make_report(stop);
-                self.finished = Some(report.clone());
-                ControlFlow::Break(report)
-            }
+            Some(stop) => ControlFlow::Break(self.make_report(stop)),
         }
     }
 
     fn make_report(&mut self, stop: StopReason) -> RunReport {
-        let final_cost = flow::evaluate(self.problem, &self.phi, &self.lam).cost;
-        let report = RunReport {
-            algo: self.router.name().to_string(),
-            objective: final_cost,
-            lam: self.lam.clone(),
-            phi: Some(self.phi.clone()),
-            iterations: self.iter,
-            routing_iterations: self.iter,
+        let final_cost = self.engine.evaluate_cost(self.problem, &self.phi, &self.lam);
+        self.core.finish(
+            self.router.name(),
+            final_cost,
+            self.lam.clone(),
+            Some(self.phi.clone()),
+            None,
             stop,
-            elapsed_s: self.t0.elapsed().as_secs_f64(),
-        };
-        for obs in self.observers.iter_mut() {
-            obs.on_finish(&report);
-        }
-        report
+        )
     }
 
     /// Drive the run to completion.
@@ -323,11 +376,7 @@ pub struct AllocationRun<'a> {
     oracle: Box<dyn UtilityOracle>,
     lam: Vec<f64>,
     max_outer: usize,
-    stop_rules: Vec<Box<dyn StopRule + 'a>>,
-    observers: Vec<&'a mut dyn Observer>,
-    t0: Instant,
-    iter: usize,
-    finished: Option<RunReport>,
+    core: RunCore<'a>,
 }
 
 impl<'a> AllocationRun<'a> {
@@ -350,11 +399,10 @@ impl<'a> AllocationRun<'a> {
             lam,
             max_outer,
             // strict (<) matches the legacy Allocator::run boundary
-            stop_rules: vec![Box::new(ToleranceStrict(tol)), Box::new(MaxIters(max_outer))],
-            observers: Vec::new(),
-            t0: Instant::now(),
-            iter: 0,
-            finished: None,
+            core: RunCore::new(vec![
+                Box::new(ToleranceStrict(tol)),
+                Box::new(MaxIters(max_outer)),
+            ]),
         }
     }
 
@@ -366,7 +414,7 @@ impl<'a> AllocationRun<'a> {
 
     /// Add a stop rule (checked after the defaults).
     pub fn stop_when(mut self, rule: impl StopRule + 'a) -> Self {
-        self.stop_rules.push(Box::new(rule));
+        self.core.stop_rules.push(Box::new(rule));
         self
     }
 
@@ -377,7 +425,7 @@ impl<'a> AllocationRun<'a> {
 
     /// Attach an observer.
     pub fn observe(mut self, obs: &'a mut dyn Observer) -> Self {
-        self.observers.push(obs);
+        self.core.observers.push(obs);
         self
     }
 
@@ -395,58 +443,34 @@ impl<'a> AllocationRun<'a> {
     /// Advance by one outer iteration (one utility observation at the
     /// iterate plus one gradient-sampling update).
     pub fn step(&mut self) -> ControlFlow<RunReport> {
-        if let Some(report) = &self.finished {
-            return ControlFlow::Break(report.clone());
+        if let Some(done) = self.core.replay_finished() {
+            return done;
         }
         // legacy `run(.., 0)` performs zero outer iterations (one final
         // observation only); honor a zero budget before doing any work
         if self.max_outer == 0 {
-            let report = self.make_report(StopReason::MaxIters);
-            self.finished = Some(report.clone());
-            return ControlFlow::Break(report);
+            return ControlFlow::Break(self.make_report(StopReason::MaxIters));
         }
         let u_at_iterate = self.oracle.observe(&self.lam);
         let (next, _grad) = self.allocator.outer_step(self.oracle.as_mut(), &self.lam);
         let moved = lam_moved(&next, &self.lam);
         self.lam = next;
-        self.iter += 1;
-        let info = StepInfo {
-            iter: self.iter,
-            objective: u_at_iterate,
-            moved,
-            elapsed_s: self.t0.elapsed().as_secs_f64(),
-            lam: &self.lam,
-        };
-        for obs in self.observers.iter_mut() {
-            obs.on_step(&info);
-        }
-        let fired = self.stop_rules.iter_mut().find_map(|r| r.check(&info));
-        match fired {
+        match self.core.record_step(u_at_iterate, moved, &self.lam) {
             None => ControlFlow::Continue(()),
-            Some(stop) => {
-                let report = self.make_report(stop);
-                self.finished = Some(report.clone());
-                ControlFlow::Break(report)
-            }
+            Some(stop) => ControlFlow::Break(self.make_report(stop)),
         }
     }
 
     fn make_report(&mut self, stop: StopReason) -> RunReport {
         let final_u = self.oracle.observe(&self.lam);
-        let report = RunReport {
-            algo: self.allocator.name().to_string(),
-            objective: final_u,
-            lam: self.lam.clone(),
-            phi: self.oracle.current_phi().cloned(),
-            iterations: self.iter,
-            routing_iterations: self.oracle.routing_iterations(),
+        self.core.finish(
+            self.allocator.name(),
+            final_u,
+            self.lam.clone(),
+            self.oracle.current_phi().cloned(),
+            Some(self.oracle.routing_iterations()),
             stop,
-            elapsed_s: self.t0.elapsed().as_secs_f64(),
-        };
-        for obs in self.observers.iter_mut() {
-            obs.on_finish(&report);
-        }
-        report
+        )
     }
 
     /// Drive the run to completion.

@@ -1,0 +1,209 @@
+//! Property tests pinning [`jowr::engine::FlowEngine`]'s fused sweeps to
+//! the reference implementations (`flow::evaluate` + `marginal::compute`).
+//!
+//! Sweeps topologies (connected-ER, line, star), every [`CostKind`] family,
+//! several seeds, and several (Λ, φ) operating points — uniform, skewed,
+//! degenerate (a zero-rate session), and mid-descent states evolved by
+//! OMD-RT — asserting:
+//!
+//! * rates `t`, flows `F`, cost, link marginals `D'`, and node marginals
+//!   `r` match the reference to 1e-12 (relative), and
+//! * engine results are **bit-identical** at 1, 2, and 4 worker threads.
+
+use jowr::engine::FlowEngine;
+use jowr::graph::augmented::{AugmentedNet, Placement};
+use jowr::graph::topologies;
+use jowr::model::cost::CostKind;
+use jowr::model::flow::{self, Phi};
+use jowr::model::Problem;
+use jowr::routing::marginal;
+use jowr::routing::omd::OmdRouter;
+use jowr::routing::Router;
+use jowr::util::rng::Rng;
+
+const COSTS: [CostKind; 4] =
+    [CostKind::Exp, CostKind::Queue, CostKind::Linear, CostKind::Cubic];
+
+/// One augmented network per topology family for a given seed.
+fn networks(seed: u64) -> Vec<(&'static str, AugmentedNet)> {
+    let mut rng = Rng::seed_from(seed);
+    let er = topologies::connected_er(12, 0.3, 3, &mut rng);
+    let line_graph = topologies::line(9, 10.0, &mut rng);
+    let line_pl = Placement::random(9, 3, &mut rng);
+    let line = AugmentedNet::build(&line_graph, &line_pl, 10.0, &mut rng);
+    let star_graph = topologies::star(9, 10.0, &mut rng);
+    let star_pl = Placement::random(9, 3, &mut rng);
+    let star = AugmentedNet::build(&star_graph, &star_pl, 10.0, &mut rng);
+    vec![("er", er), ("line", line), ("star", star)]
+}
+
+/// Allocation variants exercised at every operating point.
+fn allocations(total: f64) -> Vec<Vec<f64>> {
+    vec![
+        vec![total / 3.0; 3],
+        vec![total / 2.0, total / 3.0, total / 6.0],
+        // degenerate: one session carries everything (zero-rate sweeps)
+        vec![total, 0.0, 0.0],
+    ]
+}
+
+fn assert_close(a: f64, b: f64, what: &str) {
+    assert!(
+        (a - b).abs() <= 1e-12 * b.abs().max(1.0),
+        "{what}: engine {a} vs reference {b}"
+    );
+}
+
+/// Engine vs reference at one operating point, plus worker bit-identity.
+fn check_point(tag: &str, problem: &Problem, phi: &Phi, lam: &[f64]) {
+    let net = &problem.net;
+    let ev = flow::evaluate(problem, phi, lam);
+    let m = marginal::compute(net, problem.cost, phi, &ev.flows);
+
+    let mut eng = FlowEngine::new();
+    let cost = eng.prepare(problem, phi, lam);
+    assert_close(cost, ev.cost, &format!("{tag}: cost"));
+    for w in 0..net.n_versions() {
+        for i in 0..net.n_nodes() {
+            assert_close(eng.node_rate(w, i), ev.t[w][i], &format!("{tag}: t[{w}][{i}]"));
+            assert_close(eng.node_marginal(w, i), m.r[w][i], &format!("{tag}: r[{w}][{i}]"));
+        }
+    }
+    for e in 0..net.graph.n_edges() {
+        assert_close(eng.flows()[e], ev.flows[e], &format!("{tag}: F[{e}]"));
+        assert_close(eng.dprime()[e], m.dprime[e], &format!("{tag}: D'[{e}]"));
+        assert_close(
+            eng.edge_delta(net, 0, e),
+            m.delta(net, 0, e),
+            &format!("{tag}: delta[{e}]"),
+        );
+    }
+
+    // bit-identical at 1, 2, and 4 worker threads
+    for workers in [2usize, 4] {
+        let mut par = FlowEngine::new().with_workers(workers);
+        let c = par.prepare(problem, phi, lam);
+        assert_eq!(c.to_bits(), cost.to_bits(), "{tag}: cost at {workers} workers");
+        for (a, b) in par.flows().iter().zip(eng.flows()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{tag}: flows at {workers} workers");
+        }
+        for (a, b) in par.dprime().iter().zip(eng.dprime()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{tag}: dprime at {workers} workers");
+        }
+        for w in 0..net.n_versions() {
+            for (a, b) in par.rates(w).iter().zip(eng.rates(w)) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{tag}: t at {workers} workers");
+            }
+            for (a, b) in par.marginals(w).iter().zip(eng.marginals(w)) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{tag}: r at {workers} workers");
+            }
+        }
+    }
+}
+
+#[test]
+fn engine_matches_reference_across_topologies_costs_and_seeds() {
+    for seed in [1u64, 5, 11] {
+        for (topo, net) in networks(seed) {
+            for cost in COSTS {
+                let problem = Problem::new(net.clone(), 60.0, cost);
+                let phi = Phi::uniform(&problem.net);
+                for (k, lam) in allocations(60.0).into_iter().enumerate() {
+                    let tag = format!("{topo}/{cost:?}/seed{seed}/lam{k}");
+                    check_point(&tag, &problem, &phi, &lam);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn engine_matches_reference_mid_descent() {
+    // non-uniform φ with near-zero lanes: evolve OMD-RT for a few
+    // iterations, re-checking the engine at every visited operating point
+    for seed in [2u64, 9] {
+        for (topo, net) in networks(seed) {
+            let problem = Problem::new(net, 60.0, CostKind::Exp);
+            let lam = problem.uniform_allocation();
+            let mut phi = Phi::uniform(&problem.net);
+            let mut router = OmdRouter::new(0.5);
+            for it in 0..8 {
+                router.step(&problem, &lam, &mut phi);
+                phi.is_feasible(&problem.net, 1e-9).unwrap();
+                check_point(&format!("{topo}/seed{seed}/iter{it}"), &problem, &phi, &lam);
+            }
+        }
+    }
+}
+
+#[test]
+fn engine_backed_router_matches_legacy_four_sweep_step() {
+    // the migrated OmdRouter (engine sweeps, CSR rows) must produce the
+    // same iterates as the legacy implementation: four reference sweeps +
+    // the eq. 22 row update over `session_routers` in node order
+    for seed in [3u64, 8] {
+        let mut rng = Rng::seed_from(seed);
+        let net = topologies::connected_er(12, 0.3, 3, &mut rng);
+        let problem = Problem::new(net, 60.0, CostKind::Exp);
+        let lam = problem.uniform_allocation();
+
+        let mut phi_engine = Phi::uniform(&problem.net);
+        let mut router = OmdRouter::fixed(0.3);
+
+        let mut phi_legacy = phi_engine.clone();
+        for it in 0..10 {
+            let cost_engine = router.step(&problem, &lam, &mut phi_engine);
+            let cost_legacy = legacy_omd_step(&problem, &lam, &mut phi_legacy, 0.3);
+            assert_close(cost_engine, cost_legacy, &format!("seed{seed}/iter{it}: cost"));
+            for (w, (ra, rb)) in phi_engine.frac.iter().zip(&phi_legacy.frac).enumerate() {
+                for (e, (a, b)) in ra.iter().zip(rb).enumerate() {
+                    assert_close(*a, *b, &format!("seed{seed}/iter{it}: phi[{w}][{e}]"));
+                }
+            }
+        }
+    }
+}
+
+/// The pre-engine OMD-RT iteration, verbatim: separate reference sweeps
+/// plus the row update over `session_routers` (fixed step, no adaptation).
+fn legacy_omd_step(problem: &Problem, lam: &[f64], phi: &mut Phi, eta: f64) -> f64 {
+    let net = &problem.net;
+    let t = flow::node_rates(net, phi, lam);
+    let flows = flow::edge_flows(net, phi, &t);
+    let cost_before = flow::total_cost(net, problem.cost, &flows);
+    let m = marginal::compute(net, problem.cost, phi, &flows);
+    for w in 0..net.n_versions() {
+        for &i in net.session_routers(w) {
+            if t[w][i] <= 0.0 {
+                continue;
+            }
+            let lanes = net.lanes(w, i);
+            if lanes.len() < 2 {
+                continue;
+            }
+            let mut row: Vec<f64> = lanes.iter().map(|&e| phi.frac[w][e]).collect();
+            let delta: Vec<f64> = lanes.iter().map(|&e| m.delta(net, w, e)).collect();
+            OmdRouter::update_row(&mut row, &delta, eta);
+            for (&e, &v) in lanes.iter().zip(&row) {
+                phi.frac[w][e] = v;
+            }
+        }
+    }
+    cost_before
+}
+
+#[test]
+fn full_solves_agree_between_engine_and_reference_analysis() {
+    // a converged engine-backed solve must satisfy the reference-computed
+    // stationarity residuals — ties the migrated stack back to eqs. 18–21
+    let mut rng = Rng::seed_from(4);
+    let net = topologies::connected_er(10, 0.3, 3, &mut rng);
+    let problem = Problem::new(net, 60.0, CostKind::Exp);
+    let lam = problem.uniform_allocation();
+    let sol = OmdRouter::new(0.5).solve(&problem, &lam, 2000);
+    let ev = flow::evaluate(&problem, &sol.phi, &lam);
+    assert_close(sol.cost, ev.cost, "final cost");
+    let mut eng = FlowEngine::new().with_workers(4);
+    let c = eng.prepare(&problem, &sol.phi, &lam);
+    assert_close(c, ev.cost, "engine cost at the solution");
+}
