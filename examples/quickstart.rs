@@ -85,5 +85,17 @@ fn main() -> Result<(), SessionError> {
         println!("total network cost at Λ*: {cost:.4}");
     }
     println!("observed total network utility: {:.4}", report.objective);
+
+    // 5. the distributed mode (paper Sec. V) is a session run like any
+    //    other: each node runs mirror descent locally and converges via
+    //    neighbor exchange; one step = one barriered round, and the report
+    //    carries the communication-overhead telemetry
+    let dist = session.distributed_run(25)?.finish();
+    let comm = dist.comm.expect("distributed runs report CommStats");
+    println!(
+        "\ndistributed OMD-RT: cost {:.4} after {} rounds \
+         ({} messages, {} bytes over the fabric)",
+        dist.objective, comm.rounds, comm.messages, comm.bytes
+    );
     Ok(())
 }

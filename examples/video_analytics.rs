@@ -38,14 +38,17 @@ fn run<E: InferenceEngine>(engine: E, label: &str) -> Result<(), SessionError> {
     );
 
     let params = ServeParams { sim_time: 15.0, ..ServeParams::default_for(3) };
-    // the measured oracle serves with any registered router — OMD-RT here
+    // the measured oracle serves with any registered router — OMD-RT here —
+    // and rides the shared FlowEngine (`workers` from the scenario; results
+    // are bit-identical at any worker count)
     let mut oracle = MeasuredOracle::with_router(
         session.problem.clone(),
         params,
         engine,
         session.router("omd")?,
         99,
-    );
+    )
+    .with_workers(session.cfg.workers);
     // legacy tuning for the measured path: a smaller outer step than the
     // analytic experiments
     let alg = registry::allocator_with("omad", &Hyper { eta_alloc: 0.03, ..session.hyper() })?;

@@ -8,7 +8,9 @@
 //!   `flow::total_cost` / `marginal::compute`, freshly allocated every
 //!   call — the pre-engine hot path),
 //! * the **engine** fused forward+reverse sweep ([`FlowEngine::prepare`])
-//!   at 1, 2, and 4 workers (thread-scaling rows), and
+//!   at 1, 2, and 4 workers (thread-scaling rows) on the persistent
+//!   worker pool, plus the legacy per-sweep `thread::scope` spawn at 4
+//!   workers (`engine_fused_prepare_scope_w4`) as the pool's baseline, and
 //! * full `omd_full_iteration` / `sgp_full_iteration` solver steps, with a
 //!   faithfully reconstructed legacy OMD iteration as the baseline.
 //!
@@ -57,8 +59,9 @@ fn main() {
             (cost, m.dprime.len())
         });
 
-        // engine fused sweeps + thread scaling (per-session parallelism;
-        // results are bit-identical at every worker count)
+        // engine fused sweeps + thread scaling (per-session parallelism on
+        // the persistent pool; results are bit-identical at every worker
+        // count)
         let mut cost_w1 = 0.0;
         for &workers in &[1usize, 2, 4] {
             let mut eng = FlowEngine::new().with_workers(workers);
@@ -73,6 +76,17 @@ fn main() {
                 );
             }
             b.bench(&format!("n{n}/engine_fused_prepare_w{workers}"), || {
+                eng.prepare(problem, &phi, &lam)
+            });
+        }
+        // the retired strategy: per-sweep thread::scope spawn at 4 workers
+        // (what `--workers` cost before the persistent pool)
+        {
+            let mut eng =
+                FlowEngine::new().with_workers(4).with_persistent_pool(false);
+            let c = eng.prepare(problem, &phi, &lam);
+            assert_eq!(c.to_bits(), cost_w1.to_bits(), "scope strategy must agree bitwise");
+            b.bench(&format!("n{n}/engine_fused_prepare_scope_w4"), || {
                 eng.prepare(problem, &phi, &lam)
             });
         }
@@ -151,6 +165,12 @@ fn main() {
                 }
             }
         }
+        if let (Some(scope), Some(pool)) = (
+            median(&b, &format!("n{n}/engine_fused_prepare_scope_w4")),
+            median(&b, &format!("n{n}/engine_fused_prepare_w4")),
+        ) {
+            speedups.push((format!("n{n}/pool_vs_scope_w4"), scope / pool));
+        }
     }
     for (name, x) in &speedups {
         println!("{name:<40} {x:.2}x");
@@ -195,6 +215,21 @@ fn main() {
                 "fused engine ({e:.3e}s) must beat legacy four-sweep ({l:.3e}s) at n={n}"
             );
         }
+    }
+    // the persistent pool must be at least as fast as the per-sweep
+    // thread::scope spawn it replaced (ROADMAP: spawn per sweep is
+    // measurable at n≲25 with workers>1) — checked on the paper-default
+    // n=25 topology at 4 workers, with a little slack for runner noise
+    if let (Some(pool), Some(scope)) = (
+        median(&b, "n25/engine_fused_prepare_w4"),
+        median(&b, "n25/engine_fused_prepare_scope_w4"),
+    ) {
+        println!("n25 persistent pool vs thread::scope at w4: {:.2}x", scope / pool);
+        assert!(
+            pool <= scope * 1.05,
+            "persistent pool ({pool:.3e}s) must not be slower than the per-sweep \
+             thread::scope spawn ({scope:.3e}s) at n=25, workers=4"
+        );
     }
     // one OMD iteration must stay far cheaper than one SGP iteration
     // (the Fig. 9 effect at micro scale)

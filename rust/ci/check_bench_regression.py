@@ -1,0 +1,95 @@
+#!/usr/bin/env python3
+"""CI bench-regression gate for BENCH_hotpath.json.
+
+Compares the engine rows (bench names containing "engine") of a fresh
+``BENCH_hotpath.json`` against the committed baseline and fails (exit 1)
+if any row's median regresses by more than ``--tolerance`` (default 20%).
+Non-engine rows (the deliberately slow reference sweeps, SGP, the legacy
+reconstruction) are reported but never gate.
+
+Bootstrap: the committed baseline starts life as a placeholder with an
+empty ``results`` list (this repo has no local Rust toolchain — CI is the
+only place the bench runs). While the baseline is empty, the gate passes
+and prints instructions: download the ``bench-hotpath`` artifact from the
+first green run and commit it as ``rust/ci/BENCH_baseline.json``. Rows
+present in only one file are warned about (renames/additions), not failed,
+so the gate never blocks intentional bench evolution — refresh the
+baseline in the same PR instead.
+
+Usage:
+    check_bench_regression.py BASELINE FRESH [--tolerance 0.20] [--filter engine]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_rows(path: str) -> dict[str, float]:
+    with open(path, encoding="utf-8") as fh:
+        doc = json.load(fh)
+    rows = {}
+    for row in doc.get("results", []):
+        name, median = row.get("name"), row.get("median_s")
+        if isinstance(name, str) and isinstance(median, (int, float)) and median > 0:
+            rows[name] = float(median)
+    return rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="committed BENCH_baseline.json")
+    ap.add_argument("fresh", help="freshly produced BENCH_hotpath.json")
+    ap.add_argument("--tolerance", type=float, default=0.20,
+                    help="allowed relative slowdown before failing (default 0.20)")
+    ap.add_argument("--filter", default="engine",
+                    help="substring selecting the gated rows (default 'engine')")
+    args = ap.parse_args()
+
+    baseline = load_rows(args.baseline)
+    fresh = load_rows(args.fresh)
+    if not fresh:
+        print(f"error: no usable rows in {args.fresh}", file=sys.stderr)
+        return 1
+    if not baseline:
+        print(f"baseline {args.baseline} is empty (bootstrap mode): gate passes.")
+        print("To arm the gate, download this run's 'bench-hotpath' artifact and")
+        print("commit it as rust/ci/BENCH_baseline.json.")
+        return 0
+
+    gated = sorted(n for n in baseline if args.filter in n)
+    regressions, improvements = [], []
+    for name in gated:
+        if name not in fresh:
+            print(f"warn: baseline row '{name}' missing from fresh results "
+                  f"(renamed/removed? refresh the baseline)")
+            continue
+        base, now = baseline[name], fresh[name]
+        ratio = now / base
+        line = f"{name:<44} {base * 1e6:>10.2f}us -> {now * 1e6:>10.2f}us  ({ratio:5.2f}x)"
+        if ratio > 1.0 + args.tolerance:
+            regressions.append(line)
+        else:
+            improvements.append(line)
+    for name in sorted(fresh):
+        if args.filter in name and name not in baseline:
+            print(f"warn: new engine row '{name}' has no baseline yet "
+                  f"(commit a refreshed BENCH_baseline.json to gate it)")
+
+    print(f"\nbench gate: {len(gated)} gated rows, tolerance {args.tolerance:.0%}")
+    for line in improvements:
+        print(f"  ok   {line}")
+    for line in regressions:
+        print(f"  FAIL {line}")
+    if regressions:
+        print(f"\n{len(regressions)} engine row(s) regressed more than "
+              f"{args.tolerance:.0%} vs the committed baseline.", file=sys.stderr)
+        return 1
+    print("no engine regressions.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

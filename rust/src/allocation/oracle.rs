@@ -9,6 +9,7 @@
 //! serving simulator with real DNN latencies — lives in
 //! [`crate::coordinator::serving`].
 
+use crate::coordinator::serving::ServeReport;
 use crate::model::flow::Phi;
 use crate::model::utility::Utility;
 use crate::model::Problem;
@@ -44,6 +45,14 @@ pub trait UtilityOracle {
     fn current_phi(&self) -> Option<&Phi> {
         None
     }
+
+    /// The last serving-simulator window report, for oracles whose
+    /// observations are *measured* (see
+    /// [`crate::coordinator::serving::MeasuredOracle`]); `None` for
+    /// analytic oracles.
+    fn last_serve_report(&self) -> Option<&ServeReport> {
+        None
+    }
 }
 
 /// Assumption 4's oracle 𝔒 for the **nested loop**: every observation runs
@@ -54,6 +63,9 @@ pub struct AnalyticOracle {
     utilities: Vec<Utility>,
     pub router_eta: f64,
     pub max_routing_iters: usize,
+    /// Engine worker threads for the per-observation routing solves
+    /// (`0` = auto); threaded from `Scenario::workers` by the session.
+    pub workers: usize,
     routing_iters: usize,
     observations: usize,
 }
@@ -66,6 +78,7 @@ impl AnalyticOracle {
             utilities,
             router_eta: 0.5,
             max_routing_iters: 2_000,
+            workers: 1,
             routing_iters: 0,
             observations: 0,
         }
@@ -85,7 +98,7 @@ impl AnalyticOracle {
 impl UtilityOracle for AnalyticOracle {
     fn observe(&mut self, lam: &[f64]) -> f64 {
         self.observations += 1;
-        let mut router = OmdRouter::new(self.router_eta);
+        let mut router = OmdRouter::new(self.router_eta).with_workers(self.workers);
         let sol = router.solve(&self.problem, lam, self.max_routing_iters);
         self.routing_iters += sol.iterations;
         self.true_task_utility(lam) - sol.cost

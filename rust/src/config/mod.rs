@@ -41,8 +41,10 @@ pub struct ExperimentConfig {
     pub delta: f64,
     pub seed: u64,
     /// Engine worker threads for the per-session flow/marginal sweeps
-    /// (`0` = auto-detect, `1` = single-threaded). Results are
-    /// bit-identical at any value; this only trades wall-clock for cores.
+    /// (`0` = auto-detect, `1` = single-threaded), served by the engine's
+    /// persistent worker pool. Results are bit-identical at any value —
+    /// for centralized, distributed, and serving runs alike; this only
+    /// trades wall-clock for cores.
     pub workers: usize,
 }
 

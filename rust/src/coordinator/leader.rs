@@ -1,42 +1,110 @@
 //! The leader (the controller at virtual source `S`): spawns one actor per
 //! edge device, drives barriered OMD-RT rounds over the message fabric, and
-//! owns S's routing rows. Metrics (cost trajectories, message counts) are
-//! collected leader-side; the *algorithm* only uses local node state plus
-//! the broadcast protocol, exactly as the paper prescribes.
+//! owns S's routing rows.
+//!
+//! [`DistributedOmd`] implements [`Router`], so the distributed algorithm
+//! is a first-class registry solver (`"distributed-omd"`) and streams
+//! through the same `session::RunCore` protocol as every centralized
+//! router: `session.distributed_run(rounds)` (or
+//! `session.routing_run("distributed-omd", rounds)`) yields a
+//! [`crate::session::DistributedRun`] with stop rules, observers, and a
+//! unified [`crate::session::RunReport`] whose `comm` field carries the
+//! [`CommStats`] telemetry. One [`Router::step`] is one barriered round;
+//! actors are deployed lazily on the first step (warm-starting from
+//! whatever φ the run carries) and shut down on drop or redeploy.
+//!
+//! The *algorithm* only uses local node state plus the broadcast protocol,
+//! exactly as the paper prescribes; the leader-side engine evaluation is
+//! cost telemetry (the same aggregate the broadcast tree delivers) used
+//! for the adaptive step-size rule shared with the centralized router.
+//! With the deterministic per-slot ingress summation in
+//! [`super::node`], a distributed round is bit-identical to the
+//! centralized [`OmdRouter`] iteration — at any engine worker count.
 
 use std::collections::HashMap;
 use std::sync::mpsc::Receiver;
+use std::thread::JoinHandle;
 
 use super::messages::Msg;
 use super::net::Fabric;
-use super::node::{NodeActor, NodeSpec, OutLane, Peer};
+use super::node::{NodeActor, NodeSpec, OutLane, Peer, Upstream};
 use crate::engine::FlowEngine;
 use crate::graph::augmented::AugmentedNet;
 use crate::model::flow::Phi;
 use crate::model::Problem;
 use crate::routing::omd::OmdRouter;
-use crate::routing::RoutingState;
+use crate::routing::Router;
 
-/// Communication accounting for one distributed run.
-#[derive(Clone, Copy, Debug, Default)]
-pub struct CommStats {
-    pub messages: u64,
-    pub bytes: u64,
-    pub rounds: usize,
+pub use super::net::CommStats;
+
+/// A live actor deployment: fabric, threads, and S's own lane table.
+struct Deployment {
+    fabric: Fabric,
+    leader_rx: Receiver<Msg>,
+    handles: Vec<JoinHandle<()>>,
+    /// Leader-owned source rows: per session, `(edge, dst_node)` pairs.
+    s_lanes: Vec<Vec<(usize, usize)>>,
+    /// Digest of the problem the actors were built for (topology wiring,
+    /// capacities, cost family).
+    digest: u64,
+    /// The routing state the actors currently hold (kept in sync after
+    /// every round); a caller handing in a different φ forces a redeploy.
+    phi: Phi,
 }
 
-/// Distributed OMD-RT: thread-per-device actors + leader orchestration.
+/// Distributed OMD-RT: thread-per-device actors + leader orchestration,
+/// behind the standard [`Router`] step protocol.
 pub struct DistributedOmd {
+    /// Base mirror-descent step size η (paper: constant `η_k ≤ c/L_D`).
     pub eta: f64,
+    /// Backtracking adaptation (default on) — the same rule as
+    /// [`OmdRouter`], driven by the leader-aggregated total cost.
+    pub adaptive: bool,
+    eta_cur: f64,
+    last_cost: Option<f64>,
+    /// Leader-side cost telemetry via the fused engine sweep (the
+    /// distributed algorithm itself stays message-passing only).
+    engine: FlowEngine,
+    deployment: Option<Deployment>,
+    rounds: usize,
+    /// Counters carried over from shut-down deployments.
+    comm_base: (u64, u64),
 }
 
 impl DistributedOmd {
     pub fn new(eta: f64) -> Self {
-        DistributedOmd { eta }
+        DistributedOmd {
+            eta,
+            adaptive: true,
+            eta_cur: eta,
+            last_cost: None,
+            engine: FlowEngine::new(),
+            deployment: None,
+            rounds: 0,
+            comm_base: (0, 0),
+        }
+    }
+
+    /// Fixed-step variant (theory experiments; requires η ≤ c/L_D).
+    /// (No struct-update shorthand here: `DistributedOmd` implements
+    /// `Drop`, which rules out functional record updates.)
+    pub fn fixed(eta: f64) -> Self {
+        let mut router = Self::new(eta);
+        router.adaptive = false;
+        router
+    }
+
+    /// Worker threads for the leader-side engine telemetry (`0` = auto).
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.engine.set_workers(workers);
+        self
     }
 
     /// Build every actor's local view from the global topology (this is the
     /// deployment step — at runtime each node only ever touches its spec).
+    /// Upstream lists are sorted in each session's forward topological
+    /// order so the actors' deferred ingress sums reproduce the engine's
+    /// accumulation order bit for bit.
     pub fn build_specs(net: &AugmentedNet, phi: &Phi) -> Vec<NodeSpec> {
         let classify = |node: usize| -> Peer {
             if node == AugmentedNet::SOURCE {
@@ -47,6 +115,12 @@ impl DistributedOmd {
                 Peer::Actor(node - 1)
             }
         };
+        // per-session topo rank of every DAG node (S is topo-first)
+        let rank: Vec<HashMap<usize, usize>> = (0..net.n_versions())
+            .map(|w| {
+                net.session_topo[w].iter().enumerate().map(|(k, &i)| (i, k)).collect()
+            })
+            .collect();
         (1..=net.n_real)
             .map(|node| {
                 let w_cnt = net.n_versions();
@@ -65,13 +139,17 @@ impl DistributedOmd {
                         });
                         p0.push(phi.frac[w][e]);
                     }
-                    let ins = net
+                    let mut ins: Vec<Upstream> = net
                         .graph
                         .in_edges(node)
                         .iter()
                         .filter(|&&e| net.session_edges[w][e])
-                        .map(|&e| classify(net.graph.edge(e).src))
+                        .map(|&e| {
+                            let src = net.graph.edge(e).src;
+                            Upstream { node: src, peer: classify(src) }
+                        })
                         .collect();
+                    ins.sort_unstable_by_key(|u| rank[w][&u.node]);
                     lanes.push(ls);
                     in_peers.push(ins);
                     phi0.push(p0);
@@ -80,7 +158,7 @@ impl DistributedOmd {
                     actor: node - 1,
                     node_id: node,
                     n_sessions: net.n_versions(),
-                    cost: crate::model::cost::CostKind::Exp, // overwritten below
+                    cost: crate::model::cost::CostKind::Exp, // overwritten on deploy
                     lanes,
                     in_peers,
                     phi0,
@@ -89,102 +167,153 @@ impl DistributedOmd {
             .collect()
     }
 
-    /// Run `rounds` barriered routing iterations; returns the final routing
-    /// state (trajectory measured leader-side) plus communication stats.
-    pub fn solve(
-        &self,
-        problem: &Problem,
-        lam: &[f64],
-        rounds: usize,
-    ) -> (RoutingState, CommStats) {
-        let t0 = std::time::Instant::now();
+    /// FNV-1a digest of everything the actor specs are built from:
+    /// node/edge/session counts, the per-session lane wiring, link
+    /// capacities, and the cost family. Two problems with the same digest
+    /// deploy identical specs, so a matching digest (plus a matching φ)
+    /// is what makes fleet reuse across steps sound.
+    fn digest(problem: &Problem) -> u64 {
+        const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+        const FNV_PRIME: u64 = 0x100000001b3;
+        let mut h = FNV_OFFSET;
+        let mut mix = |x: u64| {
+            h ^= x;
+            h = h.wrapping_mul(FNV_PRIME);
+        };
         let net = &problem.net;
-        let w_cnt = net.n_versions();
-        let mut phi = Phi::uniform(net);
+        mix(net.n_nodes() as u64);
+        mix(net.graph.n_edges() as u64);
+        mix(net.n_versions() as u64);
+        for (&e, &d) in net.csr.lane_edge.iter().zip(&net.csr.lane_dst) {
+            mix(e as u64);
+            mix(d as u64);
+        }
+        // bind lanes to their owning (session, node) rows: the flat lane
+        // sequence alone cannot distinguish two problems that partition
+        // the same lanes differently across nodes or sessions
+        for row in &net.csr.rows {
+            mix(row.node as u64);
+            mix(row.start as u64);
+            mix(row.end as u64);
+        }
+        for &(a, b) in &net.csr.session_rows {
+            mix(a as u64);
+            mix(b as u64);
+        }
+        for edge in net.graph.edges() {
+            mix(edge.src as u64);
+            mix(edge.dst as u64);
+            mix(edge.capacity.to_bits());
+        }
+        mix(problem.cost as u64);
+        h
+    }
 
-        let mut specs = Self::build_specs(net, &phi);
+    /// Spawn the actor threads for `problem`, warm-starting every node's
+    /// rows from `phi`.
+    fn deploy(problem: &Problem, phi: &Phi) -> Deployment {
+        let net = &problem.net;
+        let mut specs = Self::build_specs(net, phi);
         for s in &mut specs {
             s.cost = problem.cost;
         }
         let (fabric, receivers, leader_rx) = Fabric::new(net.n_real);
-        let mut handles = Vec::new();
+        let mut handles = Vec::with_capacity(specs.len());
         for (spec, rx) in specs.into_iter().zip(receivers) {
             let f = fabric.clone();
-            handles.push(std::thread::spawn(move || NodeActor::new(spec).run(rx, f)));
+            let name = format!("jowr-node-{}", spec.node_id);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(name)
+                    .spawn(move || NodeActor::new(spec).run(rx, f))
+                    .expect("spawn node actor"),
+            );
         }
-
-        // leader-owned source rows: (session -> [(edge, dst_node)])
-        let s_lanes: Vec<Vec<(usize, usize)>> = (0..w_cnt)
+        let s_lanes: Vec<Vec<(usize, usize)>> = (0..net.n_versions())
             .map(|w| {
                 net.session_out(w, AugmentedNet::SOURCE)
                     .map(|e| (e, net.graph.edge(e).dst))
                     .collect()
             })
             .collect();
-
-        let mut trajectory = Vec::with_capacity(rounds + 1);
-        let mut eta_cur = self.eta;
-        let mut last_cost = None;
-        // leader-side cost telemetry via the fused engine sweep (the
-        // distributed algorithm itself stays message-passing only)
-        let mut engine = FlowEngine::new();
-        for round in 0..rounds {
-            let cost = engine.evaluate_cost(problem, &phi, lam);
-            trajectory.push(cost);
-            // same backtracking rule as the centralized router: the leader
-            // aggregates the total cost along the broadcast tree
-            eta_cur = OmdRouter::adapt_eta(eta_cur, self.eta, last_cost, cost);
-            last_cost = Some(cost);
-            self.run_round(
-                problem, lam, &mut phi, &s_lanes, &fabric, &leader_rx, round as u64, eta_cur,
-            );
+        Deployment {
+            fabric,
+            leader_rx,
+            handles,
+            s_lanes,
+            digest: Self::digest(problem),
+            phi: phi.clone(),
         }
-        let final_cost = engine.evaluate_cost(problem, &phi, lam);
-        trajectory.push(final_cost);
+    }
 
-        fabric.broadcast(Msg::Shutdown);
-        for h in handles {
-            let _ = h.join();
+    /// Deploy the actor fleet, or redeploy when the running fleet no
+    /// longer matches what the caller hands in: a changed problem
+    /// (topology, capacities, cost family) *or* a φ that differs from the
+    /// actors' current rows (e.g. a fresh run resetting to the uniform
+    /// initializer while the old fleet had converged state). Exact-equality
+    /// on φ keeps steady-state reuse free while making reuse always sound.
+    fn ensure_deployed(&mut self, problem: &Problem, phi: &Phi) {
+        let digest = Self::digest(problem);
+        let in_sync = self
+            .deployment
+            .as_ref()
+            .is_some_and(|d| d.digest == digest && d.phi == *phi);
+        if !in_sync {
+            self.shutdown();
+            // a redeploy is a fresh run: the backtracking schedule restarts
+            // too, exactly like a newly constructed router (otherwise a
+            // stale last_cost from the previous run would halve η on the
+            // first round of the new one)
+            self.eta_cur = self.eta;
+            self.last_cost = None;
+            self.deployment = Some(Self::deploy(problem, phi));
         }
-        let (messages, bytes) = fabric.counters.snapshot();
-        (
-            RoutingState {
-                phi,
-                cost: final_cost,
-                trajectory,
-                iterations: rounds,
-                elapsed_s: t0.elapsed().as_secs_f64(),
-            },
-            CommStats { messages, bytes, rounds },
-        )
+    }
+
+    /// Orderly shutdown: stop the actors, fold their traffic counters into
+    /// the carried-over base.
+    fn shutdown(&mut self) {
+        if let Some(dep) = self.deployment.take() {
+            dep.fabric.broadcast(Msg::Shutdown);
+            for h in dep.handles {
+                let _ = h.join();
+            }
+            let (messages, bytes) = dep.fabric.counters.snapshot();
+            self.comm_base.0 += messages;
+            self.comm_base.1 += bytes;
+        }
     }
 
     /// One barriered round: kick off, admit λ, collect reports, update S.
     fn run_round(
-        &self,
+        dep: &Deployment,
         problem: &Problem,
         lam: &[f64],
         phi: &mut Phi,
-        s_lanes: &[Vec<(usize, usize)>],
-        fabric: &Fabric,
-        leader_rx: &Receiver<Msg>,
         round: u64,
         eta: f64,
     ) {
         let net = &problem.net;
         let w_cnt = net.n_versions();
-        fabric.broadcast(Msg::BeginRound { round, eta });
+        dep.fabric.broadcast(Msg::BeginRound { round, eta });
         // admit: S forwards λ_w over its rows
-        for (w, lanes) in s_lanes.iter().enumerate() {
+        for (w, lanes) in dep.s_lanes.iter().enumerate() {
             for &(e, dst) in lanes {
-                fabric.send(dst - 1, Msg::Ingress { w, rate: lam[w] * phi.frac[w][e] });
+                dep.fabric.send(
+                    dst - 1,
+                    Msg::Ingress {
+                        w,
+                        from: AugmentedNet::SOURCE,
+                        rate: lam[w] * phi.frac[w][e],
+                    },
+                );
             }
         }
         // collect all node reports (+ S's downstream marginals)
         let mut reports: HashMap<usize, Vec<(usize, usize, f64)>> = HashMap::new();
         let mut r_of: Vec<HashMap<usize, f64>> = vec![HashMap::new(); w_cnt];
         while reports.len() < net.n_real {
-            match leader_rx.recv().expect("leader inbox closed mid-round") {
+            match dep.leader_rx.recv().expect("leader inbox closed mid-round") {
                 Msg::Marginal { w, from, value } => {
                     r_of[w].insert(from, value);
                 }
@@ -195,7 +324,7 @@ impl DistributedOmd {
             }
         }
         // S's own mirror update (it is a router like any other)
-        for (w, lanes) in s_lanes.iter().enumerate() {
+        for (w, lanes) in dep.s_lanes.iter().enumerate() {
             if lam[w] <= 0.0 || lanes.len() < 2 {
                 continue;
             }
@@ -216,7 +345,8 @@ impl DistributedOmd {
                 phi.frac[w][e] = v;
             }
         }
-        // merge node reports into the global snapshot (metrics/state only)
+        // merge node reports into the global snapshot (metrics/state only;
+        // each node reports its own out-edges, so the writes are disjoint)
         for (_from, rows) in reports {
             for (w, e, v) in rows {
                 phi.frac[w][e] = v;
@@ -225,12 +355,62 @@ impl DistributedOmd {
     }
 }
 
+impl Router for DistributedOmd {
+    fn name(&self) -> &'static str {
+        "distributed-omd"
+    }
+
+    /// One barriered distributed round. Actors are deployed on the first
+    /// call (warm-starting from `phi`) and persist across steps; the
+    /// returned value is the total cost *before* the round's update, as
+    /// with every router.
+    fn step(&mut self, problem: &Problem, lam: &[f64], phi: &mut Phi) -> f64 {
+        self.ensure_deployed(problem, phi);
+        let cost_before = self.engine.evaluate_cost(problem, phi, lam);
+        if self.adaptive {
+            self.eta_cur =
+                OmdRouter::adapt_eta(self.eta_cur, self.eta, self.last_cost, cost_before);
+        }
+        self.last_cost = Some(cost_before);
+        let dep = self.deployment.as_mut().expect("deployed above");
+        Self::run_round(dep, problem, lam, phi, self.rounds as u64, self.eta_cur);
+        // remember the state the actors now hold, so the next step can
+        // detect an externally reset/replaced φ and redeploy
+        dep.phi.clone_from(phi);
+        self.rounds += 1;
+        cost_before
+    }
+
+    fn set_workers(&mut self, workers: usize) {
+        self.engine.set_workers(workers);
+    }
+
+    fn comm_stats(&self) -> Option<CommStats> {
+        let (m, b) = self
+            .deployment
+            .as_ref()
+            .map(|d| d.fabric.counters.snapshot())
+            .unwrap_or((0, 0));
+        Some(CommStats {
+            messages: self.comm_base.0 + m,
+            bytes: self.comm_base.1 + b,
+            rounds: self.rounds,
+        })
+    }
+}
+
+impl Drop for DistributedOmd {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::graph::topologies;
     use crate::model::cost::CostKind;
-    use crate::routing::Router;
+    use crate::session::{RoutingRun, Trajectory};
     use crate::util::rng::Rng;
 
     fn problem(seed: u64, n: usize) -> Problem {
@@ -239,33 +419,67 @@ mod tests {
         Problem::new(net, 60.0, CostKind::Exp)
     }
 
+    fn run_distributed(
+        p: &Problem,
+        eta: f64,
+        rounds: usize,
+    ) -> (Trajectory, crate::session::RunReport) {
+        let mut traj = Trajectory::default();
+        let report = RoutingRun::new(
+            p,
+            Box::new(DistributedOmd::new(eta)),
+            p.uniform_allocation(),
+            rounds,
+        )
+        .observe(&mut traj)
+        .finish();
+        (traj, report)
+    }
+
     #[test]
     fn distributed_matches_centralized() {
         // the distributed actors must reproduce the centralized OMD-RT
-        // trajectory (same math, message-passing evaluation)
+        // trajectory (same math, message-passing evaluation; with the
+        // slot-ordered ingress sums the match is to rounding noise)
         let p = problem(1, 8);
-        let lam = p.uniform_allocation();
-        let dist = DistributedOmd::new(0.3);
-        let (dsol, comm) = dist.solve(&p, &lam, 12);
-        let csol = OmdRouter::new(0.3).solve(&p, &lam, 12);
+        let (dtraj, dreport) = run_distributed(&p, 0.3, 12);
+        let mut ctraj = Trajectory::default();
+        let creport = RoutingRun::new(
+            &p,
+            Box::new(OmdRouter::new(0.3)),
+            p.uniform_allocation(),
+            12,
+        )
+        .observe(&mut ctraj)
+        .finish();
+        let comm = dreport.comm.expect("distributed runs report comm stats");
         assert!(comm.messages > 0);
-        for (i, (a, b)) in dsol.trajectory.iter().zip(&csol.trajectory).enumerate() {
+        assert_eq!(comm.rounds, dreport.iterations);
+        for (i, (a, b)) in dtraj.values.iter().zip(&ctraj.values).enumerate() {
             assert!(
-                (a - b).abs() < 1e-6 * b.abs().max(1.0),
+                (a - b).abs() <= 1e-9 * b.abs().max(1.0),
                 "iter {i}: distributed {a} vs centralized {b}"
             );
         }
+        assert!(
+            (dreport.objective - creport.objective).abs()
+                <= 1e-9 * creport.objective.abs().max(1.0),
+            "final cost: {} vs {}",
+            dreport.objective,
+            creport.objective
+        );
     }
 
     #[test]
     fn message_count_scales_with_rounds() {
         let p = problem(2, 6);
-        let lam = p.uniform_allocation();
-        let dist = DistributedOmd::new(0.3);
-        let (_s1, c1) = dist.solve(&p, &lam, 5);
-        let (_s2, c2) = dist.solve(&p, &lam, 10);
+        let (_t1, r1) = run_distributed(&p, 0.3, 5);
+        let (_t2, r2) = run_distributed(&p, 0.3, 10);
+        let (c1, c2) = (r1.comm.unwrap(), r2.comm.unwrap());
         assert!(c2.messages > c1.messages);
         assert!(c2.bytes > c1.bytes);
+        assert_eq!(c1.rounds, 5);
+        assert_eq!(c2.rounds, 10);
     }
 
     #[test]
@@ -274,16 +488,57 @@ mod tests {
         // larger η the invariant is trajectory-equality with the
         // centralized solver, covered above
         let p = problem(3, 10);
-        let lam = p.uniform_allocation();
-        let (sol, _) = DistributedOmd::new(0.05).solve(&p, &lam, 20);
-        for w in sol.trajectory.windows(2) {
+        let (traj, report) = run_distributed(&p, 0.05, 20);
+        for w in traj.values.windows(2) {
             assert!(w[1] <= w[0] + 1e-9, "cost increased {} -> {}", w[0], w[1]);
         }
-        sol.phi.is_feasible(&p.net, 1e-9).unwrap();
-        // and the same η must match the centralized trajectory exactly
-        let c = OmdRouter::new(0.05).solve(&p, &lam, 20);
-        for (a, b) in sol.trajectory.iter().zip(&c.trajectory) {
-            assert!((a - b).abs() < 1e-6 * b.abs().max(1.0), "{a} vs {b}");
+        report.phi.expect("routing runs expose phi").is_feasible(&p.net, 1e-9).unwrap();
+    }
+
+    #[test]
+    fn reused_router_redeploys_when_phi_is_reset() {
+        // driving the same instance through two fresh runs must behave
+        // like two fresh routers: the second run hands in the uniform
+        // initializer again, so the converged fleet is torn down and
+        // redeployed — and the adaptive η schedule restarts — instead of
+        // silently desyncing from the leader's φ (adaptive default on, so
+        // a stale last_cost would show up as a diverging trajectory here)
+        let p = problem(6, 8);
+        let lam = p.uniform_allocation();
+        let mut reused = DistributedOmd::new(0.2);
+        let mut traj_a = Vec::new();
+        let mut traj_b = Vec::new();
+        for traj in [&mut traj_a, &mut traj_b] {
+            let mut phi = Phi::uniform(&p.net);
+            for _ in 0..6 {
+                traj.push(reused.step(&p, &lam, &mut phi));
+            }
         }
+        for (a, b) in traj_a.iter().zip(&traj_b) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+        }
+        // comm accounting survives the redeploy (counters carry over)
+        let comm = reused.comm_stats().unwrap();
+        assert_eq!(comm.rounds, 12);
+        assert!(comm.messages > 0);
+    }
+
+    #[test]
+    fn redeploys_after_topology_change_and_keeps_counters() {
+        let p1 = problem(4, 6);
+        let p2 = problem(5, 9);
+        let mut router = DistributedOmd::new(0.3);
+        let lam1 = p1.uniform_allocation();
+        let mut phi1 = Phi::uniform(&p1.net);
+        router.step(&p1, &lam1, &mut phi1);
+        let after_first = router.comm_stats().unwrap();
+        assert!(after_first.messages > 0);
+        // new topology: the old fleet is shut down, counters carry over
+        let lam2 = p2.uniform_allocation();
+        let mut phi2 = Phi::uniform(&p2.net);
+        router.step(&p2, &lam2, &mut phi2);
+        let after_second = router.comm_stats().unwrap();
+        assert!(after_second.messages > after_first.messages);
+        assert_eq!(after_second.rounds, 2);
     }
 }

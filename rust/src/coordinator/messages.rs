@@ -16,8 +16,12 @@ pub enum Msg {
     /// Leader round kick-off + the mirror step size for this round.
     BeginRound { round: u64, eta: f64 },
     /// One upstream neighbour's session-`w` flow contribution over one
-    /// in-edge (exactly one per (session, in-edge) per round).
-    Ingress { w: usize, rate: f64 },
+    /// in-edge (exactly one per (session, in-edge) per round). `from` is
+    /// the sender's augmented node id — receivers bucket contributions per
+    /// upstream slot and sum them in the session DAG's topological order,
+    /// so the accumulated `t_i(w)` is independent of message arrival order
+    /// and bit-identical to the centralized engine sweep.
+    Ingress { w: usize, from: usize, rate: f64 },
     /// Node reports its updated rows to the leader:
     /// (session, edge, fraction) triples.
     RowsReport { from: usize, rows: Vec<(usize, usize, f64)> },
@@ -30,9 +34,12 @@ impl Msg {
     /// accounting; marginals piggyback on task messages per footnote 6).
     pub fn wire_bytes(&self) -> usize {
         match self {
+            // value (8) + session tag (4) + sender id (4) — the sender id
+            // is billed for Marginal and Ingress alike
             Msg::Marginal { .. } => 8 + 2 * 4,
             Msg::BeginRound { .. } => 16,
-            Msg::Ingress { .. } => 12,
+            // rate (8) + session tag (4) + sender id (4)
+            Msg::Ingress { .. } => 8 + 2 * 4,
             Msg::RowsReport { rows, .. } => 8 + rows.len() * 20,
             Msg::Shutdown => 1,
         }

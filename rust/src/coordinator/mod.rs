@@ -1,15 +1,22 @@
 //! Distributed CEC coordinator (the paper's system layer).
 //!
 //! * [`net`] — the message fabric: per-node inboxes over std channels, with
-//!   delivered-message accounting (the communication-overhead metric).
+//!   delivered-message accounting ([`net::CommStats`], the
+//!   communication-overhead metric).
 //! * [`messages`] — the wire protocol between node actors.
 //! * [`node`] — one actor per edge device: holds its own routing rows,
 //!   computes local marginals, participates in the broadcast protocol.
-//! * [`leader`] — the controller at the virtual source: drives allocation
-//!   (GS-OMA / OMAD) rounds and topology-change events.
+//! * [`leader`] — the controller at the virtual source:
+//!   [`leader::DistributedOmd`] implements the standard
+//!   [`crate::routing::Router`] step protocol (one step = one barriered
+//!   round over live actors), so distributed runs stream through the
+//!   session stack like every other solver — `"distributed-omd"` in the
+//!   registry, [`crate::session::Session::distributed_run`] as the typed
+//!   entry point, `CommStats` on the final `RunReport`.
 //! * [`serving`] — discrete-event serving simulator (Poisson arrivals,
 //!   queues, real DNN execution via the PJRT runtime) producing *measured*
-//!   utilities for the online learner.
+//!   utilities for the online learner; its oracle rides the shared
+//!   [`crate::engine::FlowEngine`] with the `--workers` knob.
 
 pub mod events;
 pub mod leader;

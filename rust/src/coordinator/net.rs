@@ -8,6 +8,20 @@ use std::sync::Arc;
 
 use super::messages::Msg;
 
+/// Communication accounting for a distributed run (the paper's
+/// communication-overhead metric). Produced from the fabric's delivered
+/// counters; exposed on [`crate::session::RunReport::comm`] via
+/// [`crate::routing::Router::comm_stats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CommStats {
+    /// Messages delivered over the fabric (control + data plane).
+    pub messages: u64,
+    /// Approximate wire bytes (see [`super::messages::Msg::wire_bytes`]).
+    pub bytes: u64,
+    /// Barriered rounds driven by the leader.
+    pub rounds: usize,
+}
+
 /// Shared counters for fabric traffic.
 #[derive(Debug, Default)]
 pub struct Counters {
@@ -94,9 +108,9 @@ mod tests {
     #[test]
     fn broadcast_reaches_all() {
         let (fabric, rxs, _lrx) = Fabric::new(3);
-        fabric.broadcast(Msg::Ingress { w: 0, rate: 0.5 });
+        fabric.broadcast(Msg::Ingress { w: 0, from: 0, rate: 0.5 });
         for rx in &rxs {
-            assert_eq!(rx.try_recv().unwrap(), Msg::Ingress { w: 0, rate: 0.5 });
+            assert_eq!(rx.try_recv().unwrap(), Msg::Ingress { w: 0, from: 0, rate: 0.5 });
         }
     }
 

@@ -4,9 +4,13 @@
 //! marginal-cost broadcast, and applies the eq.-(22) mirror update to its
 //! own rows — exactly the distributed node-based scheme of Algorithm 2.
 //!
-//! The actor's arithmetic must agree with [`crate::routing::omd`] to the
-//! last bit; the integration tests cross-check distributed vs centralized
-//! trajectories.
+//! The actor's arithmetic must agree with [`crate::routing::omd`] **to the
+//! last bit**: ingress contributions are bucketed per upstream slot and
+//! summed in the session DAG's topological order (the same order the fused
+//! [`crate::engine::FlowEngine`] forward sweep accumulates them), so the
+//! result is independent of message arrival order. The integration tests
+//! cross-check distributed vs centralized trajectories and assert
+//! bit-identity across engine worker counts.
 
 use std::sync::mpsc::Receiver;
 
@@ -34,6 +38,17 @@ pub struct OutLane {
     pub capacity: f64,
 }
 
+/// One upstream neighbour inside one session's DAG. The leader sorts each
+/// node's upstream list in the session's forward topological order (S
+/// first), so the deferred ingress summation reproduces the engine's
+/// accumulation order bit for bit.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Upstream {
+    /// Augmented-graph node id of the sender (`0` = S / the leader).
+    pub node: usize,
+    pub peer: Peer,
+}
+
 /// Static per-epoch description of one node's view of the network.
 #[derive(Clone, Debug)]
 pub struct NodeSpec {
@@ -45,8 +60,9 @@ pub struct NodeSpec {
     pub cost: CostKind,
     /// `lanes[w]` — session w's usable out-edges.
     pub lanes: Vec<Vec<OutLane>>,
-    /// `in_peers[w]` — upstream peers (for the marginal broadcast).
-    pub in_peers: Vec<Vec<Peer>>,
+    /// `in_peers[w]` — upstream neighbours in session-topo order (for the
+    /// deterministic ingress sum and the marginal broadcast).
+    pub in_peers: Vec<Vec<Upstream>>,
     /// Initial routing fractions per session (parallel to `lanes`).
     pub phi0: Vec<Vec<f64>>,
 }
@@ -64,9 +80,11 @@ impl NodeSpec {
 /// Per-round mutable state.
 struct RoundState {
     eta: f64,
-    /// accumulated ingress per session + received count
+    /// per-(session, upstream-slot) ingress contributions; summed in slot
+    /// (= session-topo) order once complete
+    t_parts: Vec<Vec<Option<f64>>>,
+    /// accumulated ingress per session (valid once `sent_ingress[w]`)
     t: Vec<f64>,
-    t_seen: Vec<usize>,
     /// downstream marginals per (session, edge slot); None until received
     r_down: Vec<Vec<Option<f64>>>,
     /// link marginals D' per (session, edge slot); computed once flows known
@@ -82,8 +100,8 @@ impl RoundState {
         let w = spec.n_sessions;
         RoundState {
             eta,
+            t_parts: (0..w).map(|i| vec![None; spec.in_peers[i].len()]).collect(),
             t: vec![0.0; w],
-            t_seen: vec![0; w],
             r_down: (0..w)
                 .map(|i| {
                     spec.lanes[i]
@@ -152,9 +170,17 @@ impl NodeActor {
 
     fn handle(&mut self, st: &mut RoundState, msg: Msg, _fabric: &Fabric) {
         match msg {
-            Msg::Ingress { w, rate } => {
-                st.t[w] += rate;
-                st.t_seen[w] += 1;
+            Msg::Ingress { w, from, rate } => {
+                // bucket by upstream slot; the sum happens in slot order
+                // once every contribution arrived (arrival-order agnostic).
+                // Parallel edges from the same upstream fill its slots in
+                // arrival order (one message per in-edge per round).
+                let slot = self.spec.in_peers[w]
+                    .iter()
+                    .enumerate()
+                    .position(|(s, u)| u.node == from && st.t_parts[w][s].is_none())
+                    .expect("ingress from an unknown upstream");
+                st.t_parts[w][slot] = Some(rate);
             }
             Msg::Marginal { w, from, value } => {
                 // locate the lane pointing at `from`
@@ -175,14 +201,27 @@ impl NodeActor {
         let spec = &self.spec;
         let w_cnt = spec.n_sessions;
 
-        // 1. forward ingress downstream as soon as a session's own ingress
-        //    is complete
+        // 1. once a session's ingress is complete, sum it in slot
+        //    (session-topo) order — the engine's accumulation order — and
+        //    forward downstream
         for w in 0..w_cnt {
-            if !st.sent_ingress[w] && st.t_seen[w] == spec.expected_ingress(w) {
+            if !st.sent_ingress[w] && st.t_parts[w].iter().all(Option::is_some) {
+                let mut t = 0.0;
+                for part in &st.t_parts[w] {
+                    t += part.unwrap();
+                }
+                st.t[w] = t;
                 st.sent_ingress[w] = true;
                 for (slot, lane) in spec.lanes[w].iter().enumerate() {
                     if let Peer::Actor(a) = lane.dst {
-                        fabric.send(a, Msg::Ingress { w, rate: st.t[w] * self.phi[w][slot] });
+                        fabric.send(
+                            a,
+                            Msg::Ingress {
+                                w,
+                                from: spec.node_id,
+                                rate: st.t[w] * self.phi[w][slot],
+                            },
+                        );
                     }
                 }
             }
@@ -193,7 +232,8 @@ impl NodeActor {
         if !st.flows_done && (0..w_cnt).all(|w| st.sent_ingress[w]) {
             st.flows_done = true;
             // F_e sums every session's contribution on the shared physical
-            // edge; sessions may share an edge id
+            // edge, in ascending session order (the engine's fixed-order
+            // cross-session reduction); sessions may share an edge id
             let mut flow_of: std::collections::HashMap<usize, f64> =
                 std::collections::HashMap::new();
             for w in 0..w_cnt {
@@ -225,19 +265,20 @@ impl NodeActor {
             if got < spec.expected_marginals(w) {
                 continue;
             }
-            // r_i(w) = Σ φ (D' + r_down)   (eq. 21)
-            let r_i: f64 = spec.lanes[w]
-                .iter()
-                .enumerate()
-                .map(|(slot, _)| {
-                    self.phi[w][slot] * (st.dprime[w][slot] + st.r_down[w][slot].unwrap())
-                })
-                .sum();
+            // r_i(w) = Σ φ (D' + r_down)   (eq. 21), skipping zero lanes
+            // exactly like the engine's reverse sweep
+            let mut r_i = 0.0;
+            for (slot, _) in spec.lanes[w].iter().enumerate() {
+                let f = self.phi[w][slot];
+                if f > 0.0 {
+                    r_i += f * (st.dprime[w][slot] + st.r_down[w][slot].unwrap());
+                }
+            }
             st.sent_marginal[w] = true;
-            for peer in &spec.in_peers[w] {
-                match peer {
+            for up in &spec.in_peers[w] {
+                match up.peer {
                     Peer::Actor(a) => fabric.send(
-                        *a,
+                        a,
                         Msg::Marginal { w, from: spec.node_id, value: r_i },
                     ),
                     Peer::Leader => fabric.send_leader(Msg::Marginal {
@@ -294,12 +335,56 @@ mod tests {
                 ],
                 vec![OutLane { edge_id: 2, dst: Peer::Actor(2), capacity: 10.0 }],
             ],
-            in_peers: vec![vec![Peer::Leader], vec![Peer::Leader, Peer::Actor(3)]],
+            in_peers: vec![
+                vec![Upstream { node: 0, peer: Peer::Leader }],
+                vec![
+                    Upstream { node: 0, peer: Peer::Leader },
+                    Upstream { node: 4, peer: Peer::Actor(3) },
+                ],
+            ],
             phi0: vec![vec![0.5, 0.5], vec![1.0]],
         };
         assert_eq!(spec.expected_ingress(0), 1);
         assert_eq!(spec.expected_ingress(1), 2);
         assert_eq!(spec.expected_marginals(0), 1);
         assert_eq!(spec.expected_marginals(1), 1);
+    }
+
+    #[test]
+    fn ingress_sum_is_arrival_order_agnostic() {
+        // the same contributions delivered in opposite orders must produce
+        // bit-identical sums (slot-order summation, not arrival-order)
+        let spec = NodeSpec {
+            actor: 0,
+            node_id: 1,
+            n_sessions: 1,
+            cost: CostKind::Exp,
+            lanes: vec![vec![OutLane { edge_id: 0, dst: Peer::Destination, capacity: 5.0 }]],
+            in_peers: vec![vec![
+                Upstream { node: 0, peer: Peer::Leader },
+                Upstream { node: 2, peer: Peer::Actor(1) },
+                Upstream { node: 3, peer: Peer::Actor(2) },
+            ]],
+            phi0: vec![vec![1.0]],
+        };
+        // three values whose sum depends on association order
+        let rates = [(0usize, 0.1f64), (2, 1.0e16), (3, -1.0e16)];
+        let sum_for = |order: &[usize]| {
+            let mut actor = NodeActor::new(spec.clone());
+            let mut st = RoundState::new(&actor.spec, 0.5);
+            let (fabric, _rxs, _lrx) = Fabric::new(3);
+            for &k in order {
+                let (from, rate) = rates[k];
+                actor.handle(&mut st, Msg::Ingress { w: 0, from, rate }, &fabric);
+            }
+            actor.progress(&mut st, &fabric);
+            assert!(st.sent_ingress[0]);
+            st.t[0]
+        };
+        let a = sum_for(&[0, 1, 2]);
+        let b = sum_for(&[2, 1, 0]);
+        let c = sum_for(&[1, 2, 0]);
+        assert_eq!(a.to_bits(), b.to_bits());
+        assert_eq!(a.to_bits(), c.to_bits());
     }
 }

@@ -16,6 +16,7 @@ use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
 use super::super::allocation::UtilityOracle;
+use crate::engine::FlowEngine;
 use crate::graph::augmented::AugmentedNet;
 use crate::model::flow::Phi;
 use crate::model::Problem;
@@ -315,18 +316,28 @@ pub fn simulate(
 
 /// A [`UtilityOracle`] whose observations are *measured* from the serving
 /// simulator (the end-to-end driver's oracle). Routing advances one OMD
-/// iteration per observation (single-loop style).
+/// iteration per observation (single-loop style) and rides the shared
+/// fused [`FlowEngine`] sweep: the `--workers` knob threads through
+/// [`MeasuredOracle::with_workers`] into both the router's per-iteration
+/// sweeps and the oracle's own analytic-cost telemetry
+/// ([`MeasuredOracle::last_cost`]).
 pub struct MeasuredOracle<E: InferenceEngine> {
     pub problem: Problem,
     pub params: ServeParams,
     pub engine: E,
     router: Box<dyn Router>,
+    /// Shared flow evaluator for the analytic-cost telemetry at the served
+    /// routing state (workspaces reused across observations).
+    flow_engine: FlowEngine,
     phi: Phi,
     rng: Rng,
     routing_iters: usize,
     observations: usize,
     /// Last serving report (for end-to-end latency/throughput logging).
     pub last_report: Option<ServeReport>,
+    /// Analytic network cost `D(Λ, φ)` at the last served routing state —
+    /// the model-predicted congestion next to the *measured* utility.
+    pub last_cost: Option<f64>,
 }
 
 impl<E: InferenceEngine> MeasuredOracle<E> {
@@ -352,12 +363,23 @@ impl<E: InferenceEngine> MeasuredOracle<E> {
             params,
             engine,
             router,
+            flow_engine: FlowEngine::new(),
             phi,
             rng: Rng::seed_from(seed),
             routing_iters: 0,
             observations: 0,
             last_report: None,
+            last_cost: None,
         }
+    }
+
+    /// Engine worker threads for the per-observation sweeps (`0` = auto):
+    /// applied to the router's iteration engine *and* the oracle's shared
+    /// cost evaluator. Results are bit-identical at any value.
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.flow_engine.set_workers(workers);
+        self.router.set_workers(workers);
+        self
     }
 
     pub fn phi(&self) -> &Phi {
@@ -370,6 +392,10 @@ impl<E: InferenceEngine> UtilityOracle for MeasuredOracle<E> {
         self.observations += 1;
         self.routing_iters += 1;
         self.router.step(&self.problem, lam, &mut self.phi);
+        // one fused forward sweep at the post-step state: the analytic
+        // congestion the flow model predicts for the window we simulate
+        self.last_cost =
+            Some(self.flow_engine.evaluate_cost(&self.problem, &self.phi, lam));
         let report = simulate(
             &self.problem,
             &self.phi,
@@ -406,6 +432,10 @@ impl<E: InferenceEngine> UtilityOracle for MeasuredOracle<E> {
 
     fn current_phi(&self) -> Option<&Phi> {
         Some(&self.phi)
+    }
+
+    fn last_serve_report(&self) -> Option<&ServeReport> {
+        self.last_report.as_ref()
     }
 }
 
@@ -471,6 +501,39 @@ mod tests {
         assert_eq!(o.observations(), 1);
         assert_eq!(o.routing_iterations(), 1);
         assert!(o.last_report.is_some());
+        assert!(o.last_serve_report().is_some());
+        // shared-engine telemetry: the analytic cost at the served state
+        assert!(o.last_cost.unwrap().is_finite() && o.last_cost.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn measured_oracle_is_bit_identical_across_engine_workers() {
+        // the worker knob only parallelizes the fused sweeps — the served
+        // routing state, the analytic cost, and the measured utility must
+        // be bit-identical at any worker count
+        let params = ServeParams { sim_time: 2.0, ..ServeParams::default_for(3) };
+        let lam = [20.0, 25.0, 15.0];
+        let run = |workers: usize| {
+            let p = mk_problem(6);
+            let mut o =
+                MeasuredOracle::new(p, params.clone(), AnalyticEngine::new(3, 5), 0.3, 13)
+                    .with_workers(workers);
+            let us: Vec<f64> = (0..5).map(|_| o.observe(&lam)).collect();
+            (us, o.phi().clone(), o.last_cost.unwrap())
+        };
+        let (u1, phi1, c1) = run(1);
+        for workers in [2usize, 4] {
+            let (u, phi, c) = run(workers);
+            for (a, b) in u.iter().zip(&u1) {
+                assert_eq!(a.to_bits(), b.to_bits(), "utility at {workers} workers");
+            }
+            assert_eq!(c.to_bits(), c1.to_bits(), "cost at {workers} workers");
+            for (ra, rb) in phi.frac.iter().zip(&phi1.frac) {
+                for (a, b) in ra.iter().zip(rb) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "phi at {workers} workers");
+                }
+            }
+        }
     }
 
     #[test]

@@ -35,36 +35,59 @@
 //!
 //! The per-session sweeps are independent (the paper's sessions only couple
 //! through `F_ij`, which the engine reduces sequentially in session order),
-//! so the engine distributes sessions over `std::thread::scope` workers.
-//! Worker assignment affects scheduling only: each session's floating-point
-//! operations are identical on any thread, and the cross-session flow
-//! reduction and cost sum always run on the caller thread in ascending
-//! session order — engine results are **bit-identical at any worker
-//! count** (asserted by `tests/test_engine_equivalence.rs`). The worker
+//! so the engine distributes sessions over a **persistent pinned
+//! [`pool::WorkerPool`]** created once per engine and reused across
+//! iterations (chunk `i` always runs on pool thread `i - 1`; the caller
+//! thread keeps chunk `0`). Worker assignment affects scheduling only: each
+//! session's floating-point operations are identical on any thread, and the
+//! cross-session flow reduction and cost sum always run on the caller
+//! thread in ascending session order — engine results are **bit-identical
+//! at any worker count** (asserted by `tests/test_engine_equivalence.rs`,
+//! for the centralized *and* the distributed solver paths). The worker
 //! count comes from `Scenario::workers` / the CLI `--workers` flag through
 //! the solver registry; `0` means auto (`std::thread::available_parallelism`).
 //!
-//! After the first call on a given topology the engine performs **zero
-//! allocations**: workspaces are sized by [`FlowEngine::bind`] and reused
-//! until the topology shape changes.
+//! The pool exists because a fused sweep at paper-scale topologies
+//! (n ≲ 25, W = 3) costs single-digit microseconds — a per-sweep
+//! `std::thread::scope` spawn/join costs more than the sweep, so
+//! `workers > 1` never paid off before. The legacy per-sweep spawn
+//! strategy is kept behind [`FlowEngine::set_persistent_pool`]`(false)`
+//! purely so `benches/hotpath.rs` can measure the pool against it.
+//!
+//! After the first call on a given topology the numeric workspaces
+//! perform **zero allocations**: they are sized by [`FlowEngine::bind`]
+//! and reused until the topology shape changes, and the worker pool is
+//! spawned once and reused. (The parallel dispatch itself still boxes a
+//! handful of task closures per sweep — nanoseconds next to the
+//! microseconds a per-sweep thread spawn used to cost; single-threaded
+//! sweeps allocate nothing at all.)
+
+pub mod pool;
 
 use crate::graph::augmented::{AugmentedNet, FlowCsr};
 use crate::model::cost::CostKind;
 use crate::model::flow::Phi;
 use crate::model::Problem;
+use pool::WorkerPool;
 
 /// Fused flow/marginal evaluator with engine-owned flat workspaces.
 ///
 /// See the [module docs](self) for the sweep structure. A `FlowEngine` is
 /// cheap to construct (workspaces are allocated lazily on first use) and is
 /// typically owned by a solver for its whole lifetime.
-#[derive(Clone, Debug)]
+#[derive(Debug)]
 pub struct FlowEngine {
     /// Requested worker threads for the per-session sweeps (0 = auto).
     workers: usize,
     /// Cached auto-detected core count (0 = not yet queried); avoids a
     /// `available_parallelism` syscall on every sweep when `workers == 0`.
     workers_auto: usize,
+    /// Dispatch parallel sweeps to the persistent pool (default) instead of
+    /// a per-sweep `std::thread::scope` spawn (kept for benchmarking).
+    use_pool: bool,
+    /// Lazily spawned persistent workers (`effective workers − 1` threads;
+    /// the caller thread runs the first chunk itself).
+    pool: Option<WorkerPool>,
     n_nodes: usize,
     n_edges: usize,
     w_cnt: usize,
@@ -88,12 +111,36 @@ impl Default for FlowEngine {
     }
 }
 
+impl Clone for FlowEngine {
+    /// Clones workspaces and configuration; the worker pool is *not*
+    /// shared — the clone lazily spawns its own on first parallel sweep.
+    fn clone(&self) -> Self {
+        FlowEngine {
+            workers: self.workers,
+            workers_auto: self.workers_auto,
+            use_pool: self.use_pool,
+            pool: None,
+            n_nodes: self.n_nodes,
+            n_edges: self.n_edges,
+            w_cnt: self.w_cnt,
+            t: self.t.clone(),
+            r: self.r.clone(),
+            sess_flows: self.sess_flows.clone(),
+            flows: self.flows.clone(),
+            dprime: self.dprime.clone(),
+            cost: self.cost,
+        }
+    }
+}
+
 impl FlowEngine {
     /// A single-threaded engine (workspaces allocated on first use).
     pub fn new() -> Self {
         FlowEngine {
             workers: 1,
             workers_auto: 0,
+            use_pool: true,
+            pool: None,
             n_nodes: 0,
             n_edges: 0,
             w_cnt: 0,
@@ -120,6 +167,37 @@ impl FlowEngine {
     /// Requested worker count (`0` = auto).
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// Choose the parallel dispatch strategy: `true` (default) reuses the
+    /// persistent worker pool; `false` falls back to a per-sweep
+    /// `std::thread::scope` spawn. Results are bit-identical either way —
+    /// this knob exists so `benches/hotpath.rs` can compare the two.
+    pub fn set_persistent_pool(&mut self, on: bool) {
+        self.use_pool = on;
+        if !on {
+            self.pool = None;
+        }
+    }
+
+    /// Builder-style variant of [`FlowEngine::set_persistent_pool`].
+    pub fn with_persistent_pool(mut self, on: bool) -> Self {
+        self.set_persistent_pool(on);
+        self
+    }
+
+    /// Spawn (or grow) the persistent pool for `workers` total workers.
+    /// The caller thread always runs the first chunk itself, so the pool
+    /// holds `workers − 1` dedicated threads; a larger existing pool is
+    /// kept (extra threads idle).
+    fn ensure_pool(&mut self, workers: usize) {
+        if !self.use_pool || workers <= 1 {
+            return;
+        }
+        let needed = workers - 1;
+        if self.pool.as_ref().map_or(0, |p| p.n_threads()) < needed {
+            self.pool = Some(WorkerPool::new(needed));
+        }
     }
 
     /// (Re)size the workspaces for `net`'s shape. Idempotent and cheap when
@@ -166,8 +244,10 @@ impl FlowEngine {
         assert_eq!(lam.len(), self.w_cnt);
         let (nn, ne) = (self.n_nodes, self.n_edges);
         let workers = self.effective_workers(self.w_cnt);
+        self.ensure_pool(workers);
         let csr = &net.csr;
         {
+            let pool = self.pool.as_ref();
             let mut units: Vec<ForwardUnit<'_>> = self
                 .t
                 .chunks_mut(nn)
@@ -182,7 +262,7 @@ impl FlowEngine {
                     f_w,
                 })
                 .collect();
-            run_units(workers, &mut units, |u| forward_session(csr, u));
+            run_units(pool, workers, &mut units, |u| forward_session(csr, u));
         }
         // Deterministic reduction: total flows accumulate per edge in
         // ascending session order on the caller thread, exactly like the
@@ -216,6 +296,8 @@ impl FlowEngine {
             self.dprime[e] = cost.derivative(self.flows[e], net.graph.edge(e).capacity);
         }
         let workers = self.effective_workers(self.w_cnt);
+        self.ensure_pool(workers);
+        let pool = self.pool.as_ref();
         let csr = &net.csr;
         let dprime = &self.dprime;
         let mut units: Vec<ReverseUnit<'_>> = self
@@ -225,7 +307,7 @@ impl FlowEngine {
             .enumerate()
             .map(|(w, (r_w, phi_w))| ReverseUnit { w, phi_w, r_w })
             .collect();
-        run_units(workers, &mut units, |u| reverse_session(csr, dprime, u));
+        run_units(pool, workers, &mut units, |u| reverse_session(csr, dprime, u));
     }
 
     /// One full evaluation at `(Λ, φ)`: fused forward + reverse sweep.
@@ -357,11 +439,21 @@ fn reverse_session(csr: &FlowCsr, dprime: &[f64], u: &mut ReverseUnit<'_>) {
     }
 }
 
-/// Run every unit exactly once, distributed over at most `workers` scoped
-/// threads. The unit→thread assignment affects scheduling only: callers
+/// Run every unit exactly once, distributed over at most `workers`
+/// workers. The unit→thread assignment affects scheduling only: callers
 /// combine unit outputs in a fixed session order afterwards, which is what
 /// makes engine results bit-identical at any worker count.
-fn run_units<T: Send, F: Fn(&mut T) + Sync>(workers: usize, units: &mut [T], f: F) {
+///
+/// With a pool, chunk 0 runs on the caller thread and chunk `i ≥ 1` on
+/// pool thread `i − 1` (pinned, no stealing); without one, each chunk gets
+/// a freshly spawned scoped thread (the legacy strategy the bench compares
+/// against).
+fn run_units<T: Send, F: Fn(&mut T) + Sync>(
+    pool: Option<&WorkerPool>,
+    workers: usize,
+    units: &mut [T],
+    f: F,
+) {
     if workers <= 1 || units.len() <= 1 {
         for u in units.iter_mut() {
             f(u);
@@ -370,15 +462,34 @@ fn run_units<T: Send, F: Fn(&mut T) + Sync>(workers: usize, units: &mut [T], f: 
     }
     let chunk = units.len().div_ceil(workers);
     let f = &f;
-    std::thread::scope(|scope| {
-        for group in units.chunks_mut(chunk) {
-            scope.spawn(move || {
-                for u in group.iter_mut() {
+    match pool {
+        Some(pool) => {
+            let mut chunks = units.chunks_mut(chunk);
+            let own = chunks.next().expect("at least one chunk");
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            for group in chunks {
+                tasks.push(Box::new(move || {
+                    for u in group.iter_mut() {
+                        f(u);
+                    }
+                }));
+            }
+            pool.run_scoped(tasks, move || {
+                for u in own.iter_mut() {
                     f(u);
                 }
             });
         }
-    });
+        None => std::thread::scope(|scope| {
+            for group in units.chunks_mut(chunk) {
+                scope.spawn(move || {
+                    for u in group.iter_mut() {
+                        f(u);
+                    }
+                });
+            }
+        }),
+    }
 }
 
 #[cfg(test)]
@@ -441,6 +552,54 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn pool_and_scope_strategies_agree_bitwise() {
+        let p = problem(6, 14);
+        let phi = Phi::uniform(&p.net);
+        let lam = p.uniform_allocation();
+        let mut pooled = FlowEngine::new().with_workers(4);
+        let mut scoped = FlowEngine::new().with_workers(4).with_persistent_pool(false);
+        for _ in 0..5 {
+            let a = pooled.prepare(&p, &phi, &lam);
+            let b = scoped.prepare(&p, &phi, &lam);
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in pooled.flows().iter().zip(scoped.flows()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for w in 0..p.n_versions() {
+            for (a, b) in pooled.marginals(w).iter().zip(scoped.marginals(w)) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn persistent_pool_is_reused_across_sweeps_and_rebinds() {
+        let p1 = problem(7, 12);
+        let p2 = problem(8, 16);
+        let mut eng = FlowEngine::new().with_workers(3);
+        let phi1 = Phi::uniform(&p1.net);
+        let c1 = eng.prepare(&p1, &phi1, &p1.uniform_allocation());
+        assert!(eng.pool.is_some(), "parallel sweep must spawn the pool");
+        assert_eq!(eng.pool.as_ref().unwrap().n_threads(), 2);
+        // many reuses + a topology rebind: still the same pool
+        for _ in 0..20 {
+            let c = eng.prepare(&p1, &phi1, &p1.uniform_allocation());
+            assert_eq!(c.to_bits(), c1.to_bits());
+        }
+        let phi2 = Phi::uniform(&p2.net);
+        eng.prepare(&p2, &phi2, &p2.uniform_allocation());
+        assert_eq!(eng.pool.as_ref().unwrap().n_threads(), 2);
+        // a clone spawns its own pool lazily, and single-threaded engines
+        // never spawn one
+        let clone = eng.clone();
+        assert!(clone.pool.is_none());
+        let mut single = FlowEngine::new();
+        single.prepare(&p1, &phi1, &p1.uniform_allocation());
+        assert!(single.pool.is_none());
     }
 
     #[test]

@@ -1,0 +1,214 @@
+//! Persistent worker pool for the engine's per-session sweeps.
+//!
+//! The first engine parallelized sessions with a fresh
+//! `std::thread::scope` per sweep. At paper-scale topologies (n ≲ 25,
+//! W = 3) one fused sweep costs single-digit microseconds, so spawning and
+//! joining OS threads on every sweep costs more than the sweep itself and
+//! `workers > 1` never paid off. This pool fixes that: the engine creates
+//! the threads **once** and re-dispatches borrowed per-sweep closures to
+//! them over channels, so the steady-state cost of a parallel sweep is two
+//! channel hops per worker instead of a spawn/join pair.
+//!
+//! Determinism is unaffected: the pool only changes *where* a session
+//! chunk runs, never the floating-point operations inside it, and the
+//! engine's cross-session reductions stay on the caller thread in fixed
+//! session order (see the [`crate::engine`] module docs). Task `i` of a
+//! dispatch always goes to pool thread `i` — the assignment is pinned, not
+//! work-stolen — so thread-local effects (e.g. perf counters) stay
+//! attributable.
+//!
+//! ## Safety
+//!
+//! [`WorkerPool::run_scoped`] accepts closures borrowing the caller's
+//! stack (`'scope` outlives the call, not the pool). The lifetime is
+//! erased to hand the closure to a `'static` worker thread, which is sound
+//! because the call does not return — even on panic — until every
+//! dispatched task has completed: the borrowed state strictly outlives
+//! every use. Worker panics are caught, forwarded over the completion
+//! channel, and resumed on the caller after the barrier, exactly like
+//! `std::thread::scope`.
+
+use std::any::Any;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+/// A lifetime-erased task, executed exactly once on a pool thread.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Completion signal: `Err` carries a worker panic payload back to the
+/// caller.
+type Done = Result<(), Box<dyn Any + Send + 'static>>;
+
+/// Dedicated, persistent worker threads with pinned per-thread job
+/// channels. Created once (per [`crate::engine::FlowEngine`]) and reused
+/// for every subsequent sweep; dropped threads are joined.
+pub struct WorkerPool {
+    txs: Vec<Sender<Job>>,
+    done_rx: Receiver<Done>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `n_threads` dedicated workers. Callers typically keep one
+    /// chunk of work for themselves, so a pool serving `w` total workers
+    /// holds `w - 1` threads.
+    pub fn new(n_threads: usize) -> WorkerPool {
+        let (done_tx, done_rx) = channel::<Done>();
+        let mut txs = Vec::with_capacity(n_threads);
+        let mut handles = Vec::with_capacity(n_threads);
+        for i in 0..n_threads {
+            let (tx, rx) = channel::<Job>();
+            let done = done_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("jowr-engine-{i}"))
+                .spawn(move || {
+                    // block until the next job; exit when the engine drops
+                    // its sender side
+                    for job in rx.iter() {
+                        let outcome = catch_unwind(AssertUnwindSafe(job));
+                        if done.send(outcome).is_err() {
+                            break;
+                        }
+                    }
+                })
+                .expect("spawn engine worker thread");
+            txs.push(tx);
+            handles.push(handle);
+        }
+        WorkerPool { txs, done_rx, handles }
+    }
+
+    /// Number of dedicated worker threads.
+    pub fn n_threads(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Dispatch `tasks[i]` to pool thread `i`, run `caller_task` on the
+    /// current thread concurrently, and block until every task finished.
+    /// Panics (from tasks or `caller_task`) are resumed on the caller
+    /// *after* the barrier, so borrowed state never escapes.
+    pub fn run_scoped<'scope>(
+        &self,
+        tasks: Vec<Box<dyn FnOnce() + Send + 'scope>>,
+        caller_task: impl FnOnce(),
+    ) {
+        let n = tasks.len();
+        assert!(n <= self.txs.len(), "dispatched {n} tasks to a {}-thread pool", self.txs.len());
+        for (i, task) in tasks.into_iter().enumerate() {
+            // SAFETY: the barrier below blocks until the task has run (or
+            // panicked), so the erased 'scope borrows outlive every use.
+            // The dispatch/barrier channel paths below ABORT rather than
+            // unwind on a dead worker: unwinding here would return while
+            // already-dispatched tasks still borrow the caller's stack.
+            let task: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Job>(task)
+            };
+            if self.txs[i].send(task).is_err() {
+                die("engine worker thread died mid-dispatch");
+            }
+        }
+        let caller_outcome = catch_unwind(AssertUnwindSafe(caller_task));
+        let mut worker_panic = None;
+        for _ in 0..n {
+            match self.done_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(payload)) => worker_panic = Some(payload),
+                Err(_) => die("engine worker thread died mid-barrier"),
+            }
+        }
+        // barrier complete — borrowed state is safe; now propagate
+        if let Err(payload) = caller_outcome {
+            resume_unwind(payload);
+        }
+        if let Some(payload) = worker_panic {
+            resume_unwind(payload);
+        }
+    }
+}
+
+/// A worker can only disappear while its pool is being dropped, which
+/// cannot race a `run_scoped` (both need the pool). If that invariant is
+/// ever broken, aborting is the only sound option: unwinding out of
+/// `run_scoped` would free stack state that dispatched tasks still borrow.
+fn die(msg: &str) -> ! {
+    eprintln!("fatal: {msg}");
+    std::process::abort()
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // closing the job channels ends each worker's recv loop
+        self.txs.clear();
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool").field("n_threads", &self.n_threads()).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn executes_borrowed_tasks_and_reuses_threads() {
+        let pool = WorkerPool::new(3);
+        for round in 0..50usize {
+            let mut out = vec![0usize; 4];
+            {
+                let (own, rest) = out.split_at_mut(1);
+                let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+                for (i, slot) in rest.iter_mut().enumerate() {
+                    tasks.push(Box::new(move || *slot = round + i + 1));
+                }
+                pool.run_scoped(tasks, || own[0] = round);
+            }
+            assert_eq!(out, vec![round, round + 1, round + 2, round + 3]);
+        }
+    }
+
+    #[test]
+    fn caller_runs_concurrently_with_workers() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let pool = WorkerPool::new(2);
+        let hits = AtomicUsize::new(0);
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+        for _ in 0..2 {
+            tasks.push(Box::new(|| {
+                hits.fetch_add(1, Ordering::SeqCst);
+            }));
+        }
+        pool.run_scoped(tasks, || {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn worker_panic_is_resumed_on_caller_after_the_barrier() {
+        let pool = WorkerPool::new(1);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
+            vec![Box::new(|| panic!("worker boom"))];
+        let outcome = catch_unwind(AssertUnwindSafe(|| pool.run_scoped(tasks, || {})));
+        assert!(outcome.is_err(), "worker panic must propagate");
+        // the pool stays usable after a propagated panic
+        let mut x = 0;
+        {
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = vec![Box::new(|| x = 7)];
+            pool.run_scoped(tasks, || {});
+        }
+        assert_eq!(x, 7);
+    }
+
+    #[test]
+    fn drop_joins_cleanly_with_no_work() {
+        let pool = WorkerPool::new(4);
+        drop(pool);
+    }
+}

@@ -52,6 +52,16 @@
 //! # }
 //! ```
 //!
+//! The distributed coordinator (paper Sec. V) is a first-class session
+//! citizen: `"distributed-omd"` in the registry, or
+//! [`session::Session::distributed_run`] for the typed entry point. One
+//! step is one barriered message-passing round over live node actors, and
+//! the final [`session::RunReport::comm`] carries the
+//! communication-overhead telemetry
+//! ([`coordinator::net::CommStats`]). With the deterministic per-slot
+//! ingress summation, distributed rounds are bit-identical to centralized
+//! OMD-RT iterations at any engine worker count.
+//!
 //! ### Deprecation path
 //!
 //! Direct construction — `OmdRouter::new(0.1).solve(&problem, &lam, 50)` —
@@ -60,9 +70,12 @@
 //! validation, hard-codes the algorithm choice, and bakes trajectory
 //! collection into the solver. New code should build a
 //! [`session::Scenario`] and drive a [`session::RoutingRun`] /
-//! [`session::AllocationRun`]; the legacy `RoutingState` /
-//! `AllocationState` structs are retained for the distributed coordinator
-//! and will eventually fold into [`session::RunReport`].
+//! [`session::AllocationRun`] / [`session::DistributedRun`]; the legacy
+//! `RoutingState` / `AllocationState` structs survive only as the return
+//! values of the solver-internal `solve`/`run` helpers (pinned by the
+//! legacy-equivalence tests) — coordinator and CLI hand-off goes through
+//! [`session::RunReport`] (`final_phi` for warm starts, `comm` for the
+//! fabric telemetry).
 
 pub mod allocation;
 pub mod config;
@@ -82,6 +95,8 @@ pub mod util;
 /// Convenience re-exports for examples / benches / the CLI.
 pub mod prelude {
     pub use crate::allocation::{gsoma::GsOma, omad::Omad, Allocator, UtilityOracle};
+    pub use crate::coordinator::leader::DistributedOmd;
+    pub use crate::coordinator::net::CommStats;
     pub use crate::engine::FlowEngine;
     pub use crate::graph::augmented::{AugmentedNet, Placement};
     pub use crate::graph::topologies;
@@ -93,8 +108,8 @@ pub mod prelude {
         gp::GpRouter, omd::OmdRouter, opt::OptRouter, sgp::SgpRouter, Router, RoutingState,
     };
     pub use crate::session::run::{
-        AllocationRun, Deadline, MaxIters, Observer, Progress, RoutingRun, RunReport, StepInfo,
-        StopReason, StopRule, Tolerance, ToleranceStrict, Trajectory,
+        AllocationRun, Deadline, DistributedRun, MaxIters, Observer, Progress, RoutingRun,
+        RunReport, StepInfo, StopReason, StopRule, Tolerance, ToleranceStrict, Trajectory,
     };
     pub use crate::session::{registry, Hyper, Scenario, Session, SessionError};
     pub use crate::util::rng::Rng;

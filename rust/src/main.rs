@@ -5,6 +5,7 @@
 //! jowr fig --id all                               every figure + table
 //! jowr topo --name abilene | --all                topology stats (Table II)
 //! jowr route [--n 25] [--p 0.2] [--algo <router>] [--iters 50]
+//! jowr dist [--rounds 50] [--workers k]           distributed OMD-RT run
 //! jowr allocate [--family log] [--algo <allocator>] [--iters 60]
 //! jowr solvers                                    list the solver registry
 //! jowr serve [--sim-time 20] [--iters 40] [--xla] end-to-end serving demo
@@ -15,6 +16,8 @@
 //! Algorithm dispatch goes through the solver registry
 //! (`jowr::session::registry`): an unknown `--algo` is a clean error
 //! listing the registered names, never a panic.
+
+use std::ops::ControlFlow;
 
 use jowr::config::ExperimentConfig;
 use jowr::coordinator::serving::{AnalyticEngine, MeasuredOracle, ServeParams};
@@ -67,7 +70,7 @@ fn usage() {
          fig --id 7|8|9|10|11|12|all    regenerate paper figures\n  \
          topo --name <x> | --all        topology stats (Table II)\n  \
          route [--algo {routers}]\n                                 run one routing solve\n  \
-         dist [--rounds 50]             distributed OMD-RT (actors + comm stats)\n  \
+         dist [--rounds 50]             distributed OMD-RT session run (actors +\n                                 CommStats; also `route --algo distributed-omd`)\n  \
          allocate [--algo {allocators}]\n                                 run one allocation solve\n  \
          solvers                        list the solver registry\n  \
          serve [--xla] [--router omd]   end-to-end serving demo\n  \
@@ -193,28 +196,30 @@ fn cmd_route(args: &Args) -> Result<(), String> {
 fn cmd_dist(args: &Args) -> Result<(), String> {
     let session = load_session(args)?;
     let rounds = args.usize_or("rounds", 50)?;
-    let problem = &session.problem;
-    let lam = session.uniform_allocation();
     println!(
         "distributed OMD-RT: {} node actors + leader, {rounds} barriered rounds",
-        problem.net.n_real
+        session.problem.net.n_real
     );
-    let dist = jowr::coordinator::leader::DistributedOmd::new(session.cfg.eta_routing);
-    let (sol, comm) = dist.solve(problem, &lam, rounds);
+    // the distributed coordinator is a session run like any other: one
+    // step = one barriered round, CommStats on the final report
+    let mut traj = Trajectory::default();
+    let report = session.distributed_run(rounds)?.observe(&mut traj).finish();
     println!(
-        "cost {:.6} -> {:.6} in {:.3}s",
-        sol.trajectory[0], sol.cost, sol.elapsed_s
+        "cost {:.6} -> {:.6} in {} rounds ({:.3}s, stop: {:?})",
+        traj.values[0], report.objective, report.iterations, report.elapsed_s, report.stop
     );
+    let comm = report.comm.unwrap_or_default();
+    let per_round = comm.rounds.max(1) as f64;
     println!(
         "communication: {} messages, {} bytes total ({:.1} msgs/round, {:.1} B/round/device)",
         comm.messages,
         comm.bytes,
-        comm.messages as f64 / rounds as f64,
-        comm.bytes as f64 / rounds as f64 / problem.net.n_real as f64
+        comm.messages as f64 / per_round,
+        comm.bytes as f64 / per_round / session.problem.net.n_real as f64
     );
     // cross-check against the centralized solver from the registry
     let central = session.routing_run("omd", rounds)?.finish();
-    let rel = (sol.cost - central.objective).abs() / central.objective.abs().max(1.0);
+    let rel = (report.objective - central.objective).abs() / central.objective.abs().max(1.0);
     println!(
         "centralized cross-check: cost {:.6} (rel diff {rel:.2e})",
         central.objective
@@ -271,33 +276,52 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let params = ServeParams { sim_time, ..ServeParams::default_for(cfg.n_versions) };
     // the paper's serving setup uses a smaller outer step than the
     // analytic experiments
-    let mut alg = registry::allocator_with(
+    let alg = registry::allocator_with(
         args.get_or("algo", "omad"),
         &Hyper { eta_alloc: 0.03, ..session.hyper() },
     )?;
-    let st = if use_xla {
-        serve_xla(&session, &router_name, params, alg.as_mut(), iters)?
+    if use_xla {
+        serve_xla(&session, &router_name, params, alg, iters)
     } else {
         println!("serving with the analytic inference engine (pass --xla for real DNNs)");
         let engine = AnalyticEngine::new(cfg.n_versions, cfg.seed);
-        let mut oracle = MeasuredOracle::with_router(
+        let oracle = MeasuredOracle::with_router(
             session.problem.clone(),
             params,
             engine,
             session.router(&router_name)?,
             cfg.seed,
-        );
-        let st = alg.run(&mut oracle, iters);
-        if let Some(rep) = &oracle.last_report {
-            print_report(rep);
+        )
+        .with_workers(cfg.workers);
+        run_serving(Box::new(oracle), alg, iters)
+    }
+}
+
+/// Drive a measured-utility allocation run through the streaming session
+/// API and print the serving telemetry from the recovered oracle.
+fn run_serving(
+    oracle: Box<dyn UtilityOracle>,
+    alg: Box<dyn Allocator>,
+    iters: usize,
+) -> Result<(), String> {
+    let mut traj = Trajectory::default();
+    let mut run = AllocationRun::new(alg, oracle, iters).observe(&mut traj);
+    let report = loop {
+        if let ControlFlow::Break(report) = run.step() {
+            break report;
         }
-        st
     };
+    let oracle = run.into_oracle();
+    if let Some(rep) = oracle.last_serve_report() {
+        print_report(rep);
+    }
     println!(
-        "measured utility {:.4} -> {:.4}; final Λ = {:?}",
-        st.trajectory[0],
-        st.trajectory.last().unwrap(),
-        st.lam
+        "measured utility {:.4} -> {:.4} in {} outer iters ({:.3}s); final Λ = {:?}",
+        traj.values[0],
+        traj.values.last().unwrap(),
+        report.iterations,
+        report.elapsed_s,
+        report.lam
     );
     Ok(())
 }
@@ -307,25 +331,22 @@ fn serve_xla(
     session: &Session,
     router_name: &str,
     params: ServeParams,
-    alg: &mut dyn Allocator,
+    alg: Box<dyn Allocator>,
     iters: usize,
-) -> Result<jowr::allocation::AllocationState, String> {
+) -> Result<(), String> {
     let cfg = &session.cfg;
     let engine = jowr::runtime::dnn::XlaEngine::load_default(cfg.n_versions)
         .map_err(|e| format!("xla engine: {e:#}"))?;
     println!("serving with measured DNN latencies (backend: xla-pjrt)");
-    let mut oracle = MeasuredOracle::with_router(
+    let oracle = MeasuredOracle::with_router(
         session.problem.clone(),
         params,
         engine,
         session.router(router_name)?,
         cfg.seed,
-    );
-    let st = alg.run(&mut oracle, iters);
-    if let Some(rep) = &oracle.last_report {
-        print_report(rep);
-    }
-    Ok(st)
+    )
+    .with_workers(cfg.workers);
+    run_serving(Box::new(oracle), alg, iters)
 }
 
 #[cfg(not(feature = "xla"))]
@@ -333,9 +354,9 @@ fn serve_xla(
     _session: &Session,
     _router_name: &str,
     _params: ServeParams,
-    _alg: &mut dyn Allocator,
+    _alg: Box<dyn Allocator>,
     _iters: usize,
-) -> Result<jowr::allocation::AllocationState, String> {
+) -> Result<(), String> {
     Err("this build has no XLA runtime (rebuild with `--features xla` after adding the \
          `xla` and `anyhow` dependencies)"
         .into())

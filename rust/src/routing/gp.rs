@@ -35,6 +35,10 @@ impl Router for GpRouter {
         "GP"
     }
 
+    fn set_workers(&mut self, workers: usize) {
+        self.engine.set_workers(workers);
+    }
+
     fn step(&mut self, problem: &Problem, lam: &[f64], phi: &mut Phi) -> f64 {
         let net = &problem.net;
         let cost_before = self.engine.prepare(problem, phi, lam);

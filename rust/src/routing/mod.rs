@@ -23,6 +23,7 @@ pub mod omd;
 pub mod opt;
 pub mod sgp;
 
+use crate::coordinator::net::CommStats;
 use crate::engine::FlowEngine;
 use crate::model::flow::Phi;
 use crate::model::Problem;
@@ -30,7 +31,9 @@ use crate::model::Problem;
 /// Result of a legacy `Router::solve` run. The session API reports runs
 /// through the unified [`crate::session::RunReport`] instead, with
 /// trajectories recorded by [`crate::session::run::Observer`]s; this struct
-/// is kept for the distributed coordinator and warm-start interop.
+/// survives only as the return of the solver-internal [`Router::solve`]
+/// helper (pinned by the legacy-equivalence tests) — the distributed
+/// coordinator and all warm-start interop now go through `RunReport`.
 #[derive(Clone, Debug)]
 pub struct RoutingState {
     pub phi: Phi,
@@ -54,6 +57,18 @@ pub trait Router {
     /// evaluated *before* the update (matching the paper's per-iteration
     /// convergence plots).
     fn step(&mut self, problem: &Problem, lam: &[f64], phi: &mut Phi) -> f64;
+
+    /// Set the [`FlowEngine`] worker count for this router's per-iteration
+    /// sweeps (`0` = auto-detect). Results are bit-identical at any value.
+    /// Default: no-op for routers without an engine.
+    fn set_workers(&mut self, _workers: usize) {}
+
+    /// Communication accounting, for routers that run over a message
+    /// fabric (the distributed coordinator). `None` for in-process
+    /// routers; surfaced as [`crate::session::RunReport::comm`].
+    fn comm_stats(&self) -> Option<CommStats> {
+        None
+    }
 
     /// Iterate up to `max_iters`, stopping early when φ stops changing
     /// (`Line 6` of Algorithm 2: `φ^{k+1} == φ^k`).

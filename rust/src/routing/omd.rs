@@ -156,6 +156,10 @@ impl Router for OmdRouter {
         "OMD-RT"
     }
 
+    fn set_workers(&mut self, workers: usize) {
+        self.engine.set_workers(workers);
+    }
+
     fn step(&mut self, problem: &Problem, lam: &[f64], phi: &mut Phi) -> f64 {
         let net = &problem.net;
         // fused forward + reverse sweep: t, F, cost, D', r in two passes

@@ -248,6 +248,10 @@ impl crate::routing::Router for OptRouter {
         "OPT"
     }
 
+    fn set_workers(&mut self, workers: usize) {
+        self.engine.set_workers(workers);
+    }
+
     fn step(&mut self, problem: &Problem, lam: &[f64], phi: &mut Phi) -> f64 {
         let cost_before = self.engine.evaluate_cost(problem, phi, lam);
         let cached = self

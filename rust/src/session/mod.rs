@@ -39,7 +39,9 @@ pub mod run;
 
 pub use error::SessionError;
 pub use registry::Hyper;
-pub use run::{AllocationRun, RoutingRun, RunReport, StepInfo, StopReason, Trajectory};
+pub use run::{
+    AllocationRun, DistributedRun, RoutingRun, RunReport, StepInfo, StopReason, Trajectory,
+};
 
 use crate::allocation::{AnalyticOracle, SingleStepOracle, UtilityOracle};
 use crate::allocation::Allocator;
@@ -256,20 +258,24 @@ impl Session {
             .ok_or_else(|| SessionError::UnknownAllocator { name: allocator.to_string() })?;
         let utilities = self.utilities()?;
         if entry.single_loop {
-            Ok(Box::new(SingleStepOracle::new(
-                self.problem.clone(),
-                utilities,
-                self.cfg.eta_routing,
-            )))
+            let mut oracle =
+                SingleStepOracle::new(self.problem.clone(), utilities, self.cfg.eta_routing);
+            // the persistent routing state advances on the shared engine;
+            // thread the session's worker knob through
+            oracle.router.set_workers(self.cfg.workers);
+            Ok(Box::new(oracle))
         } else {
             let mut oracle = AnalyticOracle::new(self.problem.clone(), utilities);
             oracle.router_eta = self.cfg.eta_routing;
+            oracle.workers = self.cfg.workers;
             Ok(Box::new(oracle))
         }
     }
 
     /// A streaming routing run of `algo` on the uniform allocation, with
-    /// the legacy convergence tolerance and an iteration budget.
+    /// the legacy convergence tolerance and an iteration budget. The
+    /// session's `workers` knob is threaded into the run's final-report
+    /// engine and the router's per-iteration sweeps.
     pub fn routing_run(
         &self,
         algo: &str,
@@ -280,7 +286,18 @@ impl Session {
             self.router(algo)?,
             self.uniform_allocation(),
             max_iters,
-        ))
+        )
+        .engine_workers(self.cfg.workers))
+    }
+
+    /// A streaming distributed routing run (paper Sec. V): the
+    /// `"distributed-omd"` registry solver — one step = one barriered
+    /// round over live node actors — driven through the same `RunCore`
+    /// protocol as every centralized run. The final
+    /// [`RunReport::comm`] carries the
+    /// [`crate::coordinator::net::CommStats`] telemetry.
+    pub fn distributed_run(&self, rounds: usize) -> Result<DistributedRun<'_>, SessionError> {
+        self.routing_run("distributed-omd", rounds)
     }
 
     /// A streaming allocation run of `algo` with its matching oracle, from

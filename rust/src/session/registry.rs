@@ -12,6 +12,7 @@
 use super::error::SessionError;
 use crate::allocation::{gsoma::GsOma, omad::Omad, Allocator};
 use crate::config::ExperimentConfig;
+use crate::coordinator::leader::DistributedOmd;
 use crate::routing::{gp::GpRouter, omd::OmdRouter, opt::OptRouter, sgp::SgpRouter, Router};
 
 /// Paper Section-IV default hyper-parameters — the single source of truth
@@ -117,6 +118,10 @@ fn make_opt(h: &Hyper) -> Box<dyn Router> {
     Box::new(OptRouter::new().with_workers(h.workers))
 }
 
+fn make_distributed_omd(h: &Hyper) -> Box<dyn Router> {
+    Box::new(DistributedOmd::new(h.eta_routing).with_workers(h.workers))
+}
+
 fn make_gsoma(h: &Hyper) -> Box<dyn Allocator> {
     Box::new(GsOma::new(h.delta, h.eta_alloc))
 }
@@ -126,7 +131,7 @@ fn make_omad(h: &Hyper) -> Box<dyn Allocator> {
 }
 
 /// Every registered router, in presentation order.
-pub static ROUTERS: [RouterEntry; 5] = [
+pub static ROUTERS: [RouterEntry; 6] = [
     RouterEntry {
         name: "omd",
         description: "OMD-RT (Algorithm 2): entropic mirror descent with backtracking step size",
@@ -156,6 +161,13 @@ pub static ROUTERS: [RouterEntry; 5] = [
         description: "Centralized path-flow solve (the OPT reference line)",
         defaults: &[],
         make: make_opt,
+    },
+    RouterEntry {
+        name: "distributed-omd",
+        description: "OMD-RT over message-passing node actors (paper Sec. V; \
+                      one step = one barriered round, CommStats on the report)",
+        defaults: &[("eta_routing", DEFAULT_ETA_ROUTING)],
+        make: make_distributed_omd,
     },
 ];
 

@@ -10,12 +10,17 @@
 //! being baked into each algorithm, so telemetry composes without touching
 //! solver code.
 //!
-//! Both run kinds share one [`RunCore`]: the run-loop *protocol* — stop
+//! All run kinds share one [`RunCore`]: the run-loop *protocol* — stop
 //! rules, observer fan-out, report caching, the zero-budget edge case —
 //! lives in exactly one place, parameterized over the per-iteration
-//! advance (a routing step vs. an allocation outer step). Final-report
-//! objectives are evaluated by the fused [`crate::engine::FlowEngine`]
-//! sweep, the same code path the legacy `Router::solve` epilogue uses.
+//! advance (a routing step vs. an allocation outer step). The distributed
+//! coordinator streams through the same core: a [`DistributedRun`] is a
+//! routing run whose router performs one barriered message-passing round
+//! per step, with its [`crate::coordinator::net::CommStats`] surfaced on
+//! [`RunReport::comm`]. Final-report objectives are evaluated by the fused
+//! [`crate::engine::FlowEngine`] sweep — worker count threaded from
+//! `Scenario::workers` via [`RoutingRun::engine_workers`] — the same code
+//! path the legacy `Router::solve` epilogue uses.
 //!
 //! Driven to completion with the default rules, a run reproduces the legacy
 //! `Router::solve` / `Allocator::run` loops *bit for bit* (same oracle call
@@ -26,6 +31,7 @@ use std::ops::ControlFlow;
 use std::time::Instant;
 
 use crate::allocation::{Allocator, UtilityOracle};
+use crate::coordinator::net::CommStats;
 use crate::engine::FlowEngine;
 use crate::model::flow::Phi;
 use crate::model::Problem;
@@ -61,8 +67,19 @@ pub struct RunReport {
     /// Total routing iterations consumed (equals `iterations` for routing
     /// runs; counts oracle-internal routing work for allocation runs).
     pub routing_iterations: usize,
+    /// Communication accounting, when the solver ran over a message fabric
+    /// (the distributed coordinator); `None` for in-process solvers.
+    pub comm: Option<CommStats>,
     pub stop: StopReason,
     pub elapsed_s: f64,
+}
+
+impl RunReport {
+    /// The final routing state, for hand-off into a warm-started follow-up
+    /// run (the successor of the legacy `RoutingState.phi` interop).
+    pub fn final_phi(&self) -> Option<&Phi> {
+        self.phi.as_ref()
+    }
 }
 
 /// Per-iteration snapshot handed to stop rules and observers.
@@ -232,6 +249,7 @@ impl<'a> RunCore<'a> {
 
     /// Assemble, cache, and broadcast the final report. `routing_iters`
     /// defaults to the iteration count (routing runs).
+    #[allow(clippy::too_many_arguments)]
     fn finish(
         &mut self,
         algo: &str,
@@ -239,6 +257,7 @@ impl<'a> RunCore<'a> {
         lam: Vec<f64>,
         phi: Option<Phi>,
         routing_iters: Option<usize>,
+        comm: Option<CommStats>,
         stop: StopReason,
     ) -> RunReport {
         let report = RunReport {
@@ -248,6 +267,7 @@ impl<'a> RunCore<'a> {
             phi,
             iterations: self.iter,
             routing_iterations: routing_iters.unwrap_or(self.iter),
+            comm,
             stop,
             elapsed_s: self.elapsed_s(),
         };
@@ -258,6 +278,15 @@ impl<'a> RunCore<'a> {
         report
     }
 }
+
+/// A streaming distributed routing run: a [`RoutingRun`] whose router is
+/// the message-passing [`crate::coordinator::leader::DistributedOmd`]
+/// (one step = one barriered round over live node actors). It reuses
+/// `RunCore` — stop rules, observers, report caching — verbatim; the
+/// distributed-specific telemetry arrives through
+/// [`RunReport::comm`]. Construct via
+/// [`crate::session::Session::distributed_run`].
+pub type DistributedRun<'a> = RoutingRun<'a>;
 
 /// A resumable routing run: minimizes `D(Λ, φ)` one iteration per
 /// [`step`](RoutingRun::step) for a fixed allocation Λ.
@@ -300,6 +329,26 @@ impl<'a> RoutingRun<'a> {
     /// of the uniform initializer.
     pub fn warm_start(mut self, phi: Phi) -> Self {
         self.phi = phi;
+        self
+    }
+
+    /// Warm-start from a previous run's final state (the `RunReport`-based
+    /// hand-off that replaces the legacy `RoutingState` interop). No-op if
+    /// the report carries no routing state.
+    pub fn warm_start_from(self, report: &RunReport) -> Self {
+        match report.final_phi() {
+            Some(phi) => self.warm_start(phi.clone()),
+            None => self,
+        }
+    }
+
+    /// Worker threads for this run's final-report [`FlowEngine`]
+    /// evaluation *and* the router's per-iteration sweeps (`0` = auto).
+    /// Threaded automatically from `Scenario::workers` by
+    /// [`crate::session::Session::routing_run`].
+    pub fn engine_workers(mut self, workers: usize) -> Self {
+        self.engine.set_workers(workers);
+        self.router.set_workers(workers);
         self
     }
 
@@ -354,6 +403,7 @@ impl<'a> RoutingRun<'a> {
             self.lam.clone(),
             Some(self.phi.clone()),
             None,
+            self.router.comm_stats(),
             stop,
         )
     }
@@ -469,6 +519,7 @@ impl<'a> AllocationRun<'a> {
             self.lam.clone(),
             self.oracle.current_phi().cloned(),
             Some(self.oracle.routing_iterations()),
+            None,
             stop,
         )
     }
@@ -480,5 +531,13 @@ impl<'a> AllocationRun<'a> {
                 return report;
             }
         }
+    }
+
+    /// Tear the run down and recover its oracle, e.g. to read
+    /// oracle-specific telemetry (the serving oracle's last
+    /// [`crate::coordinator::serving::ServeReport`]) after the final
+    /// report.
+    pub fn into_oracle(self) -> Box<dyn UtilityOracle> {
+        self.oracle
     }
 }

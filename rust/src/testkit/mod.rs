@@ -9,6 +9,19 @@
 
 use crate::util::rng::Rng;
 
+/// Engine worker count under test: the `JOWR_TEST_WORKERS` environment
+/// variable, defaulting to 1. CI runs the whole suite in a matrix over
+/// `{1, 4}` so the engine's bit-identity guarantee is exercised on
+/// multi-core runners; tests that construct a
+/// [`crate::engine::FlowEngine`] (directly or through
+/// `Scenario::workers`) should include this value in their sweep.
+pub fn test_workers() -> usize {
+    std::env::var("JOWR_TEST_WORKERS")
+        .ok()
+        .and_then(|s| s.trim().parse().ok())
+        .unwrap_or(1)
+}
+
 /// Size-aware generator context.
 pub struct Gen<'a> {
     pub rng: &'a mut Rng,

@@ -1,12 +1,12 @@
 //! Integration: the distributed actor implementation is *exactly* the
 //! centralized algorithm (message passing changes the plumbing, not the
-//! math), and the serving pipeline composes with the optimizer.
+//! math), and the serving pipeline composes with the optimizer — both now
+//! streaming through the session stack (`RoutingRun`/`AllocationRun` over
+//! `RunCore`), never the legacy state structs.
 
 use jowr::allocation::{omad::Omad, UtilityOracle};
-use jowr::coordinator::leader::DistributedOmd;
 use jowr::coordinator::serving::{AnalyticEngine, MeasuredOracle, ServeParams};
 use jowr::prelude::*;
-use jowr::routing::Router;
 use jowr::util::rng::Rng;
 
 fn mk_problem(seed: u64, n: usize) -> Problem {
@@ -15,29 +15,42 @@ fn mk_problem(seed: u64, n: usize) -> Problem {
     Problem::new(net, 60.0, CostKind::Exp)
 }
 
+/// Drive a router through the streaming run protocol, recording the
+/// trajectory.
+fn run(p: &Problem, router: Box<dyn Router>, iters: usize) -> (Vec<f64>, RunReport) {
+    let mut traj = Trajectory::default();
+    let report = RoutingRun::new(p, router, p.uniform_allocation(), iters)
+        .observe(&mut traj)
+        .finish();
+    (traj.values, report)
+}
+
 #[test]
 fn distributed_equals_centralized_across_instances() {
+    let workers = jowr::testkit::test_workers();
     for seed in [1u64, 9, 23] {
         let p = mk_problem(seed, 9);
-        let lam = p.uniform_allocation();
-        let (d, comm) = DistributedOmd::new(0.3).solve(&p, &lam, 15);
-        let c = OmdRouter::new(0.3).solve(&p, &lam, 15);
-        for (i, (a, b)) in d.trajectory.iter().zip(&c.trajectory).enumerate() {
+        let (dtraj, dreport) =
+            run(&p, Box::new(DistributedOmd::new(0.3).with_workers(workers)), 15);
+        let (ctraj, _) = run(&p, Box::new(OmdRouter::new(0.3).with_workers(workers)), 15);
+        for (i, (a, b)) in dtraj.iter().zip(&ctraj).enumerate() {
             assert!(
-                (a - b).abs() < 1e-6 * b.abs().max(1.0),
+                (a - b).abs() <= 1e-9 * b.abs().max(1.0),
                 "seed {seed} iter {i}: {a} vs {b}"
             );
         }
+        let comm = dreport.comm.expect("distributed run reports comm stats");
         assert!(comm.messages > 0 && comm.bytes > 0);
+        assert_eq!(comm.rounds, dreport.iterations);
     }
 }
 
 #[test]
 fn communication_overhead_is_linear_in_rounds_and_edges() {
     let p = mk_problem(3, 8);
-    let lam = p.uniform_allocation();
-    let (_s, c5) = DistributedOmd::new(0.2).solve(&p, &lam, 5);
-    let (_s, c10) = DistributedOmd::new(0.2).solve(&p, &lam, 10);
+    let (_t, r5) = run(&p, Box::new(DistributedOmd::new(0.2)), 5);
+    let (_t, r10) = run(&p, Box::new(DistributedOmd::new(0.2)), 10);
+    let (c5, c10) = (r5.comm.unwrap(), r10.comm.unwrap());
     let per_round5 = c5.messages as f64 / 5.0;
     let per_round10 = c10.messages as f64 / 10.0;
     let rel = (per_round5 - per_round10).abs() / per_round10;
@@ -49,7 +62,8 @@ fn serving_oracle_drives_allocation_learning() {
     // end-to-end: measured utilities only, no analytic functions anywhere
     let p = mk_problem(5, 10);
     let params = ServeParams { sim_time: 8.0, ..ServeParams::default_for(3) };
-    let mut oracle = MeasuredOracle::new(p, params, AnalyticEngine::new(3, 3), 0.3, 17);
+    let mut oracle = MeasuredOracle::new(p, params, AnalyticEngine::new(3, 3), 0.3, 17)
+        .with_workers(jowr::testkit::test_workers());
     let mut alg = Omad::new(1.5, 0.02);
     let mut lam = vec![20.0, 20.0, 20.0];
     let mut first = None;
@@ -69,6 +83,8 @@ fn serving_oracle_drives_allocation_learning() {
     assert!((lam.iter().sum::<f64>() - 60.0).abs() < 1e-6);
     let rep = oracle.last_report.as_ref().unwrap();
     assert!(rep.throughput_fps > 0.0);
+    // the shared-engine telemetry rides along with every observation
+    assert!(oracle.last_cost.unwrap() > 0.0);
 }
 
 #[test]
@@ -90,4 +106,30 @@ fn serving_respects_allocation_mass() {
         "version-0 share {share0} should be ~2/3 ({:?})",
         rep.completed
     );
+}
+
+#[test]
+fn measured_serving_streams_through_the_allocation_run() {
+    // the CLI `serve` path: MeasuredOracle boxed into a streaming
+    // AllocationRun, serving telemetry recovered through the trait
+    let p = mk_problem(11, 10);
+    let params = ServeParams { sim_time: 4.0, ..ServeParams::default_for(3) };
+    let oracle: Box<dyn UtilityOracle> =
+        Box::new(MeasuredOracle::new(p, params, AnalyticEngine::new(3, 7), 0.3, 29));
+    let mut traj = Trajectory::default();
+    let mut run = AllocationRun::new(Box::new(Omad::new(1.5, 0.02)), oracle, 6)
+        .observe(&mut traj);
+    let report = loop {
+        if let std::ops::ControlFlow::Break(r) = run.step() {
+            break r;
+        }
+    };
+    assert_eq!(report.iterations, 6);
+    let oracle = run.into_oracle();
+    // the observer borrow ends with the run; the trajectory has one point
+    // per outer iteration plus the final observation
+    assert_eq!(traj.values.len(), 7);
+    let rep = oracle.last_serve_report().expect("measured oracle exposes serving telemetry");
+    assert!(rep.throughput_fps > 0.0);
+    assert!(oracle.observations() >= 7);
 }

@@ -1,0 +1,177 @@
+//! End-to-end loopback test of the distributed coordinator: a
+//! [`DistributedRun`] driven over `coordinator::net`'s in-process
+//! transport must (a) match the centralized `omd` router on the same
+//! scenario to 1e-9, (b) account for every fabric message *exactly*, and
+//! (c) be bit-identical at any engine worker count.
+
+use std::ops::ControlFlow;
+
+use jowr::graph::augmented::AugmentedNet;
+use jowr::prelude::*;
+use jowr::testkit::test_workers;
+
+/// Exact per-round fabric message count, derived from the topology:
+///
+/// * `BeginRound` — one broadcast message per real node,
+/// * `Ingress` — one per (session, DAG edge into a real node): S admits λ
+///   over its lanes, every real node forwards over its real-dst lanes,
+/// * `Marginal` — one per (session, DAG edge into a real node): every
+///   real node announces its marginal to each upstream (actor or leader),
+/// * `RowsReport` — one per real node.
+///
+/// Destination lanes (the virtual computation links) carry no messages —
+/// `∂D/∂r_{D_w} = 0` is known statically (paper eq. 20).
+fn per_round_messages(net: &AugmentedNet) -> u64 {
+    let mut m = 2 * net.n_real as u64; // BeginRound + RowsReport
+    for w in 0..net.n_versions() {
+        for (e, used) in net.session_edges[w].iter().enumerate() {
+            let dst = net.graph.edge(e).dst;
+            if *used && dst >= 1 && dst <= net.n_real {
+                m += 2; // one Ingress + one Marginal over this in-edge
+            }
+        }
+    }
+    m
+}
+
+fn session_for(workers: usize) -> Session {
+    Scenario::paper_default()
+        .nodes(10)
+        .link_probability(0.3)
+        .seed(11)
+        .workers(workers)
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn loopback_distributed_run_matches_centralized_omd_to_1e9() {
+    let session = session_for(test_workers());
+    let rounds = 15;
+    let mut dtraj = Trajectory::default();
+    let dist = session.distributed_run(rounds).unwrap().observe(&mut dtraj).finish();
+    let mut ctraj = Trajectory::default();
+    let central = session.routing_run("omd", rounds).unwrap().observe(&mut ctraj).finish();
+
+    // the whole trajectory — not just the endpoint — matches the
+    // centralized solver (same math over the message fabric)
+    assert_eq!(dtraj.values.len(), ctraj.values.len());
+    for (i, (a, b)) in dtraj.values.iter().zip(&ctraj.values).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-9 * b.abs().max(1.0),
+            "iter {i}: distributed {a} vs centralized {b}"
+        );
+    }
+    assert!(
+        (dist.objective - central.objective).abs()
+            <= 1e-9 * central.objective.abs().max(1.0),
+        "final cost: distributed {} vs centralized {}",
+        dist.objective,
+        central.objective
+    );
+    // and the final states agree lane by lane
+    let (dphi, cphi) = (dist.phi.as_ref().unwrap(), central.phi.as_ref().unwrap());
+    for (ra, rb) in dphi.frac.iter().zip(&cphi.frac) {
+        for (a, b) in ra.iter().zip(rb) {
+            assert!((a - b).abs() <= 1e-9, "phi: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn loopback_comm_stats_message_counts_are_exact() {
+    let session = session_for(1);
+    let rounds = 7;
+    let report = session.distributed_run(rounds).unwrap().finish();
+    let comm = report.comm.expect("distributed runs report CommStats");
+    assert_eq!(comm.rounds, report.iterations);
+    let expected = report.iterations as u64 * per_round_messages(&session.problem.net);
+    assert_eq!(
+        comm.messages, expected,
+        "fabric delivered {} messages, topology predicts {} ({} rounds)",
+        comm.messages, expected, report.iterations
+    );
+    assert!(comm.bytes > comm.messages, "every message has a nonzero wire size");
+}
+
+#[test]
+fn distributed_run_is_bit_identical_across_worker_counts() {
+    // the engine worker knob (leader-side cost telemetry feeding the
+    // adaptive step size) must not perturb a single bit of the run
+    let run_with = |workers: usize| {
+        let session = session_for(workers);
+        let mut traj = Trajectory::default();
+        let report = session.distributed_run(10).unwrap().observe(&mut traj).finish();
+        (traj.values, report)
+    };
+    let (traj1, report1) = run_with(1);
+    for workers in [2usize, 4, test_workers()] {
+        let (traj, report) = run_with(workers);
+        assert_eq!(traj.len(), traj1.len());
+        for (i, (a, b)) in traj.iter().zip(&traj1).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "iter {i} at {workers} workers");
+        }
+        assert_eq!(report.objective.to_bits(), report1.objective.to_bits());
+        let (pa, pb) = (report.phi.as_ref().unwrap(), report1.phi.as_ref().unwrap());
+        for (ra, rb) in pa.frac.iter().zip(&pb.frac) {
+            for (a, b) in ra.iter().zip(rb) {
+                assert_eq!(a.to_bits(), b.to_bits(), "phi at {workers} workers");
+            }
+        }
+    }
+}
+
+#[test]
+fn distributed_run_streams_and_resumes_like_any_run() {
+    // step-driven execution with a mid-run pause: the actors stay
+    // deployed between steps, and a finished run replays its report
+    let session = session_for(1);
+    let mut run = session.distributed_run(6).unwrap();
+    let mut steps = 0;
+    let report = loop {
+        match run.step() {
+            ControlFlow::Continue(()) => steps += 1,
+            ControlFlow::Break(r) => break r,
+        }
+    };
+    assert_eq!(report.iterations, 6);
+    assert_eq!(steps, 5); // the 6th step breaks with the report
+    // replay without advancing
+    if let ControlFlow::Break(again) = run.step() {
+        assert_eq!(again.iterations, report.iterations);
+        assert_eq!(again.comm.unwrap().messages, report.comm.unwrap().messages);
+    } else {
+        panic!("finished run must replay its report");
+    }
+}
+
+#[test]
+fn warm_started_distributed_run_continues_descent() {
+    // RunReport-based hand-off (the legacy RoutingState interop is gone):
+    // a second run warm-started from the first run's report keeps the
+    // cost non-increasing in the small-step regime
+    let session = session_for(1);
+    let problem = &session.problem;
+    let lam = session.uniform_allocation();
+    let first = RoutingRun::new(
+        problem,
+        Box::new(DistributedOmd::fixed(0.05)),
+        lam.clone(),
+        8,
+    )
+    .finish();
+    let second = RoutingRun::new(
+        problem,
+        Box::new(DistributedOmd::fixed(0.05)),
+        lam,
+        8,
+    )
+    .warm_start_from(&first)
+    .finish();
+    assert!(
+        second.objective <= first.objective + 1e-9,
+        "warm start regressed: {} -> {}",
+        first.objective,
+        second.objective
+    );
+}

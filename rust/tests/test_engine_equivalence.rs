@@ -8,7 +8,9 @@
 //!
 //! * rates `t`, flows `F`, cost, link marginals `D'`, and node marginals
 //!   `r` match the reference to 1e-12 (relative), and
-//! * engine results are **bit-identical** at 1, 2, and 4 worker threads.
+//! * engine results are **bit-identical** at 1, 2, and 4 worker threads
+//!   (plus the CI matrix's `JOWR_TEST_WORKERS` count) — for the
+//!   centralized solvers *and* the distributed message-passing path.
 
 use jowr::engine::FlowEngine;
 use jowr::graph::augmented::{AugmentedNet, Placement};
@@ -79,8 +81,9 @@ fn check_point(tag: &str, problem: &Problem, phi: &Phi, lam: &[f64]) {
         );
     }
 
-    // bit-identical at 1, 2, and 4 worker threads
-    for workers in [2usize, 4] {
+    // bit-identical at 1, 2, and 4 worker threads (and the CI matrix's
+    // JOWR_TEST_WORKERS value)
+    for workers in [2usize, 4, jowr::testkit::test_workers()] {
         let mut par = FlowEngine::new().with_workers(workers);
         let c = par.prepare(problem, phi, lam);
         assert_eq!(c.to_bits(), cost.to_bits(), "{tag}: cost at {workers} workers");
@@ -190,6 +193,46 @@ fn legacy_omd_step(problem: &Problem, lam: &[f64], phi: &mut Phi, eta: f64) -> f
         }
     }
     cost_before
+}
+
+#[test]
+fn distributed_path_is_bit_identical_across_worker_counts() {
+    // the distributed coordinator rides the same engine (leader-side cost
+    // telemetry drives the adaptive step size), so its iterates must also
+    // be bit-identical at any worker count — per-slot ingress summation
+    // makes the message-passing path deterministic
+    use jowr::coordinator::leader::DistributedOmd;
+    use jowr::session::{RoutingRun, Trajectory};
+
+    let mut rng = Rng::seed_from(6);
+    let net = topologies::connected_er(10, 0.3, 3, &mut rng);
+    let problem = Problem::new(net, 60.0, CostKind::Exp);
+    let lam = problem.uniform_allocation();
+    let run_with = |workers: usize| {
+        let mut traj = Trajectory::default();
+        let report = RoutingRun::new(
+            &problem,
+            Box::new(DistributedOmd::new(0.5).with_workers(workers)),
+            lam.clone(),
+            8,
+        )
+        .observe(&mut traj)
+        .finish();
+        (traj.values, report.phi.unwrap(), report.objective)
+    };
+    let (traj1, phi1, cost1) = run_with(1);
+    for workers in [2usize, 4, jowr::testkit::test_workers()] {
+        let (traj, phi, cost) = run_with(workers);
+        assert_eq!(cost.to_bits(), cost1.to_bits(), "final cost at {workers} workers");
+        for (i, (a, b)) in traj.iter().zip(&traj1).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "trajectory[{i}] at {workers} workers");
+        }
+        for (ra, rb) in phi.frac.iter().zip(&phi1.frac) {
+            for (a, b) in ra.iter().zip(rb) {
+                assert_eq!(a.to_bits(), b.to_bits(), "phi at {workers} workers");
+            }
+        }
+    }
 }
 
 #[test]
