@@ -97,5 +97,39 @@ fn main() -> Result<(), SessionError> {
          ({} messages, {} bytes over the fabric)",
         dist.objective, comm.rounds, comm.messages, comm.bytes
     );
+
+    // 6. scenarios are declarative data, not just builder calls: a
+    //    ScenarioSpec describes heterogeneous multi-class workloads (here
+    //    two task classes with different utility families and their own
+    //    source devices) and round-trips through JSON — the same format
+    //    `--scenario file.json` and examples/scenarios/ use. A Suite
+    //    crosses specs × solvers × seeds in parallel and collects every
+    //    RunReport.
+    let two_class = Scenario::paper_default()
+        .nodes(15)
+        .versions(2)
+        .delta(0.2)
+        .class("video", "log", 40.0, &[0, 1])
+        .class("audio", "sqrt", 20.0, &[])
+        .seed(7)
+        .into_spec()?;
+    println!("\nspec as JSON:\n{}", two_class.to_json());
+    let results = Suite::new()
+        .spec("two-class", two_class)
+        .router("omd")
+        .router("sgp")
+        .allocator("omad")
+        .iters(30)
+        .workers(0) // auto-parallel over cells
+        .run();
+    println!("suite: {} cells ok, {} failed", results.ok_count(), results.err_count());
+    for cell in &results.cells {
+        if let Ok(res) = &cell.outcome {
+            println!(
+                "  {:<12} {:<6} objective {:>10.4} in {} iters",
+                cell.solver, cell.seed, res.report.objective, res.report.iterations
+            );
+        }
+    }
     Ok(())
 }

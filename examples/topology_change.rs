@@ -1,6 +1,7 @@
-//! Dynamic-network scenario: devices churn mid-run and the single-loop
-//! optimizer re-adapts online (the paper's Fig. 11 story as a runnable
-//! program, extended with a capacity shock).
+//! Dynamic-network scenario: the admitted rate follows a declarative
+//! trace, devices churn mid-run, and the single-loop optimizer re-adapts
+//! online (the paper's Fig. 11 story as a runnable program, extended with
+//! a capacity shock and a workload surge).
 //!
 //! ```bash
 //! cargo run --release --example topology_change
@@ -10,26 +11,39 @@ use jowr::coordinator::events::{EventSchedule, NetworkEvent};
 use jowr::prelude::*;
 
 fn main() -> Result<(), SessionError> {
-    let session = Scenario::paper_default().nodes(20).build()?;
+    // the scenario is declarative: a rate trace (60 fps dropping to 40 at
+    // t=90) lives in the spec itself and compiles to scheduled events
+    let session = Scenario::paper_default()
+        .nodes(20)
+        .class_trace("video", "log", &[(0, 60.0), (90, 40.0)], &[])
+        .horizon(180)
+        .build()?;
     let cfg = session.cfg.clone();
     let mut problem = session.problem.clone();
 
-    // two disruptions: a full rewire at t=60, a capacity crunch at t=120
-    let schedule = EventSchedule::new()
+    // merge the spec's rate-trace events with two explicit disruptions:
+    // a full rewire at t=60, a capacity crunch at t=120
+    let schedule: EventSchedule = session
+        .events()
         .at(60, NetworkEvent::Rewire { seed: 4242 })
         .at(120, NetworkEvent::CapacityScale { factor: 0.6 });
 
     // single-loop allocator + its persistent-routing oracle, by name
     let alg = session.allocator("omad")?;
     let mut oracle = session.oracle_for("omad")?;
-    let mut lam = vec![cfg.total_rate / 3.0; 3];
+    let mut lam = session.uniform_allocation();
 
     println!("t      U(Λ,φ)     Λ                               event");
     for t in 0..180usize {
         let mut fired = String::new();
         for ev in schedule.fire(t) {
             problem = EventSchedule::apply(&cfg, &problem, ev)?;
-            oracle.on_topology_change(&problem);
+            // rate breakpoints keep the persistent routing state warm;
+            // real topology changes reset it
+            match ev {
+                NetworkEvent::ClassRate { .. } => oracle.on_workload_change(&problem),
+                _ => oracle.on_topology_change(&problem),
+            }
             fired = format!("{ev:?}");
         }
         let u = oracle.observe(&lam);
@@ -48,5 +62,9 @@ fn main() -> Result<(), SessionError> {
         oracle.observations()
     );
     println!("final Λ = [{:.2}, {:.2}, {:.2}]", lam[0], lam[1], lam[2]);
+    println!("final Σλ = {:.2} (the t=90 trace point lowered the admitted rate)", {
+        let s: f64 = lam.iter().sum();
+        s
+    });
     Ok(())
 }

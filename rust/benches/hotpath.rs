@@ -11,8 +11,10 @@
 //!   at 1, 2, and 4 workers (thread-scaling rows) on the persistent
 //!   worker pool, plus the legacy per-sweep `thread::scope` spawn at 4
 //!   workers (`engine_fused_prepare_scope_w4`) as the pool's baseline, and
-//! * full `omd_full_iteration` / `sgp_full_iteration` solver steps, with a
-//!   faithfully reconstructed legacy OMD iteration as the baseline.
+//! * full `omd_full_iteration` / `sgp_engine_iteration` solver steps, with
+//!   a faithfully reconstructed legacy OMD iteration as the baseline (the
+//!   SGP row's "engine" name puts it under the CI bench-regression gate,
+//!   pinning the workspace-backed Hessian-bound DPs).
 //!
 //! Emits every measurement plus the engine-vs-legacy speedups as JSON to
 //! `BENCH_hotpath.json` (written to the current directory) and asserts the
@@ -49,13 +51,13 @@ fn main() {
             flow::edge_flows(&problem.net, &phi, &t)
         });
         b.bench(&format!("n{n}/ref_marginal_broadcast"), || {
-            marginal::compute(&problem.net, problem.cost, &phi, &flows)
+            marginal::compute(problem, &phi, &flows)
         });
         b.bench(&format!("n{n}/ref_four_sweep"), || {
             let t = flow::node_rates(&problem.net, &phi, &lam);
             let flows = flow::edge_flows(&problem.net, &phi, &t);
-            let cost = flow::total_cost(&problem.net, problem.cost, &flows);
-            let m = marginal::compute(&problem.net, problem.cost, &phi, &flows);
+            let cost = flow::total_cost(problem, &flows);
+            let m = marginal::compute(problem, &phi, &flows);
             (cost, m.dprime.len())
         });
 
@@ -103,8 +105,11 @@ fn main() {
             p_buf.clone_from(&phi);
             legacy_omd_iteration(problem, &lam, &mut p_buf, session.cfg.eta_routing)
         });
+        // SGP's full iteration (QP rows + the Hessian-bound DPs, now in
+        // router-owned workspaces). The row name carries "engine" so the
+        // CI bench-regression gate pins the workspace optimization.
         let mut sgp = session.router("sgp").expect("registry sgp");
-        b.bench(&format!("n{n}/sgp_full_iteration"), || {
+        b.bench(&format!("n{n}/sgp_engine_iteration"), || {
             p_buf.clone_from(&phi);
             sgp.step(problem, &lam, &mut p_buf)
         });
@@ -234,7 +239,7 @@ fn main() {
     // one OMD iteration must stay far cheaper than one SGP iteration
     // (the Fig. 9 effect at micro scale)
     let omd = median(&b, "n40/omd_full_iteration");
-    let sgp = median(&b, "n40/sgp_full_iteration");
+    let sgp = median(&b, "n40/sgp_engine_iteration");
     if let (Some(o), Some(s)) = (omd, sgp) {
         println!("n40 per-iteration speedup OMD vs SGP: {:.1}x", s / o);
         assert!(s / o > 3.0, "OMD iteration should be much cheaper than SGP");
@@ -253,8 +258,8 @@ fn legacy_omd_iteration(problem: &Problem, lam: &[f64], phi: &mut Phi, eta: f64)
     let net = &problem.net;
     let t = flow::node_rates(net, phi, lam);
     let flows = flow::edge_flows(net, phi, &t);
-    let cost_before = flow::total_cost(net, problem.cost, &flows);
-    let m = marginal::compute(net, problem.cost, phi, &flows);
+    let cost_before = flow::total_cost(problem, &flows);
+    let m = marginal::compute(problem, phi, &flows);
     let mut row = Vec::new();
     let mut delta = Vec::new();
     for w in 0..net.n_versions() {

@@ -15,21 +15,7 @@ pub mod project;
 
 pub use oracle::{AnalyticOracle, SingleStepOracle, UtilityOracle};
 
-/// Trajectory of an allocation run.
-#[derive(Clone, Debug)]
-pub struct AllocationState {
-    /// Final allocation Λ.
-    pub lam: Vec<f64>,
-    /// Observed total network utility per outer iteration (the Fig. 10/11
-    /// trajectory: `U(Λ^t, φ(Λ^t))` evaluated at the iterate itself).
-    pub trajectory: Vec<f64>,
-    /// Outer iterations performed.
-    pub iterations: usize,
-    /// Total routing iterations consumed across all oracle calls (the
-    /// nested- vs single-loop comparison metric).
-    pub routing_iterations: usize,
-    pub elapsed_s: f64,
-}
+use crate::session::run::{RunReport, StopReason};
 
 /// A workload allocation algorithm operating against an opaque utility
 /// oracle (the only window onto the unknown utility functions).
@@ -41,7 +27,9 @@ pub trait Allocator {
     fn name(&self) -> &'static str;
 
     /// One outer iteration: estimate the utility gradient by sampling the
-    /// oracle, update + project Λ. Returns `(next Λ, gradient estimate)`.
+    /// oracle, update + project Λ — per task class, on each class's own
+    /// scaled simplex (single-class problems have exactly one block, the
+    /// paper's setting). Returns `(next Λ, gradient estimate)`.
     fn outer_step(&self, oracle: &mut dyn UtilityOracle, lam: &[f64]) -> (Vec<f64>, Vec<f64>);
 
     /// Stop when `‖Λ^{t+1} − Λ^t‖_∞` falls below this (the paper's
@@ -49,18 +37,24 @@ pub trait Allocator {
     fn stop_tol(&self) -> f64;
 
     /// Run up to `max_outer` outer iterations from the paper's uniform
-    /// initializer `Λ¹ = (λ/W)·1`.
-    fn run(&mut self, oracle: &mut dyn UtilityOracle, max_outer: usize) -> AllocationState {
+    /// initializer (per class, `Λ¹ = (λ_c/W_c)·1`). Returns the unified
+    /// [`RunReport`] (the legacy `AllocationState` is gone): `objective`
+    /// is the utility observed at the final iterate, `phi` is the oracle's
+    /// persistent routing state when it keeps one. The observation
+    /// sequence is identical to a streaming
+    /// [`crate::session::AllocationRun`] driven to completion — attach a
+    /// [`crate::session::Trajectory`] there when you need the
+    /// per-iteration series.
+    fn run(&mut self, oracle: &mut dyn UtilityOracle, max_outer: usize) -> RunReport {
         let t0 = std::time::Instant::now();
-        let w_cnt = oracle.n_versions();
-        let total = oracle.total_rate();
-        let mut lam = vec![total / w_cnt as f64; w_cnt];
-        let mut trajectory = Vec::with_capacity(max_outer);
+        let mut lam = oracle.uniform_allocation();
         let mut iterations = 0;
+        let mut stop = StopReason::MaxIters;
         for _ in 0..max_outer {
             iterations += 1;
-            // trajectory point: utility observed at the iterate itself
-            trajectory.push(oracle.observe(&lam));
+            // utility observed at the iterate itself (the Fig. 10/11
+            // trajectory point; stateful oracles advance here)
+            let _u = oracle.observe(&lam);
             let (next, _grad) = self.outer_step(&mut *oracle, &lam);
             let moved = next
                 .iter()
@@ -69,15 +63,20 @@ pub trait Allocator {
                 .fold(0.0f64, f64::max);
             lam = next;
             if moved < self.stop_tol() {
+                stop = StopReason::Converged;
                 break;
             }
         }
-        trajectory.push(oracle.observe(&lam));
-        AllocationState {
+        let final_u = oracle.observe(&lam);
+        RunReport {
+            algo: self.name().to_string(),
+            objective: final_u,
+            phi: oracle.current_phi().cloned(),
             lam,
-            trajectory,
             iterations,
             routing_iterations: oracle.routing_iterations(),
+            comm: None,
+            stop,
             elapsed_s: t0.elapsed().as_secs_f64(),
         }
     }

@@ -7,7 +7,7 @@
 //! total routing iterations, and with fast re-adaptation when the topology
 //! changes (Fig. 11).
 
-use super::gsoma::perturb;
+use super::gsoma::perturb_block;
 use super::project::project_capped_simplex;
 use super::{mirror_ascent_update, Allocator, UtilityOracle};
 
@@ -32,23 +32,29 @@ impl Allocator for Omad {
         "OMAD"
     }
 
-    /// One single-loop iteration against the (stateful) oracle.
+    /// One single-loop iteration against the (stateful) oracle, per task
+    /// class on its own scaled simplex.
     fn outer_step(&self, oracle: &mut dyn UtilityOracle, lam: &[f64]) -> (Vec<f64>, Vec<f64>) {
-        let total = oracle.total_rate();
-        let w_cnt = lam.len();
-        let mut grad = vec![0.0; w_cnt];
-        for w in 0..w_cnt {
-            let up = perturb(lam, w, self.delta, total);
-            let dn = perturb(lam, w, -self.delta, total);
-            // each observation advances the shared routing state by one
-            // mirror-descent iteration (K = 1)
-            let u_plus = oracle.observe(&up);
-            let u_minus = oracle.observe(&dn);
-            grad[w] = (u_plus - u_minus) / (2.0 * self.delta);
+        let blocks = oracle.blocks();
+        let mut grad = vec![0.0; lam.len()];
+        for &(s0, s1, rate) in &blocks {
+            for w in s0..s1 {
+                let up = perturb_block(lam, s0, s1, w, self.delta, rate);
+                let dn = perturb_block(lam, s0, s1, w, -self.delta, rate);
+                // each observation advances the shared routing state by one
+                // mirror-descent iteration (K = 1)
+                let u_plus = oracle.observe(&up);
+                let u_minus = oracle.observe(&dn);
+                grad[w] = (u_plus - u_minus) / (2.0 * self.delta);
+            }
         }
         let mut next = lam.to_vec();
-        mirror_ascent_update(&mut next, &grad, self.eta_outer, total);
-        let next = project_capped_simplex(&next, total, self.delta, total - self.delta);
+        for &(s0, s1, rate) in &blocks {
+            mirror_ascent_update(&mut next[s0..s1], &grad[s0..s1], self.eta_outer, rate);
+            let proj =
+                project_capped_simplex(&next[s0..s1], rate, self.delta, rate - self.delta);
+            next[s0..s1].copy_from_slice(&proj);
+        }
         (next, grad)
     }
 
@@ -77,11 +83,17 @@ mod tests {
     #[test]
     fn single_loop_improves_utility() {
         let p = mk_problem(1);
+        // pre-run probe at the uniform initializer (a fresh single-step
+        // oracle's first observation — what trajectory[0] used to record)
+        let mut probe =
+            SingleStepOracle::new(p.clone(), family("log", 3, 60.0).unwrap(), 0.5);
+        let lam0 = probe.uniform_allocation();
+        let first = probe.observe(&lam0);
+
         let mut o = SingleStepOracle::new(p, family("log", 3, 60.0).unwrap(), 0.5);
         let mut alg = Omad::new(0.5, 0.05);
         let st = alg.run(&mut o, 120);
-        let first = st.trajectory[0];
-        let last = *st.trajectory.last().unwrap();
+        let last = st.objective;
         assert!(last > first, "{first} -> {last}");
         assert!((st.lam.iter().sum::<f64>() - 60.0).abs() < 1e-6);
     }
@@ -100,8 +112,8 @@ mod tests {
         let mut single = Omad::new(0.3, 0.06);
         let st_single = single.run(&mut o_single, 300);
 
-        let u_nested = *st_nested.trajectory.last().unwrap();
-        let u_single = *st_single.trajectory.last().unwrap();
+        let u_nested = st_nested.objective;
+        let u_single = st_single.objective;
         let rel = (u_nested - u_single).abs() / u_nested.abs().max(1.0);
         assert!(rel < 0.02, "nested {u_nested} vs single {u_single}");
     }

@@ -26,8 +26,24 @@ pub trait UtilityOracle {
     /// Total admissible rate λ.
     fn total_rate(&self) -> f64;
 
-    /// Number of versions W.
+    /// Number of allocation coordinates — one per routed session (equals
+    /// the version count W for single-class problems, `classes × W` for
+    /// heterogeneous multi-class workloads).
     fn n_versions(&self) -> usize;
+
+    /// Per-task-class blocks `(start, end, rate)` of the allocation
+    /// vector: allocators perturb, mirror-update, and project each block
+    /// on its own scaled simplex. Default: one block covering every
+    /// coordinate at the total rate (the paper's single-class setting).
+    fn blocks(&self) -> Vec<(usize, usize, f64)> {
+        vec![(0, self.n_versions(), self.total_rate())]
+    }
+
+    /// The paper's uniform initializer — per class, `Λ¹ = (λ_c/W_c)·1`.
+    fn uniform_allocation(&self) -> Vec<f64> {
+        let w = self.n_versions();
+        vec![self.total_rate() / w as f64; w]
+    }
 
     /// Cumulative routing iterations consumed (the convergence-cost metric
     /// of Fig. 11's nested vs single loop comparison).
@@ -39,6 +55,17 @@ pub trait UtilityOracle {
     /// Notify the oracle that the network topology changed (Fig. 11's
     /// perturbation at outer iteration 50). Default: no-op.
     fn on_topology_change(&mut self, _problem: &Problem) {}
+
+    /// Notify the oracle that only the admitted *workload* changed (a
+    /// [`crate::coordinator::events::NetworkEvent::ClassRate`] trace
+    /// breakpoint): same topology and session structure, new rates.
+    /// Stateful oracles override this to keep their persistent routing
+    /// state — re-initializing φ for a pure rate change would throw away
+    /// converged routing for no reason. Default: treat it like a topology
+    /// change.
+    fn on_workload_change(&mut self, problem: &Problem) {
+        self.on_topology_change(problem);
+    }
 
     /// The oracle's persistent routing state, when it keeps one (single-step
     /// and measured oracles do; the run-to-convergence oracle does not).
@@ -72,7 +99,7 @@ pub struct AnalyticOracle {
 
 impl AnalyticOracle {
     pub fn new(problem: Problem, utilities: Vec<Utility>) -> Self {
-        assert_eq!(utilities.len(), problem.n_versions());
+        assert_eq!(utilities.len(), problem.n_sessions());
         AnalyticOracle {
             problem,
             utilities,
@@ -101,7 +128,7 @@ impl UtilityOracle for AnalyticOracle {
         let mut router = OmdRouter::new(self.router_eta).with_workers(self.workers);
         let sol = router.solve(&self.problem, lam, self.max_routing_iters);
         self.routing_iters += sol.iterations;
-        self.true_task_utility(lam) - sol.cost
+        self.true_task_utility(lam) - sol.objective
     }
 
     fn total_rate(&self) -> f64 {
@@ -109,7 +136,15 @@ impl UtilityOracle for AnalyticOracle {
     }
 
     fn n_versions(&self) -> usize {
-        self.problem.n_versions()
+        self.problem.n_sessions()
+    }
+
+    fn blocks(&self) -> Vec<(usize, usize, f64)> {
+        self.problem.workload.blocks()
+    }
+
+    fn uniform_allocation(&self) -> Vec<f64> {
+        self.problem.uniform_allocation()
     }
 
     fn routing_iterations(&self) -> usize {
@@ -140,7 +175,7 @@ pub struct SingleStepOracle {
 
 impl SingleStepOracle {
     pub fn new(problem: Problem, utilities: Vec<Utility>, eta: f64) -> Self {
-        assert_eq!(utilities.len(), problem.n_versions());
+        assert_eq!(utilities.len(), problem.n_sessions());
         let phi = Phi::uniform(&problem.net);
         SingleStepOracle {
             problem,
@@ -179,7 +214,15 @@ impl UtilityOracle for SingleStepOracle {
     }
 
     fn n_versions(&self) -> usize {
-        self.problem.n_versions()
+        self.problem.n_sessions()
+    }
+
+    fn blocks(&self) -> Vec<(usize, usize, f64)> {
+        self.problem.workload.blocks()
+    }
+
+    fn uniform_allocation(&self) -> Vec<f64> {
+        self.problem.uniform_allocation()
     }
 
     fn routing_iterations(&self) -> usize {
@@ -195,6 +238,12 @@ impl UtilityOracle for SingleStepOracle {
         // routing state re-initialized on the new topology (the Fig. 11
         // "worse initial point" effect for the single loop)
         self.phi = Phi::uniform(&self.problem.net);
+    }
+
+    fn on_workload_change(&mut self, problem: &Problem) {
+        // same topology, new class rates: the persistent routing state
+        // stays valid (φ is per-(session, edge); rates enter through Λ)
+        self.problem = problem.clone();
     }
 
     fn current_phi(&self) -> Option<&Phi> {
@@ -264,6 +313,30 @@ mod tests {
             (last - target).abs() < 1e-3 * target.abs().max(1.0),
             "single-step {last} vs analytic {target}"
         );
+    }
+
+    #[test]
+    fn workload_change_keeps_single_step_phi_warm() {
+        // a ClassRate trace breakpoint must not throw away the persistent
+        // routing state — only real topology changes reset φ
+        let p = mk_problem(6);
+        let us = family("log", 3, 60.0).unwrap();
+        let mut o = SingleStepOracle::new(p.clone(), us, 0.5);
+        let lam = [20.0, 20.0, 20.0];
+        for _ in 0..40 {
+            o.observe(&lam);
+        }
+        let warm = o.phi().clone();
+        let mut wl = p.workload.clone();
+        wl.class_rates[0] = 45.0;
+        let p2 = Problem::with_workload(p.net.clone(), p.cost, wl);
+        o.on_workload_change(&p2);
+        for (ra, rb) in o.phi().frac.iter().zip(&warm.frac) {
+            for (a, b) in ra.iter().zip(rb) {
+                assert_eq!(a.to_bits(), b.to_bits(), "phi must survive a rate change");
+            }
+        }
+        assert!((o.total_rate() - 45.0).abs() < 1e-12, "new rate installed");
     }
 
     #[test]

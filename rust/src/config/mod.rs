@@ -84,8 +84,36 @@ impl ExperimentConfig {
     }
 
     /// Parse from JSON text; missing keys fall back to `paper_default`.
+    /// Unrecognized keys are warned about instead of silently dropped —
+    /// spec-only fields (classes, nodes, explicit edges, traces) need the
+    /// full [`crate::session::spec::ScenarioSpec`] loader (`--scenario`).
     pub fn from_json(text: &str) -> Result<Self, String> {
         let j = Json::parse(text).map_err(|e| e.to_string())?;
+        if let Some(obj) = j.as_obj() {
+            const KNOWN: [&str; 13] = [
+                "topology",
+                "n_nodes",
+                "p_link",
+                "cap_mean",
+                "n_versions",
+                "total_rate",
+                "cost",
+                "utility",
+                "eta_routing",
+                "eta_alloc",
+                "delta",
+                "workers",
+                "seed",
+            ];
+            for key in obj.keys() {
+                if !KNOWN.contains(&key.as_str()) {
+                    crate::log_warn!(
+                        "config: ignoring unknown field '{key}' (declarative fields like \
+                         classes/nodes/edges need a ScenarioSpec file via --scenario)"
+                    );
+                }
+            }
+        }
         let mut c = Self::paper_default();
         if let Some(s) = j.get("topology").as_str() {
             c.topology = s.to_string();

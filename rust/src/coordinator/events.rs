@@ -14,6 +14,10 @@ pub enum NetworkEvent {
     Rewire { seed: u64 },
     /// Scale every link capacity by `factor` (congestion shock).
     CapacityScale { factor: f64 },
+    /// Set task class `class`'s admitted rate to `rate` — the breakpoints
+    /// of a [`crate::session::spec::RateSpec::Trace`] compile to these
+    /// (see [`crate::session::spec::ScenarioSpec::events`]).
+    ClassRate { class: usize, rate: f64 },
 }
 
 /// An ordered schedule of events keyed by outer iteration.
@@ -53,7 +57,25 @@ impl EventSchedule {
         match ev {
             NetworkEvent::Rewire { seed } => {
                 let mut rng = Rng::seed_from(*seed);
-                cfg.build_problem(&mut rng)
+                let fresh = cfg.build_problem(&mut rng)?;
+                // a rewire regenerates the *topology*; the live workload
+                // (class structure + any rates already updated by trace
+                // events) must survive it. The scalar config can only
+                // regenerate single-class-shaped problems, so a workload
+                // whose session count no longer matches is a clean error,
+                // not a silent desync (lam-length panics downstream).
+                if problem.workload.n_sessions() != fresh.n_sessions() {
+                    return Err(SessionError::InvalidScenario {
+                        what: format!(
+                            "Rewire regenerates {} sessions from the scalar config, but \
+                             the live workload has {} (multi-class scenarios cannot be \
+                             rewired through ExperimentConfig)",
+                            fresh.n_sessions(),
+                            problem.workload.n_sessions()
+                        ),
+                    });
+                }
+                Ok(Problem::with_workload(fresh.net, fresh.cost, problem.workload.clone()))
             }
             NetworkEvent::CapacityScale { factor } => {
                 let mut net = problem.net.clone();
@@ -63,7 +85,29 @@ impl EventSchedule {
                 }
                 net.graph = g;
                 net.rebuild_session_dags();
-                Ok(Problem::new(net, problem.total_rate, problem.cost))
+                // structure (sessions, edge ids) is unchanged: the workload
+                // and any per-edge cost overrides carry over
+                Ok(Problem::with_workload(net, problem.cost, problem.workload.clone())
+                    .with_edge_cost(problem.edge_cost.clone()))
+            }
+            NetworkEvent::ClassRate { class, rate } => {
+                if *class >= problem.workload.n_classes() {
+                    return Err(SessionError::InvalidScenario {
+                        what: format!(
+                            "rate event for class {class}, but the workload has {} classes",
+                            problem.workload.n_classes()
+                        ),
+                    });
+                }
+                if !(*rate > 0.0) {
+                    return Err(SessionError::InvalidScenario {
+                        what: format!("class {class} rate event must be > 0 (got {rate})"),
+                    });
+                }
+                let mut workload = problem.workload.clone();
+                workload.class_rates[*class] = *rate;
+                Ok(Problem::with_workload(problem.net.clone(), problem.cost, workload)
+                    .with_edge_cost(problem.edge_cost.clone()))
             }
         }
     }
@@ -102,6 +146,61 @@ mod tests {
                     .zip(p.net.graph.edges())
                     .any(|(a, b)| a != b)
         );
+    }
+
+    #[test]
+    fn class_rate_updates_workload_and_rejects_bad_input() {
+        let cfg = ExperimentConfig::paper_default();
+        let mut rng = Rng::seed_from(2);
+        let p = cfg.build_problem(&mut rng).unwrap();
+        let p2 =
+            EventSchedule::apply(&cfg, &p, &NetworkEvent::ClassRate { class: 0, rate: 45.0 })
+                .unwrap();
+        assert_eq!(p2.workload.class_rates, vec![45.0]);
+        assert_eq!(p2.total_rate, 45.0);
+        assert_eq!(p2.net.graph.n_edges(), p.net.graph.n_edges());
+        // unknown class / non-positive rate are clean errors
+        assert!(EventSchedule::apply(
+            &cfg,
+            &p,
+            &NetworkEvent::ClassRate { class: 7, rate: 10.0 }
+        )
+        .is_err());
+        assert!(EventSchedule::apply(
+            &cfg,
+            &p,
+            &NetworkEvent::ClassRate { class: 0, rate: 0.0 }
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn rewire_preserves_trace_updated_rates_and_rejects_multi_class() {
+        let cfg = ExperimentConfig::paper_default();
+        let mut rng = Rng::seed_from(3);
+        let p = cfg.build_problem(&mut rng).unwrap();
+        // a trace breakpoint fired, then the topology rewires: the updated
+        // rate must survive the rewire
+        let p = EventSchedule::apply(&cfg, &p, &NetworkEvent::ClassRate { class: 0, rate: 48.0 })
+            .unwrap();
+        let p = EventSchedule::apply(&cfg, &p, &NetworkEvent::Rewire { seed: 555 }).unwrap();
+        assert_eq!(p.workload.class_rates, vec![48.0]);
+        assert_eq!(p.total_rate, 48.0);
+        // a multi-class workload cannot be regenerated from the scalar
+        // config: clean error, not a session-count desync
+        let session = crate::session::Scenario::paper_default()
+            .versions(2)
+            .delta(0.2)
+            .class("a", "log", 30.0, &[])
+            .class("b", "sqrt", 20.0, &[])
+            .build()
+            .unwrap();
+        assert!(EventSchedule::apply(
+            &session.cfg,
+            &session.problem,
+            &NetworkEvent::Rewire { seed: 1 }
+        )
+        .is_err());
     }
 
     #[test]

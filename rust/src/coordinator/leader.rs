@@ -104,8 +104,10 @@ impl DistributedOmd {
     /// deployment step — at runtime each node only ever touches its spec).
     /// Upstream lists are sorted in each session's forward topological
     /// order so the actors' deferred ingress sums reproduce the engine's
-    /// accumulation order bit for bit.
-    pub fn build_specs(net: &AugmentedNet, phi: &Phi) -> Vec<NodeSpec> {
+    /// accumulation order bit for bit. Each out-lane carries its own link
+    /// cost family (heterogeneous per-edge costs deploy transparently).
+    pub fn build_specs(problem: &Problem, phi: &Phi) -> Vec<NodeSpec> {
+        let net = &problem.net;
         let classify = |node: usize| -> Peer {
             if node == AugmentedNet::SOURCE {
                 Peer::Leader
@@ -116,14 +118,14 @@ impl DistributedOmd {
             }
         };
         // per-session topo rank of every DAG node (S is topo-first)
-        let rank: Vec<HashMap<usize, usize>> = (0..net.n_versions())
+        let rank: Vec<HashMap<usize, usize>> = (0..net.n_sessions())
             .map(|w| {
                 net.session_topo[w].iter().enumerate().map(|(k, &i)| (i, k)).collect()
             })
             .collect();
         (1..=net.n_real)
             .map(|node| {
-                let w_cnt = net.n_versions();
+                let w_cnt = net.n_sessions();
                 let mut lanes = Vec::with_capacity(w_cnt);
                 let mut in_peers = Vec::with_capacity(w_cnt);
                 let mut phi0 = Vec::with_capacity(w_cnt);
@@ -136,6 +138,7 @@ impl DistributedOmd {
                             edge_id: e,
                             dst: classify(edge.dst),
                             capacity: edge.capacity,
+                            cost: problem.edge_kind(e),
                         });
                         p0.push(phi.frac[w][e]);
                     }
@@ -157,8 +160,7 @@ impl DistributedOmd {
                 NodeSpec {
                     actor: node - 1,
                     node_id: node,
-                    n_sessions: net.n_versions(),
-                    cost: crate::model::cost::CostKind::Exp, // overwritten on deploy
+                    n_sessions: net.n_sessions(),
                     lanes,
                     in_peers,
                     phi0,
@@ -183,7 +185,7 @@ impl DistributedOmd {
         let net = &problem.net;
         mix(net.n_nodes() as u64);
         mix(net.graph.n_edges() as u64);
-        mix(net.n_versions() as u64);
+        mix(net.n_sessions() as u64);
         for (&e, &d) in net.csr.lane_edge.iter().zip(&net.csr.lane_dst) {
             mix(e as u64);
             mix(d as u64);
@@ -200,10 +202,11 @@ impl DistributedOmd {
             mix(a as u64);
             mix(b as u64);
         }
-        for edge in net.graph.edges() {
+        for (e, edge) in net.graph.edges().iter().enumerate() {
             mix(edge.src as u64);
             mix(edge.dst as u64);
             mix(edge.capacity.to_bits());
+            mix(problem.edge_kind(e) as u64);
         }
         mix(problem.cost as u64);
         h
@@ -213,10 +216,7 @@ impl DistributedOmd {
     /// rows from `phi`.
     fn deploy(problem: &Problem, phi: &Phi) -> Deployment {
         let net = &problem.net;
-        let mut specs = Self::build_specs(net, phi);
-        for s in &mut specs {
-            s.cost = problem.cost;
-        }
+        let specs = Self::build_specs(problem, phi);
         let (fabric, receivers, leader_rx) = Fabric::new(net.n_real);
         let mut handles = Vec::with_capacity(specs.len());
         for (spec, rx) in specs.into_iter().zip(receivers) {
@@ -229,7 +229,7 @@ impl DistributedOmd {
                     .expect("spawn node actor"),
             );
         }
-        let s_lanes: Vec<Vec<(usize, usize)>> = (0..net.n_versions())
+        let s_lanes: Vec<Vec<(usize, usize)>> = (0..net.n_sessions())
             .map(|w| {
                 net.session_out(w, AugmentedNet::SOURCE)
                     .map(|e| (e, net.graph.edge(e).dst))
@@ -294,7 +294,7 @@ impl DistributedOmd {
         eta: f64,
     ) {
         let net = &problem.net;
-        let w_cnt = net.n_versions();
+        let w_cnt = net.n_sessions();
         dep.fabric.broadcast(Msg::BeginRound { round, eta });
         // admit: S forwards λ_w over its rows
         for (w, lanes) in dep.s_lanes.iter().enumerate() {
@@ -336,7 +336,7 @@ impl DistributedOmd {
                 .map(|&(e, dst)| {
                     let edge = net.graph.edge(e);
                     let f: f64 = (0..w_cnt).map(|v| lam[v] * phi.frac[v][e]).sum();
-                    problem.cost.derivative(f, edge.capacity)
+                    problem.edge_kind(e).derivative(f, edge.capacity)
                         + r_of[w].get(&dst).copied().unwrap_or(0.0)
                 })
                 .collect();

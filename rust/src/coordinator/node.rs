@@ -36,6 +36,9 @@ pub struct OutLane {
     pub edge_id: usize,
     pub dst: Peer,
     pub capacity: f64,
+    /// Link cost family of this edge (per-edge heterogeneous costs deploy
+    /// as per-lane state — the actor never needs the global cost table).
+    pub cost: CostKind,
 }
 
 /// One upstream neighbour inside one session's DAG. The leader sorts each
@@ -57,7 +60,6 @@ pub struct NodeSpec {
     /// Augmented-graph node id (for message attribution).
     pub node_id: usize,
     pub n_sessions: usize,
-    pub cost: CostKind,
     /// `lanes[w]` — session w's usable out-edges.
     pub lanes: Vec<Vec<OutLane>>,
     /// `in_peers[w]` — upstream neighbours in session-topo order (for the
@@ -245,7 +247,7 @@ impl NodeActor {
             for w in 0..w_cnt {
                 for (slot, lane) in spec.lanes[w].iter().enumerate() {
                     let f = flow_of[&lane.edge_id];
-                    st.dprime[w][slot] = spec.cost.derivative(f, lane.capacity);
+                    st.dprime[w][slot] = lane.cost.derivative(f, lane.capacity);
                 }
             }
         }
@@ -327,13 +329,27 @@ mod tests {
             actor: 0,
             node_id: 1,
             n_sessions: 2,
-            cost: CostKind::Exp,
             lanes: vec![
                 vec![
-                    OutLane { edge_id: 0, dst: Peer::Actor(1), capacity: 10.0 },
-                    OutLane { edge_id: 1, dst: Peer::Destination, capacity: 5.0 },
+                    OutLane {
+                        edge_id: 0,
+                        dst: Peer::Actor(1),
+                        capacity: 10.0,
+                        cost: CostKind::Exp,
+                    },
+                    OutLane {
+                        edge_id: 1,
+                        dst: Peer::Destination,
+                        capacity: 5.0,
+                        cost: CostKind::Exp,
+                    },
                 ],
-                vec![OutLane { edge_id: 2, dst: Peer::Actor(2), capacity: 10.0 }],
+                vec![OutLane {
+                    edge_id: 2,
+                    dst: Peer::Actor(2),
+                    capacity: 10.0,
+                    cost: CostKind::Exp,
+                }],
             ],
             in_peers: vec![
                 vec![Upstream { node: 0, peer: Peer::Leader }],
@@ -358,8 +374,12 @@ mod tests {
             actor: 0,
             node_id: 1,
             n_sessions: 1,
-            cost: CostKind::Exp,
-            lanes: vec![vec![OutLane { edge_id: 0, dst: Peer::Destination, capacity: 5.0 }]],
+            lanes: vec![vec![OutLane {
+                edge_id: 0,
+                dst: Peer::Destination,
+                capacity: 5.0,
+                cost: CostKind::Exp,
+            }]],
             in_peers: vec![vec![
                 Upstream { node: 0, peer: Peer::Leader },
                 Upstream { node: 2, peer: Peer::Actor(1) },

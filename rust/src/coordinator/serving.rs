@@ -168,7 +168,7 @@ pub fn simulate(
     rng: &mut Rng,
 ) -> ServeReport {
     let net = &problem.net;
-    let w_cnt = net.n_versions();
+    let w_cnt = net.n_sessions();
     let total: f64 = lam.iter().sum();
     let mut queue: BinaryHeap<Ev> = BinaryHeap::new();
     let mut seq = 0u64;
@@ -247,7 +247,8 @@ pub fn simulate(
                         host_queue[node].push_back(frame);
                     } else {
                         host_busy[node] = true;
-                        let service = engine.infer_batch_latency(w, 1);
+                        let service =
+                            engine.infer_batch_latency(net.version_of_session(w), 1);
                         push(
                             &mut queue,
                             ev.time + service,
@@ -282,7 +283,8 @@ pub fn simulate(
                     let next: Vec<usize> =
                         (0..take).filter_map(|_| host_queue[node].pop_front()).collect();
                     let w = frames[next[0]].w;
-                    let service = engine.infer_batch_latency(w, next.len());
+                    let service =
+                        engine.infer_batch_latency(net.version_of_session(w), next.len());
                     push(
                         &mut queue,
                         ev.time + service,
@@ -297,10 +299,14 @@ pub fn simulate(
     let mean_latency = crate::util::stats::mean(&latencies);
     let done: u64 = completed.iter().sum();
     let throughput = done as f64 / params.sim_time;
+    // quality is a per-*version* score: sessions of different task classes
+    // served by the same version earn the same per-frame value
     let goodput_value: f64 = completed
         .iter()
         .enumerate()
-        .map(|(w, &c)| params.quality[w] * c as f64 / params.sim_time)
+        .map(|(w, &c)| {
+            params.quality[net.version_of_session(w)] * c as f64 / params.sim_time
+        })
         .sum();
     let utility = goodput_value - params.latency_penalty * mean_latency;
     ServeReport {
@@ -414,7 +420,15 @@ impl<E: InferenceEngine> UtilityOracle for MeasuredOracle<E> {
     }
 
     fn n_versions(&self) -> usize {
-        self.problem.n_versions()
+        self.problem.n_sessions()
+    }
+
+    fn blocks(&self) -> Vec<(usize, usize, f64)> {
+        self.problem.workload.blocks()
+    }
+
+    fn uniform_allocation(&self) -> Vec<f64> {
+        self.problem.uniform_allocation()
     }
 
     fn routing_iterations(&self) -> usize {
@@ -428,6 +442,11 @@ impl<E: InferenceEngine> UtilityOracle for MeasuredOracle<E> {
     fn on_topology_change(&mut self, problem: &Problem) {
         self.problem = problem.clone();
         self.phi = Phi::uniform(&self.problem.net);
+    }
+
+    fn on_workload_change(&mut self, problem: &Problem) {
+        // a pure rate change keeps the served routing state warm
+        self.problem = problem.clone();
     }
 
     fn current_phi(&self) -> Option<&Phi> {

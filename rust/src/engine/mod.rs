@@ -65,7 +65,6 @@
 pub mod pool;
 
 use crate::graph::augmented::{AugmentedNet, FlowCsr};
-use crate::model::cost::CostKind;
 use crate::model::flow::Phi;
 use crate::model::Problem;
 use pool::WorkerPool;
@@ -204,7 +203,7 @@ impl FlowEngine {
     /// the shape is unchanged — the hot loops allocate nothing after the
     /// first call.
     pub fn bind(&mut self, net: &AugmentedNet) {
-        let (nn, ne, wc) = (net.n_nodes(), net.graph.n_edges(), net.n_versions());
+        let (nn, ne, wc) = (net.n_nodes(), net.graph.n_edges(), net.n_sessions());
         if self.n_nodes != nn || self.n_edges != ne || self.w_cnt != wc {
             self.n_nodes = nn;
             self.n_edges = ne;
@@ -232,14 +231,10 @@ impl FlowEngine {
 
     /// Fused forward sweep (eqs. 1 + 4 + the P2 objective): per-session
     /// ingress rates, link flows, and total cost in one pass per session.
-    /// Returns the total network cost.
-    pub fn forward_sweep(
-        &mut self,
-        net: &AugmentedNet,
-        cost: CostKind,
-        phi: &Phi,
-        lam: &[f64],
-    ) -> f64 {
+    /// Returns the total network cost. Each edge is priced with its own
+    /// cost family ([`Problem::edge_kind`]).
+    pub fn forward_sweep(&mut self, problem: &Problem, phi: &Phi, lam: &[f64]) -> f64 {
+        let net = &problem.net;
         self.bind(net);
         assert_eq!(lam.len(), self.w_cnt);
         let (nn, ne) = (self.n_nodes, self.n_edges);
@@ -279,7 +274,7 @@ impl FlowEngine {
         // (mirrors the reference `flow::total_cost`).
         let mut total = 0.0;
         for &e in &net.union_edges {
-            total += cost.value(self.flows[e], net.graph.edge(e).capacity);
+            total += problem.edge_kind(e).value(self.flows[e], net.graph.edge(e).capacity);
         }
         self.cost = total;
         total
@@ -288,12 +283,14 @@ impl FlowEngine {
     /// Fused reverse sweep (eqs. 18–21): link marginals `D'_ij` plus the
     /// broadcast node marginals `∂D/∂r_i(w)`, one reverse pass per session.
     /// Requires a prior [`FlowEngine::forward_sweep`] on the same state.
-    pub fn reverse_sweep(&mut self, net: &AugmentedNet, cost: CostKind, phi: &Phi) {
+    pub fn reverse_sweep(&mut self, problem: &Problem, phi: &Phi) {
+        let net = &problem.net;
         assert_eq!(self.n_edges, net.graph.n_edges(), "reverse_sweep before forward_sweep");
         let nn = self.n_nodes;
         self.dprime.fill(0.0);
         for &e in &net.union_edges {
-            self.dprime[e] = cost.derivative(self.flows[e], net.graph.edge(e).capacity);
+            self.dprime[e] =
+                problem.edge_kind(e).derivative(self.flows[e], net.graph.edge(e).capacity);
         }
         let workers = self.effective_workers(self.w_cnt);
         self.ensure_pool(workers);
@@ -314,15 +311,15 @@ impl FlowEngine {
     /// Returns the total network cost; rates, flows, and marginals stay
     /// readable through the accessors until the next sweep.
     pub fn prepare(&mut self, problem: &Problem, phi: &Phi, lam: &[f64]) -> f64 {
-        let cost = self.forward_sweep(&problem.net, problem.cost, phi, lam);
-        self.reverse_sweep(&problem.net, problem.cost, phi);
+        let cost = self.forward_sweep(problem, phi, lam);
+        self.reverse_sweep(problem, phi);
         cost
     }
 
     /// Forward sweep only: the total network cost at `(Λ, φ)` (the fused
     /// replacement for `flow::evaluate(..).cost`).
     pub fn evaluate_cost(&mut self, problem: &Problem, phi: &Phi, lam: &[f64]) -> f64 {
-        self.forward_sweep(&problem.net, problem.cost, phi, lam)
+        self.forward_sweep(problem, phi, lam)
     }
 
     /// Session `w`'s ingress rate at node `i` — `t_i(w)`, eq. 1.
@@ -496,6 +493,7 @@ fn run_units<T: Send, F: Fn(&mut T) + Sync>(
 mod tests {
     use super::*;
     use crate::graph::topologies;
+    use crate::model::cost::CostKind;
     use crate::model::flow;
     use crate::routing::marginal;
     use crate::util::rng::Rng;
@@ -512,7 +510,7 @@ mod tests {
         let phi = Phi::uniform(&p.net);
         let lam = p.uniform_allocation();
         let ev = flow::evaluate(&p, &phi, &lam);
-        let m = marginal::compute(&p.net, p.cost, &phi, &ev.flows);
+        let m = marginal::compute(&p, &phi, &ev.flows);
 
         let mut eng = FlowEngine::new();
         let cost = eng.prepare(&p, &phi, &lam);

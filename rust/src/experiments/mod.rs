@@ -3,11 +3,13 @@
 //! (CSV under `results/`), prints an ASCII rendition, and returns the raw
 //! series for the bench targets and tests.
 //!
-//! All harnesses run on the [`crate::session`] API: scenarios are built
-//! (and validated) with [`Scenario`], solvers come from the registry by
-//! name, and trajectories are recorded by [`Trajectory`] observers on
-//! streaming runs — no harness constructs algorithms or dispatches on
-//! algorithm names by hand.
+//! All harnesses run on the [`crate::session`] API: scenarios lower into
+//! declarative [`crate::session::spec::ScenarioSpec`]s, solver grids run
+//! through the parallel [`Suite`] runner (per-cell trajectories come back
+//! on the [`crate::session::suite::SuiteReport`]), and solvers come from
+//! the registry by name — no harness constructs algorithms or dispatches
+//! on algorithm names by hand. The OPT reference lines keep the exact
+//! centralized path-flow solve.
 
 pub mod asciiplot;
 
@@ -18,7 +20,7 @@ use crate::graph::topologies;
 use crate::metrics::SeriesSet;
 use crate::model::Problem;
 use crate::routing::{omd::OmdRouter, opt::OptRouter, Router};
-use crate::session::{registry, Scenario, SessionError, Trajectory};
+use crate::session::{registry, Scenario, SessionError, Suite};
 
 /// Where CSVs land (`results/figN.csv`).
 pub fn results_dir() -> std::path::PathBuf {
@@ -40,16 +42,24 @@ pub fn fig7(cfg: &ExperimentConfig, iters: usize) -> Result<(SeriesSet, f64), Se
     let session = Scenario::from_config(cfg.clone()).build()?;
     let lam = session.uniform_allocation();
 
-    let mut omd = Trajectory::default();
-    session.routing_run("omd", iters)?.observe(&mut omd).finish();
-    let mut sgp = Trajectory::default();
-    session.routing_run("sgp", iters)?.observe(&mut sgp).finish();
+    // both solvers as one suite grid (each cell rebuilds the identical
+    // seeded scenario, so the series match the single-session runs bit
+    // for bit)
+    let results = Suite::new()
+        .spec("fig7", session.spec.clone())
+        .router("omd")
+        .router("sgp")
+        .iters(iters)
+        .workers(0)
+        .run();
+    let omd = results.cell_result("fig7", "omd")?.trajectory.clone();
+    let sgp = results.cell_result("fig7", "sgp")?.trajectory.clone();
     // the OPT reference line keeps the exact path-flow objective
     let opt = OptRouter::new().solve(&session.problem, &lam);
 
     let mut s = SeriesSet::new();
-    s.set("omd_rt", pad_to(&omd.values, iters + 1));
-    s.set("sgp", pad_to(&sgp.values, iters + 1));
+    s.set("omd_rt", pad_to(&omd, iters + 1));
+    s.set("sgp", pad_to(&sgp, iters + 1));
     s.set("opt", vec![opt.cost; iters + 1]);
     save(&s, "fig7.csv");
     println!(
@@ -98,19 +108,34 @@ pub fn fig8_9(
     sizes: &[usize],
     iters: usize,
 ) -> Result<Vec<SizeRow>, SessionError> {
+    // the whole size sweep is one suite grid: |sizes| specs × {omd, sgp},
+    // cells running in parallel (per-cell sessions are rebuilt from the
+    // seeded specs, so results equal the sequential harness)
+    let mut suite = Suite::new().router("omd").router("sgp").iters(iters).workers(0);
+    for &n in sizes {
+        let spec = Scenario::from_config(cfg.clone())
+            .nodes(n)
+            .seed(cfg.seed + n as u64)
+            .into_spec()?;
+        suite = suite.spec(&format!("n{n}"), spec);
+    }
+    let results = suite.run();
+
     let mut rows = Vec::new();
     println!(
         "{:>4} {:>12} {:>12} {:>12} {:>12} {:>12} {:>12}",
         "n", "cost(OMD)", "cost(SGP)", "cost(OPT)", "t(OMD)s", "t(SGP)s", "t(OPT)s"
     );
     for &n in sizes {
+        let name = format!("n{n}");
+        let omd = &results.cell_result(&name, "omd")?.report;
+        let sgp = &results.cell_result(&name, "sgp")?.report;
+        // OPT keeps the exact centralized path-flow solve
         let session = Scenario::from_config(cfg.clone())
             .nodes(n)
             .seed(cfg.seed + n as u64)
             .build()?;
         let lam = session.uniform_allocation();
-        let omd = session.routing_run("omd", iters)?.finish();
-        let sgp = session.routing_run("sgp", iters)?.finish();
         let opt = OptRouter::new().solve(&session.problem, &lam);
         let row = SizeRow {
             n,
@@ -148,18 +173,23 @@ pub fn fig8_9(
 /// **Fig. 10** — GS-OMA (nested loop) under the four unknown utility
 /// families. Returns the per-family utility trajectories.
 pub fn fig10(cfg: &ExperimentConfig, outer_iters: usize) -> Result<SeriesSet, SessionError> {
+    // one spec per utility family, all four GS-OMA cells in parallel
+    let mut suite = Suite::new().allocator("gsoma").iters(outer_iters).workers(0);
+    for fam in crate::model::utility::FAMILIES {
+        let spec = Scenario::from_config(cfg.clone()).utility(fam).into_spec()?;
+        suite = suite.spec(fam, spec);
+    }
+    let results = suite.run();
     let mut s = SeriesSet::new();
     for fam in crate::model::utility::FAMILIES {
-        let session = Scenario::from_config(cfg.clone()).utility(fam).build()?;
-        let mut traj = Trajectory::default();
-        let report = session.allocation_run("gsoma", outer_iters)?.observe(&mut traj).finish();
-        s.set(fam, pad_to(&traj.values, outer_iters + 1));
+        let cell = results.cell_result(fam, "gsoma")?;
+        s.set(fam, pad_to(&cell.trajectory, outer_iters + 1));
         println!(
             "  {fam:<10} U: {:.4} -> {:.4}  ({} outer iters, {} routing iters)",
-            traj.values[0],
-            traj.values.last().unwrap(),
-            report.iterations,
-            report.routing_iterations
+            cell.trajectory[0],
+            cell.trajectory.last().unwrap(),
+            cell.report.iterations,
+            cell.report.routing_iterations
         );
     }
     save(&s, "fig10.csv");
@@ -238,18 +268,25 @@ pub fn fig12_15(
     cfg: &ExperimentConfig,
     iters: usize,
 ) -> Result<Vec<(String, SeriesSet, f64)>, SessionError> {
+    // all four named topologies × {omd, sgp} as one parallel suite grid
+    let mut suite = Suite::new().router("omd").router("sgp").iters(iters).workers(0);
+    for &(name, _n, _e, cbar) in topologies::TABLE2.iter() {
+        let spec =
+            Scenario::from_config(cfg.clone()).topology(name).capacity(cbar).into_spec()?;
+        suite = suite.spec(name, spec);
+    }
+    let results = suite.run();
+
     let mut out = Vec::new();
     for &(name, _n, _e, cbar) in topologies::TABLE2.iter() {
+        let omd = results.cell_result(name, "omd")?.trajectory.clone();
+        let sgp = results.cell_result(name, "sgp")?.trajectory.clone();
         let session = Scenario::from_config(cfg.clone()).topology(name).capacity(cbar).build()?;
         let lam = session.uniform_allocation();
-        let mut omd = Trajectory::default();
-        session.routing_run("omd", iters)?.observe(&mut omd).finish();
-        let mut sgp = Trajectory::default();
-        session.routing_run("sgp", iters)?.observe(&mut sgp).finish();
         let opt = OptRouter::new().solve(&session.problem, &lam);
         let mut s = SeriesSet::new();
-        s.set("omd_rt", pad_to(&omd.values, iters + 1));
-        s.set("sgp", pad_to(&sgp.values, iters + 1));
+        s.set("omd_rt", pad_to(&omd, iters + 1));
+        s.set("sgp", pad_to(&sgp, iters + 1));
         s.set("opt", vec![opt.cost; iters + 1]);
         save(&s, &format!("fig12_15_{name}.csv"));
         println!(
@@ -290,9 +327,10 @@ pub fn table2() -> Vec<(String, usize, usize, f64)> {
 pub fn check_stationarity(problem: &Problem, iters: usize, tol: f64) -> bool {
     let lam = problem.uniform_allocation();
     let sol = OmdRouter::new(0.5).solve(problem, &lam, iters);
-    let t = crate::model::flow::node_rates(&problem.net, &sol.phi, &lam);
-    let flows = crate::model::flow::edge_flows(&problem.net, &sol.phi, &t);
-    let m = crate::routing::marginal::compute(&problem.net, problem.cost, &sol.phi, &flows);
+    let phi = sol.phi.expect("routing solve exposes phi");
+    let t = crate::model::flow::node_rates(&problem.net, &phi, &lam);
+    let flows = crate::model::flow::edge_flows(&problem.net, &phi, &t);
+    let m = crate::routing::marginal::compute(problem, &phi, &flows);
     for w in 0..problem.n_versions() {
         for &i in problem.net.session_routers(w) {
             if t[w][i] < 1e-6 {
@@ -301,7 +339,7 @@ pub fn check_stationarity(problem: &Problem, iters: usize, tol: f64) -> bool {
             let vals: Vec<f64> = problem
                 .net
                 .session_out(w, i)
-                .filter(|&e| sol.phi.frac[w][e] > 1e-4)
+                .filter(|&e| phi.frac[w][e] > 1e-4)
                 .map(|e| m.delta(&problem.net, w, e))
                 .collect();
             if vals.len() < 2 {

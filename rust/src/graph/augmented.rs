@@ -62,6 +62,39 @@ impl Placement {
         }
     }
 
+    /// Heterogeneous-spec placement: devices with a pinned version keep it,
+    /// the rest draw uniformly — except that the versions no pin covers are
+    /// assigned (ascending) to the first unpinned devices, so every version
+    /// is guaranteed a host. Returns `None` when the pins make coverage
+    /// impossible (a pin out of range, or more uncovered versions than
+    /// unpinned devices).
+    pub fn with_pins(
+        n_devices: usize,
+        n_versions: usize,
+        pins: &[Option<usize>],
+        rng: &mut Rng,
+    ) -> Option<Placement> {
+        assert_eq!(pins.len(), n_devices);
+        if pins.iter().flatten().any(|&v| v >= n_versions) {
+            return None;
+        }
+        let mut v: Vec<usize> = pins
+            .iter()
+            .map(|p| p.unwrap_or_else(|| rng.below(n_versions)))
+            .collect();
+        let free: Vec<usize> = (0..n_devices).filter(|&d| pins[d].is_none()).collect();
+        let must_host: Vec<usize> = (0..n_versions)
+            .filter(|&w| !pins.iter().flatten().any(|&p| p == w))
+            .collect();
+        if must_host.len() > free.len() {
+            return None;
+        }
+        for (&w, &d) in must_host.iter().zip(&free) {
+            v[d] = w;
+        }
+        Some(Placement::new(v, n_versions))
+    }
+
     pub fn hosts(&self, w: usize) -> impl Iterator<Item = usize> + '_ {
         self.version_of
             .iter()
@@ -133,11 +166,24 @@ impl FlowCsr {
 }
 
 /// The augmented CEC network: graph, placement, per-session DAG masks.
+///
+/// A **session** is one routed commodity `S → D_w`. Single-class networks
+/// (the paper's setup) have exactly one session per DNN version; the
+/// heterogeneous multi-class scenarios of
+/// [`crate::session::spec::ScenarioSpec`] route one session per
+/// `(task class, version)` pair, class-major, with each class restricted
+/// to its own admission (source-device) set. All per-session structures
+/// below are indexed by session, not version.
 #[derive(Clone, Debug)]
 pub struct AugmentedNet {
     pub graph: DiGraph,
     pub placement: Placement,
     pub n_real: usize,
+    /// DNN version served by session `s` (identity for single-class nets).
+    pub session_version: Vec<usize>,
+    /// Admission targets of session `s`: the augmented node ids the virtual
+    /// source may forward this session's traffic to (sorted ascending).
+    pub session_admit: Vec<Vec<NodeId>>,
     /// `session_edges[w][e]` — edge `e` usable by session `w`.
     pub session_edges: Vec<Vec<bool>>,
     /// Per-session topological order of the session DAG (sources first).
@@ -164,14 +210,29 @@ pub const SOURCE_CAP: f64 = 1e6;
 impl AugmentedNet {
     pub const SOURCE: NodeId = 0;
 
+    /// Destination node `D_{version(s)}` of session `s`.
     #[inline]
-    pub fn dnode(&self, w: usize) -> NodeId {
-        self.n_real + 1 + w
+    pub fn dnode(&self, s: usize) -> NodeId {
+        self.n_real + 1 + self.session_version[s]
     }
 
+    /// DNN version served by session `s`.
+    #[inline]
+    pub fn version_of_session(&self, s: usize) -> usize {
+        self.session_version[s]
+    }
+
+    /// Number of DNN versions W (= the number of `D_w` nodes).
     #[inline]
     pub fn n_versions(&self) -> usize {
         self.placement.n_versions
+    }
+
+    /// Number of routed sessions (`classes × versions`; equals
+    /// [`AugmentedNet::n_versions`] for single-class networks).
+    #[inline]
+    pub fn n_sessions(&self) -> usize {
+        self.session_version.len()
     }
 
     #[inline]
@@ -187,12 +248,44 @@ impl AugmentedNet {
 
     /// Build from the real network. `comp_cap_mean` is the mean computing
     /// capacity C_i (drawn per device like link capacities, paper eq. 6).
+    /// One session per version, all admitted through the hosts of version 0
+    /// (the paper's single-class setup).
     pub fn build(
         real: &DiGraph,
         placement: &Placement,
         comp_cap_mean: f64,
         rng: &mut Rng,
     ) -> AugmentedNet {
+        let sources: Vec<usize> = placement.hosts(0).collect();
+        Self::build_heterogeneous(real, placement, comp_cap_mean, &[], &[sources], rng)
+    }
+
+    /// Heterogeneous multi-class construction (the substrate of
+    /// [`crate::session::spec::ScenarioSpec`]).
+    ///
+    /// * `node_caps[d]` — explicit computing capacity for device `d`
+    ///   (`None`/missing = drawn from the `comp_cap_mean` distribution;
+    ///   the draw happens for *every* device so the RNG stream — and hence
+    ///   every downstream placement — is identical whether or not a device
+    ///   pins its capacity).
+    /// * `class_sources[c]` — the admission (source-device) set of task
+    ///   class `c`. Sessions are class-major: session `c·W + w` routes
+    ///   class `c`'s traffic to `D_w`, admitted only through S-links into
+    ///   class `c`'s sources. The virtual source gets one admission link
+    ///   per device in the ascending union of all class sources.
+    ///
+    /// With one class whose sources are `hosts(0)` this reduces exactly to
+    /// [`AugmentedNet::build`] — same edges, same RNG draws, bit-identical
+    /// session DAGs.
+    pub fn build_heterogeneous(
+        real: &DiGraph,
+        placement: &Placement,
+        comp_cap_mean: f64,
+        node_caps: &[Option<f64>],
+        class_sources: &[Vec<usize>],
+        rng: &mut Rng,
+    ) -> AugmentedNet {
+        assert!(!class_sources.is_empty(), "at least one task class required");
         let n_real = real.n_nodes();
         let w_cnt = placement.n_versions;
         let n_total = 1 + n_real + w_cnt;
@@ -203,21 +296,44 @@ impl AugmentedNet {
             g.add_edge(e.src + 1, e.dst + 1, e.capacity);
         }
         let mut virtual_edges = Vec::new();
-        // S -> every device hosting version 0 (paper: the controller directly
-        // reaches the devices with the smallest model in proximity)
-        for d in placement.hosts(0) {
+        // S -> the union of every class's source devices, ascending (for a
+        // single class sourced at hosts(0) this is the paper's "controller
+        // directly reaches the devices with the smallest model" layout)
+        let mut admit_union: Vec<usize> = class_sources.iter().flatten().copied().collect();
+        admit_union.sort_unstable();
+        admit_union.dedup();
+        for &d in &admit_union {
+            assert!(d < n_real, "source device {d} out of range");
             virtual_edges.push(g.add_edge(Self::SOURCE, d + 1, SOURCE_CAP));
         }
-        // computation links device -> D_{version(device)}
+        // computation links device -> D_{version(device)}; capacities are
+        // drawn for every device (stable RNG stream) and overridden where a
+        // node spec pins them
         for (d, &v) in placement.version_of.iter().enumerate() {
-            let cap = rng.uniform(0.2 * comp_cap_mean, 1.8 * comp_cap_mean);
+            let drawn = rng.uniform(0.2 * comp_cap_mean, 1.8 * comp_cap_mean);
+            let cap = node_caps.get(d).copied().flatten().unwrap_or(drawn);
             virtual_edges.push(g.add_edge(d + 1, n_real + 1 + v, cap));
+        }
+
+        // sessions: class-major, one per (class, version)
+        let mut session_version = Vec::with_capacity(class_sources.len() * w_cnt);
+        let mut session_admit = Vec::with_capacity(class_sources.len() * w_cnt);
+        for sources in class_sources {
+            let mut nodes: Vec<NodeId> = sources.iter().map(|&d| d + 1).collect();
+            nodes.sort_unstable();
+            nodes.dedup();
+            for w in 0..w_cnt {
+                session_version.push(w);
+                session_admit.push(nodes.clone());
+            }
         }
 
         let mut net = AugmentedNet {
             graph: g,
             placement: placement.clone(),
             n_real,
+            session_version,
+            session_admit,
             session_edges: Vec::new(),
             session_topo: Vec::new(),
             virtual_edges,
@@ -233,14 +349,32 @@ impl AugmentedNet {
     /// (Re)compute the per-session DAG masks + topological orders. Called at
     /// construction and after any topology change.
     pub fn rebuild_session_dags(&mut self) {
-        let w_cnt = self.n_versions();
-        let mut session_edges = Vec::with_capacity(w_cnt);
-        let mut session_topo = Vec::with_capacity(w_cnt);
-        for w in 0..w_cnt {
+        let s_cnt = self.n_sessions();
+        let mut session_edges = Vec::with_capacity(s_cnt);
+        let mut session_topo = Vec::with_capacity(s_cnt);
+        for w in 0..s_cnt {
+            let ver = self.session_version[w];
             let dw = self.dnode(w);
             let dist = self.graph.dist_to(dw);
+            // class-local admission rule: S forwards this session only to
+            // its class's *nearest* reachable sources. For a single class
+            // sourced at every S-neighbor this is exactly the legacy
+            // strictly-closer rule (dist(d) < dist(S) ⟺ dist(d) equals the
+            // global minimum); with multiple classes the minimum is taken
+            // over the class's own sources, so a class farther from D_w
+            // than another class still keeps its admission lanes. Edges
+            // out of S can never create a loop (nothing enters S).
+            let admit_min: Option<u32> =
+                self.session_admit[w].iter().filter_map(|&d| dist[d]).min();
             let mut mask = vec![false; self.graph.n_edges()];
             for (eid, e) in self.graph.edges().iter().enumerate() {
+                if e.src == Self::SOURCE {
+                    let usable = self.session_admit[w].binary_search(&e.dst).is_ok()
+                        && dist[e.dst].is_some()
+                        && dist[e.dst] == admit_min;
+                    mask[eid] = usable;
+                    continue;
+                }
                 let (du, dv) = (dist[e.src], dist[e.dst]);
                 let (du, dv) = match (du, dv) {
                     (Some(a), Some(b)) => (a, b),
@@ -249,13 +383,14 @@ impl AugmentedNet {
                 if dv >= du {
                     continue; // not strictly closer -> would allow loops
                 }
-                // a device hosting w only forwards session w to D_w
+                // a device hosting this session's version only forwards it
+                // to that version's destination
                 if let Some(d) = self.device_of(e.src) {
-                    if self.placement.version_of[d] == w && e.dst != dw {
+                    if self.placement.version_of[d] == ver && e.dst != dw {
                         continue;
                     }
                 }
-                // session w traffic never enters a *different* destination
+                // session traffic never enters a *different* destination
                 if e.dst > self.n_real && e.dst != dw {
                     continue;
                 }
@@ -271,7 +406,7 @@ impl AugmentedNet {
         self.session_edges = session_edges;
         self.session_topo = session_topo;
         // hot-path caches
-        self.session_lanes = (0..w_cnt)
+        self.session_lanes = (0..s_cnt)
             .map(|w| {
                 (0..self.graph.n_nodes())
                     .map(|i| {
@@ -285,7 +420,7 @@ impl AugmentedNet {
                     .collect()
             })
             .collect();
-        self.routers = (0..w_cnt)
+        self.routers = (0..s_cnt)
             .map(|w| {
                 (0..self.graph.n_nodes())
                     .filter(|&i| i != self.dnode(w) && !self.session_lanes[w][i].is_empty())
@@ -293,7 +428,7 @@ impl AugmentedNet {
             })
             .collect();
         self.union_edges = (0..self.graph.n_edges())
-            .filter(|&e| (0..w_cnt).any(|w| self.session_edges[w][e]))
+            .filter(|&e| (0..s_cnt).any(|w| self.session_edges[w][e]))
             .collect();
         self.rebuild_csr();
     }
@@ -306,9 +441,9 @@ impl AugmentedNet {
     /// reference implementations in [`crate::model::flow`] and
     /// [`crate::routing::marginal`].
     fn rebuild_csr(&mut self) {
-        let w_cnt = self.n_versions();
+        let s_cnt = self.n_sessions();
         let mut csr = FlowCsr::default();
-        for w in 0..w_cnt {
+        for w in 0..s_cnt {
             let row_first = csr.rows.len();
             let lane_first = csr.lane_edge.len();
             for &i in &self.session_topo[w] {
@@ -358,7 +493,7 @@ impl AugmentedNet {
 
     /// Sanity diagnostics used by tests and the CLI `topo` command.
     pub fn validate(&self) -> Result<(), String> {
-        for w in 0..self.n_versions() {
+        for w in 0..self.n_sessions() {
             let dw = self.dnode(w);
             // source must reach the destination inside the session DAG
             if self.session_out(w, Self::SOURCE).next().is_none() {
@@ -514,5 +649,78 @@ mod tests {
             assert!(routers.contains(&AugmentedNet::SOURCE));
             assert!(!routers.contains(&net.dnode(w)));
         }
+    }
+
+    #[test]
+    fn single_class_heterogeneous_build_matches_default_build() {
+        // the default build() must be the exact single-class reduction of
+        // build_heterogeneous(): same edges, same RNG stream, same DAGs
+        let mut rng_a = Rng::seed_from(11);
+        let g = topologies::connected_er_graph(10, 0.3, 10.0, &mut rng_a);
+        let pl = Placement::random(10, 3, &mut rng_a);
+        let mut rng_b = rng_a.clone();
+        let a = AugmentedNet::build(&g, &pl, 10.0, &mut rng_a);
+        let sources: Vec<usize> = pl.hosts(0).collect();
+        let b =
+            AugmentedNet::build_heterogeneous(&g, &pl, 10.0, &[], &[sources], &mut rng_b);
+        assert_eq!(a.graph.n_edges(), b.graph.n_edges());
+        for (ea, eb) in a.graph.edges().iter().zip(b.graph.edges()) {
+            assert_eq!(ea, eb);
+        }
+        assert_eq!(a.session_version, b.session_version);
+        assert_eq!(a.session_edges, b.session_edges);
+        assert_eq!(a.csr.lane_edge, b.csr.lane_edge);
+    }
+
+    #[test]
+    fn multi_class_sessions_are_class_major_and_admission_restricted() {
+        let mut rng = Rng::seed_from(3);
+        let g = topologies::connected_er_graph(10, 0.35, 10.0, &mut rng);
+        let pl = Placement::random(10, 2, &mut rng);
+        let class_a: Vec<usize> = pl.hosts(0).collect();
+        let class_b = vec![3usize, 7];
+        let net = AugmentedNet::build_heterogeneous(
+            &g,
+            &pl,
+            10.0,
+            &[],
+            &[class_a.clone(), class_b.clone()],
+            &mut rng,
+        );
+        assert_eq!(net.n_sessions(), 4);
+        assert_eq!(net.n_versions(), 2);
+        assert_eq!(net.session_version, vec![0, 1, 0, 1]);
+        // shared destinations per version across classes
+        assert_eq!(net.dnode(0), net.dnode(2));
+        assert_eq!(net.dnode(1), net.dnode(3));
+        // admission lanes of each session point only into its class sources
+        for s in 0..net.n_sessions() {
+            let admit = &net.session_admit[s];
+            for e in net.session_out(s, AugmentedNet::SOURCE) {
+                let dst = net.graph.edge(e).dst;
+                assert!(admit.binary_search(&dst).is_ok(), "s={s} dst={dst}");
+            }
+        }
+        // class-b sessions admit exactly through devices 3 and 7
+        for s in [2usize, 3] {
+            assert_eq!(net.session_admit[s], vec![4usize, 8]);
+        }
+        net.validate().unwrap();
+    }
+
+    #[test]
+    fn with_pins_covers_every_version() {
+        let mut rng = Rng::seed_from(9);
+        let pins = [Some(1), None, None, Some(1), None];
+        let p = Placement::with_pins(5, 3, &pins, &mut rng).unwrap();
+        for w in 0..3 {
+            assert!(p.hosts(w).next().is_some(), "version {w} uncovered");
+        }
+        assert_eq!(p.version_of[0], 1);
+        assert_eq!(p.version_of[3], 1);
+        // infeasible: every device pinned to version 0 leaves 1 uncovered
+        assert!(Placement::with_pins(2, 2, &[Some(0), Some(0)], &mut rng).is_none());
+        // out-of-range pin
+        assert!(Placement::with_pins(2, 2, &[Some(5), None], &mut rng).is_none());
     }
 }

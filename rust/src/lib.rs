@@ -62,19 +62,32 @@
 //! ingress summation, distributed rounds are bit-identical to centralized
 //! OMD-RT iterations at any engine worker count.
 //!
+//! ## Declarative scenarios and suites
+//!
+//! Scenarios are also first-class *data*: a typed
+//! [`session::spec::ScenarioSpec`] describes heterogeneous node
+//! capacities, explicit or generated edge lists (with per-edge cost
+//! families), and multiple task classes — each with its own source-device
+//! set, rate (constant or piecewise trace), and utility family — and
+//! round-trips through JSON (`--scenario file.json` on the CLI, committed
+//! examples under `examples/scenarios/`). The [`session::suite::Suite`]
+//! runner evaluates a `(scenario × solver × seed)` grid in parallel on the
+//! engine worker pool and streams the per-cell [`session::RunReport`]s
+//! into a [`session::suite::SuiteReport`] (CSV + JSON dumps).
+//!
 //! ### Deprecation path
 //!
 //! Direct construction — `OmdRouter::new(0.1).solve(&problem, &lam, 50)` —
 //! still works and remains the right tool *inside* algorithm code, but it
 //! is deprecated as an application entry point: it bypasses scenario
-//! validation, hard-codes the algorithm choice, and bakes trajectory
-//! collection into the solver. New code should build a
-//! [`session::Scenario`] and drive a [`session::RoutingRun`] /
-//! [`session::AllocationRun`] / [`session::DistributedRun`]; the legacy
-//! `RoutingState` / `AllocationState` structs survive only as the return
-//! values of the solver-internal `solve`/`run` helpers (pinned by the
-//! legacy-equivalence tests) — coordinator and CLI hand-off goes through
-//! [`session::RunReport`] (`final_phi` for warm starts, `comm` for the
+//! validation, hard-codes the algorithm choice, and cannot record
+//! trajectories. `Router::solve` / `Allocator::run` now return the same
+//! unified [`session::RunReport`] as streaming runs (the legacy
+//! `RoutingState` / `AllocationState` structs are gone); new code should
+//! build a [`session::Scenario`] (or load a
+//! [`session::spec::ScenarioSpec`]) and drive a [`session::RoutingRun`] /
+//! [`session::AllocationRun`] / [`session::DistributedRun`] — hand-off
+//! goes through `RunReport` (`final_phi` for warm starts, `comm` for the
 //! fabric telemetry).
 
 pub mod allocation;
@@ -103,14 +116,18 @@ pub mod prelude {
     pub use crate::graph::DiGraph;
     pub use crate::model::cost::CostKind;
     pub use crate::model::utility::{Utility, UtilityKind};
-    pub use crate::model::Problem;
+    pub use crate::model::{Problem, Workload};
     pub use crate::routing::{
-        gp::GpRouter, omd::OmdRouter, opt::OptRouter, sgp::SgpRouter, Router, RoutingState,
+        gp::GpRouter, omd::OmdRouter, opt::OptRouter, sgp::SgpRouter, Router,
     };
     pub use crate::session::run::{
         AllocationRun, Deadline, DistributedRun, MaxIters, Observer, Progress, RoutingRun,
         RunReport, StepInfo, StopReason, StopRule, Tolerance, ToleranceStrict, Trajectory,
     };
+    pub use crate::session::spec::{
+        ClassSpec, EdgeSpec, NodeSpec, RateSpec, ScenarioSpec, TopologySpec,
+    };
+    pub use crate::session::suite::{Suite, SuiteCell, SuiteReport};
     pub use crate::session::{registry, Hyper, Scenario, Session, SessionError};
     pub use crate::util::rng::Rng;
 }

@@ -45,6 +45,7 @@ fn main() {
         "allocate" => cmd_allocate(&args),
         "solvers" => cmd_solvers(&args),
         "serve" => cmd_serve(&args),
+        "suite" => cmd_suite(&args),
         "runtime-check" => cmd_runtime_check(&args),
         "config" => cmd_config(&args),
         "help" | "--help" | "-h" => {
@@ -72,11 +73,15 @@ fn usage() {
          route [--algo {routers}]\n                                 run one routing solve\n  \
          dist [--rounds 50]             distributed OMD-RT session run (actors +\n                                 CommStats; also `route --algo distributed-omd`)\n  \
          allocate [--algo {allocators}]\n                                 run one allocation solve\n  \
+         suite --scenarios <dir|files>  run a (scenario x solver x seed) grid:\n                                 [--routers a,b] [--allocators x] [--seeds 1,2]\n                                 [--iters 50] [--out results/suite]\n  \
          solvers                        list the solver registry\n  \
          serve [--xla] [--router omd]   end-to-end serving demo\n  \
          runtime-check                  AOT artifact smoke test\n  \
          config --dump                  print default config JSON\n\n\
          common options: --n <nodes> --p <link prob> --rate <λ> --seed <s>\n\
+         --scenario <file.json>: load a declarative ScenarioSpec (multi-class\n\
+         workloads, per-node capacities, explicit edges, rate traces) —\n\
+         see examples/scenarios/\n\
          --workers <k>: engine threads for the per-session flow/marginal\n\
          sweeps (0 = auto; results are bit-identical at any worker count)",
         routers = registry::router_names().join("|"),
@@ -102,10 +107,116 @@ fn load_cfg(args: &Args) -> Result<ExperimentConfig, String> {
     Ok(cfg)
 }
 
-/// Build the validated session for this invocation's config + overrides.
+/// Build the validated session for this invocation: either a declarative
+/// `--scenario file.json` spec (with seed/workers overridable from the
+/// command line) or the scalar config + overrides.
 fn load_session(args: &Args) -> Result<Session, String> {
+    if let Some(path) = args.get("scenario") {
+        let mut spec = ScenarioSpec::from_file(std::path::Path::new(path))?;
+        if let Some(seed) = args.get("seed") {
+            spec.seed = seed.parse().map_err(|_| format!("--seed: bad integer '{seed}'"))?;
+        }
+        if let Some(w) = args.get("workers") {
+            spec.workers =
+                w.parse().map_err(|_| format!("--workers: bad integer '{w}'"))?;
+        }
+        return Ok(spec.build()?);
+    }
     let cfg = load_cfg(args)?;
     Ok(Scenario::from_config(cfg).build()?)
+}
+
+/// The `suite` subcommand: cross every scenario file with the requested
+/// solvers and seeds, run the grid in parallel, print a summary table, and
+/// dump CSV + JSON.
+fn cmd_suite(args: &Args) -> Result<(), String> {
+    let scenarios = args.get("scenarios").ok_or(
+        "need --scenarios <dir or comma-separated .json files> (see examples/scenarios/)",
+    )?;
+    let mut files: Vec<std::path::PathBuf> = Vec::new();
+    for part in scenarios.split(',') {
+        let path = std::path::Path::new(part);
+        if path.is_dir() {
+            let mut entries: Vec<_> = std::fs::read_dir(path)
+                .map_err(|e| format!("{part}: {e}"))?
+                .filter_map(|e| e.ok())
+                .map(|e| e.path())
+                .filter(|p| p.extension().map(|x| x == "json").unwrap_or(false))
+                .collect();
+            entries.sort();
+            files.extend(entries);
+        } else {
+            files.push(path.to_path_buf());
+        }
+    }
+    if files.is_empty() {
+        return Err(format!("no scenario files found under '{scenarios}'"));
+    }
+    let mut suite = Suite::new()
+        .iters(args.usize_or("iters", 50)?)
+        .workers(args.usize_or("workers", 0)?);
+    for f in &files {
+        suite = suite.scenario_file(f)?;
+    }
+    let mut any_solver = false;
+    if let Some(routers) = args.get("routers") {
+        for name in routers.split(',').filter(|s| !s.is_empty()) {
+            suite = suite.router(name);
+            any_solver = true;
+        }
+    }
+    if let Some(allocators) = args.get("allocators") {
+        for name in allocators.split(',').filter(|s| !s.is_empty()) {
+            suite = suite.allocator(name);
+            any_solver = true;
+        }
+    }
+    if !any_solver {
+        suite = suite.router("omd");
+    }
+    if let Some(seeds) = args.get("seeds") {
+        let parsed: Result<Vec<u64>, String> = seeds
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.parse().map_err(|_| format!("--seeds: bad integer '{s}'")))
+            .collect();
+        suite = suite.seeds(&parsed?);
+    }
+    println!("suite: {} scenario file(s), {} cell(s)", files.len(), suite.n_cells());
+    let report = suite.run();
+    println!(
+        "{:<24} {:<16} {:>6} {:>14} {:>7} {:>10}",
+        "scenario", "solver", "seed", "objective", "iters", "elapsed_s"
+    );
+    for cell in &report.cells {
+        match &cell.outcome {
+            Ok(res) => println!(
+                "{:<24} {:<16} {:>6} {:>14.6} {:>7} {:>10.4}",
+                cell.scenario,
+                cell.solver,
+                cell.seed,
+                res.report.objective,
+                res.report.iterations,
+                res.report.elapsed_s
+            ),
+            Err(e) => println!(
+                "{:<24} {:<16} {:>6} ERROR: {e}",
+                cell.scenario, cell.solver, cell.seed
+            ),
+        }
+    }
+    let out = std::path::PathBuf::from(args.get_or("out", "results/suite"));
+    report.write(&out).map_err(|e| format!("write {}: {e}", out.display()))?;
+    println!(
+        "{} ok, {} failed; wrote {}/suite.csv + suite.json",
+        report.ok_count(),
+        report.err_count(),
+        out.display()
+    );
+    if report.err_count() > 0 {
+        return Err(format!("{} suite cell(s) failed", report.err_count()));
+    }
+    Ok(())
 }
 
 fn cmd_fig(args: &Args) -> Result<(), String> {

@@ -14,7 +14,6 @@
 //! seeds, so it doubles as the executable specification.
 
 use crate::graph::augmented::AugmentedNet;
-use crate::model::cost::CostKind;
 use crate::model::Problem;
 
 /// Routing configuration φ: `frac[w][e]` is the fraction of session `w`'s
@@ -30,7 +29,7 @@ impl Phi {
     /// Paper's initializer: uniform over each node's usable out-edges
     /// (`φ¹_i(w) = 1/|O_w(i)|`).
     pub fn uniform(net: &AugmentedNet) -> Phi {
-        let w_cnt = net.n_versions();
+        let w_cnt = net.n_sessions();
         let mut frac = vec![vec![0.0; net.graph.n_edges()]; w_cnt];
         for (w, row) in frac.iter_mut().enumerate() {
             for i in 0..net.n_nodes() {
@@ -58,7 +57,7 @@ impl Phi {
 
     /// Check simplex feasibility (eq. 3) for every routing node.
     pub fn is_feasible(&self, net: &AugmentedNet, tol: f64) -> Result<(), String> {
-        for w in 0..net.n_versions() {
+        for w in 0..net.n_sessions() {
             for e in 0..net.graph.n_edges() {
                 let v = self.frac[w][e];
                 if !net.session_edges[w][e] {
@@ -93,7 +92,7 @@ pub struct FlowEval {
 
 /// Per-session ingress rates by forward topological sweep.
 pub fn node_rates(net: &AugmentedNet, phi: &Phi, lam: &[f64]) -> Vec<Vec<f64>> {
-    let w_cnt = net.n_versions();
+    let w_cnt = net.n_sessions();
     assert_eq!(lam.len(), w_cnt);
     let mut t = vec![vec![0.0; net.n_nodes()]; w_cnt];
     for w in 0..w_cnt {
@@ -115,7 +114,7 @@ pub fn node_rates(net: &AugmentedNet, phi: &Phi, lam: &[f64]) -> Vec<Vec<f64>> {
 /// Total link flows from node rates.
 pub fn edge_flows(net: &AugmentedNet, phi: &Phi, t: &[Vec<f64>]) -> Vec<f64> {
     let mut flows = vec![0.0; net.graph.n_edges()];
-    for w in 0..net.n_versions() {
+    for w in 0..net.n_sessions() {
         for i in 0..net.n_nodes() {
             let ti = t[w][i];
             if ti <= 0.0 {
@@ -133,10 +132,13 @@ pub fn edge_flows(net: &AugmentedNet, phi: &Phi, t: &[Vec<f64>]) -> Vec<f64> {
 /// (unused physical links cost nothing at F=0 under all families except Exp,
 /// where exp(0)=1 — we follow the paper and sum over the *augmented* edge
 /// set restricted to session-usable links, a constant set per topology).
-pub fn total_cost(net: &AugmentedNet, cost: CostKind, flows: &[f64]) -> f64 {
+/// Each edge is priced with its own cost family
+/// ([`Problem::edge_kind`] — the uniform default unless overridden).
+pub fn total_cost(problem: &Problem, flows: &[f64]) -> f64 {
+    let net = &problem.net;
     let mut sum = 0.0;
     for &e in &net.union_edges {
-        sum += cost.value(flows[e], net.graph.edge(e).capacity);
+        sum += problem.edge_kind(e).value(flows[e], net.graph.edge(e).capacity);
     }
     sum
 }
@@ -146,7 +148,7 @@ pub fn evaluate(problem: &Problem, phi: &Phi, lam: &[f64]) -> FlowEval {
     let net = &problem.net;
     let t = node_rates(net, phi, lam);
     let flows = edge_flows(net, phi, &t);
-    let cost = total_cost(net, problem.cost, &flows);
+    let cost = total_cost(problem, &flows);
     FlowEval { t, flows, cost }
 }
 
@@ -154,6 +156,7 @@ pub fn evaluate(problem: &Problem, phi: &Phi, lam: &[f64]) -> FlowEval {
 mod tests {
     use super::*;
     use crate::graph::topologies;
+    use crate::model::cost::CostKind;
     use crate::model::Problem;
     use crate::util::rng::Rng;
 

@@ -9,31 +9,151 @@ pub mod utility;
 use crate::graph::augmented::AugmentedNet;
 use cost::CostKind;
 
-/// A JOWR problem instance: the augmented network, the total admissible task
-/// input rate λ, and the link cost family.
+/// The task-class structure of a problem's workload: classes partition the
+/// sessions class-major (class `c` owns the contiguous session range
+/// `class_spans[c]`), and each class admits its own rate.
+///
+/// The paper's single-class setup is [`Workload::single`]: one class at the
+/// total rate spanning every session. Heterogeneous multi-class scenarios
+/// ([`crate::session::spec::ScenarioSpec`]) carry one entry per task class;
+/// the allocation layer splits each class's rate across *its own* sessions
+/// (per-class simplex blocks) instead of one global simplex.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Workload {
+    /// Human-readable class names (diagnostics and reports).
+    pub class_names: Vec<String>,
+    /// Admitted task input rate λ_c per class.
+    pub class_rates: Vec<f64>,
+    /// Session index range `[start, end)` owned by each class.
+    pub class_spans: Vec<(usize, usize)>,
+}
+
+impl Workload {
+    /// The paper's setup: one class at the total rate over all sessions.
+    pub fn single(total: f64, n_sessions: usize) -> Workload {
+        Workload {
+            class_names: vec!["default".to_string()],
+            class_rates: vec![total],
+            class_spans: vec![(0, n_sessions)],
+        }
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.class_rates.len()
+    }
+
+    /// Total admitted rate λ = Σ_c λ_c.
+    pub fn total(&self) -> f64 {
+        self.class_rates.iter().sum()
+    }
+
+    /// Per-class allocation blocks `(start, end, rate)`.
+    pub fn blocks(&self) -> Vec<(usize, usize, f64)> {
+        self.class_spans
+            .iter()
+            .zip(&self.class_rates)
+            .map(|(&(a, b), &r)| (a, b, r))
+            .collect()
+    }
+
+    /// Total number of sessions across all classes.
+    pub fn n_sessions(&self) -> usize {
+        self.class_spans.last().map_or(0, |&(_, b)| b)
+    }
+
+    /// The paper's uniform initializer, per class: `Λ¹_c = (λ_c/W_c)·1`.
+    pub fn uniform_allocation(&self) -> Vec<f64> {
+        let mut lam = vec![0.0; self.n_sessions()];
+        for (&(a, b), &rate) in self.class_spans.iter().zip(&self.class_rates) {
+            let share = rate / (b - a) as f64;
+            for l in &mut lam[a..b] {
+                *l = share;
+            }
+        }
+        lam
+    }
+
+    /// Class owning session `s`.
+    pub fn class_of_session(&self, s: usize) -> usize {
+        self.class_spans
+            .iter()
+            .position(|&(a, b)| s >= a && s < b)
+            .expect("session outside every class span")
+    }
+}
+
+/// A JOWR problem instance: the augmented network, the admitted workload
+/// (total rate λ + per-class structure), and the link cost family — with
+/// optional per-edge cost-family overrides for heterogeneous links.
 #[derive(Clone, Debug)]
 pub struct Problem {
     pub net: AugmentedNet,
     /// Total DNN inference task input rate λ (e.g. 60 fps in the paper).
     pub total_rate: f64,
+    /// Default link cost family (every edge without an override).
     pub cost: CostKind,
+    /// Task-class structure (single class spanning all sessions by default).
+    pub workload: Workload,
+    /// Per-edge cost-family overrides, indexed by augmented edge id
+    /// (`None` = every edge uses [`Problem::cost`]).
+    pub edge_cost: Option<Vec<CostKind>>,
 }
 
 impl Problem {
     pub fn new(net: AugmentedNet, total_rate: f64, cost: CostKind) -> Self {
-        assert!(total_rate > 0.0);
-        net.validate().expect("invalid augmented network");
-        Problem { net, total_rate, cost }
+        let workload = Workload::single(total_rate, net.n_sessions());
+        Self::with_workload(net, cost, workload)
     }
 
+    /// Multi-class construction: the total rate is the sum of the class
+    /// rates and the workload's spans must cover the network's sessions.
+    pub fn with_workload(net: AugmentedNet, cost: CostKind, workload: Workload) -> Self {
+        let total_rate = workload.total();
+        assert!(total_rate > 0.0);
+        assert_eq!(
+            workload.n_sessions(),
+            net.n_sessions(),
+            "workload spans must cover every session"
+        );
+        net.validate().expect("invalid augmented network");
+        Problem { net, total_rate, cost, workload, edge_cost: None }
+    }
+
+    /// Attach per-edge cost-family overrides (length = augmented edge
+    /// count); `None` clears them.
+    pub fn with_edge_cost(mut self, edge_cost: Option<Vec<CostKind>>) -> Self {
+        if let Some(ec) = &edge_cost {
+            assert_eq!(ec.len(), self.net.graph.n_edges(), "one cost kind per edge");
+        }
+        self.edge_cost = edge_cost;
+        self
+    }
+
+    /// Cost family of edge `e` (the per-edge override, else the default).
+    #[inline]
+    pub fn edge_kind(&self, e: usize) -> CostKind {
+        match &self.edge_cost {
+            Some(kinds) => kinds[e],
+            None => self.cost,
+        }
+    }
+
+    /// Number of DNN versions W.
     #[inline]
     pub fn n_versions(&self) -> usize {
         self.net.n_versions()
     }
 
-    /// Paper's allocation initializer: `Λ¹ = (λ/W)·1`.
+    /// Number of routed sessions (allocation coordinates); equals
+    /// [`Problem::n_versions`] for single-class problems.
+    #[inline]
+    pub fn n_sessions(&self) -> usize {
+        self.net.n_sessions()
+    }
+
+    /// Paper's allocation initializer: per class, `Λ¹ = (λ_c/W_c)·1`.
     pub fn uniform_allocation(&self) -> Vec<f64> {
-        vec![self.total_rate / self.n_versions() as f64; self.n_versions()]
+        self.workload.uniform_allocation()
     }
 }
 
@@ -59,5 +179,44 @@ mod tests {
         let mut rng = Rng::seed_from(2);
         let net = topologies::connected_er(10, 0.3, 3, &mut rng);
         Problem::new(net, 0.0, CostKind::Exp);
+    }
+
+    #[test]
+    fn workload_blocks_and_uniform() {
+        let wl = Workload {
+            class_names: vec!["a".into(), "b".into()],
+            class_rates: vec![40.0, 20.0],
+            class_spans: vec![(0, 3), (3, 6)],
+        };
+        assert_eq!(wl.n_classes(), 2);
+        assert_eq!(wl.n_sessions(), 6);
+        assert!((wl.total() - 60.0).abs() < 1e-12);
+        let lam = wl.uniform_allocation();
+        let mut want = vec![40.0 / 3.0; 3];
+        want.extend(vec![20.0 / 3.0; 3]);
+        assert_eq!(lam, want);
+        assert_eq!(wl.blocks(), vec![(0, 3, 40.0), (3, 6, 20.0)]);
+        assert_eq!(wl.class_of_session(2), 0);
+        assert_eq!(wl.class_of_session(3), 1);
+    }
+
+    #[test]
+    fn single_workload_matches_legacy_uniform() {
+        let wl = Workload::single(60.0, 3);
+        assert_eq!(wl.uniform_allocation(), vec![20.0, 20.0, 20.0]);
+    }
+
+    #[test]
+    fn edge_kind_defaults_and_overrides() {
+        let mut rng = Rng::seed_from(4);
+        let net = topologies::connected_er(8, 0.3, 2, &mut rng);
+        let ne = net.graph.n_edges();
+        let p = Problem::new(net, 30.0, CostKind::Exp);
+        assert_eq!(p.edge_kind(0), CostKind::Exp);
+        let mut kinds = vec![CostKind::Exp; ne];
+        kinds[1] = CostKind::Queue;
+        let p = p.with_edge_cost(Some(kinds));
+        assert_eq!(p.edge_kind(0), CostKind::Exp);
+        assert_eq!(p.edge_kind(1), CostKind::Queue);
     }
 }

@@ -44,7 +44,8 @@ impl NoisyCostObserver {
         // session DAGs depend only on connectivity, which is unchanged, but
         // rebuild keeps the caches coherent with the new graph object
         net.rebuild_session_dags();
-        Problem::new(net, self.mean.total_rate, self.mean.cost)
+        Problem::with_workload(net, self.mean.cost, self.mean.workload.clone())
+            .with_edge_cost(self.mean.edge_cost.clone())
     }
 
     /// Evaluate φ on the *mean* problem (the ground-truth objective).
@@ -104,11 +105,11 @@ mod tests {
             router.step(&noisy, &lam, &mut phi);
         }
         let noisy_final = obs.mean_cost(&phi, &lam);
-        let rel = (noisy_final - clean.cost) / clean.cost;
+        let rel = (noisy_final - clean.objective) / clean.objective;
         assert!(
             rel < 0.05,
             "noisy-trained φ mean cost {noisy_final} vs clean optimum {}",
-            clean.cost
+            clean.objective
         );
     }
 

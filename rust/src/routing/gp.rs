@@ -44,7 +44,7 @@ impl Router for GpRouter {
         let cost_before = self.engine.prepare(problem, phi, lam);
 
         let csr = &net.csr;
-        for w in 0..net.n_versions() {
+        for w in 0..net.n_sessions() {
             let frac = &mut phi.frac[w];
             for r in csr.rows(w) {
                 let ti = self.engine.node_rate(w, r.node);
@@ -85,10 +85,13 @@ mod tests {
     fn descends_and_stays_feasible() {
         let p = problem(1);
         let lam = p.uniform_allocation();
+        // initial cost = uniform-φ evaluation (what trajectory[0] used to be)
+        let initial =
+            FlowEngine::new().evaluate_cost(&p, &Phi::uniform(&p.net), &lam);
         let mut r = GpRouter::new(0.002);
         let sol = r.solve(&p, &lam, 80);
-        assert!(sol.cost < sol.trajectory[0]);
-        sol.phi.is_feasible(&p.net, 1e-9).unwrap();
+        assert!(sol.objective < initial);
+        sol.phi.unwrap().is_feasible(&p.net, 1e-9).unwrap();
     }
 
     #[test]
@@ -100,10 +103,10 @@ mod tests {
         let gp = GpRouter::new(0.002).solve(&p, &lam, 10);
         let omd = super::super::omd::OmdRouter::new(0.1).solve(&p, &lam, 10);
         assert!(
-            omd.cost <= gp.cost + 1e-9,
+            omd.objective <= gp.objective + 1e-9,
             "OMD {} should beat GP {} after 10 iters",
-            omd.cost,
-            gp.cost
+            omd.objective,
+            gp.objective
         );
     }
 }

@@ -13,8 +13,8 @@
 //! tests).
 
 use crate::graph::augmented::AugmentedNet;
-use crate::model::cost::CostKind;
 use crate::model::flow::Phi;
+use crate::model::Problem;
 
 /// Marginal costs at a given operating point (Λ, φ).
 #[derive(Clone, Debug)]
@@ -39,21 +39,18 @@ impl Marginals {
     }
 }
 
-/// Compute all marginals by one reverse sweep per session.
-pub fn compute(
-    net: &AugmentedNet,
-    cost: CostKind,
-    phi: &Phi,
-    flows: &[f64],
-) -> Marginals {
+/// Compute all marginals by one reverse sweep per session. Each edge's
+/// `D'` uses its own cost family ([`Problem::edge_kind`]).
+pub fn compute(problem: &Problem, phi: &Phi, flows: &[f64]) -> Marginals {
+    let net = &problem.net;
     let ne = net.graph.n_edges();
     let mut dprime = vec![0.0; ne];
     for &e in &net.union_edges {
-        dprime[e] = cost.derivative(flows[e], net.graph.edge(e).capacity);
+        dprime[e] = problem.edge_kind(e).derivative(flows[e], net.graph.edge(e).capacity);
     }
 
-    let mut r = vec![vec![0.0; net.n_nodes()]; net.n_versions()];
-    for w in 0..net.n_versions() {
+    let mut r = vec![vec![0.0; net.n_nodes()]; net.n_sessions()];
+    for w in 0..net.n_sessions() {
         // reverse topological order: D_w first (r = 0 there by eq. 20)
         for &i in net.session_topo[w].iter().rev() {
             if i == net.dnode(w) {
@@ -75,6 +72,7 @@ pub fn compute(
 mod tests {
     use super::*;
     use crate::graph::topologies;
+    use crate::model::cost::CostKind;
     use crate::model::flow::{self, Phi};
     use crate::model::Problem;
     use crate::util::rng::Rng;
@@ -92,7 +90,7 @@ mod tests {
     #[test]
     fn destination_marginal_is_zero() {
         let (p, phi, _lam, ev) = setup(1);
-        let m = compute(&p.net, p.cost, &phi, &ev.flows);
+        let m = compute(&p, &phi, &ev.flows);
         for w in 0..p.n_versions() {
             assert_eq!(m.r[w][p.net.dnode(w)], 0.0);
         }
@@ -102,7 +100,7 @@ mod tests {
     fn recursion_consistency() {
         // r_i(w) must equal Σ_j φ_ij (D'_ij + r_j(w)) at every node (eq. 21)
         let (p, phi, _lam, ev) = setup(2);
-        let m = compute(&p.net, p.cost, &phi, &ev.flows);
+        let m = compute(&p, &phi, &ev.flows);
         for w in 0..p.n_versions() {
             for i in 0..p.net.n_nodes() {
                 if i == p.net.dnode(w) {
@@ -123,7 +121,7 @@ mod tests {
         // perturbation: perturb φ_ij by +h and φ_ik (another lane) by −h;
         // directional derivative should equal t_i(δ_ij − δ_ik).
         let (p, phi, lam, ev) = setup(3);
-        let m = compute(&p.net, p.cost, &phi, &ev.flows);
+        let m = compute(&p, &phi, &ev.flows);
         let t = flow::node_rates(&p.net, &phi, &lam);
         for w in 0..p.n_versions() {
             for &i in p.net.session_routers(w) {
@@ -151,7 +149,7 @@ mod tests {
     #[test]
     fn marginals_positive_on_live_edges() {
         let (p, phi, _lam, ev) = setup(4);
-        let m = compute(&p.net, p.cost, &phi, &ev.flows);
+        let m = compute(&p, &phi, &ev.flows);
         for w in 0..p.n_versions() {
             for (e, used) in p.net.session_edges[w].iter().enumerate() {
                 if *used {

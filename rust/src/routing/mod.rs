@@ -27,26 +27,7 @@ use crate::coordinator::net::CommStats;
 use crate::engine::FlowEngine;
 use crate::model::flow::Phi;
 use crate::model::Problem;
-
-/// Result of a legacy `Router::solve` run. The session API reports runs
-/// through the unified [`crate::session::RunReport`] instead, with
-/// trajectories recorded by [`crate::session::run::Observer`]s; this struct
-/// survives only as the return of the solver-internal [`Router::solve`]
-/// helper (pinned by the legacy-equivalence tests) — the distributed
-/// coordinator and all warm-start interop now go through `RunReport`.
-#[derive(Clone, Debug)]
-pub struct RoutingState {
-    pub phi: Phi,
-    /// Final total network cost `D(Λ, φ)`.
-    pub cost: f64,
-    /// Cost *before* each iteration's update (the Fig. 7 trajectory;
-    /// `trajectory[0]` is the initial cost, last entry equals `cost`).
-    pub trajectory: Vec<f64>,
-    /// Iterations actually performed (may stop early on convergence).
-    pub iterations: usize,
-    /// Wall-clock seconds spent inside the solver.
-    pub elapsed_s: f64,
-}
+use crate::session::run::{RunReport, StopReason};
 
 /// A distributed routing algorithm: iterates routing variables φ toward the
 /// minimizer of the total network cost for a fixed allocation Λ.
@@ -71,8 +52,13 @@ pub trait Router {
     }
 
     /// Iterate up to `max_iters`, stopping early when φ stops changing
-    /// (`Line 6` of Algorithm 2: `φ^{k+1} == φ^k`).
-    fn solve(&mut self, problem: &Problem, lam: &[f64], max_iters: usize) -> RoutingState {
+    /// (`Line 6` of Algorithm 2: `φ^{k+1} == φ^k`). Returns the unified
+    /// [`RunReport`] (the legacy `RoutingState` is gone): `objective` is
+    /// the final cost, `phi` is always `Some`. Trajectories are a
+    /// streaming-run concern — attach a
+    /// [`crate::session::Trajectory`] to a
+    /// [`crate::session::RoutingRun`] when you need one.
+    fn solve(&mut self, problem: &Problem, lam: &[f64], max_iters: usize) -> RunReport {
         let mut phi = Phi::uniform(&problem.net);
         self.solve_from(problem, lam, &mut phi, max_iters)
     }
@@ -84,28 +70,31 @@ pub trait Router {
         lam: &[f64],
         phi: &mut Phi,
         max_iters: usize,
-    ) -> RoutingState {
+    ) -> RunReport {
         let t0 = std::time::Instant::now();
-        let mut trajectory = Vec::with_capacity(max_iters + 1);
         let mut iterations = 0;
+        let mut stop = StopReason::MaxIters;
         for _ in 0..max_iters {
             let prev = phi.clone();
-            let cost_before = self.step(problem, lam, phi);
-            trajectory.push(cost_before);
+            let _cost_before = self.step(problem, lam, phi);
             iterations += 1;
             if phi_close(&prev, phi, CONVERGENCE_TOL) {
+                stop = StopReason::Converged;
                 break;
             }
         }
         // engine-based final evaluation — the same fused sweep the session
         // API's `RoutingRun` report uses, so both paths stay bit-identical
         let final_cost = FlowEngine::new().evaluate_cost(problem, phi, lam);
-        trajectory.push(final_cost);
-        RoutingState {
-            phi: phi.clone(),
-            cost: final_cost,
-            trajectory,
+        RunReport {
+            algo: self.name().to_string(),
+            objective: final_cost,
+            lam: lam.to_vec(),
+            phi: Some(phi.clone()),
             iterations,
+            routing_iterations: iterations,
+            comm: self.comm_stats(),
+            stop,
             elapsed_s: t0.elapsed().as_secs_f64(),
         }
     }

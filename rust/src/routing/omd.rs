@@ -175,7 +175,7 @@ impl Router for OmdRouter {
         let mut row = std::mem::take(&mut self.scratch_row);
         let mut delta = std::mem::take(&mut self.scratch_delta);
         let csr = &net.csr;
-        for w in 0..net.n_versions() {
+        for w in 0..net.n_sessions() {
             let frac = &mut phi.frac[w];
             for r in csr.rows(w) {
                 if r.len() < 2 {
@@ -235,15 +235,23 @@ mod tests {
 
     #[test]
     fn monotone_descent() {
-        // Theorem 4's eq. (67): cost never increases for small enough η.
+        // Theorem 4's eq. (67): cost never increases for small enough η —
+        // the per-iteration series comes from a streaming run's Trajectory
+        // (solve() reports only the final objective now)
         let p = problem(1, 12);
-        let lam = p.uniform_allocation();
-        let mut router = OmdRouter::new(0.05);
-        let sol = router.solve(&p, &lam, 60);
-        for w in sol.trajectory.windows(2) {
+        let mut traj = crate::session::Trajectory::default();
+        let report = crate::session::RoutingRun::new(
+            &p,
+            Box::new(OmdRouter::new(0.05)),
+            p.uniform_allocation(),
+            60,
+        )
+        .observe(&mut traj)
+        .finish();
+        for w in traj.values.windows(2) {
             assert!(w[1] <= w[0] + 1e-9, "cost increased: {} -> {}", w[0], w[1]);
         }
-        assert!(sol.cost < sol.trajectory[0]);
+        assert!(report.objective < traj.values[0]);
     }
 
     #[test]
@@ -252,7 +260,7 @@ mod tests {
         let lam = p.uniform_allocation();
         let mut router = OmdRouter::new(0.3);
         let sol = router.solve(&p, &lam, 100);
-        sol.phi.is_feasible(&p.net, 1e-9).unwrap();
+        sol.phi.unwrap().is_feasible(&p.net, 1e-9).unwrap();
     }
 
     #[test]
@@ -262,9 +270,10 @@ mod tests {
         let lam = p.uniform_allocation();
         let mut router = OmdRouter::new(0.5);
         let sol = router.solve(&p, &lam, 3000);
-        let t = flow::node_rates(&p.net, &sol.phi, &lam);
-        let flows = flow::edge_flows(&p.net, &sol.phi, &t);
-        let m = marginal::compute(&p.net, p.cost, &sol.phi, &flows);
+        let phi = sol.phi.unwrap();
+        let t = flow::node_rates(&p.net, &phi, &lam);
+        let flows = flow::edge_flows(&p.net, &phi, &t);
+        let m = marginal::compute(&p, &phi, &flows);
         for w in 0..p.n_versions() {
             for &i in p.net.session_routers(w) {
                 if t[w][i] < 1e-6 {
@@ -273,7 +282,7 @@ mod tests {
                 let vals: Vec<f64> = p
                     .net
                     .session_out(w, i)
-                    .filter(|&e| sol.phi.frac[w][e] > 1e-4)
+                    .filter(|&e| phi.frac[w][e] > 1e-4)
                     .map(|e| m.delta(&p.net, w, e))
                     .collect();
                 if vals.len() < 2 {
@@ -294,6 +303,7 @@ mod tests {
         let mut router = OmdRouter::new(0.5);
         let sol = router.solve(&p, &lam, 100_000);
         assert!(sol.iterations < 100_000, "did not converge early");
+        assert_eq!(sol.stop, crate::session::StopReason::Converged);
     }
 
     #[test]
@@ -304,6 +314,6 @@ mod tests {
         let mut phi = Phi::uniform(&p.net);
         let a = r1.solve_from(&p, &lam, &mut phi, 10);
         let b = r1.solve_from(&p, &lam, &mut phi, 10);
-        assert!(b.cost <= a.cost + 1e-9);
+        assert!(b.objective <= a.objective + 1e-9);
     }
 }

@@ -72,7 +72,7 @@ impl OptRouter {
     pub fn solve(&self, problem: &Problem, lam: &[f64]) -> OptSolution {
         let t0 = std::time::Instant::now();
         let net = &problem.net;
-        let w_cnt = net.n_versions();
+        let w_cnt = net.n_sessions();
         assert_eq!(lam.len(), w_cnt);
 
         let paths: Vec<Vec<Path>> = (0..w_cnt)
@@ -111,7 +111,7 @@ impl OptRouter {
                     }
                 }
             }
-            let cost = crate::model::flow::total_cost(net, problem.cost, &flows);
+            let cost = crate::model::flow::total_cost(problem, &flows);
             // per-edge marginals -> per-path marginals
             let dprime: Vec<f64> = net
                 .graph
@@ -120,7 +120,7 @@ impl OptRouter {
                 .enumerate()
                 .map(|(e, edge)| {
                     if (0..w_cnt).any(|w| net.session_edges[w][e]) {
-                        problem.cost.derivative(flows[e], edge.capacity)
+                        problem.edge_kind(e).derivative(flows[e], edge.capacity)
                     } else {
                         0.0
                     }
@@ -192,7 +192,7 @@ impl OptRouter {
                 }
             }
         }
-        let cost = crate::model::flow::total_cost(net, problem.cost, &flows);
+        let cost = crate::model::flow::total_cost(problem, &flows);
         OptSolution {
             cost,
             path_flows: x,
@@ -207,7 +207,7 @@ impl OptRouter {
     pub fn to_phi(&self, problem: &Problem, sol: &OptSolution) -> Phi {
         let net = &problem.net;
         let ne = net.graph.n_edges();
-        let w_cnt = net.n_versions();
+        let w_cnt = net.n_sessions();
         let mut per_edge = vec![vec![0.0; ne]; w_cnt];
         for (w, (ps, xs)) in sol.paths.iter().zip(&sol.path_flows).enumerate() {
             for (p, &xp) in ps.iter().zip(xs) {
@@ -290,13 +290,13 @@ mod tests {
         let opt = OptRouter::new().solve(&p, &lam);
         let omd = OmdRouter::new(0.5).solve(&p, &lam, 5000);
         assert!(
-            opt.cost <= omd.cost + 1e-6,
+            opt.cost <= omd.objective + 1e-6,
             "OPT {} must lower-bound OMD {}",
             opt.cost,
-            omd.cost
+            omd.objective
         );
-        let rel = (omd.cost - opt.cost) / opt.cost;
-        assert!(rel < 5e-3, "OMD {} should match OPT {} (rel {rel})", omd.cost, opt.cost);
+        let rel = (omd.objective - opt.cost) / opt.cost;
+        assert!(rel < 5e-3, "OMD {} should match OPT {} (rel {rel})", omd.objective, opt.cost);
     }
 
     #[test]

@@ -20,10 +20,18 @@
 //! inner loop run to 1e-10, not a closed form. Computing `M` additionally
 //! costs a DP over the session DAG per iteration. Both are counted in the
 //! Fig. 9 runtime comparison.
+//!
+//! The Hessian-bound ingredients — the `h_j` max-hop DP, the per-edge
+//! second-derivative bounds, and the downstream `D̄''` maxima — live in
+//! **router-owned workspaces** sized once per topology and reused across
+//! iterations (the same zero-allocation discipline as the
+//! [`FlowEngine`]'s sweeps): the downstream bound is a reverse-topological
+//! DP (`down[j] = max over out-lanes of max(D̄''_e, down[dst(e)])`) that
+//! replaces the per-lane BFS of earlier revisions with identical results
+//! (`max` is exact — no rounding, so the values are bit-identical).
 
 use super::{project_simplex, Router};
 use crate::engine::FlowEngine;
-use crate::graph::augmented::AugmentedNet;
 use crate::model::flow::Phi;
 use crate::model::Problem;
 
@@ -37,11 +45,26 @@ pub struct SgpRouter {
     /// Inner QP solver iteration cap.
     pub qp_max_iters: usize,
     engine: FlowEngine,
+    /// Per-edge second-derivative bounds at the current operating point
+    /// (workspace; refilled every iteration, sized once per topology).
+    ddmax: Vec<f64>,
+    /// Per-node max remaining hops `h_j` of the current session (workspace).
+    hops: Vec<f64>,
+    /// Per-node downstream `D̄''` maxima of the current session (workspace).
+    down_dd: Vec<f64>,
 }
 
 impl Default for SgpRouter {
     fn default() -> Self {
-        SgpRouter { scale: 1.0, qp_tol: 1e-10, qp_max_iters: 400, engine: FlowEngine::new() }
+        SgpRouter {
+            scale: 1.0,
+            qp_tol: 1e-10,
+            qp_max_iters: 400,
+            engine: FlowEngine::new(),
+            ddmax: Vec::new(),
+            hops: Vec::new(),
+            down_dd: Vec::new(),
+        }
     }
 }
 
@@ -54,23 +77,6 @@ impl SgpRouter {
     pub fn with_workers(mut self, workers: usize) -> Self {
         self.engine.set_workers(workers);
         self
-    }
-
-    /// Max remaining hops from each node to `D_w` inside the session DAG
-    /// (the `h_j` system information of [13], recomputed every iteration).
-    fn max_hops(net: &AugmentedNet, w: usize) -> Vec<f64> {
-        let mut h = vec![0.0; net.n_nodes()];
-        for &i in net.session_topo[w].iter().rev() {
-            if i == net.dnode(w) {
-                continue;
-            }
-            let mut best = 0.0f64;
-            for e in net.session_out(w, i) {
-                best = best.max(1.0 + h[net.graph.edge(e).dst]);
-            }
-            h[i] = best;
-        }
-        h
     }
 
     /// Solve `argmin ⟨g, x−x0⟩ + ½ (x−x0)ᵀ diag(m) (x−x0)` over the simplex
@@ -113,18 +119,42 @@ impl Router for SgpRouter {
 
         // Hessian-bound ingredients ([13]'s extra system information):
         // per-edge second-derivative bounds at the current operating point
-        // plus the max-hop DP per session.
+        // plus the max-hop and downstream-D̄'' DPs per session — all into
+        // router-owned workspaces (zero allocations after the first call
+        // on a topology).
         let total: f64 = lam.iter().sum();
-        let ddmax: Vec<f64> = net
-            .graph
-            .edges()
-            .iter()
-            .map(|e| problem.cost.second_derivative_bound(flows_cap(total, e.capacity), e.capacity))
-            .collect();
+        self.ddmax.resize(net.graph.n_edges(), 0.0);
+        for (e, edge) in net.graph.edges().iter().enumerate() {
+            self.ddmax[e] = problem
+                .edge_kind(e)
+                .second_derivative_bound(flows_cap(total, edge.capacity), edge.capacity);
+        }
+        self.hops.resize(net.n_nodes(), 0.0);
+        self.down_dd.resize(net.n_nodes(), 0.0);
 
         let csr = &net.csr;
-        for w in 0..net.n_versions() {
-            let hops = Self::max_hops(net, w);
+        for w in 0..net.n_sessions() {
+            // reverse-topological DPs: max remaining hops h_j and the
+            // downstream second-derivative maxima (the per-lane bound is
+            // then max(D̄''_e, down_dd[dst(e)]) — identical to a BFS over
+            // the downstream sub-DAG, since `max` is exact)
+            self.hops.fill(0.0);
+            self.down_dd.fill(0.0);
+            let dw = net.dnode(w);
+            for &i in net.session_topo[w].iter().rev() {
+                if i == dw {
+                    continue;
+                }
+                let mut best_h = 0.0f64;
+                let mut best_dd = 0.0f64;
+                for e in net.session_out(w, i) {
+                    let dst = net.graph.edge(e).dst;
+                    best_h = best_h.max(1.0 + self.hops[dst]);
+                    best_dd = best_dd.max(self.ddmax[e].max(self.down_dd[dst]));
+                }
+                self.hops[i] = best_h;
+                self.down_dd[i] = best_dd;
+            }
             for r in csr.rows(w) {
                 let ti = self.engine.node_rate(w, r.node);
                 if ti <= 0.0 || r.len() < 2 {
@@ -139,8 +169,9 @@ impl Router for SgpRouter {
                 let mm: Vec<f64> = (r.start..r.end)
                     .map(|k| {
                         let j = csr.lane_dst[k];
-                        let dd = downstream_dd_bound(net, w, csr.lane_edge[k], &ddmax);
-                        (self.scale * ti * ti * (hops[j] + 1.0) * dd).max(1e-9)
+                        let e = csr.lane_edge[k];
+                        let dd = self.ddmax[e].max(self.down_dd[j]);
+                        (self.scale * ti * ti * (self.hops[j] + 1.0) * dd).max(1e-9)
                     })
                     .collect();
                 let x = self.solve_row_qp(&x0, &g, &mm);
@@ -160,26 +191,6 @@ fn flows_cap(total: f64, cap: f64) -> f64 {
     total.min(3.0 * cap)
 }
 
-/// Max second-derivative bound over the edge and its downstream sub-DAG
-/// (conservative; [13] uses an analogous downstream bound).
-fn downstream_dd_bound(net: &AugmentedNet, w: usize, e0: usize, ddmax: &[f64]) -> f64 {
-    let mut best = ddmax[e0];
-    // bounded BFS over the session DAG from dst(e0)
-    let mut stack = vec![net.graph.edge(e0).dst];
-    let mut seen = vec![false; net.n_nodes()];
-    while let Some(u) = stack.pop() {
-        if seen[u] {
-            continue;
-        }
-        seen[u] = true;
-        for e in net.session_out(w, u) {
-            best = best.max(ddmax[e]);
-            stack.push(net.graph.edge(e).dst);
-        }
-    }
-    best
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -197,12 +208,18 @@ mod tests {
     #[test]
     fn descends_and_stays_feasible() {
         let p = problem(1);
-        let lam = p.uniform_allocation();
-        let mut r = SgpRouter::new();
-        let sol = r.solve(&p, &lam, 50);
-        assert!(sol.cost < sol.trajectory[0], "{:?}", &sol.trajectory[..5]);
-        sol.phi.is_feasible(&p.net, 1e-7).unwrap();
-        for w in sol.trajectory.windows(2) {
+        let mut traj = crate::session::Trajectory::default();
+        let report = crate::session::RoutingRun::new(
+            &p,
+            Box::new(SgpRouter::new()),
+            p.uniform_allocation(),
+            50,
+        )
+        .observe(&mut traj)
+        .finish();
+        assert!(report.objective < traj.values[0], "{:?}", &traj.values[..5]);
+        report.phi.unwrap().is_feasible(&p.net, 1e-7).unwrap();
+        for w in traj.values.windows(2) {
             assert!(w[1] <= w[0] + 1e-6, "SGP cost increased {} -> {}", w[0], w[1]);
         }
     }
@@ -214,8 +231,8 @@ mod tests {
         let lam = p.uniform_allocation();
         let omd = OmdRouter::new(0.5).solve(&p, &lam, 4000);
         let sgp = SgpRouter::new().solve(&p, &lam, 4000);
-        let rel = (omd.cost - sgp.cost).abs() / omd.cost;
-        assert!(rel < 5e-3, "OMD {} vs SGP {}", omd.cost, sgp.cost);
+        let rel = (omd.objective - sgp.objective).abs() / omd.objective;
+        assert!(rel < 5e-3, "OMD {} vs SGP {}", omd.objective, sgp.objective);
     }
 
     #[test]

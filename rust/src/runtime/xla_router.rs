@@ -95,8 +95,8 @@ mod tests {
         let lam = p.uniform_allocation();
         let xla = router.solve(&p, &lam, 200);
         let native = OmdRouter::new(0.3).solve(&p, &lam, 200);
-        let rel = (xla.cost - native.cost).abs() / native.cost;
-        assert!(rel < 5e-3, "xla {} vs native {}", xla.cost, native.cost);
-        xla.phi.is_feasible(&p.net, 1e-3).unwrap();
+        let rel = (xla.objective - native.objective).abs() / native.objective;
+        assert!(rel < 5e-3, "xla {} vs native {}", xla.objective, native.objective);
+        xla.phi.unwrap().is_feasible(&p.net, 1e-3).unwrap();
     }
 }

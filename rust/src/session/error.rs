@@ -22,6 +22,19 @@ pub enum SessionError {
     UnknownUtility { name: String },
     /// No link-cost family known under this name.
     UnknownCost { name: String },
+    /// A task class names a source device that does not exist in the
+    /// topology.
+    UnknownSourceNode { class: String, node: usize },
+    /// A node spec pins a DNN version that cannot be satisfied (out of
+    /// range, or the pins leave a version with no hosting device).
+    UnsupportedVersion { what: String },
+    /// A task class's source set cannot reach a version's destination: the
+    /// virtual source ends up with no usable admission lane in that
+    /// session's DAG.
+    DisconnectedSource { class: String, version: usize },
+    /// A class's rate trace is malformed or inconsistent with the
+    /// scenario horizon.
+    InvalidTrace { class: String, what: String },
     /// A scenario parameter is out of its valid range.
     InvalidScenario { what: String },
 }
@@ -54,6 +67,22 @@ impl fmt::Display for SessionError {
                 "unknown cost family '{name}' (known: {})",
                 crate::model::cost::CostKind::NAMES.join(", ")
             ),
+            SessionError::UnknownSourceNode { class, node } => write!(
+                f,
+                "task class '{class}' lists source device {node}, which does not exist \
+                 in the topology"
+            ),
+            SessionError::UnsupportedVersion { what } => {
+                write!(f, "unsupported version placement: {what}")
+            }
+            SessionError::DisconnectedSource { class, version } => write!(
+                f,
+                "task class '{class}' cannot reach version {version}'s destination: \
+                 the source has no usable admission lane in that session's DAG"
+            ),
+            SessionError::InvalidTrace { class, what } => {
+                write!(f, "invalid rate trace for class '{class}': {what}")
+            }
             SessionError::InvalidScenario { what } => write!(f, "invalid scenario: {what}"),
         }
     }

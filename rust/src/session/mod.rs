@@ -5,17 +5,25 @@
 //! (GS-OMA / OMAD) and routing (OMD-RT / SGP / GP / OPT) composed over one
 //! flow model. This module is the single front door to that machinery:
 //!
-//! 1. **[`Scenario`]** — a builder describing an experiment (topology,
-//!    rates, cost/utility families, hyper-parameters, seed). Validation is
-//!    fallible end-to-end: [`Scenario::build`] returns `Result` instead of
-//!    panicking deep inside problem construction.
-//! 2. **[`Session`]** — a validated scenario with its [`Problem`] instance
+//! 1. **[`spec::ScenarioSpec`]** — the declarative scenario: heterogeneous
+//!    node capacities, explicit or generated edge lists (with per-edge
+//!    cost families), and a list of task classes — each with its own
+//!    source set, rate (constant or trace), and utility family. Specs
+//!    round-trip through JSON (`--scenario file.json`).
+//! 2. **[`Scenario`]** — the ergonomic builder (scalar knobs + class/node
+//!    sugar) that lowers into a spec. Validation is fallible end-to-end:
+//!    [`Scenario::build`] returns `Result` instead of panicking deep
+//!    inside problem construction.
+//! 3. **[`Session`]** — a validated spec with its [`Problem`] instance
 //!    built. Owns oracle selection and solver instantiation by name via
 //!    the [`registry`].
-//! 3. **[`RoutingRun`] / [`AllocationRun`]** — resumable streaming
+//! 4. **[`RoutingRun`] / [`AllocationRun`]** — resumable streaming
 //!    execution: `step()` advances one iteration, [`run::StopRule`]s decide
 //!    termination, [`run::Observer`]s record trajectories and telemetry,
 //!    and the result is a unified [`RunReport`].
+//! 5. **[`suite::Suite`]** — a `(scenario × solver × seed)` grid executed
+//!    in parallel on the engine worker pool, streaming `RunReport`s into a
+//!    [`suite::SuiteReport`].
 //!
 //! ```no_run
 //! use jowr::prelude::*;
@@ -36,44 +44,57 @@
 pub mod error;
 pub mod registry;
 pub mod run;
+pub mod spec;
+pub mod suite;
 
 pub use error::SessionError;
 pub use registry::Hyper;
 pub use run::{
     AllocationRun, DistributedRun, RoutingRun, RunReport, StepInfo, StopReason, Trajectory,
 };
+pub use spec::ScenarioSpec;
+pub use suite::{Suite, SuiteReport};
 
-use crate::allocation::{AnalyticOracle, SingleStepOracle, UtilityOracle};
 use crate::allocation::Allocator;
+use crate::allocation::{AnalyticOracle, SingleStepOracle, UtilityOracle};
 use crate::config::ExperimentConfig;
+use crate::coordinator::events::EventSchedule;
 use crate::model::cost::CostKind;
 use crate::model::utility::{family, Utility};
 use crate::model::Problem;
 use crate::routing::Router;
-use crate::util::rng::Rng;
+use spec::{ClassSpec, NodeSpec, RateSpec};
 
-/// Builder for a JOWR experiment scenario. Setters are chainable; nothing
-/// is validated until [`Scenario::build`].
+/// Builder for a JOWR experiment scenario: the paper's scalar knobs plus
+/// sugar for heterogeneous nodes and multi-class workloads. Setters are
+/// chainable; nothing is validated until [`Scenario::build`], which lowers
+/// the builder into a [`ScenarioSpec`] (see [`Scenario::into_spec`]).
 #[derive(Clone, Debug)]
 pub struct Scenario {
     cfg: ExperimentConfig,
     cost_name: Option<String>,
+    classes: Vec<ClassSpec>,
+    nodes: Vec<NodeSpec>,
+    horizon: Option<usize>,
 }
 
 impl Scenario {
     /// The paper's Section-IV defaults: Connected-ER(25, 0.2), λ=60, W=3,
     /// C̄=10, `D_ij = exp(F/C)`, log utilities, seed 42.
     pub fn paper_default() -> Self {
-        Scenario { cfg: ExperimentConfig::paper_default(), cost_name: None }
+        Self::from_config(ExperimentConfig::paper_default())
     }
 
-    /// Start from an existing config (e.g. loaded from a JSON file).
+    /// Start from an existing config (e.g. loaded from a JSON file). The
+    /// lowering into the spec is lossless: every config field lands in the
+    /// spec (unknown *file* fields are warned about by
+    /// `ExperimentConfig::from_json` itself).
     pub fn from_config(cfg: ExperimentConfig) -> Self {
-        Scenario { cfg, cost_name: None }
+        Scenario { cfg, cost_name: None, classes: Vec::new(), nodes: Vec::new(), horizon: None }
     }
 
     /// Topology generator: `"er"` or a named topology
-    /// (`"abilene"`, `"tree"`, `"fog"`, `"geant"`).
+    /// (`"abilene"`, `"tree"`, `"fog"`, `"geant"`, `"line"`, `"star"`).
     pub fn topology(mut self, name: &str) -> Self {
         self.cfg.topology = name.to_string();
         self
@@ -103,7 +124,8 @@ impl Scenario {
         self
     }
 
-    /// Total task input rate λ.
+    /// Total task input rate λ (of the default class; adding explicit
+    /// classes via [`Scenario::class`] supersedes it).
     pub fn rate(mut self, total: f64) -> Self {
         self.cfg.total_rate = total;
         self
@@ -124,9 +146,68 @@ impl Scenario {
     }
 
     /// Utility family by name (`"linear"`, `"sqrt"`, `"quadratic"`,
-    /// `"log"`); validated at [`Scenario::build`].
+    /// `"log"`) for the default class; validated at [`Scenario::build`].
     pub fn utility(mut self, name: &str) -> Self {
         self.cfg.utility = name.to_string();
+        self
+    }
+
+    /// Add a task class with a constant rate (multi-class sugar): its own
+    /// utility family and source-device set (empty sources = the hosts of
+    /// version 0). The first call replaces the implicit default class.
+    pub fn class(mut self, name: &str, utility: &str, rate: f64, sources: &[usize]) -> Self {
+        self.classes.push(ClassSpec {
+            name: name.to_string(),
+            utility: utility.to_string(),
+            rate: RateSpec::Constant(rate),
+            sources: sources.to_vec(),
+        });
+        self
+    }
+
+    /// Add a task class with a piecewise-constant rate trace
+    /// (`[(outer_iteration, rate), ...]`, first point at iteration 0);
+    /// requires a [`Scenario::horizon`].
+    pub fn class_trace(
+        mut self,
+        name: &str,
+        utility: &str,
+        trace: &[(usize, f64)],
+        sources: &[usize],
+    ) -> Self {
+        self.classes.push(ClassSpec {
+            name: name.to_string(),
+            utility: utility.to_string(),
+            rate: RateSpec::Trace(trace.to_vec()),
+            sources: sources.to_vec(),
+        });
+        self
+    }
+
+    /// Pin device `id`'s computing capacity (heterogeneous-node sugar).
+    pub fn node_compute(mut self, id: usize, capacity: f64) -> Self {
+        self.node_mut(id).compute_capacity = Some(capacity);
+        self
+    }
+
+    /// Pin the DNN version device `id` hosts.
+    pub fn pin_version(mut self, id: usize, version: usize) -> Self {
+        self.node_mut(id).version = Some(version);
+        self
+    }
+
+    fn node_mut(&mut self, id: usize) -> &mut NodeSpec {
+        if let Some(k) = self.nodes.iter().position(|n| n.id == id) {
+            &mut self.nodes[k]
+        } else {
+            self.nodes.push(NodeSpec { id, compute_capacity: None, version: None });
+            self.nodes.last_mut().unwrap()
+        }
+    }
+
+    /// Outer-iteration horizon (required when any class uses a rate trace).
+    pub fn horizon(mut self, h: usize) -> Self {
+        self.horizon = Some(h);
         self
     }
 
@@ -162,62 +243,45 @@ impl Scenario {
         self
     }
 
-    /// Validate every field and build the problem instance.
-    pub fn build(mut self) -> Result<Session, SessionError> {
+    /// Lower the builder into the declarative [`ScenarioSpec`] it
+    /// describes (without building the problem). Builder sugar and spec
+    /// construction are interchangeable: `builder.build()` ≡
+    /// `builder.into_spec()?.build()`.
+    pub fn into_spec(self) -> Result<ScenarioSpec, SessionError> {
+        let mut cfg = self.cfg;
         if let Some(name) = &self.cost_name {
-            self.cfg.cost = CostKind::parse(name)
+            cfg.cost = CostKind::parse(name)
                 .ok_or_else(|| SessionError::UnknownCost { name: name.clone() })?;
         }
-        let cfg = self.cfg;
-        if cfg.n_versions == 0 {
-            return Err(invalid("n_versions must be >= 1"));
+        if !(cfg.total_rate > 0.0) && self.classes.is_empty() {
+            return Err(SessionError::InvalidScenario {
+                what: format!("total_rate must be > 0 (got {})", cfg.total_rate),
+            });
         }
-        if !(cfg.total_rate > 0.0) {
-            return Err(invalid(&format!("total_rate must be > 0 (got {})", cfg.total_rate)));
+        let mut spec = ScenarioSpec::from_config(&cfg);
+        if !self.classes.is_empty() {
+            spec.classes = self.classes;
         }
-        if !(cfg.cap_mean > 0.0) {
-            return Err(invalid(&format!("cap_mean must be > 0 (got {})", cfg.cap_mean)));
-        }
-        if cfg.topology == "er" {
-            if cfg.n_nodes < 2 {
-                return Err(invalid(&format!("ER topology needs >= 2 nodes (got {})", cfg.n_nodes)));
-            }
-            if !(cfg.p_link > 0.0 && cfg.p_link <= 1.0) {
-                return Err(invalid(&format!("p_link must be in (0, 1] (got {})", cfg.p_link)));
-            }
-        }
-        if !(cfg.eta_routing > 0.0) {
-            return Err(invalid(&format!("eta_routing must be > 0 (got {})", cfg.eta_routing)));
-        }
-        if !(cfg.eta_alloc > 0.0) {
-            return Err(invalid(&format!("eta_alloc must be > 0 (got {})", cfg.eta_alloc)));
-        }
-        // the allocation projection onto [δ, λ−δ]^W requires W·δ ≤ λ
-        if !(cfg.delta > 0.0 && cfg.n_versions as f64 * cfg.delta <= cfg.total_rate) {
-            return Err(invalid(&format!(
-                "delta must satisfy 0 < n_versions*delta <= total_rate (delta {}, W {}, rate {})",
-                cfg.delta, cfg.n_versions, cfg.total_rate
-            )));
-        }
-        // utility families are consumed lazily by allocation runs, but an
-        // unknown name should fail loudly here, not mid-experiment
-        family(&cfg.utility, cfg.n_versions, cfg.total_rate)
-            .ok_or_else(|| SessionError::UnknownUtility { name: cfg.utility.clone() })?;
-        let mut rng = Rng::seed_from(cfg.seed);
-        let problem = cfg.build_problem(&mut rng)?;
-        Ok(Session { cfg, problem })
+        spec.nodes = self.nodes;
+        spec.horizon = self.horizon;
+        Ok(spec)
     }
-}
 
-fn invalid(what: &str) -> SessionError {
-    SessionError::InvalidScenario { what: what.to_string() }
+    /// Validate every field and build the problem instance.
+    pub fn build(self) -> Result<Session, SessionError> {
+        self.into_spec()?.build()
+    }
 }
 
 /// A validated scenario with its problem instance built: the factory for
 /// solvers, oracles, and streaming runs.
 #[derive(Clone, Debug)]
 pub struct Session {
+    /// Scalar compatibility view of the spec (total rate = sum of class
+    /// rates, utility = the first class's family).
     pub cfg: ExperimentConfig,
+    /// The declarative scenario this session was built from.
+    pub spec: ScenarioSpec,
     pub problem: Problem,
 }
 
@@ -227,15 +291,32 @@ impl Session {
         Hyper::from_config(&self.cfg)
     }
 
-    /// The paper's allocation initializer `Λ¹ = (λ/W)·1`.
+    /// The paper's allocation initializer — per class, `Λ¹ = (λ_c/W_c)·1`.
     pub fn uniform_allocation(&self) -> Vec<f64> {
         self.problem.uniform_allocation()
     }
 
-    /// The (hidden) ground-truth utility functions for this scenario.
+    /// The rate-trace breakpoints of this scenario compiled to scheduled
+    /// [`crate::coordinator::events::NetworkEvent::ClassRate`] events
+    /// (empty when every class rate is constant).
+    pub fn events(&self) -> EventSchedule {
+        self.spec.events()
+    }
+
+    /// The (hidden) ground-truth utility functions for this scenario, one
+    /// per session: class-major, each class's family instantiated at that
+    /// class's rate.
     pub fn utilities(&self) -> Result<Vec<Utility>, SessionError> {
-        family(&self.cfg.utility, self.cfg.n_versions, self.cfg.total_rate)
-            .ok_or_else(|| SessionError::UnknownUtility { name: self.cfg.utility.clone() })
+        let w_cnt = self.spec.n_versions;
+        let mut out = Vec::with_capacity(self.problem.n_sessions());
+        for (class, &rate) in self.spec.classes.iter().zip(&self.problem.workload.class_rates)
+        {
+            let us = family(&class.utility, w_cnt, rate).ok_or_else(|| {
+                SessionError::UnknownUtility { name: class.utility.clone() }
+            })?;
+            out.extend(us);
+        }
+        Ok(out)
     }
 
     /// Instantiate a router by registry name with this session's
@@ -307,16 +388,22 @@ impl Session {
         algo: &str,
         max_outer: usize,
     ) -> Result<AllocationRun<'o>, SessionError> {
-        // full feasibility of the projection box [δ, λ−δ]^W: the lower
-        // bound needs W·δ ≤ λ (checked at build), the upper needs
-        // λ ≤ W·(λ−δ) — which rules out W = 1 for any δ > 0
-        let (w, total, delta) = (self.cfg.n_versions as f64, self.cfg.total_rate, self.cfg.delta);
-        if total > w * (total - delta) {
-            let what = format!(
-                "allocation domain is infeasible: delta {delta}, W {w}, rate {total} \
-                 violate rate <= W*(rate - delta); reduce delta or add versions"
-            );
-            return Err(SessionError::InvalidScenario { what });
+        // full feasibility of each class's projection box [δ, λ_c−δ]^W:
+        // the lower bound needs W·δ ≤ λ_c (checked at build), the upper
+        // needs λ_c ≤ W·(λ_c−δ) — which rules out W = 1 for any δ > 0
+        let delta = self.cfg.delta;
+        for (c, &(s0, s1)) in self.problem.workload.class_spans.iter().enumerate() {
+            let name = &self.problem.workload.class_names[c];
+            let w = (s1 - s0) as f64;
+            let rate = self.problem.workload.class_rates[c];
+            if rate > w * (rate - delta) {
+                let what = format!(
+                    "allocation domain of class '{name}' is infeasible: delta {delta}, \
+                     W {w}, rate {rate} violate rate <= W*(rate - delta); reduce delta \
+                     or add versions"
+                );
+                return Err(SessionError::InvalidScenario { what });
+            }
         }
         Ok(AllocationRun::new(self.allocator(algo)?, self.oracle_for(algo)?, max_outer))
     }
@@ -331,6 +418,7 @@ mod tests {
         let s = Scenario::paper_default().build().unwrap();
         assert_eq!(s.problem.net.n_real, 25);
         assert_eq!(s.cfg.n_versions, 3);
+        assert_eq!(s.spec.classes.len(), 1);
     }
 
     #[test]
@@ -376,6 +464,7 @@ mod tests {
     fn cost_named_is_applied() {
         let s = Scenario::paper_default().cost_named("queue").build().unwrap();
         assert_eq!(s.cfg.cost, CostKind::Queue);
+        assert_eq!(s.spec.cost, CostKind::Queue);
     }
 
     #[test]
@@ -389,5 +478,85 @@ mod tests {
         let a = Scenario::paper_default().seed(9).build().unwrap();
         let b = Scenario::paper_default().seed(9).build().unwrap();
         assert_eq!(a.problem.net.graph.n_edges(), b.problem.net.graph.n_edges());
+    }
+
+    #[test]
+    fn builder_sugar_equals_spec_construction() {
+        // the same scenario described via builder sugar and via a
+        // hand-built spec must produce identical problems
+        let by_builder = Scenario::paper_default()
+            .versions(2)
+            .delta(0.2)
+            .class("video", "log", 40.0, &[0, 1])
+            .class("audio", "sqrt", 20.0, &[])
+            .node_compute(2, 50.0)
+            .seed(5)
+            .build()
+            .unwrap();
+        let mut spec = ScenarioSpec::paper_default();
+        spec.n_versions = 2;
+        spec.delta = 0.2;
+        spec.seed = 5;
+        spec.classes = vec![
+            spec::ClassSpec {
+                name: "video".into(),
+                utility: "log".into(),
+                rate: spec::RateSpec::Constant(40.0),
+                sources: vec![0, 1],
+            },
+            spec::ClassSpec {
+                name: "audio".into(),
+                utility: "sqrt".into(),
+                rate: spec::RateSpec::Constant(20.0),
+                sources: vec![],
+            },
+        ];
+        spec.nodes =
+            vec![spec::NodeSpec { id: 2, compute_capacity: Some(50.0), version: None }];
+        let by_spec = spec.build().unwrap();
+        assert_eq!(by_builder.spec, by_spec.spec);
+        assert_eq!(
+            by_builder.problem.net.csr.lane_edge,
+            by_spec.problem.net.csr.lane_edge
+        );
+        for (a, b) in by_builder
+            .problem
+            .net
+            .graph
+            .edges()
+            .iter()
+            .zip(by_spec.problem.net.graph.edges())
+        {
+            assert_eq!(a, b);
+        }
+        assert_eq!(by_builder.problem.workload, by_spec.problem.workload);
+    }
+
+    #[test]
+    fn multi_class_session_runs_and_allocates() {
+        let s = Scenario::paper_default()
+            .versions(2)
+            .delta(0.2)
+            .class("video", "log", 40.0, &[])
+            .class("audio", "sqrt", 20.0, &[])
+            .seed(3)
+            .build()
+            .unwrap();
+        assert_eq!(s.problem.n_sessions(), 4);
+        let us = s.utilities().unwrap();
+        assert_eq!(us.len(), 4);
+        let report = s.routing_run("omd", 10).unwrap().finish();
+        assert!(report.objective.is_finite());
+        let report = s.allocation_run("omad", 3).unwrap().finish();
+        // per-class conservation
+        let wl = &s.problem.workload;
+        for (c, &(a, b)) in wl.class_spans.iter().enumerate() {
+            let sum: f64 = report.lam[a..b].iter().sum();
+            assert!(
+                (sum - wl.class_rates[c]).abs() < 1e-6,
+                "class {c}: {sum} vs {}",
+                wl.class_rates[c]
+            );
+        }
     }
 }

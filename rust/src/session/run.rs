@@ -439,9 +439,7 @@ impl<'a> AllocationRun<'a> {
         oracle: Box<dyn UtilityOracle>,
         max_outer: usize,
     ) -> Self {
-        let w_cnt = oracle.n_versions();
-        let total = oracle.total_rate();
-        let lam = vec![total / w_cnt as f64; w_cnt];
+        let lam = oracle.uniform_allocation();
         let tol = allocator.stop_tol();
         AllocationRun {
             allocator,

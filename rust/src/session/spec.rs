@@ -1,0 +1,1252 @@
+//! **`ScenarioSpec`** — the declarative scenario layer.
+//!
+//! A spec is a *typed description* of a JOWR experiment that goes beyond
+//! the scalar knobs of [`crate::config::ExperimentConfig`]:
+//!
+//! * **heterogeneous nodes** — per-device compute capacities and optional
+//!   pinned DNN versions ([`NodeSpec`]);
+//! * **explicit or generated edge lists** — Connected-ER, any named
+//!   topology, or a hand-written edge list with per-edge capacities and
+//!   per-edge link-cost families ([`TopologySpec`], [`EdgeSpec`]);
+//! * **multiple task classes** — each with its own source-device set,
+//!   admitted rate (constant or a piecewise-constant trace over outer
+//!   iterations), and utility family ([`ClassSpec`], [`RateSpec`]).
+//!
+//! Specs round-trip through JSON ([`ScenarioSpec::to_json`] /
+//! [`ScenarioSpec::from_json`] / [`ScenarioSpec::from_file`]) — this is
+//! what the CLI's `--scenario file.json` and the committed gallery under
+//! `examples/scenarios/` load — and validate into a
+//! [`crate::session::Session`] via [`ScenarioSpec::build`], reporting
+//! precise [`SessionError`] variants (unknown source node, unsupported
+//! version pin, disconnected source, trace/horizon mismatch) instead of
+//! panicking mid-construction.
+//!
+//! The ergonomic [`crate::session::Scenario`] builder is sugar that lowers
+//! into a spec; a single-class spec built from the paper's scalar knobs
+//! produces a bit-identical problem to the pre-spec construction path.
+
+use std::path::Path;
+
+use super::error::SessionError;
+use super::Session;
+use crate::config::ExperimentConfig;
+use crate::coordinator::events::{EventSchedule, NetworkEvent};
+use crate::graph::augmented::{AugmentedNet, Placement};
+use crate::graph::{topologies, DiGraph};
+use crate::model::cost::CostKind;
+use crate::model::utility;
+use crate::model::{Problem, Workload};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// How the real device network is constructed.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TopologySpec {
+    /// Connectivity-guaranteed Erdős–Rényi (the paper's default family).
+    Er { n_nodes: usize, p_link: f64 },
+    /// A named generator from [`topologies::by_name`]
+    /// (`abilene`, `tree`, `fog`, `geant`, `line`, `star`).
+    Named { name: String },
+    /// An explicit edge list (each entry optionally bidirectional, with
+    /// its own capacity and cost family).
+    Explicit { n_nodes: usize, edges: Vec<EdgeSpec> },
+}
+
+/// One explicit link of a [`TopologySpec::Explicit`] topology.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EdgeSpec {
+    pub src: usize,
+    pub dst: usize,
+    pub capacity: f64,
+    /// `true` (default) adds the reverse edge with the same capacity/cost.
+    pub bidirectional: bool,
+    /// Per-edge cost family (`None` = the scenario default).
+    pub cost: Option<CostKind>,
+}
+
+/// Per-device overrides: explicit compute capacity and/or a pinned hosted
+/// version. Devices without an entry draw capacity from the `cap_mean`
+/// distribution and a uniform-random version, exactly like the paper.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NodeSpec {
+    /// Real device index (0-based).
+    pub id: usize,
+    /// Computing capacity of the device's virtual computation link
+    /// (`None` = drawn from the capacity distribution).
+    pub compute_capacity: Option<f64>,
+    /// Pinned hosted DNN version (`None` = drawn uniformly).
+    pub version: Option<usize>,
+}
+
+/// A task class's admitted rate: constant, or a piecewise-constant trace
+/// `[(outer_iteration, rate), ...]` starting at iteration 0. Breakpoints
+/// beyond 0 compile into [`NetworkEvent::ClassRate`] events
+/// (see [`ScenarioSpec::events`]).
+#[derive(Clone, Debug, PartialEq)]
+pub enum RateSpec {
+    Constant(f64),
+    Trace(Vec<(usize, f64)>),
+}
+
+impl RateSpec {
+    /// The rate in effect at outer iteration `t`.
+    pub fn at(&self, t: usize) -> f64 {
+        match self {
+            RateSpec::Constant(r) => *r,
+            RateSpec::Trace(points) => points
+                .iter()
+                .take_while(|&&(t0, _)| t0 <= t)
+                .last()
+                .map(|&(_, r)| r)
+                .unwrap_or(0.0),
+        }
+    }
+
+    /// The rate at iteration 0 (what the built [`Problem`] starts with).
+    pub fn initial(&self) -> f64 {
+        self.at(0)
+    }
+
+    /// The smallest rate the trace ever admits (feasibility checks).
+    pub fn min_rate(&self) -> f64 {
+        match self {
+            RateSpec::Constant(r) => *r,
+            RateSpec::Trace(points) => {
+                points.iter().map(|&(_, r)| r).fold(f64::INFINITY, f64::min)
+            }
+        }
+    }
+}
+
+/// One task class: a named workload stream with its own sources, rate, and
+/// (hidden) utility family.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClassSpec {
+    pub name: String,
+    /// Utility family name (`linear`, `sqrt`, `quadratic`, `log`).
+    pub utility: String,
+    pub rate: RateSpec,
+    /// Source device ids traffic of this class is admitted through
+    /// (empty = the hosts of version 0, the paper's layout).
+    pub sources: Vec<usize>,
+}
+
+/// The full declarative scenario. See the [module docs](self).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub topology: TopologySpec,
+    /// Number of DNN versions W.
+    pub n_versions: usize,
+    /// Mean capacity C̄ for drawn link/compute capacities.
+    pub cap_mean: f64,
+    /// Default link cost family (per-edge overrides via [`EdgeSpec`]).
+    pub cost: CostKind,
+    /// Sparse per-device overrides.
+    pub nodes: Vec<NodeSpec>,
+    /// Task classes (at least one).
+    pub classes: Vec<ClassSpec>,
+    /// Outer-iteration horizon; required when any class rate is a trace.
+    pub horizon: Option<usize>,
+    pub eta_routing: f64,
+    pub eta_alloc: f64,
+    pub delta: f64,
+    pub seed: u64,
+    pub workers: usize,
+}
+
+impl ScenarioSpec {
+    /// The paper's Section-IV default as a single-class spec.
+    pub fn paper_default() -> Self {
+        Self::from_config(&ExperimentConfig::paper_default())
+    }
+
+    /// Lossless lowering of the scalar-knob config: every field of the
+    /// config maps onto the spec (one class named `default`, sourced at
+    /// the hosts of version 0, at the total rate with the config's
+    /// utility family).
+    pub fn from_config(cfg: &ExperimentConfig) -> Self {
+        let topology = if cfg.topology == "er" {
+            TopologySpec::Er { n_nodes: cfg.n_nodes, p_link: cfg.p_link }
+        } else {
+            TopologySpec::Named { name: cfg.topology.clone() }
+        };
+        ScenarioSpec {
+            name: "scenario".to_string(),
+            topology,
+            n_versions: cfg.n_versions,
+            cap_mean: cfg.cap_mean,
+            cost: cfg.cost,
+            nodes: Vec::new(),
+            classes: vec![ClassSpec {
+                name: "default".to_string(),
+                utility: cfg.utility.clone(),
+                rate: RateSpec::Constant(cfg.total_rate),
+                sources: Vec::new(),
+            }],
+            horizon: None,
+            eta_routing: cfg.eta_routing,
+            eta_alloc: cfg.eta_alloc,
+            delta: cfg.delta,
+            seed: cfg.seed,
+            workers: cfg.workers,
+        }
+    }
+
+    /// Best-effort scalar view (the compatibility `Session::cfg`):
+    /// `total_rate` is the sum of initial class rates, `utility` the first
+    /// class's family.
+    pub fn to_config(&self) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::paper_default();
+        match &self.topology {
+            TopologySpec::Er { n_nodes, p_link } => {
+                cfg.topology = "er".to_string();
+                cfg.n_nodes = *n_nodes;
+                cfg.p_link = *p_link;
+            }
+            TopologySpec::Named { name } => {
+                cfg.topology = name.clone();
+            }
+            TopologySpec::Explicit { n_nodes, .. } => {
+                cfg.topology = "explicit".to_string();
+                cfg.n_nodes = *n_nodes;
+            }
+        }
+        cfg.n_versions = self.n_versions;
+        cfg.cap_mean = self.cap_mean;
+        cfg.cost = self.cost;
+        cfg.total_rate = self.classes.iter().map(|c| c.rate.initial()).sum();
+        cfg.utility =
+            self.classes.first().map(|c| c.utility.clone()).unwrap_or_else(|| "log".into());
+        cfg.eta_routing = self.eta_routing;
+        cfg.eta_alloc = self.eta_alloc;
+        cfg.delta = self.delta;
+        cfg.seed = self.seed;
+        cfg.workers = self.workers;
+        cfg
+    }
+
+    /// The rate-trace breakpoints compiled to scheduled
+    /// [`NetworkEvent::ClassRate`] events (empty for all-constant rates).
+    pub fn events(&self) -> EventSchedule {
+        let mut schedule = EventSchedule::new();
+        for (c, class) in self.classes.iter().enumerate() {
+            if let RateSpec::Trace(points) = &class.rate {
+                for &(t, rate) in points {
+                    if t > 0 {
+                        schedule = schedule.at(t, NetworkEvent::ClassRate { class: c, rate });
+                    }
+                }
+            }
+        }
+        schedule
+    }
+
+    /// Structural validation that needs no RNG or graph construction.
+    /// [`ScenarioSpec::build`] calls this first, then adds the
+    /// graph-dependent checks (source-node existence, version coverage,
+    /// per-session connectivity).
+    pub fn validate(&self) -> Result<(), SessionError> {
+        if self.n_versions == 0 {
+            return Err(invalid("n_versions must be >= 1"));
+        }
+        if !(self.cap_mean > 0.0) {
+            return Err(invalid(&format!("cap_mean must be > 0 (got {})", self.cap_mean)));
+        }
+        if !(self.eta_routing > 0.0) {
+            return Err(invalid(&format!(
+                "eta_routing must be > 0 (got {})",
+                self.eta_routing
+            )));
+        }
+        if !(self.eta_alloc > 0.0) {
+            return Err(invalid(&format!("eta_alloc must be > 0 (got {})", self.eta_alloc)));
+        }
+        match &self.topology {
+            TopologySpec::Er { n_nodes, p_link } => {
+                if *n_nodes < 2 {
+                    return Err(invalid(&format!(
+                        "ER topology needs >= 2 nodes (got {n_nodes})"
+                    )));
+                }
+                if !(*p_link > 0.0 && *p_link <= 1.0) {
+                    return Err(invalid(&format!(
+                        "p_link must be in (0, 1] (got {p_link})"
+                    )));
+                }
+            }
+            TopologySpec::Named { name } => {
+                if name == "er" || !topologies::KNOWN_NAMES.contains(&name.as_str()) {
+                    return Err(SessionError::UnknownTopology { name: name.clone() });
+                }
+            }
+            TopologySpec::Explicit { n_nodes, edges } => {
+                if *n_nodes < 2 {
+                    return Err(invalid(&format!(
+                        "explicit topology needs >= 2 nodes (got {n_nodes})"
+                    )));
+                }
+                if edges.is_empty() {
+                    return Err(invalid("explicit topology has no edges"));
+                }
+                for (k, e) in edges.iter().enumerate() {
+                    if e.src >= *n_nodes || e.dst >= *n_nodes {
+                        return Err(invalid(&format!(
+                            "edge {k} ({} -> {}) is out of range for {n_nodes} nodes",
+                            e.src, e.dst
+                        )));
+                    }
+                    if e.src == e.dst {
+                        return Err(invalid(&format!("edge {k} is a self-loop ({})", e.src)));
+                    }
+                    if !(e.capacity > 0.0) {
+                        return Err(invalid(&format!(
+                            "edge {k} capacity must be > 0 (got {})",
+                            e.capacity
+                        )));
+                    }
+                }
+                // duplicate directed pairs would trip the graph's
+                // debug assertions much later; reject them here
+                let mut pairs: Vec<(usize, usize)> = Vec::new();
+                for e in edges {
+                    pairs.push((e.src, e.dst));
+                    if e.bidirectional {
+                        pairs.push((e.dst, e.src));
+                    }
+                }
+                pairs.sort_unstable();
+                if pairs.windows(2).any(|w| w[0] == w[1]) {
+                    return Err(invalid("explicit topology has duplicate directed edges"));
+                }
+            }
+        }
+        // node overrides
+        let n_declared = match &self.topology {
+            TopologySpec::Er { n_nodes, .. } | TopologySpec::Explicit { n_nodes, .. } => {
+                Some(*n_nodes)
+            }
+            TopologySpec::Named { .. } => None, // node count known at build
+        };
+        let mut ids: Vec<usize> = self.nodes.iter().map(|n| n.id).collect();
+        ids.sort_unstable();
+        if ids.windows(2).any(|w| w[0] == w[1]) {
+            return Err(invalid("duplicate node-spec ids"));
+        }
+        for node in &self.nodes {
+            if let Some(n) = n_declared {
+                if node.id >= n {
+                    return Err(invalid(&format!(
+                        "node spec id {} out of range for {n} nodes",
+                        node.id
+                    )));
+                }
+            }
+            if let Some(cap) = node.compute_capacity {
+                if !(cap > 0.0) {
+                    return Err(invalid(&format!(
+                        "node {} compute_capacity must be > 0 (got {cap})",
+                        node.id
+                    )));
+                }
+            }
+            if let Some(v) = node.version {
+                if v >= self.n_versions {
+                    return Err(SessionError::UnsupportedVersion {
+                        what: format!(
+                            "node {} pins version {v}, but the scenario has only {} versions",
+                            node.id, self.n_versions
+                        ),
+                    });
+                }
+            }
+        }
+        // classes
+        if self.classes.is_empty() {
+            return Err(invalid("at least one task class is required"));
+        }
+        let mut names: Vec<&str> = self.classes.iter().map(|c| c.name.as_str()).collect();
+        names.sort_unstable();
+        if names.windows(2).any(|w| w[0] == w[1]) {
+            return Err(invalid("duplicate task class names"));
+        }
+        for class in &self.classes {
+            if class.name.is_empty() {
+                return Err(invalid("task class names must be non-empty"));
+            }
+            // utility families are consumed lazily, but an unknown name
+            // should fail loudly here, not mid-experiment
+            utility::family(&class.utility, self.n_versions, class.rate.initial().max(1.0))
+                .ok_or_else(|| SessionError::UnknownUtility {
+                    name: class.utility.clone(),
+                })?;
+            match &class.rate {
+                RateSpec::Constant(r) => {
+                    if !(*r > 0.0) {
+                        return Err(invalid(&format!(
+                            "class '{}' rate must be > 0 (got {r})",
+                            class.name
+                        )));
+                    }
+                }
+                RateSpec::Trace(points) => {
+                    let err = |what: &str| SessionError::InvalidTrace {
+                        class: class.name.clone(),
+                        what: what.to_string(),
+                    };
+                    if points.is_empty() {
+                        return Err(err("trace has no points"));
+                    }
+                    if points[0].0 != 0 {
+                        return Err(err("trace must start at iteration 0"));
+                    }
+                    if points.windows(2).any(|w| w[1].0 <= w[0].0) {
+                        return Err(err("trace iterations must be strictly increasing"));
+                    }
+                    if points.iter().any(|&(_, r)| !(r > 0.0)) {
+                        return Err(err("every trace rate must be > 0"));
+                    }
+                    match self.horizon {
+                        None => {
+                            return Err(err(
+                                "rate traces need a scenario horizon (set `horizon`)",
+                            ))
+                        }
+                        Some(h) => {
+                            if let Some(&(t, _)) =
+                                points.iter().find(|&&(t, _)| t >= h && t != 0)
+                            {
+                                return Err(err(&format!(
+                                    "trace breakpoint at iteration {t} is outside the \
+                                     horizon {h}"
+                                )));
+                            }
+                        }
+                    }
+                }
+            }
+            // the allocation projection onto [δ, λ_c−δ]^W needs W·δ ≤ λ_c
+            // at every rate the trace admits
+            let min_rate = class.rate.min_rate();
+            if !(self.delta > 0.0 && self.n_versions as f64 * self.delta <= min_rate) {
+                return Err(invalid(&format!(
+                    "class '{}': delta must satisfy 0 < n_versions*delta <= rate \
+                     (delta {}, W {}, min rate {min_rate})",
+                    class.name, self.delta, self.n_versions
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate the spec and build the [`Session`]: real graph, placement
+    /// (respecting version pins), heterogeneous augmented network, and the
+    /// multi-class [`Problem`]. A single-class spec lowered from scalar
+    /// knobs builds a bit-identical problem to the legacy
+    /// `ExperimentConfig::build_problem` path.
+    pub fn build(self) -> Result<Session, SessionError> {
+        self.validate()?;
+        let mut rng = Rng::seed_from(self.seed);
+        let real = match &self.topology {
+            TopologySpec::Er { n_nodes, p_link } => {
+                topologies::connected_er_graph(*n_nodes, *p_link, self.cap_mean, &mut rng)
+            }
+            TopologySpec::Named { name } => topologies::by_name(name, self.cap_mean, &mut rng)
+                .ok_or_else(|| SessionError::UnknownTopology { name: name.clone() })?,
+            TopologySpec::Explicit { n_nodes, edges } => {
+                let mut g = DiGraph::with_nodes(*n_nodes);
+                for e in edges {
+                    g.add_edge(e.src, e.dst, e.capacity);
+                    if e.bidirectional {
+                        g.add_edge(e.dst, e.src, e.capacity);
+                    }
+                }
+                if !g.strongly_connected() {
+                    return Err(invalid(
+                        "explicit topology must be strongly connected (every device \
+                         must reach and be reachable from every other)",
+                    ));
+                }
+                g
+            }
+        };
+        let n_real = real.n_nodes();
+        if n_real < self.n_versions {
+            return Err(invalid(&format!(
+                "{n_real} devices cannot host {} versions (need one device per version)",
+                self.n_versions
+            )));
+        }
+        for node in &self.nodes {
+            if node.id >= n_real {
+                return Err(invalid(&format!(
+                    "node spec id {} out of range for {n_real} nodes",
+                    node.id
+                )));
+            }
+        }
+
+        // placement: the no-pins path consumes the RNG exactly like the
+        // legacy Placement::random (bit-identical default scenarios)
+        let has_pins = self.nodes.iter().any(|n| n.version.is_some());
+        let placement = if has_pins {
+            let mut pins: Vec<Option<usize>> = vec![None; n_real];
+            for node in &self.nodes {
+                pins[node.id] = node.version;
+            }
+            Placement::with_pins(n_real, self.n_versions, &pins, &mut rng).ok_or_else(
+                || SessionError::UnsupportedVersion {
+                    what: format!(
+                        "the version pins leave no hosting device for some of the {} \
+                         versions",
+                        self.n_versions
+                    ),
+                },
+            )?
+        } else {
+            Placement::random(n_real, self.n_versions, &mut rng)
+        };
+
+        let mut node_caps: Vec<Option<f64>> = vec![None; n_real];
+        for node in &self.nodes {
+            node_caps[node.id] = node.compute_capacity;
+        }
+
+        // resolve class source sets (empty = hosts of version 0)
+        let mut class_sources: Vec<Vec<usize>> = Vec::with_capacity(self.classes.len());
+        for class in &self.classes {
+            if class.sources.is_empty() {
+                class_sources.push(placement.hosts(0).collect());
+            } else {
+                for &d in &class.sources {
+                    if d >= n_real {
+                        return Err(SessionError::UnknownSourceNode {
+                            class: class.name.clone(),
+                            node: d,
+                        });
+                    }
+                }
+                class_sources.push(class.sources.clone());
+            }
+        }
+
+        let net = AugmentedNet::build_heterogeneous(
+            &real,
+            &placement,
+            self.cap_mean,
+            &node_caps,
+            &class_sources,
+            &mut rng,
+        );
+        // per-session admission connectivity: every class must be able to
+        // reach every version's destination through its own sources
+        for s in 0..net.n_sessions() {
+            if net.lanes(s, AugmentedNet::SOURCE).is_empty() {
+                let class = s / self.n_versions;
+                return Err(SessionError::DisconnectedSource {
+                    class: self.classes[class].name.clone(),
+                    version: net.version_of_session(s),
+                });
+            }
+        }
+        if let Err(what) = net.validate() {
+            return Err(SessionError::InvalidScenario { what });
+        }
+
+        let workload = Workload {
+            class_names: self.classes.iter().map(|c| c.name.clone()).collect(),
+            class_rates: self.classes.iter().map(|c| c.rate.initial()).collect(),
+            class_spans: (0..self.classes.len())
+                .map(|c| (c * self.n_versions, (c + 1) * self.n_versions))
+                .collect(),
+        };
+
+        // per-edge cost overrides (explicit topologies only; real edges are
+        // inserted first and in spec order, so edge ids line up)
+        let edge_cost = match &self.topology {
+            TopologySpec::Explicit { edges, .. }
+                if edges.iter().any(|e| e.cost.is_some()) =>
+            {
+                let mut kinds = vec![self.cost; net.graph.n_edges()];
+                let mut k = 0;
+                for e in edges {
+                    kinds[k] = e.cost.unwrap_or(self.cost);
+                    k += 1;
+                    if e.bidirectional {
+                        kinds[k] = e.cost.unwrap_or(self.cost);
+                        k += 1;
+                    }
+                }
+                Some(kinds)
+            }
+            _ => None,
+        };
+
+        let problem =
+            Problem::with_workload(net, self.cost, workload).with_edge_cost(edge_cost);
+        Ok(Session { cfg: self.to_config(), problem, spec: self })
+    }
+
+    /// Parse a spec from JSON text. Missing top-level keys fall back to
+    /// the paper defaults; unknown keys are warned about (never silently
+    /// dropped).
+    pub fn from_json(text: &str) -> Result<Self, String> {
+        let j = Json::parse(text).map_err(|e| e.to_string())?;
+        let obj = j.as_obj().ok_or("scenario file must be a JSON object")?;
+        const KNOWN: [&str; 13] = [
+            "name",
+            "topology",
+            "n_versions",
+            "cap_mean",
+            "cost",
+            "nodes",
+            "classes",
+            "horizon",
+            "eta_routing",
+            "eta_alloc",
+            "delta",
+            "seed",
+            "workers",
+        ];
+        for key in obj.keys() {
+            if !KNOWN.contains(&key.as_str()) {
+                crate::log_warn!("scenario spec: ignoring unknown field '{key}'");
+            }
+        }
+        // present-but-wrongly-typed fields are hard errors, never silent
+        // fallbacks to the paper defaults
+        let mut spec = ScenarioSpec::paper_default();
+        if !matches!(j.get("name"), Json::Null) {
+            spec.name = j
+                .get("name")
+                .as_str()
+                .ok_or_else(|| format!("bad name '{}' (want a string)", j.get("name")))?
+                .to_string();
+        }
+        if !matches!(j.get("topology"), Json::Null) {
+            spec.topology = parse_topology(j.get("topology"))?;
+        }
+        if let Some(x) = opt_usize(&j, "n_versions")? {
+            spec.n_versions = x;
+        }
+        if let Some(x) = opt_f64(&j, "cap_mean")? {
+            spec.cap_mean = x;
+        }
+        if !matches!(j.get("cost"), Json::Null) {
+            let c = j.get("cost");
+            spec.cost = c
+                .as_str()
+                .and_then(CostKind::parse)
+                .ok_or_else(|| format!("bad cost '{c}'"))?;
+        }
+        if !matches!(j.get("nodes"), Json::Null) {
+            let nodes = j
+                .get("nodes")
+                .as_arr()
+                .ok_or_else(|| format!("bad nodes '{}' (want an array)", j.get("nodes")))?;
+            spec.nodes = nodes.iter().map(parse_node).collect::<Result<_, _>>()?;
+        }
+        if !matches!(j.get("classes"), Json::Null) {
+            let classes = j
+                .get("classes")
+                .as_arr()
+                .ok_or_else(|| format!("bad classes '{}' (want an array)", j.get("classes")))?;
+            spec.classes = classes.iter().map(parse_class).collect::<Result<_, _>>()?;
+        }
+        if let Some(h) = opt_usize(&j, "horizon")? {
+            spec.horizon = Some(h);
+        }
+        if let Some(x) = opt_f64(&j, "eta_routing")? {
+            spec.eta_routing = x;
+        }
+        if let Some(x) = opt_f64(&j, "eta_alloc")? {
+            spec.eta_alloc = x;
+        }
+        if let Some(x) = opt_f64(&j, "delta")? {
+            spec.delta = x;
+        }
+        if let Some(x) = opt_usize(&j, "workers")? {
+            spec.workers = x;
+        }
+        if !matches!(j.get("seed"), Json::Null) {
+            spec.seed = j
+                .get("seed")
+                .as_u64()
+                .ok_or_else(|| format!("bad seed '{}' (not a u64)", j.get("seed")))?;
+        }
+        Ok(spec)
+    }
+
+    /// Load a spec from a JSON file.
+    pub fn from_file(path: &Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        Self::from_json(&text).map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    /// Serialize the spec (the inverse of [`ScenarioSpec::from_json`]:
+    /// every field round-trips).
+    pub fn to_json(&self) -> Json {
+        let topology = match &self.topology {
+            TopologySpec::Er { n_nodes, p_link } => Json::obj(vec![
+                ("kind", Json::from("er")),
+                ("n_nodes", Json::from(*n_nodes)),
+                ("p_link", Json::from(*p_link)),
+            ]),
+            TopologySpec::Named { name } => Json::obj(vec![
+                ("kind", Json::from("named")),
+                ("name", Json::from(name.as_str())),
+            ]),
+            TopologySpec::Explicit { n_nodes, edges } => Json::obj(vec![
+                ("kind", Json::from("explicit")),
+                ("n_nodes", Json::from(*n_nodes)),
+                (
+                    "edges",
+                    Json::Arr(
+                        edges
+                            .iter()
+                            .map(|e| {
+                                let mut fields = vec![
+                                    ("src", Json::from(e.src)),
+                                    ("dst", Json::from(e.dst)),
+                                    ("capacity", Json::from(e.capacity)),
+                                    ("bidirectional", Json::from(e.bidirectional)),
+                                ];
+                                if let Some(c) = e.cost {
+                                    fields.push(("cost", Json::from(cost_name(c))));
+                                }
+                                Json::obj(fields)
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+        };
+        let nodes = Json::Arr(
+            self.nodes
+                .iter()
+                .map(|n| {
+                    let mut fields = vec![("id", Json::from(n.id))];
+                    if let Some(c) = n.compute_capacity {
+                        fields.push(("compute_capacity", Json::from(c)));
+                    }
+                    if let Some(v) = n.version {
+                        fields.push(("version", Json::from(v)));
+                    }
+                    Json::obj(fields)
+                })
+                .collect(),
+        );
+        let classes = Json::Arr(
+            self.classes
+                .iter()
+                .map(|c| {
+                    let rate = match &c.rate {
+                        RateSpec::Constant(r) => Json::from(*r),
+                        RateSpec::Trace(points) => Json::obj(vec![(
+                            "trace",
+                            Json::Arr(
+                                points
+                                    .iter()
+                                    .map(|&(t, r)| {
+                                        Json::Arr(vec![Json::from(t), Json::from(r)])
+                                    })
+                                    .collect(),
+                            ),
+                        )]),
+                    };
+                    Json::obj(vec![
+                        ("name", Json::from(c.name.as_str())),
+                        ("utility", Json::from(c.utility.as_str())),
+                        ("rate", rate),
+                        (
+                            "sources",
+                            Json::Arr(c.sources.iter().map(|&d| Json::from(d)).collect()),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        let mut fields = vec![
+            ("name", Json::from(self.name.as_str())),
+            ("topology", topology),
+            ("n_versions", Json::from(self.n_versions)),
+            ("cap_mean", Json::from(self.cap_mean)),
+            ("cost", Json::from(cost_name(self.cost))),
+            ("nodes", nodes),
+            ("classes", classes),
+            ("eta_routing", Json::from(self.eta_routing)),
+            ("eta_alloc", Json::from(self.eta_alloc)),
+            ("delta", Json::from(self.delta)),
+            ("workers", Json::from(self.workers)),
+            ("seed", Json::from_u64(self.seed)),
+        ];
+        if let Some(h) = self.horizon {
+            fields.push(("horizon", Json::from(h)));
+        }
+        Json::obj(fields)
+    }
+}
+
+fn invalid(what: &str) -> SessionError {
+    SessionError::InvalidScenario { what: what.to_string() }
+}
+
+/// Typed optional field: `Ok(None)` when absent, an error (never a silent
+/// default) when present with the wrong type.
+fn opt_f64(j: &Json, key: &str) -> Result<Option<f64>, String> {
+    match j.get(key) {
+        Json::Null => Ok(None),
+        v => v
+            .as_f64()
+            .map(Some)
+            .ok_or_else(|| format!("bad {key} '{v}' (want a number)")),
+    }
+}
+
+/// Typed optional field: exact non-negative integers only (`2.5` is an
+/// error, not a truncation).
+fn opt_usize(j: &Json, key: &str) -> Result<Option<usize>, String> {
+    match j.get(key) {
+        Json::Null => Ok(None),
+        v => match v.as_f64() {
+            Some(x) if x >= 0.0 && x.fract() == 0.0 => Ok(Some(x as usize)),
+            _ => Err(format!("bad {key} '{v}' (want a non-negative integer)")),
+        },
+    }
+}
+
+fn cost_name(kind: CostKind) -> &'static str {
+    match kind {
+        CostKind::Exp => "exp",
+        CostKind::Queue => "queue",
+        CostKind::Linear => "linear",
+        CostKind::Cubic => "cubic",
+    }
+}
+
+fn parse_topology(j: &Json) -> Result<TopologySpec, String> {
+    let kind = j.get("kind").as_str().ok_or("topology needs a 'kind' field")?;
+    match kind {
+        "er" => Ok(TopologySpec::Er {
+            n_nodes: j.get("n_nodes").as_usize().ok_or("er topology needs n_nodes")?,
+            p_link: j.get("p_link").as_f64().ok_or("er topology needs p_link")?,
+        }),
+        "named" => Ok(TopologySpec::Named {
+            name: j
+                .get("name")
+                .as_str()
+                .ok_or("named topology needs a 'name' field")?
+                .to_string(),
+        }),
+        "explicit" => {
+            let edges = j
+                .get("edges")
+                .as_arr()
+                .ok_or("explicit topology needs an 'edges' array")?
+                .iter()
+                .map(parse_edge)
+                .collect::<Result<_, _>>()?;
+            Ok(TopologySpec::Explicit {
+                n_nodes: j.get("n_nodes").as_usize().ok_or("explicit topology needs n_nodes")?,
+                edges,
+            })
+        }
+        other => Err(format!("unknown topology kind '{other}' (er | named | explicit)")),
+    }
+}
+
+fn parse_edge(j: &Json) -> Result<EdgeSpec, String> {
+    let cost = match j.get("cost") {
+        Json::Null => None,
+        c => Some(
+            c.as_str()
+                .and_then(CostKind::parse)
+                .ok_or_else(|| format!("bad edge cost '{c}'"))?,
+        ),
+    };
+    let bidirectional = match j.get("bidirectional") {
+        Json::Null => true,
+        v => v
+            .as_bool()
+            .ok_or_else(|| format!("bad bidirectional '{v}' (want a bool)"))?,
+    };
+    Ok(EdgeSpec {
+        src: opt_usize(j, "src")?.ok_or("edge needs src")?,
+        dst: opt_usize(j, "dst")?.ok_or("edge needs dst")?,
+        capacity: opt_f64(j, "capacity")?.ok_or("edge needs capacity")?,
+        bidirectional,
+        cost,
+    })
+}
+
+fn parse_node(j: &Json) -> Result<NodeSpec, String> {
+    Ok(NodeSpec {
+        id: opt_usize(j, "id")?.ok_or("node spec needs id")?,
+        compute_capacity: opt_f64(j, "compute_capacity")?,
+        version: opt_usize(j, "version")?,
+    })
+}
+
+fn parse_class(j: &Json) -> Result<ClassSpec, String> {
+    let rate = match j.get("rate") {
+        Json::Num(r) => RateSpec::Constant(*r),
+        obj @ Json::Obj(_) => {
+            let points = obj
+                .get("trace")
+                .as_arr()
+                .ok_or("class rate object needs a 'trace' array")?
+                .iter()
+                .map(|p| {
+                    let pair = p.as_arr().filter(|a| a.len() == 2).ok_or_else(|| {
+                        format!("trace points are [iteration, rate] pairs (got {p})")
+                    })?;
+                    let t = match pair[0].as_f64() {
+                        Some(x) if x >= 0.0 && x.fract() == 0.0 => x as usize,
+                        _ => return Err(format!("bad trace iteration '{}'", pair[0])),
+                    };
+                    let r = pair[1]
+                        .as_f64()
+                        .ok_or_else(|| format!("bad trace rate '{}'", pair[1]))?;
+                    Ok::<(usize, f64), String>((t, r))
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+            RateSpec::Trace(points)
+        }
+        other => return Err(format!("bad class rate '{other}' (number or {{\"trace\": ..}})")),
+    };
+    let sources = match j.get("sources") {
+        Json::Null => Vec::new(),
+        arr => arr
+            .as_arr()
+            .ok_or("class sources must be an array of device ids")?
+            .iter()
+            .map(|v| match v.as_f64() {
+                Some(x) if x >= 0.0 && x.fract() == 0.0 => Ok(x as usize),
+                _ => Err(format!("bad source device '{v}'")),
+            })
+            .collect::<Result<_, _>>()?,
+    };
+    let utility = match j.get("utility") {
+        Json::Null => "log".to_string(),
+        v => v
+            .as_str()
+            .ok_or_else(|| format!("bad class utility '{v}' (want a string)"))?
+            .to_string(),
+    };
+    Ok(ClassSpec {
+        name: j.get("name").as_str().ok_or("class needs a name")?.to_string(),
+        utility,
+        rate,
+        sources,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_class_spec() -> ScenarioSpec {
+        let mut spec = ScenarioSpec::paper_default();
+        spec.name = "two-class".into();
+        spec.n_versions = 2;
+        spec.classes = vec![
+            ClassSpec {
+                name: "video".into(),
+                utility: "log".into(),
+                rate: RateSpec::Constant(40.0),
+                sources: vec![0, 1],
+            },
+            ClassSpec {
+                name: "audio".into(),
+                utility: "sqrt".into(),
+                rate: RateSpec::Constant(20.0),
+                sources: Vec::new(),
+            },
+        ];
+        spec
+    }
+
+    #[test]
+    fn paper_default_builds_bit_identical_to_config_path() {
+        let cfg = ExperimentConfig::paper_default();
+        let mut rng = Rng::seed_from(cfg.seed);
+        let legacy = cfg.build_problem(&mut rng).unwrap();
+        let session = ScenarioSpec::paper_default().build().unwrap();
+        assert_eq!(session.problem.net.graph.n_edges(), legacy.net.graph.n_edges());
+        for (a, b) in session.problem.net.graph.edges().iter().zip(legacy.net.graph.edges()) {
+            assert_eq!(a, b);
+        }
+        assert_eq!(
+            session.problem.net.placement.version_of,
+            legacy.net.placement.version_of
+        );
+        assert_eq!(session.problem.net.csr.lane_edge, legacy.net.csr.lane_edge);
+        assert_eq!(session.problem.total_rate, legacy.total_rate);
+    }
+
+    #[test]
+    fn two_class_spec_builds_class_major_sessions() {
+        let session = two_class_spec().build().unwrap();
+        let p = &session.problem;
+        assert_eq!(p.n_sessions(), 4);
+        assert_eq!(p.n_versions(), 2);
+        assert_eq!(p.workload.n_classes(), 2);
+        assert!((p.total_rate - 60.0).abs() < 1e-12);
+        assert_eq!(p.workload.class_spans, vec![(0, 2), (2, 4)]);
+        let lam = p.uniform_allocation();
+        assert_eq!(lam, vec![20.0, 20.0, 10.0, 10.0]);
+    }
+
+    #[test]
+    fn json_roundtrip_every_field() {
+        let mut spec = two_class_spec();
+        spec.topology = TopologySpec::Explicit {
+            n_nodes: 3,
+            edges: vec![
+                EdgeSpec {
+                    src: 0,
+                    dst: 1,
+                    capacity: 12.0,
+                    bidirectional: true,
+                    cost: Some(CostKind::Queue),
+                },
+                EdgeSpec { src: 1, dst: 2, capacity: 8.0, bidirectional: true, cost: None },
+                EdgeSpec { src: 2, dst: 0, capacity: 6.5, bidirectional: true, cost: None },
+            ],
+        };
+        spec.nodes = vec![
+            NodeSpec { id: 0, compute_capacity: Some(25.0), version: Some(0) },
+            NodeSpec { id: 2, compute_capacity: None, version: Some(1) },
+        ];
+        spec.classes[1].rate = RateSpec::Trace(vec![(0, 20.0), (40, 35.0)]);
+        spec.horizon = Some(100);
+        spec.seed = u64::MAX; // exercises the string-seed path
+        spec.workers = 4;
+        spec.cost = CostKind::Cubic;
+        let text = spec.to_json().to_string();
+        let back = ScenarioSpec::from_json(&text).unwrap();
+        assert_eq!(back, spec, "round-trip mismatch; json was {text}");
+    }
+
+    #[test]
+    fn named_and_er_topologies_roundtrip() {
+        for topo in [
+            TopologySpec::Er { n_nodes: 14, p_link: 0.25 },
+            TopologySpec::Named { name: "star".into() },
+        ] {
+            let mut spec = ScenarioSpec::paper_default();
+            spec.topology = topo.clone();
+            let back = ScenarioSpec::from_json(&spec.to_json().to_string()).unwrap();
+            assert_eq!(back.topology, topo);
+        }
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let spec = ScenarioSpec::from_json(r#"{"n_versions": 4}"#).unwrap();
+        assert_eq!(spec.n_versions, 4);
+        assert_eq!(spec.classes.len(), 1);
+        assert_eq!(spec.classes[0].rate, RateSpec::Constant(60.0));
+        assert!(matches!(spec.topology, TopologySpec::Er { n_nodes: 25, .. }));
+    }
+
+    #[test]
+    fn wrongly_typed_known_fields_are_errors_not_defaults() {
+        // a present-but-mistyped field must never silently fall back
+        assert!(ScenarioSpec::from_json(r#"{"cap_mean": "12.0"}"#).is_err());
+        assert!(ScenarioSpec::from_json(r#"{"n_versions": 2.5}"#).is_err());
+        assert!(ScenarioSpec::from_json(r#"{"n_versions": -1}"#).is_err());
+        assert!(ScenarioSpec::from_json(r#"{"nodes": 3}"#).is_err());
+        assert!(ScenarioSpec::from_json(r#"{"classes": "video"}"#).is_err());
+        assert!(ScenarioSpec::from_json(r#"{"horizon": "soon"}"#).is_err());
+        assert!(ScenarioSpec::from_json(r#"{"name": 7}"#).is_err());
+        assert!(ScenarioSpec::from_json(
+            r#"{"classes": [{"name": "a", "utility": "log", "rate": 10.0,
+                 "sources": [1.5]}]}"#
+        )
+        .is_err());
+        assert!(ScenarioSpec::from_json(
+            r#"{"nodes": [{"id": 0, "version": 1.5}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn validation_unknown_source_node() {
+        let mut spec = two_class_spec();
+        spec.classes[0].sources = vec![999];
+        assert!(matches!(
+            spec.build(),
+            Err(SessionError::UnknownSourceNode { node: 999, .. })
+        ));
+    }
+
+    #[test]
+    fn validation_unsupported_version() {
+        let mut spec = ScenarioSpec::paper_default();
+        spec.nodes = vec![NodeSpec { id: 0, compute_capacity: None, version: Some(7) }];
+        assert!(matches!(spec.build(), Err(SessionError::UnsupportedVersion { .. })));
+        // pins that leave a version uncovered on a tiny network
+        let mut spec = ScenarioSpec::paper_default();
+        spec.topology = TopologySpec::Explicit {
+            n_nodes: 2,
+            edges: vec![EdgeSpec {
+                src: 0,
+                dst: 1,
+                capacity: 10.0,
+                bidirectional: true,
+                cost: None,
+            }],
+        };
+        spec.n_versions = 2;
+        spec.delta = 0.1;
+        spec.nodes = vec![
+            NodeSpec { id: 0, compute_capacity: None, version: Some(0) },
+            NodeSpec { id: 1, compute_capacity: None, version: Some(0) },
+        ];
+        assert!(matches!(spec.build(), Err(SessionError::UnsupportedVersion { .. })));
+    }
+
+    #[test]
+    fn validation_trace_errors() {
+        let mut spec = two_class_spec();
+        // no horizon
+        spec.classes[0].rate = RateSpec::Trace(vec![(0, 30.0), (10, 40.0)]);
+        assert!(matches!(spec.clone().build(), Err(SessionError::InvalidTrace { .. })));
+        // breakpoint outside the horizon
+        spec.horizon = Some(5);
+        assert!(matches!(spec.clone().build(), Err(SessionError::InvalidTrace { .. })));
+        // not starting at 0
+        spec.horizon = Some(50);
+        spec.classes[0].rate = RateSpec::Trace(vec![(3, 30.0)]);
+        assert!(matches!(spec.clone().build(), Err(SessionError::InvalidTrace { .. })));
+        // non-increasing iterations
+        spec.classes[0].rate = RateSpec::Trace(vec![(0, 30.0), (10, 40.0), (10, 45.0)]);
+        assert!(matches!(spec.clone().build(), Err(SessionError::InvalidTrace { .. })));
+        // a valid trace builds and compiles to events
+        spec.classes[0].rate = RateSpec::Trace(vec![(0, 30.0), (10, 40.0)]);
+        let session = spec.clone().build().unwrap();
+        assert_eq!(session.problem.workload.class_rates[0], 30.0);
+        let schedule = spec.events();
+        assert_eq!(schedule.fire(10).count(), 1);
+        assert_eq!(schedule.fire(0).count(), 0);
+    }
+
+    #[test]
+    fn validation_misc_errors() {
+        let mut spec = ScenarioSpec::paper_default();
+        spec.classes.clear();
+        assert!(spec.build().is_err());
+
+        let mut spec = ScenarioSpec::paper_default();
+        spec.classes[0].utility = "cosine".into();
+        assert!(matches!(spec.build(), Err(SessionError::UnknownUtility { .. })));
+
+        let mut spec = ScenarioSpec::paper_default();
+        spec.topology = TopologySpec::Named { name: "moebius".into() };
+        assert!(matches!(spec.build(), Err(SessionError::UnknownTopology { .. })));
+
+        // disconnected explicit topology
+        let mut spec = ScenarioSpec::paper_default();
+        spec.n_versions = 2;
+        spec.delta = 0.1;
+        spec.topology = TopologySpec::Explicit {
+            n_nodes: 4,
+            edges: vec![
+                EdgeSpec { src: 0, dst: 1, capacity: 5.0, bidirectional: true, cost: None },
+                EdgeSpec { src: 2, dst: 3, capacity: 5.0, bidirectional: true, cost: None },
+            ],
+        };
+        assert!(spec.build().is_err());
+    }
+
+    #[test]
+    fn rate_spec_evaluation() {
+        let trace = RateSpec::Trace(vec![(0, 10.0), (5, 20.0), (9, 15.0)]);
+        assert_eq!(trace.at(0), 10.0);
+        assert_eq!(trace.at(4), 10.0);
+        assert_eq!(trace.at(5), 20.0);
+        assert_eq!(trace.at(100), 15.0);
+        assert_eq!(trace.initial(), 10.0);
+        assert_eq!(trace.min_rate(), 10.0);
+        assert_eq!(RateSpec::Constant(7.0).at(42), 7.0);
+    }
+
+    #[test]
+    fn per_edge_costs_land_in_the_problem() {
+        let mut spec = ScenarioSpec::paper_default();
+        spec.n_versions = 2;
+        spec.delta = 0.1;
+        spec.topology = TopologySpec::Explicit {
+            n_nodes: 3,
+            edges: vec![
+                EdgeSpec {
+                    src: 0,
+                    dst: 1,
+                    capacity: 10.0,
+                    bidirectional: true,
+                    cost: Some(CostKind::Queue),
+                },
+                EdgeSpec { src: 1, dst: 2, capacity: 10.0, bidirectional: true, cost: None },
+                EdgeSpec { src: 2, dst: 0, capacity: 10.0, bidirectional: true, cost: None },
+            ],
+        };
+        let session = spec.build().unwrap();
+        let p = &session.problem;
+        assert!(p.edge_cost.is_some());
+        // explicit real edges come first, in spec order (fwd then reverse)
+        assert_eq!(p.edge_kind(0), CostKind::Queue);
+        assert_eq!(p.edge_kind(1), CostKind::Queue);
+        assert_eq!(p.edge_kind(2), CostKind::Exp);
+        // virtual edges use the scenario default
+        assert_eq!(p.edge_kind(p.net.graph.n_edges() - 1), CostKind::Exp);
+    }
+
+    #[test]
+    fn heterogeneous_node_caps_are_applied() {
+        let mut spec = ScenarioSpec::paper_default();
+        spec.nodes = vec![NodeSpec { id: 3, compute_capacity: Some(123.0), version: None }];
+        let session = spec.build().unwrap();
+        let net = &session.problem.net;
+        // device 3's computation link has exactly the pinned capacity
+        let v = net.placement.version_of[3];
+        let e = net
+            .graph
+            .find_edge(net.device_node(3), net.n_real + 1 + v)
+            .expect("computation link");
+        assert_eq!(net.graph.edge(e).capacity, 123.0);
+    }
+
+    #[test]
+    fn config_lowering_is_lossless() {
+        let mut cfg = ExperimentConfig::paper_default();
+        cfg.n_nodes = 18;
+        cfg.p_link = 0.4;
+        cfg.cap_mean = 12.0;
+        cfg.n_versions = 4;
+        cfg.total_rate = 80.0;
+        cfg.cost = CostKind::Queue;
+        cfg.utility = "sqrt".into();
+        cfg.eta_routing = 0.25;
+        cfg.eta_alloc = 0.01;
+        cfg.delta = 0.2;
+        cfg.seed = 99;
+        cfg.workers = 3;
+        let spec = ScenarioSpec::from_config(&cfg);
+        let back = spec.to_config();
+        assert_eq!(back.topology, cfg.topology);
+        assert_eq!(back.n_nodes, cfg.n_nodes);
+        assert_eq!(back.p_link, cfg.p_link);
+        assert_eq!(back.cap_mean, cfg.cap_mean);
+        assert_eq!(back.n_versions, cfg.n_versions);
+        assert_eq!(back.total_rate, cfg.total_rate);
+        assert_eq!(back.cost, cfg.cost);
+        assert_eq!(back.utility, cfg.utility);
+        assert_eq!(back.eta_routing, cfg.eta_routing);
+        assert_eq!(back.eta_alloc, cfg.eta_alloc);
+        assert_eq!(back.delta, cfg.delta);
+        assert_eq!(back.seed, cfg.seed);
+        assert_eq!(back.workers, cfg.workers);
+    }
+}

@@ -1,0 +1,550 @@
+//! **`Suite`** — evaluate a `(scenario × solver × seed)` grid in parallel.
+//!
+//! A suite crosses a set of [`ScenarioSpec`]s (inline or loaded from
+//! files) with routing and/or allocation solvers (by registry name) and
+//! seeds. Cells execute on the same persistent
+//! [`crate::engine::pool::WorkerPool`] the flow engine uses — each cell
+//! builds its own [`crate::session::Session`] and streams a run to
+//! completion, so results are deterministic and independent of scheduling
+//! — and the per-cell [`RunReport`]s (plus trajectories) collect into a
+//! [`SuiteReport`] with CSV + JSON dumps.
+//!
+//! Allocation cells honor scenario rate traces: the spec's
+//! [`ScenarioSpec::events`] schedule is applied between outer iterations,
+//! exactly like the Fig. 11 harness applies topology changes.
+//!
+//! ```no_run
+//! use jowr::prelude::*;
+//!
+//! let report = Suite::new()
+//!     .spec("paper", ScenarioSpec::paper_default())
+//!     .router("omd")
+//!     .router("sgp")
+//!     .seeds(&[1, 2, 3])
+//!     .iters(50)
+//!     .workers(0) // auto
+//!     .run();
+//! println!("{}", report.to_csv());
+//! ```
+
+use std::ops::ControlFlow;
+use std::path::Path;
+
+use super::run::{RunReport, Trajectory};
+use super::spec::ScenarioSpec;
+use super::SessionError;
+use crate::coordinator::events::EventSchedule;
+use crate::engine::pool::WorkerPool;
+use crate::util::json::Json;
+
+/// Which half of the solver registry a suite entry addresses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolverKind {
+    Router,
+    Allocator,
+}
+
+/// One solver of the grid: a registry name plus its kind.
+#[derive(Clone, Debug)]
+pub struct SolverRef {
+    pub kind: SolverKind,
+    pub name: String,
+}
+
+/// The grid: specs × solvers × seeds. Build with the chainable setters,
+/// execute with [`Suite::run`].
+#[derive(Clone, Debug)]
+pub struct Suite {
+    specs: Vec<(String, ScenarioSpec)>,
+    solvers: Vec<SolverRef>,
+    seeds: Vec<u64>,
+    iters: usize,
+    workers: usize,
+}
+
+impl Default for Suite {
+    /// Identical to [`Suite::new`] (50 iterations, sequential cells) — a
+    /// derived all-zero default would silently build zero-iteration cells.
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A successful cell: the unified report plus the per-iteration objective
+/// trajectory.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    pub report: RunReport,
+    pub trajectory: Vec<f64>,
+}
+
+/// One evaluated grid cell.
+#[derive(Clone, Debug)]
+pub struct SuiteCell {
+    pub scenario: String,
+    pub solver: String,
+    pub kind: SolverKind,
+    /// The seed the cell actually ran with (the grid seed, or the spec's
+    /// own seed when the suite declares none).
+    pub seed: u64,
+    /// The run outcome; build/validation/solver-lookup failures land here
+    /// as messages instead of aborting the rest of the grid.
+    pub outcome: Result<CellResult, String>,
+}
+
+/// Every cell of an executed suite, in grid order (scenario-major, then
+/// solver, then seed).
+#[derive(Clone, Debug)]
+pub struct SuiteReport {
+    pub cells: Vec<SuiteCell>,
+}
+
+impl Suite {
+    pub fn new() -> Self {
+        Suite { specs: Vec::new(), solvers: Vec::new(), seeds: Vec::new(), iters: 50, workers: 1 }
+    }
+
+    /// Add an inline scenario under a display name.
+    pub fn spec(mut self, name: &str, spec: ScenarioSpec) -> Self {
+        self.specs.push((name.to_string(), spec));
+        self
+    }
+
+    /// Load a scenario file (`*.json`); the display name is the file stem.
+    pub fn scenario_file(self, path: &Path) -> Result<Self, String> {
+        let spec = ScenarioSpec::from_file(path)?;
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| path.display().to_string());
+        Ok(self.spec(&name, spec))
+    }
+
+    /// Add a routing solver by registry name.
+    pub fn router(mut self, name: &str) -> Self {
+        self.solvers.push(SolverRef { kind: SolverKind::Router, name: name.to_string() });
+        self
+    }
+
+    /// Add an allocation solver by registry name.
+    pub fn allocator(mut self, name: &str) -> Self {
+        self.solvers.push(SolverRef { kind: SolverKind::Allocator, name: name.to_string() });
+        self
+    }
+
+    /// Seeds to cross the grid with. Empty (the default) = one cell per
+    /// (spec, solver) at the spec's own seed.
+    pub fn seeds(mut self, seeds: &[u64]) -> Self {
+        self.seeds = seeds.to_vec();
+        self
+    }
+
+    /// Iteration budget per cell (routing iterations / allocation outer
+    /// iterations). When a scenario declares a horizon, allocation cells
+    /// run `min(iters, horizon)` so traces stay inside their domain.
+    pub fn iters(mut self, iters: usize) -> Self {
+        self.iters = iters;
+        self
+    }
+
+    /// Cells executed concurrently (`0` = auto-detect, `1` = sequential).
+    /// Cell results are independent of the worker count.
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    /// Total number of grid cells.
+    pub fn n_cells(&self) -> usize {
+        self.specs.len() * self.solvers.len() * self.seeds.len().max(1)
+    }
+
+    /// Execute every cell (in parallel when `workers > 1`) and collect the
+    /// report. Never panics on a bad cell: failures are carried in
+    /// [`SuiteCell::outcome`].
+    pub fn run(&self) -> SuiteReport {
+        let mut grid: Vec<(usize, usize, Option<u64>)> = Vec::with_capacity(self.n_cells());
+        for spec_idx in 0..self.specs.len() {
+            for solver_idx in 0..self.solvers.len() {
+                if self.seeds.is_empty() {
+                    grid.push((spec_idx, solver_idx, None));
+                } else {
+                    for &seed in &self.seeds {
+                        grid.push((spec_idx, solver_idx, Some(seed)));
+                    }
+                }
+            }
+        }
+        let mut results: Vec<Option<SuiteCell>> = (0..grid.len()).map(|_| None).collect();
+        let workers = self.effective_workers(grid.len());
+        if workers <= 1 || grid.len() <= 1 {
+            for (slot, desc) in results.iter_mut().zip(&grid) {
+                *slot = Some(self.run_cell(*desc));
+            }
+        } else {
+            // same dispatch shape as the engine's per-session sweeps:
+            // chunk 0 on the caller thread, chunk i on pool thread i−1
+            let pool = WorkerPool::new(workers - 1);
+            let chunk = grid.len().div_ceil(workers);
+            let mut result_chunks = results.chunks_mut(chunk);
+            let mut grid_chunks = grid.chunks(chunk);
+            let own_results = result_chunks.next().expect("at least one chunk");
+            let own_grid = grid_chunks.next().expect("at least one chunk");
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            for (slots, descs) in result_chunks.zip(grid_chunks) {
+                tasks.push(Box::new(move || {
+                    for (slot, desc) in slots.iter_mut().zip(descs) {
+                        *slot = Some(self.run_cell(*desc));
+                    }
+                }));
+            }
+            pool.run_scoped(tasks, move || {
+                for (slot, desc) in own_results.iter_mut().zip(own_grid) {
+                    *slot = Some(self.run_cell(*desc));
+                }
+            });
+        }
+        SuiteReport { cells: results.into_iter().map(|c| c.expect("cell ran")).collect() }
+    }
+
+    fn effective_workers(&self, n_cells: usize) -> usize {
+        let requested = if self.workers == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            self.workers
+        };
+        requested.clamp(1, n_cells.max(1))
+    }
+
+    fn run_cell(&self, (spec_idx, solver_idx, seed): (usize, usize, Option<u64>)) -> SuiteCell {
+        let (spec_name, base_spec) = &self.specs[spec_idx];
+        let solver = &self.solvers[solver_idx];
+        let mut spec = base_spec.clone();
+        if let Some(s) = seed {
+            spec.seed = s;
+        }
+        let seed_used = spec.seed;
+        let outcome = self.execute(spec, solver).map_err(|e| e.to_string());
+        SuiteCell {
+            scenario: spec_name.clone(),
+            solver: solver.name.clone(),
+            kind: solver.kind,
+            seed: seed_used,
+            outcome,
+        }
+    }
+
+    fn execute(
+        &self,
+        spec: ScenarioSpec,
+        solver: &SolverRef,
+    ) -> Result<CellResult, SessionError> {
+        let session = spec.build()?;
+        let mut traj = Trajectory::default();
+        let report = match solver.kind {
+            SolverKind::Router => session
+                .routing_run(&solver.name, self.iters)?
+                .observe(&mut traj)
+                .finish(),
+            SolverKind::Allocator => {
+                let iters = match session.spec.horizon {
+                    Some(h) => self.iters.min(h),
+                    None => self.iters,
+                };
+                let schedule = session.events();
+                let mut run =
+                    session.allocation_run(&solver.name, iters)?.observe(&mut traj);
+                if schedule.is_empty() {
+                    run.finish()
+                } else {
+                    // rate traces fire between outer iterations, exactly
+                    // like the Fig. 11 topology-change harness — but as
+                    // *workload* changes: the oracle keeps its persistent
+                    // routing state across a pure rate breakpoint
+                    let mut problem = session.problem.clone();
+                    let mut t = 0usize;
+                    loop {
+                        for ev in schedule.fire(t) {
+                            problem = EventSchedule::apply(&session.cfg, &problem, ev)?;
+                            run.oracle_mut().on_workload_change(&problem);
+                        }
+                        match run.step() {
+                            ControlFlow::Continue(()) => t += 1,
+                            ControlFlow::Break(report) => break report,
+                        }
+                    }
+                }
+            }
+        };
+        Ok(CellResult { report, trajectory: traj.values })
+    }
+}
+
+impl SuiteReport {
+    /// Number of successful cells.
+    pub fn ok_count(&self) -> usize {
+        self.cells.iter().filter(|c| c.outcome.is_ok()).count()
+    }
+
+    /// Number of failed cells.
+    pub fn err_count(&self) -> usize {
+        self.cells.len() - self.ok_count()
+    }
+
+    /// Look a cell up by its grid coordinates.
+    pub fn get(&self, scenario: &str, solver: &str, seed: u64) -> Option<&SuiteCell> {
+        self.cells
+            .iter()
+            .find(|c| c.scenario == scenario && c.solver == solver && c.seed == seed)
+    }
+
+    /// The trajectory of a cell (empty for failed cells) — the harnesses'
+    /// accessor for figure series.
+    pub fn trajectory(&self, scenario: &str, solver: &str) -> Option<&[f64]> {
+        self.cells
+            .iter()
+            .find(|c| c.scenario == scenario && c.solver == solver)
+            .and_then(|c| c.outcome.as_ref().ok())
+            .map(|r| r.trajectory.as_slice())
+    }
+
+    /// The first matching cell's result, with the cell's failure message
+    /// surfaced as a [`SessionError`] (for `?`-style harness plumbing).
+    pub fn cell_result(
+        &self,
+        scenario: &str,
+        solver: &str,
+    ) -> Result<&CellResult, SessionError> {
+        let cell = self
+            .cells
+            .iter()
+            .find(|c| c.scenario == scenario && c.solver == solver)
+            .ok_or_else(|| SessionError::InvalidScenario {
+                what: format!("suite has no cell ({scenario}, {solver})"),
+            })?;
+        cell.outcome.as_ref().map_err(|e| SessionError::InvalidScenario {
+            what: format!("suite cell ({scenario}, {solver}) failed: {e}"),
+        })
+    }
+
+    /// One CSV row per cell:
+    /// `scenario,solver,kind,seed,status,objective,iterations,routing_iterations,stop,elapsed_s,error`.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "scenario,solver,kind,seed,status,objective,iterations,routing_iterations,\
+             stop,elapsed_s,error\n",
+        );
+        for c in &self.cells {
+            let kind = match c.kind {
+                SolverKind::Router => "router",
+                SolverKind::Allocator => "allocator",
+            };
+            match &c.outcome {
+                Ok(res) => {
+                    let r = &res.report;
+                    out.push_str(&format!(
+                        "{},{},{kind},{},ok,{},{},{},{:?},{},\n",
+                        c.scenario,
+                        c.solver,
+                        c.seed,
+                        r.objective,
+                        r.iterations,
+                        r.routing_iterations,
+                        r.stop,
+                        r.elapsed_s
+                    ));
+                }
+                Err(e) => {
+                    let msg = e.replace(',', ";").replace('\n', " ");
+                    out.push_str(&format!(
+                        "{},{},{kind},{},error,,,,,,{msg}\n",
+                        c.scenario, c.solver, c.seed
+                    ));
+                }
+            }
+        }
+        out
+    }
+
+    /// Full JSON dump (reports + trajectories).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "cells",
+            Json::Arr(
+                self.cells
+                    .iter()
+                    .map(|c| {
+                        let kind = match c.kind {
+                            SolverKind::Router => "router",
+                            SolverKind::Allocator => "allocator",
+                        };
+                        let mut fields = vec![
+                            ("scenario", Json::from(c.scenario.as_str())),
+                            ("solver", Json::from(c.solver.as_str())),
+                            ("kind", Json::from(kind)),
+                            ("seed", Json::from_u64(c.seed)),
+                        ];
+                        match &c.outcome {
+                            Ok(res) => {
+                                let r = &res.report;
+                                fields.push(("status", Json::from("ok")));
+                                fields.push((
+                                    "report",
+                                    Json::obj(vec![
+                                        ("algo", Json::from(r.algo.as_str())),
+                                        ("objective", Json::from(r.objective)),
+                                        ("iterations", Json::from(r.iterations)),
+                                        (
+                                            "routing_iterations",
+                                            Json::from(r.routing_iterations),
+                                        ),
+                                        ("stop", Json::from(format!("{:?}", r.stop).as_str())),
+                                        ("elapsed_s", Json::from(r.elapsed_s)),
+                                        ("lam", Json::from(r.lam.clone())),
+                                    ]),
+                                ));
+                                fields.push((
+                                    "trajectory",
+                                    Json::from(res.trajectory.clone()),
+                                ));
+                            }
+                            Err(e) => {
+                                fields.push(("status", Json::from("error")));
+                                fields.push(("error", Json::from(e.as_str())));
+                            }
+                        }
+                        Json::obj(fields)
+                    })
+                    .collect(),
+            ),
+        )])
+    }
+
+    /// Write `suite.csv` + `suite.json` under `dir`.
+    pub fn write(&self, dir: &Path) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join("suite.csv"), self.to_csv())?;
+        std::fs::write(dir.join("suite.json"), self.to_json().to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::session::spec::{ClassSpec, RateSpec};
+
+    fn small_spec() -> ScenarioSpec {
+        let mut spec = ScenarioSpec::paper_default();
+        let TopologySpec::Er { n_nodes, .. } = &mut spec.topology else { unreachable!() };
+        *n_nodes = 10;
+        spec
+    }
+    use crate::session::spec::TopologySpec;
+
+    #[test]
+    fn grid_runs_all_cells_in_order() {
+        let report = Suite::new()
+            .spec("a", small_spec())
+            .router("omd")
+            .router("sgp")
+            .seeds(&[1, 2])
+            .iters(5)
+            .run();
+        assert_eq!(report.cells.len(), 4);
+        assert_eq!(report.ok_count(), 4);
+        let order: Vec<(String, u64)> = report
+            .cells
+            .iter()
+            .map(|c| (c.solver.clone(), c.seed))
+            .collect();
+        assert_eq!(
+            order,
+            vec![
+                ("omd".to_string(), 1),
+                ("omd".to_string(), 2),
+                ("sgp".to_string(), 1),
+                ("sgp".to_string(), 2)
+            ]
+        );
+        let cell = report.get("a", "omd", 1).unwrap();
+        let res = cell.outcome.as_ref().unwrap();
+        assert!(res.report.objective.is_finite());
+        assert_eq!(res.trajectory.len(), res.report.iterations + 1);
+    }
+
+    #[test]
+    fn parallel_execution_matches_sequential() {
+        let build = || {
+            Suite::new()
+                .spec("a", small_spec())
+                .router("omd")
+                .seeds(&[1, 2, 3, 4])
+                .iters(4)
+        };
+        let seq = build().workers(1).run();
+        let par = build().workers(4).run();
+        assert_eq!(seq.cells.len(), par.cells.len());
+        for (a, b) in seq.cells.iter().zip(&par.cells) {
+            assert_eq!(a.scenario, b.scenario);
+            assert_eq!(a.seed, b.seed);
+            let (ra, rb) = (a.outcome.as_ref().unwrap(), b.outcome.as_ref().unwrap());
+            assert_eq!(
+                ra.report.objective.to_bits(),
+                rb.report.objective.to_bits(),
+                "parallel suite must be deterministic"
+            );
+        }
+    }
+
+    #[test]
+    fn unknown_solver_is_a_cell_error_not_a_panic() {
+        let report = Suite::new().spec("a", small_spec()).router("nope").iters(2).run();
+        assert_eq!(report.err_count(), 1);
+        let msg = report.cells[0].outcome.as_ref().unwrap_err();
+        assert!(msg.contains("nope"), "{msg}");
+        // and the CSV still renders
+        let csv = report.to_csv();
+        assert!(csv.contains("error"));
+    }
+
+    #[test]
+    fn empty_seeds_use_the_spec_seed() {
+        let mut spec = small_spec();
+        spec.seed = 777;
+        let report = Suite::new().spec("a", spec).router("omd").iters(2).run();
+        assert_eq!(report.cells.len(), 1);
+        assert_eq!(report.cells[0].seed, 777);
+    }
+
+    #[test]
+    fn allocation_cells_run_with_traces() {
+        let mut spec = small_spec();
+        spec.n_versions = 2;
+        spec.delta = 0.2;
+        spec.horizon = Some(6);
+        spec.classes = vec![ClassSpec {
+            name: "surge".into(),
+            utility: "log".into(),
+            rate: RateSpec::Trace(vec![(0, 30.0), (3, 45.0)]),
+            sources: Vec::new(),
+        }];
+        let report = Suite::new().spec("surge", spec).allocator("omad").iters(6).run();
+        assert_eq!(report.ok_count(), 1, "{:?}", report.cells[0].outcome);
+        let res = report.cells[0].outcome.as_ref().unwrap();
+        // after the t=3 rate event the allocation tracks the new total
+        let total: f64 = res.report.lam.iter().sum();
+        assert!((total - 45.0).abs() < 1e-6, "Λ sums to {total}, want 45");
+    }
+
+    #[test]
+    fn csv_and_json_render() {
+        let report =
+            Suite::new().spec("a", small_spec()).router("omd").iters(3).run();
+        let csv = report.to_csv();
+        assert!(csv.lines().count() >= 2);
+        assert!(csv.starts_with("scenario,solver"));
+        let json = report.to_json().to_string();
+        let parsed = crate::util::json::Json::parse(&json).unwrap();
+        assert_eq!(parsed.get("cells").as_arr().unwrap().len(), 1);
+    }
+}

@@ -60,7 +60,7 @@ fn assert_close(a: f64, b: f64, what: &str) {
 fn check_point(tag: &str, problem: &Problem, phi: &Phi, lam: &[f64]) {
     let net = &problem.net;
     let ev = flow::evaluate(problem, phi, lam);
-    let m = marginal::compute(net, problem.cost, phi, &ev.flows);
+    let m = marginal::compute(problem, phi, &ev.flows);
 
     let mut eng = FlowEngine::new();
     let cost = eng.prepare(problem, phi, lam);
@@ -173,8 +173,8 @@ fn legacy_omd_step(problem: &Problem, lam: &[f64], phi: &mut Phi, eta: f64) -> f
     let net = &problem.net;
     let t = flow::node_rates(net, phi, lam);
     let flows = flow::edge_flows(net, phi, &t);
-    let cost_before = flow::total_cost(net, problem.cost, &flows);
-    let m = marginal::compute(net, problem.cost, phi, &flows);
+    let cost_before = flow::total_cost(problem, &flows);
+    let m = marginal::compute(problem, phi, &flows);
     for w in 0..net.n_versions() {
         for &i in net.session_routers(w) {
             if t[w][i] <= 0.0 {
@@ -244,9 +244,10 @@ fn full_solves_agree_between_engine_and_reference_analysis() {
     let problem = Problem::new(net, 60.0, CostKind::Exp);
     let lam = problem.uniform_allocation();
     let sol = OmdRouter::new(0.5).solve(&problem, &lam, 2000);
-    let ev = flow::evaluate(&problem, &sol.phi, &lam);
-    assert_close(sol.cost, ev.cost, "final cost");
+    let phi = sol.phi.unwrap();
+    let ev = flow::evaluate(&problem, &phi, &lam);
+    assert_close(sol.objective, ev.cost, "final cost");
     let mut eng = FlowEngine::new().with_workers(4);
-    let c = eng.prepare(&problem, &sol.phi, &lam);
+    let c = eng.prepare(&problem, &phi, &lam);
     assert_close(c, ev.cost, "engine cost at the solution");
 }

@@ -2,7 +2,7 @@
 //! (Theorem 3) on every topology family, and the optimality conditions
 //! hold at the converged point.
 
-use jowr::model::flow;
+use jowr::model::flow::{self, Phi};
 use jowr::prelude::*;
 use jowr::routing::marginal;
 use jowr::routing::Router;
@@ -22,11 +22,11 @@ fn omd_sgp_opt_agree_on_er() {
         let omd = OmdRouter::new(0.5).solve(&p, &lam, 4000);
         let sgp = SgpRouter::new().solve(&p, &lam, 4000);
         let opt = OptRouter::new().solve(&p, &lam);
-        let rel_omd = (omd.cost - opt.cost) / opt.cost;
-        let rel_sgp = (sgp.cost - opt.cost) / opt.cost;
-        assert!(rel_omd.abs() < 5e-3, "seed {seed}: OMD {} vs OPT {}", omd.cost, opt.cost);
-        assert!(rel_sgp.abs() < 5e-3, "seed {seed}: SGP {} vs OPT {}", sgp.cost, opt.cost);
-        assert!(omd.cost >= opt.cost - 1e-6, "OPT must lower-bound");
+        let rel_omd = (omd.objective - opt.cost) / opt.cost;
+        let rel_sgp = (sgp.objective - opt.cost) / opt.cost;
+        assert!(rel_omd.abs() < 5e-3, "seed {seed}: OMD {} vs OPT {}", omd.objective, opt.cost);
+        assert!(rel_sgp.abs() < 5e-3, "seed {seed}: SGP {} vs OPT {}", sgp.objective, opt.cost);
+        assert!(omd.objective >= opt.cost - 1e-6, "OPT must lower-bound");
     }
 }
 
@@ -42,9 +42,9 @@ fn all_named_topologies_converge() {
         let lam = p.uniform_allocation();
         let omd = OmdRouter::new(0.5).solve(&p, &lam, 3000);
         let opt = OptRouter::new().solve(&p, &lam);
-        let rel = (omd.cost - opt.cost) / opt.cost;
-        assert!(rel.abs() < 1e-2, "{name}: OMD {} vs OPT {} (rel {rel})", omd.cost, opt.cost);
-        omd.phi.is_feasible(&p.net, 1e-9).unwrap();
+        let rel = (omd.objective - opt.cost) / opt.cost;
+        assert!(rel.abs() < 1e-2, "{name}: OMD {} vs OPT {} (rel {rel})", omd.objective, opt.cost);
+        omd.phi.unwrap().is_feasible(&p.net, 1e-9).unwrap();
     }
 }
 
@@ -55,9 +55,10 @@ fn optimality_conditions_hold_at_convergence() {
     let p = er_problem(7, 10, 3);
     let lam = p.uniform_allocation();
     let sol = OmdRouter::new(0.5).solve(&p, &lam, 6000);
-    let t = flow::node_rates(&p.net, &sol.phi, &lam);
-    let flows = flow::edge_flows(&p.net, &sol.phi, &t);
-    let m = marginal::compute(&p.net, p.cost, &sol.phi, &flows);
+    let phi = sol.phi.unwrap();
+    let t = flow::node_rates(&p.net, &phi, &lam);
+    let flows = flow::edge_flows(&p.net, &phi, &t);
+    let m = marginal::compute(&p, &phi, &flows);
     for w in 0..p.n_versions() {
         for &i in p.net.session_routers(w) {
             if t[w][i] < 1e-6 {
@@ -66,7 +67,7 @@ fn optimality_conditions_hold_at_convergence() {
             let support: Vec<f64> = p
                 .net
                 .session_out(w, i)
-                .filter(|&e| sol.phi.frac[w][e] > 1e-3)
+                .filter(|&e| phi.frac[w][e] > 1e-3)
                 .map(|e| m.delta(&p.net, w, e))
                 .collect();
             if support.len() < 2 {
@@ -80,7 +81,7 @@ fn optimality_conditions_hold_at_convergence() {
             );
             // unused lanes must not be strictly better (within tolerance)
             for e in p.net.session_out(w, i) {
-                if sol.phi.frac[w][e] <= 1e-3 {
+                if phi.frac[w][e] <= 1e-3 {
                     let d = m.delta(&p.net, w, e);
                     assert!(
                         d >= lo - 0.05 * lo.abs().max(1.0),
@@ -99,11 +100,13 @@ fn cost_families_all_converge() {
         let net = topologies::connected_er(10, 0.35, 3, &mut rng);
         let p = Problem::new(net, 30.0, kind);
         let lam = p.uniform_allocation();
+        let initial = FlowEngine::new().evaluate_cost(&p, &Phi::uniform(&p.net), &lam);
         let sol = OmdRouter::new(0.3).solve(&p, &lam, 2000);
-        assert!(sol.cost <= sol.trajectory[0] + 1e-9, "{kind:?} did not improve");
-        sol.phi.is_feasible(&p.net, 1e-9).unwrap();
+        assert!(sol.objective <= initial + 1e-9, "{kind:?} did not improve");
+        let phi = sol.phi.unwrap();
+        phi.is_feasible(&p.net, 1e-9).unwrap();
         // conservation regardless of cost family
-        let ev = flow::evaluate(&p, &sol.phi, &lam);
+        let ev = flow::evaluate(&p, &phi, &lam);
         for w in 0..3 {
             assert!((ev.t[w][p.net.dnode(w)] - lam[w]).abs() < 1e-9);
         }
@@ -116,7 +119,12 @@ fn gp_converges_but_slower_than_omd() {
     let lam = p.uniform_allocation();
     let omd = OmdRouter::new(0.5).solve(&p, &lam, 40);
     let gp = GpRouter::new(0.002).solve(&p, &lam, 40);
-    assert!(omd.cost <= gp.cost + 1e-9, "OMD {} vs GP {}", omd.cost, gp.cost);
+    assert!(
+        omd.objective <= gp.objective + 1e-9,
+        "OMD {} vs GP {}",
+        omd.objective,
+        gp.objective
+    );
 }
 
 #[test]
@@ -126,6 +134,6 @@ fn more_versions_than_three() {
     let lam = p.uniform_allocation();
     let sol = OmdRouter::new(0.5).solve(&p, &lam, 2000);
     let opt = OptRouter::new().solve(&p, &lam);
-    let rel = (sol.cost - opt.cost) / opt.cost;
-    assert!(rel.abs() < 1e-2, "W=4: OMD {} vs OPT {}", sol.cost, opt.cost);
+    let rel = (sol.objective - opt.cost) / opt.cost;
+    assert!(rel.abs() < 1e-2, "W=4: OMD {} vs OPT {}", sol.objective, opt.cost);
 }

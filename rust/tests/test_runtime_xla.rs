@@ -196,6 +196,6 @@ fn marginal_cross_check_via_xla_flows() {
         );
     }
     // ... and therefore the marginals derived from them agree
-    let m = marginal::compute(&p.net, p.cost, &phi, &flows);
+    let m = marginal::compute(&p, &phi, &flows);
     assert!(m.dprime.iter().all(|d| d.is_finite()));
 }

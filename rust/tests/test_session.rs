@@ -83,82 +83,89 @@ fn both_allocators_run_by_name_through_the_session() {
 }
 
 #[test]
-fn streaming_routing_run_matches_legacy_solve_bit_for_bit() {
+fn streaming_routing_run_matches_solver_solve_bit_for_bit() {
     let session = small_session();
     let lam = session.uniform_allocation();
 
-    // legacy path: Router::solve from the uniform initializer
-    let mut legacy_router = OmdRouter::new(session.cfg.eta_routing);
-    let legacy = legacy_router.solve(&session.problem, &lam, 40);
+    // solver-internal path: Router::solve from the uniform initializer
+    // (returns a RunReport directly — the legacy RoutingState is gone)
+    let mut solve_router = OmdRouter::new(session.cfg.eta_routing);
+    let solved = solve_router.solve(&session.problem, &lam, 40);
 
     // session path: streaming run + trajectory observer
     let mut traj = Trajectory::default();
     let report = session.routing_run("omd", 40).unwrap().observe(&mut traj).finish();
 
-    assert_eq!(report.iterations, legacy.iterations);
-    assert_eq!(report.objective.to_bits(), legacy.cost.to_bits());
-    assert_eq!(traj.values.len(), legacy.trajectory.len());
-    for (i, (a, b)) in traj.values.iter().zip(&legacy.trajectory).enumerate() {
-        assert_eq!(a.to_bits(), b.to_bits(), "trajectory diverged at {i}: {a} vs {b}");
-    }
+    assert_eq!(report.iterations, solved.iterations);
+    assert_eq!(report.objective.to_bits(), solved.objective.to_bits());
+    assert_eq!(report.stop, solved.stop);
+    assert_eq!(traj.values.len(), report.iterations + 1, "per-iter costs + final");
+    assert_eq!(traj.values.last().unwrap().to_bits(), solved.objective.to_bits());
     let phi = report.phi.unwrap();
-    for (ra, rb) in phi.frac.iter().zip(&legacy.phi.frac) {
+    let solved_phi = solved.phi.unwrap();
+    for (ra, rb) in phi.frac.iter().zip(&solved_phi.frac) {
         for (a, b) in ra.iter().zip(rb) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
     }
-}
 
-#[test]
-fn warm_started_run_matches_legacy_solve_from_bit_for_bit() {
-    let session = small_session();
-    let lam = session.uniform_allocation();
-
-    // evolve a warm routing state through the session API
-    let warm = session.routing_run("omd", 15).unwrap().finish().phi.unwrap();
-
-    // legacy continuation: fresh router, warm phi
-    let mut phi_legacy = warm.clone();
-    let mut legacy_router = OmdRouter::new(session.cfg.eta_routing);
-    let legacy = legacy_router.solve_from(&session.problem, &lam, &mut phi_legacy, 25);
-
-    // streaming continuation: fresh router, same warm phi
-    let mut traj = Trajectory::default();
-    let report = session
-        .routing_run("omd", 25)
-        .unwrap()
-        .warm_start(warm)
-        .observe(&mut traj)
-        .finish();
-
-    assert_eq!(report.iterations, legacy.iterations);
-    assert_eq!(report.objective.to_bits(), legacy.cost.to_bits());
-    for (a, b) in traj.values.iter().zip(&legacy.trajectory) {
-        assert_eq!(a.to_bits(), b.to_bits());
+    // and streaming runs are fully deterministic: a second run reproduces
+    // the trajectory bit for bit
+    let mut traj2 = Trajectory::default();
+    session.routing_run("omd", 40).unwrap().observe(&mut traj2).finish();
+    assert_eq!(traj.values.len(), traj2.values.len());
+    for (i, (a, b)) in traj.values.iter().zip(&traj2.values).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "trajectory diverged at {i}: {a} vs {b}");
     }
 }
 
 #[test]
-fn streaming_allocation_run_matches_legacy_run_bit_for_bit() {
+fn warm_started_run_matches_solver_solve_from_bit_for_bit() {
+    let session = small_session();
+    let lam = session.uniform_allocation();
+
+    // evolve a warm routing state through the session API
+    let warm_report = session.routing_run("omd", 15).unwrap().finish();
+    let warm = warm_report.final_phi().unwrap().clone();
+
+    // solver continuation: fresh router, warm phi
+    let mut phi_solver = warm.clone();
+    let mut solve_router = OmdRouter::new(session.cfg.eta_routing);
+    let solved = solve_router.solve_from(&session.problem, &lam, &mut phi_solver, 25);
+
+    // streaming continuation: fresh router, same warm phi (via the
+    // RunReport-based hand-off)
+    let report = session
+        .routing_run("omd", 25)
+        .unwrap()
+        .warm_start_from(&warm_report)
+        .finish();
+
+    assert_eq!(report.iterations, solved.iterations);
+    assert_eq!(report.objective.to_bits(), solved.objective.to_bits());
+}
+
+#[test]
+fn streaming_allocation_run_matches_allocator_run_bit_for_bit() {
     let session = Scenario::paper_default().nodes(8).seed(5).build().unwrap();
 
-    // legacy path: Allocator::run against a fresh analytic oracle
+    // solver-internal path: Allocator::run against a fresh analytic oracle
+    // (returns a RunReport directly — the legacy AllocationState is gone)
     let mut oracle = AnalyticOracle::new(session.problem.clone(), session.utilities().unwrap());
     oracle.router_eta = session.cfg.eta_routing;
-    let mut legacy_alg = GsOma::new(session.cfg.delta, session.cfg.eta_alloc);
-    let legacy = legacy_alg.run(&mut oracle, 8);
+    let mut alg = GsOma::new(session.cfg.delta, session.cfg.eta_alloc);
+    let solved = alg.run(&mut oracle, 8);
 
     // session path: the oracle/allocator pair is wired by name
     let mut traj = Trajectory::default();
     let report = session.allocation_run("gsoma", 8).unwrap().observe(&mut traj).finish();
 
-    assert_eq!(report.iterations, legacy.iterations);
-    assert_eq!(report.routing_iterations, legacy.routing_iterations);
-    assert_eq!(traj.values.len(), legacy.trajectory.len());
-    for (a, b) in traj.values.iter().zip(&legacy.trajectory) {
-        assert_eq!(a.to_bits(), b.to_bits());
-    }
-    for (a, b) in report.lam.iter().zip(&legacy.lam) {
+    assert_eq!(report.iterations, solved.iterations);
+    assert_eq!(report.routing_iterations, solved.routing_iterations);
+    assert_eq!(report.objective.to_bits(), solved.objective.to_bits());
+    assert_eq!(traj.values.len(), report.iterations + 1);
+    assert_eq!(traj.values.last().unwrap().to_bits(), solved.objective.to_bits());
+    for (a, b) in report.lam.iter().zip(&solved.lam) {
         assert_eq!(a.to_bits(), b.to_bits());
     }
 }
@@ -201,18 +208,20 @@ fn stop_rules_fire_with_the_right_reason() {
 }
 
 #[test]
-fn zero_iteration_budget_matches_legacy_semantics() {
+fn zero_iteration_budget_matches_solver_semantics() {
     let session = small_session();
     let lam = session.uniform_allocation();
-    // legacy solve(.., 0): zero iterations, trajectory = [initial cost]
-    let legacy = OmdRouter::new(session.cfg.eta_routing).solve(&session.problem, &lam, 0);
+    // solve(.., 0): zero iterations, objective = cost at the initializer
+    let solved = OmdRouter::new(session.cfg.eta_routing).solve(&session.problem, &lam, 0);
     let mut traj = Trajectory::default();
     let report = session.routing_run("omd", 0).unwrap().observe(&mut traj).finish();
     assert_eq!(report.iterations, 0);
     assert_eq!(report.stop, StopReason::MaxIters);
-    assert_eq!(legacy.iterations, 0);
-    assert_eq!(traj.values.len(), legacy.trajectory.len());
-    assert_eq!(traj.values[0].to_bits(), legacy.trajectory[0].to_bits());
+    assert_eq!(solved.iterations, 0);
+    assert_eq!(solved.stop, StopReason::MaxIters);
+    assert_eq!(traj.values.len(), 1, "only the final (initial-state) cost");
+    assert_eq!(traj.values[0].to_bits(), solved.objective.to_bits());
+    assert_eq!(report.objective.to_bits(), solved.objective.to_bits());
 }
 
 #[test]

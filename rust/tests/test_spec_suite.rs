@@ -1,0 +1,180 @@
+//! Integration: declarative `ScenarioSpec` scenarios end-to-end through
+//! the parallel `Suite` runner — including the committed scenario gallery
+//! under `examples/scenarios/` and the acceptance scenario of the spec
+//! redesign: a multi-class heterogeneous workload loaded from JSON with
+//! ≥2 task classes (distinct utility families) and per-node capacities.
+
+use std::path::Path;
+
+use jowr::model::flow;
+use jowr::prelude::*;
+use jowr::routing::Router;
+
+fn gallery(name: &str) -> ScenarioSpec {
+    let path = Path::new("../examples/scenarios").join(name);
+    ScenarioSpec::from_file(&path).unwrap_or_else(|e| panic!("{name}: {e}"))
+}
+
+#[test]
+fn every_committed_scenario_file_loads_and_builds() {
+    for name in ["heterogeneous_star.json", "two_class_er.json", "trace_surge.json"] {
+        let spec = gallery(name);
+        // full JSON round-trip on the committed files
+        let back = ScenarioSpec::from_json(&spec.to_json().to_string())
+            .unwrap_or_else(|e| panic!("{name} round-trip: {e}"));
+        assert_eq!(back, spec, "{name} round-trip changed the spec");
+        let session = spec.build().unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(session.problem.total_rate > 0.0);
+    }
+}
+
+#[test]
+fn multi_class_json_scenario_runs_end_to_end_through_suite() {
+    // the acceptance scenario: multi-class + heterogeneous nodes, loaded
+    // from JSON (not the builder), run through Suite for routing AND
+    // allocation, producing a SuiteReport
+    let text = r#"{
+        "name": "accept",
+        "topology": {"kind": "er", "n_nodes": 12, "p_link": 0.3},
+        "n_versions": 2,
+        "cap_mean": 10.0,
+        "cost": "exp",
+        "nodes": [
+            {"id": 0, "compute_capacity": 25.0},
+            {"id": 3, "compute_capacity": 6.0, "version": 1}
+        ],
+        "classes": [
+            {"name": "video", "utility": "log", "rate": 30.0, "sources": [0, 1]},
+            {"name": "audio", "utility": "sqrt", "rate": 14.0, "sources": []}
+        ],
+        "delta": 0.3,
+        "seed": 9
+    }"#;
+    let spec = ScenarioSpec::from_json(text).unwrap();
+    let report = Suite::new()
+        .spec("accept", spec)
+        .router("omd")
+        .router("sgp")
+        .allocator("omad")
+        .seeds(&[9])
+        .iters(12)
+        .workers(2)
+        .run();
+    assert_eq!(report.cells.len(), 3);
+    assert_eq!(report.ok_count(), 3, "{:?}", report.cells);
+    // routing cells descend and expose a feasible 4-session phi
+    for solver in ["omd", "sgp"] {
+        let res = report.cell_result("accept", solver).unwrap();
+        assert!(res.report.objective.is_finite());
+        assert!(
+            res.report.objective <= res.trajectory[0] + 1e-9,
+            "{solver} did not improve"
+        );
+        let phi = res.report.phi.as_ref().expect("routing cells expose phi");
+        assert_eq!(phi.frac.len(), 4, "2 classes x 2 versions");
+    }
+    // the allocation cell conserves each class's rate on its own block
+    let res = report.cell_result("accept", "omad").unwrap();
+    let lam = &res.report.lam;
+    assert_eq!(lam.len(), 4);
+    assert!((lam[0] + lam[1] - 30.0).abs() < 1e-6, "video block: {lam:?}");
+    assert!((lam[2] + lam[3] - 14.0).abs() < 1e-6, "audio block: {lam:?}");
+    // CSV + JSON artifacts render
+    assert!(report.to_csv().contains("accept"));
+    assert!(report.to_json().to_string().contains("trajectory"));
+}
+
+#[test]
+fn multi_class_flows_match_reference_and_conserve_per_class() {
+    // the engine's fused sweeps and the reference flow algebra must agree
+    // on multi-class problems exactly like they do on single-class ones
+    let session = gallery("two_class_er.json").build().unwrap();
+    let p = &session.problem;
+    assert_eq!(p.n_sessions(), 6, "2 classes x 3 versions");
+    let lam = p.uniform_allocation();
+    let phi = jowr::model::flow::Phi::uniform(&p.net);
+    let ev = flow::evaluate(p, &phi, &lam);
+    let mut eng = FlowEngine::new();
+    let cost = eng.prepare(p, &phi, &lam);
+    assert!((cost - ev.cost).abs() <= 1e-12 * ev.cost.abs().max(1.0));
+    for s in 0..p.n_sessions() {
+        // every session delivers its allocation to its version destination
+        let d = p.net.dnode(s);
+        assert!(
+            (ev.t[s][d] - lam[s]).abs() < 1e-9,
+            "session {s}: delivered {} vs allocated {}",
+            ev.t[s][d],
+            lam[s]
+        );
+        for i in 0..p.net.n_nodes() {
+            assert!(
+                (eng.node_rate(s, i) - ev.t[s][i]).abs() <= 1e-12,
+                "t[{s}][{i}] engine vs reference"
+            );
+        }
+    }
+    // and an OMD solve descends with a feasible multi-class phi
+    let sol = OmdRouter::new(0.3).solve(p, &lam, 50);
+    sol.phi.unwrap().is_feasible(&p.net, 1e-9).unwrap();
+    let initial = FlowEngine::new().evaluate_cost(p, &phi, &lam);
+    assert!(sol.objective < initial);
+}
+
+#[test]
+fn trace_scenario_rate_events_fire_in_suite_allocation() {
+    let spec = gallery("trace_surge.json");
+    // the surge class's trace must compile to two events (t=20, t=40)
+    let schedule = spec.events();
+    assert_eq!(schedule.fire(20).count(), 1);
+    assert_eq!(schedule.fire(40).count(), 1);
+    assert_eq!(schedule.fire(0).count(), 0);
+    // run the allocation past the first breakpoint: the final Λ sums to
+    // the post-event total (steady 20 + surge 35)
+    let report =
+        Suite::new().spec("surge", spec).allocator("omad").iters(25).workers(1).run();
+    assert_eq!(report.ok_count(), 1, "{:?}", report.cells[0].outcome);
+    let res = report.cell_result("surge", "omad").unwrap();
+    let total: f64 = res.report.lam.iter().sum();
+    assert!((total - 55.0).abs() < 1e-6, "Λ sums to {total}, want 55");
+}
+
+#[test]
+fn per_edge_cost_scenario_prices_links_heterogeneously() {
+    let session = gallery("heterogeneous_star.json").build().unwrap();
+    let p = &session.problem;
+    // the hub-spoke link 0<->1 is queue-priced, the rest exp-priced
+    assert_eq!(p.edge_kind(0), CostKind::Queue);
+    assert_eq!(p.edge_kind(1), CostKind::Queue);
+    assert_eq!(p.edge_kind(2), CostKind::Exp);
+    // pinned versions + capacities took effect
+    assert_eq!(p.net.placement.version_of[0], 0);
+    assert_eq!(p.net.placement.version_of[1], 1);
+    assert_eq!(p.net.placement.version_of[2], 2);
+    // a routing run on the heterogeneous-cost network descends
+    let report = session.routing_run("omd", 30).unwrap().finish();
+    assert!(report.objective.is_finite());
+}
+
+#[test]
+fn suite_seed_grid_is_deterministic_per_seed() {
+    let spec = gallery("two_class_er.json");
+    let run = |workers: usize| {
+        Suite::new()
+            .spec("g", spec.clone())
+            .router("omd")
+            .seeds(&[1, 2])
+            .iters(6)
+            .workers(workers)
+            .run()
+    };
+    let a = run(1);
+    let b = run(2);
+    for (ca, cb) in a.cells.iter().zip(&b.cells) {
+        let (ra, rb) = (ca.outcome.as_ref().unwrap(), cb.outcome.as_ref().unwrap());
+        assert_eq!(ra.report.objective.to_bits(), rb.report.objective.to_bits());
+    }
+    // different seeds genuinely change the instance
+    let r1 = &a.cells[0].outcome.as_ref().unwrap().report;
+    let r2 = &a.cells[1].outcome.as_ref().unwrap().report;
+    assert_ne!(r1.objective.to_bits(), r2.objective.to_bits());
+}
