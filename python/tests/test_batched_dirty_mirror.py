@@ -1,0 +1,477 @@
+"""Pure-python mirror of the PR-5 engine claims (no jax required).
+
+Mirrors the three bit-identity arguments behind the session-batched SoA
+kernels and the incremental dirty-session sweeps in ``rust/src/engine``:
+
+1. **Batched forward ≡ scalar forward, bit for bit.** Sessions of one
+   version share a topological row order (computed on the union of their
+   DAG masks); a session that does not use a union lane sees ``phi = 0``
+   there, and ``x + 0.0`` is exact on the non-negative accumulators, so
+   the lane-major batched recurrence replays each session's scalar
+   operation order exactly.
+2. **Batched reverse ≡ scalar reverse, bit for bit**, with the per-lane
+   ``phi > 0`` guard.
+3. **Dirty delta evaluation ≡ full evaluation, bit for bit**: dirty
+   sessions re-run eq. 1; touched edges re-reduce over the full ascending
+   session order; only bitwise-changed flows reprice; the reverse
+   broadcast re-runs fully for dirty sessions and only upstream of
+   repriced lanes (pruned on bitwise-unchanged rows) for clean ones.
+
+The rust implementation is structured identically (see
+``rust/src/engine/mod.rs`` and ``rust/src/engine/dirty.rs``); this mirror
+exists so the algebra is executable in environments without a Rust
+toolchain and guards the argument itself against regressions.
+"""
+
+from __future__ import annotations
+
+import math
+import random
+import struct
+from collections import deque
+
+# ---------------------------------------------------------------- topology
+
+
+def bits(x: float) -> bytes:
+    return struct.pack("<d", x)
+
+
+class Net:
+    """A miniature augmented CEC net: S=0, devices 1..n, D_w at n+1+w."""
+
+    def __init__(self, rng: random.Random, n_dev: int, n_ver: int, classes: int):
+        self.n_ver = n_ver
+        self.n_real = n_dev
+        self.n_nodes = 1 + n_dev + n_ver
+        self.edges: list[tuple[int, int, float]] = []  # (src, dst, cap)
+        self.out_adj: list[list[int]] = [[] for _ in range(self.n_nodes)]
+        self.in_adj: list[list[int]] = [[] for _ in range(self.n_nodes)]
+        # random strongly-connected-ish device mesh: a ring + extra chords
+        for d in range(n_dev):
+            self._add(1 + d, 1 + (d + 1) % n_dev, rng.uniform(2.0, 18.0))
+        for _ in range(2 * n_dev):
+            a, b = rng.randrange(n_dev), rng.randrange(n_dev)
+            if a != b and not self._has(1 + a, 1 + b):
+                self._add(1 + a, 1 + b, rng.uniform(2.0, 18.0))
+        # hosting: device d serves version d % W  ->  edge to D_w
+        self.version_of = [d % n_ver for d in range(n_dev)]
+        for d in range(n_dev):
+            self._add(1 + d, 1 + n_dev + self.version_of[d], rng.uniform(2.0, 18.0))
+        # class admission sets (class 0 = hosts of version 0)
+        self.class_sources = [[d for d in range(n_dev) if self.version_of[d] == 0]]
+        for _ in range(1, classes):
+            k = rng.randrange(1, 3)
+            self.class_sources.append(sorted(rng.sample(range(n_dev), k)))
+        for sources in self.class_sources:
+            for d in sources:
+                if not self._has(0, 1 + d):
+                    self._add(0, 1 + d, 1e6)
+        # sessions: class-major (class c, version w) -> session c*W + w
+        self.sessions = [
+            (c, w) for c in range(len(self.class_sources)) for w in range(n_ver)
+        ]
+        self._build_masks()
+        self._build_csr()
+
+    def _add(self, s: int, d: int, cap: float) -> None:
+        e = len(self.edges)
+        self.edges.append((s, d, cap))
+        self.out_adj[s].append(e)
+        self.in_adj[d].append(e)
+
+    def _has(self, s: int, d: int) -> bool:
+        return any(self.edges[e][1] == d for e in self.out_adj[s])
+
+    def dnode(self, w: int) -> int:
+        return 1 + self.n_real + w
+
+    def _dist_to(self, target: int) -> list[float]:
+        dist = [math.inf] * self.n_nodes
+        dist[target] = 0
+        q = deque([target])
+        while q:
+            u = q.popleft()
+            for e in self.in_adj[u]:
+                v = self.edges[e][0]
+                if dist[v] == math.inf:
+                    dist[v] = dist[u] + 1
+                    q.append(v)
+        return dist
+
+    def _build_masks(self) -> None:
+        ne = len(self.edges)
+        self.mask: list[list[bool]] = []
+        for c, w in self.sessions:
+            dist = self._dist_to(self.dnode(w))
+            admit = [1 + d for d in self.class_sources[c]]
+            reach = [dist[a] for a in admit if dist[a] < math.inf]
+            amin = min(reach) if reach else math.inf
+            m = [False] * ne
+            for e, (s, d, _cap) in enumerate(self.edges):
+                if s == 0:
+                    m[e] = d in admit and dist[d] == amin
+                    continue
+                if math.isinf(dist[s]) or math.isinf(dist[d]) or dist[d] >= dist[s]:
+                    continue
+                if 1 <= s <= self.n_real and self.version_of[s - 1] == w:
+                    if d != self.dnode(w):
+                        continue
+                if d > self.n_real and d != self.dnode(w):
+                    continue
+                m[e] = True
+            self.mask.append(m)
+
+    def _topo(self, mask: list[bool]) -> list[int]:
+        indeg = [0] * self.n_nodes
+        for e, (_s, d, _c) in enumerate(self.edges):
+            if mask[e]:
+                indeg[d] += 1
+        q = deque(i for i in range(self.n_nodes) if indeg[i] == 0)
+        order = []
+        while q:
+            u = q.popleft()
+            order.append(u)
+            for e in self.out_adj[u]:
+                if mask[e]:
+                    v = self.edges[e][1]
+                    indeg[v] -= 1
+                    if indeg[v] == 0:
+                        q.append(v)
+        assert len(order) == self.n_nodes, "cycle in session DAG"
+        return order
+
+    def _build_csr(self) -> None:
+        ne = len(self.edges)
+        n_sess = len(self.sessions)
+        # per-version union topo order (the PR-5 shared order)
+        self.ver_topo = []
+        for w in range(self.n_ver):
+            union = [False] * ne
+            for s, (_c, sw) in enumerate(self.sessions):
+                if sw == w:
+                    union = [u or m for u, m in zip(union, self.mask[s])]
+            self.ver_topo.append(self._topo(union))
+        self.topo = [self.ver_topo[w] for (_c, w) in self.sessions]
+        # scalar CSR: per session, rows (node, lanes) in shared topo order
+        self.rows: list[list[tuple[int, list[int]]]] = []
+        for s in range(n_sess):
+            rows = []
+            for i in self.topo[s]:
+                lanes = [e for e in self.out_adj[i] if self.mask[s][e]]
+                if lanes:
+                    rows.append((i, lanes))
+            self.rows.append(rows)
+        # batched CSR: per version block, union rows + member sessions
+        self.blocks = []
+        for w in range(self.n_ver):
+            members = [s for s, (_c, sw) in enumerate(self.sessions) if sw == w]
+            union = [False] * ne
+            for s in members:
+                union = [u or m for u, m in zip(union, self.mask[s])]
+            rows = []
+            for i in self.ver_topo[w]:
+                lanes = [e for e in self.out_adj[i] if union[e]]
+                if lanes:
+                    rows.append((i, lanes))
+            self.blocks.append((members, rows))
+        # transposed edge -> ascending sessions index
+        self.edge_sessions = [
+            [s for s in range(n_sess) if self.mask[s][e]] for e in range(ne)
+        ]
+        self.union_edges = [
+            e for e in range(ne) if any(self.mask[s][e] for s in range(n_sess))
+        ]
+
+
+# ------------------------------------------------------------- cost family
+
+
+def d_val(f: float, cap: float) -> float:
+    return math.exp(f / cap) / cap
+
+
+def d_prime(f: float, cap: float) -> float:
+    return math.exp(f / cap) / (cap * cap)
+
+
+# ---------------------------------------------------------------- kernels
+
+
+def uniform_phi(net: Net) -> list[list[float]]:
+    phi = []
+    for s in range(len(net.sessions)):
+        row = [0.0] * len(net.edges)
+        for _i, lanes in net.rows[s]:
+            f = 1.0 / len(lanes)
+            for e in lanes:
+                row[e] = f
+        phi.append(row)
+    return phi
+
+
+def scalar_forward(net: Net, phi, lam):
+    """Reference scalar sweep: per session, rows in the shared topo order."""
+    n_sess = len(net.sessions)
+    t = [[0.0] * net.n_nodes for _ in range(n_sess)]
+    sess_f = [[0.0] * len(net.edges) for _ in range(n_sess)]
+    for s in range(n_sess):
+        t[s][0] = lam[s]
+        for i, lanes in net.rows[s]:
+            ti = t[s][i]
+            if ti <= 0.0:
+                continue
+            for e in lanes:
+                c = ti * phi[s][e]
+                sess_f[s][e] = c
+                t[s][net.edges[e][1]] += c
+    flows = [0.0] * len(net.edges)
+    for s in range(n_sess):
+        for _i, lanes in net.rows[s]:
+            for e in lanes:
+                flows[e] += sess_f[s][e]
+    vals = [0.0] * len(net.edges)
+    cost = 0.0
+    for e in net.union_edges:
+        vals[e] = d_val(flows[e], net.edges[e][2])
+        cost += vals[e]
+    return t, sess_f, flows, vals, cost
+
+
+def batched_forward(net: Net, phi, lam):
+    """Lane-major SoA sweep over version blocks; masked lanes see phi=0."""
+    n_sess = len(net.sessions)
+    t = [[0.0] * net.n_nodes for _ in range(n_sess)]
+    sess_f = [[0.0] * len(net.edges) for _ in range(n_sess)]
+    for members, rows in net.blocks:
+        for j, s in enumerate(members):
+            t[s][0] = lam[s]
+        for i, lanes in rows:
+            rt = [t[s][i] for s in members]
+            for e in lanes:
+                dst = net.edges[e][1]
+                for j, s in enumerate(members):
+                    c = rt[j] * phi[s][e]  # phi == 0.0 off the session DAG
+                    sess_f[s][e] = c
+                    t[s][dst] += c
+    # fixed-order reduction: ascending sessions, each over its own lanes
+    flows = [0.0] * len(net.edges)
+    for s in range(n_sess):
+        for _i, lanes in net.rows[s]:
+            for e in lanes:
+                flows[e] += sess_f[s][e]
+    vals = [0.0] * len(net.edges)
+    cost = 0.0
+    for e in net.union_edges:
+        vals[e] = d_val(flows[e], net.edges[e][2])
+        cost += vals[e]
+    return t, sess_f, flows, vals, cost
+
+
+def scalar_reverse(net: Net, phi, flows):
+    dp = [0.0] * len(net.edges)
+    for e in net.union_edges:
+        dp[e] = d_prime(flows[e], net.edges[e][2])
+    r = [[0.0] * net.n_nodes for _ in range(len(net.sessions))]
+    for s in range(len(net.sessions)):
+        for i, lanes in reversed(net.rows[s]):
+            acc = 0.0
+            for e in lanes:
+                f = phi[s][e]
+                if f > 0.0:
+                    acc += f * (dp[e] + r[s][net.edges[e][1]])
+            r[s][i] = acc
+    return dp, r
+
+
+def batched_reverse(net: Net, phi, flows):
+    dp = [0.0] * len(net.edges)
+    for e in net.union_edges:
+        dp[e] = d_prime(flows[e], net.edges[e][2])
+    r = [[0.0] * net.n_nodes for _ in range(len(net.sessions))]
+    for members, rows in net.blocks:
+        for i, lanes in reversed(rows):
+            acc = [0.0] * len(members)
+            for e in lanes:
+                dst = net.edges[e][1]
+                for j, s in enumerate(members):
+                    f = phi[s][e]
+                    acc[j] += f * (dp[e] + r[s][dst]) if f > 0.0 else 0.0
+            for j, s in enumerate(members):
+                r[s][i] = acc[j]
+    return dp, r
+
+
+def dirty_update(net: Net, state, phi, lam, dirty: set[int]):
+    """In-place delta evaluation mirroring FlowEngine::prepare_dirty."""
+    t, sess_f, flows, vals, dp, r = state
+    touched: list[int] = []
+    seen = [False] * len(net.edges)
+    for s in sorted(dirty):
+        # re-run eq. 1 for the dirty session
+        for i in range(net.n_nodes):
+            t[s][i] = 0.0
+        for _i, lanes in net.rows[s]:
+            for e in lanes:
+                sess_f[s][e] = 0.0
+        t[s][0] = lam[s]
+        for i, lanes in net.rows[s]:
+            ti = t[s][i]
+            if ti <= 0.0:
+                continue
+            for e in lanes:
+                c = ti * phi[s][e]
+                sess_f[s][e] = c
+                t[s][net.edges[e][1]] += c
+        for _i, lanes in net.rows[s]:
+            for e in lanes:
+                if not seen[e]:
+                    seen[e] = True
+                    touched.append(e)
+    # re-reduce touched edges in full ascending session order
+    repriced = []
+    for e in touched:
+        total = 0.0
+        for s in net.edge_sessions[e]:
+            total += sess_f[s][e]
+        if bits(total) != bits(flows[e]):
+            flows[e] = total
+            vals[e] = d_val(total, net.edges[e][2])
+            repriced.append(e)
+    cost = 0.0
+    for e in net.union_edges:
+        cost += vals[e]
+    # reverse: reprice D' on changed edges, full re-broadcast for dirty
+    # sessions, pruned upstream re-broadcast for clean ones
+    for e in repriced:
+        dp[e] = d_prime(flows[e], net.edges[e][2])
+    for s in range(len(net.sessions)):
+        if s in dirty:
+            for i, lanes in reversed(net.rows[s]):
+                acc = 0.0
+                for e in lanes:
+                    f = phi[s][e]
+                    if f > 0.0:
+                        acc += f * (dp[e] + r[s][net.edges[e][1]])
+                r[s][i] = acc
+        else:
+            must = set()
+            for e in repriced:
+                if net.mask[s][e]:
+                    must.add(net.edges[e][0])
+            if not must:
+                continue
+            for i, lanes in reversed(net.rows[s]):
+                if i not in must:
+                    continue
+                acc = 0.0
+                for e in lanes:
+                    f = phi[s][e]
+                    if f > 0.0:
+                        acc += f * (dp[e] + r[s][net.edges[e][1]])
+                if bits(acc) != bits(r[s][i]):
+                    r[s][i] = acc
+                    for e_in in net.in_adj[i]:
+                        if net.mask[s][e_in]:
+                            must.add(net.edges[e_in][0])
+    return cost
+
+
+def evolve_phi(net: Net, phi, t, dp, r, eta=0.3):
+    """One crude mirror-descent-ish row update to leave the uniform point."""
+    for s in range(len(net.sessions)):
+        for i, lanes in net.rows[s]:
+            if len(lanes) < 2 or t[s][i] <= 0.0:
+                continue
+            zs = [-eta * (dp[e] + r[s][net.edges[e][1]]) for e in lanes]
+            zmax = max(zs)
+            ws = [phi[s][e] * math.exp(z - zmax) for e, z in zip(lanes, zs)]
+            tot = sum(ws)
+            if tot > 0:
+                for e, wgt in zip(lanes, ws):
+                    phi[s][e] = wgt / tot
+
+
+# ------------------------------------------------------------------ tests
+
+
+def _assert_bits_equal(a, b, what):
+    if isinstance(a, list):
+        assert len(a) == len(b), what
+        for x, y in zip(a, b):
+            _assert_bits_equal(x, y, what)
+    else:
+        assert bits(a) == bits(b), f"{what}: {a!r} vs {b!r}"
+
+
+def test_batched_sweeps_bit_identical_to_scalar():
+    for seed in range(8):
+        rng = random.Random(seed)
+        net = Net(rng, n_dev=9, n_ver=3, classes=rng.choice([1, 2, 4]))
+        phi = uniform_phi(net)
+        lam = [rng.uniform(0.0, 30.0) for _ in net.sessions]
+        for _round in range(3):
+            ts, fs, fls, _vs, cs = scalar_forward(net, phi, lam)
+            tb, fb, flb, _vb, cb = batched_forward(net, phi, lam)
+            _assert_bits_equal(ts, tb, f"t seed={seed}")
+            _assert_bits_equal(fs, fb, f"sess_f seed={seed}")
+            _assert_bits_equal(fls, flb, f"flows seed={seed}")
+            assert bits(cs) == bits(cb), f"cost seed={seed}"
+            dps, rs = scalar_reverse(net, phi, fls)
+            dpb, rb = batched_reverse(net, phi, flb)
+            _assert_bits_equal(dps, dpb, f"dprime seed={seed}")
+            _assert_bits_equal(rs, rb, f"r seed={seed}")
+            evolve_phi(net, phi, ts, dps, rs)
+
+
+def test_dirty_sequences_bit_identical_to_full_sweeps():
+    for seed in range(8):
+        rng = random.Random(100 + seed)
+        classes = rng.choice([2, 3])
+        net = Net(rng, n_dev=8, n_ver=2, classes=classes)
+        n_sess = len(net.sessions)
+        phi = uniform_phi(net)
+        lam = [rng.uniform(1.0, 20.0) for _ in range(n_sess)]
+        t, sess_f, flows, vals, _c = scalar_forward(net, phi, lam)
+        dp, r = scalar_reverse(net, phi, flows)
+        state = (t, sess_f, flows, vals, dp, r)
+        for step in range(12):
+            kind = rng.random()
+            if kind < 0.5:
+                # lambda perturbation of one class block
+                c = rng.randrange(classes)
+                dirty = set(range(c * net.n_ver, (c + 1) * net.n_ver))
+                for s in dirty:
+                    lam[s] = max(0.0, lam[s] + rng.uniform(-2.0, 2.0))
+            elif kind < 0.8:
+                # phi row perturbation of a random session
+                s = rng.randrange(n_sess)
+                dirty = {s}
+                evolve_one = [row for row in net.rows[s] if len(row[1]) >= 2]
+                if evolve_one:
+                    i, lanes = rng.choice(evolve_one)
+                    shift = rng.uniform(0.0, phi[s][lanes[0]])
+                    phi[s][lanes[0]] -= shift
+                    phi[s][lanes[1]] += shift
+            else:
+                # random sparse mask, possibly empty
+                dirty = {s for s in range(n_sess) if rng.random() < 0.3}
+                for s in dirty:
+                    lam[s] = max(0.0, lam[s] + rng.uniform(-1.0, 1.0))
+            cost_d = dirty_update(net, state, phi, lam, dirty)
+            tf, ff, flf, vf, cf = scalar_forward(net, phi, lam)
+            dpf, rf = scalar_reverse(net, phi, flf)
+            tag = f"seed={seed} step={step}"
+            _assert_bits_equal(state[0], tf, f"t {tag}")
+            _assert_bits_equal(state[1], ff, f"sess_f {tag}")
+            _assert_bits_equal(state[2], flf, f"flows {tag}")
+            _assert_bits_equal(state[3], vf, f"vals {tag}")
+            _assert_bits_equal(state[4], dpf, f"dprime {tag}")
+            _assert_bits_equal(state[5], rf, f"r {tag}")
+            assert bits(cost_d) == bits(cf), f"cost {tag}"
+
+
+if __name__ == "__main__":
+    test_batched_sweeps_bit_identical_to_scalar()
+    test_dirty_sequences_bit_identical_to_full_sweeps()
+    print("mirror OK")

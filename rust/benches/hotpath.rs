@@ -2,7 +2,7 @@
 //! plus the native-vs-XLA ablation.
 //!
 //! Covers the per-iteration cost breakdown of OMD-RT on paper-sized
-//! instances three ways:
+//! instances five ways:
 //!
 //! * the **reference** sweeps (`flow::node_rates` / `flow::edge_flows` /
 //!   `flow::total_cost` / `marginal::compute`, freshly allocated every
@@ -10,18 +10,28 @@
 //! * the **engine** fused forward+reverse sweep ([`FlowEngine::prepare`])
 //!   at 1, 2, and 4 workers (thread-scaling rows) on the persistent
 //!   worker pool, plus the legacy per-sweep `thread::scope` spawn at 4
-//!   workers (`engine_fused_prepare_scope_w4`) as the pool's baseline, and
+//!   workers (`engine_fused_prepare_scope_w4`) as the pool's baseline,
+//! * the **session-batched SoA** kernels vs the scalar per-session
+//!   kernels on a multi-class scenario (12 sessions, blocks of width 4):
+//!   `mc{25,40}/engine_fused_prepare_{batched,scalar}_w{1,4}` — batched
+//!   must be at least as fast (asserted; results bit-identical),
+//! * the **incremental dirty-session path** on a 40-node clustered fleet
+//!   (20 per-cluster task classes, hardened post-convergence φ):
+//!   `clusters40/engine_prepare_dirty_block` re-evaluates a single-class
+//!   λ perturbation ≥ 3× faster than `clusters40/engine_prepare_full`
+//!   (asserted; the delta state stays bit-identical to a full sweep), and
 //! * full `omd_full_iteration` / `sgp_engine_iteration` solver steps, with
 //!   a faithfully reconstructed legacy OMD iteration as the baseline (the
 //!   SGP row's "engine" name puts it under the CI bench-regression gate,
 //!   pinning the workspace-backed Hessian-bound DPs).
 //!
-//! Emits every measurement plus the engine-vs-legacy speedups as JSON to
+//! Emits every measurement plus the speedup ratios as JSON to
 //! `BENCH_hotpath.json` (written to the current directory) and asserts the
-//! two shape invariants: the fused single-threaded engine beats the legacy
-//! four-sweep iteration, and one OMD iteration stays far cheaper than one
-//! SGP iteration (the Fig. 9 effect at micro scale). Run with `--quick`
-//! for the CI smoke configuration.
+//! shape invariants above plus the two originals: the fused
+//! single-threaded engine beats the legacy four-sweep iteration, and one
+//! OMD iteration stays far cheaper than one SGP iteration (the Fig. 9
+//! effect at micro scale). Run with `--quick` for the CI smoke
+//! configuration.
 
 use jowr::model::flow::{self, Phi};
 use jowr::prelude::*;
@@ -142,6 +152,91 @@ fn main() {
         println!("(built without the xla feature — skipping XLA ablation)");
     }
 
+    // session-batched SoA kernels vs the scalar per-session kernels on a
+    // multi-class workload (4 task classes × 3 versions = 12 sessions,
+    // version blocks of width 4); results are bit-identical, only the
+    // layout differs
+    for &n in &[25usize, 40] {
+        let session = Scenario::paper_default()
+            .nodes(n)
+            .seed(7)
+            .class("c0", "log", 20.0, &[])
+            .class("c1", "log", 20.0, &[1, 5])
+            .class("c2", "log", 15.0, &[2, 9])
+            .class("c3", "log", 15.0, &[3, 11])
+            .build()
+            .expect("multi-class scenario");
+        let problem = &session.problem;
+        assert!(problem.n_sessions() >= 8, "the batched rows need W ≥ 8 sessions");
+        let lam = session.uniform_allocation();
+        let phi = Phi::uniform(&problem.net);
+        println!("--- multi-class ER({n}), {} sessions ---", problem.n_sessions());
+        let mut cost_w1 = 0.0;
+        for &workers in &[1usize, 4] {
+            let mut scalar =
+                FlowEngine::new().with_workers(workers).with_batch_mode(BatchMode::Scalar);
+            let cs = scalar.prepare(problem, &phi, &lam);
+            let mut batched =
+                FlowEngine::new().with_workers(workers).with_batch_mode(BatchMode::Batched);
+            let cb = batched.prepare(problem, &phi, &lam);
+            assert_eq!(cs.to_bits(), cb.to_bits(), "batched must agree bitwise");
+            if workers == 1 {
+                cost_w1 = cs;
+            } else {
+                assert_eq!(cs.to_bits(), cost_w1.to_bits(), "worker bit-identity");
+            }
+            b.bench(&format!("mc{n}/engine_fused_prepare_scalar_w{workers}"), || {
+                scalar.prepare(problem, &phi, &lam)
+            });
+            b.bench(&format!("mc{n}/engine_fused_prepare_batched_w{workers}"), || {
+                batched.prepare(problem, &phi, &lam)
+            });
+        }
+    }
+
+    // incremental dirty-session path: a 40-node clustered fleet (20
+    // clusters × 2 devices, one task class per cluster, both versions
+    // hosted in every cluster). After OMD-RT concentrates routing inside
+    // the clusters (sub-threshold lanes hardened to exact zeros — the
+    // steady-state shape), a single class's λ perturbation touches one
+    // cluster's flows: prepare_dirty re-sweeps 2 of 40 sessions and
+    // reprices only the affected edges
+    {
+        let session = clustered_fleet_session();
+        let problem = &session.problem;
+        let n_sess = problem.n_sessions();
+        println!("--- clustered fleet (n=40, {n_sess} sessions) ---");
+        let report =
+            session.routing_run("omd", 80).expect("clustered omd run").finish();
+        let mut phi = report.phi.expect("routing runs expose phi");
+        sparsify_phi(&problem.net, &mut phi, 1e-4);
+        let lam_a = session.uniform_allocation();
+        let mut lam_b = lam_a.clone();
+        lam_b[0] = lam_a[0] + 1.0;
+        lam_b[1] = lam_a[1] - 1.0;
+        let mask = SessionMask::block(n_sess, 0, 2);
+
+        let mut full = FlowEngine::new();
+        full.prepare(problem, &phi, &lam_a);
+        let mut flip = false;
+        b.bench("clusters40/engine_prepare_full", || {
+            flip = !flip;
+            full.prepare(problem, &phi, if flip { &lam_b } else { &lam_a })
+        });
+        let mut delta = FlowEngine::new();
+        delta.prepare(problem, &phi, &lam_a);
+        let mut flip2 = false;
+        b.bench("clusters40/engine_prepare_dirty_block", || {
+            flip2 = !flip2;
+            delta.prepare_dirty(problem, &phi, if flip2 { &lam_b } else { &lam_a }, &mask)
+        });
+        // sanity (outside the timed loops): the delta state is
+        // bit-identical to a fresh full sweep at the same point
+        let c_delta = delta.prepare_dirty(problem, &phi, &lam_b, &mask);
+        let c_full = FlowEngine::new().prepare(problem, &phi, &lam_b);
+        assert_eq!(c_delta.to_bits(), c_full.to_bits(), "dirty path must stay bit-identical");
+    }
+
     // summary table
     println!("\n=== hotpath summary ===");
     for m in &b.results {
@@ -176,6 +271,21 @@ fn main() {
         ) {
             speedups.push((format!("n{n}/pool_vs_scope_w4"), scope / pool));
         }
+        for &workers in &[1usize, 4] {
+            if let (Some(scalar), Some(batched)) = (
+                median(&b, &format!("mc{n}/engine_fused_prepare_scalar_w{workers}")),
+                median(&b, &format!("mc{n}/engine_fused_prepare_batched_w{workers}")),
+            ) {
+                speedups
+                    .push((format!("mc{n}/batched_vs_scalar_w{workers}"), scalar / batched));
+            }
+        }
+    }
+    if let (Some(full), Some(delta)) = (
+        median(&b, "clusters40/engine_prepare_full"),
+        median(&b, "clusters40/engine_prepare_dirty_block"),
+    ) {
+        speedups.push(("clusters40/dirty_vs_full".to_string(), full / delta));
     }
     for (name, x) in &speedups {
         println!("{name:<40} {x:.2}x");
@@ -244,7 +354,111 @@ fn main() {
         println!("n40 per-iteration speedup OMD vs SGP: {:.1}x", s / o);
         assert!(s / o > 3.0, "OMD iteration should be much cheaper than SGP");
     }
+    // the session-batched SoA kernels must be at least as fast as the
+    // scalar kernels on the multi-class configuration (a little slack for
+    // runner noise; the expected win is well above it)
+    for &n in &[25usize, 40] {
+        for &workers in &[1usize, 4] {
+            if let (Some(scalar), Some(batched)) = (
+                median(&b, &format!("mc{n}/engine_fused_prepare_scalar_w{workers}")),
+                median(&b, &format!("mc{n}/engine_fused_prepare_batched_w{workers}")),
+            ) {
+                println!("mc{n} batched vs scalar at w{workers}: {:.2}x", scalar / batched);
+                assert!(
+                    batched <= scalar * 1.05,
+                    "batched prepare ({batched:.3e}s) must not be slower than the \
+                     scalar prepare ({scalar:.3e}s) at mc{n}, workers={workers}"
+                );
+            }
+        }
+    }
+    // a single-block perturbation through the dirty path must beat the
+    // full sweep by at least 3x on the clustered fleet (n=40)
+    if let (Some(full), Some(delta)) = (
+        median(&b, "clusters40/engine_prepare_full"),
+        median(&b, "clusters40/engine_prepare_dirty_block"),
+    ) {
+        println!("clusters40 dirty single-block vs full prepare: {:.2}x", full / delta);
+        assert!(
+            full / delta >= 3.0,
+            "prepare_dirty ({delta:.3e}s) must be ≥ 3x faster than a full \
+             prepare ({full:.3e}s) on the clustered fleet"
+        );
+    }
     println!("hotpath OK");
+}
+
+/// 20 clusters × 2 devices (n = 40): a bidirectional pair per cluster,
+/// light inter-cluster bridges in a ring, both DNN versions pinned inside
+/// every cluster, and one task class sourced per cluster — the
+/// sharded-fleet shape where workloads localize after convergence, so a
+/// one-class perturbation is a genuinely local event (2 of 40 sessions).
+fn clustered_fleet_session() -> Session {
+    let mut edges = Vec::new();
+    for c in 0..20usize {
+        let base = c * 2;
+        edges.push(EdgeSpec {
+            src: base,
+            dst: base + 1,
+            capacity: 12.0,
+            bidirectional: true,
+            cost: None,
+        });
+        edges.push(EdgeSpec {
+            src: base,
+            dst: ((c + 1) % 20) * 2,
+            capacity: 6.0,
+            bidirectional: true,
+            cost: None,
+        });
+    }
+    let mut nodes = Vec::new();
+    for c in 0..20usize {
+        for (off, v) in [(0usize, 0usize), (1, 1)] {
+            nodes.push(NodeSpec { id: c * 2 + off, compute_capacity: None, version: Some(v) });
+        }
+    }
+    let mut spec = ScenarioSpec::paper_default();
+    spec.name = "clustered-fleet".to_string();
+    spec.topology = TopologySpec::Explicit { n_nodes: 40, edges };
+    spec.n_versions = 2;
+    spec.nodes = nodes;
+    spec.classes = (0..20usize)
+        .map(|c| ClassSpec {
+            name: format!("cluster{c}"),
+            utility: "log".to_string(),
+            rate: RateSpec::Constant(3.0),
+            sources: vec![c * 2],
+        })
+        .collect();
+    spec.seed = 5;
+    spec.build().expect("clustered fleet scenario")
+}
+
+/// Harden a routing state into its steady-state shape: lanes carrying
+/// less than `tol` of their row's mass are zeroed and the row
+/// renormalized. (Multiplicative OMD updates keep lanes at the 1e-12
+/// interior floor forever; zeroing them makes the flow supports of the
+/// clustered fleet's classes genuinely disjoint, which is what the
+/// dirty-path bench exercises.)
+fn sparsify_phi(net: &AugmentedNet, phi: &mut Phi, tol: f64) {
+    for w in 0..net.n_sessions() {
+        for row in net.csr.rows(w) {
+            let lanes = &net.csr.lane_edge[row.start..row.end];
+            let mut sum = 0.0;
+            for &e in lanes {
+                if phi.frac[w][e] < tol {
+                    phi.frac[w][e] = 0.0;
+                }
+                sum += phi.frac[w][e];
+            }
+            if sum > 0.0 {
+                for &e in lanes {
+                    phi.frac[w][e] /= sum;
+                }
+            }
+        }
+    }
 }
 
 fn median(b: &Bencher, name: &str) -> Option<f64> {

@@ -1,23 +1,37 @@
 #!/usr/bin/env python3
 """CI bench-regression gate for BENCH_hotpath.json.
 
-Compares the engine rows (bench names containing "engine") of a fresh
-``BENCH_hotpath.json`` against the committed baseline and fails (exit 1)
-if any row's median regresses by more than ``--tolerance`` (default 20%).
-Non-engine rows (the deliberately slow reference sweeps, SGP, the legacy
-reconstruction) are reported but never gate.
+Compares the engine rows (bench names containing any ``--filter``
+substring, default ``engine,dirty``) of a fresh ``BENCH_hotpath.json``
+against the committed baseline and fails (exit 1) if any row's median
+regresses by more than ``--tolerance`` (default 20%). Non-engine rows
+(the deliberately slow reference sweeps, SGP, the legacy reconstruction)
+are reported but never gate.
+
+Independently of the baseline, ``--require NAME:FLOOR`` (repeatable)
+checks the fresh file's ``speedups`` section: the named ratio must exist
+and be at least FLOOR. The defaults pin PR 5's two structural claims —
+the session-batched SoA kernels at least match the scalar kernels on the
+multi-class configuration, and a single-block ``prepare_dirty`` beats a
+full prepare by ≥ 3× on the clustered fleet. (The bench binary asserts
+the same bounds; the gate re-checks them from the artifact so a stale or
+hand-edited JSON cannot slip through.) Pass ``--no-default-requires`` to
+drop them (e.g. for older artifacts).
 
 Bootstrap: the committed baseline starts life as a placeholder with an
 empty ``results`` list (this repo has no local Rust toolchain — CI is the
-only place the bench runs). While the baseline is empty, the gate passes
-and prints instructions: download the ``bench-hotpath`` artifact from the
-first green run and commit it as ``rust/ci/BENCH_baseline.json``. Rows
-present in only one file are warned about (renames/additions), not failed,
-so the gate never blocks intentional bench evolution — refresh the
-baseline in the same PR instead.
+only place the bench runs). While the baseline is empty, the
+baseline-relative gate passes and prints instructions: download the
+``bench-hotpath`` artifact from the first green run and commit it as
+``rust/ci/BENCH_baseline.json``. The ``--require`` checks still run —
+they need only the fresh artifact. Rows present in only one file are
+warned about (renames/additions), not failed, so the gate never blocks
+intentional bench evolution — refresh the baseline in the same PR
+instead.
 
 Usage:
-    check_bench_regression.py BASELINE FRESH [--tolerance 0.20] [--filter engine]
+    check_bench_regression.py BASELINE FRESH [--tolerance 0.20]
+        [--filter engine,dirty] [--require clusters40/dirty_vs_full:3.0]
 """
 
 from __future__ import annotations
@@ -26,10 +40,22 @@ import argparse
 import json
 import sys
 
+# speedup floors every fresh artifact must clear (name, minimum ratio)
+DEFAULT_REQUIRES = [
+    ("mc25/batched_vs_scalar_w1", 0.95),
+    ("mc25/batched_vs_scalar_w4", 0.95),
+    ("mc40/batched_vs_scalar_w1", 0.95),
+    ("mc40/batched_vs_scalar_w4", 0.95),
+    ("clusters40/dirty_vs_full", 3.0),
+]
 
-def load_rows(path: str) -> dict[str, float]:
+
+def load_doc(path: str) -> dict:
     with open(path, encoding="utf-8") as fh:
-        doc = json.load(fh)
+        return json.load(fh)
+
+
+def load_rows(doc: dict) -> dict[str, float]:
     rows = {}
     for row in doc.get("results", []):
         name, median = row.get("name"), row.get("median_s")
@@ -38,56 +64,99 @@ def load_rows(path: str) -> dict[str, float]:
     return rows
 
 
+def parse_require(text: str) -> tuple[str, float]:
+    name, _, floor = text.rpartition(":")
+    if not name:
+        raise argparse.ArgumentTypeError(f"--require wants NAME:FLOOR, got {text!r}")
+    return name, float(floor)
+
+
+def check_requires(doc: dict, requires: list[tuple[str, float]]) -> list[str]:
+    speedups = doc.get("speedups", {})
+    failures = []
+    for name, floor in requires:
+        value = speedups.get(name)
+        if not isinstance(value, (int, float)):
+            failures.append(f"required speedup '{name}' missing from fresh results")
+            continue
+        status = "ok  " if value >= floor else "FAIL"
+        print(f"  {status} require {name:<38} {value:6.2f}x (floor {floor:.2f}x)")
+        if value < floor:
+            failures.append(
+                f"speedup '{name}' = {value:.2f}x fell below its floor {floor:.2f}x"
+            )
+    return failures
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("baseline", help="committed BENCH_baseline.json")
     ap.add_argument("fresh", help="freshly produced BENCH_hotpath.json")
     ap.add_argument("--tolerance", type=float, default=0.20,
                     help="allowed relative slowdown before failing (default 0.20)")
-    ap.add_argument("--filter", default="engine",
-                    help="substring selecting the gated rows (default 'engine')")
+    ap.add_argument("--filter", default="engine,dirty",
+                    help="comma-separated substrings selecting the gated rows "
+                         "(default 'engine,dirty')")
+    ap.add_argument("--require", type=parse_require, action="append", default=[],
+                    metavar="NAME:FLOOR",
+                    help="require fresh speedups[NAME] >= FLOOR (repeatable; "
+                         "adds to the built-in defaults)")
+    ap.add_argument("--no-default-requires", action="store_true",
+                    help="skip the built-in speedup floors")
     args = ap.parse_args()
 
-    baseline = load_rows(args.baseline)
-    fresh = load_rows(args.fresh)
+    fresh_doc = load_doc(args.fresh)
+    baseline = load_rows(load_doc(args.baseline))
+    fresh = load_rows(fresh_doc)
     if not fresh:
         print(f"error: no usable rows in {args.fresh}", file=sys.stderr)
         return 1
+
+    requires = ([] if args.no_default_requires else list(DEFAULT_REQUIRES))
+    requires += args.require
+    print(f"speedup floors: {len(requires)} required ratio(s)")
+    failures = check_requires(fresh_doc, requires)
+
+    filters = [f for f in args.filter.split(",") if f]
     if not baseline:
-        print(f"baseline {args.baseline} is empty (bootstrap mode): gate passes.")
+        print(f"\nbaseline {args.baseline} is empty (bootstrap mode): "
+              "baseline gate passes.")
         print("To arm the gate, download this run's 'bench-hotpath' artifact and")
         print("commit it as rust/ci/BENCH_baseline.json.")
-        return 0
+    else:
+        gated = sorted(n for n in baseline if any(f in n for f in filters))
+        regressions, improvements = [], []
+        for name in gated:
+            if name not in fresh:
+                print(f"warn: baseline row '{name}' missing from fresh results "
+                      f"(renamed/removed? refresh the baseline)")
+                continue
+            base, now = baseline[name], fresh[name]
+            ratio = now / base
+            line = (f"{name:<44} {base * 1e6:>10.2f}us -> "
+                    f"{now * 1e6:>10.2f}us  ({ratio:5.2f}x)")
+            if ratio > 1.0 + args.tolerance:
+                regressions.append(line)
+            else:
+                improvements.append(line)
+        for name in sorted(fresh):
+            if any(f in name for f in filters) and name not in baseline:
+                print(f"warn: new engine row '{name}' has no baseline yet "
+                      f"(commit a refreshed BENCH_baseline.json to gate it)")
 
-    gated = sorted(n for n in baseline if args.filter in n)
-    regressions, improvements = [], []
-    for name in gated:
-        if name not in fresh:
-            print(f"warn: baseline row '{name}' missing from fresh results "
-                  f"(renamed/removed? refresh the baseline)")
-            continue
-        base, now = baseline[name], fresh[name]
-        ratio = now / base
-        line = f"{name:<44} {base * 1e6:>10.2f}us -> {now * 1e6:>10.2f}us  ({ratio:5.2f}x)"
-        if ratio > 1.0 + args.tolerance:
-            regressions.append(line)
-        else:
-            improvements.append(line)
-    for name in sorted(fresh):
-        if args.filter in name and name not in baseline:
-            print(f"warn: new engine row '{name}' has no baseline yet "
-                  f"(commit a refreshed BENCH_baseline.json to gate it)")
+        print(f"\nbench gate: {len(gated)} gated rows, tolerance {args.tolerance:.0%}")
+        for line in improvements:
+            print(f"  ok   {line}")
+        for line in regressions:
+            print(f"  FAIL {line}")
+        if regressions:
+            failures.append(f"{len(regressions)} engine row(s) regressed more than "
+                            f"{args.tolerance:.0%} vs the committed baseline")
 
-    print(f"\nbench gate: {len(gated)} gated rows, tolerance {args.tolerance:.0%}")
-    for line in improvements:
-        print(f"  ok   {line}")
-    for line in regressions:
-        print(f"  FAIL {line}")
-    if regressions:
-        print(f"\n{len(regressions)} engine row(s) regressed more than "
-              f"{args.tolerance:.0%} vs the committed baseline.", file=sys.stderr)
+    if failures:
+        print("\n" + "\n".join(failures), file=sys.stderr)
         return 1
-    print("no engine regressions.")
+    print("bench gate: all checks passed.")
     return 0
 
 

@@ -10,7 +10,7 @@
 //! moving (line 10).
 
 use super::project::project_capped_simplex;
-use super::{mirror_ascent_update, Allocator, UtilityOracle};
+use super::{mirror_ascent_update, observe_probe, Allocator, UtilityOracle};
 
 #[derive(Clone, Debug)]
 pub struct GsOma {
@@ -83,6 +83,9 @@ impl Allocator for GsOma {
     fn outer_step(&self, oracle: &mut dyn UtilityOracle, lam: &[f64]) -> (Vec<f64>, Vec<f64>) {
         let blocks = oracle.blocks();
         let mut grad = vec![0.0; lam.len()];
+        // consecutive probes differ only inside one class block; the diff
+        // mask lets stateful oracles delta-evaluate (bit-identical values)
+        let mut prev: Option<Vec<f64>> = None;
         for &(s0, s1, rate) in &blocks {
             for w in s0..s1 {
                 // Λ±(t): perturb coordinate w, renormalizing the rest of
@@ -91,8 +94,8 @@ impl Allocator for GsOma {
                 // shift mass to/from the class's other versions).
                 let up = perturb_block(lam, s0, s1, w, self.delta, rate);
                 let dn = perturb_block(lam, s0, s1, w, -self.delta, rate);
-                let u_plus = oracle.observe(&up);
-                let u_minus = oracle.observe(&dn);
+                let u_plus = observe_probe(oracle, &up, &mut prev);
+                let u_minus = observe_probe(oracle, &dn, &mut prev);
                 grad[w] = (u_plus - u_minus) / (2.0 * self.delta);
             }
         }

@@ -15,6 +15,7 @@ pub mod project;
 
 pub use oracle::{AnalyticOracle, SingleStepOracle, UtilityOracle};
 
+use crate::engine::SessionMask;
 use crate::session::run::{RunReport, StopReason};
 
 /// A workload allocation algorithm operating against an opaque utility
@@ -80,6 +81,35 @@ pub trait Allocator {
             elapsed_s: t0.elapsed().as_secs_f64(),
         }
     }
+}
+
+/// Observe one gradient-sampling probe, threading the exact dirty-session
+/// mask to the oracle when the previous probe of this outer step is known.
+///
+/// GS-OMA and OMAD perturb `Λ` one class block at a time, so between
+/// consecutive probes only that block's coordinates change — the oracle
+/// (and through it the engine's
+/// [`crate::engine::FlowEngine::prepare_dirty`]) can then re-sweep
+/// O(block) instead of O(W·E). Only the allocator knows both consecutive
+/// probes, so the mask is computed here as the bitwise diff; the *first*
+/// probe of an outer step has no known predecessor at the oracle (callers
+/// may interleave their own observations) and stays a full observation.
+/// Observed values are bit-identical to plain
+/// [`UtilityOracle::observe`] calls.
+pub fn observe_probe(
+    oracle: &mut dyn UtilityOracle,
+    probe: &[f64],
+    prev: &mut Option<Vec<f64>>,
+) -> f64 {
+    let u = match prev {
+        Some(last) => oracle.observe_dirty(probe, &SessionMask::from_diff(last, probe)),
+        None => oracle.observe(probe),
+    };
+    match prev {
+        Some(buf) if buf.len() == probe.len() => buf.copy_from_slice(probe),
+        slot => *slot = Some(probe.to_vec()),
+    }
+    u
 }
 
 /// Online mirror ascent update on the λ-scaled simplex (paper eq. 10).

@@ -9,7 +9,7 @@
 
 use super::gsoma::perturb_block;
 use super::project::project_capped_simplex;
-use super::{mirror_ascent_update, Allocator, UtilityOracle};
+use super::{mirror_ascent_update, observe_probe, Allocator, UtilityOracle};
 
 #[derive(Clone, Debug)]
 pub struct Omad {
@@ -37,14 +37,18 @@ impl Allocator for Omad {
     fn outer_step(&self, oracle: &mut dyn UtilityOracle, lam: &[f64]) -> (Vec<f64>, Vec<f64>) {
         let blocks = oracle.blocks();
         let mut grad = vec![0.0; lam.len()];
+        // consecutive probes differ only inside one class block: the diff
+        // mask lets the single-step oracle's routing step delta-evaluate
+        // (O(block) instead of O(W·E); values bit-identical)
+        let mut prev: Option<Vec<f64>> = None;
         for &(s0, s1, rate) in &blocks {
             for w in s0..s1 {
                 let up = perturb_block(lam, s0, s1, w, self.delta, rate);
                 let dn = perturb_block(lam, s0, s1, w, -self.delta, rate);
                 // each observation advances the shared routing state by one
                 // mirror-descent iteration (K = 1)
-                let u_plus = oracle.observe(&up);
-                let u_minus = oracle.observe(&dn);
+                let u_plus = observe_probe(oracle, &up, &mut prev);
+                let u_minus = observe_probe(oracle, &dn, &mut prev);
                 grad[w] = (u_plus - u_minus) / (2.0 * self.delta);
             }
         }

@@ -10,6 +10,7 @@
 //! [`crate::coordinator::serving`].
 
 use crate::coordinator::serving::ServeReport;
+use crate::engine::SessionMask;
 use crate::model::flow::Phi;
 use crate::model::utility::Utility;
 use crate::model::Problem;
@@ -22,6 +23,21 @@ pub trait UtilityOracle {
     /// (converged routing for Algorithm 1, one routing step for Algorithm 3,
     /// measured serving for the end-to-end driver).
     fn observe(&mut self, lam: &[f64]) -> f64;
+
+    /// Like [`UtilityOracle::observe`], with the caller's promise that
+    /// only the sessions in `dirty` changed their `λ` entry since the
+    /// **previous** observation (GS-OMA/OMAD probes perturb one class
+    /// block at a time — see
+    /// [`crate::allocation::observe_probe`]). Stateful oracles with a
+    /// delta-capable engine override this to cut the pre-update forward
+    /// evaluation inside their routing step to the dirty block (the
+    /// post-step cost and the marginal broadcast still span every session,
+    /// since the mirror update touches all `φ` rows); the observed value
+    /// is bit-identical to [`UtilityOracle::observe`] either way.
+    /// Default: a full observation.
+    fn observe_dirty(&mut self, lam: &[f64], _dirty: &SessionMask) -> f64 {
+        self.observe(lam)
+    }
 
     /// Total admissible rate λ.
     fn total_rate(&self) -> f64;
@@ -169,6 +185,9 @@ pub struct SingleStepOracle {
     utilities: Vec<Utility>,
     pub router: OmdRouter,
     phi: Phi,
+    /// The last observed Λ (bitwise), for the debug-mode check of the
+    /// [`UtilityOracle::observe_dirty`] contract.
+    last_lam: Option<Vec<f64>>,
     routing_iters: usize,
     observations: usize,
 }
@@ -182,6 +201,7 @@ impl SingleStepOracle {
             utilities,
             router: OmdRouter::new(eta),
             phi,
+            last_lam: None,
             routing_iters: 0,
             observations: 0,
         }
@@ -195,18 +215,53 @@ impl SingleStepOracle {
     pub fn phi(&self) -> &Phi {
         &self.phi
     }
+
+    /// The observation body shared by the full and dirty entry points:
+    /// one mirror-descent routing iteration on the persistent state, then
+    /// one fused forward sweep for the post-step cost — reusing the
+    /// router's engine workspaces (no second workspace set). With a dirty
+    /// mask, the pre-update evaluation inside the routing step re-sweeps
+    /// only the masked sessions (bit-identical either way).
+    fn observe_impl(&mut self, lam: &[f64], dirty: Option<&SessionMask>) -> f64 {
+        self.observations += 1;
+        self.routing_iters += 1;
+        match dirty {
+            Some(mask) => {
+                // debug check of the caller's promise: every λ entry that
+                // changed since the previous observation is in the mask
+                #[cfg(debug_assertions)]
+                if let Some(last) = &self.last_lam {
+                    if last.len() == lam.len() {
+                        for (s, (a, b)) in last.iter().zip(lam).enumerate() {
+                            debug_assert!(
+                                a.to_bits() == b.to_bits() || mask.contains(s),
+                                "observe_dirty: λ[{s}] changed outside the dirty mask"
+                            );
+                        }
+                    }
+                }
+                self.router.step_dirty(&self.problem, lam, &mut self.phi, mask);
+            }
+            None => {
+                self.router.step(&self.problem, lam, &mut self.phi);
+            }
+        }
+        let cost = self.router.engine_mut().evaluate_cost(&self.problem, &self.phi, lam);
+        match &mut self.last_lam {
+            Some(buf) if buf.len() == lam.len() => buf.copy_from_slice(lam),
+            slot => *slot = Some(lam.to_vec()),
+        }
+        self.true_task_utility(lam) - cost
+    }
 }
 
 impl UtilityOracle for SingleStepOracle {
     fn observe(&mut self, lam: &[f64]) -> f64 {
-        self.observations += 1;
-        self.routing_iters += 1;
-        // one mirror-descent routing iteration on the persistent state,
-        // then one fused forward sweep for the post-step cost — reusing
-        // the router's engine workspaces (no second workspace set)
-        self.router.step(&self.problem, lam, &mut self.phi);
-        let cost = self.router.engine_mut().evaluate_cost(&self.problem, &self.phi, lam);
-        self.true_task_utility(lam) - cost
+        self.observe_impl(lam, None)
+    }
+
+    fn observe_dirty(&mut self, lam: &[f64], dirty: &SessionMask) -> f64 {
+        self.observe_impl(lam, Some(dirty))
     }
 
     fn total_rate(&self) -> f64 {
@@ -236,14 +291,22 @@ impl UtilityOracle for SingleStepOracle {
     fn on_topology_change(&mut self, problem: &Problem) {
         self.problem = problem.clone();
         // routing state re-initialized on the new topology (the Fig. 11
-        // "worse initial point" effect for the single loop)
+        // "worse initial point" effect for the single loop); the engine's
+        // incremental state belongs to the old problem — drop it so the
+        // next (possibly dirty) observation starts from a full sweep
         self.phi = Phi::uniform(&self.problem.net);
+        self.router.engine_mut().invalidate();
+        self.last_lam = None;
     }
 
     fn on_workload_change(&mut self, problem: &Problem) {
         // same topology, new class rates: the persistent routing state
-        // stays valid (φ is per-(session, edge); rates enter through Λ)
+        // stays valid (φ is per-(session, edge); rates enter through Λ) —
+        // but the incremental engine state is conservatively dropped so a
+        // dirty observation straddling the breakpoint re-sweeps fully
         self.problem = problem.clone();
+        self.router.engine_mut().invalidate();
+        self.last_lam = None;
     }
 
     fn current_phi(&self) -> Option<&Phi> {

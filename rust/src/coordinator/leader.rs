@@ -120,7 +120,7 @@ impl DistributedOmd {
         // per-session topo rank of every DAG node (S is topo-first)
         let rank: Vec<HashMap<usize, usize>> = (0..net.n_sessions())
             .map(|w| {
-                net.session_topo[w].iter().enumerate().map(|(k, &i)| (i, k)).collect()
+                net.session_topo(w).iter().enumerate().map(|(k, &i)| (i, k)).collect()
             })
             .collect();
         (1..=net.n_real)
@@ -175,41 +175,35 @@ impl DistributedOmd {
     /// deploy identical specs, so a matching digest (plus a matching φ)
     /// is what makes fleet reuse across steps sound.
     fn digest(problem: &Problem) -> u64 {
-        const FNV_OFFSET: u64 = 0xcbf29ce484222325;
-        const FNV_PRIME: u64 = 0x100000001b3;
-        let mut h = FNV_OFFSET;
-        let mut mix = |x: u64| {
-            h ^= x;
-            h = h.wrapping_mul(FNV_PRIME);
-        };
+        let mut h = crate::util::hash::Fnv64::new();
         let net = &problem.net;
-        mix(net.n_nodes() as u64);
-        mix(net.graph.n_edges() as u64);
-        mix(net.n_sessions() as u64);
+        h.mix(net.n_nodes() as u64);
+        h.mix(net.graph.n_edges() as u64);
+        h.mix(net.n_sessions() as u64);
         for (&e, &d) in net.csr.lane_edge.iter().zip(&net.csr.lane_dst) {
-            mix(e as u64);
-            mix(d as u64);
+            h.mix(e as u64);
+            h.mix(d as u64);
         }
         // bind lanes to their owning (session, node) rows: the flat lane
         // sequence alone cannot distinguish two problems that partition
         // the same lanes differently across nodes or sessions
         for row in &net.csr.rows {
-            mix(row.node as u64);
-            mix(row.start as u64);
-            mix(row.end as u64);
+            h.mix(row.node as u64);
+            h.mix(row.start as u64);
+            h.mix(row.end as u64);
         }
         for &(a, b) in &net.csr.session_rows {
-            mix(a as u64);
-            mix(b as u64);
+            h.mix(a as u64);
+            h.mix(b as u64);
         }
         for (e, edge) in net.graph.edges().iter().enumerate() {
-            mix(edge.src as u64);
-            mix(edge.dst as u64);
-            mix(edge.capacity.to_bits());
-            mix(problem.edge_kind(e) as u64);
+            h.mix(edge.src as u64);
+            h.mix(edge.dst as u64);
+            h.mix(edge.capacity.to_bits());
+            h.mix(problem.edge_kind(e) as u64);
         }
-        mix(problem.cost as u64);
-        h
+        h.mix(problem.cost as u64);
+        h.finish()
     }
 
     /// Spawn the actor threads for `problem`, warm-starting every node's
@@ -383,6 +377,10 @@ impl Router for DistributedOmd {
 
     fn set_workers(&mut self, workers: usize) {
         self.engine.set_workers(workers);
+    }
+
+    fn set_batch_mode(&mut self, mode: crate::engine::BatchMode) {
+        self.engine.set_batch_mode(mode);
     }
 
     fn comm_stats(&self) -> Option<CommStats> {

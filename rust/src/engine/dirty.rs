@@ -1,0 +1,403 @@
+//! Incremental (dirty-session) delta evaluation for [`FlowEngine`] —
+//! bit-identical to the full fused sweeps.
+//!
+//! GS-OMA's two-point probes and OMAD's per-class mirror step change `Λ`
+//! one class block at a time, and a routing step that follows a pure rate
+//! change leaves every `φ` row untouched. Re-sweeping all `W` sessions for
+//! such a change wastes `O(E·W)` work per oracle call. This module adds
+//! the delta path:
+//!
+//! * [`FlowEngine::prepare_dirty`] — full replacement for
+//!   [`FlowEngine::prepare`] when only the sessions in a [`SessionMask`]
+//!   changed their `φ` rows or `λ` entries since the engine's last sweep;
+//! * [`FlowEngine::evaluate_cost_dirty`] — same for
+//!   [`FlowEngine::evaluate_cost`] (forward only — what utility oracles
+//!   observe).
+//!
+//! The algebra (see the [engine module docs](super) for the equation
+//! mapping): dirty sessions re-run eq. 1; each touched edge's eq. 4 total
+//! re-reduces over the transposed
+//! [`FlowCsr::sessions_of_edge`](crate::graph::augmented::FlowCsr::sessions_of_edge)
+//! index in
+//! the full sweep's ascending session order; only bitwise-changed flows
+//! reprice `D`/`D'`; the cost re-sums cached per-edge values in union-edge
+//! order; and the eq. 20–21 broadcast re-runs fully for dirty sessions but
+//! only *upstream of repriced lanes* for clean ones, pruning wherever a
+//! recomputed marginal comes out bitwise unchanged. Every recomputed
+//! quantity uses the exact operation order of the full sweep and every
+//! skipped quantity has bitwise-unchanged inputs, so the result is
+//! **bit-identical to a full `prepare`** after any dirty sequence
+//! (`tests/test_incremental_engine.rs`).
+//!
+//! ## Contract
+//!
+//! A dirty call must follow a prior sweep **on the same problem**: same
+//! topology object state, same cost families, and `φ`/`λ` unchanged for
+//! every session outside the mask. A shape change (node/edge/session/lane
+//! counts) is detected by [`FlowEngine::bind`] and falls back to a full
+//! sweep; swapping in a *different* problem of identical shape requires
+//! [`FlowEngine::invalidate`] first (the single-step oracle does this on
+//! topology and workload changes). Passing a full mask is always safe and
+//! equivalent to the full sweep.
+
+use super::{forward_session, reverse_session, FlowEngine, ForwardUnit, ReverseUnit};
+use crate::model::flow::Phi;
+use crate::model::Problem;
+
+/// A set of dirty sessions, passed to the engine's delta-evaluation entry
+/// points. Construction helpers mirror how the allocation layer produces
+/// masks (per-class blocks, probe diffs).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SessionMask {
+    bits: Vec<bool>,
+    count: usize,
+}
+
+impl SessionMask {
+    /// An empty mask over `n` sessions.
+    pub fn none(n: usize) -> Self {
+        SessionMask { bits: vec![false; n], count: 0 }
+    }
+
+    /// A full mask over `n` sessions (equivalent to a full sweep).
+    pub fn all(n: usize) -> Self {
+        SessionMask { bits: vec![true; n], count: n }
+    }
+
+    /// The contiguous session block `[s0, s1)` — one task class's sessions
+    /// (the shape of every GS-OMA/OMAD probe).
+    pub fn block(n: usize, s0: usize, s1: usize) -> Self {
+        assert!(s0 <= s1 && s1 <= n, "block [{s0}, {s1}) out of range for {n} sessions");
+        let mut m = Self::none(n);
+        for s in s0..s1 {
+            m.insert(s);
+        }
+        m
+    }
+
+    /// The sessions where two allocations differ bitwise — the exact dirty
+    /// set between consecutive oracle probes.
+    pub fn from_diff(a: &[f64], b: &[f64]) -> Self {
+        assert_eq!(a.len(), b.len());
+        let mut m = Self::none(a.len());
+        for (s, (x, y)) in a.iter().zip(b).enumerate() {
+            if x.to_bits() != y.to_bits() {
+                m.insert(s);
+            }
+        }
+        m
+    }
+
+    /// Mark session `s` dirty.
+    pub fn insert(&mut self, s: usize) {
+        if !self.bits[s] {
+            self.bits[s] = true;
+            self.count += 1;
+        }
+    }
+
+    /// Merge another mask in.
+    pub fn union_with(&mut self, other: &SessionMask) {
+        assert_eq!(self.bits.len(), other.bits.len());
+        for s in other.iter() {
+            self.insert(s);
+        }
+    }
+
+    /// Is session `s` dirty?
+    #[inline]
+    pub fn contains(&self, s: usize) -> bool {
+        self.bits[s]
+    }
+
+    /// Number of sessions the mask ranges over.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.bits.len()
+    }
+
+    /// Number of dirty sessions.
+    #[inline]
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Does the mask cover every session?
+    #[inline]
+    pub fn is_all(&self) -> bool {
+        self.count == self.bits.len()
+    }
+
+    /// Dirty sessions, ascending.
+    pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.bits.iter().enumerate().filter(|&(_, &b)| b).map(|(s, _)| s)
+    }
+}
+
+impl FlowEngine {
+    /// Is the engine's forward state reusable for a delta evaluation on
+    /// `problem`? (Shape identity + a prior completed sweep.)
+    fn delta_ready(&self, problem: &Problem) -> bool {
+        let net = &problem.net;
+        self.flows_ready
+            && self.n_nodes == net.n_nodes()
+            && self.n_edges == net.graph.n_edges()
+            && self.w_cnt == net.n_sessions()
+            && self.bound_lanes == net.csr.n_lanes()
+            && self.bound_slots == net.batch.n_slots
+    }
+
+    /// Delta replacement for [`FlowEngine::prepare`]: re-sweep only the
+    /// sessions in `dirty`, re-reduce and reprice only touched edges, and
+    /// re-broadcast marginals only where they can change. Bit-identical to
+    /// a full `prepare` at the same `(Λ, φ)` (see the
+    /// [module docs](self) for the contract). Returns the total cost.
+    pub fn prepare_dirty(
+        &mut self,
+        problem: &Problem,
+        phi: &Phi,
+        lam: &[f64],
+        dirty: &SessionMask,
+    ) -> f64 {
+        if !self.delta_ready(problem) || dirty.is_all() {
+            return self.prepare(problem, phi, lam);
+        }
+        let marg_was_synced = self.marg_synced;
+        let cost = self.forward_dirty(problem, phi, lam, dirty);
+        self.reverse_dirty(problem, phi, dirty, marg_was_synced);
+        cost
+    }
+
+    /// Delta replacement for [`FlowEngine::evaluate_cost`] (forward only):
+    /// the total network cost after re-sweeping just the dirty sessions.
+    pub fn evaluate_cost_dirty(
+        &mut self,
+        problem: &Problem,
+        phi: &Phi,
+        lam: &[f64],
+        dirty: &SessionMask,
+    ) -> f64 {
+        if !self.delta_ready(problem) || dirty.is_all() {
+            return self.forward_sweep(problem, phi, lam);
+        }
+        self.forward_dirty(problem, phi, lam, dirty)
+    }
+
+    /// Incremental forward half: eq. 1 re-runs for dirty sessions, eq. 4
+    /// re-reduces touched edges in full session order, bit-changed edges
+    /// reprice `D`, and the cost re-sums the cached per-edge values.
+    fn forward_dirty(
+        &mut self,
+        problem: &Problem,
+        phi: &Phi,
+        lam: &[f64],
+        dirty: &SessionMask,
+    ) -> f64 {
+        let net = &problem.net;
+        let csr = &net.csr;
+        let (nn, ne) = (self.n_nodes, self.n_edges);
+        assert_eq!(lam.len(), self.w_cnt);
+        assert_eq!(dirty.len(), self.w_cnt);
+        // the dirty paths keep all state session-major; a later full
+        // reverse fallback must not reuse a stale batched φ gather
+        self.last_batched = false;
+
+        // 1. re-run the forward recurrence for each dirty session and
+        //    collect the touched-edge superset (every lane of a dirty
+        //    session)
+        let mut touched = std::mem::take(&mut self.touched);
+        touched.clear();
+        for w in dirty.iter() {
+            let mut unit = ForwardUnit {
+                w,
+                lam_w: lam[w],
+                phi_w: &phi.frac[w],
+                t_w: &mut self.t[w * nn..(w + 1) * nn],
+                f_w: &mut self.sess_flows[w * ne..(w + 1) * ne],
+            };
+            forward_session(csr, &mut unit);
+            let (l0, l1) = csr.session_lane_span[w];
+            for &e in &csr.lane_edge[l0..l1] {
+                if !self.edge_flag[e] {
+                    self.edge_flag[e] = true;
+                    touched.push(e);
+                }
+            }
+        }
+
+        // 2. re-reduce each touched edge over its full ascending session
+        //    list (identical addends and order as the full reduction) and
+        //    reprice the edges whose flow bits actually changed
+        let mut repriced = std::mem::take(&mut self.repriced);
+        repriced.clear();
+        for &e in &touched {
+            self.edge_flag[e] = false;
+            let mut sum = 0.0;
+            for &s in csr.sessions_of_edge(e) {
+                sum += self.sess_flows[s as usize * ne + e];
+            }
+            if sum.to_bits() != self.flows[e].to_bits() {
+                self.flows[e] = sum;
+                self.edge_vals[e] =
+                    problem.edge_kind(e).value(sum, net.graph.edge(e).capacity);
+                repriced.push(e);
+            }
+        }
+        self.touched = touched;
+        self.repriced = repriced;
+
+        // 3. total cost: fixed-order sum of the cached per-edge values
+        //    (every term equals the full sweep's term)
+        let mut total = 0.0;
+        for &e in &net.union_edges {
+            total += self.edge_vals[e];
+        }
+        self.cost = total;
+        self.marg_synced = false;
+        total
+    }
+
+    /// Incremental reverse half: `D'` reprices on bit-changed edges, dirty
+    /// sessions re-broadcast fully, and clean sessions re-broadcast only
+    /// upstream of repriced lanes with bitwise-unchanged results pruning
+    /// the recursion.
+    fn reverse_dirty(
+        &mut self,
+        problem: &Problem,
+        phi: &Phi,
+        dirty: &SessionMask,
+        marg_was_synced: bool,
+    ) {
+        let net = &problem.net;
+        if !marg_was_synced {
+            // the last sweep was forward-only: D'/r are stale everywhere,
+            // so run the ordinary full reverse (session-major path)
+            self.reverse_sweep(problem, phi);
+            return;
+        }
+        let csr = &net.csr;
+        let nn = self.n_nodes;
+        // reprice D' exactly where flows changed bits
+        for &e in &self.repriced {
+            self.dprime[e] =
+                problem.edge_kind(e).derivative(self.flows[e], net.graph.edge(e).capacity);
+        }
+        for w in 0..self.w_cnt {
+            if dirty.contains(w) {
+                let mut unit = ReverseUnit {
+                    w,
+                    phi_w: &phi.frac[w],
+                    r_w: &mut self.r[w * nn..(w + 1) * nn],
+                };
+                reverse_session(csr, &self.dprime, &mut unit);
+            } else {
+                self.reverse_session_incremental(net, phi, w);
+            }
+        }
+        self.marg_synced = true;
+    }
+
+    /// Re-broadcast one *clean* session's marginals from the repriced
+    /// lanes upstream. Rows are recomputed with the full sweep's exact
+    /// lane order; a row whose result comes out bitwise unchanged stops
+    /// the upstream propagation (unchanged inputs ⇒ unchanged outputs),
+    /// which is what makes a localized reprice O(affected subgraph)
+    /// instead of O(session DAG).
+    fn reverse_session_incremental(
+        &mut self,
+        net: &crate::graph::augmented::AugmentedNet,
+        phi: &Phi,
+        w: usize,
+    ) {
+        let csr = &net.csr;
+        let nn = self.n_nodes;
+        // clear the previous session's marks
+        for &i in &self.mark_buf {
+            self.rev_must[i] = false;
+        }
+        self.mark_buf.clear();
+        // seed: rows owning a repriced lane of this session
+        for &e in &self.repriced {
+            if net.session_edges[w][e] {
+                let src = net.graph.edge(e).src;
+                if !self.rev_must[src] {
+                    self.rev_must[src] = true;
+                    self.mark_buf.push(src);
+                }
+            }
+        }
+        if self.mark_buf.is_empty() {
+            return;
+        }
+        let base = w * nn;
+        let (a, b) = csr.session_rows[w];
+        for row_idx in (a..b).rev() {
+            let row = csr.rows[row_idx];
+            if !self.rev_must[row.node] {
+                continue;
+            }
+            // recompute the row exactly like the full sweep
+            let mut acc = 0.0;
+            for k in row.start..row.end {
+                let f = phi.frac[w][csr.lane_edge[k]];
+                if f > 0.0 {
+                    acc += f * (self.dprime[csr.lane_edge[k]] + self.r[base + csr.lane_dst[k]]);
+                }
+            }
+            if acc.to_bits() != self.r[base + row.node].to_bits() {
+                self.r[base + row.node] = acc;
+                // propagate upstream along this session's in-lanes
+                for &e_in in net.graph.in_edges(row.node) {
+                    if net.session_edges[w][e_in] {
+                        let src = net.graph.edge(e_in).src;
+                        if !self.rev_must[src] {
+                            self.rev_must[src] = true;
+                            self.mark_buf.push(src);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mask_constructors_and_iteration() {
+        let m = SessionMask::none(4);
+        assert!(m.is_empty());
+        assert_eq!(m.len(), 4);
+        let m = SessionMask::all(4);
+        assert!(m.is_all());
+        assert_eq!(m.iter().collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        let m = SessionMask::block(6, 2, 4);
+        assert_eq!(m.count(), 2);
+        assert!(m.contains(2) && m.contains(3));
+        assert!(!m.contains(1) && !m.contains(4));
+    }
+
+    #[test]
+    fn mask_diff_and_union() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [1.0, 2.5, 3.0, 4.0];
+        let m = SessionMask::from_diff(&a, &b);
+        assert_eq!(m.iter().collect::<Vec<_>>(), vec![1]);
+        let mut u = SessionMask::block(4, 2, 3);
+        u.union_with(&m);
+        assert_eq!(u.iter().collect::<Vec<_>>(), vec![1, 2]);
+        // inserting twice keeps the count exact
+        u.insert(1);
+        assert_eq!(u.count(), 2);
+        // identical vectors produce an empty diff (bitwise comparison)
+        let m = SessionMask::from_diff(&a, &a);
+        assert!(m.is_empty());
+    }
+}

@@ -31,21 +31,83 @@
 //! and the other routers call once per iteration before their row updates
 //! (eq. 18: `∂D/∂φ_ij(w) = t_i(w)·δφ_ij(w)`).
 //!
+//! ## Session-batched SoA kernels
+//!
+//! Multi-class scenarios route one session per `(task class, version)`
+//! pair, so the session count — and with it the sweep work — multiplies
+//! with the class count. Sessions of one DNN version share a destination
+//! and hence (up to the virtual source's admission lanes) the same
+//! strictly-closer DAG; since PR 5 they also share one topological row
+//! order (computed on the union of their masks by
+//! [`AugmentedNet::rebuild_session_dags`]). The engine exploits this with
+//! **lane-major, session-batched** sweeps over the
+//! [`BatchCsr`](crate::graph::augmented::BatchCsr) index: per version
+//! block, `φ` is gathered once per iteration into a contiguous
+//! `[lane × session]` workspace, and the eq. 1/4 recurrences and the
+//! eq. 20–21 broadcast then run as contiguous multiply-accumulates over
+//! the session dimension — one lane index load amortized over the whole
+//! block, auto-vectorizable inner loops.
+//!
+//! Batching preserves bit-identity with the scalar per-session sweeps:
+//! each member session's scalar (row, lane) sequence is a subsequence of
+//! the block's, lanes a session does not use carry `φ = 0` there, and
+//! `x + 0.0` is exact on the engine's non-negative accumulators — so every
+//! session sees exactly its own scalar accumulation order. The default
+//! [`BatchMode::Auto`] engages batching only when some block holds ≥ 2
+//! sessions (multi-class), keeping single-class networks on the scalar
+//! path unchanged.
+//!
+//! ## Incremental dirty-session sweeps
+//!
+//! GS-OMA's two-point gradient sampling and OMAD's per-class mirror step
+//! perturb `Λ` one class block at a time (paper Algorithms 1/3): between
+//! consecutive oracle observations only a few sessions' `λ_w` (or `φ`
+//! rows) change. [`FlowEngine::prepare_dirty`] /
+//! [`FlowEngine::evaluate_cost_dirty`] exploit that with a delta
+//! evaluation that is **bit-identical to a full sweep**:
+//!
+//! * only the dirty sessions' forward recurrences (eq. 1) are re-run;
+//! * each *touched* edge's total flow (eq. 4) is re-reduced over exactly
+//!   the full sweep's ascending session order via the transposed
+//!   [`FlowCsr::sessions_of_edge`] index — untouched edges keep sums whose
+//!   terms are all bitwise unchanged;
+//! * only edges whose flow **bits** changed are repriced (`D_ij`, `D'_ij`
+//!   — eq. 19's derivative); the total cost is re-summed from cached
+//!   per-edge values in the fixed union-edge order;
+//! * the eq. 20–21 broadcast re-runs fully for dirty sessions, and for
+//!   clean sessions only from repriced lanes upstream, pruning wherever a
+//!   recomputed `∂D/∂r_i(w)` comes out bitwise unchanged (unchanged
+//!   inputs ⇒ unchanged outputs, so the pruned recursion reproduces the
+//!   full sweep bit for bit).
+//!
+//! What this buys depends on how much of the engine state a caller
+//! actually invalidates. A **warm delta loop** — repeated `prepare_dirty`
+//! calls whose `φ` only changes inside the mask, e.g. re-evaluating λ
+//! perturbations at a fixed routing state — gets the full effect
+//! (≥ 3× at 40 nodes; asserted by `benches/hotpath.rs`'s
+//! `clusters40/engine_prepare_dirty_block` row). The single-step oracle's
+//! probe path is *partially* incremental: the pre-update evaluation inside
+//! its routing step cuts the eq. 1 forward work to the dirty block, but
+//! the mirror update then touches every `φ` row, so the post-step cost
+//! and the next marginal broadcast still span all sessions — roughly one
+//! of the three full passes per observation becomes O(block).
+//!
 //! ## Determinism and parallelism
 //!
 //! The per-session sweeps are independent (the paper's sessions only couple
 //! through `F_ij`, which the engine reduces sequentially in session order),
-//! so the engine distributes sessions over a **persistent pinned
-//! [`pool::WorkerPool`]** created once per engine and reused across
-//! iterations (chunk `i` always runs on pool thread `i - 1`; the caller
-//! thread keeps chunk `0`). Worker assignment affects scheduling only: each
-//! session's floating-point operations are identical on any thread, and the
-//! cross-session flow reduction and cost sum always run on the caller
-//! thread in ascending session order — engine results are **bit-identical
-//! at any worker count** (asserted by `tests/test_engine_equivalence.rs`,
-//! for the centralized *and* the distributed solver paths). The worker
-//! count comes from `Scenario::workers` / the CLI `--workers` flag through
-//! the solver registry; `0` means auto (`std::thread::available_parallelism`).
+//! so the engine distributes sessions — or, in batched mode, version
+//! blocks — over a **persistent pinned [`pool::WorkerPool`]** created once
+//! per engine and reused across iterations (chunk `i` always runs on pool
+//! thread `i - 1`; the caller thread keeps chunk `0`). Worker assignment
+//! affects scheduling only: each unit's floating-point operations are
+//! identical on any thread, and the cross-session flow reduction and cost
+//! sum always run on the caller thread in ascending session order — engine
+//! results are **bit-identical at any worker count** (asserted by
+//! `tests/test_engine_equivalence.rs`, for the centralized *and* the
+//! distributed solver paths). The worker count comes from
+//! `Scenario::workers` / the CLI `--workers` flag through the solver
+//! registry; `0` means auto (`std::thread::available_parallelism`).
 //!
 //! The pool exists because a fused sweep at paper-scale topologies
 //! (n ≲ 25, W = 3) costs single-digit microseconds — a per-sweep
@@ -62,12 +124,31 @@
 //! microseconds a per-sweep thread spawn used to cost; single-threaded
 //! sweeps allocate nothing at all.)
 
+pub mod dirty;
 pub mod pool;
 
-use crate::graph::augmented::{AugmentedNet, FlowCsr};
+pub use dirty::SessionMask;
+
+use crate::graph::augmented::{AugmentedNet, BatchCsr, CsrRow, FlowCsr};
 use crate::model::flow::Phi;
 use crate::model::Problem;
 use pool::WorkerPool;
+
+/// Sweep-kernel selection for [`FlowEngine`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BatchMode {
+    /// Session-batched SoA sweeps whenever some version block holds ≥ 2
+    /// sessions (multi-class workloads); scalar per-session sweeps
+    /// otherwise. The default.
+    #[default]
+    Auto,
+    /// Always the batched kernels (bench/testing knob; single-session
+    /// blocks degenerate to width-1 loops).
+    Batched,
+    /// Always the scalar per-session kernels (the pre-batching hot path,
+    /// kept as the bench baseline).
+    Scalar,
+}
 
 /// Fused flow/marginal evaluator with engine-owned flat workspaces.
 ///
@@ -84,12 +165,22 @@ pub struct FlowEngine {
     /// Dispatch parallel sweeps to the persistent pool (default) instead of
     /// a per-sweep `std::thread::scope` spawn (kept for benchmarking).
     use_pool: bool,
+    /// Kernel selection (see [`BatchMode`]).
+    batch_mode: BatchMode,
+    /// Did the last forward pass run the batched kernels? (The reverse
+    /// sweep must reuse the same `φ` gather; the dirty paths are always
+    /// session-major.)
+    last_batched: bool,
     /// Lazily spawned persistent workers (`effective workers − 1` threads;
     /// the caller thread runs the first chunk itself).
     pool: Option<WorkerPool>,
     n_nodes: usize,
     n_edges: usize,
     w_cnt: usize,
+    /// Bound scalar-CSR lane count (workspace identity; see `bind`).
+    bound_lanes: usize,
+    /// Bound batched slot count (workspace identity; see `bind`).
+    bound_slots: usize,
     /// `t[w*n_nodes + i]` — session ingress rates (eq. 1).
     t: Vec<f64>,
     /// `r[w*n_nodes + i]` — node marginals `∂D/∂r_i(w)` (eqs. 20–21).
@@ -100,6 +191,33 @@ pub struct FlowEngine {
     flows: Vec<f64>,
     /// Link marginals `D'_ij` (eq. 19).
     dprime: Vec<f64>,
+    /// Cached per-edge cost values `D_ij(F_ij, C_ij)` at the current
+    /// flows (the incremental path reprices only bit-changed edges and
+    /// re-sums these in fixed order).
+    edge_vals: Vec<f64>,
+    /// Batched workspaces (lane-major `[lane × session]` per block).
+    phi_blk: Vec<f64>,
+    f_blk: Vec<f64>,
+    /// Batched node-state workspaces (node-major `[node × session]` per
+    /// block, blocks packed by `col0`).
+    t_blk: Vec<f64>,
+    r_blk: Vec<f64>,
+    /// Per-block row scratch (Σ block widths = `n_sessions` slots).
+    blk_scratch: Vec<f64>,
+    /// Incremental-path state: forward quantities (t, per-session flows,
+    /// F, per-edge cost values) are consistent with the engine's last
+    /// sweep inputs.
+    flows_ready: bool,
+    /// Incremental-path state: `dprime`/`r` are consistent with the same
+    /// operating point as the forward quantities.
+    marg_synced: bool,
+    /// Dirty-path scratch: touched-edge dedup + worklists.
+    edge_flag: Vec<bool>,
+    touched: Vec<usize>,
+    repriced: Vec<usize>,
+    /// Dirty-path scratch: per-session reverse recompute marks.
+    rev_must: Vec<bool>,
+    mark_buf: Vec<usize>,
     /// Total network cost at the last forward sweep.
     cost: f64,
 }
@@ -118,15 +236,32 @@ impl Clone for FlowEngine {
             workers: self.workers,
             workers_auto: self.workers_auto,
             use_pool: self.use_pool,
+            batch_mode: self.batch_mode,
+            last_batched: self.last_batched,
             pool: None,
             n_nodes: self.n_nodes,
             n_edges: self.n_edges,
             w_cnt: self.w_cnt,
+            bound_lanes: self.bound_lanes,
+            bound_slots: self.bound_slots,
             t: self.t.clone(),
             r: self.r.clone(),
             sess_flows: self.sess_flows.clone(),
             flows: self.flows.clone(),
             dprime: self.dprime.clone(),
+            edge_vals: self.edge_vals.clone(),
+            phi_blk: self.phi_blk.clone(),
+            f_blk: self.f_blk.clone(),
+            t_blk: self.t_blk.clone(),
+            r_blk: self.r_blk.clone(),
+            blk_scratch: self.blk_scratch.clone(),
+            flows_ready: self.flows_ready,
+            marg_synced: self.marg_synced,
+            edge_flag: self.edge_flag.clone(),
+            touched: self.touched.clone(),
+            repriced: self.repriced.clone(),
+            rev_must: self.rev_must.clone(),
+            mark_buf: self.mark_buf.clone(),
             cost: self.cost,
         }
     }
@@ -139,15 +274,32 @@ impl FlowEngine {
             workers: 1,
             workers_auto: 0,
             use_pool: true,
+            batch_mode: BatchMode::Auto,
+            last_batched: false,
             pool: None,
             n_nodes: 0,
             n_edges: 0,
             w_cnt: 0,
+            bound_lanes: 0,
+            bound_slots: 0,
             t: Vec::new(),
             r: Vec::new(),
             sess_flows: Vec::new(),
             flows: Vec::new(),
             dprime: Vec::new(),
+            edge_vals: Vec::new(),
+            phi_blk: Vec::new(),
+            f_blk: Vec::new(),
+            t_blk: Vec::new(),
+            r_blk: Vec::new(),
+            blk_scratch: Vec::new(),
+            flows_ready: false,
+            marg_synced: false,
+            edge_flag: Vec::new(),
+            touched: Vec::new(),
+            repriced: Vec::new(),
+            rev_must: Vec::new(),
+            mark_buf: Vec::new(),
             cost: 0.0,
         }
     }
@@ -168,6 +320,24 @@ impl FlowEngine {
         self.workers
     }
 
+    /// Select the sweep kernels (see [`BatchMode`]). Results are
+    /// bit-identical in every mode — this knob exists for the hotpath
+    /// bench and the equivalence tests.
+    pub fn set_batch_mode(&mut self, mode: BatchMode) {
+        self.batch_mode = mode;
+    }
+
+    /// Builder-style variant of [`FlowEngine::set_batch_mode`].
+    pub fn with_batch_mode(mut self, mode: BatchMode) -> Self {
+        self.batch_mode = mode;
+        self
+    }
+
+    /// The configured kernel selection.
+    pub fn batch_mode(&self) -> BatchMode {
+        self.batch_mode
+    }
+
     /// Choose the parallel dispatch strategy: `true` (default) reuses the
     /// persistent worker pool; `false` falls back to a per-sweep
     /// `std::thread::scope` spawn. Results are bit-identical either way —
@@ -183,6 +353,16 @@ impl FlowEngine {
     pub fn with_persistent_pool(mut self, on: bool) -> Self {
         self.set_persistent_pool(on);
         self
+    }
+
+    /// Drop the incremental-path state: the next
+    /// [`FlowEngine::prepare_dirty`] / [`FlowEngine::evaluate_cost_dirty`]
+    /// falls back to a full sweep. Call after swapping in a *different*
+    /// problem of identical shape (same node/edge/session counts) — a
+    /// shape change is detected by [`FlowEngine::bind`] automatically.
+    pub fn invalidate(&mut self) {
+        self.flows_ready = false;
+        self.marg_synced = false;
     }
 
     /// Spawn (or grow) the persistent pool for `workers` total workers.
@@ -201,18 +381,39 @@ impl FlowEngine {
 
     /// (Re)size the workspaces for `net`'s shape. Idempotent and cheap when
     /// the shape is unchanged — the hot loops allocate nothing after the
-    /// first call.
+    /// first call. A shape change also invalidates the incremental-path
+    /// state (see [`FlowEngine::invalidate`]).
     pub fn bind(&mut self, net: &AugmentedNet) {
         let (nn, ne, wc) = (net.n_nodes(), net.graph.n_edges(), net.n_sessions());
-        if self.n_nodes != nn || self.n_edges != ne || self.w_cnt != wc {
+        let (lanes, slots) = (net.csr.n_lanes(), net.batch.n_slots);
+        if self.n_nodes != nn
+            || self.n_edges != ne
+            || self.w_cnt != wc
+            || self.bound_lanes != lanes
+            || self.bound_slots != slots
+        {
             self.n_nodes = nn;
             self.n_edges = ne;
             self.w_cnt = wc;
+            self.bound_lanes = lanes;
+            self.bound_slots = slots;
             self.t = vec![0.0; wc * nn];
             self.r = vec![0.0; wc * nn];
             self.sess_flows = vec![0.0; wc * ne];
             self.flows = vec![0.0; ne];
             self.dprime = vec![0.0; ne];
+            self.edge_vals = vec![0.0; ne];
+            self.t_blk = vec![0.0; wc * nn];
+            self.r_blk = vec![0.0; wc * nn];
+            self.phi_blk = vec![0.0; slots];
+            self.f_blk = vec![0.0; slots];
+            self.blk_scratch = vec![0.0; wc];
+            self.edge_flag = vec![false; ne];
+            self.rev_must = vec![false; nn];
+            self.touched.clear();
+            self.repriced.clear();
+            self.mark_buf.clear();
+            self.invalidate();
         }
     }
 
@@ -229,39 +430,109 @@ impl FlowEngine {
         requested.clamp(1, n_units.max(1))
     }
 
+    /// Should this sweep run the batched kernels?
+    fn decide_batched(&self, net: &AugmentedNet) -> bool {
+        match self.batch_mode {
+            BatchMode::Auto => net.batch.max_width() >= 2,
+            BatchMode::Batched => !net.batch.blocks.is_empty(),
+            BatchMode::Scalar => false,
+        }
+    }
+
     /// Fused forward sweep (eqs. 1 + 4 + the P2 objective): per-session
-    /// ingress rates, link flows, and total cost in one pass per session.
-    /// Returns the total network cost. Each edge is priced with its own
-    /// cost family ([`Problem::edge_kind`]).
+    /// ingress rates, link flows, and total cost in one pass per session
+    /// (or per version block in batched mode). Returns the total network
+    /// cost. Each edge is priced with its own cost family
+    /// ([`Problem::edge_kind`]).
     pub fn forward_sweep(&mut self, problem: &Problem, phi: &Phi, lam: &[f64]) -> f64 {
         let net = &problem.net;
         self.bind(net);
         assert_eq!(lam.len(), self.w_cnt);
+        let batched = self.decide_batched(net);
+        self.last_batched = batched;
+        if batched {
+            self.forward_pass_batched(net, phi, lam);
+            scatter_block_state(&net.batch, self.n_nodes, &self.t_blk, &mut self.t);
+            self.reduce_flows_batched(&net.csr, &net.batch);
+        } else {
+            self.forward_pass_scalar(net, phi, lam);
+            self.reduce_flows_scalar(&net.csr);
+        }
+        let total = self.price_edges(problem);
+        self.cost = total;
+        self.flows_ready = true;
+        self.marg_synced = false;
+        total
+    }
+
+    /// Scalar per-session forward pass (the reference-order kernels).
+    fn forward_pass_scalar(&mut self, net: &AugmentedNet, phi: &Phi, lam: &[f64]) {
         let (nn, ne) = (self.n_nodes, self.n_edges);
         let workers = self.effective_workers(self.w_cnt);
         self.ensure_pool(workers);
         let csr = &net.csr;
-        {
-            let pool = self.pool.as_ref();
-            let mut units: Vec<ForwardUnit<'_>> = self
-                .t
-                .chunks_mut(nn)
-                .zip(self.sess_flows.chunks_mut(ne))
-                .zip(phi.frac.iter().zip(lam))
-                .enumerate()
-                .map(|(w, ((t_w, f_w), (phi_w, &lam_w)))| ForwardUnit {
-                    w,
-                    lam_w,
-                    phi_w,
-                    t_w,
-                    f_w,
-                })
-                .collect();
-            run_units(pool, workers, &mut units, |u| forward_session(csr, u));
+        let pool = self.pool.as_ref();
+        let mut units: Vec<ForwardUnit<'_>> = self
+            .t
+            .chunks_mut(nn)
+            .zip(self.sess_flows.chunks_mut(ne))
+            .zip(phi.frac.iter().zip(lam))
+            .enumerate()
+            .map(|(w, ((t_w, f_w), (phi_w, &lam_w)))| ForwardUnit {
+                w,
+                lam_w,
+                phi_w,
+                t_w,
+                f_w,
+            })
+            .collect();
+        run_units(pool, workers, &mut units, |u| forward_session(csr, u));
+    }
+
+    /// Session-batched forward pass: one unit per version block, `φ`
+    /// gathered lane-major, inner loops contiguous over the session
+    /// dimension.
+    fn forward_pass_batched(&mut self, net: &AugmentedNet, phi: &Phi, lam: &[f64]) {
+        let nn = self.n_nodes;
+        let batch = &net.batch;
+        let workers = self.effective_workers(batch.blocks.len());
+        self.ensure_pool(workers);
+        let pool = self.pool.as_ref();
+        let mut t_rest = self.t_blk.as_mut_slice();
+        let mut f_rest = self.f_blk.as_mut_slice();
+        let mut p_rest = self.phi_blk.as_mut_slice();
+        let mut s_rest = self.blk_scratch.as_mut_slice();
+        let mut units: Vec<ForwardBlockUnit<'_>> = Vec::with_capacity(batch.blocks.len());
+        for (b, blk) in batch.blocks.iter().enumerate() {
+            let (wdt, n_lanes) = (blk.width(), blk.lanes.1 - blk.lanes.0);
+            let (t, tr) = std::mem::take(&mut t_rest).split_at_mut(nn * wdt);
+            let (f, fr) = std::mem::take(&mut f_rest).split_at_mut(n_lanes * wdt);
+            let (p, pr) = std::mem::take(&mut p_rest).split_at_mut(n_lanes * wdt);
+            let (rt, sr) = std::mem::take(&mut s_rest).split_at_mut(wdt);
+            (t_rest, f_rest, p_rest, s_rest) = (tr, fr, pr, sr);
+            units.push(ForwardBlockUnit {
+                rows: batch.rows(b),
+                lane0: blk.lanes.0,
+                lane_edge: &batch.lane_edge[blk.lanes.0..blk.lanes.1],
+                lane_dst: &batch.lane_dst[blk.lanes.0..blk.lanes.1],
+                width: wdt,
+                sessions: &blk.sessions,
+                phi_all: &phi.frac,
+                lam,
+                phi: p,
+                f,
+                t,
+                rt,
+            });
         }
-        // Deterministic reduction: total flows accumulate per edge in
-        // ascending session order on the caller thread, exactly like the
-        // reference `flow::edge_flows` — independent of the worker count.
+        run_units(pool, workers, &mut units, forward_block);
+    }
+
+    /// Deterministic reduction, scalar layout: total flows accumulate per
+    /// edge in ascending session order on the caller thread, exactly like
+    /// the reference `flow::edge_flows` — independent of the worker count.
+    fn reduce_flows_scalar(&mut self, csr: &FlowCsr) {
+        let ne = self.n_edges;
         self.flows.fill(0.0);
         for w in 0..self.w_cnt {
             let f_w = &self.sess_flows[w * ne..(w + 1) * ne];
@@ -270,28 +541,65 @@ impl FlowEngine {
                 self.flows[e] += f_w[e];
             }
         }
-        // Cost over the session-usable edge set, in `union_edges` order
-        // (mirrors the reference `flow::total_cost`).
+    }
+
+    /// Deterministic reduction, batched layout: identical order and
+    /// identical addends as the scalar reduction (each batched per-session
+    /// flow is the same `t·φ` product), read through
+    /// [`BatchCsr::lane_slot`] and mirrored into the session-major
+    /// `sess_flows` for the incremental path.
+    fn reduce_flows_batched(&mut self, csr: &FlowCsr, batch: &BatchCsr) {
+        let ne = self.n_edges;
+        self.flows.fill(0.0);
+        for w in 0..self.w_cnt {
+            let (l0, l1) = csr.session_lane_span[w];
+            for k in l0..l1 {
+                let e = csr.lane_edge[k];
+                let v = self.f_blk[batch.lane_slot[k]];
+                self.sess_flows[w * ne + e] = v;
+                self.flows[e] += v;
+            }
+        }
+    }
+
+    /// Price every session-usable edge at the current flows, cache the
+    /// per-edge values, and return their fixed-order sum (mirrors the
+    /// reference `flow::total_cost`).
+    fn price_edges(&mut self, problem: &Problem) -> f64 {
+        let net = &problem.net;
         let mut total = 0.0;
         for &e in &net.union_edges {
-            total += problem.edge_kind(e).value(self.flows[e], net.graph.edge(e).capacity);
+            let v = problem.edge_kind(e).value(self.flows[e], net.graph.edge(e).capacity);
+            self.edge_vals[e] = v;
+            total += v;
         }
-        self.cost = total;
         total
     }
 
     /// Fused reverse sweep (eqs. 18–21): link marginals `D'_ij` plus the
-    /// broadcast node marginals `∂D/∂r_i(w)`, one reverse pass per session.
-    /// Requires a prior [`FlowEngine::forward_sweep`] on the same state.
+    /// broadcast node marginals `∂D/∂r_i(w)`, one reverse pass per session
+    /// (or per version block in batched mode). Requires a prior
+    /// [`FlowEngine::forward_sweep`] on the same state.
     pub fn reverse_sweep(&mut self, problem: &Problem, phi: &Phi) {
         let net = &problem.net;
         assert_eq!(self.n_edges, net.graph.n_edges(), "reverse_sweep before forward_sweep");
-        let nn = self.n_nodes;
         self.dprime.fill(0.0);
         for &e in &net.union_edges {
             self.dprime[e] =
                 problem.edge_kind(e).derivative(self.flows[e], net.graph.edge(e).capacity);
         }
+        if self.last_batched {
+            self.reverse_pass_batched(net);
+            scatter_block_state(&net.batch, self.n_nodes, &self.r_blk, &mut self.r);
+        } else {
+            self.reverse_pass_scalar(net, phi);
+        }
+        self.marg_synced = true;
+    }
+
+    /// Scalar per-session reverse pass.
+    fn reverse_pass_scalar(&mut self, net: &AugmentedNet, phi: &Phi) {
+        let nn = self.n_nodes;
         let workers = self.effective_workers(self.w_cnt);
         self.ensure_pool(workers);
         let pool = self.pool.as_ref();
@@ -305,6 +613,40 @@ impl FlowEngine {
             .map(|(w, (r_w, phi_w))| ReverseUnit { w, phi_w, r_w })
             .collect();
         run_units(pool, workers, &mut units, |u| reverse_session(csr, dprime, u));
+    }
+
+    /// Session-batched reverse pass: reuses the forward pass's lane-major
+    /// `φ` gather (the operating point is unchanged between the two halves
+    /// of a [`FlowEngine::prepare`]).
+    fn reverse_pass_batched(&mut self, net: &AugmentedNet) {
+        let nn = self.n_nodes;
+        let batch = &net.batch;
+        let workers = self.effective_workers(batch.blocks.len());
+        self.ensure_pool(workers);
+        let pool = self.pool.as_ref();
+        let dprime = &self.dprime;
+        let mut r_rest = self.r_blk.as_mut_slice();
+        let mut p_rest = self.phi_blk.as_slice();
+        let mut s_rest = self.blk_scratch.as_mut_slice();
+        let mut units: Vec<ReverseBlockUnit<'_>> = Vec::with_capacity(batch.blocks.len());
+        for (b, blk) in batch.blocks.iter().enumerate() {
+            let (wdt, n_lanes) = (blk.width(), blk.lanes.1 - blk.lanes.0);
+            let (r, rr) = std::mem::take(&mut r_rest).split_at_mut(nn * wdt);
+            let (p, pr) = p_rest.split_at(n_lanes * wdt);
+            let (acc, sr) = std::mem::take(&mut s_rest).split_at_mut(wdt);
+            (r_rest, p_rest, s_rest) = (rr, pr, sr);
+            units.push(ReverseBlockUnit {
+                rows: batch.rows(b),
+                lane0: blk.lanes.0,
+                lane_edge: &batch.lane_edge[blk.lanes.0..blk.lanes.1],
+                lane_dst: &batch.lane_dst[blk.lanes.0..blk.lanes.1],
+                width: wdt,
+                phi: p,
+                r,
+                acc,
+            });
+        }
+        run_units(pool, workers, &mut units, |u| reverse_block(dprime, u));
     }
 
     /// One full evaluation at `(Λ, φ)`: fused forward + reverse sweep.
@@ -384,6 +726,21 @@ impl FlowEngine {
     }
 }
 
+/// Copy batched node-major `[node × session]` block state back into the
+/// engine's session-major layout (a pure relayout — bit-preserving).
+fn scatter_block_state(batch: &BatchCsr, nn: usize, src: &[f64], dst: &mut [f64]) {
+    for blk in &batch.blocks {
+        let wdt = blk.width();
+        let base = nn * blk.col0;
+        for (j, &s) in blk.sessions.iter().enumerate() {
+            let row = &mut dst[s * nn..(s + 1) * nn];
+            for (i, v) in row.iter_mut().enumerate() {
+                *v = src[base + i * wdt + j];
+            }
+        }
+    }
+}
+
 /// Mutable per-session view for the forward sweep.
 struct ForwardUnit<'a> {
     w: usize,
@@ -398,6 +755,40 @@ struct ReverseUnit<'a> {
     w: usize,
     phi_w: &'a [f64],
     r_w: &'a mut [f64],
+}
+
+/// Mutable per-version-block view for the batched forward sweep. All lane
+/// indices are block-local (`lane0`-rebased); `phi`/`f` are lane-major
+/// `[lane × session]`, `t` is node-major `[node × session]`. Session-major
+/// inputs (`phi_all`, `lam`) are borrowed whole so building a unit
+/// allocates nothing.
+struct ForwardBlockUnit<'a> {
+    rows: &'a [CsrRow],
+    lane0: usize,
+    lane_edge: &'a [usize],
+    lane_dst: &'a [usize],
+    width: usize,
+    /// Global session ids of the block's columns (from
+    /// [`crate::graph::augmented::BatchBlock`]).
+    sessions: &'a [usize],
+    phi_all: &'a [Vec<f64>],
+    lam: &'a [f64],
+    phi: &'a mut [f64],
+    f: &'a mut [f64],
+    t: &'a mut [f64],
+    rt: &'a mut [f64],
+}
+
+/// Mutable per-version-block view for the batched reverse sweep.
+struct ReverseBlockUnit<'a> {
+    rows: &'a [CsrRow],
+    lane0: usize,
+    lane_edge: &'a [usize],
+    lane_dst: &'a [usize],
+    width: usize,
+    phi: &'a [f64],
+    r: &'a mut [f64],
+    acc: &'a mut [f64],
 }
 
 /// Forward topological pass for one session: rates + per-session flows.
@@ -433,6 +824,70 @@ fn reverse_session(csr: &FlowCsr, dprime: &[f64], u: &mut ReverseUnit<'_>) {
             }
         }
         u.r_w[row.node] = acc;
+    }
+}
+
+/// Forward topological pass for one version block: gathers `φ` lane-major,
+/// then runs eqs. 1 + 4 as contiguous multiply-accumulates over the
+/// session dimension. Sessions not using a lane see `φ = 0` there; on the
+/// non-negative rate/flow accumulators `x + 0.0` is exact, so every member
+/// session's result is bit-identical to its scalar sweep.
+fn forward_block(u: &mut ForwardBlockUnit<'_>) {
+    let wdt = u.width;
+    // gather φ once per iteration (the only pass that touches the
+    // session-major rows), one member column at a time
+    for (j, &s) in u.sessions.iter().enumerate() {
+        let row = u.phi_all[s].as_slice();
+        for (l, &e) in u.lane_edge.iter().enumerate() {
+            u.phi[l * wdt + j] = row[e];
+        }
+    }
+    u.t.fill(0.0);
+    let sbase = AugmentedNet::SOURCE * wdt;
+    for (j, &s) in u.sessions.iter().enumerate() {
+        u.t[sbase + j] = u.lam[s];
+    }
+    for row in u.rows {
+        let node_base = row.node * wdt;
+        u.rt.copy_from_slice(&u.t[node_base..node_base + wdt]);
+        for k in (row.start - u.lane0)..(row.end - u.lane0) {
+            let base = k * wdt;
+            let dbase = u.lane_dst[k] * wdt;
+            // split so the compiler sees disjoint slices (vectorizable)
+            let (f_cell, phi_cell) =
+                (&mut u.f[base..base + wdt], &u.phi[base..base + wdt]);
+            let t_cell = &mut u.t[dbase..dbase + wdt];
+            for (((fv, &pv), &tv), td) in
+                f_cell.iter_mut().zip(phi_cell).zip(u.rt.iter()).zip(t_cell)
+            {
+                let c = tv * pv;
+                *fv = c;
+                *td += c;
+            }
+        }
+    }
+}
+
+/// Reverse topological pass for one version block (the eq. 20–21
+/// broadcast), reusing the forward gather of `φ`. The `φ > 0` guard is
+/// applied per (lane, session) exactly like the scalar sweep.
+fn reverse_block(dprime: &[f64], u: &mut ReverseBlockUnit<'_>) {
+    let wdt = u.width;
+    u.r.fill(0.0);
+    for row in u.rows.iter().rev() {
+        u.acc.fill(0.0);
+        for k in (row.start - u.lane0)..(row.end - u.lane0) {
+            let dp = dprime[u.lane_edge[k]];
+            let base = k * wdt;
+            let dbase = u.lane_dst[k] * wdt;
+            let phi_cell = &u.phi[base..base + wdt];
+            let r_cell = &u.r[dbase..dbase + wdt];
+            for ((a, &fv), &rv) in u.acc.iter_mut().zip(phi_cell).zip(r_cell) {
+                *a += if fv > 0.0 { fv * (dp + rv) } else { 0.0 };
+            }
+        }
+        let node_base = row.node * wdt;
+        u.r[node_base..node_base + wdt].copy_from_slice(u.acc);
     }
 }
 
@@ -492,16 +947,39 @@ fn run_units<T: Send, F: Fn(&mut T) + Sync>(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::augmented::Placement;
     use crate::graph::topologies;
     use crate::model::cost::CostKind;
     use crate::model::flow;
+    use crate::model::Workload;
     use crate::routing::marginal;
+    use crate::routing::Router;
     use crate::util::rng::Rng;
 
     fn problem(seed: u64, n: usize) -> Problem {
         let mut rng = Rng::seed_from(seed);
         let net = topologies::connected_er(n, 0.3, 3, &mut rng);
         Problem::new(net, 60.0, CostKind::Exp)
+    }
+
+    /// A heterogeneous multi-class problem: `classes` task classes over 3
+    /// versions (session blocks of width `classes`).
+    fn multi_problem(seed: u64, n: usize, classes: usize) -> Problem {
+        let mut rng = Rng::seed_from(seed);
+        let g = topologies::connected_er_graph(n, 0.3, 10.0, &mut rng);
+        let pl = Placement::random(n, 3, &mut rng);
+        let mut class_sources: Vec<Vec<usize>> = vec![pl.hosts(0).collect()];
+        for c in 1..classes {
+            class_sources.push(vec![c % n, (3 * c + 1) % n]);
+        }
+        let net =
+            AugmentedNet::build_heterogeneous(&g, &pl, 10.0, &[], &class_sources, &mut rng);
+        let workload = Workload {
+            class_names: (0..classes).map(|c| format!("c{c}")).collect(),
+            class_rates: vec![20.0; classes],
+            class_spans: (0..classes).map(|c| (3 * c, 3 * (c + 1))).collect(),
+        };
+        Problem::with_workload(net, CostKind::Exp, workload)
     }
 
     #[test]
@@ -549,6 +1027,114 @@ mod tests {
                     assert_eq!(a.to_bits(), b.to_bits(), "r at workers={workers}");
                 }
             }
+        }
+    }
+
+    /// Bit-compare two engines' full state after identical `prepare`s.
+    fn assert_state_bits_equal(a: &FlowEngine, b: &FlowEngine, tag: &str) {
+        assert_eq!(a.cost.to_bits(), b.cost.to_bits(), "{tag}: cost");
+        for (x, y) in a.flows.iter().zip(&b.flows) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{tag}: flows");
+        }
+        for (x, y) in a.sess_flows.iter().zip(&b.sess_flows) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{tag}: sess_flows");
+        }
+        for (x, y) in a.t.iter().zip(&b.t) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{tag}: t");
+        }
+        for (x, y) in a.r.iter().zip(&b.r) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{tag}: r");
+        }
+        for (x, y) in a.dprime.iter().zip(&b.dprime) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{tag}: dprime");
+        }
+    }
+
+    #[test]
+    fn batched_kernels_bit_identical_to_scalar_multi_class() {
+        for (seed, classes) in [(3u64, 2usize), (4, 4)] {
+            let p = multi_problem(seed, 14, classes);
+            assert!(p.net.batch.max_width() >= 2);
+            let lam = p.uniform_allocation();
+            // exercise uniform φ and an evolved mid-descent φ
+            let mut phi = Phi::uniform(&p.net);
+            let mut router = crate::routing::omd::OmdRouter::fixed(0.3);
+            for it in 0..4 {
+                let mut scalar = FlowEngine::new().with_batch_mode(BatchMode::Scalar);
+                let mut batched = FlowEngine::new().with_batch_mode(BatchMode::Batched);
+                let cs = scalar.prepare(&p, &phi, &lam);
+                let cb = batched.prepare(&p, &phi, &lam);
+                assert_eq!(cs.to_bits(), cb.to_bits(), "cost it={it}");
+                assert_state_bits_equal(&scalar, &batched, &format!("it={it}"));
+                // Auto engages batching on multi-class and must agree too
+                let mut auto = FlowEngine::new();
+                auto.prepare(&p, &phi, &lam);
+                assert!(auto.last_batched, "auto mode must batch multi-class nets");
+                assert_state_bits_equal(&auto, &batched, &format!("auto it={it}"));
+                router.step(&p, &lam, &mut phi);
+            }
+        }
+    }
+
+    #[test]
+    fn batched_kernels_bit_identical_to_scalar_single_class() {
+        // width-1 blocks: the batched path must still agree bitwise, and
+        // Auto must stay scalar
+        let p = problem(5, 12);
+        let phi = Phi::uniform(&p.net);
+        let lam = p.uniform_allocation();
+        let mut scalar = FlowEngine::new().with_batch_mode(BatchMode::Scalar);
+        let mut batched = FlowEngine::new().with_batch_mode(BatchMode::Batched);
+        let cs = scalar.prepare(&p, &phi, &lam);
+        let cb = batched.prepare(&p, &phi, &lam);
+        assert_eq!(cs.to_bits(), cb.to_bits());
+        assert_state_bits_equal(&scalar, &batched, "single-class");
+        let mut auto = FlowEngine::new();
+        auto.prepare(&p, &phi, &lam);
+        assert!(!auto.last_batched, "auto mode must stay scalar on single-class nets");
+    }
+
+    #[test]
+    fn batched_bit_identical_across_worker_counts() {
+        let p = multi_problem(6, 14, 3);
+        let phi = Phi::uniform(&p.net);
+        let lam = p.uniform_allocation();
+        let mut reference = FlowEngine::new().with_batch_mode(BatchMode::Batched);
+        let c1 = reference.prepare(&p, &phi, &lam);
+        for workers in [2usize, 4, 0] {
+            let mut eng =
+                FlowEngine::new().with_batch_mode(BatchMode::Batched).with_workers(workers);
+            let c = eng.prepare(&p, &phi, &lam);
+            assert_eq!(c.to_bits(), c1.to_bits(), "cost at workers={workers}");
+            for w in 0..p.n_sessions() {
+                for (a, b) in eng.marginals(w).iter().zip(reference.marginals(w)) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "r at workers={workers}");
+                }
+                for (a, b) in eng.rates(w).iter().zip(reference.rates(w)) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "t at workers={workers}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multi_class_engine_matches_reference() {
+        let p = multi_problem(7, 12, 3);
+        let phi = Phi::uniform(&p.net);
+        let lam = p.uniform_allocation();
+        let ev = flow::evaluate(&p, &phi, &lam);
+        let m = marginal::compute(&p, &phi, &ev.flows);
+        let mut eng = FlowEngine::new();
+        let cost = eng.prepare(&p, &phi, &lam);
+        assert!((cost - ev.cost).abs() <= 1e-12 * ev.cost.abs().max(1.0));
+        for w in 0..p.n_sessions() {
+            for i in 0..p.net.n_nodes() {
+                assert!((eng.node_rate(w, i) - ev.t[w][i]).abs() <= 1e-12, "t w={w} i={i}");
+                assert!((eng.node_marginal(w, i) - m.r[w][i]).abs() <= 1e-12, "r w={w} i={i}");
+            }
+        }
+        for e in 0..p.net.graph.n_edges() {
+            assert!((eng.flows()[e] - ev.flows[e]).abs() <= 1e-12, "F e={e}");
         }
     }
 

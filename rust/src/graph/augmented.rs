@@ -148,6 +148,12 @@ pub struct FlowCsr {
     pub session_rows: Vec<(usize, usize)>,
     /// Per-session `(first_lane, end_lane)` ranges into `lane_edge`.
     pub session_lane_span: Vec<(usize, usize)>,
+    /// Transposed index — sessions whose DAG contains each edge, ascending:
+    /// edge `e` owns `edge_session[edge_session_off[e]..edge_session_off[e+1]]`.
+    /// This is what lets the engine's incremental path re-reduce a touched
+    /// edge's total flow in exactly the full sweep's session order.
+    pub edge_session_off: Vec<usize>,
+    pub edge_session: Vec<u32>,
 }
 
 impl FlowCsr {
@@ -162,6 +168,90 @@ impl FlowCsr {
     #[inline]
     pub fn n_lanes(&self) -> usize {
         self.lane_edge.len()
+    }
+
+    /// Sessions whose DAG contains edge `e`, ascending.
+    #[inline]
+    pub fn sessions_of_edge(&self, e: EdgeId) -> &[u32] {
+        &self.edge_session[self.edge_session_off[e]..self.edge_session_off[e + 1]]
+    }
+}
+
+/// One session block of the batched lane index: all sessions serving the
+/// same DNN version, swept together over the block's union DAG.
+#[derive(Clone, Debug)]
+pub struct BatchBlock {
+    /// DNN version shared by every session of the block.
+    pub version: usize,
+    /// Global session ids of the block, ascending (the lane-major columns,
+    /// in order).
+    pub sessions: Vec<usize>,
+    /// Row range of the block into [`BatchCsr::rows`].
+    pub rows: (usize, usize),
+    /// Union-lane range of the block into [`BatchCsr::lane_edge`].
+    pub lanes: (usize, usize),
+    /// First slot of the block's lane-major `[lane × session]` region in
+    /// the engine's batched workspaces.
+    pub slot0: usize,
+    /// First column of the block in the node-major `[node × session]`
+    /// regions (block widths pack to `n_sessions` columns total).
+    pub col0: usize,
+}
+
+impl BatchBlock {
+    /// Number of sessions swept together (the SoA vector width).
+    #[inline]
+    pub fn width(&self) -> usize {
+        self.sessions.len()
+    }
+}
+
+/// Session-batched lane index — the SoA substrate of the engine's batched
+/// sweeps.
+///
+/// Sessions of one DNN version share a destination, hence (up to the
+/// virtual source's admission lanes) the same strictly-closer DAG and —
+/// after [`AugmentedNet::rebuild_session_dags`] — the same topological row
+/// order. Grouping them into a [`BatchBlock`] lets the engine process each
+/// CSR row once for the whole block: `φ` is gathered into a lane-major
+/// `[lane × session]` workspace and the inner loops become contiguous
+/// multiply-accumulates over the session dimension. Lanes a session does
+/// not use hold `φ = 0` there, and `x + 0.0` is exact on the engine's
+/// non-negative accumulators, so each session sees bit-for-bit its own
+/// scalar sweep.
+#[derive(Clone, Debug, Default)]
+pub struct BatchCsr {
+    /// One block per DNN version, in version order.
+    pub blocks: Vec<BatchBlock>,
+    /// Flat row table (block-major, rows in the shared topo order); lane
+    /// ranges are global indices into `lane_edge`.
+    pub rows: Vec<CsrRow>,
+    /// Union lane edge ids (block-major; within a row, adjacency order —
+    /// the same relative order as every member session's scalar lanes).
+    pub lane_edge: Vec<EdgeId>,
+    /// Destination node of each union lane (parallel to `lane_edge`).
+    pub lane_dst: Vec<NodeId>,
+    /// Session `s` → `(block index, column within block)`.
+    pub session_slot: Vec<(usize, usize)>,
+    /// Per scalar-CSR lane `k` (parallel to [`FlowCsr::lane_edge`]): the
+    /// global slot of that (session, lane) in the lane-major workspaces —
+    /// how the fixed-order flow reduction reads batched per-session flows.
+    pub lane_slot: Vec<usize>,
+    /// Total lane-major workspace slots (`Σ_b lanes_b × width_b`).
+    pub n_slots: usize,
+}
+
+impl BatchCsr {
+    /// Rows of block `b` in the shared forward topological order.
+    #[inline]
+    pub fn rows(&self, b: usize) -> &[CsrRow] {
+        let (a, z) = self.blocks[b].rows;
+        &self.rows[a..z]
+    }
+
+    /// Widest block (the maximum SoA width; 1 on single-class networks).
+    pub fn max_width(&self) -> usize {
+        self.blocks.iter().map(BatchBlock::width).max().unwrap_or(0)
     }
 }
 
@@ -186,8 +276,11 @@ pub struct AugmentedNet {
     pub session_admit: Vec<Vec<NodeId>>,
     /// `session_edges[w][e]` — edge `e` usable by session `w`.
     pub session_edges: Vec<Vec<bool>>,
-    /// Per-session topological order of the session DAG (sources first).
-    pub session_topo: Vec<Vec<NodeId>>,
+    /// Shared topological order per DNN *version* (sources first), valid
+    /// for every session serving that version — computed on the union of
+    /// their DAG masks. Read per session via
+    /// [`AugmentedNet::session_topo`].
+    pub version_topo: Vec<Vec<NodeId>>,
     /// Edge ids of virtual links, for cost attribution diagnostics.
     pub virtual_edges: Vec<EdgeId>,
     /// `session_lanes[w][i]` — cached usable out-edges (hot-path: avoids
@@ -201,6 +294,9 @@ pub struct AugmentedNet {
     /// Flat CSR lane index (per-session topo-ordered rows) consumed by
     /// [`crate::engine::FlowEngine`]'s fused sweeps.
     pub csr: FlowCsr,
+    /// Session-batched lane index (one block per version) consumed by the
+    /// engine's lane-major SoA sweeps.
+    pub batch: BatchCsr,
 }
 
 /// Capacity assigned to S->device admission links (effectively unconstrained:
@@ -220,6 +316,14 @@ impl AugmentedNet {
     #[inline]
     pub fn version_of_session(&self, s: usize) -> usize {
         self.session_version[s]
+    }
+
+    /// Forward topological order of session `s`'s DAG (sources first) —
+    /// the order shared by every session of the same version (stored once
+    /// per version in [`AugmentedNet::version_topo`]).
+    #[inline]
+    pub fn session_topo(&self, s: usize) -> &[NodeId] {
+        &self.version_topo[self.session_version[s]]
     }
 
     /// Number of DNN versions W (= the number of `D_w` nodes).
@@ -335,12 +439,13 @@ impl AugmentedNet {
             session_version,
             session_admit,
             session_edges: Vec::new(),
-            session_topo: Vec::new(),
+            version_topo: Vec::new(),
             virtual_edges,
             session_lanes: Vec::new(),
             routers: Vec::new(),
             union_edges: Vec::new(),
             csr: FlowCsr::default(),
+            batch: BatchCsr::default(),
         };
         net.rebuild_session_dags();
         net
@@ -348,10 +453,20 @@ impl AugmentedNet {
 
     /// (Re)compute the per-session DAG masks + topological orders. Called at
     /// construction and after any topology change.
+    ///
+    /// Sessions serving the same DNN version share **one** topological
+    /// order, computed on the union of their DAG masks: every non-source
+    /// edge of a version-`w` session strictly decreases the hop distance to
+    /// `D_w` and edges out of `S` cannot close a cycle (nothing enters
+    /// `S`), so the union is acyclic and its order is valid for each
+    /// member DAG. This is what lets [`crate::engine::FlowEngine`] sweep a
+    /// whole version block of sessions per CSR row with every session
+    /// seeing exactly its own scalar accumulation order (single-class
+    /// networks have one session per version, so the union *is* the
+    /// session mask and nothing changes).
     pub fn rebuild_session_dags(&mut self) {
         let s_cnt = self.n_sessions();
         let mut session_edges = Vec::with_capacity(s_cnt);
-        let mut session_topo = Vec::with_capacity(s_cnt);
         for w in 0..s_cnt {
             let ver = self.session_version[w];
             let dw = self.dnode(w);
@@ -396,15 +511,30 @@ impl AugmentedNet {
                 }
                 mask[eid] = true;
             }
-            let topo = self
-                .graph
-                .topo_order(&mask)
-                .expect("session DAG must be acyclic by construction");
             session_edges.push(mask);
-            session_topo.push(topo);
+        }
+        // one shared topological order per version, over the union of that
+        // version's session masks (identical to the per-session order when
+        // each version has exactly one session) — stored once per version,
+        // never per session
+        let mut version_topo = Vec::with_capacity(self.n_versions());
+        for ver in 0..self.n_versions() {
+            let mut union = vec![false; self.graph.n_edges()];
+            for (s, mask) in session_edges.iter().enumerate() {
+                if self.session_version[s] == ver {
+                    for (u, &m) in union.iter_mut().zip(mask) {
+                        *u |= m;
+                    }
+                }
+            }
+            version_topo.push(
+                self.graph
+                    .topo_order(&union)
+                    .expect("per-version union DAG must be acyclic by construction"),
+            );
         }
         self.session_edges = session_edges;
-        self.session_topo = session_topo;
+        self.version_topo = version_topo;
         // hot-path caches
         self.session_lanes = (0..s_cnt)
             .map(|w| {
@@ -446,7 +576,7 @@ impl AugmentedNet {
         for w in 0..s_cnt {
             let row_first = csr.rows.len();
             let lane_first = csr.lane_edge.len();
-            for &i in &self.session_topo[w] {
+            for &i in self.session_topo(w) {
                 let lanes = &self.session_lanes[w][i];
                 if lanes.is_empty() {
                     continue;
@@ -461,7 +591,108 @@ impl AugmentedNet {
             csr.session_rows.push((row_first, csr.rows.len()));
             csr.session_lane_span.push((lane_first, csr.lane_edge.len()));
         }
+        // transposed edge → sessions index (ascending sessions per edge),
+        // CSR-packed: the incremental engine path re-reduces a touched
+        // edge's flow by walking exactly this list
+        let ne = self.graph.n_edges();
+        let mut counts = vec![0usize; ne];
+        for mask in &self.session_edges {
+            for (e, &m) in mask.iter().enumerate() {
+                counts[e] += m as usize;
+            }
+        }
+        let mut off = Vec::with_capacity(ne + 1);
+        let mut acc = 0usize;
+        for &c in &counts {
+            off.push(acc);
+            acc += c;
+        }
+        off.push(acc);
+        let mut flat = vec![0u32; acc];
+        let mut cursor = off.clone();
+        for (s, mask) in self.session_edges.iter().enumerate() {
+            for (e, &m) in mask.iter().enumerate() {
+                if m {
+                    flat[cursor[e]] = s as u32;
+                    cursor[e] += 1;
+                }
+            }
+        }
+        csr.edge_session_off = off;
+        csr.edge_session = flat;
         self.csr = csr;
+        self.rebuild_batch();
+    }
+
+    /// Flatten the per-version session blocks into the batched SoA index.
+    /// Each block's rows follow the version's shared topological order and
+    /// each row's union lanes keep adjacency order, so every member
+    /// session's scalar (row, lane) sequence is a subsequence of the
+    /// block's — the invariant behind the batched sweeps' bit-identity.
+    fn rebuild_batch(&mut self) {
+        let s_cnt = self.n_sessions();
+        let ne = self.graph.n_edges();
+        let mut batch = BatchCsr {
+            session_slot: vec![(0, 0); s_cnt],
+            lane_slot: vec![0; self.csr.lane_edge.len()],
+            ..BatchCsr::default()
+        };
+        // scratch: union lane membership + edge -> block-local lane index
+        let mut union = vec![false; ne];
+        let mut lane_of_edge = vec![usize::MAX; ne];
+        let mut col0 = 0usize;
+        for ver in 0..self.n_versions() {
+            let sessions: Vec<usize> =
+                (0..s_cnt).filter(|&s| self.session_version[s] == ver).collect();
+            let width = sessions.len();
+            if width == 0 {
+                continue;
+            }
+            union.fill(false);
+            for &s in &sessions {
+                for (e, &m) in self.session_edges[s].iter().enumerate() {
+                    union[e] |= m;
+                }
+            }
+            let row_first = batch.rows.len();
+            let lane_first = batch.lane_edge.len();
+            let slot0 = batch.n_slots;
+            // shared topo order: one stored order per version
+            for &i in &self.version_topo[ver] {
+                let start = batch.lane_edge.len();
+                for &e in self.graph.out_edges(i) {
+                    if union[e] {
+                        lane_of_edge[e] = batch.lane_edge.len() - lane_first;
+                        batch.lane_edge.push(e);
+                        batch.lane_dst.push(self.graph.edge(e).dst);
+                    }
+                }
+                if batch.lane_edge.len() > start {
+                    batch.rows.push(CsrRow { node: i, start, end: batch.lane_edge.len() });
+                }
+            }
+            let n_lanes = batch.lane_edge.len() - lane_first;
+            for (col, &s) in sessions.iter().enumerate() {
+                batch.session_slot[s] = (batch.blocks.len(), col);
+                let (k0, k1) = self.csr.session_lane_span[s];
+                for k in k0..k1 {
+                    let local = lane_of_edge[self.csr.lane_edge[k]];
+                    debug_assert_ne!(local, usize::MAX, "session lane outside block union");
+                    batch.lane_slot[k] = slot0 + local * width + col;
+                }
+            }
+            batch.n_slots += n_lanes * width;
+            batch.blocks.push(BatchBlock {
+                version: ver,
+                sessions,
+                rows: (row_first, batch.rows.len()),
+                lanes: (lane_first, batch.lane_edge.len()),
+                slot0,
+                col0,
+            });
+            col0 += width;
+        }
+        self.batch = batch;
     }
 
     /// Real device index of augmented node `i` (None for S / D_w).
@@ -613,7 +844,8 @@ mod tests {
                 routers.sort_unstable();
                 assert_eq!(row_nodes, routers, "w={w}");
                 // rows follow the session topo order
-                let pos: std::collections::HashMap<usize, usize> = net.session_topo[w]
+                let pos: std::collections::HashMap<usize, usize> = net
+                    .session_topo(w)
                     .iter()
                     .enumerate()
                     .map(|(k, &i)| (i, k))
@@ -706,6 +938,129 @@ mod tests {
             assert_eq!(net.session_admit[s], vec![4usize, 8]);
         }
         net.validate().unwrap();
+    }
+
+    /// A two-class heterogeneous net (4 sessions over 2 versions).
+    fn two_class_net(seed: u64) -> AugmentedNet {
+        let mut rng = Rng::seed_from(seed);
+        let g = topologies::connected_er_graph(10, 0.35, 10.0, &mut rng);
+        let pl = Placement::random(10, 2, &mut rng);
+        let class_a: Vec<usize> = pl.hosts(0).collect();
+        let class_b = vec![3usize, 7];
+        AugmentedNet::build_heterogeneous(&g, &pl, 10.0, &[], &[class_a, class_b], &mut rng)
+    }
+
+    #[test]
+    fn same_version_sessions_share_one_topo_order() {
+        for seed in 0..6u64 {
+            let net = two_class_net(seed);
+            // class-major sessions [0,1,2,3] over versions [0,1,0,1]
+            assert_eq!(net.session_topo(0), net.session_topo(2));
+            assert_eq!(net.session_topo(1), net.session_topo(3));
+            assert_eq!(net.version_topo.len(), 2, "one stored order per version");
+            // the shared order is a valid topo order of every member DAG
+            for s in 0..net.n_sessions() {
+                let pos: std::collections::HashMap<usize, usize> = net
+                    .session_topo(s)
+                    .iter()
+                    .enumerate()
+                    .map(|(k, &i)| (i, k))
+                    .collect();
+                for (e, used) in net.session_edges[s].iter().enumerate() {
+                    if *used {
+                        let edge = net.graph.edge(e);
+                        assert!(pos[&edge.src] < pos[&edge.dst], "s={s} e={e}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn edge_session_index_is_exact_and_ascending() {
+        let net = two_class_net(1);
+        for e in 0..net.graph.n_edges() {
+            let listed = net.csr.sessions_of_edge(e);
+            let expect: Vec<u32> = (0..net.n_sessions())
+                .filter(|&s| net.session_edges[s][e])
+                .map(|s| s as u32)
+                .collect();
+            assert_eq!(listed, expect.as_slice(), "edge {e}");
+        }
+    }
+
+    #[test]
+    fn batch_blocks_group_sessions_by_version() {
+        let net = two_class_net(2);
+        assert_eq!(net.batch.blocks.len(), 2);
+        assert_eq!(net.batch.blocks[0].sessions, vec![0, 2]);
+        assert_eq!(net.batch.blocks[1].sessions, vec![1, 3]);
+        assert_eq!(net.batch.max_width(), 2);
+        // every scalar lane's slot points at its own (edge, session) cell
+        for s in 0..net.n_sessions() {
+            let (b, col) = net.batch.session_slot[s];
+            let blk = &net.batch.blocks[b];
+            assert_eq!(blk.sessions[col], s);
+            let w = blk.width();
+            let (k0, k1) = net.csr.session_lane_span[s];
+            for k in k0..k1 {
+                let slot = net.batch.lane_slot[k];
+                let local = (slot - blk.slot0 - col) / w;
+                assert_eq!((slot - blk.slot0 - col) % w, 0, "slot aligned to column");
+                assert_eq!(
+                    net.batch.lane_edge[blk.lanes.0 + local],
+                    net.csr.lane_edge[k],
+                    "s={s} k={k}"
+                );
+            }
+        }
+        // block rows follow the shared topo order and union lanes keep
+        // adjacency order (each session's scalar lane order is a
+        // subsequence)
+        for (b, blk) in net.batch.blocks.iter().enumerate() {
+            let order = net.session_topo(blk.sessions[0]);
+            let pos: std::collections::HashMap<usize, usize> =
+                order.iter().enumerate().map(|(k, &i)| (i, k)).collect();
+            for pair in net.batch.rows(b).windows(2) {
+                assert!(pos[&pair[0].node] < pos[&pair[1].node]);
+            }
+            for row in net.batch.rows(b) {
+                for k in row.start..row.end {
+                    assert_eq!(
+                        net.batch.lane_dst[k],
+                        net.graph.edge(net.batch.lane_edge[k]).dst
+                    );
+                }
+            }
+        }
+        // slot accounting adds up
+        let total: usize = net
+            .batch
+            .blocks
+            .iter()
+            .map(|b| (b.lanes.1 - b.lanes.0) * b.width())
+            .sum();
+        assert_eq!(net.batch.n_slots, total);
+    }
+
+    #[test]
+    fn single_class_batch_mirrors_scalar_csr() {
+        let net = er_net(5);
+        assert_eq!(net.batch.blocks.len(), net.n_versions());
+        assert_eq!(net.batch.max_width(), 1);
+        for (b, blk) in net.batch.blocks.iter().enumerate() {
+            assert_eq!(blk.sessions, vec![b]);
+            let brows = net.batch.rows(b);
+            let srows = net.csr.rows(b);
+            assert_eq!(brows.len(), srows.len());
+            for (br, sr) in brows.iter().zip(srows) {
+                assert_eq!(br.node, sr.node);
+                assert_eq!(
+                    &net.batch.lane_edge[br.start..br.end],
+                    &net.csr.lane_edge[sr.start..sr.end]
+                );
+            }
+        }
     }
 
     #[test]

@@ -54,7 +54,7 @@ pub fn count_paths(net: &AugmentedNet, w: usize) -> u64 {
     let mut count = vec![0u64; n];
     count[net.dnode(w)] = 1;
     // reverse topological order: destinations first
-    for &i in net.session_topo[w].iter().rev() {
+    for &i in net.session_topo(w).iter().rev() {
         if i == net.dnode(w) {
             continue;
         }

@@ -110,7 +110,7 @@ pub mod prelude {
     pub use crate::allocation::{gsoma::GsOma, omad::Omad, Allocator, UtilityOracle};
     pub use crate::coordinator::leader::DistributedOmd;
     pub use crate::coordinator::net::CommStats;
-    pub use crate::engine::FlowEngine;
+    pub use crate::engine::{BatchMode, FlowEngine, SessionMask};
     pub use crate::graph::augmented::{AugmentedNet, Placement};
     pub use crate::graph::topologies;
     pub use crate::graph::DiGraph;

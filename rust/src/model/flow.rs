@@ -97,7 +97,7 @@ pub fn node_rates(net: &AugmentedNet, phi: &Phi, lam: &[f64]) -> Vec<Vec<f64>> {
     let mut t = vec![vec![0.0; net.n_nodes()]; w_cnt];
     for w in 0..w_cnt {
         t[w][AugmentedNet::SOURCE] = lam[w];
-        for &i in &net.session_topo[w] {
+        for &i in net.session_topo(w) {
             let ti = t[w][i];
             if ti <= 0.0 {
                 continue;

@@ -7,7 +7,7 @@
 //! canonical gradient projection at the same step size.
 
 use super::{project_simplex, Router};
-use crate::engine::FlowEngine;
+use crate::engine::{BatchMode, FlowEngine};
 use crate::model::flow::Phi;
 use crate::model::Problem;
 
@@ -37,6 +37,10 @@ impl Router for GpRouter {
 
     fn set_workers(&mut self, workers: usize) {
         self.engine.set_workers(workers);
+    }
+
+    fn set_batch_mode(&mut self, mode: BatchMode) {
+        self.engine.set_batch_mode(mode);
     }
 
     fn step(&mut self, problem: &Problem, lam: &[f64], phi: &mut Phi) -> f64 {

@@ -52,7 +52,7 @@ pub fn compute(problem: &Problem, phi: &Phi, flows: &[f64]) -> Marginals {
     let mut r = vec![vec![0.0; net.n_nodes()]; net.n_sessions()];
     for w in 0..net.n_sessions() {
         // reverse topological order: D_w first (r = 0 there by eq. 20)
-        for &i in net.session_topo[w].iter().rev() {
+        for &i in net.session_topo(w).iter().rev() {
             if i == net.dnode(w) {
                 continue;
             }

@@ -24,7 +24,7 @@ pub mod opt;
 pub mod sgp;
 
 use crate::coordinator::net::CommStats;
-use crate::engine::FlowEngine;
+use crate::engine::{BatchMode, FlowEngine, SessionMask};
 use crate::model::flow::Phi;
 use crate::model::Problem;
 use crate::session::run::{RunReport, StopReason};
@@ -39,10 +39,34 @@ pub trait Router {
     /// convergence plots).
     fn step(&mut self, problem: &Problem, lam: &[f64], phi: &mut Phi) -> f64;
 
+    /// Like [`Router::step`], with the caller's promise that only the
+    /// sessions in `dirty` changed their `λ` entry or `φ` rows since this
+    /// router's **previous** evaluation of the same problem. Routers with
+    /// a delta-capable engine override this so the pre-update evaluation
+    /// ([`FlowEngine::prepare_dirty`]) re-runs the forward recurrence only
+    /// for the dirty sessions (and, when the engine's marginals are still
+    /// in sync, re-broadcasts only from repriced lanes) — results are
+    /// bit-identical to [`Router::step`] either way. Default: a full step.
+    fn step_dirty(
+        &mut self,
+        problem: &Problem,
+        lam: &[f64],
+        phi: &mut Phi,
+        _dirty: &SessionMask,
+    ) -> f64 {
+        self.step(problem, lam, phi)
+    }
+
     /// Set the [`FlowEngine`] worker count for this router's per-iteration
     /// sweeps (`0` = auto-detect). Results are bit-identical at any value.
     /// Default: no-op for routers without an engine.
     fn set_workers(&mut self, _workers: usize) {}
+
+    /// Select the engine sweep kernels (scalar vs session-batched; see
+    /// [`BatchMode`]). Results are bit-identical in every mode — this knob
+    /// exists for the hotpath bench and the equivalence tests. Default:
+    /// no-op for routers without an engine.
+    fn set_batch_mode(&mut self, _mode: BatchMode) {}
 
     /// Communication accounting, for routers that run over a message
     /// fabric (the distributed coordinator). `None` for in-process

@@ -15,7 +15,7 @@
 //! module is the native implementation and the numerical ground truth.
 
 use super::Router;
-use crate::engine::FlowEngine;
+use crate::engine::{BatchMode, FlowEngine, SessionMask};
 use crate::model::flow::Phi;
 use crate::model::Problem;
 
@@ -151,19 +151,24 @@ impl OmdRouter {
     }
 }
 
-impl Router for OmdRouter {
-    fn name(&self) -> &'static str {
-        "OMD-RT"
-    }
-
-    fn set_workers(&mut self, workers: usize) {
-        self.engine.set_workers(workers);
-    }
-
-    fn step(&mut self, problem: &Problem, lam: &[f64], phi: &mut Phi) -> f64 {
+impl OmdRouter {
+    /// The shared iteration body: evaluate (fully or via the engine's
+    /// dirty delta path — bit-identical), adapt η, and run the eq. 22 row
+    /// updates.
+    fn step_impl(
+        &mut self,
+        problem: &Problem,
+        lam: &[f64],
+        phi: &mut Phi,
+        dirty: Option<&SessionMask>,
+    ) -> f64 {
         let net = &problem.net;
         // fused forward + reverse sweep: t, F, cost, D', r in two passes
-        let cost_before = self.engine.prepare(problem, phi, lam);
+        // (the delta path re-sweeps only the dirty sessions)
+        let cost_before = match dirty {
+            Some(mask) => self.engine.prepare_dirty(problem, phi, lam, mask),
+            None => self.engine.prepare(problem, phi, lam),
+        };
 
         if self.adaptive {
             self.eta_cur = Self::adapt_eta(self.eta_cur, self.eta, self.last_cost, cost_before);
@@ -200,6 +205,38 @@ impl Router for OmdRouter {
         self.scratch_row = row;
         self.scratch_delta = delta;
         cost_before
+    }
+}
+
+impl Router for OmdRouter {
+    fn name(&self) -> &'static str {
+        "OMD-RT"
+    }
+
+    fn set_workers(&mut self, workers: usize) {
+        self.engine.set_workers(workers);
+    }
+
+    fn set_batch_mode(&mut self, mode: BatchMode) {
+        self.engine.set_batch_mode(mode);
+    }
+
+    fn step(&mut self, problem: &Problem, lam: &[f64], phi: &mut Phi) -> f64 {
+        self.step_impl(problem, lam, phi, None)
+    }
+
+    /// One iteration whose pre-update evaluation re-sweeps only the dirty
+    /// sessions — the single-step oracle's path for GS-OMA/OMAD probes
+    /// that change one class block's `λ` between observations.
+    /// Bit-identical to [`Router::step`].
+    fn step_dirty(
+        &mut self,
+        problem: &Problem,
+        lam: &[f64],
+        phi: &mut Phi,
+        dirty: &SessionMask,
+    ) -> f64 {
+        self.step_impl(problem, lam, phi, Some(dirty))
     }
 }
 

@@ -13,7 +13,7 @@
 //! distributed algorithms reach). The result serves as ground truth for
 //! Theorems 3/4 convergence checks and the "OPT" line in Figs. 7–8.
 
-use crate::engine::FlowEngine;
+use crate::engine::{BatchMode, FlowEngine};
 use crate::graph::paths::{enumerate_paths, Path};
 use crate::model::flow::Phi;
 use crate::model::Problem;
@@ -250,6 +250,10 @@ impl crate::routing::Router for OptRouter {
 
     fn set_workers(&mut self, workers: usize) {
         self.engine.set_workers(workers);
+    }
+
+    fn set_batch_mode(&mut self, mode: BatchMode) {
+        self.engine.set_batch_mode(mode);
     }
 
     fn step(&mut self, problem: &Problem, lam: &[f64], phi: &mut Phi) -> f64 {

@@ -31,7 +31,7 @@
 //! (`max` is exact — no rounding, so the values are bit-identical).
 
 use super::{project_simplex, Router};
-use crate::engine::FlowEngine;
+use crate::engine::{BatchMode, FlowEngine};
 use crate::model::flow::Phi;
 use crate::model::Problem;
 
@@ -113,6 +113,10 @@ impl Router for SgpRouter {
         self.engine.set_workers(workers);
     }
 
+    fn set_batch_mode(&mut self, mode: BatchMode) {
+        self.engine.set_batch_mode(mode);
+    }
+
     fn step(&mut self, problem: &Problem, lam: &[f64], phi: &mut Phi) -> f64 {
         let net = &problem.net;
         let cost_before = self.engine.prepare(problem, phi, lam);
@@ -141,7 +145,7 @@ impl Router for SgpRouter {
             self.hops.fill(0.0);
             self.down_dd.fill(0.0);
             let dw = net.dnode(w);
-            for &i in net.session_topo[w].iter().rev() {
+            for &i in net.session_topo(w).iter().rev() {
                 if i == dw {
                     continue;
                 }

@@ -587,6 +587,28 @@ impl ScenarioSpec {
         Ok(Session { cfg: self.to_config(), problem, spec: self })
     }
 
+    /// A stable content digest of the spec (FNV-1a over its canonical
+    /// JSON, which round-trips every field including the seed). Two specs
+    /// with equal digests build bit-identical [`Problem`]s — the key of
+    /// [`crate::session::Suite`]'s problem/CSR cache.
+    pub fn digest(&self) -> u64 {
+        let mut h = crate::util::hash::Fnv64::new();
+        h.write(self.to_json().to_string().as_bytes());
+        h.finish()
+    }
+
+    /// Assemble a [`Session`] around a problem instance built earlier from
+    /// a spec with the **same digest** (see [`ScenarioSpec::digest`]) —
+    /// the cache-hit path of [`crate::session::Suite`]. Skips the graph
+    /// generation, placement draw, and session-DAG/CSR rebuild; the
+    /// resulting session is bit-identical to [`ScenarioSpec::build`]'s
+    /// because problem construction is a pure function of the canonical
+    /// spec JSON.
+    pub fn build_with_problem(self, problem: Problem) -> Session {
+        debug_assert_eq!(problem.n_sessions(), self.classes.len() * self.n_versions);
+        Session { cfg: self.to_config(), problem, spec: self }
+    }
+
     /// Parse a spec from JSON text. Missing top-level keys fall back to
     /// the paper defaults; unknown keys are warned about (never silently
     /// dropped).

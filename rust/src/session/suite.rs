@@ -27,15 +27,27 @@
 //! println!("{}", report.to_csv());
 //! ```
 
+use std::collections::HashMap;
 use std::ops::ControlFlow;
 use std::path::Path;
+use std::sync::Mutex;
 
 use super::run::{RunReport, Trajectory};
 use super::spec::ScenarioSpec;
 use super::SessionError;
 use crate::coordinator::events::EventSchedule;
 use crate::engine::pool::WorkerPool;
+use crate::model::Problem;
 use crate::util::json::Json;
+
+/// Spec-digest-keyed problem cache shared by a suite's cells: cells whose
+/// specs are identical (same canonical JSON, seed included) reuse one
+/// built [`Problem`] — graph generation, capacity draws, session-DAG and
+/// CSR construction happen once per unique topology instead of once per
+/// `(solver × seed)` cell. Problem construction is a pure function of the
+/// canonical spec, so cached cells are bit-identical to rebuilt ones
+/// (asserted by the suite tests).
+type ProblemCache = Mutex<HashMap<u64, Problem>>;
 
 /// Which half of the solver registry a suite entry addresses.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -60,6 +72,7 @@ pub struct Suite {
     seeds: Vec<u64>,
     iters: usize,
     workers: usize,
+    problem_cache: bool,
 }
 
 impl Default for Suite {
@@ -101,7 +114,14 @@ pub struct SuiteReport {
 
 impl Suite {
     pub fn new() -> Self {
-        Suite { specs: Vec::new(), solvers: Vec::new(), seeds: Vec::new(), iters: 50, workers: 1 }
+        Suite {
+            specs: Vec::new(),
+            solvers: Vec::new(),
+            seeds: Vec::new(),
+            iters: 50,
+            workers: 1,
+            problem_cache: true,
+        }
     }
 
     /// Add an inline scenario under a display name.
@@ -154,6 +174,15 @@ impl Suite {
         self
     }
 
+    /// Share one built problem instance among cells with identical specs
+    /// (default on). Cells crossing several solvers over one `(spec,
+    /// seed)` then skip the repeated graph/placement/CSR construction;
+    /// results are bit-identical either way.
+    pub fn cache_problems(mut self, on: bool) -> Self {
+        self.problem_cache = on;
+        self
+    }
+
     /// Total number of grid cells.
     pub fn n_cells(&self) -> usize {
         self.specs.len() * self.solvers.len() * self.seeds.len().max(1)
@@ -177,9 +206,11 @@ impl Suite {
         }
         let mut results: Vec<Option<SuiteCell>> = (0..grid.len()).map(|_| None).collect();
         let workers = self.effective_workers(grid.len());
+        let cache: ProblemCache = Mutex::new(HashMap::new());
+        let cache = &cache;
         if workers <= 1 || grid.len() <= 1 {
             for (slot, desc) in results.iter_mut().zip(&grid) {
-                *slot = Some(self.run_cell(*desc));
+                *slot = Some(self.run_cell(*desc, cache));
             }
         } else {
             // same dispatch shape as the engine's per-session sweeps:
@@ -194,13 +225,13 @@ impl Suite {
             for (slots, descs) in result_chunks.zip(grid_chunks) {
                 tasks.push(Box::new(move || {
                     for (slot, desc) in slots.iter_mut().zip(descs) {
-                        *slot = Some(self.run_cell(*desc));
+                        *slot = Some(self.run_cell(*desc, cache));
                     }
                 }));
             }
             pool.run_scoped(tasks, move || {
                 for (slot, desc) in own_results.iter_mut().zip(own_grid) {
-                    *slot = Some(self.run_cell(*desc));
+                    *slot = Some(self.run_cell(*desc, cache));
                 }
             });
         }
@@ -216,7 +247,11 @@ impl Suite {
         requested.clamp(1, n_cells.max(1))
     }
 
-    fn run_cell(&self, (spec_idx, solver_idx, seed): (usize, usize, Option<u64>)) -> SuiteCell {
+    fn run_cell(
+        &self,
+        (spec_idx, solver_idx, seed): (usize, usize, Option<u64>),
+        cache: &ProblemCache,
+    ) -> SuiteCell {
         let (spec_name, base_spec) = &self.specs[spec_idx];
         let solver = &self.solvers[solver_idx];
         let mut spec = base_spec.clone();
@@ -224,7 +259,7 @@ impl Suite {
             spec.seed = s;
         }
         let seed_used = spec.seed;
-        let outcome = self.execute(spec, solver).map_err(|e| e.to_string());
+        let outcome = self.execute(spec, solver, cache).map_err(|e| e.to_string());
         SuiteCell {
             scenario: spec_name.clone(),
             solver: solver.name.clone(),
@@ -234,12 +269,40 @@ impl Suite {
         }
     }
 
+    /// Build the cell's session — through the spec-digest problem cache
+    /// when enabled (the seed is part of the canonical JSON, so distinct
+    /// seeds never collide; concurrent misses on one digest build the same
+    /// deterministic problem and insert equal values).
+    fn build_session(
+        &self,
+        spec: ScenarioSpec,
+        cache: &ProblemCache,
+    ) -> Result<super::Session, SessionError> {
+        if !self.problem_cache {
+            return spec.build();
+        }
+        let digest = spec.digest();
+        let hit = cache.lock().expect("suite cache lock").get(&digest).cloned();
+        match hit {
+            Some(problem) => Ok(spec.build_with_problem(problem)),
+            None => {
+                let session = spec.build()?;
+                cache
+                    .lock()
+                    .expect("suite cache lock")
+                    .insert(digest, session.problem.clone());
+                Ok(session)
+            }
+        }
+    }
+
     fn execute(
         &self,
         spec: ScenarioSpec,
         solver: &SolverRef,
+        cache: &ProblemCache,
     ) -> Result<CellResult, SessionError> {
-        let session = spec.build()?;
+        let session = self.build_session(spec, cache)?;
         let mut traj = Trajectory::default();
         let report = match solver.kind {
             SolverKind::Router => session
@@ -534,6 +597,61 @@ mod tests {
         // after the t=3 rate event the allocation tracks the new total
         let total: f64 = res.report.lam.iter().sum();
         assert!((total - 45.0).abs() < 1e-6, "Λ sums to {total}, want 45");
+    }
+
+    #[test]
+    fn problem_cache_hits_are_bit_identical_to_rebuilt_cells() {
+        // several solvers × seeds over one spec: with the cache on, every
+        // cell after the first (spec, seed) build reuses the cached
+        // problem — results must be bit-identical to cache-off rebuilds
+        let build = || {
+            Suite::new()
+                .spec("a", small_spec())
+                .router("omd")
+                .router("gp")
+                .allocator("omad")
+                .seeds(&[1, 2])
+                .iters(4)
+        };
+        let cached = build().cache_problems(true).run();
+        let rebuilt = build().cache_problems(false).run();
+        assert_eq!(cached.cells.len(), 6);
+        assert_eq!(cached.ok_count(), rebuilt.ok_count());
+        for (a, b) in cached.cells.iter().zip(&rebuilt.cells) {
+            assert_eq!(a.scenario, b.scenario);
+            assert_eq!(a.solver, b.solver);
+            assert_eq!(a.seed, b.seed);
+            let (ra, rb) = (a.outcome.as_ref().unwrap(), b.outcome.as_ref().unwrap());
+            assert_eq!(
+                ra.report.objective.to_bits(),
+                rb.report.objective.to_bits(),
+                "cached cell ({}, {}) diverged from rebuilt",
+                a.solver,
+                a.seed
+            );
+            assert_eq!(ra.trajectory.len(), rb.trajectory.len());
+            for (x, y) in ra.trajectory.iter().zip(&rb.trajectory) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        // and the parallel path shares the cache safely
+        let par = build().cache_problems(true).workers(4).run();
+        for (a, b) in par.cells.iter().zip(&cached.cells) {
+            let (ra, rb) = (a.outcome.as_ref().unwrap(), b.outcome.as_ref().unwrap());
+            assert_eq!(ra.report.objective.to_bits(), rb.report.objective.to_bits());
+        }
+    }
+
+    #[test]
+    fn spec_digest_separates_seeds_and_contents() {
+        let a = small_spec();
+        let mut b = small_spec();
+        assert_eq!(a.digest(), b.digest(), "identical specs share a digest");
+        b.seed = a.seed + 1;
+        assert_ne!(a.digest(), b.digest(), "the seed is part of the digest");
+        let mut c = small_spec();
+        c.n_versions += 1;
+        assert_ne!(a.digest(), c.digest());
     }
 
     #[test]

@@ -1,0 +1,72 @@
+//! Tiny 64-bit FNV-1a hashing for deterministic content digests (not
+//! cryptographic): the distributed coordinator's fleet-reuse digest and
+//! the suite's spec-cache key share this one implementation.
+
+/// Incremental 64-bit FNV-1a hasher.
+#[derive(Clone, Debug)]
+pub struct Fnv64 {
+    h: u64,
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv64 {
+    const OFFSET: u64 = 0xcbf29ce484222325;
+    const PRIME: u64 = 0x100000001b3;
+
+    pub fn new() -> Self {
+        Fnv64 { h: Self::OFFSET }
+    }
+
+    /// Mix one 64-bit word (one FNV-1a step).
+    #[inline]
+    pub fn mix(&mut self, x: u64) {
+        self.h ^= x;
+        self.h = self.h.wrapping_mul(Self::PRIME);
+    }
+
+    /// Mix a byte string (one step per byte — the classic formulation).
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.mix(b as u64);
+        }
+    }
+
+    /// The current digest.
+    #[inline]
+    pub fn finish(&self) -> u64 {
+        self.h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classic_test_vectors() {
+        // FNV-1a 64 reference values
+        let mut h = Fnv64::new();
+        assert_eq!(h.finish(), 0xcbf29ce484222325, "offset basis");
+        h.write(b"a");
+        assert_eq!(h.finish(), 0xaf63dc4c8601ec8c);
+        let mut h = Fnv64::new();
+        h.write(b"foobar");
+        assert_eq!(h.finish(), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn word_and_byte_mixing_are_order_sensitive() {
+        let mut a = Fnv64::new();
+        a.mix(1);
+        a.mix(2);
+        let mut b = Fnv64::new();
+        b.mix(2);
+        b.mix(1);
+        assert_ne!(a.finish(), b.finish());
+    }
+}

@@ -146,6 +146,75 @@ fn distributed_run_streams_and_resumes_like_any_run() {
 }
 
 #[test]
+fn multi_class_distributed_loopback_is_bit_identical_to_centralized() {
+    // ROADMAP PR-4 follow-up: the coordinator inherits multi-class
+    // scenarios generically (one routed session per (class, version),
+    // class-local admission) — pin it end to end. A two-class spec driven
+    // through DistributedOmd must reproduce the centralized OMD-RT run
+    // bit for bit: with slot-ordered ingress sums every actor replays the
+    // engine's accumulation order exactly, and the leader's η adaptation
+    // runs off the same fused-engine cost telemetry.
+    let build = |workers: usize| {
+        Scenario::paper_default()
+            .nodes(10)
+            .link_probability(0.35)
+            .versions(2)
+            .seed(23)
+            .workers(workers)
+            .class("alpha", "log", 30.0, &[])
+            .class("beta", "linear", 20.0, &[3, 7])
+            .build()
+            .unwrap()
+    };
+    let session = build(test_workers());
+    assert_eq!(session.problem.n_sessions(), 4, "two classes × two versions");
+    let rounds = 12;
+    let mut dtraj = Trajectory::default();
+    let dist = session.distributed_run(rounds).unwrap().observe(&mut dtraj).finish();
+    let mut ctraj = Trajectory::default();
+    let central =
+        session.routing_run("omd", rounds).unwrap().observe(&mut ctraj).finish();
+    assert_eq!(dtraj.values.len(), ctraj.values.len());
+    for (i, (a, b)) in dtraj.values.iter().zip(&ctraj.values).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "iter {i}: distributed {a} vs centralized {b}"
+        );
+    }
+    assert_eq!(dist.objective.to_bits(), central.objective.to_bits());
+    let (dphi, cphi) = (dist.phi.as_ref().unwrap(), central.phi.as_ref().unwrap());
+    for (w, (ra, rb)) in dphi.frac.iter().zip(&cphi.frac).enumerate() {
+        for (e, (a, b)) in ra.iter().zip(rb).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "phi[{w}][{e}]: {a} vs {b}");
+        }
+    }
+    // per-class admission must be respected by the deployed fleet: each
+    // session's S-lanes point only into its class's source devices
+    let net = &session.problem.net;
+    for s in 0..net.n_sessions() {
+        for e in net.session_out(s, AugmentedNet::SOURCE) {
+            let dst = net.graph.edge(e).dst;
+            assert!(
+                net.session_admit[s].binary_search(&dst).is_ok(),
+                "session {s} admits through non-class device {dst}"
+            );
+        }
+    }
+    // and the multi-class distributed path stays bit-identical across
+    // engine worker counts
+    let reference = dtraj.values;
+    for workers in [2usize, 4] {
+        let session = build(workers);
+        let mut traj = Trajectory::default();
+        let _ = session.distributed_run(rounds).unwrap().observe(&mut traj).finish();
+        for (i, (a, b)) in traj.values.iter().zip(&reference).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "iter {i} at {workers} workers");
+        }
+    }
+}
+
+#[test]
 fn warm_started_distributed_run_continues_descent() {
     // RunReport-based hand-off (the legacy RoutingState interop is gone):
     // a second run warm-started from the first run's report keeps the

@@ -236,6 +236,88 @@ fn distributed_path_is_bit_identical_across_worker_counts() {
 }
 
 #[test]
+fn batched_multi_class_engine_matches_reference_and_scalar_bitwise() {
+    // heterogeneous multi-class nets route one session per (class,
+    // version): the session-batched SoA kernels must match the reference
+    // sweeps to 1e-12 and the scalar kernels bit for bit, at every worker
+    // count
+    use jowr::engine::BatchMode;
+    use jowr::model::Workload;
+
+    for seed in [13u64, 21] {
+        let mut rng = Rng::seed_from(seed);
+        let g = topologies::connected_er_graph(12, 0.3, 10.0, &mut rng);
+        let pl = Placement::random(12, 3, &mut rng);
+        let class_sources: Vec<Vec<usize>> =
+            vec![pl.hosts(0).collect(), vec![2, 5], vec![7]];
+        let net =
+            AugmentedNet::build_heterogeneous(&g, &pl, 10.0, &[], &class_sources, &mut rng);
+        let workload = Workload {
+            class_names: vec!["a".into(), "b".into(), "c".into()],
+            class_rates: vec![30.0, 20.0, 10.0],
+            class_spans: vec![(0, 3), (3, 6), (6, 9)],
+        };
+        let problem = Problem::with_workload(net, CostKind::Exp, workload);
+        let lam = problem.uniform_allocation();
+        let mut phi = Phi::uniform(&problem.net);
+        let mut router = OmdRouter::fixed(0.3);
+        for it in 0..5 {
+            let ev = flow::evaluate(&problem, &phi, &lam);
+            let m = marginal::compute(&problem, &phi, &ev.flows);
+            let mut scalar = FlowEngine::new().with_batch_mode(BatchMode::Scalar);
+            let cs = scalar.prepare(&problem, &phi, &lam);
+            assert!(
+                (cs - ev.cost).abs() <= 1e-12 * ev.cost.abs().max(1.0),
+                "seed{seed}/it{it}: scalar cost {cs} vs reference {}",
+                ev.cost
+            );
+            for workers in [1usize, 4, jowr::testkit::test_workers()] {
+                let mut batched = FlowEngine::new()
+                    .with_batch_mode(BatchMode::Batched)
+                    .with_workers(workers);
+                let cb = batched.prepare(&problem, &phi, &lam);
+                assert_eq!(cb.to_bits(), cs.to_bits(), "seed{seed}/it{it}/w{workers}: cost");
+                for (a, b) in batched.flows().iter().zip(scalar.flows()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "seed{seed}/it{it}/w{workers}: F");
+                }
+                for w in 0..problem.n_sessions() {
+                    for (i, (a, b)) in
+                        batched.rates(w).iter().zip(scalar.rates(w)).enumerate()
+                    {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "seed{seed}/it{it}/w{workers}: t[{w}][{i}]"
+                        );
+                        assert!(
+                            (a - ev.t[w][i]).abs() <= 1e-12,
+                            "seed{seed}/it{it}: t[{w}][{i}] vs reference"
+                        );
+                    }
+                    for (i, (a, b)) in
+                        batched.marginals(w).iter().zip(scalar.marginals(w)).enumerate()
+                    {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "seed{seed}/it{it}/w{workers}: r[{w}][{i}]"
+                        );
+                        assert!(
+                            (a - m.r[w][i]).abs() <= 1e-12,
+                            "seed{seed}/it{it}: r[{w}][{i}] vs reference"
+                        );
+                    }
+                }
+            }
+            // evolve φ off the uniform point through the engine-backed
+            // router (Auto mode — batched on this net)
+            router.step(&problem, &lam, &mut phi);
+            phi.is_feasible(&problem.net, 1e-9).unwrap();
+        }
+    }
+}
+
+#[test]
 fn full_solves_agree_between_engine_and_reference_analysis() {
     // a converged engine-backed solve must satisfy the reference-computed
     // stationarity residuals — ties the migrated stack back to eqs. 18–21

@@ -1,0 +1,318 @@
+//! Property tests for [`jowr::engine::FlowEngine`]'s incremental
+//! dirty-session path: after **any** sequence of λ-block perturbations,
+//! φ-row perturbations, sparse masks, and forward-only evaluations, the
+//! delta-evaluated engine state (rates, per-session flows, total flows,
+//! cost, `D'`, node marginals) must be **bit-identical** to a fresh full
+//! `prepare` at the same operating point — in every batch mode, at any
+//! worker count, for single- and multi-class problems.
+
+use jowr::engine::{BatchMode, FlowEngine, SessionMask};
+use jowr::graph::augmented::{AugmentedNet, Placement};
+use jowr::graph::topologies;
+use jowr::model::cost::CostKind;
+use jowr::model::flow::Phi;
+use jowr::model::{Problem, Workload};
+use jowr::util::rng::Rng;
+
+/// A heterogeneous multi-class problem (`classes` blocks over 3 versions).
+fn multi_problem(seed: u64, n: usize, classes: usize) -> Problem {
+    let mut rng = Rng::seed_from(seed);
+    let g = topologies::connected_er_graph(n, 0.3, 10.0, &mut rng);
+    let pl = Placement::random(n, 3, &mut rng);
+    let mut class_sources: Vec<Vec<usize>> = vec![pl.hosts(0).collect()];
+    for c in 1..classes {
+        class_sources.push(vec![c % n, (3 * c + 1) % n]);
+    }
+    let net = AugmentedNet::build_heterogeneous(&g, &pl, 10.0, &[], &class_sources, &mut rng);
+    let workload = Workload {
+        class_names: (0..classes).map(|c| format!("c{c}")).collect(),
+        class_rates: vec![20.0; classes],
+        class_spans: (0..classes).map(|c| (3 * c, 3 * (c + 1))).collect(),
+    };
+    Problem::with_workload(net, CostKind::Exp, workload)
+}
+
+fn single_problem(seed: u64, n: usize) -> Problem {
+    let mut rng = Rng::seed_from(seed);
+    let net = topologies::connected_er(n, 0.3, 3, &mut rng);
+    Problem::new(net, 60.0, CostKind::Exp)
+}
+
+/// Assert the incremental engine's full readable state equals a fresh
+/// engine's full `prepare` at the same `(φ, Λ)`, bit for bit.
+fn assert_matches_full(tag: &str, problem: &Problem, phi: &Phi, lam: &[f64], eng: &FlowEngine) {
+    let mut fresh = FlowEngine::new();
+    let cost = fresh.prepare(problem, phi, lam);
+    assert_eq!(eng.cost().to_bits(), cost.to_bits(), "{tag}: cost");
+    for (e, (a, b)) in eng.flows().iter().zip(fresh.flows()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{tag}: flows[{e}]");
+    }
+    for (e, (a, b)) in eng.dprime().iter().zip(fresh.dprime()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{tag}: dprime[{e}]");
+    }
+    for w in 0..problem.n_sessions() {
+        for (i, (a, b)) in eng.rates(w).iter().zip(fresh.rates(w)).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{tag}: t[{w}][{i}]");
+        }
+        for (i, (a, b)) in eng.marginals(w).iter().zip(fresh.marginals(w)).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{tag}: r[{w}][{i}]");
+        }
+    }
+}
+
+/// Shift mass between the first two lanes of some multi-lane row of
+/// session `s` (keeps φ feasible).
+fn perturb_phi_row(problem: &Problem, phi: &mut Phi, s: usize, rng: &mut Rng) {
+    let csr = &problem.net.csr;
+    let rows: Vec<_> = csr.rows(s).iter().filter(|r| r.len() >= 2).collect();
+    if rows.is_empty() {
+        return;
+    }
+    let row = rows[rng.below(rows.len())];
+    let (e0, e1) = (csr.lane_edge[row.start], csr.lane_edge[row.start + 1]);
+    let shift = rng.uniform(0.0, phi.frac[s][e0]);
+    phi.frac[s][e0] -= shift;
+    phi.frac[s][e1] += shift;
+}
+
+/// Drive one problem through a randomized dirty sequence.
+fn run_sequence(problem: &Problem, seed: u64, mode: BatchMode, workers: usize) {
+    let n_sess = problem.n_sessions();
+    let blocks = problem.workload.blocks();
+    let mut rng = Rng::seed_from(seed);
+    let mut phi = Phi::uniform(&problem.net);
+    let mut lam = problem.uniform_allocation();
+    let mut eng = FlowEngine::new().with_batch_mode(mode).with_workers(workers);
+    eng.prepare(problem, &phi, &lam);
+    for step in 0..16 {
+        let tag = format!("mode={mode:?} workers={workers} seed={seed} step={step}");
+        let roll = rng.uniform(0.0, 1.0);
+        if roll < 0.35 {
+            // λ perturbation of one class block
+            let (s0, s1, _rate) = blocks[rng.below(blocks.len())];
+            let dirty = SessionMask::block(n_sess, s0, s1);
+            for l in &mut lam[s0..s1] {
+                *l = (*l + rng.uniform(-2.0, 2.0)).max(0.0);
+            }
+            eng.prepare_dirty(problem, &phi, &lam, &dirty);
+            assert_matches_full(&tag, problem, &phi, &lam, &eng);
+        } else if roll < 0.6 {
+            // φ row perturbation of one session
+            let s = rng.below(n_sess);
+            let mut dirty = SessionMask::none(n_sess);
+            dirty.insert(s);
+            perturb_phi_row(problem, &mut phi, s, &mut rng);
+            eng.prepare_dirty(problem, &phi, &lam, &dirty);
+            assert_matches_full(&tag, problem, &phi, &lam, &eng);
+        } else if roll < 0.75 {
+            // sparse mask mixing λ and φ changes (possibly empty)
+            let mut dirty = SessionMask::none(n_sess);
+            for s in 0..n_sess {
+                if rng.uniform(0.0, 1.0) < 0.3 {
+                    dirty.insert(s);
+                    lam[s] = (lam[s] + rng.uniform(-1.0, 1.0)).max(0.0);
+                    perturb_phi_row(problem, &mut phi, s, &mut rng);
+                }
+            }
+            eng.prepare_dirty(problem, &phi, &lam, &dirty);
+            assert_matches_full(&tag, problem, &phi, &lam, &eng);
+        } else if roll < 0.9 {
+            // forward-only delta observation (what oracles do), then a
+            // dirty prepare straddling the stale-marginal state
+            let (s0, s1, _rate) = blocks[rng.below(blocks.len())];
+            let dirty = SessionMask::block(n_sess, s0, s1);
+            for l in &mut lam[s0..s1] {
+                *l = (*l + rng.uniform(-1.0, 1.0)).max(0.0);
+            }
+            let cost = eng.evaluate_cost_dirty(problem, &phi, &lam, &dirty);
+            let full = FlowEngine::new().evaluate_cost(problem, &phi, &lam);
+            assert_eq!(cost.to_bits(), full.to_bits(), "{tag}: forward-only cost");
+            let dirty2 = SessionMask::none(n_sess);
+            eng.prepare_dirty(problem, &phi, &lam, &dirty2);
+            assert_matches_full(&tag, problem, &phi, &lam, &eng);
+        } else {
+            // full-mask call degrades to an ordinary prepare
+            let dirty = SessionMask::all(n_sess);
+            for l in lam.iter_mut() {
+                *l = (*l + rng.uniform(-0.5, 0.5)).max(0.0);
+            }
+            eng.prepare_dirty(problem, &phi, &lam, &dirty);
+            assert_matches_full(&tag, problem, &phi, &lam, &eng);
+        }
+    }
+}
+
+#[test]
+fn randomized_dirty_sequences_match_full_sweeps_multi_class() {
+    for seed in [1u64, 2, 3] {
+        let p = multi_problem(seed, 12, 3);
+        run_sequence(&p, seed, BatchMode::Auto, 1);
+    }
+}
+
+#[test]
+fn randomized_dirty_sequences_match_full_sweeps_single_class() {
+    for seed in [4u64, 5] {
+        let p = single_problem(seed, 12);
+        run_sequence(&p, seed, BatchMode::Auto, 1);
+    }
+}
+
+#[test]
+fn dirty_sequences_match_in_every_batch_mode_and_worker_count() {
+    let p = multi_problem(6, 12, 2);
+    for mode in [BatchMode::Auto, BatchMode::Batched, BatchMode::Scalar] {
+        for workers in [1usize, 4, jowr::testkit::test_workers()] {
+            run_sequence(&p, 7, mode, workers);
+        }
+    }
+}
+
+#[test]
+fn dirty_call_on_cold_engine_falls_back_to_full_sweep() {
+    let p = multi_problem(8, 10, 2);
+    let phi = Phi::uniform(&p.net);
+    let lam = p.uniform_allocation();
+    let mut eng = FlowEngine::new();
+    // never prepared: the delta entry points must produce full results
+    let dirty = SessionMask::block(p.n_sessions(), 0, 3);
+    eng.prepare_dirty(&p, &phi, &lam, &dirty);
+    assert_matches_full("cold", &p, &phi, &lam, &eng);
+    let mut eng2 = FlowEngine::new();
+    let c = eng2.evaluate_cost_dirty(&p, &phi, &lam, &dirty);
+    let full = FlowEngine::new().evaluate_cost(&p, &phi, &lam);
+    assert_eq!(c.to_bits(), full.to_bits());
+}
+
+#[test]
+fn dirty_path_survives_topology_swap_via_invalidate() {
+    // same-shape problem swap requires invalidate(); the next dirty call
+    // then falls back to a full sweep on the new problem
+    let p1 = multi_problem(9, 10, 2);
+    let p2 = multi_problem(10, 10, 2);
+    assert_eq!(p1.net.n_nodes(), p2.net.n_nodes());
+    assert_eq!(p1.n_sessions(), p2.n_sessions());
+    let phi1 = Phi::uniform(&p1.net);
+    let phi2 = Phi::uniform(&p2.net);
+    let lam = p1.uniform_allocation();
+    let mut eng = FlowEngine::new();
+    eng.prepare(&p1, &phi1, &lam);
+    eng.invalidate();
+    let dirty = SessionMask::none(p2.n_sessions());
+    eng.prepare_dirty(&p2, &phi2, &lam, &dirty);
+    assert_matches_full("swap", &p2, &phi2, &lam, &eng);
+}
+
+#[test]
+fn single_step_oracle_dirty_observations_bit_identical_to_full() {
+    use jowr::allocation::gsoma::perturb_block;
+    use jowr::allocation::{SingleStepOracle, UtilityOracle};
+    use jowr::model::utility::family;
+
+    let p = multi_problem(11, 10, 2);
+    let utilities: Vec<_> = p
+        .workload
+        .blocks()
+        .iter()
+        .flat_map(|&(_s0, _s1, rate)| family("log", 3, rate).unwrap())
+        .collect();
+    let mut full = SingleStepOracle::new(p.clone(), utilities.clone(), 0.4);
+    let mut delta = SingleStepOracle::new(p.clone(), utilities, 0.4);
+    let blocks = p.workload.blocks();
+    let base = p.uniform_allocation();
+    // both oracles see the identical probe sequence; one observes fully,
+    // the other through per-block dirty masks — values and the persistent
+    // routing state must stay bit-identical throughout
+    let mut prev: Option<Vec<f64>> = None;
+    for round in 0..6 {
+        for &(s0, s1, rate) in &blocks {
+            for w in s0..s1 {
+                let d = if round % 2 == 0 { 0.4 } else { -0.4 };
+                let probe = perturb_block(&base, s0, s1, w, d, rate);
+                let u_full = full.observe(&probe);
+                let u_delta = match &prev {
+                    None => delta.observe(&probe),
+                    Some(last) => {
+                        delta.observe_dirty(&probe, &SessionMask::from_diff(last, &probe))
+                    }
+                };
+                assert_eq!(
+                    u_full.to_bits(),
+                    u_delta.to_bits(),
+                    "round={round} w={w}: dirty observation diverged"
+                );
+                prev = Some(probe);
+            }
+        }
+    }
+    for (ra, rb) in full.phi().frac.iter().zip(&delta.phi().frac) {
+        for (a, b) in ra.iter().zip(rb) {
+            assert_eq!(a.to_bits(), b.to_bits(), "persistent φ diverged");
+        }
+    }
+}
+
+#[test]
+fn omad_with_dirty_plumbing_matches_manual_full_observation_loop() {
+    use jowr::allocation::gsoma::perturb_block;
+    use jowr::allocation::omad::Omad;
+    use jowr::allocation::{Allocator, SingleStepOracle, UtilityOracle};
+    use jowr::model::utility::family;
+
+    let p = multi_problem(12, 10, 2);
+    let utilities: Vec<_> = p
+        .workload
+        .blocks()
+        .iter()
+        .flat_map(|&(_s0, _s1, rate)| family("log", 3, rate).unwrap())
+        .collect();
+    let alg = Omad::new(0.4, 0.05);
+    let blocks = p.workload.blocks();
+
+    // the production path (observe_probe → observe_dirty inside)
+    let mut oracle = SingleStepOracle::new(p.clone(), utilities.clone(), 0.4);
+    let mut lam = p.uniform_allocation();
+    for _ in 0..4 {
+        let _ = oracle.observe(&lam);
+        let (next, _grad) = alg.outer_step(&mut oracle, &lam);
+        lam = next;
+    }
+
+    // a manual replica of the pre-PR-5 loop: identical probe sequence,
+    // plain full observations
+    let mut ref_oracle = SingleStepOracle::new(p.clone(), utilities, 0.4);
+    let mut ref_lam = p.uniform_allocation();
+    for _ in 0..4 {
+        let _ = ref_oracle.observe(&ref_lam);
+        let mut grad = vec![0.0; ref_lam.len()];
+        for &(s0, s1, rate) in &blocks {
+            for w in s0..s1 {
+                let up = perturb_block(&ref_lam, s0, s1, w, alg.delta, rate);
+                let dn = perturb_block(&ref_lam, s0, s1, w, -alg.delta, rate);
+                let u_plus = ref_oracle.observe(&up);
+                let u_minus = ref_oracle.observe(&dn);
+                grad[w] = (u_plus - u_minus) / (2.0 * alg.delta);
+            }
+        }
+        let mut next = ref_lam.clone();
+        for &(s0, s1, rate) in &blocks {
+            jowr::allocation::mirror_ascent_update(
+                &mut next[s0..s1],
+                &grad[s0..s1],
+                alg.eta_outer,
+                rate,
+            );
+            let proj = jowr::allocation::project::project_capped_simplex(
+                &next[s0..s1],
+                rate,
+                alg.delta,
+                rate - alg.delta,
+            );
+            next[s0..s1].copy_from_slice(&proj);
+        }
+        ref_lam = next;
+    }
+    for (a, b) in lam.iter().zip(&ref_lam) {
+        assert_eq!(a.to_bits(), b.to_bits(), "OMAD iterate diverged: {lam:?} vs {ref_lam:?}");
+    }
+}
