@@ -1,0 +1,147 @@
+"""Standalone mirror of the rust request-level DES (``jowr::sim``).
+
+A ~60-line heapq discrete-event loop with the same station semantics as
+``rust/src/sim/core.rs`` — FIFO M/M/c service, stable ``(time, seq)``
+event ordering, exact piecewise-constant Poisson arrivals — validated
+against the same closed forms the rust tests pin (M/M/1 sojourn/wait,
+M/M/c Erlang-C) plus bit-level determinism. No jax dependency: this file
+runs anywhere numpy does, so the queueing math is checkable even where
+the rust toolchain is not.
+"""
+
+from __future__ import annotations
+
+import heapq
+import math
+import random
+from collections import deque
+
+ARRIVAL, DEPARTURE = 0, 1
+
+
+def simulate_mmc(lam, mu_total, c, horizon, warmup, seed):
+    """FIFO M/M/c station: Poisson(lam) arrivals, c servers of rate
+    mu_total/c each (c=1 is M/M/1 at rate mu_total). Admits arrivals up
+    to ``horizon`` then drains. Returns (latencies, waits) for requests
+    arriving after ``warmup``."""
+    rng = random.Random(seed)
+    mu_s = mu_total / c
+    heap, seq = [], 0
+
+    def push(t, kind, t0=0.0):
+        nonlocal seq
+        heapq.heappush(heap, (t, seq, kind, t0))
+        seq += 1
+
+    push(rng.expovariate(lam), ARRIVAL)
+    busy, queue = 0, deque()
+    latencies, waits = [], []
+    while heap:
+        t, _, kind, t0 = heapq.heappop(heap)
+        if kind == ARRIVAL:
+            if t >= horizon:
+                continue  # stop admitting; drain what is in flight
+            push(t + rng.expovariate(lam), ARRIVAL)
+            if busy < c:
+                busy += 1
+                if t >= warmup:
+                    waits.append(0.0)
+                push(t + rng.expovariate(mu_s), DEPARTURE, t)
+            else:
+                queue.append(t)
+        else:
+            if t0 >= warmup:
+                latencies.append(t - t0)
+            busy -= 1
+            if queue:
+                tq = queue.popleft()
+                busy += 1
+                if tq >= warmup:
+                    waits.append(t - tq)
+                push(t + rng.expovariate(mu_s), DEPARTURE, tq)
+    return latencies, waits
+
+
+def erlang_c(c, a):
+    """P(wait > 0) for M/M/c with offered load a = lam/mu_s."""
+    rho = a / c
+    top = a**c / math.factorial(c) / (1.0 - rho)
+    denom = sum(a**k / math.factorial(k) for k in range(c)) + top
+    return top / denom
+
+
+def percentile(xs, q):
+    ys = sorted(xs)
+    return ys[min(len(ys) - 1, int(q * len(ys)))]
+
+
+def test_mm1_matches_closed_form():
+    lam, mu = 30.0, 40.0
+    latencies, waits = simulate_mmc(lam, mu, 1, horizon=3000.0, warmup=100.0, seed=7)
+    w_closed = 1.0 / (mu - lam)  # sojourn 0.1 s
+    wq_closed = (lam / mu) / (mu - lam)  # wait 0.075 s
+    mean = sum(latencies) / len(latencies)
+    mean_wait = sum(waits) / len(waits)
+    assert abs(mean - w_closed) / w_closed < 0.05
+    assert abs(mean_wait - wq_closed) / wq_closed < 0.08
+    # exponential sojourn: the median sits at W ln 2
+    assert abs(percentile(latencies, 0.5) - w_closed * math.log(2)) / (
+        w_closed * math.log(2)
+    ) < 0.08
+
+
+def test_mmc_matches_erlang_c():
+    lam, mu, c = 30.0, 40.0, 3
+    mu_s = mu / c
+    latencies, waits = simulate_mmc(lam, mu, c, horizon=3000.0, warmup=100.0, seed=11)
+    a = lam / mu_s
+    wq_closed = erlang_c(c, a) / (c * mu_s - lam)
+    w_closed = wq_closed + 1.0 / mu_s
+    mean = sum(latencies) / len(latencies)
+    mean_wait = sum(waits) / len(waits)
+    assert abs(mean - w_closed) / w_closed < 0.08
+    assert abs(mean_wait - wq_closed) / wq_closed < 0.12
+
+
+def test_same_seed_is_bit_identical():
+    a = simulate_mmc(30.0, 40.0, 2, horizon=500.0, warmup=0.0, seed=3)
+    b = simulate_mmc(30.0, 40.0, 2, horizon=500.0, warmup=0.0, seed=3)
+    assert a == b  # exact float equality — the replay is deterministic
+    c = simulate_mmc(30.0, 40.0, 2, horizon=500.0, warmup=0.0, seed=4)
+    assert a != c
+
+
+def piecewise_poisson_times(segments, horizon, seed):
+    """Exact inhomogeneous Poisson arrival times for a piecewise-constant
+    rate (list of (rate, end_time) with the last end >= horizon). Crossing
+    a segment boundary redraws from the boundary at the new rate — valid
+    by memorylessness; same scheme as ``Simulator::next_arrival``."""
+    rng = random.Random(seed)
+    t, i, times = 0.0, 0, []
+    while t < horizon:
+        rate, end = segments[i]
+        if rate <= 0.0:
+            t = end
+            i += 1
+            continue
+        cand = t + rng.expovariate(rate)
+        if cand < min(end, horizon):
+            times.append(cand)
+            t = cand
+        else:
+            t = end
+            if t < horizon:
+                i += 1
+    return times
+
+
+def test_piecewise_poisson_counts_track_the_rate():
+    # 10 req/s for 5 s then 50 req/s for 5 s: 50 + 250 expected arrivals
+    segments = [(10.0, 5.0), (50.0, 10.0)]
+    times = piecewise_poisson_times(segments, horizon=10.0, seed=42)
+    n_low = sum(1 for t in times if t < 5.0)
+    n_high = len(times) - n_low
+    assert abs(n_low - 50) < 5 * math.sqrt(50)
+    assert abs(n_high - 250) < 5 * math.sqrt(250)
+    # and the boundary crossing is exact: no arrival lands outside [0, 10)
+    assert all(0.0 < t < 10.0 for t in times)

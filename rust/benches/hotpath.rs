@@ -237,6 +237,52 @@ fn main() {
         assert_eq!(c_delta.to_bits(), c_full.to_bits(), "dirty path must stay bit-identical");
     }
 
+    // request-level DES replay: drive the two-class paper scenario through
+    // an OMD warm-up, then replay the full horizon against the optimized φ
+    // and report raw event throughput. Full mode replays ≥ 10^6 requests
+    // (asserted); --quick shortens the horizon for the CI smoke run. The
+    // events/sec figure lands in the speedups table so the bench-regression
+    // gate can pin a floor under it.
+    let sim_events_per_sec;
+    {
+        let mut session = Scenario::paper_default()
+            .nodes(20)
+            .seed(42)
+            .class("video", "log", 40.0, &[0, 1, 2])
+            .class("audio", "sqrt", 20.0, &[])
+            .build()
+            .expect("sim scenario");
+        let horizon_s = if quick { 2_000.0 } else { 18_000.0 };
+        session.spec.sim = Some(SimSpec { horizon_s, ..SimSpec::default() });
+        let optimized =
+            session.routing_run("omd", 30).expect("sim omd warm-up").finish();
+        println!("--- request-level replay (two-class ER(20), {horizon_s}s horizon) ---");
+        let (sim_report, dt) = Bencher::once("sim_replay", || {
+            let run = session.sim_run(1).expect("sim run");
+            let (_, report) = run.warm_start_from(&optimized).finish();
+            report
+        });
+        sim_events_per_sec = sim_report.events as f64 / dt.max(1e-12);
+        println!(
+            "sim replay: {} arrivals, {} events in {dt:.2}s  ({:.2}M events/s)",
+            sim_report.arrivals,
+            sim_report.events,
+            sim_events_per_sec / 1e6
+        );
+        assert_eq!(
+            sim_report.arrivals,
+            sim_report.completed + sim_report.dropped + sim_report.in_flight,
+            "sim replay must conserve requests"
+        );
+        if !quick {
+            assert!(
+                sim_report.arrivals >= 1_000_000,
+                "full-mode replay must cover ≥ 10^6 requests (got {})",
+                sim_report.arrivals
+            );
+        }
+    }
+
     // summary table
     println!("\n=== hotpath summary ===");
     for m in &b.results {
@@ -287,6 +333,8 @@ fn main() {
     ) {
         speedups.push(("clusters40/dirty_vs_full".to_string(), full / delta));
     }
+    // not a ratio: raw DES throughput, floored by the CI regression gate
+    speedups.push(("sim_replay_events_per_sec".to_string(), sim_events_per_sec));
     for (name, x) in &speedups {
         println!("{name:<40} {x:.2}x");
     }

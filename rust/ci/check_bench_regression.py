@@ -13,7 +13,9 @@ checks the fresh file's ``speedups`` section: the named ratio must exist
 and be at least FLOOR. The defaults pin PR 5's two structural claims —
 the session-batched SoA kernels at least match the scalar kernels on the
 multi-class configuration, and a single-block ``prepare_dirty`` beats a
-full prepare by ≥ 3× on the clustered fleet. (The bench binary asserts
+full prepare by ≥ 3× on the clustered fleet — plus a raw-throughput
+floor on the request-level DES replay (``sim_replay_events_per_sec`` is
+events/sec, not a ratio). (The bench binary asserts
 the same bounds; the gate re-checks them from the artifact so a stale or
 hand-edited JSON cannot slip through.) Pass ``--no-default-requires`` to
 drop them (e.g. for older artifacts).
@@ -47,6 +49,8 @@ DEFAULT_REQUIRES = [
     ("mc40/batched_vs_scalar_w1", 0.95),
     ("mc40/batched_vs_scalar_w4", 0.95),
     ("clusters40/dirty_vs_full", 3.0),
+    # not a ratio: raw DES replay throughput (events/sec) from the sim bench
+    ("sim_replay_events_per_sec", 200_000.0),
 ]
 
 

@@ -16,7 +16,7 @@ use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
 use super::super::allocation::UtilityOracle;
-use crate::engine::FlowEngine;
+use crate::engine::{FlowEngine, SessionMask};
 use crate::graph::augmented::AugmentedNet;
 use crate::model::flow::Phi;
 use crate::model::Problem;
@@ -337,6 +337,9 @@ pub struct MeasuredOracle<E: InferenceEngine> {
     flow_engine: FlowEngine,
     phi: Phi,
     rng: Rng,
+    /// The last observed Λ (bitwise), for the debug-mode check of the
+    /// [`UtilityOracle::observe_dirty`] contract.
+    last_lam: Option<Vec<f64>>,
     routing_iters: usize,
     observations: usize,
     /// Last serving report (for end-to-end latency/throughput logging).
@@ -372,6 +375,7 @@ impl<E: InferenceEngine> MeasuredOracle<E> {
             flow_engine: FlowEngine::new(),
             phi,
             rng: Rng::seed_from(seed),
+            last_lam: None,
             routing_iters: 0,
             observations: 0,
             last_report: None,
@@ -391,17 +395,46 @@ impl<E: InferenceEngine> MeasuredOracle<E> {
     pub fn phi(&self) -> &Phi {
         &self.phi
     }
-}
 
-impl<E: InferenceEngine> UtilityOracle for MeasuredOracle<E> {
-    fn observe(&mut self, lam: &[f64]) -> f64 {
+    /// The observation body shared by the full and dirty entry points:
+    /// one routing iteration on the served state, the analytic-cost
+    /// telemetry sweep, then one simulated serving window. With a dirty
+    /// mask, the pre-update evaluation inside the routing step re-sweeps
+    /// only the masked sessions (bit-identical either way); the serving
+    /// window itself always replays every session — requests don't know
+    /// which λ entries moved.
+    fn observe_impl(&mut self, lam: &[f64], dirty: Option<&SessionMask>) -> f64 {
         self.observations += 1;
         self.routing_iters += 1;
-        self.router.step(&self.problem, lam, &mut self.phi);
+        match dirty {
+            Some(mask) => {
+                // debug check of the caller's promise: every λ entry that
+                // changed since the previous observation is in the mask
+                #[cfg(debug_assertions)]
+                if let Some(last) = &self.last_lam {
+                    if last.len() == lam.len() {
+                        for (s, (a, b)) in last.iter().zip(lam).enumerate() {
+                            debug_assert!(
+                                a.to_bits() == b.to_bits() || mask.contains(s),
+                                "observe_dirty: λ[{s}] changed outside the dirty mask"
+                            );
+                        }
+                    }
+                }
+                self.router.step_dirty(&self.problem, lam, &mut self.phi, mask);
+            }
+            None => {
+                self.router.step(&self.problem, lam, &mut self.phi);
+            }
+        }
         // one fused forward sweep at the post-step state: the analytic
         // congestion the flow model predicts for the window we simulate
         self.last_cost =
             Some(self.flow_engine.evaluate_cost(&self.problem, &self.phi, lam));
+        match &mut self.last_lam {
+            Some(buf) if buf.len() == lam.len() => buf.copy_from_slice(lam),
+            slot => *slot = Some(lam.to_vec()),
+        }
         let report = simulate(
             &self.problem,
             &self.phi,
@@ -413,6 +446,16 @@ impl<E: InferenceEngine> UtilityOracle for MeasuredOracle<E> {
         let u = report.utility;
         self.last_report = Some(report);
         u
+    }
+}
+
+impl<E: InferenceEngine> UtilityOracle for MeasuredOracle<E> {
+    fn observe(&mut self, lam: &[f64]) -> f64 {
+        self.observe_impl(lam, None)
+    }
+
+    fn observe_dirty(&mut self, lam: &[f64], dirty: &SessionMask) -> f64 {
+        self.observe_impl(lam, Some(dirty))
     }
 
     fn total_rate(&self) -> f64 {
@@ -442,11 +485,14 @@ impl<E: InferenceEngine> UtilityOracle for MeasuredOracle<E> {
     fn on_topology_change(&mut self, problem: &Problem) {
         self.problem = problem.clone();
         self.phi = Phi::uniform(&self.problem.net);
+        // the λ layout may have changed; drop the dirty-contract baseline
+        self.last_lam = None;
     }
 
     fn on_workload_change(&mut self, problem: &Problem) {
         // a pure rate change keeps the served routing state warm
         self.problem = problem.clone();
+        self.last_lam = None;
     }
 
     fn current_phi(&self) -> Option<&Phi> {
@@ -551,6 +597,47 @@ mod tests {
                 for (a, b) in ra.iter().zip(rb) {
                     assert_eq!(a.to_bits(), b.to_bits(), "phi at {workers} workers");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn dirty_observations_are_bit_identical_to_full() {
+        // window-level dirty masks: feeding the exact λ-diff mask through
+        // observe_dirty must reproduce the full observe sequence bit for
+        // bit — the mask only prunes the routing step's pre-update sweep
+        let params = ServeParams { sim_time: 2.0, ..ServeParams::default_for(3) };
+        let lams = [[20.0, 25.0, 15.0], [22.0, 25.0, 13.0], [22.0, 20.0, 18.0]];
+        let run = |dirty: bool| {
+            let p = mk_problem(8);
+            let mut o =
+                MeasuredOracle::new(p, params.clone(), AnalyticEngine::new(3, 5), 0.3, 17);
+            let mut prev: Option<Vec<f64>> = None;
+            let us: Vec<f64> = lams
+                .iter()
+                .map(|lam| {
+                    let u = match (&prev, dirty) {
+                        (Some(last), true) => {
+                            let mask = SessionMask::from_diff(last, lam);
+                            o.observe_dirty(lam, &mask)
+                        }
+                        _ => o.observe(lam),
+                    };
+                    prev = Some(lam.to_vec());
+                    u
+                })
+                .collect();
+            (us, o.phi().clone(), o.last_cost.unwrap())
+        };
+        let (u_full, phi_full, c_full) = run(false);
+        let (u_dirty, phi_dirty, c_dirty) = run(true);
+        for (a, b) in u_full.iter().zip(&u_dirty) {
+            assert_eq!(a.to_bits(), b.to_bits(), "dirty observation diverged");
+        }
+        assert_eq!(c_full.to_bits(), c_dirty.to_bits());
+        for (ra, rb) in phi_full.frac.iter().zip(&phi_dirty.frac) {
+            for (a, b) in ra.iter().zip(rb) {
+                assert_eq!(a.to_bits(), b.to_bits());
             }
         }
     }

@@ -75,6 +75,20 @@
 //! engine worker pool and streams the per-cell [`session::RunReport`]s
 //! into a [`session::suite::SuiteReport`] (CSV + JSON dumps).
 //!
+//! ## Request-level simulation
+//!
+//! The [`sim`] subsystem replays *individual requests* through an
+//! optimized `(Λ, φ)` configuration on a deterministic discrete-event
+//! core: per-node M/M/c-style compute stations, per-link transmission
+//! queues, probabilistic φ-sampled routing, and Poisson / trace-driven
+//! arrivals. [`session::Session::sim_run`] is the streaming entry point
+//! (windowed, stop-rule/observer-compatible, optionally driven by a live
+//! [`session::AllocationRun`] re-optimizing between windows), the CLI
+//! exposes it as the `sim` subcommand, and suites grow sim columns via
+//! [`session::suite::Suite::sim`]. The roll-up [`sim::SimReport`] carries
+//! per-class p50/p99/p999 latency, per-node queue-depth telemetry, and
+//! drop rates — the request-granularity view the fluid model cannot see.
+//!
 //! ### Deprecation path
 //!
 //! Direct construction — `OmdRouter::new(0.1).solve(&problem, &lam, 50)` —
@@ -102,6 +116,7 @@ pub mod routing;
 #[cfg(feature = "xla")]
 pub mod runtime;
 pub mod session;
+pub mod sim;
 pub mod testkit;
 pub mod util;
 
@@ -122,12 +137,16 @@ pub mod prelude {
     };
     pub use crate::session::run::{
         AllocationRun, Deadline, DistributedRun, MaxIters, Observer, Progress, RoutingRun,
-        RunReport, StepInfo, StopReason, StopRule, Tolerance, ToleranceStrict, Trajectory,
+        RunReport, SimRun, StepInfo, StopReason, StopRule, Tolerance, ToleranceStrict,
+        Trajectory,
     };
     pub use crate::session::spec::{
         ClassSpec, EdgeSpec, NodeSpec, RateSpec, ScenarioSpec, TopologySpec,
     };
     pub use crate::session::suite::{Suite, SuiteCell, SuiteReport};
     pub use crate::session::{registry, Hyper, Scenario, Session, SessionError};
+    pub use crate::sim::{
+        simulate_requests, ArrivalTrace, Discipline, SimReport, SimSpec, Simulator,
+    };
     pub use crate::util::rng::Rng;
 }

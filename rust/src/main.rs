@@ -8,6 +8,7 @@
 //! jowr dist [--rounds 50] [--workers k]           distributed OMD-RT run
 //! jowr allocate [--family log] [--algo <allocator>] [--iters 60]
 //! jowr solvers                                    list the solver registry
+//! jowr sim [--windows 1] [--router omd]           request-level DES replay
 //! jowr serve [--sim-time 20] [--iters 40] [--xla] end-to-end serving demo
 //! jowr runtime-check                              AOT artifact smoke test
 //! jowr config --dump                              print the default config
@@ -44,6 +45,7 @@ fn main() {
         "dist" => cmd_dist(&args),
         "allocate" => cmd_allocate(&args),
         "solvers" => cmd_solvers(&args),
+        "sim" => cmd_sim(&args),
         "serve" => cmd_serve(&args),
         "suite" => cmd_suite(&args),
         "runtime-check" => cmd_runtime_check(&args),
@@ -73,8 +75,9 @@ fn usage() {
          route [--algo {routers}]\n                                 run one routing solve\n  \
          dist [--rounds 50]             distributed OMD-RT session run (actors +\n                                 CommStats; also `route --algo distributed-omd`)\n  \
          allocate [--algo {allocators}]\n                                 run one allocation solve\n  \
-         suite --scenarios <dir|files>  run a (scenario x solver x seed) grid:\n                                 [--routers a,b] [--allocators x] [--seeds 1,2]\n                                 [--iters 50] [--out results/suite]\n  \
+         suite --scenarios <dir|files>  run a (scenario x solver x seed) grid:\n                                 [--routers a,b] [--allocators x] [--sims omd]\n                                 [--seeds 1,2] [--iters 50] [--out results/suite]\n  \
          solvers                        list the solver registry\n  \
+         sim [--router omd] [--iters 50] [--windows 1]\n                                 optimize phi, then replay the request stream\n                                 on the discrete-event core: [--horizon-s 30]\n                                 [--warmup-s 0] [--queue-cap 0] [--servers 1]\n                                 [--discipline fifo|lifo] [--out report.json]\n  \
          serve [--xla] [--router omd]   end-to-end serving demo\n  \
          runtime-check                  AOT artifact smoke test\n  \
          config --dump                  print default config JSON\n\n\
@@ -168,6 +171,12 @@ fn cmd_suite(args: &Args) -> Result<(), String> {
     if let Some(allocators) = args.get("allocators") {
         for name in allocators.split(',').filter(|s| !s.is_empty()) {
             suite = suite.allocator(name);
+            any_solver = true;
+        }
+    }
+    if let Some(sims) = args.get("sims") {
+        for name in sims.split(',').filter(|s| !s.is_empty()) {
+            suite = suite.sim(name);
             any_solver = true;
         }
     }
@@ -373,6 +382,109 @@ fn cmd_solvers(args: &Args) -> Result<(), String> {
         for (k, v) in e.defaults {
             println!("  {:<10}   default {k} = {v}", "");
         }
+    }
+    Ok(())
+}
+
+/// The `sim` subcommand: optimize φ with a registry router, then replay
+/// the scenario's request stream through the discrete-event core and print
+/// the per-class / per-node roll-up (plus the events/sec replay rate —
+/// wall clock is measured here, never inside the deterministic report).
+fn cmd_sim(args: &Args) -> Result<(), String> {
+    let mut session = load_session(args)?;
+    let iters = args.usize_or("iters", 50)?;
+    let windows = args.usize_or("windows", 1)?;
+    let router = args.get_or("router", "omd").to_string();
+    // CLI overrides merge into the scenario's sim block (or the defaults)
+    let mut sim_spec = session.spec.sim.clone().unwrap_or_default();
+    sim_spec.horizon_s = args.f64_or("horizon-s", sim_spec.horizon_s)?;
+    sim_spec.warmup_s = args.f64_or("warmup-s", sim_spec.warmup_s)?;
+    sim_spec.queue_capacity = args.usize_or("queue-cap", sim_spec.queue_capacity)?;
+    sim_spec.servers_per_node = args.usize_or("servers", sim_spec.servers_per_node)?;
+    if let Some(d) = args.get("discipline") {
+        sim_spec.discipline = Discipline::parse(d)
+            .ok_or_else(|| format!("--discipline: unknown '{d}' (fifo|lifo)"))?;
+    }
+    sim_spec.validate().map_err(|what| format!("sim spec: {what}"))?;
+    session.spec.sim = Some(sim_spec.clone());
+    println!(
+        "sim on {} (n_real={}, λ={}, W={}): {router} warm-up ({iters} iters), \
+         horizon {}s x {windows} window(s), seed {}",
+        session.cfg.topology,
+        session.problem.net.n_real,
+        session.cfg.total_rate,
+        session.cfg.n_versions,
+        sim_spec.horizon_s,
+        session.cfg.seed
+    );
+    let optimized = session.routing_run(&router, iters)?.finish();
+    let t0 = std::time::Instant::now();
+    let (report, sim) = session.sim_run(windows)?.warm_start_from(&optimized).finish();
+    let dt = t0.elapsed().as_secs_f64().max(1e-9);
+    println!(
+        "replayed {} requests / {} events in {:.3}s ({:.0} events/s, {:.0} reqs/s)",
+        sim.arrivals,
+        sim.events,
+        dt,
+        sim.events as f64 / dt,
+        sim.arrivals as f64 / dt
+    );
+    println!(
+        "overall: completed {} dropped {} ({:.3}% loss), latency mean {:.4}s \
+         p50 {:.4}s p99 {:.4}s p999 {:.4}s",
+        sim.completed,
+        sim.dropped,
+        100.0 * sim.dropped as f64 / (sim.arrivals.max(1)) as f64,
+        sim.mean_latency_s,
+        sim.p50_latency_s,
+        sim.p99_latency_s,
+        sim.p999_latency_s
+    );
+    println!(
+        "{:<12} {:>10} {:>10} {:>8} {:>10} {:>10} {:>10} {:>10}",
+        "class", "arrivals", "completed", "dropped", "mean_s", "p50_s", "p99_s", "p999_s"
+    );
+    for c in &sim.classes {
+        println!(
+            "{:<12} {:>10} {:>10} {:>8} {:>10.4} {:>10.4} {:>10.4} {:>10.4}",
+            c.name,
+            c.arrivals,
+            c.completed,
+            c.dropped,
+            c.mean_latency_s,
+            c.p50_latency_s,
+            c.p99_latency_s,
+            c.p999_latency_s
+        );
+    }
+    println!(
+        "{:<8} {:>10} {:>8} {:>8} {:>6} {:>10} {:>9} {:>10}",
+        "device", "arrivals", "served", "dropped", "util", "mean_q", "max_q", "wait_s"
+    );
+    for n in &sim.nodes {
+        println!(
+            "{:<8} {:>10} {:>8} {:>8} {:>6.3} {:>10.3} {:>9} {:>10.4}",
+            n.device,
+            n.arrivals,
+            n.served,
+            n.dropped,
+            n.utilization,
+            n.mean_queue_depth,
+            n.max_queue_depth,
+            n.mean_wait_s
+        );
+    }
+    println!("run: {} windows, stop {:?}, wall {:.3}s", report.iterations, report.stop, dt);
+    if let Some(out) = args.get("out") {
+        let path = std::path::Path::new(out);
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).map_err(|e| format!("{out}: {e}"))?;
+            }
+        }
+        std::fs::write(path, sim.to_json().to_string())
+            .map_err(|e| format!("write {out}: {e}"))?;
+        println!("wrote {out}");
     }
     Ok(())
 }

@@ -5,7 +5,10 @@
 //! The dense encoding matches `python/compile/model.py`: node ids are the
 //! augmented-graph ids (S = 0, devices 1..=n_real, D_w at the end), padded
 //! up to the artifact's bucket size N. Only the exponential cost family is
-//! compiled into the artifact (the paper's experimental choice).
+//! compiled into the artifact (the paper's experimental choice), and the
+//! `[W, N, N]` layout assumes the paper's single-class setup where
+//! sessions and versions coincide — [`DenseNet::build`] hard-errors on
+//! multi-class problems rather than silently truncating session blocks.
 
 use anyhow::{anyhow, Result};
 
@@ -35,6 +38,22 @@ impl DenseNet {
             return Err(anyhow!("routing_step artifact is compiled for the exp cost family"));
         }
         let net = &problem.net;
+        // The dense [W, N, N] layout gives each *session* one adjacency/φ
+        // slab and indexes it by version id — sound only in the paper's
+        // single-class setup, where sessions and versions coincide
+        // (session w serves version w toward D_w). Multi-class workloads
+        // carry class-major session blocks (n_sessions = Σ_c W_c > W);
+        // encoding them here would silently truncate every session past
+        // the first W, so reject them up front.
+        let n_sessions = problem.n_sessions();
+        if n_sessions != net.n_versions() {
+            return Err(anyhow!(
+                "routing_step artifact assumes sessions ≡ versions (one dense slab per \
+                 version); this problem has {n_sessions} sessions over {} versions \
+                 (multi-class workload) — use the native f64 routers instead",
+                net.n_versions()
+            ));
+        }
         let n_nodes = net.n_nodes();
         let w_cnt = net.n_versions();
         let (artifact, n) = rt

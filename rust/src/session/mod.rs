@@ -50,7 +50,8 @@ pub mod suite;
 pub use error::SessionError;
 pub use registry::Hyper;
 pub use run::{
-    AllocationRun, DistributedRun, RoutingRun, RunReport, StepInfo, StopReason, Trajectory,
+    AllocationRun, DistributedRun, RoutingRun, RunReport, SimRun, StepInfo, StopReason,
+    Trajectory,
 };
 pub use spec::ScenarioSpec;
 pub use suite::{Suite, SuiteReport};
@@ -63,6 +64,7 @@ use crate::model::cost::CostKind;
 use crate::model::utility::{family, Utility};
 use crate::model::Problem;
 use crate::routing::Router;
+use crate::sim::{ArrivalTrace, Simulator};
 use spec::{ClassSpec, NodeSpec, RateSpec};
 
 /// Builder for a JOWR experiment scenario: the paper's scalar knobs plus
@@ -406,6 +408,40 @@ impl Session {
             }
         }
         Ok(AllocationRun::new(self.allocator(algo)?, self.oracle_for(algo)?, max_outer))
+    }
+
+    /// A streaming request-level simulation run over `windows` equal
+    /// sim-time windows of the scenario's arrival horizon (the `sim` block
+    /// of the spec, or [`crate::sim::SimSpec::default`] when absent).
+    /// Starts from the uniform `(Λ, φ)`; feed an optimized configuration
+    /// with [`SimRun::warm_start_from`], or attach a live
+    /// [`AllocationRun`] via [`SimRun::drive`]. Each class's arrival
+    /// process comes from its [`RateSpec`]: constant rates become
+    /// homogeneous Poisson streams, rate traces piecewise-constant ones
+    /// (breakpoint iterations scaled by `trace_window_s`). The simulation
+    /// seeds from the scenario seed — same scenario, same report,
+    /// bit-for-bit, at any engine worker count.
+    pub fn sim_run(&self, windows: usize) -> Result<SimRun<'_>, SessionError> {
+        let spec = self.spec.sim.clone().unwrap_or_default();
+        let traces = self
+            .spec
+            .classes
+            .iter()
+            .map(|class| match &class.rate {
+                RateSpec::Constant(r) => ArrivalTrace::constant(*r),
+                RateSpec::Trace(pts) => {
+                    ArrivalTrace::from_breakpoints(pts, spec.trace_window_s)
+                }
+            })
+            .collect();
+        let sim = Simulator::new(
+            &self.problem,
+            spec,
+            traces,
+            self.uniform_allocation(),
+            self.cfg.seed,
+        );
+        Ok(SimRun::new(sim, windows))
     }
 }
 

@@ -36,6 +36,7 @@ use crate::engine::FlowEngine;
 use crate::model::flow::Phi;
 use crate::model::Problem;
 use crate::routing::{Router, CONVERGENCE_TOL};
+use crate::sim::{SimReport, Simulator};
 
 /// Why a run stopped.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -537,5 +538,154 @@ impl<'a> AllocationRun<'a> {
     /// report.
     pub fn into_oracle(self) -> Box<dyn UtilityOracle> {
         self.oracle
+    }
+}
+
+/// A resumable request-level simulation run: one [`step`](SimRun::step)
+/// replays one sim-time *window* of the arrival horizon through the
+/// discrete-event [`Simulator`], reporting the window's mean end-to-end
+/// latency as the streaming objective. Construct via
+/// [`crate::session::Session::sim_run`]; feed an optimized routing state
+/// with [`SimRun::warm_start`] / [`SimRun::warm_start_from`], or attach a
+/// live [`AllocationRun`] with [`SimRun::drive`] to re-optimize `(Λ, φ)`
+/// between windows (one outer allocation step per window, its current
+/// iterate swapped into the simulator before the window replays).
+///
+/// The run speaks the same `RunCore` protocol as every other run —
+/// [`StopRule`]s, [`Observer`]s, replayable final report. `moved` is
+/// reported as `+∞` (requests don't form an iterate), so
+/// [`Tolerance`]-style rules stay inert; the default stop is
+/// [`MaxIters`] at the window count. The final [`RunReport`] carries the
+/// drained-system mean latency as `objective`; the full [`SimReport`]
+/// comes back from [`SimRun::finish`] or [`SimRun::sim_report`].
+pub struct SimRun<'a> {
+    sim: Simulator<'a>,
+    window_s: f64,
+    driver: Option<AllocationRun<'a>>,
+    final_sim: Option<SimReport>,
+    core: RunCore<'a>,
+}
+
+impl<'a> SimRun<'a> {
+    /// A run splitting the simulator's arrival horizon into `windows`
+    /// equal sim-time windows (clamped to ≥ 1), stopping after the last.
+    pub fn new(sim: Simulator<'a>, windows: usize) -> Self {
+        let windows = windows.max(1);
+        let window_s = sim.spec().horizon_s / windows as f64;
+        SimRun {
+            sim,
+            window_s,
+            driver: None,
+            final_sim: None,
+            core: RunCore::new(vec![Box::new(MaxIters(windows))]),
+        }
+    }
+
+    /// Replay against an optimized routing state instead of the uniform φ.
+    pub fn warm_start(mut self, phi: &Phi) -> Self {
+        self.sim.set_phi(phi);
+        self
+    }
+
+    /// Replay against a previous run's final `(Λ, φ)` — the standard
+    /// optimize-then-simulate hand-off. φ is a no-op if the report carries
+    /// no routing state; Λ is always adopted.
+    pub fn warm_start_from(mut self, report: &RunReport) -> Self {
+        self.sim.set_lam(&report.lam);
+        match report.final_phi() {
+            Some(phi) => self.warm_start(phi),
+            None => self,
+        }
+    }
+
+    /// Attach a live allocation run: before each window replays, the
+    /// driver advances one outer step and its current `(Λ, φ)` iterate is
+    /// swapped into the simulator — the online closed loop of paper Sec. V
+    /// at request granularity.
+    pub fn drive(mut self, driver: AllocationRun<'a>) -> Self {
+        self.driver = Some(driver);
+        self
+    }
+
+    /// Add a stop rule (checked after the default window budget).
+    pub fn stop_when(mut self, rule: impl StopRule + 'a) -> Self {
+        self.core.stop_rules.push(Box::new(rule));
+        self
+    }
+
+    /// Add a wall-clock budget in seconds.
+    pub fn deadline(self, seconds: f64) -> Self {
+        self.stop_when(Deadline(seconds))
+    }
+
+    /// Attach an observer.
+    pub fn observe(mut self, obs: &'a mut dyn Observer) -> Self {
+        self.core.observers.push(obs);
+        self
+    }
+
+    /// Discrete events processed so far.
+    pub fn events(&self) -> u64 {
+        self.sim.events()
+    }
+
+    /// Snapshot the simulation roll-up at the current sim time (the final
+    /// drained report after the run breaks).
+    pub fn sim_report(&self) -> SimReport {
+        self.sim.report()
+    }
+
+    /// Advance by one sim-time window. Returns [`ControlFlow::Break`] with
+    /// the final report once a stop rule fires (the system is drained past
+    /// the horizon first); further calls return the same report.
+    pub fn step(&mut self) -> ControlFlow<RunReport> {
+        if let Some(done) = self.core.replay_finished() {
+            return done;
+        }
+        if let Some(driver) = self.driver.as_mut() {
+            let _ = driver.step();
+            let lam = driver.lam().to_vec();
+            let phi = driver.oracle_mut().current_phi().cloned();
+            if let Some(phi) = phi {
+                self.sim.set_phi(&phi);
+            }
+            self.sim.set_lam(&lam);
+        }
+        let horizon = self.sim.spec().horizon_s;
+        let target = (((self.core.iter + 1) as f64) * self.window_s).min(horizon);
+        let window = self.sim.run_until(target);
+        // requests are not an iterate: +∞ keeps Tolerance rules inert
+        match self.core.record_step(window.mean_latency_s, f64::INFINITY, self.sim.lam()) {
+            None => ControlFlow::Continue(()),
+            Some(stop) => ControlFlow::Break(self.make_report(stop)),
+        }
+    }
+
+    fn make_report(&mut self, stop: StopReason) -> RunReport {
+        self.sim.run_until(f64::INFINITY); // drain in-flight requests
+        let sr = self.sim.report();
+        let report = self.core.finish(
+            "sim",
+            sr.mean_latency_s,
+            self.sim.lam().to_vec(),
+            None,
+            None,
+            None,
+            stop,
+        );
+        self.final_sim = Some(sr);
+        report
+    }
+
+    /// Drive the run to completion, returning the unified report plus the
+    /// full drained [`SimReport`].
+    pub fn finish(mut self) -> (RunReport, SimReport) {
+        let report = loop {
+            if let ControlFlow::Break(r) = self.step() {
+                break r;
+            }
+        };
+        let sim = self.final_sim.take().unwrap_or_else(|| self.sim.report());
+        (report, sim)
     }
 }

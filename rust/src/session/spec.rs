@@ -36,6 +36,7 @@ use crate::graph::{topologies, DiGraph};
 use crate::model::cost::CostKind;
 use crate::model::utility;
 use crate::model::{Problem, Workload};
+use crate::sim::SimSpec;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -148,6 +149,10 @@ pub struct ScenarioSpec {
     pub classes: Vec<ClassSpec>,
     /// Outer-iteration horizon; required when any class rate is a trace.
     pub horizon: Option<usize>,
+    /// Request-level simulation knobs (`None` = [`SimSpec::default`] when
+    /// a sim run is requested; the field is omitted from the canonical
+    /// JSON when absent, so sim-less specs keep their digests).
+    pub sim: Option<SimSpec>,
     pub eta_routing: f64,
     pub eta_alloc: f64,
     pub delta: f64,
@@ -185,6 +190,7 @@ impl ScenarioSpec {
                 sources: Vec::new(),
             }],
             horizon: None,
+            sim: None,
             eta_routing: cfg.eta_routing,
             eta_alloc: cfg.eta_alloc,
             delta: cfg.delta,
@@ -436,6 +442,9 @@ impl ScenarioSpec {
                 )));
             }
         }
+        if let Some(sim) = &self.sim {
+            sim.validate().map_err(|what| invalid(&what))?;
+        }
         Ok(())
     }
 
@@ -615,7 +624,7 @@ impl ScenarioSpec {
     pub fn from_json(text: &str) -> Result<Self, String> {
         let j = Json::parse(text).map_err(|e| e.to_string())?;
         let obj = j.as_obj().ok_or("scenario file must be a JSON object")?;
-        const KNOWN: [&str; 13] = [
+        const KNOWN: [&str; 14] = [
             "name",
             "topology",
             "n_versions",
@@ -624,6 +633,7 @@ impl ScenarioSpec {
             "nodes",
             "classes",
             "horizon",
+            "sim",
             "eta_routing",
             "eta_alloc",
             "delta",
@@ -677,6 +687,9 @@ impl ScenarioSpec {
         }
         if let Some(h) = opt_usize(&j, "horizon")? {
             spec.horizon = Some(h);
+        }
+        if !matches!(j.get("sim"), Json::Null) {
+            spec.sim = Some(SimSpec::from_json(j.get("sim"))?);
         }
         if let Some(x) = opt_f64(&j, "eta_routing")? {
             spec.eta_routing = x;
@@ -805,6 +818,9 @@ impl ScenarioSpec {
         ];
         if let Some(h) = self.horizon {
             fields.push(("horizon", Json::from(h)));
+        }
+        if let Some(sim) = &self.sim {
+            fields.push(("sim", sim.to_json()));
         }
         Json::obj(fields)
     }
@@ -1043,6 +1059,14 @@ mod tests {
         ];
         spec.classes[1].rate = RateSpec::Trace(vec![(0, 20.0), (40, 35.0)]);
         spec.horizon = Some(100);
+        spec.sim = Some(crate::sim::SimSpec {
+            horizon_s: 45.0,
+            warmup_s: 5.0,
+            queue_capacity: 128,
+            servers_per_node: 2,
+            discipline: crate::sim::Discipline::Lifo,
+            trace_window_s: 0.5,
+        });
         spec.seed = u64::MAX; // exercises the string-seed path
         spec.workers = 4;
         spec.cost = CostKind::Cubic;
@@ -1083,6 +1107,10 @@ mod tests {
         assert!(ScenarioSpec::from_json(r#"{"classes": "video"}"#).is_err());
         assert!(ScenarioSpec::from_json(r#"{"horizon": "soon"}"#).is_err());
         assert!(ScenarioSpec::from_json(r#"{"name": 7}"#).is_err());
+        assert!(ScenarioSpec::from_json(r#"{"sim": 3}"#).is_err());
+        assert!(ScenarioSpec::from_json(r#"{"sim": {"horizon_s": "long"}}"#).is_err());
+        assert!(ScenarioSpec::from_json(r#"{"sim": {"queue_capacity": 2.5}}"#).is_err());
+        assert!(ScenarioSpec::from_json(r#"{"sim": {"discipline": "random"}}"#).is_err());
         assert!(ScenarioSpec::from_json(
             r#"{"classes": [{"name": "a", "utility": "log", "rate": 10.0,
                  "sources": [1.5]}]}"#

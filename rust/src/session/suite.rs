@@ -49,12 +49,22 @@ use crate::util::json::Json;
 /// (asserted by the suite tests).
 type ProblemCache = Mutex<HashMap<u64, Problem>>;
 
-/// Which half of the solver registry a suite entry addresses.
+/// Which half of the solver registry a suite entry addresses — or the
+/// request-level simulator replaying a router's optimized configuration.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SolverKind {
     Router,
     Allocator,
+    /// Optimize φ with the named router, then replay the scenario's
+    /// request stream through [`crate::sim`]; the cell objective is the
+    /// drained mean end-to-end latency and [`CellResult::sim`] carries the
+    /// full [`crate::sim::SimReport`] as JSON.
+    Sim,
 }
+
+/// Sim-time windows a suite's sim cells stream through (the window count
+/// only shapes the trajectory — event history is window-invariant).
+const SIM_WINDOWS: usize = 8;
 
 /// One solver of the grid: a registry name plus its kind.
 #[derive(Clone, Debug)]
@@ -84,11 +94,14 @@ impl Default for Suite {
 }
 
 /// A successful cell: the unified report plus the per-iteration objective
-/// trajectory.
+/// trajectory (and, for sim cells, the full simulation roll-up).
 #[derive(Clone, Debug)]
 pub struct CellResult {
     pub report: RunReport,
     pub trajectory: Vec<f64>,
+    /// The [`crate::sim::SimReport`] of a [`SolverKind::Sim`] cell
+    /// (per-class percentiles, node telemetry, drops); `None` otherwise.
+    pub sim: Option<Json>,
 }
 
 /// One evaluated grid cell.
@@ -149,6 +162,15 @@ impl Suite {
     /// Add an allocation solver by registry name.
     pub fn allocator(mut self, name: &str) -> Self {
         self.solvers.push(SolverRef { kind: SolverKind::Allocator, name: name.to_string() });
+        self
+    }
+
+    /// Add a request-level simulation column: optimize φ with the named
+    /// router (the cell's iteration budget), then replay the scenario's
+    /// request stream against the optimized `(Λ, φ)` on the
+    /// discrete-event core.
+    pub fn sim(mut self, router: &str) -> Self {
+        self.solvers.push(SolverRef { kind: SolverKind::Sim, name: router.to_string() });
         self
     }
 
@@ -304,11 +326,22 @@ impl Suite {
     ) -> Result<CellResult, SessionError> {
         let session = self.build_session(spec, cache)?;
         let mut traj = Trajectory::default();
+        let mut sim_json = None;
         let report = match solver.kind {
             SolverKind::Router => session
                 .routing_run(&solver.name, self.iters)?
                 .observe(&mut traj)
                 .finish(),
+            SolverKind::Sim => {
+                let optimized = session.routing_run(&solver.name, self.iters)?.finish();
+                let (report, sim) = session
+                    .sim_run(SIM_WINDOWS)?
+                    .warm_start_from(&optimized)
+                    .observe(&mut traj)
+                    .finish();
+                sim_json = Some(sim.to_json());
+                report
+            }
             SolverKind::Allocator => {
                 let iters = match session.spec.horizon {
                     Some(h) => self.iters.min(h),
@@ -339,7 +372,7 @@ impl Suite {
                 }
             }
         };
-        Ok(CellResult { report, trajectory: traj.values })
+        Ok(CellResult { report, trajectory: traj.values, sim: sim_json })
     }
 }
 
@@ -401,6 +434,7 @@ impl SuiteReport {
             let kind = match c.kind {
                 SolverKind::Router => "router",
                 SolverKind::Allocator => "allocator",
+                SolverKind::Sim => "sim",
             };
             match &c.outcome {
                 Ok(res) => {
@@ -440,6 +474,7 @@ impl SuiteReport {
                         let kind = match c.kind {
                             SolverKind::Router => "router",
                             SolverKind::Allocator => "allocator",
+                            SolverKind::Sim => "sim",
                         };
                         let mut fields = vec![
                             ("scenario", Json::from(c.scenario.as_str())),
@@ -470,6 +505,9 @@ impl SuiteReport {
                                     "trajectory",
                                     Json::from(res.trajectory.clone()),
                                 ));
+                                if let Some(sim) = &res.sim {
+                                    fields.push(("sim", sim.clone()));
+                                }
                             }
                             Err(e) => {
                                 fields.push(("status", Json::from("error")));
@@ -640,6 +678,31 @@ mod tests {
             let (ra, rb) = (a.outcome.as_ref().unwrap(), b.outcome.as_ref().unwrap());
             assert_eq!(ra.report.objective.to_bits(), rb.report.objective.to_bits());
         }
+    }
+
+    #[test]
+    fn sim_cells_replay_and_dump_reports() {
+        let mut spec = small_spec();
+        spec.sim = Some(crate::sim::SimSpec { horizon_s: 15.0, ..Default::default() });
+        let report = Suite::new().spec("a", spec).sim("omd").router("omd").iters(5).run();
+        assert_eq!(report.ok_count(), 2, "{:?}", report.cells[0].outcome);
+        let cell = report.cells.iter().find(|c| c.kind == SolverKind::Sim).unwrap();
+        let res = cell.outcome.as_ref().unwrap();
+        assert!(res.sim.is_some(), "sim cells carry the SimReport");
+        let sim = res.sim.as_ref().unwrap();
+        assert!(sim.get("arrivals").as_u64().unwrap() > 0);
+        assert_eq!(res.trajectory.len(), res.report.iterations + 1);
+        assert_eq!(res.report.algo, "sim");
+        // the CSV and JSON render the sim kind
+        assert!(report.to_csv().contains(",sim,"));
+        let json = report.to_json().to_string();
+        let parsed = crate::util::json::Json::parse(&json).unwrap();
+        let cells = parsed.get("cells").as_arr().unwrap();
+        assert!(cells.iter().any(|c| !matches!(c.get("sim"), Json::Null)));
+        // router cells stay sim-free
+        let router_cell =
+            report.cells.iter().find(|c| c.kind == SolverKind::Router).unwrap();
+        assert!(router_cell.outcome.as_ref().unwrap().sim.is_none());
     }
 
     #[test]

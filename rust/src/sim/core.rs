@@ -1,0 +1,691 @@
+//! The deterministic discrete-event core: event heap, stations, arrival
+//! processes, and the per-request routing walk. See the module docs of
+//! [`crate::sim`] for the mapping onto the paper's cost model.
+
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::graph::augmented::AugmentedNet;
+use crate::model::flow::Phi;
+use crate::model::Problem;
+use crate::util::rng::Rng;
+
+use super::report::{latency_summary, ClassStats, NodeStats, SimReport};
+use super::{ArrivalTrace, Discipline, SimSpec};
+
+/// Heap entry: min-heap on `(time, seq)`. The monotone `seq` tie-break
+/// makes the event order total, hence seed-reproducible.
+#[derive(Clone, Copy, Debug)]
+struct Ev {
+    time: f64,
+    seq: u64,
+    kind: EvKind,
+}
+
+#[derive(Clone, Copy, Debug)]
+enum EvKind {
+    /// Next admission of the class's Poisson stream.
+    Arrival { class: u32 },
+    /// A server of station `edge` finishes serving request `req`.
+    Depart { edge: u32, req: u32 },
+}
+
+impl PartialEq for Ev {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Ev {}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Ev {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed: BinaryHeap is a max-heap, we want earliest-first
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum StationKind {
+    /// `S → source device` virtual link: zero-delay pass-through.
+    Admission,
+    /// Real network edge: single exponential server at the link capacity.
+    Comm,
+    /// `device → D_w` computation link: `c` exponential servers sharing
+    /// the device's compute capacity (the M/M/c analogue).
+    Compute { device: usize },
+}
+
+/// One queueing station per augmented-graph edge.
+#[derive(Clone, Debug)]
+struct Station {
+    kind: StationKind,
+    servers: usize,
+    /// Per-server exponential service rate.
+    rate: f64,
+    busy: usize,
+    /// Waiting line: `(request, enqueue time)`.
+    queue: VecDeque<(u32, f64)>,
+    arrivals: u64,
+    served: u64,
+    dropped: u64,
+    /// Σ service durations started (utilization numerator).
+    busy_time: f64,
+    /// Σ waiting time of served requests.
+    wait_sum: f64,
+    /// ∫ queue-depth dt up to `last_change`.
+    queue_area: f64,
+    last_change: f64,
+    max_depth: usize,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Req {
+    w: u32,
+    t0: f64,
+}
+
+#[derive(Clone, Debug, Default)]
+struct ClassAccum {
+    arrivals: u64,
+    completed: u64,
+    dropped: u64,
+    /// End-to-end latencies of post-warm-up admissions.
+    lat: Vec<f64>,
+}
+
+/// Per-window deltas returned by [`Simulator::run_until`] — the streaming
+/// objective consumed by `SimRun`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WindowStats {
+    pub completed: u64,
+    pub dropped: u64,
+    /// Mean end-to-end latency of this window's completions (0 if none).
+    pub mean_latency_s: f64,
+}
+
+/// The discrete-event engine. A run is a pure function of
+/// `(problem, φ, Λ, SimSpec, seed)`: one event heap, one RNG consumed in
+/// event order, no wall-clock or thread dependence.
+pub struct Simulator<'p> {
+    problem: &'p Problem,
+    spec: SimSpec,
+    traces: Vec<ArrivalTrace>,
+    lam: Vec<f64>,
+    /// Σ Λ over each class's session block (admission split normalizer).
+    class_lam_sum: Vec<f64>,
+    /// `route[w][node]` — `(edge, φ)` lanes sampled per request.
+    route: Vec<Vec<Vec<(u32, f64)>>>,
+    stations: Vec<Station>,
+    /// Computation-link edge of each real device (per-node telemetry).
+    comp_edge: Vec<usize>,
+    heap: BinaryHeap<Ev>,
+    seq: u64,
+    clock: f64,
+    rng: Rng,
+    reqs: Vec<Req>,
+    events: u64,
+    admitted: u64,
+    completed: u64,
+    dropped: u64,
+    classes: Vec<ClassAccum>,
+    win_completed: u64,
+    win_dropped: u64,
+    win_lat_sum: f64,
+}
+
+impl<'p> Simulator<'p> {
+    /// Build a simulator over `problem` with uniform routing (override via
+    /// [`Simulator::set_phi`]). `traces` gives each task class's arrival
+    /// process in sim time; `lam` the per-session allocation splitting
+    /// each class's admissions across versions.
+    pub fn new(
+        problem: &'p Problem,
+        spec: SimSpec,
+        traces: Vec<ArrivalTrace>,
+        lam: Vec<f64>,
+        seed: u64,
+    ) -> Simulator<'p> {
+        spec.validate().expect("invalid SimSpec");
+        let n_classes = problem.workload.n_classes();
+        assert_eq!(traces.len(), n_classes, "one arrival trace per class");
+        assert_eq!(lam.len(), problem.n_sessions(), "Λ must cover every session");
+        let net = &problem.net;
+        let n_real = net.n_real;
+        let mut stations = Vec::with_capacity(net.graph.n_edges());
+        let mut comp_edge = vec![usize::MAX; n_real];
+        for (eid, e) in net.graph.edges().iter().enumerate() {
+            let kind = if e.src == AugmentedNet::SOURCE {
+                StationKind::Admission
+            } else if e.dst > n_real {
+                StationKind::Compute { device: e.src - 1 }
+            } else {
+                StationKind::Comm
+            };
+            let (servers, rate) = match kind {
+                StationKind::Admission => (1, 1.0), // pass-through, never serves
+                StationKind::Compute { device } => {
+                    comp_edge[device] = eid;
+                    let c = spec.servers_per_node;
+                    (c, e.capacity / c as f64)
+                }
+                StationKind::Comm => (1, e.capacity),
+            };
+            stations.push(Station {
+                kind,
+                servers,
+                rate,
+                busy: 0,
+                queue: VecDeque::new(),
+                arrivals: 0,
+                served: 0,
+                dropped: 0,
+                busy_time: 0.0,
+                wait_sum: 0.0,
+                queue_area: 0.0,
+                last_change: 0.0,
+                max_depth: 0,
+            });
+        }
+        let mut sim = Simulator {
+            problem,
+            spec,
+            traces,
+            lam,
+            class_lam_sum: Vec::new(),
+            route: Vec::new(),
+            stations,
+            comp_edge,
+            heap: BinaryHeap::new(),
+            seq: 0,
+            clock: 0.0,
+            rng: Rng::seed_from(seed),
+            reqs: Vec::new(),
+            events: 0,
+            admitted: 0,
+            completed: 0,
+            dropped: 0,
+            classes: vec![ClassAccum::default(); n_classes],
+            win_completed: 0,
+            win_dropped: 0,
+            win_lat_sum: 0.0,
+        };
+        sim.refresh_class_sums();
+        sim.rebuild_route(&Phi::uniform(net));
+        // prime one pending arrival per class
+        for c in 0..n_classes {
+            let t = sim.next_arrival(c, 0.0);
+            if t < sim.spec.horizon_s {
+                let seq = sim.seq;
+                sim.seq += 1;
+                sim.heap.push(Ev { time: t, seq, kind: EvKind::Arrival { class: c as u32 } });
+            }
+        }
+        sim
+    }
+
+    /// Swap in a new routing configuration (e.g. the next window's φ from
+    /// a live `AllocationRun`). In-flight requests are unaffected; future
+    /// routing decisions sample the new split ratios.
+    pub fn set_phi(&mut self, phi: &Phi) {
+        self.rebuild_route(phi);
+    }
+
+    /// Swap in a new allocation (splits each class's future admissions).
+    pub fn set_lam(&mut self, lam: &[f64]) {
+        assert_eq!(lam.len(), self.problem.n_sessions());
+        self.lam.copy_from_slice(lam);
+        self.refresh_class_sums();
+    }
+
+    pub fn events(&self) -> u64 {
+        self.events
+    }
+
+    /// The allocation currently splitting class admissions.
+    pub fn lam(&self) -> &[f64] {
+        &self.lam
+    }
+
+    pub fn clock(&self) -> f64 {
+        self.clock
+    }
+
+    pub fn spec(&self) -> &SimSpec {
+        &self.spec
+    }
+
+    fn refresh_class_sums(&mut self) {
+        self.class_lam_sum = self
+            .problem
+            .workload
+            .class_spans
+            .iter()
+            .map(|&(s0, s1)| self.lam[s0..s1].iter().sum())
+            .collect();
+    }
+
+    fn rebuild_route(&mut self, phi: &Phi) {
+        let net = &self.problem.net;
+        self.route = (0..net.n_sessions())
+            .map(|w| {
+                (0..net.n_nodes())
+                    .map(|i| {
+                        net.lanes(w, i)
+                            .iter()
+                            .map(|&e| (e as u32, phi.frac[w][e]))
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect();
+    }
+
+    /// Next event time of class `c`'s piecewise-constant Poisson stream
+    /// after `from`. Exact across rate breakpoints: a draw that would
+    /// cross a segment boundary is restarted *from* the boundary at the
+    /// new rate (memorylessness), no thinning involved.
+    fn next_arrival(&mut self, c: usize, from: f64) -> f64 {
+        let mut t = from;
+        loop {
+            let (rate, end) = self.traces[c].segment_at(t);
+            if rate <= 0.0 {
+                if end.is_finite() {
+                    t = end;
+                    continue;
+                }
+                return f64::INFINITY;
+            }
+            let dt = self.rng.exponential(rate);
+            if t + dt < end {
+                return t + dt;
+            }
+            t = end;
+        }
+    }
+
+    /// Process every event up to and including `t_end`, returning the
+    /// window's completion/drop deltas. Passing `f64::INFINITY` drains
+    /// the system (arrivals are only ever scheduled below the horizon).
+    pub fn run_until(&mut self, t_end: f64) -> WindowStats {
+        self.win_completed = 0;
+        self.win_dropped = 0;
+        self.win_lat_sum = 0.0;
+        while let Some(top) = self.heap.peek() {
+            if top.time > t_end {
+                break;
+            }
+            let ev = self.heap.pop().expect("peeked event");
+            self.clock = ev.time;
+            self.events += 1;
+            match ev.kind {
+                EvKind::Arrival { class } => self.on_arrival(class as usize),
+                EvKind::Depart { edge, req } => self.on_depart(edge as usize, req),
+            }
+        }
+        if t_end.is_finite() && t_end > self.clock {
+            self.clock = t_end;
+        }
+        WindowStats {
+            completed: self.win_completed,
+            dropped: self.win_dropped,
+            mean_latency_s: if self.win_completed > 0 {
+                self.win_lat_sum / self.win_completed as f64
+            } else {
+                0.0
+            },
+        }
+    }
+
+    /// Run the arrival horizon, drain the system, report.
+    pub fn run_to_end(&mut self) -> SimReport {
+        let h = self.spec.horizon_s;
+        self.run_until(h);
+        self.run_until(f64::INFINITY);
+        self.report()
+    }
+
+    fn on_arrival(&mut self, c: usize) {
+        let t = self.clock;
+        // schedule the class's next admission first (fixed RNG order)
+        let nt = self.next_arrival(c, t);
+        if nt < self.spec.horizon_s {
+            let seq = self.seq;
+            self.seq += 1;
+            self.heap.push(Ev { time: nt, seq, kind: EvKind::Arrival { class: c as u32 } });
+        }
+        // thin the class arrival onto a session ∝ Λ
+        let (s0, s1) = self.problem.workload.class_spans[c];
+        let total = self.class_lam_sum[c];
+        let w = if total > 0.0 {
+            let mut x = self.rng.f64() * total;
+            let mut chosen = s0;
+            for s in s0..s1 {
+                let f = self.lam[s];
+                if x < f {
+                    chosen = s;
+                    break;
+                }
+                x -= f;
+                chosen = s;
+            }
+            chosen
+        } else {
+            s0
+        };
+        let req = self.reqs.len() as u32;
+        self.reqs.push(Req { w: w as u32, t0: t });
+        self.admitted += 1;
+        self.classes[c].arrivals += 1;
+        self.route_from(AugmentedNet::SOURCE, req);
+    }
+
+    /// Walk the request from `node` until it hits a delaying station or
+    /// its destination. Admission links are zero-delay, so the walk only
+    /// loops across those; comm/compute stations terminate it.
+    fn route_from(&mut self, mut node: usize, req: u32) {
+        let w = self.reqs[req as usize].w as usize;
+        let dnode = self.problem.net.dnode(w);
+        loop {
+            if node == dnode {
+                self.complete(req);
+                return;
+            }
+            let row = &self.route[w][node];
+            if row.is_empty() {
+                // unreachable on validated nets; account rather than hang
+                self.drop_req(req, None);
+                return;
+            }
+            let sum: f64 = row.iter().map(|&(_, f)| f).sum();
+            let mut x = self.rng.f64() * sum.max(1e-300);
+            let mut chosen = row[0].0;
+            for &(e, f) in row {
+                if x < f {
+                    chosen = e;
+                    break;
+                }
+                x -= f;
+                chosen = e;
+            }
+            let e = chosen as usize;
+            if self.stations[e].kind == StationKind::Admission {
+                node = self.problem.net.graph.edge(e).dst;
+                continue;
+            }
+            self.enqueue(e, req);
+            return;
+        }
+    }
+
+    fn enqueue(&mut self, e: usize, req: u32) {
+        let t = self.clock;
+        let cap = self.spec.queue_capacity;
+        let st = &mut self.stations[e];
+        st.arrivals += 1;
+        if st.busy < st.servers {
+            st.busy += 1;
+            let service = self.rng.exponential(st.rate);
+            st.busy_time += service;
+            let seq = self.seq;
+            self.seq += 1;
+            self.heap.push(Ev {
+                time: t + service,
+                seq,
+                kind: EvKind::Depart { edge: e as u32, req },
+            });
+        } else if cap > 0 && st.queue.len() >= cap {
+            st.dropped += 1;
+            self.drop_req(req, Some(e));
+        } else {
+            let depth = st.queue.len();
+            st.queue_area += depth as f64 * (t - st.last_change);
+            st.last_change = t;
+            st.queue.push_back((req, t));
+            st.max_depth = st.max_depth.max(st.queue.len());
+        }
+    }
+
+    fn on_depart(&mut self, e: usize, req: u32) {
+        let t = self.clock;
+        self.stations[e].served += 1;
+        let dst = self.problem.net.graph.edge(e).dst;
+        self.route_from(dst, req);
+        // backfill the freed server from the waiting line
+        let disc = self.spec.discipline;
+        let st = &mut self.stations[e];
+        let next = match disc {
+            Discipline::Fifo => st.queue.pop_front(),
+            Discipline::Lifo => st.queue.pop_back(),
+        };
+        match next {
+            Some((nreq, at)) => {
+                st.queue_area += (st.queue.len() + 1) as f64 * (t - st.last_change);
+                st.last_change = t;
+                st.wait_sum += t - at;
+                let service = self.rng.exponential(st.rate);
+                st.busy_time += service;
+                let seq = self.seq;
+                self.seq += 1;
+                self.heap.push(Ev {
+                    time: t + service,
+                    seq,
+                    kind: EvKind::Depart { edge: e as u32, req: nreq },
+                });
+            }
+            None => st.busy -= 1,
+        }
+    }
+
+    fn complete(&mut self, req: u32) {
+        let r = self.reqs[req as usize];
+        let c = self.problem.workload.class_of_session(r.w as usize);
+        let lat = self.clock - r.t0;
+        self.completed += 1;
+        self.classes[c].completed += 1;
+        if r.t0 >= self.spec.warmup_s {
+            self.classes[c].lat.push(lat);
+        }
+        self.win_completed += 1;
+        self.win_lat_sum += lat;
+    }
+
+    fn drop_req(&mut self, req: u32, _station: Option<usize>) {
+        let r = self.reqs[req as usize];
+        let c = self.problem.workload.class_of_session(r.w as usize);
+        self.dropped += 1;
+        self.classes[c].dropped += 1;
+        self.win_dropped += 1;
+    }
+
+    /// Snapshot the accumulated history into a [`SimReport`]. No
+    /// wall-clock enters the report — same-seed runs are bit-comparable.
+    pub fn report(&self) -> SimReport {
+        let span = self.clock.max(1e-12);
+        let mut all: Vec<f64> = Vec::new();
+        for cl in &self.classes {
+            all.extend_from_slice(&cl.lat);
+        }
+        let (mean, p50, p99, p999) = latency_summary(&all);
+        let classes = self
+            .classes
+            .iter()
+            .enumerate()
+            .map(|(c, cl)| {
+                let (m, q50, q99, q999) = latency_summary(&cl.lat);
+                ClassStats {
+                    name: self.problem.workload.class_names[c].clone(),
+                    arrivals: cl.arrivals,
+                    completed: cl.completed,
+                    dropped: cl.dropped,
+                    measured: cl.lat.len() as u64,
+                    mean_latency_s: m,
+                    p50_latency_s: q50,
+                    p99_latency_s: q99,
+                    p999_latency_s: q999,
+                }
+            })
+            .collect();
+        let nodes = self
+            .comp_edge
+            .iter()
+            .enumerate()
+            .filter(|&(_, &e)| e != usize::MAX)
+            .map(|(d, &e)| {
+                let st = &self.stations[e];
+                let tail = st.queue.len() as f64 * (self.clock - st.last_change);
+                NodeStats {
+                    device: d,
+                    arrivals: st.arrivals,
+                    served: st.served,
+                    dropped: st.dropped,
+                    utilization: st.busy_time / (span * st.servers as f64),
+                    mean_queue_depth: (st.queue_area + tail) / span,
+                    max_queue_depth: st.max_depth,
+                    mean_wait_s: st.wait_sum / st.served.max(1) as f64,
+                }
+            })
+            .collect();
+        SimReport {
+            horizon_s: self.spec.horizon_s,
+            warmup_s: self.spec.warmup_s,
+            end_s: self.clock,
+            events: self.events,
+            arrivals: self.admitted,
+            completed: self.completed,
+            dropped: self.dropped,
+            in_flight: self.admitted - self.completed - self.dropped,
+            mean_latency_s: mean,
+            p50_latency_s: p50,
+            p99_latency_s: p99,
+            p999_latency_s: p999,
+            classes,
+            nodes,
+        }
+    }
+}
+
+/// One-shot replay: run `(φ, Λ)` over the full horizon, drain, report.
+pub fn simulate_requests(
+    problem: &Problem,
+    phi: &Phi,
+    lam: &[f64],
+    traces: Vec<ArrivalTrace>,
+    spec: SimSpec,
+    seed: u64,
+) -> SimReport {
+    let mut sim = Simulator::new(problem, spec, traces, lam.to_vec(), seed);
+    sim.set_phi(phi);
+    sim.run_to_end()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::topologies;
+
+    fn small_problem(seed: u64) -> Problem {
+        let mut rng = Rng::seed_from(seed);
+        let net = topologies::connected_er(8, 0.35, 2, &mut rng);
+        Problem::new(net, 20.0, crate::model::cost::CostKind::Queue)
+    }
+
+    fn constant_traces(problem: &Problem) -> Vec<ArrivalTrace> {
+        problem
+            .workload
+            .class_rates
+            .iter()
+            .map(|&r| ArrivalTrace::constant(r))
+            .collect()
+    }
+
+    #[test]
+    fn conservation_and_counts() {
+        let problem = small_problem(7);
+        let lam = problem.uniform_allocation();
+        let spec = SimSpec { horizon_s: 50.0, ..SimSpec::default() };
+        let traces = constant_traces(&problem);
+        let report =
+            simulate_requests(&problem, &Phi::uniform(&problem.net), &lam, traces, spec, 1);
+        assert!(report.arrivals > 0);
+        assert_eq!(report.in_flight, 0, "drained run leaves nothing in flight");
+        assert_eq!(report.arrivals, report.completed + report.dropped);
+        assert_eq!(
+            report.arrivals,
+            report.classes.iter().map(|c| c.arrivals).sum::<u64>()
+        );
+        assert!(report.events >= report.arrivals);
+        assert!(report.mean_latency_s > 0.0);
+        assert!(report.p50_latency_s <= report.p99_latency_s);
+        assert!(report.p99_latency_s <= report.p999_latency_s);
+    }
+
+    #[test]
+    fn same_seed_bit_identical_reports() {
+        let problem = small_problem(3);
+        let lam = problem.uniform_allocation();
+        let spec = SimSpec { horizon_s: 30.0, ..SimSpec::default() };
+        let a = simulate_requests(
+            &problem,
+            &Phi::uniform(&problem.net),
+            &lam,
+            constant_traces(&problem),
+            spec.clone(),
+            9,
+        );
+        let b = simulate_requests(
+            &problem,
+            &Phi::uniform(&problem.net),
+            &lam,
+            constant_traces(&problem),
+            spec,
+            9,
+        );
+        assert_eq!(a, b);
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    }
+
+    #[test]
+    fn windowed_run_matches_one_shot() {
+        let problem = small_problem(5);
+        let lam = problem.uniform_allocation();
+        let spec = SimSpec { horizon_s: 40.0, ..SimSpec::default() };
+        let one = simulate_requests(
+            &problem,
+            &Phi::uniform(&problem.net),
+            &lam,
+            constant_traces(&problem),
+            spec.clone(),
+            4,
+        );
+        let mut sim =
+            Simulator::new(&problem, spec, constant_traces(&problem), lam.clone(), 4);
+        sim.set_phi(&Phi::uniform(&problem.net));
+        for k in 1..=8 {
+            sim.run_until(40.0 * k as f64 / 8.0);
+        }
+        sim.run_until(f64::INFINITY);
+        assert_eq!(sim.report(), one, "window boundaries must not change history");
+    }
+
+    #[test]
+    fn bounded_queue_drops() {
+        let problem = small_problem(11);
+        let lam = problem.uniform_allocation();
+        // saturate: arrival rate far above every capacity, one waiting slot
+        let traces = vec![ArrivalTrace::constant(500.0); problem.workload.n_classes()];
+        let spec = SimSpec { horizon_s: 10.0, queue_capacity: 1, ..SimSpec::default() };
+        let report =
+            simulate_requests(&problem, &Phi::uniform(&problem.net), &lam, traces, spec, 2);
+        assert!(report.dropped > 0, "overload with capacity 1 must drop");
+        assert_eq!(report.arrivals, report.completed + report.dropped);
+        let node_drops: u64 = report.nodes.iter().map(|n| n.dropped).sum();
+        assert!(node_drops <= report.dropped, "node drops are a subset");
+    }
+}

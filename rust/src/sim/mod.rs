@@ -1,0 +1,324 @@
+//! **`sim`** — request-level discrete-event simulation of a served
+//! configuration.
+//!
+//! The optimizers in [`crate::routing`] / [`crate::allocation`] work on the
+//! paper's *fluid* flow model (eqs. 1–4): session rates `t_i(w)` (eq. 1)
+//! split by φ, link flows `F_ij` (eq. 2), and a congestion cost
+//! `D_ij(F_ij, C_ij)` per link (eqs. 3–4). The fluid optimum says nothing
+//! about request-granularity effects — burstiness, queue backlogs,
+//! head-of-line blocking, tail latency, loss under bounded buffers. This
+//! module replays *individual requests* through an optimized `(Λ, φ)`
+//! configuration and measures exactly those effects.
+//!
+//! ## Mapping the cost model to queueing stations
+//!
+//! Every edge of the augmented graph becomes a service station:
+//!
+//! * **communication links** (real network edges) — a single-server FIFO
+//!   queue with exponential service at rate `C_ij` (the link capacity, in
+//!   the same request/s units as the admitted rates). Its steady-state
+//!   mean number-in-system is `F/(C−F)` — *exactly* the
+//!   [`crate::model::cost::CostKind::Queue`] family of eq. 3, so for the
+//!   `queue` cost the fluid objective Σ `D_ij` is the fluid prediction of
+//!   the summed mean queue lengths this simulator measures (Little's law;
+//!   the `exp`/`linear`/`cubic` families are monotone congestion proxies
+//!   and correspond qualitatively);
+//! * **computation links** (device `d` → its version's destination
+//!   `D_w`) — an M/M/c-style station: [`SimSpec::servers_per_node`]
+//!   servers, each with exponential service at rate `C_d / c` so the
+//!   station's total capacity equals the fluid compute capacity drawn (or
+//!   pinned via `NodeSpec::compute_capacity`) for the device. Finishing
+//!   service on a computation link *is* the DNN inference — the request
+//!   completes when it reaches `D_w`;
+//! * **admission links** (`S` → source devices) — pass-through with zero
+//!   delay (their fluid capacity is the non-binding `SOURCE_CAP`).
+//!
+//! Per-request routing samples the next hop from the optimized φ split
+//! ratios — the probabilistic interpretation of the fluid split — and
+//! arrivals are Poisson per task class ([`ArrivalTrace`]: constant rates
+//! or piecewise-constant traces compiled from `RateSpec::Trace`
+//! breakpoints), thinned onto sessions proportionally to Λ.
+//!
+//! ## Determinism
+//!
+//! The event core is a binary min-heap keyed on `(time, seq)` — the `seq`
+//! tie-break makes event order total, and a single seeded
+//! [`crate::util::rng::Rng`] is consumed in event order, so a run is a
+//! pure function of `(problem, φ, Λ, SimSpec, seed)`. The engine worker
+//! count never enters the simulation: the same seed produces a
+//! bit-identical [`SimReport`] at any `--workers` value (asserted by
+//! `rust/tests/test_sim.rs`).
+//!
+//! ## Validation
+//!
+//! `rust/tests/test_sim.rs` pins the core against closed forms: a
+//! single-station scenario must reproduce the M/M/1 mean sojourn
+//! `1/(μ−λ)` and mean wait `ρ/(μ−λ)`, and a multi-server station the
+//! Erlang-C M/M/c wait, within seeded-CI tolerances.
+//! `python/tests/test_sim_des.py` mirrors the same semantics in Python
+//! against the same formulas.
+
+pub mod core;
+pub mod report;
+
+pub use self::core::{simulate_requests, Simulator, WindowStats};
+pub use report::{ClassStats, NodeStats, SimReport};
+
+use crate::util::json::Json;
+
+/// Queueing discipline of a station's waiting line.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Discipline {
+    /// First-in-first-out (the default).
+    Fifo,
+    /// Last-in-first-out (stack service; fattens the tail).
+    Lifo,
+}
+
+impl Discipline {
+    pub fn parse(name: &str) -> Option<Discipline> {
+        match name {
+            "fifo" => Some(Discipline::Fifo),
+            "lifo" => Some(Discipline::Lifo),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Discipline::Fifo => "fifo",
+            Discipline::Lifo => "lifo",
+        }
+    }
+}
+
+/// The scenario-level simulation knobs (the `"sim"` object of a scenario
+/// file; every field optional there, falling back to these defaults).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimSpec {
+    /// Simulated horizon in seconds: arrivals are admitted on
+    /// `[0, horizon_s)`, then the system drains.
+    pub horizon_s: f64,
+    /// Requests admitted before this time are excluded from the latency
+    /// percentiles (queue warm-up transient).
+    pub warmup_s: f64,
+    /// Bounded station buffers: maximum *waiting* requests per station
+    /// (`0` = unbounded). Overflow drops the request (counted per class
+    /// and per node).
+    pub queue_capacity: usize,
+    /// Servers per computation station (`c` of the M/M/c analogy); each
+    /// serves at `capacity / c` so total station capacity matches the
+    /// fluid model.
+    pub servers_per_node: usize,
+    /// Waiting-line discipline of every station.
+    pub discipline: Discipline,
+    /// Sim-seconds per outer-iteration unit when compiling
+    /// `RateSpec::Trace` breakpoints into arrival-rate changes.
+    pub trace_window_s: f64,
+}
+
+impl Default for SimSpec {
+    fn default() -> Self {
+        SimSpec {
+            horizon_s: 30.0,
+            warmup_s: 0.0,
+            queue_capacity: 0,
+            servers_per_node: 1,
+            discipline: Discipline::Fifo,
+            trace_window_s: 1.0,
+        }
+    }
+}
+
+impl SimSpec {
+    /// Structural validation (mirrors `ScenarioSpec::validate` style).
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.horizon_s > 0.0) {
+            return Err(format!("sim horizon_s must be > 0 (got {})", self.horizon_s));
+        }
+        if !(self.warmup_s >= 0.0 && self.warmup_s < self.horizon_s) {
+            return Err(format!(
+                "sim warmup_s must be in [0, horizon_s) (got {} vs horizon {})",
+                self.warmup_s, self.horizon_s
+            ));
+        }
+        if self.servers_per_node == 0 {
+            return Err("sim servers_per_node must be >= 1".to_string());
+        }
+        if !(self.trace_window_s > 0.0) {
+            return Err(format!(
+                "sim trace_window_s must be > 0 (got {})",
+                self.trace_window_s
+            ));
+        }
+        Ok(())
+    }
+
+    /// Parse the `"sim"` object of a scenario file. Missing fields fall
+    /// back to the defaults; present-but-mistyped fields are hard errors
+    /// and unknown fields are warned about, matching the spec layer.
+    pub fn from_json(j: &Json) -> Result<SimSpec, String> {
+        let obj = j.as_obj().ok_or_else(|| format!("bad sim '{j}' (want an object)"))?;
+        const KNOWN: [&str; 6] = [
+            "horizon_s",
+            "warmup_s",
+            "queue_capacity",
+            "servers_per_node",
+            "discipline",
+            "trace_window_s",
+        ];
+        for key in obj.keys() {
+            if !KNOWN.contains(&key.as_str()) {
+                crate::log_warn!("sim spec: ignoring unknown field '{key}'");
+            }
+        }
+        let mut spec = SimSpec::default();
+        if let Some(x) = opt_f64(j, "horizon_s")? {
+            spec.horizon_s = x;
+        }
+        if let Some(x) = opt_f64(j, "warmup_s")? {
+            spec.warmup_s = x;
+        }
+        if let Some(x) = opt_usize(j, "queue_capacity")? {
+            spec.queue_capacity = x;
+        }
+        if let Some(x) = opt_usize(j, "servers_per_node")? {
+            spec.servers_per_node = x;
+        }
+        if !matches!(j.get("discipline"), Json::Null) {
+            let d = j.get("discipline");
+            spec.discipline = d
+                .as_str()
+                .and_then(Discipline::parse)
+                .ok_or_else(|| format!("bad sim discipline '{d}' (fifo | lifo)"))?;
+        }
+        if let Some(x) = opt_f64(j, "trace_window_s")? {
+            spec.trace_window_s = x;
+        }
+        Ok(spec)
+    }
+
+    /// Serialize (the inverse of [`SimSpec::from_json`]).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("horizon_s", Json::from(self.horizon_s)),
+            ("warmup_s", Json::from(self.warmup_s)),
+            ("queue_capacity", Json::from(self.queue_capacity)),
+            ("servers_per_node", Json::from(self.servers_per_node)),
+            ("discipline", Json::from(self.discipline.name())),
+            ("trace_window_s", Json::from(self.trace_window_s)),
+        ])
+    }
+}
+
+fn opt_f64(j: &Json, key: &str) -> Result<Option<f64>, String> {
+    match j.get(key) {
+        Json::Null => Ok(None),
+        v => v
+            .as_f64()
+            .map(Some)
+            .ok_or_else(|| format!("bad sim {key} '{v}' (want a number)")),
+    }
+}
+
+fn opt_usize(j: &Json, key: &str) -> Result<Option<usize>, String> {
+    match j.get(key) {
+        Json::Null => Ok(None),
+        v => match v.as_f64() {
+            Some(x) if x >= 0.0 && x.fract() == 0.0 => Ok(Some(x as usize)),
+            _ => Err(format!("bad sim {key} '{v}' (want a non-negative integer)")),
+        },
+    }
+}
+
+/// A task class's arrival rate over *sim time*: piecewise-constant
+/// `(start_s, rate)` segments, first segment starting at 0. The exact
+/// piecewise-Poisson generator lives in [`Simulator`]: an exponential
+/// inter-arrival draw that crosses a segment boundary is restarted *from*
+/// the boundary at the new rate (exact by memorylessness, no thinning).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArrivalTrace {
+    /// `(start_s, rate)` segments, strictly increasing in `start_s`.
+    pub points: Vec<(f64, f64)>,
+}
+
+impl ArrivalTrace {
+    /// A constant-rate Poisson stream.
+    pub fn constant(rate: f64) -> ArrivalTrace {
+        ArrivalTrace { points: vec![(0.0, rate)] }
+    }
+
+    /// Compile outer-iteration breakpoints (`RateSpec::Trace` shape) into
+    /// sim time at `window_s` sim-seconds per iteration.
+    pub fn from_breakpoints(points: &[(usize, f64)], window_s: f64) -> ArrivalTrace {
+        ArrivalTrace {
+            points: points.iter().map(|&(t, r)| (t as f64 * window_s, r)).collect(),
+        }
+    }
+
+    /// The rate in effect at time `t` and the end of its segment
+    /// (`f64::INFINITY` for the last segment).
+    pub fn segment_at(&self, t: f64) -> (f64, f64) {
+        let mut rate = 0.0;
+        let mut end = f64::INFINITY;
+        for (k, &(t0, r)) in self.points.iter().enumerate() {
+            if t0 <= t {
+                rate = r;
+                end = self.points.get(k + 1).map(|&(t1, _)| t1).unwrap_or(f64::INFINITY);
+            } else {
+                break;
+            }
+        }
+        (rate, end)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_roundtrips_and_validates() {
+        let spec = SimSpec {
+            horizon_s: 12.5,
+            warmup_s: 2.0,
+            queue_capacity: 64,
+            servers_per_node: 3,
+            discipline: Discipline::Lifo,
+            trace_window_s: 0.25,
+        };
+        spec.validate().unwrap();
+        let back = SimSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back, spec);
+        // defaults fill missing fields
+        let partial = SimSpec::from_json(&Json::parse(r#"{"horizon_s": 5}"#).unwrap()).unwrap();
+        assert_eq!(partial.horizon_s, 5.0);
+        assert_eq!(partial.discipline, Discipline::Fifo);
+    }
+
+    #[test]
+    fn spec_rejects_bad_fields() {
+        for text in [
+            r#"{"horizon_s": "long"}"#,
+            r#"{"queue_capacity": 2.5}"#,
+            r#"{"discipline": "random"}"#,
+            r#"7"#,
+        ] {
+            assert!(SimSpec::from_json(&Json::parse(text).unwrap()).is_err(), "{text}");
+        }
+        assert!(SimSpec { horizon_s: 0.0, ..SimSpec::default() }.validate().is_err());
+        assert!(SimSpec { warmup_s: 31.0, ..SimSpec::default() }.validate().is_err());
+        assert!(SimSpec { servers_per_node: 0, ..SimSpec::default() }.validate().is_err());
+        assert!(SimSpec { trace_window_s: 0.0, ..SimSpec::default() }.validate().is_err());
+    }
+
+    #[test]
+    fn trace_segments() {
+        let tr = ArrivalTrace::from_breakpoints(&[(0, 10.0), (5, 20.0), (9, 15.0)], 2.0);
+        assert_eq!(tr.segment_at(0.0), (10.0, 10.0));
+        assert_eq!(tr.segment_at(9.99), (10.0, 10.0));
+        assert_eq!(tr.segment_at(10.0), (20.0, 18.0));
+        assert_eq!(tr.segment_at(50.0), (15.0, f64::INFINITY));
+        assert_eq!(ArrivalTrace::constant(7.0).segment_at(3.0), (7.0, f64::INFINITY));
+    }
+}

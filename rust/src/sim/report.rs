@@ -1,0 +1,136 @@
+//! Roll-up of per-request accounting into a [`SimReport`].
+//!
+//! The report is a pure function of the simulated history: it carries no
+//! wall-clock fields, so same-seed runs can be compared bit-for-bit (the
+//! CLI measures and prints elapsed time separately).
+
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// Per-class end-to-end latency and loss accounting. Latency percentiles
+/// are computed over requests *admitted after the warm-up cutoff*; the
+/// raw counters cover the whole run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClassStats {
+    pub name: String,
+    /// Requests admitted (arrived at the source).
+    pub arrivals: u64,
+    /// Requests that reached their session's destination.
+    pub completed: u64,
+    /// Requests lost to a full station buffer.
+    pub dropped: u64,
+    /// Post-warm-up completions the percentiles are computed over.
+    pub measured: u64,
+    pub mean_latency_s: f64,
+    pub p50_latency_s: f64,
+    pub p99_latency_s: f64,
+    pub p999_latency_s: f64,
+}
+
+/// Per-device queue-depth telemetry of the node's *computation* station
+/// (the M/M/c analogue of its compute capacity).
+#[derive(Clone, Debug, PartialEq)]
+pub struct NodeStats {
+    /// Real-device index (matches `NodeSpec::id`).
+    pub device: usize,
+    pub arrivals: u64,
+    pub served: u64,
+    pub dropped: u64,
+    /// Fraction of server-time spent busy over the observed span.
+    pub utilization: f64,
+    /// Time-averaged waiting-line length (∫ depth dt / span).
+    pub mean_queue_depth: f64,
+    pub max_queue_depth: usize,
+    /// Mean time served requests spent waiting in line (excludes service).
+    pub mean_wait_s: f64,
+}
+
+/// The full simulation outcome. Deterministic for a fixed
+/// `(problem, φ, Λ, SimSpec, seed)` — see the module docs of
+/// [`crate::sim`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimReport {
+    /// Arrival horizon the run was configured with.
+    pub horizon_s: f64,
+    /// Warm-up cutoff excluded from the latency percentiles.
+    pub warmup_s: f64,
+    /// Sim time when the report was taken (≥ horizon after draining).
+    pub end_s: f64,
+    /// Discrete events processed (arrivals + service completions).
+    pub events: u64,
+    pub arrivals: u64,
+    pub completed: u64,
+    pub dropped: u64,
+    /// Admitted but neither completed nor dropped yet (0 after a drain).
+    pub in_flight: u64,
+    pub mean_latency_s: f64,
+    pub p50_latency_s: f64,
+    pub p99_latency_s: f64,
+    pub p999_latency_s: f64,
+    pub classes: Vec<ClassStats>,
+    pub nodes: Vec<NodeStats>,
+}
+
+impl SimReport {
+    pub fn to_json(&self) -> Json {
+        let classes = self
+            .classes
+            .iter()
+            .map(|c| {
+                Json::obj(vec![
+                    ("name", Json::from(c.name.as_str())),
+                    ("arrivals", Json::from_u64(c.arrivals)),
+                    ("completed", Json::from_u64(c.completed)),
+                    ("dropped", Json::from_u64(c.dropped)),
+                    ("measured", Json::from_u64(c.measured)),
+                    ("mean_latency_s", Json::from(c.mean_latency_s)),
+                    ("p50_latency_s", Json::from(c.p50_latency_s)),
+                    ("p99_latency_s", Json::from(c.p99_latency_s)),
+                    ("p999_latency_s", Json::from(c.p999_latency_s)),
+                ])
+            })
+            .collect();
+        let nodes = self
+            .nodes
+            .iter()
+            .map(|n| {
+                Json::obj(vec![
+                    ("device", Json::from(n.device)),
+                    ("arrivals", Json::from_u64(n.arrivals)),
+                    ("served", Json::from_u64(n.served)),
+                    ("dropped", Json::from_u64(n.dropped)),
+                    ("utilization", Json::from(n.utilization)),
+                    ("mean_queue_depth", Json::from(n.mean_queue_depth)),
+                    ("max_queue_depth", Json::from(n.max_queue_depth)),
+                    ("mean_wait_s", Json::from(n.mean_wait_s)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("horizon_s", Json::from(self.horizon_s)),
+            ("warmup_s", Json::from(self.warmup_s)),
+            ("end_s", Json::from(self.end_s)),
+            ("events", Json::from_u64(self.events)),
+            ("arrivals", Json::from_u64(self.arrivals)),
+            ("completed", Json::from_u64(self.completed)),
+            ("dropped", Json::from_u64(self.dropped)),
+            ("in_flight", Json::from_u64(self.in_flight)),
+            ("mean_latency_s", Json::from(self.mean_latency_s)),
+            ("p50_latency_s", Json::from(self.p50_latency_s)),
+            ("p99_latency_s", Json::from(self.p99_latency_s)),
+            ("p999_latency_s", Json::from(self.p999_latency_s)),
+            ("classes", Json::Arr(classes)),
+            ("nodes", Json::Arr(nodes)),
+        ])
+    }
+}
+
+/// Latency summary helper shared by the class and global roll-ups.
+pub(crate) fn latency_summary(samples: &[f64]) -> (f64, f64, f64, f64) {
+    (
+        stats::mean(samples),
+        stats::percentile(samples, 50.0),
+        stats::percentile(samples, 99.0),
+        stats::percentile(samples, 99.9),
+    )
+}

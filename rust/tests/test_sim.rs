@@ -1,0 +1,334 @@
+//! Validation of the request-level discrete-event core (`jowr::sim`):
+//! closed-form M/M/1 and M/M/c checks, determinism across worker counts,
+//! trace-driven arrivals, and the streaming `SimRun` integration.
+
+use jowr::prelude::*;
+use jowr::sim;
+
+/// A minimal scenario whose simulated system is an exact M/M/1 queue: two
+/// devices, one version, all traffic admitted at device 0, and φ pinned so
+/// every request goes straight onto device 0's computation link (service
+/// rate `mu`). The admission link is zero-delay, so end-to-end latency is
+/// exactly the station's sojourn time.
+fn mm1_session(rate: f64, mu: f64) -> Session {
+    let mut spec = ScenarioSpec::paper_default();
+    spec.name = "mm1".into();
+    spec.topology = TopologySpec::Explicit {
+        n_nodes: 2,
+        edges: vec![EdgeSpec {
+            src: 0,
+            dst: 1,
+            capacity: 1000.0,
+            bidirectional: true,
+            cost: None,
+        }],
+    };
+    spec.n_versions = 1;
+    spec.classes = vec![ClassSpec {
+        name: "mm1".into(),
+        utility: "log".into(),
+        rate: RateSpec::Constant(rate),
+        sources: vec![0],
+    }];
+    spec.nodes = vec![
+        NodeSpec { id: 0, compute_capacity: Some(mu), version: Some(0) },
+        NodeSpec { id: 1, compute_capacity: Some(mu), version: Some(0) },
+    ];
+    spec.build().unwrap()
+}
+
+/// φ sending every request at device 0 straight to its computation link.
+fn mm1_phi(session: &Session) -> jowr::model::flow::Phi {
+    let net = &session.problem.net;
+    let mut phi = jowr::model::flow::Phi::uniform(net);
+    let dev0 = 1; // augmented id of device 0
+    let comp = net
+        .graph
+        .find_edge(dev0, net.n_real + 1)
+        .expect("device 0 computation link");
+    for e in 0..net.graph.n_edges() {
+        phi.frac[0][e] = 0.0;
+    }
+    phi.frac[0][comp] = 1.0;
+    // admission: S -> device 0 only
+    let admit = net.graph.find_edge(0, dev0).expect("admission link");
+    phi.frac[0][admit] = 1.0;
+    phi
+}
+
+/// Erlang-C probability of waiting for an M/M/c queue with offered load
+/// `a = λ/μ_server`.
+fn erlang_c(c: usize, a: f64) -> f64 {
+    let mut sum = 0.0;
+    let mut term = 1.0; // a^k / k!
+    for k in 0..c {
+        if k > 0 {
+            term *= a / k as f64;
+        }
+        sum += term;
+    }
+    let pc = term * a / c as f64; // a^c / c!
+    let rho = a / c as f64;
+    let tail = pc / (1.0 - rho);
+    tail / (sum + tail)
+}
+
+#[test]
+fn mm1_matches_closed_form() {
+    let (rate, mu) = (30.0, 40.0);
+    let session = mm1_session(rate, mu);
+    let spec = SimSpec { horizon_s: 4000.0, warmup_s: 100.0, ..SimSpec::default() };
+    let report = sim::simulate_requests(
+        &session.problem,
+        &mm1_phi(&session),
+        &[rate],
+        vec![ArrivalTrace::constant(rate)],
+        spec,
+        7,
+    );
+    assert_eq!(report.dropped, 0);
+    assert_eq!(report.in_flight, 0);
+    // sojourn time W = 1/(μ−λ), queueing delay Wq = ρ/(μ−λ)
+    let w = 1.0 / (mu - rate);
+    let wq = (rate / mu) / (mu - rate);
+    assert!(
+        (report.mean_latency_s - w).abs() < 0.05 * w,
+        "mean sojourn {} vs analytic {w}",
+        report.mean_latency_s
+    );
+    let node = &report.nodes[0];
+    assert!(
+        (node.mean_wait_s - wq).abs() < 0.08 * wq,
+        "mean wait {} vs analytic {wq}",
+        node.mean_wait_s
+    );
+    let rho = rate / mu;
+    assert!(
+        (node.utilization - rho).abs() < 0.05 * rho,
+        "utilization {} vs analytic {rho}",
+        node.utilization
+    );
+    // Lq = λ·Wq (Little's law on the waiting line)
+    let lq = rate * wq;
+    assert!(
+        (node.mean_queue_depth - lq).abs() < 0.10 * lq,
+        "queue depth {} vs analytic {lq}",
+        node.mean_queue_depth
+    );
+    // M/M/1 sojourn is exponential: p50 = W·ln 2, p99 = W·ln 100
+    let p50 = w * 2.0f64.ln();
+    assert!(
+        (report.p50_latency_s - p50).abs() < 0.08 * p50,
+        "p50 {} vs analytic {p50}",
+        report.p50_latency_s
+    );
+}
+
+#[test]
+fn mmc_matches_erlang_c() {
+    let (rate, mu_total, servers) = (30.0, 40.0, 3usize);
+    let session = mm1_session(rate, mu_total);
+    let spec = SimSpec {
+        horizon_s: 4000.0,
+        warmup_s: 100.0,
+        servers_per_node: servers,
+        ..SimSpec::default()
+    };
+    let report = sim::simulate_requests(
+        &session.problem,
+        &mm1_phi(&session),
+        &[rate],
+        vec![ArrivalTrace::constant(rate)],
+        spec,
+        11,
+    );
+    let mu_server = mu_total / servers as f64;
+    let a = rate / mu_server;
+    let wq = erlang_c(servers, a) / (servers as f64 * mu_server - rate);
+    let w = wq + 1.0 / mu_server;
+    assert!(
+        (report.mean_latency_s - w).abs() < 0.08 * w,
+        "M/M/{servers} sojourn {} vs Erlang-C {w}",
+        report.mean_latency_s
+    );
+    let node = &report.nodes[0];
+    assert!(
+        (node.mean_wait_s - wq).abs() < 0.12 * wq,
+        "M/M/{servers} wait {} vs Erlang-C {wq}",
+        node.mean_wait_s
+    );
+    assert!(
+        (node.utilization - rate / mu_total).abs() < 0.05 * (rate / mu_total),
+        "utilization {}",
+        node.utilization
+    );
+}
+
+#[test]
+fn same_seed_same_report_at_any_worker_count() {
+    // the full pipeline — OMD optimization at k workers, then replay —
+    // must produce bit-identical SimReports for every k: the worker knob
+    // only parallelizes the fused sweeps, and the sim itself is
+    // single-threaded by construction
+    let spec = ScenarioSpec::from_file(std::path::Path::new(
+        "../examples/scenarios/two_class_er.json",
+    ))
+    .unwrap();
+    let run = |workers: usize| {
+        let mut spec = spec.clone();
+        spec.workers = workers;
+        spec.sim = Some(SimSpec { horizon_s: 20.0, ..SimSpec::default() });
+        let session = spec.build().unwrap();
+        let optimized = session.routing_run("omd", 15).unwrap().finish();
+        let (_, sim) =
+            session.sim_run(4).unwrap().warm_start_from(&optimized).finish();
+        sim
+    };
+    let base = run(1);
+    assert!(base.arrivals > 0);
+    for workers in [2usize, 4] {
+        let other = run(workers);
+        assert_eq!(base, other, "SimReport diverged at {workers} workers");
+        assert_eq!(
+            base.to_json().to_string(),
+            other.to_json().to_string(),
+            "JSON dump diverged at {workers} workers"
+        );
+    }
+}
+
+#[test]
+fn trace_arrivals_track_the_breakpoints() {
+    let mut spec = ScenarioSpec::paper_default();
+    let TopologySpec::Er { n_nodes, .. } = &mut spec.topology else { unreachable!() };
+    *n_nodes = 10;
+    spec.horizon = Some(10);
+    spec.classes = vec![ClassSpec {
+        name: "surge".into(),
+        utility: "log".into(),
+        rate: RateSpec::Trace(vec![(0, 10.0), (5, 50.0)]),
+        sources: vec![],
+    }];
+    spec.sim = Some(SimSpec { horizon_s: 10.0, trace_window_s: 1.0, ..SimSpec::default() });
+    let session = spec.build().unwrap();
+    let (_, sim) = session.sim_run(1).unwrap().finish();
+    // 5 s at 10/s + 5 s at 50/s = 300 expected arrivals; 5σ band
+    let expect = 300.0;
+    let sigma = expect.sqrt();
+    assert!(
+        (sim.arrivals as f64 - expect).abs() < 5.0 * sigma,
+        "trace arrivals {} vs expected {expect}",
+        sim.arrivals
+    );
+}
+
+#[test]
+fn sim_run_streams_through_the_run_protocol() {
+    let spec = ScenarioSpec::from_file(std::path::Path::new(
+        "../examples/scenarios/two_class_er.json",
+    ))
+    .unwrap();
+    let session = spec.build().unwrap();
+    let optimized = session.routing_run("omd", 10).unwrap().finish();
+    let mut traj = Trajectory::default();
+    let (report, sim) = session
+        .sim_run(5)
+        .unwrap()
+        .warm_start_from(&optimized)
+        .observe(&mut traj)
+        .finish();
+    assert_eq!(report.algo, "sim");
+    assert_eq!(report.iterations, 5);
+    assert_eq!(report.stop, StopReason::MaxIters);
+    assert_eq!(traj.values.len(), report.iterations + 1);
+    assert_eq!(sim.in_flight, 0, "finish() drains the system");
+    assert!(sim.arrivals > 0);
+    assert!((report.objective - sim.mean_latency_s).abs() < 1e-12);
+    // windowing must not change the event history
+    let (_, one_shot) =
+        session.sim_run(1).unwrap().warm_start_from(&optimized).finish();
+    assert_eq!(sim, one_shot, "window count changed the replayed history");
+}
+
+#[test]
+fn sim_run_driven_by_a_live_allocation_run() {
+    let mut spec = ScenarioSpec::from_file(std::path::Path::new(
+        "../examples/scenarios/two_class_er.json",
+    ))
+    .unwrap();
+    spec.sim = Some(SimSpec { horizon_s: 12.0, ..SimSpec::default() });
+    let session = spec.build().unwrap();
+    let driver = session.allocation_run("omad", 100).unwrap();
+    let (report, sim) = session.sim_run(4).unwrap().drive(driver).finish();
+    assert_eq!(report.iterations, 4);
+    assert_eq!(sim.in_flight, 0);
+    assert!(sim.arrivals > 0);
+    // the driver's allocation reached the simulator: the reported Λ obeys
+    // per-class conservation
+    let wl = &session.problem.workload;
+    for (c, &(a, b)) in wl.class_spans.iter().enumerate() {
+        let sum: f64 = report.lam[a..b].iter().sum();
+        assert!(
+            (sum - wl.class_rates[c]).abs() < 1e-6,
+            "class {c}: Λ sums to {sum}, want {}",
+            wl.class_rates[c]
+        );
+    }
+}
+
+#[test]
+fn lifo_discipline_changes_waits_not_counts() {
+    let (rate, mu) = (30.0, 40.0);
+    let session = mm1_session(rate, mu);
+    let run = |discipline: sim::Discipline| {
+        let spec =
+            SimSpec { horizon_s: 1000.0, discipline, ..SimSpec::default() };
+        sim::simulate_requests(
+            &session.problem,
+            &mm1_phi(&session),
+            &[rate],
+            vec![ArrivalTrace::constant(rate)],
+            spec,
+            3,
+        )
+    };
+    let fifo = run(sim::Discipline::Fifo);
+    let lifo = run(sim::Discipline::Lifo);
+    // the service order changes, the workload does not: same arrivals and
+    // (by work conservation) matching means, but heavier LIFO tails
+    assert_eq!(fifo.arrivals, lifo.arrivals);
+    assert_eq!(fifo.completed, lifo.completed);
+    assert!(
+        lifo.p999_latency_s > fifo.p999_latency_s,
+        "LIFO p999 {} should exceed FIFO p999 {}",
+        lifo.p999_latency_s,
+        fifo.p999_latency_s
+    );
+}
+
+/// The acceptance-scale replay: ≥10⁶ requests through an OMD-optimized
+/// two-class scenario. Ignored by default (several seconds); the hotpath
+/// bench pins the events/sec floor in CI.
+#[test]
+#[ignore]
+fn million_request_replay() {
+    let mut spec = ScenarioSpec::from_file(std::path::Path::new(
+        "../examples/scenarios/two_class_er.json",
+    ))
+    .unwrap();
+    // 60 req/s × 18000 s ≈ 1.08M requests
+    spec.sim = Some(SimSpec { horizon_s: 18_000.0, ..SimSpec::default() });
+    let session = spec.build().unwrap();
+    let optimized = session.routing_run("omd", 30).unwrap().finish();
+    let t0 = std::time::Instant::now();
+    let (_, sim) = session.sim_run(1).unwrap().warm_start_from(&optimized).finish();
+    let dt = t0.elapsed().as_secs_f64();
+    assert!(sim.arrivals >= 1_000_000, "only {} requests", sim.arrivals);
+    assert_eq!(sim.in_flight, 0);
+    println!(
+        "replayed {} requests / {} events in {dt:.2}s ({:.0} events/s)",
+        sim.arrivals,
+        sim.events,
+        sim.events as f64 / dt
+    );
+}
