@@ -14,12 +14,20 @@
 //! * the **session-batched SoA** kernels vs the scalar per-session
 //!   kernels on a multi-class scenario (12 sessions, blocks of width 4):
 //!   `mc{25,40}/engine_fused_prepare_{batched,scalar}_w{1,4}` — batched
-//!   must be at least as fast (asserted; results bit-identical),
+//!   must be at least as fast (asserted; results bit-identical) — and,
+//!   under `--features simd`, the explicit 4-lane kernels
+//!   (`mc{25,40}/engine_fused_prepare_simd_w{1,4}`, asserted to be at
+//!   least as fast as batched within noise, bit-identical),
 //! * the **incremental dirty-session path** on a 40-node clustered fleet
 //!   (20 per-cluster task classes, hardened post-convergence φ):
 //!   `clusters40/engine_prepare_dirty_block` re-evaluates a single-class
 //!   λ perturbation ≥ 3× faster than `clusters40/engine_prepare_full`
-//!   (asserted; the delta state stays bit-identical to a full sweep), and
+//!   (asserted; the delta state stays bit-identical to a full sweep),
+//!   plus the **row-sparse OMD probe loop** on the same fleet
+//!   (`clusters40/omd_probe_loop_{dense,sparse}`): a warmed
+//!   [`SingleStepOracle`] probe pair through `observe_dirty` with
+//!   `sparse_tol` armed must beat the dense `observe` loop ≥ 2×
+//!   (asserted), and
 //! * full `omd_full_iteration` / `sgp_engine_iteration` solver steps, with
 //!   a faithfully reconstructed legacy OMD iteration as the baseline (the
 //!   SGP row's "engine" name puts it under the CI bench-regression gate,
@@ -33,7 +41,9 @@
 //! effect at micro scale). Run with `--quick` for the CI smoke
 //! configuration.
 
+use jowr::allocation::oracle::SingleStepOracle;
 use jowr::model::flow::{self, Phi};
+use jowr::model::utility::family;
 use jowr::prelude::*;
 use jowr::routing::marginal;
 use jowr::util::bench::Bencher;
@@ -191,6 +201,19 @@ fn main() {
             b.bench(&format!("mc{n}/engine_fused_prepare_batched_w{workers}"), || {
                 batched.prepare(problem, &phi, &lam)
             });
+            // explicit 4-lane kernels on the padded layout (bit-identical
+            // to both scalar and batched; see the reduction-order contract
+            // in the engine module docs)
+            #[cfg(feature = "simd")]
+            {
+                let mut simd =
+                    FlowEngine::new().with_workers(workers).with_batch_mode(BatchMode::Simd);
+                let cv = simd.prepare(problem, &phi, &lam);
+                assert_eq!(cv.to_bits(), cs.to_bits(), "simd must agree bitwise");
+                b.bench(&format!("mc{n}/engine_fused_prepare_simd_w{workers}"), || {
+                    simd.prepare(problem, &phi, &lam)
+                });
+            }
         }
     }
 
@@ -235,6 +258,42 @@ fn main() {
         let c_delta = delta.prepare_dirty(problem, &phi, &lam_b, &mask);
         let c_full = FlowEngine::new().prepare(problem, &phi, &lam_b);
         assert_eq!(c_delta.to_bits(), c_full.to_bits(), "dirty path must stay bit-identical");
+    }
+
+    // row-sparse OMD probe loop on the same clustered fleet: a warmed
+    // single-step oracle alternating a ±probe pair on one class block.
+    // The dense row drives plain `observe` (full prepare + full row loop +
+    // full post-step sweep); the sparse row drives `observe_dirty` with
+    // the class mask and `sparse_tol` armed, so the pre-step sweep covers
+    // mask ∪ pending φ rows, converged rows skip their exp-heavy update,
+    // and the post-step cost re-sweeps only the touched rows
+    {
+        let session = clustered_fleet_session();
+        let problem = session.problem.clone();
+        let n_sess = problem.n_sessions();
+        let utils = family("log", n_sess, 60.0).expect("log utility family");
+        let mut dense = SingleStepOracle::new(problem.clone(), utils.clone(), 0.5);
+        let lam0 = dense.uniform_allocation();
+        let (s0, s1, _) = dense.blocks()[0];
+        assert!(s1 - s0 >= 2, "the probe pair needs a class block of ≥ 2 sessions");
+        let mut lam_up = lam0.clone();
+        lam_up[s0] += 0.3;
+        lam_up[s0 + 1] -= 0.3;
+        let mask = SessionMask::block(n_sess, s0, s1);
+        for _ in 0..60 {
+            dense.observe(&lam0); // warm: routing concentrates per cluster
+        }
+        b.bench("clusters40/omd_probe_loop_dense", || {
+            dense.observe(&lam_up) + dense.observe(&lam0)
+        });
+        let mut sparse = SingleStepOracle::new(problem, utils, 0.5);
+        sparse.router.sparse_tol = 1e-12;
+        for _ in 0..60 {
+            sparse.observe(&lam0);
+        }
+        b.bench("clusters40/omd_probe_loop_sparse", || {
+            sparse.observe_dirty(&lam_up, &mask) + sparse.observe_dirty(&lam0, &mask)
+        });
     }
 
     // request-level DES replay: drive the two-class paper scenario through
@@ -325,6 +384,13 @@ fn main() {
                 speedups
                     .push((format!("mc{n}/batched_vs_scalar_w{workers}"), scalar / batched));
             }
+            // absent without --features simd (the row doesn't exist)
+            if let (Some(batched), Some(simd)) = (
+                median(&b, &format!("mc{n}/engine_fused_prepare_batched_w{workers}")),
+                median(&b, &format!("mc{n}/engine_fused_prepare_simd_w{workers}")),
+            ) {
+                speedups.push((format!("mc{n}/simd_vs_batched_w{workers}"), batched / simd));
+            }
         }
     }
     if let (Some(full), Some(delta)) = (
@@ -332,6 +398,12 @@ fn main() {
         median(&b, "clusters40/engine_prepare_dirty_block"),
     ) {
         speedups.push(("clusters40/dirty_vs_full".to_string(), full / delta));
+    }
+    if let (Some(dense), Some(sparse)) = (
+        median(&b, "clusters40/omd_probe_loop_dense"),
+        median(&b, "clusters40/omd_probe_loop_sparse"),
+    ) {
+        speedups.push(("clusters40/omd_probe_sparse_vs_dense".to_string(), dense / sparse));
     }
     // not a ratio: raw DES throughput, floored by the CI regression gate
     speedups.push(("sim_replay_events_per_sec".to_string(), sim_events_per_sec));
@@ -418,6 +490,19 @@ fn main() {
                      scalar prepare ({scalar:.3e}s) at mc{n}, workers={workers}"
                 );
             }
+            // with --features simd the explicit kernels must be at least
+            // as fast as the auto-vectorized batched kernels within noise
+            if let (Some(batched), Some(simd)) = (
+                median(&b, &format!("mc{n}/engine_fused_prepare_batched_w{workers}")),
+                median(&b, &format!("mc{n}/engine_fused_prepare_simd_w{workers}")),
+            ) {
+                println!("mc{n} simd vs batched at w{workers}: {:.2}x", batched / simd);
+                assert!(
+                    simd <= batched * 1.05,
+                    "simd prepare ({simd:.3e}s) must not be slower than the \
+                     batched prepare ({batched:.3e}s) at mc{n}, workers={workers}"
+                );
+            }
         }
     }
     // a single-block perturbation through the dirty path must beat the
@@ -431,6 +516,20 @@ fn main() {
             full / delta >= 3.0,
             "prepare_dirty ({delta:.3e}s) must be ≥ 3x faster than a full \
              prepare ({full:.3e}s) on the clustered fleet"
+        );
+    }
+    // the row-sparse probe loop must beat the dense loop by ≥ 2x on the
+    // clustered fleet (the mask touches 2 of 40 sessions; converged rows
+    // skip their exp-heavy multiplicative update under sparse_tol)
+    if let (Some(dense), Some(sparse)) = (
+        median(&b, "clusters40/omd_probe_loop_dense"),
+        median(&b, "clusters40/omd_probe_loop_sparse"),
+    ) {
+        println!("clusters40 sparse probe loop vs dense: {:.2}x", dense / sparse);
+        assert!(
+            dense / sparse >= 2.0,
+            "the row-sparse probe loop ({sparse:.3e}s) must be ≥ 2x faster than \
+             the dense observe loop ({dense:.3e}s) on the clustered fleet"
         );
     }
     println!("hotpath OK");

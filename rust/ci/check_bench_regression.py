@@ -2,38 +2,48 @@
 """CI bench-regression gate for BENCH_hotpath.json.
 
 Compares the engine rows (bench names containing any ``--filter``
-substring, default ``engine,dirty``) of a fresh ``BENCH_hotpath.json``
-against the committed baseline and fails (exit 1) if any row's median
-regresses by more than ``--tolerance`` (default 20%). Non-engine rows
-(the deliberately slow reference sweeps, SGP, the legacy reconstruction)
+substring, default ``engine,dirty,simd,omd``) of a fresh
+``BENCH_hotpath.json`` against the committed baseline and fails (exit 1)
+if any row's median regresses by more than ``--tolerance`` (default
+20%). Unmatched rows (the deliberately slow ``ref_*`` reference sweeps)
 are reported but never gate.
 
 Independently of the baseline, ``--require NAME:FLOOR`` (repeatable)
 checks the fresh file's ``speedups`` section: the named ratio must exist
-and be at least FLOOR. The defaults pin PR 5's two structural claims —
+and be at least FLOOR. The defaults pin the structural perf claims —
 the session-batched SoA kernels at least match the scalar kernels on the
-multi-class configuration, and a single-block ``prepare_dirty`` beats a
-full prepare by ≥ 3× on the clustered fleet — plus a raw-throughput
+multi-class configuration, the explicit SIMD kernels at least match the
+batched kernels (``mc{25,40}/simd_vs_batched_w{1,4}``; CI runs the bench
+with ``--features simd`` so these rows exist), a single-block
+``prepare_dirty`` beats a full prepare by ≥ 3× on the clustered fleet,
+and the row-sparse OMD probe loop beats the dense observe loop by ≥ 2×
+(``clusters40/omd_probe_sparse_vs_dense``) — plus a raw-throughput
 floor on the request-level DES replay (``sim_replay_events_per_sec`` is
 events/sec, not a ratio). (The bench binary asserts
 the same bounds; the gate re-checks them from the artifact so a stale or
 hand-edited JSON cannot slip through.) Pass ``--no-default-requires`` to
 drop them (e.g. for older artifacts).
 
-Bootstrap: the committed baseline starts life as a placeholder with an
-empty ``results`` list (this repo has no local Rust toolchain — CI is the
-only place the bench runs). While the baseline is empty, the
-baseline-relative gate passes and prints instructions: download the
-``bench-hotpath`` artifact from the first green run and commit it as
-``rust/ci/BENCH_baseline.json``. The ``--require`` checks still run —
-they need only the fresh artifact. Rows present in only one file are
-warned about (renames/additions), not failed, so the gate never blocks
-intentional bench evolution — refresh the baseline in the same PR
-instead.
+Bootstrap and arming procedure (this repo has no local Rust toolchain —
+CI is the only place the bench runs):
+
+1. The committed baseline starts life as a placeholder with an empty
+   ``results`` list. While the baseline is empty, the baseline-relative
+   gate passes and prints instructions; the ``--require`` floors still
+   run — they need only the fresh artifact.
+2. After the first green CI run on a bench-affecting change, open that
+   run's "print bench artifact" step (or download the ``bench-hotpath``
+   artifact), copy the JSON verbatim, and commit it as
+   ``rust/ci/BENCH_baseline.json`` — the gate is now armed.
+3. When bench rows are renamed, added, or a deliberate perf change
+   lands, refresh the baseline the same way **in the same PR**. Rows
+   present in only one file are warned about (renames/additions), not
+   failed, so the gate never blocks intentional bench evolution.
 
 Usage:
     check_bench_regression.py BASELINE FRESH [--tolerance 0.20]
-        [--filter engine,dirty] [--require clusters40/dirty_vs_full:3.0]
+        [--filter engine,dirty,simd,omd]
+        [--require clusters40/dirty_vs_full:3.0]
 """
 
 from __future__ import annotations
@@ -48,7 +58,15 @@ DEFAULT_REQUIRES = [
     ("mc25/batched_vs_scalar_w4", 0.95),
     ("mc40/batched_vs_scalar_w1", 0.95),
     ("mc40/batched_vs_scalar_w4", 0.95),
+    # explicit SIMD kernels vs the batched kernels (rows exist because CI
+    # benches with --features simd; 0.95 = "at least as fast within noise")
+    ("mc25/simd_vs_batched_w1", 0.95),
+    ("mc25/simd_vs_batched_w4", 0.95),
+    ("mc40/simd_vs_batched_w1", 0.95),
+    ("mc40/simd_vs_batched_w4", 0.95),
     ("clusters40/dirty_vs_full", 3.0),
+    # row-sparse OMD probe loop vs the dense observe loop
+    ("clusters40/omd_probe_sparse_vs_dense", 2.0),
     # not a ratio: raw DES replay throughput (events/sec) from the sim bench
     ("sim_replay_events_per_sec", 200_000.0),
 ]
@@ -98,9 +116,9 @@ def main() -> int:
     ap.add_argument("fresh", help="freshly produced BENCH_hotpath.json")
     ap.add_argument("--tolerance", type=float, default=0.20,
                     help="allowed relative slowdown before failing (default 0.20)")
-    ap.add_argument("--filter", default="engine,dirty",
+    ap.add_argument("--filter", default="engine,dirty,simd,omd",
                     help="comma-separated substrings selecting the gated rows "
-                         "(default 'engine,dirty')")
+                         "(default 'engine,dirty,simd,omd')")
     ap.add_argument("--require", type=parse_require, action="append", default=[],
                     metavar="NAME:FLOOR",
                     help="require fresh speedups[NAME] >= FLOOR (repeatable; "

@@ -1,0 +1,54 @@
+#!/usr/bin/env bash
+# Profile-guided-optimization build recipe for the jowr hot path.
+#
+# Instruments a release build, drives it with the hotpath bench (the
+# representative workload: fused sweeps, SIMD kernels, dirty-session
+# deltas, row-sparse OMD probe loops), merges the profiles, and rebuilds
+# with the profile applied. Requires rustup's llvm-tools (for
+# llvm-profdata) next to the stable toolchain:
+#
+#     rustup component add llvm-tools
+#
+# Run from the rust/ crate root:
+#
+#     ci/pgo_build.sh [extra cargo args...]
+#
+# The optimized binaries land in target/release as usual; re-run the
+# bench afterwards to measure the PGO delta:
+#
+#     cargo bench --bench hotpath --features simd -- --quick
+#
+# Notes:
+# * Results stay bit-identical — PGO only reorders/optimizes codegen; it
+#   never changes float semantics (no fast-math is enabled anywhere).
+# * The profile directory is scratch state; it is recreated on each run
+#   and safe to delete.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+PGO_DIR="${PGO_DIR:-$PWD/target/pgo-profiles}"
+rm -rf "$PGO_DIR"
+mkdir -p "$PGO_DIR"
+
+# locate llvm-profdata from the active toolchain's llvm-tools component
+HOST=$(rustc -vV | sed -n 's/^host: //p')
+SYSROOT=$(rustc --print sysroot)
+PROFDATA="$SYSROOT/lib/rustlib/$HOST/bin/llvm-profdata"
+if [ ! -x "$PROFDATA" ]; then
+    echo "error: $PROFDATA not found — run: rustup component add llvm-tools" >&2
+    exit 1
+fi
+
+echo "=== step 1/3: instrumented build + profiling run (hotpath bench) ==="
+RUSTFLAGS="-Cprofile-generate=$PGO_DIR" \
+    cargo bench --bench hotpath --features simd "$@" -- --quick
+
+echo "=== step 2/3: merging profiles ==="
+"$PROFDATA" merge -o "$PGO_DIR/merged.profdata" "$PGO_DIR"
+
+echo "=== step 3/3: optimized rebuild with the merged profile ==="
+RUSTFLAGS="-Cprofile-use=$PGO_DIR/merged.profdata" \
+    cargo build --release --features simd "$@"
+
+echo "PGO build complete (profile: $PGO_DIR/merged.profdata)"

@@ -84,7 +84,10 @@ impl Allocator for GsOma {
         let blocks = oracle.blocks();
         let mut grad = vec![0.0; lam.len()];
         // consecutive probes differ only inside one class block; the diff
-        // mask lets stateful oracles delta-evaluate (bit-identical values)
+        // mask lets stateful oracles delta-evaluate (bit-identical values).
+        // With the row-sparse OMD router this makes the whole warmed probe
+        // loop O(touched): the pre-step sweep covers the mask ∪ pending φ
+        // rows and the post-step cost covers the touched rows only
         let mut prev: Option<Vec<f64>> = None;
         for &(s0, s1, rate) in &blocks {
             for w in s0..s1 {

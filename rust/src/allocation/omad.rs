@@ -39,7 +39,9 @@ impl Allocator for Omad {
         let mut grad = vec![0.0; lam.len()];
         // consecutive probes differ only inside one class block: the diff
         // mask lets the single-step oracle's routing step delta-evaluate
-        // (O(block) instead of O(W·E); values bit-identical)
+        // (O(block) instead of O(W·E); values bit-identical). The OMD
+        // router's row-sparse updates extend that to the post-step cost —
+        // a warmed probe loop re-sweeps only the rows that actually moved
         let mut prev: Option<Vec<f64>> = None;
         for &(s0, s1, rate) in &blocks {
             for w in s0..s1 {

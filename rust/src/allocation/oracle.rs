@@ -218,10 +218,13 @@ impl SingleStepOracle {
 
     /// The observation body shared by the full and dirty entry points:
     /// one mirror-descent routing iteration on the persistent state, then
-    /// one fused forward sweep for the post-step cost — reusing the
-    /// router's engine workspaces (no second workspace set). With a dirty
-    /// mask, the pre-update evaluation inside the routing step re-sweeps
-    /// only the masked sessions (bit-identical either way).
+    /// one fused sweep for the post-step cost — reusing the router's
+    /// engine workspaces (no second workspace set). With a dirty mask,
+    /// the pre-update evaluation inside the routing step re-sweeps only
+    /// the masked (plus router-touched) sessions, and the post-step cost
+    /// goes through [`OmdRouter::post_step_cost`], which re-syncs the
+    /// engine O(touched rows) — so a warmed probe loop is incremental end
+    /// to end (bit-identical either way).
     fn observe_impl(&mut self, lam: &[f64], dirty: Option<&SessionMask>) -> f64 {
         self.observations += 1;
         self.routing_iters += 1;
@@ -246,7 +249,10 @@ impl SingleStepOracle {
                 self.router.step(&self.problem, lam, &mut self.phi);
             }
         }
-        let cost = self.router.engine_mut().evaluate_cost(&self.problem, &self.phi, lam);
+        let cost = match dirty {
+            Some(_) => self.router.post_step_cost(&self.problem, &self.phi, lam),
+            None => self.router.engine_mut().evaluate_cost(&self.problem, &self.phi, lam),
+        };
         match &mut self.last_lam {
             Some(buf) if buf.len() == lam.len() => buf.copy_from_slice(lam),
             slot => *slot = Some(lam.to_vec()),

@@ -400,9 +400,10 @@ impl<E: InferenceEngine> MeasuredOracle<E> {
     /// one routing iteration on the served state, the analytic-cost
     /// telemetry sweep, then one simulated serving window. With a dirty
     /// mask, the pre-update evaluation inside the routing step re-sweeps
-    /// only the masked sessions (bit-identical either way); the serving
-    /// window itself always replays every session — requests don't know
-    /// which λ entries moved.
+    /// only the masked sessions, and the telemetry sweep re-runs only the
+    /// masked ∪ router-touched rows ([`Router::touched_sessions`]) —
+    /// bit-identical either way. The serving window itself always replays
+    /// every session — requests don't know which λ entries moved.
     fn observe_impl(&mut self, lam: &[f64], dirty: Option<&SessionMask>) -> f64 {
         self.observations += 1;
         self.routing_iters += 1;
@@ -428,9 +429,24 @@ impl<E: InferenceEngine> MeasuredOracle<E> {
             }
         }
         // one fused forward sweep at the post-step state: the analytic
-        // congestion the flow model predicts for the window we simulate
-        self.last_cost =
-            Some(self.flow_engine.evaluate_cost(&self.problem, &self.phi, lam));
+        // congestion the flow model predicts for the window we simulate.
+        // On the dirty path, everything that moved since this telemetry
+        // engine's previous sweep is the caller's λ-mask plus the φ rows
+        // the router just rewrote — their union is a sound dirty set.
+        self.last_cost = Some(match dirty {
+            Some(mask) => {
+                let n = self.problem.net.n_sessions();
+                match self.router.touched_sessions() {
+                    Some(touched) if mask.len() == n && touched.len() == n => {
+                        let mut eff = mask.clone();
+                        eff.union_with(touched);
+                        self.flow_engine.evaluate_cost_dirty(&self.problem, &self.phi, lam, &eff)
+                    }
+                    _ => self.flow_engine.evaluate_cost(&self.problem, &self.phi, lam),
+                }
+            }
+            None => self.flow_engine.evaluate_cost(&self.problem, &self.phi, lam),
+        });
         match &mut self.last_lam {
             Some(buf) if buf.len() == lam.len() => buf.copy_from_slice(lam),
             slot => *slot = Some(lam.to_vec()),
@@ -486,13 +502,17 @@ impl<E: InferenceEngine> UtilityOracle for MeasuredOracle<E> {
         self.problem = problem.clone();
         self.phi = Phi::uniform(&self.problem.net);
         // the λ layout may have changed; drop the dirty-contract baseline
+        // and the telemetry engine's delta state with it
         self.last_lam = None;
+        self.flow_engine.invalidate();
     }
 
     fn on_workload_change(&mut self, problem: &Problem) {
-        // a pure rate change keeps the served routing state warm
+        // a pure rate change keeps the served routing state warm, but the
+        // telemetry engine's cached per-session flows are stale
         self.problem = problem.clone();
         self.last_lam = None;
+        self.flow_engine.invalidate();
     }
 
     fn current_phi(&self) -> Option<&Phi> {

@@ -150,6 +150,7 @@ impl FlowEngine {
             && self.w_cnt == net.n_sessions()
             && self.bound_lanes == net.csr.n_lanes()
             && self.bound_slots == net.batch.n_slots
+            && self.bound_cols == net.batch.n_cols
     }
 
     /// Delta replacement for [`FlowEngine::prepare`]: re-sweep only the
@@ -206,6 +207,7 @@ impl FlowEngine {
         // the dirty paths keep all state session-major; a later full
         // reverse fallback must not reuse a stale batched φ gather
         self.last_batched = false;
+        self.last_simd = false;
 
         // 1. re-run the forward recurrence for each dirty session and
         //    collect the touched-edge superset (every lane of a dirty
@@ -246,6 +248,20 @@ impl FlowEngine {
                 self.edge_vals[e] =
                     problem.edge_kind(e).value(sum, net.graph.edge(e).capacity);
                 repriced.push(e);
+            }
+        }
+        // memo-skip attestation (see `session_delta_clean`): a masked
+        // session's t/λ changed; a repriced edge changes D' — and the
+        // only clean sessions whose ∂D/∂r(w) can move are those carrying
+        // a repriced lane (reverse_session_incremental seeds exactly
+        // there) — so marking mask ∪ sessions_of_edge(repriced) covers
+        // every session whose update inputs can differ bitwise
+        for w in dirty.iter() {
+            self.delta_clean[w] = false;
+        }
+        for &e in &repriced {
+            for &s in csr.sessions_of_edge(e) {
+                self.delta_clean[s as usize] = false;
             }
         }
         self.touched = touched;

@@ -57,6 +57,38 @@
 //! sessions (multi-class), keeping single-class networks on the scalar
 //! path unchanged.
 //!
+//! ## Explicit SIMD kernels (`--features simd`)
+//!
+//! With the `simd` cargo feature, [`BatchMode::Simd`] — picked by `Auto`
+//! when some block is ≥ 4 sessions wide — runs the batched hot loops on a
+//! dependency-free, hand-rolled 4-lane f64 vector type (`engine::simd`,
+//! stable Rust, no `std::simd`): the eq. 1/4 forward recurrence
+//! (`forward_block`) and the eq. 20–21 reverse broadcast (`reverse_block`)
+//! execute the session dimension four columns at a time, and the eq. 4
+//! fixed-order lane reduction plus the P2 pricing loop of `price_edges`
+//! run as 4-wide unrolled loops. So that every session-dimension loop is
+//! whole vectors with no remainder tail, the batched layout pads each
+//! block's workspace stride up to a multiple of 4
+//! ([`crate::graph::augmented::LANE_PAD`]); padding columns carry `φ = 0`
+//! and never touch logical results.
+//!
+//! **Reduction-order contract.** SIMD mode is **bit-identical** to the
+//! scalar batched path — no tolerance is needed anywhere:
+//!
+//! * the eq. 1 recurrence and eq. 20–21 broadcast vectorize only *across*
+//!   independent session columns; each column's chain of multiplies and
+//!   adds keeps its exact scalar order;
+//! * the eq. 4 cross-session flow reduction keeps the full sweep's
+//!   ascending-session, lane-order accumulation — within one session the
+//!   lanes address distinct edges, so the 4-wide unroll touches disjoint
+//!   accumulators and commutes bitwise;
+//! * `price_edges` keeps scalar transcendentals (a vector `exp` could not
+//!   reproduce libm bit for bit) and the fixed union-edge sum order; only
+//!   its loads are unrolled.
+//!
+//! Asserted over every cost family, class mix, worker count, and
+//! remainder width by `tests/test_simd_and_sparse.rs`.
+//!
 //! ## Incremental dirty-session sweeps
 //!
 //! GS-OMA's two-point gradient sampling and OMAD's per-class mirror step
@@ -85,12 +117,14 @@
 //! calls whose `φ` only changes inside the mask, e.g. re-evaluating λ
 //! perturbations at a fixed routing state — gets the full effect
 //! (≥ 3× at 40 nodes; asserted by `benches/hotpath.rs`'s
-//! `clusters40/engine_prepare_dirty_block` row). The single-step oracle's
-//! probe path is *partially* incremental: the pre-update evaluation inside
-//! its routing step cuts the eq. 1 forward work to the dirty block, but
-//! the mirror update then touches every `φ` row, so the post-step cost
-//! and the next marginal broadcast still span all sessions — roughly one
-//! of the three full passes per observation becomes O(block).
+//! `clusters40/engine_prepare_dirty_block` row). With the row-sparse
+//! mirror updates in [`crate::routing::omd`] (write-compare scatter plus
+//! converged-row skips, emitting the touched rows as a [`SessionMask`]),
+//! the single-step oracle's probe loop is incremental end to end: the
+//! pre-update evaluation, the post-step cost, and the next marginal
+//! broadcast all run O(touched ∪ dirty) once the routing state has
+//! settled (the `clusters40/omd_probe_loop_{dense,sparse}` bench rows
+//! assert the ≥ 2× end-to-end win).
 //!
 //! ## Determinism and parallelism
 //!
@@ -126,10 +160,12 @@
 
 pub mod dirty;
 pub mod pool;
+#[cfg(feature = "simd")]
+pub(crate) mod simd;
 
 pub use dirty::SessionMask;
 
-use crate::graph::augmented::{AugmentedNet, BatchCsr, CsrRow, FlowCsr};
+use crate::graph::augmented::{AugmentedNet, BatchCsr, CsrRow, FlowCsr, LANE_PAD};
 use crate::model::flow::Phi;
 use crate::model::Problem;
 use pool::WorkerPool;
@@ -138,13 +174,20 @@ use pool::WorkerPool;
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum BatchMode {
     /// Session-batched SoA sweeps whenever some version block holds ≥ 2
-    /// sessions (multi-class workloads); scalar per-session sweeps
+    /// sessions (multi-class workloads) — with the `simd` cargo feature
+    /// on, the explicit SIMD kernels whenever some block is at least one
+    /// full vector (4 sessions) wide. Scalar per-session sweeps
     /// otherwise. The default.
     #[default]
     Auto,
-    /// Always the batched kernels (bench/testing knob; single-session
-    /// blocks degenerate to width-1 loops).
+    /// Always the scalar-inner-loop batched kernels (bench/testing knob;
+    /// single-session blocks degenerate to width-1 loops).
     Batched,
+    /// The batched kernels with the explicit 4-lane SIMD inner loops.
+    /// Requires the `simd` cargo feature — without it this silently runs
+    /// the scalar batched kernels instead. Bit-identical to `Batched`
+    /// either way (see the module docs' reduction-order contract).
+    Simd,
     /// Always the scalar per-session kernels (the pre-batching hot path,
     /// kept as the bench baseline).
     Scalar,
@@ -171,6 +214,9 @@ pub struct FlowEngine {
     /// sweep must reuse the same `φ` gather; the dirty paths are always
     /// session-major.)
     last_batched: bool,
+    /// Did the last forward pass run the explicit SIMD kernels? (The
+    /// reverse sweep mirrors the forward kernel choice.)
+    last_simd: bool,
     /// Lazily spawned persistent workers (`effective workers − 1` threads;
     /// the caller thread runs the first chunk itself).
     pool: Option<WorkerPool>,
@@ -181,6 +227,9 @@ pub struct FlowEngine {
     bound_lanes: usize,
     /// Bound batched slot count (workspace identity; see `bind`).
     bound_slots: usize,
+    /// Bound batched workspace column count (workspace identity; see
+    /// `bind` — `Σ` padded block widths, sensitive to the lane padding).
+    bound_cols: usize,
     /// `t[w*n_nodes + i]` — session ingress rates (eq. 1).
     t: Vec<f64>,
     /// `r[w*n_nodes + i]` — node marginals `∂D/∂r_i(w)` (eqs. 20–21).
@@ -218,6 +267,14 @@ pub struct FlowEngine {
     /// Dirty-path scratch: per-session reverse recompute marks.
     rev_must: Vec<bool>,
     mark_buf: Vec<usize>,
+    /// Per-session attestation for `routing::omd`'s memo-skipped rows:
+    /// `delta_clean[w]` means every engine quantity session `w`'s mirror
+    /// update reads (`t(w)`, `D'` on its lanes, `∂D/∂r(w)`) is bitwise
+    /// unchanged since the router's last
+    /// [`FlowEngine::reset_delta_clean`]. Full sweeps clear it wholesale
+    /// (they cannot attest anything); dirty sweeps clear exactly the
+    /// masked sessions plus every session carrying a repriced edge.
+    delta_clean: Vec<bool>,
     /// Total network cost at the last forward sweep.
     cost: f64,
 }
@@ -238,12 +295,14 @@ impl Clone for FlowEngine {
             use_pool: self.use_pool,
             batch_mode: self.batch_mode,
             last_batched: self.last_batched,
+            last_simd: self.last_simd,
             pool: None,
             n_nodes: self.n_nodes,
             n_edges: self.n_edges,
             w_cnt: self.w_cnt,
             bound_lanes: self.bound_lanes,
             bound_slots: self.bound_slots,
+            bound_cols: self.bound_cols,
             t: self.t.clone(),
             r: self.r.clone(),
             sess_flows: self.sess_flows.clone(),
@@ -262,6 +321,7 @@ impl Clone for FlowEngine {
             repriced: self.repriced.clone(),
             rev_must: self.rev_must.clone(),
             mark_buf: self.mark_buf.clone(),
+            delta_clean: self.delta_clean.clone(),
             cost: self.cost,
         }
     }
@@ -276,12 +336,14 @@ impl FlowEngine {
             use_pool: true,
             batch_mode: BatchMode::Auto,
             last_batched: false,
+            last_simd: false,
             pool: None,
             n_nodes: 0,
             n_edges: 0,
             w_cnt: 0,
             bound_lanes: 0,
             bound_slots: 0,
+            bound_cols: 0,
             t: Vec::new(),
             r: Vec::new(),
             sess_flows: Vec::new(),
@@ -300,6 +362,7 @@ impl FlowEngine {
             repriced: Vec::new(),
             rev_must: Vec::new(),
             mark_buf: Vec::new(),
+            delta_clean: Vec::new(),
             cost: 0.0,
         }
     }
@@ -363,6 +426,7 @@ impl FlowEngine {
     pub fn invalidate(&mut self) {
         self.flows_ready = false;
         self.marg_synced = false;
+        self.delta_clean.iter_mut().for_each(|v| *v = false);
     }
 
     /// Spawn (or grow) the persistent pool for `workers` total workers.
@@ -385,31 +449,36 @@ impl FlowEngine {
     /// state (see [`FlowEngine::invalidate`]).
     pub fn bind(&mut self, net: &AugmentedNet) {
         let (nn, ne, wc) = (net.n_nodes(), net.graph.n_edges(), net.n_sessions());
-        let (lanes, slots) = (net.csr.n_lanes(), net.batch.n_slots);
+        let (lanes, slots, cols) = (net.csr.n_lanes(), net.batch.n_slots, net.batch.n_cols);
         if self.n_nodes != nn
             || self.n_edges != ne
             || self.w_cnt != wc
             || self.bound_lanes != lanes
             || self.bound_slots != slots
+            || self.bound_cols != cols
         {
             self.n_nodes = nn;
             self.n_edges = ne;
             self.w_cnt = wc;
             self.bound_lanes = lanes;
             self.bound_slots = slots;
+            self.bound_cols = cols;
             self.t = vec![0.0; wc * nn];
             self.r = vec![0.0; wc * nn];
             self.sess_flows = vec![0.0; wc * ne];
             self.flows = vec![0.0; ne];
             self.dprime = vec![0.0; ne];
             self.edge_vals = vec![0.0; ne];
-            self.t_blk = vec![0.0; wc * nn];
-            self.r_blk = vec![0.0; wc * nn];
+            // batched node-state and scratch are sized by the *padded*
+            // column total (`cols ≥ wc` under the `simd` feature)
+            self.t_blk = vec![0.0; cols * nn];
+            self.r_blk = vec![0.0; cols * nn];
             self.phi_blk = vec![0.0; slots];
             self.f_blk = vec![0.0; slots];
-            self.blk_scratch = vec![0.0; wc];
+            self.blk_scratch = vec![0.0; cols];
             self.edge_flag = vec![false; ne];
             self.rev_must = vec![false; nn];
+            self.delta_clean = vec![false; wc];
             self.touched.clear();
             self.repriced.clear();
             self.mark_buf.clear();
@@ -430,12 +499,25 @@ impl FlowEngine {
         requested.clamp(1, n_units.max(1))
     }
 
-    /// Should this sweep run the batched kernels?
-    fn decide_batched(&self, net: &AugmentedNet) -> bool {
+    /// Kernel selection for this sweep: `(batched, simd)`. `simd` is only
+    /// ever `true` when `batched` is and the `simd` cargo feature is
+    /// compiled in; `Auto` requires at least one full vector of sessions
+    /// in some block before paying the SIMD dispatch.
+    fn decide_kernels(&self, net: &AugmentedNet) -> (bool, bool) {
         match self.batch_mode {
-            BatchMode::Auto => net.batch.max_width() >= 2,
-            BatchMode::Batched => !net.batch.blocks.is_empty(),
-            BatchMode::Scalar => false,
+            BatchMode::Auto => {
+                if cfg!(feature = "simd") && net.batch.max_width() >= LANE_PAD.max(2) {
+                    (true, true)
+                } else {
+                    (net.batch.max_width() >= 2, false)
+                }
+            }
+            BatchMode::Batched => (!net.batch.blocks.is_empty(), false),
+            BatchMode::Simd => {
+                let run = !net.batch.blocks.is_empty();
+                (run, run && cfg!(feature = "simd"))
+            }
+            BatchMode::Scalar => (false, false),
         }
     }
 
@@ -448,16 +530,31 @@ impl FlowEngine {
         let net = &problem.net;
         self.bind(net);
         assert_eq!(lam.len(), self.w_cnt);
-        let batched = self.decide_batched(net);
+        // a full sweep cannot attest that any session's update inputs
+        // survived bitwise — drop the whole memo-skip epoch
+        self.delta_clean.iter_mut().for_each(|v| *v = false);
+        let (batched, simd) = self.decide_kernels(net);
         self.last_batched = batched;
+        self.last_simd = simd;
         if batched {
-            self.forward_pass_batched(net, phi, lam);
+            self.forward_pass_batched(net, phi, lam, simd);
             scatter_block_state(&net.batch, self.n_nodes, &self.t_blk, &mut self.t);
+            #[cfg(feature = "simd")]
+            if simd {
+                self.reduce_flows_simd(&net.csr, &net.batch);
+            } else {
+                self.reduce_flows_batched(&net.csr, &net.batch);
+            }
+            #[cfg(not(feature = "simd"))]
             self.reduce_flows_batched(&net.csr, &net.batch);
         } else {
             self.forward_pass_scalar(net, phi, lam);
             self.reduce_flows_scalar(&net.csr);
         }
+        #[cfg(feature = "simd")]
+        let total =
+            if simd { self.price_edges_simd(problem) } else { self.price_edges(problem) };
+        #[cfg(not(feature = "simd"))]
         let total = self.price_edges(problem);
         self.cost = total;
         self.flows_ready = true;
@@ -491,8 +588,9 @@ impl FlowEngine {
 
     /// Session-batched forward pass: one unit per version block, `φ`
     /// gathered lane-major, inner loops contiguous over the session
-    /// dimension.
-    fn forward_pass_batched(&mut self, net: &AugmentedNet, phi: &Phi, lam: &[f64]) {
+    /// dimension (the explicit SIMD kernel when `simd` is set — same
+    /// units, same layout, vectorized inner loops).
+    fn forward_pass_batched(&mut self, net: &AugmentedNet, phi: &Phi, lam: &[f64], simd: bool) {
         let nn = self.n_nodes;
         let batch = &net.batch;
         let workers = self.effective_workers(batch.blocks.len());
@@ -504,7 +602,7 @@ impl FlowEngine {
         let mut s_rest = self.blk_scratch.as_mut_slice();
         let mut units: Vec<ForwardBlockUnit<'_>> = Vec::with_capacity(batch.blocks.len());
         for (b, blk) in batch.blocks.iter().enumerate() {
-            let (wdt, n_lanes) = (blk.width(), blk.lanes.1 - blk.lanes.0);
+            let (wdt, n_lanes) = (blk.padded_width(), blk.lanes.1 - blk.lanes.0);
             let (t, tr) = std::mem::take(&mut t_rest).split_at_mut(nn * wdt);
             let (f, fr) = std::mem::take(&mut f_rest).split_at_mut(n_lanes * wdt);
             let (p, pr) = std::mem::take(&mut p_rest).split_at_mut(n_lanes * wdt);
@@ -525,6 +623,12 @@ impl FlowEngine {
                 rt,
             });
         }
+        #[cfg(feature = "simd")]
+        if simd {
+            run_units(pool, workers, &mut units, simd::forward_block_simd);
+            return;
+        }
+        let _ = simd;
         run_units(pool, workers, &mut units, forward_block);
     }
 
@@ -589,7 +693,7 @@ impl FlowEngine {
                 problem.edge_kind(e).derivative(self.flows[e], net.graph.edge(e).capacity);
         }
         if self.last_batched {
-            self.reverse_pass_batched(net);
+            self.reverse_pass_batched(net, self.last_simd);
             scatter_block_state(&net.batch, self.n_nodes, &self.r_blk, &mut self.r);
         } else {
             self.reverse_pass_scalar(net, phi);
@@ -617,8 +721,9 @@ impl FlowEngine {
 
     /// Session-batched reverse pass: reuses the forward pass's lane-major
     /// `φ` gather (the operating point is unchanged between the two halves
-    /// of a [`FlowEngine::prepare`]).
-    fn reverse_pass_batched(&mut self, net: &AugmentedNet) {
+    /// of a [`FlowEngine::prepare`]), with the SIMD broadcast kernel when
+    /// the forward pass ran SIMD.
+    fn reverse_pass_batched(&mut self, net: &AugmentedNet, simd: bool) {
         let nn = self.n_nodes;
         let batch = &net.batch;
         let workers = self.effective_workers(batch.blocks.len());
@@ -630,7 +735,7 @@ impl FlowEngine {
         let mut s_rest = self.blk_scratch.as_mut_slice();
         let mut units: Vec<ReverseBlockUnit<'_>> = Vec::with_capacity(batch.blocks.len());
         for (b, blk) in batch.blocks.iter().enumerate() {
-            let (wdt, n_lanes) = (blk.width(), blk.lanes.1 - blk.lanes.0);
+            let (wdt, n_lanes) = (blk.padded_width(), blk.lanes.1 - blk.lanes.0);
             let (r, rr) = std::mem::take(&mut r_rest).split_at_mut(nn * wdt);
             let (p, pr) = p_rest.split_at(n_lanes * wdt);
             let (acc, sr) = std::mem::take(&mut s_rest).split_at_mut(wdt);
@@ -646,6 +751,12 @@ impl FlowEngine {
                 acc,
             });
         }
+        #[cfg(feature = "simd")]
+        if simd {
+            run_units(pool, workers, &mut units, |u| simd::reverse_block_simd(dprime, u));
+            return;
+        }
+        let _ = simd;
         run_units(pool, workers, &mut units, |u| reverse_block(dprime, u));
     }
 
@@ -706,6 +817,21 @@ impl FlowEngine {
         self.cost
     }
 
+    /// Whether the last full forward sweep ran the session-batched SoA
+    /// kernels (dirty sweeps always report their own scalar path).
+    #[inline]
+    pub fn ran_batched(&self) -> bool {
+        self.last_batched
+    }
+
+    /// Whether the last full forward sweep ran the explicit SIMD kernels.
+    /// Always `false` without `--features simd` — [`BatchMode::Simd`]
+    /// silently degrades to the scalar-batched kernels there.
+    #[inline]
+    pub fn ran_simd(&self) -> bool {
+        self.last_simd
+    }
+
     /// Routing-variable marginal `δφ_ij(w)` for CSR lane `k` (eq. 19) —
     /// pure index arithmetic on the flat workspaces.
     #[inline]
@@ -724,13 +850,31 @@ impl FlowEngine {
     pub fn edge_grad(&self, net: &AugmentedNet, w: usize, e: usize, t_i: f64) -> f64 {
         t_i * self.edge_delta(net, w, e)
     }
+
+    /// Memo-skip attestation for `routing::omd`'s row-sparse updates:
+    /// `true` iff every engine quantity session `w`'s mirror update reads
+    /// (`t_i(w)`, `D'` on its lanes, `∂D/∂r(w)`) is bitwise unchanged
+    /// since the last [`FlowEngine::reset_delta_clean`]. Conservative:
+    /// full sweeps (and out-of-range `w`) report `false`.
+    #[inline]
+    pub fn session_delta_clean(&self, w: usize) -> bool {
+        self.delta_clean.get(w).copied().unwrap_or(false)
+    }
+
+    /// Start a new clean-tracking epoch: every session counts as clean
+    /// until a subsequent sweep touches or reprices it. Called by
+    /// `routing::omd` right after its row-update loop, whose inputs the
+    /// attestation is relative to.
+    pub fn reset_delta_clean(&mut self) {
+        self.delta_clean.iter_mut().for_each(|v| *v = true);
+    }
 }
 
 /// Copy batched node-major `[node × session]` block state back into the
 /// engine's session-major layout (a pure relayout — bit-preserving).
 fn scatter_block_state(batch: &BatchCsr, nn: usize, src: &[f64], dst: &mut [f64]) {
     for blk in &batch.blocks {
-        let wdt = blk.width();
+        let wdt = blk.padded_width();
         let base = nn * blk.col0;
         for (j, &s) in blk.sessions.iter().enumerate() {
             let row = &mut dst[s * nn..(s + 1) * nn];
@@ -761,7 +905,9 @@ struct ReverseUnit<'a> {
 /// indices are block-local (`lane0`-rebased); `phi`/`f` are lane-major
 /// `[lane × session]`, `t` is node-major `[node × session]`. Session-major
 /// inputs (`phi_all`, `lam`) are borrowed whole so building a unit
-/// allocates nothing.
+/// allocates nothing. `width` is the block's *workspace stride*
+/// ([`crate::graph::augmented::BatchBlock::padded_width`]); columns
+/// `sessions.len()..width` are zero-filled SIMD padding.
 struct ForwardBlockUnit<'a> {
     rows: &'a [CsrRow],
     lane0: usize,
@@ -827,6 +973,27 @@ fn reverse_session(csr: &FlowCsr, dprime: &[f64], u: &mut ReverseUnit<'_>) {
     }
 }
 
+/// Gather one block's `φ` into the lane-major workspace (the only pass
+/// that touches the session-major rows), one member column at a time, and
+/// zero the SIMD padding columns so both the scalar-batched and the SIMD
+/// kernels are guaranteed `φ = 0` there — even if a same-shape rebind
+/// moved the padding positions inside a reused workspace.
+fn gather_block_phi(u: &mut ForwardBlockUnit<'_>) {
+    let wdt = u.width;
+    let n_sess = u.sessions.len();
+    for (j, &s) in u.sessions.iter().enumerate() {
+        let row = u.phi_all[s].as_slice();
+        for (l, &e) in u.lane_edge.iter().enumerate() {
+            u.phi[l * wdt + j] = row[e];
+        }
+    }
+    if n_sess < wdt {
+        for l in 0..u.lane_edge.len() {
+            u.phi[l * wdt + n_sess..(l + 1) * wdt].fill(0.0);
+        }
+    }
+}
+
 /// Forward topological pass for one version block: gathers `φ` lane-major,
 /// then runs eqs. 1 + 4 as contiguous multiply-accumulates over the
 /// session dimension. Sessions not using a lane see `φ = 0` there; on the
@@ -834,14 +1001,7 @@ fn reverse_session(csr: &FlowCsr, dprime: &[f64], u: &mut ReverseUnit<'_>) {
 /// session's result is bit-identical to its scalar sweep.
 fn forward_block(u: &mut ForwardBlockUnit<'_>) {
     let wdt = u.width;
-    // gather φ once per iteration (the only pass that touches the
-    // session-major rows), one member column at a time
-    for (j, &s) in u.sessions.iter().enumerate() {
-        let row = u.phi_all[s].as_slice();
-        for (l, &e) in u.lane_edge.iter().enumerate() {
-            u.phi[l * wdt + j] = row[e];
-        }
-    }
+    gather_block_phi(u);
     u.t.fill(0.0);
     let sbase = AugmentedNet::SOURCE * wdt;
     for (j, &s) in u.sessions.iter().enumerate() {

@@ -1,0 +1,209 @@
+//! Explicit 4-lane SIMD kernels for the session-batched sweeps
+//! (`--features simd`).
+//!
+//! Dependency-free and stable-Rust only: [`F64x4`] is a hand-rolled
+//! 4-wide f64 vector whose per-lane array arithmetic LLVM reliably lowers
+//! to packed `mulpd`/`addpd` (or NEON equivalents). `std::simd` is
+//! nightly-only, and the crate is dependency-free by design, so this is
+//! the sanctioned stable route.
+//!
+//! Every kernel here is **bit-identical** to its scalar-batched
+//! counterpart in [`super`] — see the reduction-order contract in the
+//! [`crate::engine`] module docs. The vectorized dimension is always the
+//! *session* dimension (independent columns of the `[lane × session]`
+//! workspaces), whose stride [`crate::graph::augmented::BatchBlock`]
+//! pads to a multiple of [`LANES`] under this feature, so the inner
+//! loops below are whole vectors with no remainder tail.
+
+use super::{
+    forward_block, gather_block_phi, reverse_block, FlowEngine, ForwardBlockUnit,
+    ReverseBlockUnit,
+};
+use crate::graph::augmented::{AugmentedNet, BatchCsr, FlowCsr, LANE_PAD};
+use crate::model::Problem;
+
+/// Vector width of the hand-rolled kernels (f64 lanes).
+pub(crate) const LANES: usize = LANE_PAD;
+
+/// Hand-rolled 4-lane f64 vector. All arithmetic is plain per-lane array
+/// ops, so each lane's result is exactly the scalar result — the engine's
+/// bit-identity contract falls out of that, and LLVM auto-vectorizes the
+/// fixed-width loops into single packed instructions.
+#[derive(Clone, Copy)]
+#[repr(align(32))]
+struct F64x4([f64; LANES]);
+
+impl F64x4 {
+    #[inline(always)]
+    fn load(src: &[f64]) -> Self {
+        F64x4([src[0], src[1], src[2], src[3]])
+    }
+
+    #[inline(always)]
+    fn splat(v: f64) -> Self {
+        F64x4([v; LANES])
+    }
+
+    #[inline(always)]
+    fn store(self, dst: &mut [f64]) {
+        dst[..LANES].copy_from_slice(&self.0);
+    }
+
+    #[inline(always)]
+    fn mul(self, o: Self) -> Self {
+        let (a, b) = (self.0, o.0);
+        F64x4([a[0] * b[0], a[1] * b[1], a[2] * b[2], a[3] * b[3]])
+    }
+
+    #[inline(always)]
+    fn add(self, o: Self) -> Self {
+        let (a, b) = (self.0, o.0);
+        F64x4([a[0] + b[0], a[1] + b[1], a[2] + b[2], a[3] + b[3]])
+    }
+
+    /// Per-lane `acc + if φ > 0 { φ·(D' + r) } else { 0 }` — the eq. 21
+    /// guard as a lane-wise select; each lane computes exactly the scalar
+    /// expression (including skipping the multiply on guarded lanes, so
+    /// `0 · ∞` style products can never appear where the scalar kernel
+    /// has none).
+    #[inline(always)]
+    fn mac_guarded(self, dp: Self, r: Self, acc: Self) -> Self {
+        let mut out = acc.0;
+        for i in 0..LANES {
+            if self.0[i] > 0.0 {
+                out[i] += self.0[i] * (dp.0[i] + r.0[i]);
+            }
+        }
+        F64x4(out)
+    }
+}
+
+/// SIMD forward pass for one version block: identical structure to
+/// [`forward_block`] with the session-dimension inner loop executed four
+/// columns at a time. Each column's eq. 1 multiply-accumulate chain keeps
+/// its exact scalar operation order.
+pub(super) fn forward_block_simd(u: &mut ForwardBlockUnit<'_>) {
+    let wdt = u.width;
+    if wdt % LANES != 0 {
+        // unpadded layout (can only happen if a caller mixes binds built
+        // without the feature): the scalar kernel is always correct
+        forward_block(u);
+        return;
+    }
+    gather_block_phi(u);
+    u.t.fill(0.0);
+    let sbase = AugmentedNet::SOURCE * wdt;
+    for (j, &s) in u.sessions.iter().enumerate() {
+        u.t[sbase + j] = u.lam[s];
+    }
+    for row in u.rows {
+        let node_base = row.node * wdt;
+        u.rt.copy_from_slice(&u.t[node_base..node_base + wdt]);
+        for k in (row.start - u.lane0)..(row.end - u.lane0) {
+            let base = k * wdt;
+            let dbase = u.lane_dst[k] * wdt;
+            let (f_cell, phi_cell) = (&mut u.f[base..base + wdt], &u.phi[base..base + wdt]);
+            let t_cell = &mut u.t[dbase..dbase + wdt];
+            for j in (0..wdt).step_by(LANES) {
+                let c = F64x4::load(&u.rt[j..]).mul(F64x4::load(&phi_cell[j..]));
+                c.store(&mut f_cell[j..]);
+                F64x4::load(&t_cell[j..]).add(c).store(&mut t_cell[j..]);
+            }
+        }
+    }
+}
+
+/// SIMD reverse pass for one version block: the eq. 20–21 broadcast with
+/// `D'` splat across the vector and the per-(lane, session) `φ > 0` guard
+/// applied lane-wise, four session columns at a time.
+pub(super) fn reverse_block_simd(dprime: &[f64], u: &mut ReverseBlockUnit<'_>) {
+    let wdt = u.width;
+    if wdt % LANES != 0 {
+        reverse_block(dprime, u);
+        return;
+    }
+    u.r.fill(0.0);
+    for row in u.rows.iter().rev() {
+        u.acc.fill(0.0);
+        for k in (row.start - u.lane0)..(row.end - u.lane0) {
+            let dp = F64x4::splat(dprime[u.lane_edge[k]]);
+            let base = k * wdt;
+            let dbase = u.lane_dst[k] * wdt;
+            for j in (0..wdt).step_by(LANES) {
+                let fv = F64x4::load(&u.phi[base + j..]);
+                let rv = F64x4::load(&u.r[dbase + j..]);
+                let acc = F64x4::load(&u.acc[j..]);
+                fv.mac_guarded(dp, rv, acc).store(&mut u.acc[j..]);
+            }
+        }
+        let node_base = row.node * wdt;
+        u.r[node_base..node_base + wdt].copy_from_slice(u.acc);
+    }
+}
+
+impl FlowEngine {
+    /// Batched-layout flow reduction (eq. 4) with a 4-wide unrolled lane
+    /// loop. Keeps the full sweep's ascending-session accumulation order;
+    /// one session's lanes address *distinct* edges, so unrolling within
+    /// a session touches disjoint accumulators and commutes bitwise with
+    /// [`FlowEngine::reduce_flows_batched`].
+    pub(super) fn reduce_flows_simd(&mut self, csr: &FlowCsr, batch: &BatchCsr) {
+        let ne = self.n_edges;
+        self.flows.fill(0.0);
+        for w in 0..self.w_cnt {
+            let (l0, l1) = csr.session_lane_span[w];
+            let base = w * ne;
+            let mut k = l0;
+            let mut quads = csr.lane_edge[l0..l1].chunks_exact(LANES);
+            for quad in quads.by_ref() {
+                let s = &batch.lane_slot[k..k + LANES];
+                let v = [self.f_blk[s[0]], self.f_blk[s[1]], self.f_blk[s[2]], self.f_blk[s[3]]];
+                for (i, &e) in quad.iter().enumerate() {
+                    self.sess_flows[base + e] = v[i];
+                    self.flows[e] += v[i];
+                }
+                k += LANES;
+            }
+            for (i, &e) in quads.remainder().iter().enumerate() {
+                let v = self.f_blk[batch.lane_slot[k + i]];
+                self.sess_flows[base + e] = v;
+                self.flows[e] += v;
+            }
+        }
+    }
+
+    /// P2 pricing with 4-wide unrolled flow/capacity loads. The cost
+    /// families' transcendentals stay scalar (a vectorized `exp` cannot
+    /// reproduce libm bit for bit) and `total` accumulates in the fixed
+    /// union-edge order — bitwise equal to [`FlowEngine::price_edges`].
+    pub(super) fn price_edges_simd(&mut self, problem: &Problem) -> f64 {
+        let net = &problem.net;
+        let mut total = 0.0;
+        let mut quads = net.union_edges.chunks_exact(LANES);
+        for quad in quads.by_ref() {
+            let f = [
+                self.flows[quad[0]],
+                self.flows[quad[1]],
+                self.flows[quad[2]],
+                self.flows[quad[3]],
+            ];
+            let c = [
+                net.graph.edge(quad[0]).capacity,
+                net.graph.edge(quad[1]).capacity,
+                net.graph.edge(quad[2]).capacity,
+                net.graph.edge(quad[3]).capacity,
+            ];
+            for i in 0..LANES {
+                let v = problem.edge_kind(quad[i]).value(f[i], c[i]);
+                self.edge_vals[quad[i]] = v;
+                total += v;
+            }
+        }
+        for &e in quads.remainder() {
+            let v = problem.edge_kind(e).value(self.flows[e], net.graph.edge(e).capacity);
+            self.edge_vals[e] = v;
+            total += v;
+        }
+        total
+    }
+}

@@ -177,6 +177,19 @@ impl FlowCsr {
     }
 }
 
+/// SIMD lane count the batched layout pads to. With the `simd` feature on,
+/// every block's workspace width rounds up to a multiple of 4 (the f64x4
+/// width of [`crate::engine`]'s vector kernels) so the session-dimension
+/// inner loops are whole vectors with no remainder tail. Padding columns
+/// carry no session: they start at 0 (workspaces are zero-filled at bind)
+/// and stay 0 through the recurrence (`0 · φ` and `x + 0.0` are exact), so
+/// logical columns are bit-for-bit unaffected. Without the feature the pad
+/// is 1 and the layout is unchanged.
+#[cfg(feature = "simd")]
+pub const LANE_PAD: usize = 4;
+#[cfg(not(feature = "simd"))]
+pub const LANE_PAD: usize = 1;
+
 /// One session block of the batched lane index: all sessions serving the
 /// same DNN version, swept together over the block's union DAG.
 #[derive(Clone, Debug)]
@@ -194,8 +207,12 @@ pub struct BatchBlock {
     /// the engine's batched workspaces.
     pub slot0: usize,
     /// First column of the block in the node-major `[node × session]`
-    /// regions (block widths pack to `n_sessions` columns total).
+    /// regions (padded block widths pack to [`BatchCsr::n_cols`] columns
+    /// total).
     pub col0: usize,
+    /// Workspace stride of the block: [`BatchBlock::width`] rounded up to
+    /// [`LANE_PAD`]. Columns `width..padded` are zero-filled padding.
+    pub padded: usize,
 }
 
 impl BatchBlock {
@@ -203,6 +220,12 @@ impl BatchBlock {
     #[inline]
     pub fn width(&self) -> usize {
         self.sessions.len()
+    }
+
+    /// Workspace stride (width rounded up to the SIMD lane pad).
+    #[inline]
+    pub fn padded_width(&self) -> usize {
+        self.padded
     }
 }
 
@@ -237,8 +260,11 @@ pub struct BatchCsr {
     /// global slot of that (session, lane) in the lane-major workspaces —
     /// how the fixed-order flow reduction reads batched per-session flows.
     pub lane_slot: Vec<usize>,
-    /// Total lane-major workspace slots (`Σ_b lanes_b × width_b`).
+    /// Total lane-major workspace slots (`Σ_b lanes_b × padded_b`).
     pub n_slots: usize,
+    /// Total node-major workspace columns (`Σ_b padded_b`); equals
+    /// `n_sessions` unless the `simd` feature pads block widths.
+    pub n_cols: usize,
 }
 
 impl BatchCsr {
@@ -672,16 +698,19 @@ impl AugmentedNet {
                 }
             }
             let n_lanes = batch.lane_edge.len() - lane_first;
+            // workspace stride: width rounded up to the SIMD lane pad, so
+            // vector kernels see whole f64x4 groups (pad columns stay 0)
+            let padded = width.next_multiple_of(LANE_PAD);
             for (col, &s) in sessions.iter().enumerate() {
                 batch.session_slot[s] = (batch.blocks.len(), col);
                 let (k0, k1) = self.csr.session_lane_span[s];
                 for k in k0..k1 {
                     let local = lane_of_edge[self.csr.lane_edge[k]];
                     debug_assert_ne!(local, usize::MAX, "session lane outside block union");
-                    batch.lane_slot[k] = slot0 + local * width + col;
+                    batch.lane_slot[k] = slot0 + local * padded + col;
                 }
             }
-            batch.n_slots += n_lanes * width;
+            batch.n_slots += n_lanes * padded;
             batch.blocks.push(BatchBlock {
                 version: ver,
                 sessions,
@@ -689,9 +718,11 @@ impl AugmentedNet {
                 lanes: (lane_first, batch.lane_edge.len()),
                 slot0,
                 col0,
+                padded,
             });
-            col0 += width;
+            col0 += padded;
         }
+        batch.n_cols = col0;
         self.batch = batch;
     }
 
@@ -1001,7 +1032,8 @@ mod tests {
             let (b, col) = net.batch.session_slot[s];
             let blk = &net.batch.blocks[b];
             assert_eq!(blk.sessions[col], s);
-            let w = blk.width();
+            let w = blk.padded_width();
+            assert_eq!(w, blk.width().next_multiple_of(LANE_PAD));
             let (k0, k1) = net.csr.session_lane_span[s];
             for k in k0..k1 {
                 let slot = net.batch.lane_slot[k];
@@ -1033,14 +1065,16 @@ mod tests {
                 }
             }
         }
-        // slot accounting adds up
+        // slot and column accounting adds up (padded strides)
         let total: usize = net
             .batch
             .blocks
             .iter()
-            .map(|b| (b.lanes.1 - b.lanes.0) * b.width())
+            .map(|b| (b.lanes.1 - b.lanes.0) * b.padded_width())
             .sum();
         assert_eq!(net.batch.n_slots, total);
+        let cols: usize = net.batch.blocks.iter().map(BatchBlock::padded_width).sum();
+        assert_eq!(net.batch.n_cols, cols);
     }
 
     #[test]

@@ -57,6 +57,16 @@ pub trait Router {
         self.step(problem, lam, phi)
     }
 
+    /// The `φ` rows this router's **last** step actually changed
+    /// (bitwise), as a [`SessionMask`] — `None` when the router does not
+    /// track them (default) or before any step. Oracles use this to keep
+    /// their *post-step* telemetry sweeps O(touched) (see
+    /// `coordinator::serving::MeasuredOracle`); a `None` simply means
+    /// "assume everything moved".
+    fn touched_sessions(&self) -> Option<&SessionMask> {
+        None
+    }
+
     /// Set the [`FlowEngine`] worker count for this router's per-iteration
     /// sweeps (`0` = auto-detect). Results are bit-identical at any value.
     /// Default: no-op for routers without an engine.

@@ -13,6 +13,38 @@
 //! SGP (Fig. 9). The same update can be executed on the XLA hot path via
 //! the AOT-compiled L1 Pallas kernel (see [`crate::runtime::mirror`]); this
 //! module is the native implementation and the numerical ground truth.
+//!
+//! ## Row-sparse updates
+//!
+//! [`Router::step`]/[`Router::step_dirty`] are **row-sparse**: the scatter
+//! back into `φ` is write-compare (only bitwise-changed lanes are stored),
+//! the set of sessions whose rows actually moved is emitted as a
+//! [`SessionMask`] ([`Router::touched_sessions`]), and three
+//! exactness-preserving skips cut per-iteration work once descent settles:
+//!
+//! * **identity fast path** — [`OmdRouter::update_row`] returns untouched
+//!   when every live multiplier rounds to exactly 1.0 and the row is
+//!   already normalized above the interior floor (bit-exact by
+//!   construction, see the guard chain there);
+//! * **memo skip** — a session whose previous update changed nothing is
+//!   skipped outright when η is unchanged and the engine attests
+//!   ([`FlowEngine::session_delta_clean`]) that every input of its update
+//!   is bitwise unchanged (exact by induction: unchanged inputs ⇒ the
+//!   recomputation would reproduce the unchanged rows bit for bit);
+//! * **threshold skip** (opt-in, [`OmdRouter::sparse_tol`] `> 0`) — a row
+//!   whose η-scaled live-lane marginal span is below the tolerance is
+//!   left in place, bounding the per-step deviation from the dense step
+//!   by O(tol) per row. Default **off**: with `sparse_tol == 0` the
+//!   router is *bit-identical* to the dense step.
+//!
+//! The touched set also closes the incremental loop around the engine:
+//! the pre-update [`FlowEngine::prepare_dirty`] unions the caller's dirty
+//! mask with the rows the router itself changed since its engine's last
+//! sweep, and [`OmdRouter::post_step_cost`] re-syncs the engine O(touched)
+//! after the update — so a warmed GS-OMA/OMAD probe loop runs
+//! O(touched ∪ probe block) end to end (benched by the
+//! `clusters40/omd_probe_loop_{dense,sparse}` rows in
+//! `benches/hotpath.rs`).
 
 use super::Router;
 use crate::engine::{BatchMode, FlowEngine, SessionMask};
@@ -45,6 +77,12 @@ pub const MAX_EXP_SPAN: f64 = 40.0;
 /// revival. Identical constant in the L1 kernel.
 pub const PHI_FLOOR: f64 = 1e-12;
 
+/// Converged-row identity fast path threshold (see
+/// [`OmdRouter::update_row`]): an exponent span this far below one ulp at
+/// 1.0 (2⁻⁵³ ≈ 1.1e-16) makes every row-max-shifted multiplier round to
+/// exactly 1.0 under any faithful `exp`.
+const EXP_IDENTITY_SPAN: f64 = 1e-17;
+
 #[derive(Clone, Debug)]
 pub struct OmdRouter {
     /// Base mirror-descent step size η (paper: constant `η_k ≤ c/L_D`).
@@ -56,10 +94,33 @@ pub struct OmdRouter {
     /// decreases. The cost signal is already available at every node scale
     /// (the leader aggregates it alongside the marginal broadcast).
     pub adaptive: bool,
+    /// Opt-in threshold skip for the row-sparse step (see the module
+    /// docs): a row is left untouched when the η-scaled marginal span
+    /// over its live lanes is below this tolerance, bounding the per-step
+    /// deviation from the dense update by O(`sparse_tol`) per row.
+    /// Default `0.0` — **off**, every result bit-identical to the dense
+    /// step. The probe-loop bench arms it at `1e-12`.
+    pub sparse_tol: f64,
     eta_cur: f64,
     last_cost: Option<f64>,
+    /// η of the previous step (bitwise), for the memo skip's "same step
+    /// size" precondition.
+    prev_eta: Option<f64>,
     k: usize,
     engine: FlowEngine,
+    /// `row_fixed[w]`: the last computed update of session `w` left every
+    /// one of its rows bitwise unchanged (the memo-skip attestation on
+    /// the router side; the engine side is `session_delta_clean`).
+    row_fixed: Vec<bool>,
+    /// Sessions whose rows the last step changed (bitwise) — surfaced as
+    /// [`Router::touched_sessions`] and consumed by
+    /// [`OmdRouter::post_step_cost`].
+    last_touched: Option<SessionMask>,
+    /// Rows this router changed *after* its engine's last sweep. The next
+    /// dirty step unions these into the engine mask, so callers only ever
+    /// promise what *they* changed; cleared whenever `post_step_cost`
+    /// re-syncs the engine at the post-update `φ`.
+    pending_phi: Option<SessionMask>,
     scratch_row: Vec<f64>,
     scratch_delta: Vec<f64>,
 }
@@ -69,10 +130,15 @@ impl OmdRouter {
         OmdRouter {
             eta,
             adaptive: true,
+            sparse_tol: 0.0,
             eta_cur: eta,
             last_cost: None,
+            prev_eta: None,
             k: 0,
             engine: FlowEngine::new(),
+            row_fixed: Vec::new(),
+            last_touched: None,
+            pending_phi: None,
             scratch_row: Vec::new(),
             scratch_delta: Vec::new(),
         }
@@ -126,6 +192,26 @@ impl OmdRouter {
             return; // empty row
         }
         let span = zmax - zmin;
+        // Converged-row identity fast path: when the support's exponents
+        // agree to within ≪ one ulp at 1.0, every row-max-shifted
+        // multiplier `exp((z − zmax)·scale)` rounds to exactly 1.0 — the
+        // guard verifies that on the extreme argument rather than assume
+        // it (glibc's exp is correctly rounded; any monotone faithful exp
+        // then agrees on the interior arguments, which sit closer to 0).
+        // The full body would multiply every support lane by 1.0, keep
+        // zero lanes at zero, and divide twice by the bitwise lane-order
+        // sum; if that sum is exactly 1.0 and no lane sits below the
+        // interior floor, the body is the identity — return without
+        // touching the row so converged rows stay bitwise fixed and the
+        // row-sparse step can prove them unchanged. Falls through (and
+        // stays exact) whenever any guard fails.
+        if span <= EXP_IDENTITY_SPAN
+            && (zmin - zmax).exp() == 1.0
+            && phi_row.iter().sum::<f64>() == 1.0
+            && phi_row.iter().all(|&p| p == 0.0 || p >= PHI_FLOOR)
+        {
+            return;
+        }
         let scale = if span > MAX_EXP_SPAN { MAX_EXP_SPAN / span } else { 1.0 };
         let mut sum = 0.0;
         for (p, &d) in phi_row.iter_mut().zip(delta) {
@@ -149,6 +235,67 @@ impl OmdRouter {
             }
         }
     }
+
+    /// Opt-in threshold skip (see [`OmdRouter::sparse_tol`]): `true` when
+    /// the η-scaled marginal span over the row's *live* lanes is below
+    /// `tol` — the eq. 22 multipliers then agree to within `tol`
+    /// relatively, so the normalized update would move the row by O(tol)
+    /// — and no floored lane is about to revive (a revival needs its
+    /// exponent to top every live lane's, and must never be skipped:
+    /// multiplicative revival is exactly what [`PHI_FLOOR`] keeps
+    /// possible).
+    fn row_update_below_tol(row: &[f64], delta: &[f64], eta: f64, tol: f64) -> bool {
+        /// Lanes carrying at most this are "floored": their mass moves
+        /// the row by less than any meaningful tolerance, but their
+        /// exponents still gate the revival check below.
+        const LIVE_EPS: f64 = 1e-9;
+        let (mut zlo, mut zhi) = (f64::INFINITY, f64::NEG_INFINITY);
+        let mut zall = f64::NEG_INFINITY;
+        for (&p, &d) in row.iter().zip(delta) {
+            if p > 0.0 {
+                let z = -eta * d;
+                if z > zall {
+                    zall = z;
+                }
+                if p > LIVE_EPS {
+                    if z < zlo {
+                        zlo = z;
+                    }
+                    if z > zhi {
+                        zhi = z;
+                    }
+                }
+            }
+        }
+        zhi.is_finite() && zhi - zlo <= tol && zall <= zhi
+    }
+
+    /// Post-update cost at `(Λ, φ)` reusing this router's engine. When
+    /// the last step's row updates touched only a few sessions, re-sweep
+    /// O(touched) through [`FlowEngine::prepare_dirty`] — which also
+    /// re-syncs the marginals, keeping the *next* step's reverse work
+    /// incremental — and fall back to the dense forward sweep when the
+    /// touched set is large (≥ half the sessions: the dirty re-reduce and
+    /// re-broadcast overhead then beats its savings) or untracked.
+    /// Bit-identical to `engine_mut().evaluate_cost(..)` at the same
+    /// state either way.
+    pub fn post_step_cost(&mut self, problem: &Problem, phi: &Phi, lam: &[f64]) -> f64 {
+        let n = problem.net.n_sessions();
+        let cost = match self.last_touched.take() {
+            Some(mask) if mask.len() == n && !mask.is_all() && 2 * mask.count() < n => {
+                let c = self.engine.prepare_dirty(problem, phi, lam, &mask);
+                self.last_touched = Some(mask);
+                c
+            }
+            other => {
+                self.last_touched = other;
+                self.engine.evaluate_cost(problem, phi, lam)
+            }
+        };
+        // the engine is now synced at the post-update φ: nothing pending
+        self.pending_phi = None;
+        cost
+    }
 }
 
 impl OmdRouter {
@@ -163,11 +310,31 @@ impl OmdRouter {
         dirty: Option<&SessionMask>,
     ) -> f64 {
         let net = &problem.net;
-        // fused forward + reverse sweep: t, F, cost, D', r in two passes
-        // (the delta path re-sweeps only the dirty sessions)
+        let n_sess = net.n_sessions();
+        // fused forward + reverse sweep: t, F, cost, D', r in two passes.
+        // The delta path re-sweeps the caller's dirty sessions *unioned
+        // with the rows this router itself changed since its engine's
+        // last sweep* (pending_phi) — callers only ever promise what
+        // *they* changed; the router's own row updates are its to track.
         let cost_before = match dirty {
-            Some(mask) => self.engine.prepare_dirty(problem, phi, lam, mask),
-            None => self.engine.prepare(problem, phi, lam),
+            Some(mask) => match self.pending_phi.take() {
+                Some(mut pending) if pending.len() == mask.len() => {
+                    pending.union_with(mask);
+                    self.engine.prepare_dirty(problem, phi, lam, &pending)
+                }
+                // a pending set of the wrong shape means the problem
+                // changed under us — the engine's own shape check will
+                // force the full sweep, but don't trust the mask either
+                Some(_) => self.engine.prepare(problem, phi, lam),
+                // no pending rows: post_step_cost already re-synced the
+                // engine at the current φ (or this router never stepped,
+                // in which case prepare_dirty full-sweeps on its own)
+                None => self.engine.prepare_dirty(problem, phi, lam, mask),
+            },
+            None => {
+                self.pending_phi = None;
+                self.engine.prepare(problem, phi, lam)
+            }
         };
 
         if self.adaptive {
@@ -175,13 +342,28 @@ impl OmdRouter {
         }
         self.last_cost = Some(cost_before);
         let eta = self.eta_cur;
+        let eta_same = self.prev_eta.is_some_and(|e| e.to_bits() == eta.to_bits());
+        self.prev_eta = Some(eta);
         self.k += 1;
+        if self.row_fixed.len() != n_sess {
+            self.row_fixed = vec![false; n_sess];
+        }
+        let mut touched = SessionMask::none(n_sess);
         // scratch buffers live on self: zero allocations in the hot loop
         let mut row = std::mem::take(&mut self.scratch_row);
         let mut delta = std::mem::take(&mut self.scratch_delta);
         let csr = &net.csr;
-        for w in 0..net.n_sessions() {
+        for w in 0..n_sess {
+            // memo skip (exact): the last computed update left every row
+            // of w unchanged, η is bitwise the same, and the engine
+            // attests that every input of w's update (t(w), D' on its
+            // lanes, ∂D/∂r(w)) is bitwise unchanged — recomputing would
+            // reproduce the unchanged rows bit for bit.
+            if eta_same && self.row_fixed[w] && self.engine.session_delta_clean(w) {
+                continue;
+            }
             let frac = &mut phi.frac[w];
+            let mut changed = false;
             for r in csr.rows(w) {
                 if r.len() < 2 {
                     continue; // single lane is pinned at 1
@@ -196,14 +378,34 @@ impl OmdRouter {
                     row.push(frac[csr.lane_edge[k]]);
                     delta.push(self.engine.lane_delta(csr, w, k));
                 }
-                Self::update_row(&mut row, &delta, eta);
-                for (k, &v) in (r.start..r.end).zip(&row) {
-                    frac[csr.lane_edge[k]] = v;
+                if self.sparse_tol > 0.0
+                    && Self::row_update_below_tol(&row, &delta, eta, self.sparse_tol)
+                {
+                    continue;
                 }
+                Self::update_row(&mut row, &delta, eta);
+                // write-compare scatter: store only bitwise-changed lanes
+                // and remember whether anything in this session moved
+                for (k, &v) in (r.start..r.end).zip(&row) {
+                    let dst = &mut frac[csr.lane_edge[k]];
+                    if dst.to_bits() != v.to_bits() {
+                        *dst = v;
+                        changed = true;
+                    }
+                }
+            }
+            self.row_fixed[w] = !changed;
+            if changed {
+                touched.insert(w);
             }
         }
         self.scratch_row = row;
         self.scratch_delta = delta;
+        // new memo-skip epoch: the attestations are relative to the
+        // engine state this row loop just read
+        self.engine.reset_delta_clean();
+        self.pending_phi = Some(touched.clone());
+        self.last_touched = Some(touched);
         cost_before
     }
 }
@@ -237,6 +439,10 @@ impl Router for OmdRouter {
         dirty: &SessionMask,
     ) -> f64 {
         self.step_impl(problem, lam, phi, Some(dirty))
+    }
+
+    fn touched_sessions(&self) -> Option<&SessionMask> {
+        self.last_touched.as_ref()
     }
 }
 
