@@ -31,7 +31,13 @@
 //! * full `omd_full_iteration` / `sgp_engine_iteration` solver steps, with
 //!   a faithfully reconstructed legacy OMD iteration as the baseline (the
 //!   SGP row's "engine" name puts it under the CI bench-regression gate,
-//!   pinning the workspace-backed Hessian-bound DPs).
+//!   pinning the workspace-backed Hessian-bound DPs), and
+//! * the **sharded coordination plane** at fleet scale
+//!   (`fleet1e4/sharded_round_throughput`): a synthetic 10⁴-node fleet
+//!   carrying 10⁵ sessions in the compact ShardBlock lane layout, K=4
+//!   shards over the loopback transport at staleness S=1, driven through
+//!   the real `ShardPlane::run_round` path — the session-rounds/sec figure
+//!   carries a CI-gated 250k floor (asserted in-bench too).
 //!
 //! Emits every measurement plus the speedup ratios as JSON to
 //! `BENCH_hotpath.json` (written to the current directory) and asserts the
@@ -342,6 +348,116 @@ fn main() {
         }
     }
 
+    // sharded coordination plane at fleet scale: 2500 clusters × 4 devices
+    // = 10⁴ nodes carrying 10⁵ sessions (40 per cluster, 5 lanes each) over
+    // ~25k edges, partitioned across K=4 leader shards on the loopback
+    // transport with staleness bound S=1. The synthetic fleet is lowered
+    // straight into the compact ShardBlock lane layout (a dense Phi at this
+    // scale would need ~10⁵ × 10⁵ lane slots) and driven through the *real*
+    // `ShardPlane::run_round` path — forward sweeps, delta gossip,
+    // staleness sync, pricing, reverse sweeps, mirror updates. The
+    // sessions×rounds/sec figure lands in the speedups table so the CI
+    // bench-regression gate can pin a floor under it.
+    let fleet_throughput;
+    {
+        use jowr::coordinator::shard::ShardBlock;
+        use std::sync::Arc;
+        use std::time::Duration;
+
+        const CLUSTERS: usize = 2_500;
+        const DEVICES_PER_CLUSTER: usize = 4;
+        const EDGES_PER_CLUSTER: usize = 10;
+        const SESSIONS_PER_CLUSTER: usize = 40;
+        const SESSIONS: usize = CLUSTERS * SESSIONS_PER_CLUSTER;
+        const SHARDS: usize = 4;
+        let n_nodes = CLUSTERS * DEVICES_PER_CLUSTER;
+        assert_eq!(n_nodes, 10_000, "the scale row is a 10^4-node fleet");
+        assert_eq!(SESSIONS, 100_000, "the scale row is a 10^5-session fleet");
+        let ne = CLUSTERS * EDGES_PER_CLUSTER;
+        let per_shard = SESSIONS / SHARDS;
+        let blocks: Vec<ShardBlock> = (0..SHARDS)
+            .map(|g| {
+                let mut block = ShardBlock::default();
+                for s in g * per_shard..(g + 1) * per_shard {
+                    // sessions stay cluster-local: 4-row DAG, 5 lanes over
+                    // the owning cluster's edge pool (session-varied picks)
+                    let base = (s / SESSIONS_PER_CLUSTER) * EDGES_PER_CLUSTER;
+                    let e = |j: usize| base + (s + 2 * j + 1) % EDGES_PER_CLUSTER;
+                    let l0 = block.lane_edge.len();
+                    block.lane_edge.extend([e(0), e(1)]);
+                    block.lane_dst.extend([1, 2]);
+                    block.phi.extend([0.5, 0.5]);
+                    let l1 = block.lane_edge.len();
+                    block.lane_edge.extend([e(2), e(3)]);
+                    block.lane_dst.extend([2, 3]);
+                    block.phi.extend([0.5, 0.5]);
+                    let l2 = block.lane_edge.len();
+                    block.lane_edge.push(e(4));
+                    block.lane_dst.push(3);
+                    block.phi.push(1.0);
+                    let l3 = block.lane_edge.len();
+                    block.rows.push(vec![(l0, l1), (l1, l2), (l2, l3), (l3, l3)]);
+                    block.sessions.push(s);
+                    block.lam.push(0.0);
+                    block.src.push(0);
+                }
+                block
+            })
+            .collect();
+        let mut plane = ShardPlane::new(
+            blocks,
+            vec![50.0; ne],
+            vec![jowr::model::cost::CostKind::Exp; ne],
+            1,
+            Arc::new(Loopback::new(SHARDS)),
+            Duration::from_secs(30),
+        )
+        .expect("fleet plane");
+        assert_eq!(plane.n_sessions(), SESSIONS);
+        plane.set_lam(&vec![0.01; SESSIONS]);
+        let rounds = if quick { 4 } else { 24 };
+        println!(
+            "--- sharded fleet (10^4 nodes, 10^5 sessions, K={SHARDS}, S=1, \
+             {rounds} rounds) ---"
+        );
+        let (_, dt) = Bencher::once("fleet1e4/sharded_rounds", || {
+            for _ in 0..rounds {
+                plane.run_round(0.05).expect("staleness-bounded round");
+            }
+        });
+        fleet_throughput = (SESSIONS * rounds) as f64 / dt.max(1e-12);
+        let comm = plane.transport().comm();
+        println!(
+            "sharded rounds: {rounds} rounds x {SESSIONS} sessions in {dt:.3}s \
+             ({:.2}M session-rounds/s, {} gossip msgs, {:.1} MB)",
+            fleet_throughput / 1e6,
+            comm.messages,
+            comm.bytes as f64 / 1e6
+        );
+        // protocol accounting: one delta per (shard, peer) per round
+        assert_eq!(comm.messages, (rounds * SHARDS * (SHARDS - 1)) as u64);
+        // the mirror updates kept every row on the simplex
+        for block in plane.blocks() {
+            for rows in &block.rows {
+                for &(l0, l1) in rows {
+                    if l1 - l0 < 2 {
+                        continue;
+                    }
+                    let sum: f64 = block.phi[l0..l1].iter().sum();
+                    assert!(
+                        (sum - 1.0).abs() < 1e-9 && block.phi[l0..l1].iter().all(|p| p.is_finite()),
+                        "row left the simplex: sum {sum}"
+                    );
+                }
+            }
+        }
+        // CI throughput floor (mirrored in ci/check_bench_regression.py)
+        assert!(
+            fleet_throughput >= 250_000.0,
+            "sharded plane fell under the 250k session-rounds/s floor: {fleet_throughput:.0}"
+        );
+    }
+
     // summary table
     println!("\n=== hotpath summary ===");
     for m in &b.results {
@@ -407,6 +523,9 @@ fn main() {
     }
     // not a ratio: raw DES throughput, floored by the CI regression gate
     speedups.push(("sim_replay_events_per_sec".to_string(), sim_events_per_sec));
+    // not a ratio either: raw sharded-plane throughput on the 10⁴-node /
+    // 10⁵-session fleet (sessions×rounds per second), floored by the gate
+    speedups.push(("fleet1e4/sharded_round_throughput".to_string(), fleet_throughput));
     for (name, x) in &speedups {
         println!("{name:<40} {x:.2}x");
     }

@@ -17,9 +17,11 @@ batched kernels (``mc{25,40}/simd_vs_batched_w{1,4}``; CI runs the bench
 with ``--features simd`` so these rows exist), a single-block
 ``prepare_dirty`` beats a full prepare by ≥ 3× on the clustered fleet,
 and the row-sparse OMD probe loop beats the dense observe loop by ≥ 2×
-(``clusters40/omd_probe_sparse_vs_dense``) — plus a raw-throughput
-floor on the request-level DES replay (``sim_replay_events_per_sec`` is
-events/sec, not a ratio). (The bench binary asserts
+(``clusters40/omd_probe_sparse_vs_dense``) — plus raw-throughput
+floors on the request-level DES replay (``sim_replay_events_per_sec``,
+events/sec) and on the sharded coordination plane's 10^4-node /
+10^5-session scale row (``fleet1e4/sharded_round_throughput``,
+sessions x rounds per second; neither is a ratio). (The bench binary asserts
 the same bounds; the gate re-checks them from the artifact so a stale or
 hand-edited JSON cannot slip through.) Pass ``--no-default-requires`` to
 drop them (e.g. for older artifacts).
@@ -69,6 +71,9 @@ DEFAULT_REQUIRES = [
     ("clusters40/omd_probe_sparse_vs_dense", 2.0),
     # not a ratio: raw DES replay throughput (events/sec) from the sim bench
     ("sim_replay_events_per_sec", 200_000.0),
+    # not a ratio: sharded-plane throughput (sessions x rounds per second)
+    # on the synthetic 10^4-node / 10^5-session fleet at K=4, S=1
+    ("fleet1e4/sharded_round_throughput", 250_000.0),
 ]
 
 

@@ -173,8 +173,10 @@ impl DistributedOmd {
     /// node/edge/session counts, the per-session lane wiring, link
     /// capacities, and the cost family. Two problems with the same digest
     /// deploy identical specs, so a matching digest (plus a matching φ)
-    /// is what makes fleet reuse across steps sound.
-    fn digest(problem: &Problem) -> u64 {
+    /// is what makes fleet reuse across steps sound. Shared with the
+    /// sharded plane ([`super::shard::ShardedOmd`]), which uses the same
+    /// redeploy contract.
+    pub(crate) fn fleet_digest(problem: &Problem) -> u64 {
         let mut h = crate::util::hash::Fnv64::new();
         let net = &problem.net;
         h.mix(net.n_nodes() as u64);
@@ -235,7 +237,7 @@ impl DistributedOmd {
             leader_rx,
             handles,
             s_lanes,
-            digest: Self::digest(problem),
+            digest: Self::fleet_digest(problem),
             phi: phi.clone(),
         }
     }
@@ -247,7 +249,7 @@ impl DistributedOmd {
     /// initializer while the old fleet had converged state). Exact-equality
     /// on φ keeps steady-state reuse free while making reuse always sound.
     fn ensure_deployed(&mut self, problem: &Problem, phi: &Phi) {
-        let digest = Self::digest(problem);
+        let digest = Self::fleet_digest(problem);
         let in_sync = self
             .deployment
             .as_ref()
@@ -393,6 +395,8 @@ impl Router for DistributedOmd {
             messages: self.comm_base.0 + m,
             bytes: self.comm_base.1 + b,
             rounds: self.rounds,
+            // single-leader fabric: no per-shard breakdown
+            shards: Vec::new(),
         })
     }
 }

@@ -25,6 +25,14 @@ pub enum Msg {
     /// Node reports its updated rows to the leader:
     /// (session, edge, fraction) triples.
     RowsReport { from: usize, rows: Vec<(usize, usize, f64)> },
+    /// Shard-to-shard λ-sync gossip (the sharded plane's data plane):
+    /// shard `shard`'s round-`round` per-edge flow aggregate `A_k[e]`, as a
+    /// sparse delta — only the entries that changed bitwise since the
+    /// shard's previous round, carrying their new absolute value. Peers
+    /// reconstruct `A_k` by overlaying the entries onto their stored copy,
+    /// so reconstruction is exact and order-independent (one delta per
+    /// peer per round).
+    FlowDelta { shard: usize, round: u64, edges: Vec<(usize, f64)> },
     /// Orderly shutdown.
     Shutdown,
 }
@@ -41,6 +49,8 @@ impl Msg {
             // rate (8) + session tag (4) + sender id (4)
             Msg::Ingress { .. } => 8 + 2 * 4,
             Msg::RowsReport { rows, .. } => 8 + rows.len() * 20,
+            // round (8) + shard id (4) + per entry: edge id (4) + value (8)
+            Msg::FlowDelta { edges, .. } => 8 + 4 + edges.len() * 12,
             Msg::Shutdown => 1,
         }
     }
@@ -56,5 +66,8 @@ mod tests {
         let big = Msg::RowsReport { from: 0, rows: vec![(0, 0, 0.5); 10] };
         assert!(big.wire_bytes() > small.wire_bytes());
         assert!(Msg::Shutdown.wire_bytes() >= 1);
+        let lean = Msg::FlowDelta { shard: 0, round: 3, edges: vec![(1, 0.5)] };
+        let fat = Msg::FlowDelta { shard: 0, round: 3, edges: vec![(1, 0.5); 7] };
+        assert!(fat.wire_bytes() > lean.wire_bytes());
     }
 }

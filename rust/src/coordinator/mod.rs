@@ -17,6 +17,15 @@
 //!   queues, real DNN execution via the PJRT runtime) producing *measured*
 //!   utilities for the online learner; its oracle rides the shared
 //!   [`crate::engine::FlowEngine`] with the `--workers` knob.
+//! * [`transport`] — the shard-to-shard message fabric abstraction
+//!   ([`transport::Transport`]: loopback now, sockets later) plus the
+//!   transport-agnostic [`transport::CommStats`] accounting with its
+//!   per-shard breakdown.
+//! * [`shard`] — the sharded coordination plane:
+//!   [`shard::ShardedOmd`] (`"sharded-omd"` in the registry) partitions
+//!   sessions across K leader shards running staleness-bounded rounds
+//!   with λ-sync delta gossip; K = 1 degenerates to
+//!   [`leader::DistributedOmd`].
 
 pub mod events;
 pub mod leader;
@@ -24,3 +33,5 @@ pub mod messages;
 pub mod net;
 pub mod node;
 pub mod serving;
+pub mod shard;
+pub mod transport;

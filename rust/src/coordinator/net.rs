@@ -8,19 +8,10 @@ use std::sync::Arc;
 
 use super::messages::Msg;
 
-/// Communication accounting for a distributed run (the paper's
-/// communication-overhead metric). Produced from the fabric's delivered
-/// counters; exposed on [`crate::session::RunReport::comm`] via
-/// [`crate::routing::Router::comm_stats`].
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
-pub struct CommStats {
-    /// Messages delivered over the fabric (control + data plane).
-    pub messages: u64,
-    /// Approximate wire bytes (see [`super::messages::Msg::wire_bytes`]).
-    pub bytes: u64,
-    /// Barriered rounds driven by the leader.
-    pub rounds: usize,
-}
+// The accounting type grew a per-shard breakdown and lives with the
+// [`super::transport::Transport`] trait now; re-exported here so the
+// long-standing `coordinator::net::CommStats` path keeps working.
+pub use super::transport::CommStats;
 
 /// Shared counters for fabric traffic.
 #[derive(Debug, Default)]

@@ -1,0 +1,856 @@
+//! Sharded coordination plane: OMD-RT rounds partitioned across K leader
+//! shards with staleness-bounded λ-sync gossip.
+//!
+//! The single-leader plane ([`super::leader::DistributedOmd`]) sweeps every
+//! session per barriered round — correct and bit-identical to the
+//! centralized router, but one leader cannot reach 10⁴-node fleets. This
+//! module shards the plane:
+//!
+//! * **Partition** — sessions are split into K contiguous ranges, snapped
+//!   to the [`crate::graph::augmented::BatchCsr`] version-block boundaries
+//!   when those tile the session space (single-class layouts), falling
+//!   back to an even contiguous split otherwise
+//!   ([`partition_sessions`]).
+//! * **Rounds** — each shard runs the full OMD-RT round over *its own*
+//!   sessions: eq. 1/4 forward sweep → per-edge flow aggregate `A_k[e]` →
+//!   eq. 21 pricing on the synced total `F[e] = Σ_k A_k[e]` → eq. 20–21
+//!   reverse marginal sweep → eq. 22 mirror updates (the shared
+//!   [`OmdRouter::update_row`] kernel).
+//! * **Gossip** — instead of a full broadcast, shards exchange
+//!   [`Msg::FlowDelta`] messages over a [`Transport`]: the bitwise-changed
+//!   entries of `A_k` only. Reconstruction at the peers is exact.
+//! * **Staleness bound S** — a shard at round `r` prices against peer
+//!   aggregates from round `max(0, r − S)` *exactly* (deterministic lag,
+//!   not "most recent available"), so a run is a pure function of
+//!   `(problem, φ⁰, Λ, K, S)`. The paper's OMD regret analysis (and the
+//!   asynchronous congestion-routing follow-ups, arXiv 2205.07178)
+//!   tolerates bounded gradient delay, which is precisely what S encodes.
+//!   A peer that cannot satisfy the bound within the sync timeout surfaces
+//!   as [`SessionError::StalenessExceeded`] — never a hang.
+//!
+//! `K = 1` degenerates to the current single-leader plane:
+//! [`ShardedOmd`] delegates to an inner [`DistributedOmd`], so the
+//! existing loopback bit-identity pin (distributed ≡ centralized OMD-RT)
+//! carries over structurally.
+//!
+//! The round kernel operates on the compact lane-level [`ShardBlock`]
+//! layout (no dense per-session edge rows), so the same code path drives
+//! both real [`Problem`]s and the 10⁴-node / 10⁵-session synthetic fleet
+//! of the `fleet1e4/sharded_round_throughput` hotpath bench.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::leader::DistributedOmd;
+use super::messages::Msg;
+use super::transport::{CommStats, Loopback, Transport};
+use crate::engine::{FlowEngine, SessionMask};
+use crate::graph::augmented::AugmentedNet;
+use crate::model::cost::CostKind;
+use crate::model::flow::Phi;
+use crate::model::Problem;
+use crate::routing::omd::OmdRouter;
+use crate::routing::Router;
+use crate::session::error::SessionError;
+
+/// One shard's compact, lane-level view of its owned sessions. Node ids
+/// are session-local *topo positions*: row `j` of a session is its `j`-th
+/// node in forward topological order, and [`ShardBlock::lane_dst`] points
+/// at the destination's topo position within the same session. This keeps
+/// a shard's footprint O(Σ lanes) instead of O(sessions × edges), which is
+/// what makes 10⁵-session fleets representable at all.
+#[derive(Clone, Debug, Default)]
+pub struct ShardBlock {
+    /// Global ids of the owned sessions (ascending).
+    pub sessions: Vec<usize>,
+    /// Arrival rate λ_w per owned session (refreshed every round).
+    pub lam: Vec<f64>,
+    /// Topo position of the virtual source per owned session.
+    pub src: Vec<usize>,
+    /// Per session: lane span `(start, end)` per topo position, into the
+    /// flat lane arrays.
+    pub rows: Vec<Vec<(usize, usize)>>,
+    /// Flat lanes (session-major, rows in topo order): global edge id.
+    pub lane_edge: Vec<usize>,
+    /// Topo position of each lane's head node within its session.
+    pub lane_dst: Vec<usize>,
+    /// Routing fraction per lane — the shard-owned slice of φ.
+    pub phi: Vec<f64>,
+}
+
+impl ShardBlock {
+    /// Total lanes across the owned sessions.
+    pub fn n_lanes(&self) -> usize {
+        self.lane_edge.len()
+    }
+}
+
+/// One peer's reconstructed flow aggregate plus the retained history the
+/// staleness bound needs (rounds `r − S ..= r`).
+#[derive(Clone, Debug, Default)]
+struct PeerAgg {
+    /// Running aggregate after overlaying every delta received so far.
+    latest: Vec<f64>,
+    /// Retained versions, ascending by round.
+    ring: VecDeque<(u64, Vec<f64>)>,
+}
+
+impl PeerAgg {
+    fn apply(&mut self, round: u64, edges: &[(usize, f64)], keep: usize) {
+        for &(e, v) in edges {
+            self.latest[e] = v;
+        }
+        self.ring.push_back((round, self.latest.clone()));
+        while self.ring.len() > keep {
+            self.ring.pop_front();
+        }
+    }
+
+    fn version(&self, round: u64) -> Option<&[f64]> {
+        self.ring
+            .iter()
+            .find(|&&(r, _)| r == round)
+            .map(|(_, agg)| agg.as_slice())
+    }
+}
+
+/// Per-shard gossip state (publish history + peer reconstructions).
+#[derive(Clone, Debug, Default)]
+struct Gossip {
+    /// The aggregate this shard published last round (delta baseline).
+    own_prev: Vec<f64>,
+    /// One [`PeerAgg`] per shard index (the own slot stays empty).
+    peers: Vec<PeerAgg>,
+}
+
+/// The sharded round driver: K [`ShardBlock`]s, the shared edge tables,
+/// and the gossip state, stepped one staleness-bounded round at a time
+/// over a [`Transport`]. Used by [`ShardedOmd`] for real problems and
+/// driven directly by the scale bench on synthetic fleets.
+pub struct ShardPlane {
+    blocks: Vec<ShardBlock>,
+    edge_cap: Vec<f64>,
+    edge_kind: Vec<CostKind>,
+    staleness: usize,
+    transport: Arc<dyn Transport>,
+    sync_timeout: Duration,
+    round: u64,
+    gossip: Vec<Gossip>,
+}
+
+impl ShardPlane {
+    /// Build a plane over pre-lowered blocks. `edge_cap` / `edge_kind` are
+    /// the global per-edge capacity and cost-family tables; `transport`
+    /// must connect exactly `blocks.len()` shards.
+    pub fn new(
+        blocks: Vec<ShardBlock>,
+        edge_cap: Vec<f64>,
+        edge_kind: Vec<CostKind>,
+        staleness: usize,
+        transport: Arc<dyn Transport>,
+        sync_timeout: Duration,
+    ) -> Result<ShardPlane, SessionError> {
+        if transport.shards() != blocks.len() {
+            return Err(SessionError::InvalidScenario {
+                what: format!(
+                    "transport connects {} shards but the plane has {} blocks",
+                    transport.shards(),
+                    blocks.len()
+                ),
+            });
+        }
+        let ne = edge_cap.len();
+        let k = blocks.len();
+        let gossip = (0..k)
+            .map(|_| Gossip {
+                own_prev: vec![0.0; ne],
+                peers: (0..k).map(|_| PeerAgg { latest: vec![0.0; ne], ring: VecDeque::new() }).collect(),
+            })
+            .collect();
+        Ok(ShardPlane {
+            blocks,
+            edge_cap,
+            edge_kind,
+            staleness,
+            transport,
+            sync_timeout,
+            round: 0,
+            gossip,
+        })
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn n_sessions(&self) -> usize {
+        self.blocks.iter().map(|b| b.sessions.len()).sum()
+    }
+
+    /// Rounds completed so far.
+    pub fn rounds(&self) -> u64 {
+        self.round
+    }
+
+    pub fn blocks(&self) -> &[ShardBlock] {
+        &self.blocks
+    }
+
+    pub fn transport(&self) -> &Arc<dyn Transport> {
+        &self.transport
+    }
+
+    /// Refresh the per-session arrival rates from a global Λ vector.
+    pub fn set_lam(&mut self, lam: &[f64]) {
+        for block in &mut self.blocks {
+            for (slot, &w) in block.sessions.iter().enumerate() {
+                block.lam[slot] = lam[w];
+            }
+        }
+    }
+
+    /// One staleness-bounded round across every shard (scoped threads; a
+    /// shard that cannot sync within the timeout aborts the round with a
+    /// typed error). Deterministic for a fixed `(blocks, Λ, K, S)` at any
+    /// thread interleaving: each shard's arithmetic depends only on the
+    /// per-peer round-tagged aggregates, never on arrival order.
+    pub fn run_round(&mut self, eta: f64) -> Result<(), SessionError> {
+        let round = self.round;
+        let staleness = self.staleness;
+        let timeout = self.sync_timeout;
+        let k = self.blocks.len();
+        let (caps, kinds) = (&self.edge_cap, &self.edge_kind);
+        let transport = &self.transport;
+        let results: Vec<Result<(), SessionError>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .blocks
+                .iter_mut()
+                .zip(self.gossip.iter_mut())
+                .enumerate()
+                .map(|(shard, (block, gossip))| {
+                    let t = Arc::clone(transport);
+                    scope.spawn(move || {
+                        shard_round(
+                            shard, k, block, gossip, caps, kinds, round, staleness, eta,
+                            t.as_ref(), timeout,
+                        )
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("shard thread panicked")).collect()
+        });
+        for r in results {
+            r?;
+        }
+        self.round += 1;
+        Ok(())
+    }
+}
+
+/// One shard's half of a round: forward sweep → gossip → staleness-bounded
+/// sync → pricing → reverse sweep → mirror updates.
+#[allow(clippy::too_many_arguments)]
+fn shard_round(
+    shard: usize,
+    k: usize,
+    block: &mut ShardBlock,
+    gossip: &mut Gossip,
+    caps: &[f64],
+    kinds: &[CostKind],
+    round: u64,
+    staleness: usize,
+    eta: f64,
+    transport: &dyn Transport,
+    timeout: Duration,
+) -> Result<(), SessionError> {
+    let ne = caps.len();
+    // --- eq. 1/4 forward sweeps: per-session node rates t_i(w) and the
+    //     shard's per-edge flow aggregate A_k[e], summed in ascending
+    //     session order (deterministic association)
+    let mut t_flat: Vec<f64> = Vec::new();
+    let mut t_off: Vec<usize> = Vec::with_capacity(block.sessions.len() + 1);
+    let mut own = vec![0.0f64; ne];
+    t_off.push(0);
+    for (s, rows) in block.rows.iter().enumerate() {
+        let base = t_flat.len();
+        t_flat.resize(base + rows.len(), 0.0);
+        t_flat[base + block.src[s]] = block.lam[s];
+        for (j, &(l0, l1)) in rows.iter().enumerate() {
+            let ti = t_flat[base + j];
+            if ti <= 0.0 {
+                continue;
+            }
+            for l in l0..l1 {
+                let f = ti * block.phi[l];
+                own[block.lane_edge[l]] += f;
+                t_flat[base + block.lane_dst[l]] += f;
+            }
+        }
+        t_off.push(t_flat.len());
+    }
+    // --- gossip the λ-sync delta: only the bitwise-changed aggregate
+    //     entries, with their new absolute value (exact reconstruction)
+    let edges: Vec<(usize, f64)> = own
+        .iter()
+        .zip(&gossip.own_prev)
+        .enumerate()
+        .filter(|(_, (a, b))| a.to_bits() != b.to_bits())
+        .map(|(e, (&a, _))| (e, a))
+        .collect();
+    for p in 0..k {
+        if p != shard {
+            transport.send(shard, p, Msg::FlowDelta { shard, round, edges: edges.clone() });
+        }
+    }
+    gossip.own_prev.copy_from_slice(&own);
+    // --- staleness-bounded sync: in lockstep every peer publishes exactly
+    //     one delta per round, so drain K−1 messages (they advance the
+    //     per-peer reconstructions), then read each peer at round
+    //     `max(0, r − S)` — the exact-lag version the bound prescribes
+    let stale_err = || SessionError::StalenessExceeded {
+        shard,
+        round: round as usize,
+        bound: staleness,
+    };
+    let mut pending = k - 1;
+    while pending > 0 {
+        let msg = transport.recv(shard, timeout).ok_or_else(stale_err)?;
+        match msg {
+            Msg::FlowDelta { shard: from, round: r, edges } => {
+                gossip.peers[from].apply(r, &edges, staleness + 1);
+                pending -= 1;
+            }
+            other => panic!("unexpected message at shard {shard}: {other:?}"),
+        }
+    }
+    let needed = round.saturating_sub(staleness as u64);
+    if needed < round {
+        transport.note_stale_round(shard);
+    }
+    // --- synced total flows F[e] = Σ_k A_k[e] in ascending shard order
+    //     (own aggregate fresh, peers ≤ S rounds stale)
+    let mut flows = vec![0.0f64; ne];
+    for p in 0..k {
+        let agg: &[f64] =
+            if p == shard { &own } else { gossip.peers[p].version(needed).ok_or_else(stale_err)? };
+        for (f, a) in flows.iter_mut().zip(agg) {
+            *f += a;
+        }
+    }
+    // --- eq. 21 pricing at the synced flows
+    let dprime: Vec<f64> =
+        (0..ne).map(|e| kinds[e].derivative(flows[e], caps[e])).collect();
+    // --- eq. 20–21 reverse marginal sweeps + eq. 22 mirror updates
+    let mut r_buf: Vec<f64> = Vec::new();
+    let mut delta_buf: Vec<f64> = Vec::new();
+    for (s, rows) in block.rows.iter().enumerate() {
+        let base = t_off[s];
+        r_buf.clear();
+        r_buf.resize(rows.len(), 0.0);
+        for j in (0..rows.len()).rev() {
+            let (l0, l1) = rows[j];
+            let mut acc = 0.0;
+            for l in l0..l1 {
+                let f = block.phi[l];
+                if f > 0.0 {
+                    acc += f * (dprime[block.lane_edge[l]] + r_buf[block.lane_dst[l]]);
+                }
+            }
+            // destinations have no lanes and stay at r = 0 (eq. 20)
+            r_buf[j] = acc;
+        }
+        for (j, &(l0, l1)) in rows.iter().enumerate() {
+            if l1 - l0 < 2 || t_flat[base + j] <= 0.0 {
+                continue;
+            }
+            delta_buf.clear();
+            delta_buf.extend(
+                (l0..l1).map(|l| dprime[block.lane_edge[l]] + r_buf[block.lane_dst[l]]),
+            );
+            OmdRouter::update_row(&mut block.phi[l0..l1], &delta_buf, eta);
+        }
+    }
+    Ok(())
+}
+
+/// Partition sessions into `k` contiguous ranges. When the
+/// [`crate::graph::augmented::BatchCsr`] version blocks tile the session
+/// space as contiguous runs (single-class layouts), shard cuts snap to
+/// block boundaries so each shard owns whole version blocks; otherwise
+/// (multi-class class-major layouts, where block session ids interleave)
+/// the split is even. `k` is clamped to the session count, so tiny
+/// problems may deploy fewer effective shards than requested.
+pub fn partition_sessions(net: &AugmentedNet, k: usize) -> Vec<(usize, usize)> {
+    let n = net.n_sessions();
+    let k = k.max(1).min(n.max(1));
+    // block end boundaries, if the blocks tile 0..n contiguously
+    let mut cuts: Vec<usize> = Vec::new();
+    let mut tiled = true;
+    let mut next = 0usize;
+    for b in &net.batch.blocks {
+        if b.sessions.is_empty() {
+            continue;
+        }
+        if b.sessions[0] != next || b.sessions.windows(2).any(|w| w[1] != w[0] + 1) {
+            tiled = false;
+            break;
+        }
+        next = b.sessions.last().unwrap() + 1;
+        cuts.push(next);
+    }
+    tiled = tiled && next == n && cuts.len() >= k;
+    let mut ranges = Vec::with_capacity(k);
+    let mut start = 0usize;
+    if tiled {
+        let b = cuts.len();
+        let mut ci = 0usize;
+        for g in 0..k {
+            let end = if g == k - 1 {
+                n
+            } else {
+                // close the shard at the first boundary reaching its
+                // proportional share, leaving one block per remaining shard
+                let target = (g + 1) * n / k;
+                let max_ci = b - (k - 1 - g);
+                let mut j = ci;
+                while j + 1 < max_ci && cuts[j] < target {
+                    j += 1;
+                }
+                ci = j + 1;
+                cuts[j]
+            };
+            ranges.push((start, end));
+            start = end;
+        }
+    } else {
+        let (base, rem) = (n / k, n % k);
+        for g in 0..k {
+            let len = base + usize::from(g < rem);
+            ranges.push((start, start + len));
+            start += len;
+        }
+    }
+    ranges
+}
+
+/// Lower a contiguous session range of a [`Problem`] into the compact
+/// [`ShardBlock`] layout, seeding lane φ from `phi`.
+pub fn lower_block(problem: &Problem, phi: &Phi, s0: usize, s1: usize) -> ShardBlock {
+    let net = &problem.net;
+    let mut block = ShardBlock::default();
+    let mut pos = vec![usize::MAX; net.n_nodes()];
+    for w in s0..s1 {
+        let topo = net.session_topo(w);
+        for (j, &i) in topo.iter().enumerate() {
+            pos[i] = j;
+        }
+        let mut rows = Vec::with_capacity(topo.len());
+        for &i in topo {
+            let l0 = block.lane_edge.len();
+            for e in net.session_out(w, i) {
+                block.lane_edge.push(e);
+                block.lane_dst.push(pos[net.graph.edge(e).dst]);
+                block.phi.push(phi.frac[w][e]);
+            }
+            rows.push((l0, block.lane_edge.len()));
+        }
+        block.sessions.push(w);
+        block.lam.push(0.0);
+        block.src.push(pos[AugmentedNet::SOURCE]);
+        block.rows.push(rows);
+    }
+    block
+}
+
+/// A deployed plane plus what it was built for (redeploy detection, same
+/// contract as the single-leader fleet).
+struct PlaneDeployment {
+    plane: ShardPlane,
+    digest: u64,
+    /// The routing state the blocks currently hold (synced after every
+    /// successful round); a caller handing in a different φ forces a
+    /// redeploy, exactly like the single-leader fleet.
+    phi: Phi,
+}
+
+/// Sharded OMD-RT behind the standard [`Router`] protocol: registry name
+/// `"sharded-omd"`. `K = 1` delegates to the single-leader
+/// [`DistributedOmd`] (bit-identical to centralized OMD-RT by the existing
+/// loopback pin); `K ≥ 2` runs staleness-bounded rounds on a
+/// [`ShardPlane`]. One [`Router::step`] is one plane round; the adaptive
+/// η schedule is the same backtracking rule every OMD variant shares.
+pub struct ShardedOmd {
+    /// Base mirror-descent step size η.
+    pub eta: f64,
+    /// Backtracking η adaptation (default on).
+    pub adaptive: bool,
+    shards: usize,
+    staleness: usize,
+    eta_cur: f64,
+    last_cost: Option<f64>,
+    /// Leader-side cost telemetry (drives the adaptive η rule).
+    engine: FlowEngine,
+    rounds: usize,
+    /// The K = 1 degenerate case: the current single-leader plane.
+    inner: Option<DistributedOmd>,
+    deployment: Option<PlaneDeployment>,
+    transport_override: Option<Arc<dyn Transport>>,
+    sync_timeout: Duration,
+    fault: Option<SessionError>,
+    touched: Option<SessionMask>,
+    comm_base: CommStats,
+}
+
+impl ShardedOmd {
+    pub fn new(eta: f64, shards: usize, staleness: usize) -> Self {
+        let shards = shards.max(1);
+        ShardedOmd {
+            eta,
+            adaptive: true,
+            shards,
+            staleness,
+            eta_cur: eta,
+            last_cost: None,
+            engine: FlowEngine::new(),
+            rounds: 0,
+            inner: (shards == 1).then(|| DistributedOmd::new(eta)),
+            deployment: None,
+            transport_override: None,
+            sync_timeout: Duration::from_secs(5),
+            fault: None,
+            touched: None,
+            comm_base: CommStats::default(),
+        }
+    }
+
+    /// Fixed-step variant (theory experiments).
+    pub fn fixed(eta: f64, shards: usize, staleness: usize) -> Self {
+        let mut router = Self::new(eta, shards, staleness);
+        router.adaptive = false;
+        router.inner = (router.shards == 1).then(|| DistributedOmd::fixed(eta));
+        router
+    }
+
+    /// Swap the transport (e.g. a [`super::transport::Blackhole`] for
+    /// fault-injection tests, or a socket transport later). The transport
+    /// must connect exactly the effective shard count.
+    pub fn with_transport(mut self, transport: Arc<dyn Transport>) -> Self {
+        self.transport_override = Some(transport);
+        self
+    }
+
+    /// How long a shard waits for a peer delta before declaring the
+    /// staleness bound violated (default 5 s).
+    pub fn with_sync_timeout(mut self, timeout: Duration) -> Self {
+        self.sync_timeout = timeout;
+        self
+    }
+
+    /// The staleness fault of the most recent [`Router::step`], if any
+    /// (the infallible `step` stores it; [`ShardedOmd::try_step`] returns
+    /// it directly).
+    pub fn fault(&self) -> Option<&SessionError> {
+        self.fault.as_ref()
+    }
+
+    pub fn take_fault(&mut self) -> Option<SessionError> {
+        self.fault.take()
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards
+    }
+
+    pub fn staleness_bound(&self) -> usize {
+        self.staleness
+    }
+
+    fn ensure_deployed(&mut self, problem: &Problem, phi: &Phi) -> Result<(), SessionError> {
+        let digest = DistributedOmd::fleet_digest(problem);
+        let in_sync = self
+            .deployment
+            .as_ref()
+            .is_some_and(|d| d.digest == digest && d.phi == *phi);
+        if in_sync {
+            return Ok(());
+        }
+        self.teardown();
+        // a redeploy is a fresh run: restart the backtracking schedule
+        self.eta_cur = self.eta;
+        self.last_cost = None;
+        let ranges = partition_sessions(&problem.net, self.shards);
+        let blocks: Vec<ShardBlock> =
+            ranges.iter().map(|&(s0, s1)| lower_block(problem, phi, s0, s1)).collect();
+        let net = &problem.net;
+        let ne = net.graph.n_edges();
+        let edge_cap: Vec<f64> = (0..ne).map(|e| net.graph.edge(e).capacity).collect();
+        let edge_kind: Vec<CostKind> = (0..ne).map(|e| problem.edge_kind(e)).collect();
+        let transport = match &self.transport_override {
+            Some(t) => Arc::clone(t),
+            None => Arc::new(Loopback::new(blocks.len())) as Arc<dyn Transport>,
+        };
+        let plane = ShardPlane::new(
+            blocks,
+            edge_cap,
+            edge_kind,
+            self.staleness,
+            transport,
+            self.sync_timeout,
+        )?;
+        self.deployment = Some(PlaneDeployment { plane, digest, phi: phi.clone() });
+        Ok(())
+    }
+
+    /// Fold the live transport counters into the carried-over base and
+    /// drop the plane (the next step redeploys).
+    fn teardown(&mut self) {
+        if let Some(dep) = self.deployment.take() {
+            self.comm_base.absorb(&dep.plane.transport().comm());
+        }
+    }
+
+    /// One sharded round, with staleness faults surfaced as a typed error
+    /// instead of being parked on [`ShardedOmd::fault`]. On error φ is
+    /// untouched and the plane is torn down (the next step redeploys
+    /// cleanly).
+    pub fn try_step(
+        &mut self,
+        problem: &Problem,
+        lam: &[f64],
+        phi: &mut Phi,
+    ) -> Result<f64, SessionError> {
+        if let Some(inner) = self.inner.as_mut() {
+            // K = 1: the single-leader plane, bit for bit
+            return Ok(inner.step(problem, lam, phi));
+        }
+        self.ensure_deployed(problem, phi)?;
+        let cost_before = self.engine.evaluate_cost(problem, phi, lam);
+        if self.adaptive {
+            self.eta_cur =
+                OmdRouter::adapt_eta(self.eta_cur, self.eta, self.last_cost, cost_before);
+        }
+        self.last_cost = Some(cost_before);
+        let dep = self.deployment.as_mut().expect("deployed above");
+        dep.plane.set_lam(lam);
+        if let Err(e) = dep.plane.run_round(self.eta_cur) {
+            // a failed round may have updated some shards' rows; drop the
+            // plane so the next step rebuilds from the caller's clean φ
+            self.teardown();
+            return Err(e);
+        }
+        // scatter the shard-owned lanes back into the dense φ
+        for block in dep.plane.blocks() {
+            for (slot, &w) in block.sessions.iter().enumerate() {
+                let row = &mut phi.frac[w];
+                for &(l0, l1) in &block.rows[slot] {
+                    for l in l0..l1 {
+                        row[block.lane_edge[l]] = block.phi[l];
+                    }
+                }
+            }
+        }
+        dep.phi.clone_from(phi);
+        self.rounds += 1;
+        self.touched = Some(SessionMask::all(problem.net.n_sessions()));
+        Ok(cost_before)
+    }
+}
+
+impl Router for ShardedOmd {
+    fn name(&self) -> &'static str {
+        "sharded-omd"
+    }
+
+    /// One sharded round. A staleness fault is stored on
+    /// [`ShardedOmd::fault`] (φ untouched, previous cost returned) so the
+    /// infallible `Router` protocol keeps streaming; use
+    /// [`ShardedOmd::try_step`] for the typed result.
+    fn step(&mut self, problem: &Problem, lam: &[f64], phi: &mut Phi) -> f64 {
+        match self.try_step(problem, lam, phi) {
+            Ok(cost) => {
+                self.fault = None;
+                cost
+            }
+            Err(e) => {
+                self.fault = Some(e);
+                self.last_cost.unwrap_or(f64::INFINITY)
+            }
+        }
+    }
+
+    fn touched_sessions(&self) -> Option<&SessionMask> {
+        if let Some(inner) = self.inner.as_ref() {
+            return inner.touched_sessions();
+        }
+        self.touched.as_ref()
+    }
+
+    fn set_workers(&mut self, workers: usize) {
+        self.engine.set_workers(workers);
+        if let Some(inner) = self.inner.as_mut() {
+            inner.set_workers(workers);
+        }
+    }
+
+    fn set_batch_mode(&mut self, mode: crate::engine::BatchMode) {
+        self.engine.set_batch_mode(mode);
+        if let Some(inner) = self.inner.as_mut() {
+            inner.set_batch_mode(mode);
+        }
+    }
+
+    fn comm_stats(&self) -> Option<CommStats> {
+        if let Some(inner) = self.inner.as_ref() {
+            return inner.comm_stats();
+        }
+        let mut comm = self.comm_base.clone();
+        if let Some(dep) = self.deployment.as_ref() {
+            comm.absorb(&dep.plane.transport().comm());
+        }
+        comm.rounds = self.rounds;
+        Some(comm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::topologies;
+    use crate::util::rng::Rng;
+
+    fn problem(seed: u64, n: usize) -> Problem {
+        let mut rng = Rng::seed_from(seed);
+        let net = topologies::connected_er(n, 0.35, 3, &mut rng);
+        Problem::new(net, 60.0, CostKind::Exp)
+    }
+
+    #[test]
+    fn partition_snaps_to_version_blocks_when_tiled() {
+        let p = problem(1, 9);
+        let n = p.net.n_sessions();
+        for k in 1..=n.min(4) {
+            let ranges = partition_sessions(&p.net, k);
+            assert_eq!(ranges.len(), k);
+            assert_eq!(ranges[0].0, 0);
+            assert_eq!(ranges[k - 1].1, n);
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "ranges must tile");
+                assert!(w[0].0 < w[0].1, "ranges must be non-empty");
+            }
+        }
+        // single-class: one session per version, so blocks are singleton
+        // runs and every cut lands on a block boundary by construction
+        let blocks = &p.net.batch.blocks;
+        if blocks.iter().all(|b| !b.sessions.is_empty()) {
+            let boundaries: Vec<usize> =
+                blocks.iter().map(|b| b.sessions.last().unwrap() + 1).collect();
+            for &(_, end) in &partition_sessions(&p.net, 3) {
+                assert!(end == n || boundaries.contains(&end), "cut {end} off-boundary");
+            }
+        }
+    }
+
+    #[test]
+    fn partition_clamps_to_session_count() {
+        let p = problem(2, 6);
+        let n = p.net.n_sessions();
+        let ranges = partition_sessions(&p.net, n + 5);
+        assert_eq!(ranges.len(), n);
+        assert!(ranges.iter().all(|&(a, b)| b == a + 1));
+    }
+
+    #[test]
+    fn lowered_blocks_round_trip_phi() {
+        let p = problem(3, 8);
+        let phi = Phi::uniform(&p.net);
+        let n = p.net.n_sessions();
+        let block = lower_block(&p, &phi, 0, n);
+        assert_eq!(block.sessions.len(), n);
+        // every lane's φ matches the dense row it was gathered from
+        for (slot, &w) in block.sessions.iter().enumerate() {
+            for &(l0, l1) in &block.rows[slot] {
+                for l in l0..l1 {
+                    assert_eq!(
+                        block.phi[l].to_bits(),
+                        phi.frac[w][block.lane_edge[l]].to_bits()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn k1_delegates_to_the_single_leader_plane() {
+        let p = problem(4, 7);
+        let lam = p.uniform_allocation();
+        let mut sharded = ShardedOmd::new(0.3, 1, 2);
+        let mut single = DistributedOmd::new(0.3);
+        let mut phi_a = Phi::uniform(&p.net);
+        let mut phi_b = Phi::uniform(&p.net);
+        for _ in 0..6 {
+            let a = sharded.step(&p, &lam, &mut phi_a);
+            let b = single.step(&p, &lam, &mut phi_b);
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(phi_a, phi_b);
+        assert_eq!(sharded.name(), "sharded-omd");
+    }
+
+    #[test]
+    fn sharded_rounds_are_deterministic_and_descend() {
+        let p = problem(5, 10);
+        let lam = p.uniform_allocation();
+        for (k, s) in [(2, 0), (2, 1), (3, 2)] {
+            let run = |_: usize| {
+                let mut router = ShardedOmd::fixed(0.05, k, s);
+                let mut phi = Phi::uniform(&p.net);
+                let mut traj = Vec::new();
+                for _ in 0..10 {
+                    traj.push(router.try_step(&p, &lam, &mut phi).unwrap());
+                }
+                (traj, phi)
+            };
+            let (t1, phi1) = run(0);
+            let (t2, phi2) = run(1);
+            for (a, b) in t1.iter().zip(&t2) {
+                assert_eq!(a.to_bits(), b.to_bits(), "K={k} S={s}");
+            }
+            assert_eq!(phi1, phi2, "K={k} S={s}");
+            if s == 0 {
+                // S = 0 prices every shard against the same-round flows —
+                // exactly the centralized gradient, so the small-step
+                // monotone-descent guarantee carries over; lagged rounds
+                // (S > 0) only promise bounded-delay convergence
+                for w in t1.windows(2) {
+                    assert!(w[1] <= w[0] + 1e-9, "K={k}: {} -> {}", w[0], w[1]);
+                }
+            }
+            assert!(t1.iter().all(|c| c.is_finite()), "K={k} S={s}");
+            assert!(
+                t1.last().unwrap() < t1.first().unwrap(),
+                "K={k} S={s}: no net progress over 10 rounds"
+            );
+            phi1.is_feasible(&p.net, 1e-9).unwrap();
+        }
+    }
+
+    #[test]
+    fn comm_stats_carry_per_shard_breakdown() {
+        let p = problem(6, 8);
+        let lam = p.uniform_allocation();
+        let mut router = ShardedOmd::new(0.2, 2, 1);
+        let mut phi = Phi::uniform(&p.net);
+        for _ in 0..4 {
+            router.try_step(&p, &lam, &mut phi).unwrap();
+        }
+        let comm = router.comm_stats().unwrap();
+        assert_eq!(comm.rounds, 4);
+        assert_eq!(comm.shards.len(), 2);
+        // each shard gossips one delta per peer per round
+        assert_eq!(comm.messages, 2 * 4);
+        assert!(comm.bytes > 0);
+        // S = 1: every round past the first prices against lagged peers
+        assert_eq!(comm.stale_rounds(), 2 * 3);
+    }
+}

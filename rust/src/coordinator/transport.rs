@@ -1,0 +1,285 @@
+//! Transport abstraction for the sharded coordination plane.
+//!
+//! The sharded solver ([`super::shard::ShardedOmd`]) never talks to a
+//! channel, socket, or queue directly — every inter-shard message goes
+//! through the [`Transport`] trait, so a future socket (or RDMA, or
+//! simulated-latency) transport slots in without touching solver code.
+//! Two implementations ship today:
+//!
+//! * [`Loopback`] — bounded in-process channels, one mailbox per shard.
+//!   The production default for the in-process plane and the reference
+//!   for every equivalence test.
+//! * [`Blackhole`] — counts sends and drops them; every receive times
+//!   out. Used by the staleness-violation tests: a partitioned peer must
+//!   surface as a typed [`crate::session::SessionError::StalenessExceeded`],
+//!   never as a hang.
+//!
+//! Communication accounting is transport-agnostic: every transport owns a
+//! [`ShardCounters`] and snapshots it into the unified [`CommStats`] —
+//! totals plus a per-shard breakdown (`msgs`, `bytes`, `stale_rounds`) —
+//! which [`crate::routing::Router::comm_stats`] surfaces on
+//! [`crate::session::RunReport::comm`] and the suite CSV/JSON dumps.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use super::messages::Msg;
+
+/// Per-shard communication breakdown (messages *sent by* the shard, their
+/// approximate wire bytes, and the rounds it completed on peer aggregates
+/// older than its own round — the staleness the bound S admitted).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ShardComm {
+    pub msgs: u64,
+    pub bytes: u64,
+    pub stale_rounds: u64,
+}
+
+/// Communication accounting for a distributed run (the paper's
+/// communication-overhead metric). Totals are fabric-wide; `shards` is the
+/// per-shard breakdown when the run used the sharded plane (empty for the
+/// single-leader [`crate::coordinator::leader::DistributedOmd`] fabric).
+/// Exposed on [`crate::session::RunReport::comm`] via
+/// [`crate::routing::Router::comm_stats`].
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct CommStats {
+    /// Messages delivered over the fabric (control + data plane).
+    pub messages: u64,
+    /// Approximate wire bytes (see [`super::messages::Msg::wire_bytes`]).
+    pub bytes: u64,
+    /// Rounds driven by the leader / shard plane.
+    pub rounds: usize,
+    /// Per-shard breakdown (empty when the plane is not sharded).
+    pub shards: Vec<ShardComm>,
+}
+
+impl CommStats {
+    /// Total stale rounds across every shard.
+    pub fn stale_rounds(&self) -> u64 {
+        self.shards.iter().map(|s| s.stale_rounds).sum()
+    }
+
+    /// Fold another snapshot into this one (per-shard entries merge by
+    /// index) — used to carry counters across plane redeploys.
+    pub fn absorb(&mut self, other: &CommStats) {
+        self.messages += other.messages;
+        self.bytes += other.bytes;
+        if self.shards.len() < other.shards.len() {
+            self.shards.resize(other.shards.len(), ShardComm::default());
+        }
+        for (a, b) in self.shards.iter_mut().zip(&other.shards) {
+            a.msgs += b.msgs;
+            a.bytes += b.bytes;
+            a.stale_rounds += b.stale_rounds;
+        }
+    }
+}
+
+/// Shard-to-shard message fabric. `send`/`recv` address shards by index
+/// (`0..shards()`); implementations must be callable from any thread.
+pub trait Transport: Send + Sync {
+    /// Number of shard endpoints this transport connects.
+    fn shards(&self) -> usize;
+
+    /// Deliver `msg` from shard `from` into shard `to`'s mailbox. Returns
+    /// `false` when the recipient is unreachable (counted either way).
+    fn send(&self, from: usize, to: usize, msg: Msg) -> bool;
+
+    /// Blocking receive on shard `to`'s mailbox; `None` on timeout.
+    fn recv(&self, to: usize, timeout: Duration) -> Option<Msg>;
+
+    /// Telemetry hook: shard `shard` completed a round using peer
+    /// aggregates older than its own round (within the staleness bound).
+    fn note_stale_round(&self, shard: usize);
+
+    /// Snapshot the traffic counters (the solver fills in `rounds`).
+    fn comm(&self) -> CommStats;
+}
+
+/// Shared per-shard atomic counters — the accounting backend every
+/// transport implementation reuses.
+#[derive(Debug)]
+pub struct ShardCounters {
+    msgs: Vec<AtomicU64>,
+    bytes: Vec<AtomicU64>,
+    stale: Vec<AtomicU64>,
+}
+
+impl ShardCounters {
+    pub fn new(shards: usize) -> Self {
+        let zeros = |n: usize| (0..n).map(|_| AtomicU64::new(0)).collect();
+        ShardCounters { msgs: zeros(shards), bytes: zeros(shards), stale: zeros(shards) }
+    }
+
+    /// Count one message of `bytes` wire bytes sent by `from`.
+    pub fn count_send(&self, from: usize, bytes: u64) {
+        self.msgs[from].fetch_add(1, Ordering::Relaxed);
+        self.bytes[from].fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn note_stale(&self, shard: usize) {
+        self.stale[shard].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> CommStats {
+        let shards: Vec<ShardComm> = self
+            .msgs
+            .iter()
+            .zip(&self.bytes)
+            .zip(&self.stale)
+            .map(|((m, b), s)| ShardComm {
+                msgs: m.load(Ordering::Relaxed),
+                bytes: b.load(Ordering::Relaxed),
+                stale_rounds: s.load(Ordering::Relaxed),
+            })
+            .collect();
+        CommStats {
+            messages: shards.iter().map(|s| s.msgs).sum(),
+            bytes: shards.iter().map(|s| s.bytes).sum(),
+            rounds: 0,
+            shards,
+        }
+    }
+}
+
+/// In-process transport: one bounded channel per shard mailbox. The
+/// capacity holds several rounds of gossip, so lockstep rounds never
+/// block a sender; per-sender FIFO order is preserved by the channel.
+pub struct Loopback {
+    senders: Vec<SyncSender<Msg>>,
+    receivers: Vec<Mutex<Receiver<Msg>>>,
+    counters: ShardCounters,
+}
+
+impl Loopback {
+    pub fn new(shards: usize) -> Self {
+        let cap = shards.max(1) * 4 + 16;
+        let mut senders = Vec::with_capacity(shards);
+        let mut receivers = Vec::with_capacity(shards);
+        for _ in 0..shards {
+            let (tx, rx) = sync_channel(cap);
+            senders.push(tx);
+            receivers.push(Mutex::new(rx));
+        }
+        Loopback { senders, receivers, counters: ShardCounters::new(shards) }
+    }
+}
+
+impl Transport for Loopback {
+    fn shards(&self) -> usize {
+        self.senders.len()
+    }
+
+    fn send(&self, from: usize, to: usize, msg: Msg) -> bool {
+        self.counters.count_send(from, msg.wire_bytes() as u64);
+        self.senders[to].send(msg).is_ok()
+    }
+
+    fn recv(&self, to: usize, timeout: Duration) -> Option<Msg> {
+        let rx = self.receivers[to].lock().expect("loopback mailbox poisoned");
+        match rx.recv_timeout(timeout) {
+            Ok(msg) => Some(msg),
+            Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => None,
+        }
+    }
+
+    fn note_stale_round(&self, shard: usize) {
+        self.counters.note_stale(shard);
+    }
+
+    fn comm(&self) -> CommStats {
+        self.counters.snapshot()
+    }
+}
+
+/// A transport that counts sends and drops them; every receive fails
+/// immediately. Models a fully partitioned peer set: the staleness bound
+/// can never be satisfied, so a round must surface
+/// [`crate::session::SessionError::StalenessExceeded`] instead of hanging.
+pub struct Blackhole {
+    shards: usize,
+    counters: ShardCounters,
+}
+
+impl Blackhole {
+    pub fn new(shards: usize) -> Self {
+        Blackhole { shards, counters: ShardCounters::new(shards) }
+    }
+}
+
+impl Transport for Blackhole {
+    fn shards(&self) -> usize {
+        self.shards
+    }
+
+    fn send(&self, from: usize, _to: usize, msg: Msg) -> bool {
+        self.counters.count_send(from, msg.wire_bytes() as u64);
+        false
+    }
+
+    fn recv(&self, _to: usize, _timeout: Duration) -> Option<Msg> {
+        // dropping everything means the wait can never be satisfied; fail
+        // fast instead of sleeping out the timeout
+        None
+    }
+
+    fn note_stale_round(&self, shard: usize) {
+        self.counters.note_stale(shard);
+    }
+
+    fn comm(&self) -> CommStats {
+        self.counters.snapshot()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loopback_delivers_and_counts_per_shard() {
+        let t = Loopback::new(3);
+        assert!(t.send(0, 1, Msg::FlowDelta { shard: 0, round: 0, edges: vec![(2, 0.5)] }));
+        assert!(t.send(2, 1, Msg::FlowDelta { shard: 2, round: 0, edges: vec![] }));
+        let got = t.recv(1, Duration::from_millis(100)).unwrap();
+        assert!(matches!(got, Msg::FlowDelta { shard: 0, .. }));
+        let comm = t.comm();
+        assert_eq!(comm.messages, 2);
+        assert_eq!(comm.shards.len(), 3);
+        assert_eq!(comm.shards[0].msgs, 1);
+        assert_eq!(comm.shards[1].msgs, 0);
+        assert_eq!(comm.shards[2].msgs, 1);
+        assert!(comm.shards[0].bytes > comm.shards[2].bytes);
+    }
+
+    #[test]
+    fn loopback_recv_times_out_empty() {
+        let t = Loopback::new(1);
+        assert!(t.recv(0, Duration::from_millis(10)).is_none());
+    }
+
+    #[test]
+    fn blackhole_drops_but_counts() {
+        let t = Blackhole::new(2);
+        assert!(!t.send(0, 1, Msg::Shutdown));
+        assert!(t.recv(1, Duration::from_secs(3600)).is_none()); // returns at once
+        assert_eq!(t.comm().messages, 1);
+    }
+
+    #[test]
+    fn stale_rounds_aggregate_and_absorb() {
+        let t = Loopback::new(2);
+        t.note_stale_round(1);
+        t.note_stale_round(1);
+        let comm = t.comm();
+        assert_eq!(comm.stale_rounds(), 2);
+        assert_eq!(comm.shards[1].stale_rounds, 2);
+        let mut base = CommStats::default();
+        base.absorb(&comm);
+        base.absorb(&comm);
+        assert_eq!(base.stale_rounds(), 4);
+        assert_eq!(base.shards.len(), 2);
+    }
+}

@@ -62,6 +62,18 @@
 //! ingress summation, distributed rounds are bit-identical to centralized
 //! OMD-RT iterations at any engine worker count.
 //!
+//! For fleet scale the plane shards: `"sharded-omd"`
+//! ([`coordinator::shard::ShardedOmd`]) partitions sessions across K
+//! leader shards connected by a pluggable
+//! [`coordinator::transport::Transport`] fabric, gossiping sparse flow
+//! deltas under an explicit staleness bound S (a shard proceeds once peer
+//! aggregates are ≤ S rounds stale; a violated bound is a typed
+//! [`session::SessionError::StalenessExceeded`], never a hang). K=1
+//! degenerates to the single-leader plane bit-for-bit. The solver knob
+//! surface is unified in [`session::registry::SolverOpts`] — workers,
+//! batch mode, η, shards, staleness — applied by the registry and
+//! round-tripped through [`session::spec::ScenarioSpec`] JSON.
+//!
 //! ## Declarative scenarios and suites
 //!
 //! Scenarios are also first-class *data*: a typed
@@ -125,6 +137,8 @@ pub mod prelude {
     pub use crate::allocation::{gsoma::GsOma, omad::Omad, Allocator, UtilityOracle};
     pub use crate::coordinator::leader::DistributedOmd;
     pub use crate::coordinator::net::CommStats;
+    pub use crate::coordinator::shard::{ShardPlane, ShardedOmd};
+    pub use crate::coordinator::transport::{Blackhole, Loopback, ShardComm, Transport};
     pub use crate::engine::{BatchMode, FlowEngine, SessionMask};
     pub use crate::graph::augmented::{AugmentedNet, Placement};
     pub use crate::graph::topologies;

@@ -86,7 +86,11 @@ fn usage() {
          workloads, per-node capacities, explicit edges, rate traces) —\n\
          see examples/scenarios/\n\
          --workers <k>: engine threads for the per-session flow/marginal\n\
-         sweeps (0 = auto; results are bit-identical at any worker count)",
+         sweeps (0 = auto; results are bit-identical at any worker count)\n\
+         --shards <K> --staleness <S>: partition the coordination plane into\n\
+         K leader shards running staleness-S-bounded rounds (used by\n\
+         `route --algo sharded-omd`; K=1 is bit-identical to the\n\
+         single-leader plane)",
         routers = registry::router_names().join("|"),
         allocators = registry::allocator_names().join("|"),
     );
@@ -110,10 +114,24 @@ fn load_cfg(args: &Args) -> Result<ExperimentConfig, String> {
     Ok(cfg)
 }
 
+/// An optional `--key <usize>` argument (consumed so `args.finish()` stays
+/// clean), `None` when absent.
+fn opt_usize_arg(args: &Args, key: &str) -> Result<Option<usize>, String> {
+    match args.get(key) {
+        Some(v) => v
+            .parse()
+            .map(Some)
+            .map_err(|_| format!("--{key}: bad integer '{v}'")),
+        None => Ok(None),
+    }
+}
+
 /// Build the validated session for this invocation: either a declarative
-/// `--scenario file.json` spec (with seed/workers overridable from the
-/// command line) or the scalar config + overrides.
+/// `--scenario file.json` spec (with seed/workers/shards/staleness
+/// overridable from the command line) or the scalar config + overrides.
 fn load_session(args: &Args) -> Result<Session, String> {
+    let shards = opt_usize_arg(args, "shards")?;
+    let staleness = opt_usize_arg(args, "staleness")?;
     if let Some(path) = args.get("scenario") {
         let mut spec = ScenarioSpec::from_file(std::path::Path::new(path))?;
         if let Some(seed) = args.get("seed") {
@@ -123,10 +141,23 @@ fn load_session(args: &Args) -> Result<Session, String> {
             spec.workers =
                 w.parse().map_err(|_| format!("--workers: bad integer '{w}'"))?;
         }
+        if shards.is_some() {
+            spec.shards = shards;
+        }
+        if staleness.is_some() {
+            spec.staleness = staleness;
+        }
         return Ok(spec.build()?);
     }
     let cfg = load_cfg(args)?;
-    Ok(Scenario::from_config(cfg).build()?)
+    let mut scenario = Scenario::from_config(cfg);
+    if let Some(k) = shards {
+        scenario = scenario.shards(k);
+    }
+    if let Some(s) = staleness {
+        scenario = scenario.staleness(s);
+    }
+    Ok(scenario.build()?)
 }
 
 /// The `suite` subcommand: cross every scenario file with the requested

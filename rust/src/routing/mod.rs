@@ -27,6 +27,7 @@ use crate::coordinator::net::CommStats;
 use crate::engine::{BatchMode, FlowEngine, SessionMask};
 use crate::model::flow::Phi;
 use crate::model::Problem;
+use crate::session::registry::SolverOpts;
 use crate::session::run::{RunReport, StopReason};
 
 /// A distributed routing algorithm: iterates routing variables φ toward the
@@ -83,6 +84,16 @@ pub trait Router {
     /// routers; surfaced as [`crate::session::RunReport::comm`].
     fn comm_stats(&self) -> Option<CommStats> {
         None
+    }
+
+    /// Apply a unified [`SolverOpts`] bundle to an existing router — the
+    /// one-call replacement for the `set_workers` + `set_batch_mode` pair.
+    /// Construction-time knobs (η, shards, staleness) are consumed by
+    /// [`crate::session::registry::router_opts`] instead; this method
+    /// covers everything reconfigurable after the fact.
+    fn configure(&mut self, opts: &SolverOpts) {
+        self.set_workers(opts.workers);
+        self.set_batch_mode(opts.batch_mode);
     }
 
     /// Iterate up to `max_iters`, stopping early when φ stops changing

@@ -37,6 +37,11 @@ pub enum SessionError {
     InvalidTrace { class: String, what: String },
     /// A scenario parameter is out of its valid range.
     InvalidScenario { what: String },
+    /// A shard of the sharded coordination plane could not obtain peer
+    /// aggregates fresh enough for the staleness bound S within the sync
+    /// timeout (a partitioned or straggling peer). Surfaced as a typed
+    /// error — sharded rounds never hang on a missing peer.
+    StalenessExceeded { shard: usize, round: usize, bound: usize },
 }
 
 impl fmt::Display for SessionError {
@@ -84,6 +89,11 @@ impl fmt::Display for SessionError {
                 write!(f, "invalid rate trace for class '{class}': {what}")
             }
             SessionError::InvalidScenario { what } => write!(f, "invalid scenario: {what}"),
+            SessionError::StalenessExceeded { shard, round, bound } => write!(
+                f,
+                "shard {shard} exceeded the staleness bound S={bound} at round {round}: \
+                 peer flow aggregates did not arrive within the sync timeout"
+            ),
         }
     }
 }
@@ -111,6 +121,13 @@ mod tests {
         let e = SessionError::UnknownAllocator { name: "bad".into() };
         let msg = e.to_string();
         assert!(msg.contains("bad") && msg.contains("gsoma"), "{msg}");
+    }
+
+    #[test]
+    fn staleness_error_names_the_shard_and_bound() {
+        let e = SessionError::StalenessExceeded { shard: 3, round: 17, bound: 2 };
+        let msg = e.to_string();
+        assert!(msg.contains("shard 3") && msg.contains("S=2") && msg.contains("17"), "{msg}");
     }
 
     #[test]

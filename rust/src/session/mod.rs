@@ -78,6 +78,8 @@ pub struct Scenario {
     classes: Vec<ClassSpec>,
     nodes: Vec<NodeSpec>,
     horizon: Option<usize>,
+    shards: Option<usize>,
+    staleness: Option<usize>,
 }
 
 impl Scenario {
@@ -92,7 +94,15 @@ impl Scenario {
     /// spec (unknown *file* fields are warned about by
     /// `ExperimentConfig::from_json` itself).
     pub fn from_config(cfg: ExperimentConfig) -> Self {
-        Scenario { cfg, cost_name: None, classes: Vec::new(), nodes: Vec::new(), horizon: None }
+        Scenario {
+            cfg,
+            cost_name: None,
+            classes: Vec::new(),
+            nodes: Vec::new(),
+            horizon: None,
+            shards: None,
+            staleness: None,
+        }
     }
 
     /// Topology generator: `"er"` or a named topology
@@ -245,6 +255,20 @@ impl Scenario {
         self
     }
 
+    /// Leader shards for the sharded coordination plane (`"sharded-omd"`;
+    /// `1` = the single-leader degenerate case).
+    pub fn shards(mut self, k: usize) -> Self {
+        self.shards = Some(k);
+        self
+    }
+
+    /// Staleness bound S for sharded rounds: a shard proceeds once peer
+    /// flow aggregates are at most S rounds stale.
+    pub fn staleness(mut self, s: usize) -> Self {
+        self.staleness = Some(s);
+        self
+    }
+
     /// Lower the builder into the declarative [`ScenarioSpec`] it
     /// describes (without building the problem). Builder sugar and spec
     /// construction are interchangeable: `builder.build()` ≡
@@ -266,6 +290,8 @@ impl Scenario {
         }
         spec.nodes = self.nodes;
         spec.horizon = self.horizon;
+        spec.shards = self.shards;
+        spec.staleness = self.staleness;
         Ok(spec)
     }
 
@@ -288,9 +314,24 @@ pub struct Session {
 }
 
 impl Session {
-    /// Hyper-parameters derived from this session's config.
+    /// Hyper-parameters derived from this session's config, with the
+    /// spec's shard/staleness knobs lifted in.
     pub fn hyper(&self) -> Hyper {
-        Hyper::from_config(&self.cfg)
+        let mut h = Hyper::from_config(&self.cfg);
+        if let Some(k) = self.spec.shards {
+            h.shards = k;
+        }
+        if let Some(s) = self.spec.staleness {
+            h.staleness = s;
+        }
+        h
+    }
+
+    /// The unified [`registry::SolverOpts`] view of this session's solver
+    /// configuration (workers + shards + staleness; batch mode and η stay
+    /// at their defaults — the per-solver η comes from [`Session::hyper`]).
+    pub fn solver_opts(&self) -> registry::SolverOpts {
+        registry::SolverOpts::from_hyper(&self.hyper())
     }
 
     /// The paper's allocation initializer — per class, `Λ¹ = (λ_c/W_c)·1`.
@@ -381,6 +422,15 @@ impl Session {
     /// [`crate::coordinator::net::CommStats`] telemetry.
     pub fn distributed_run(&self, rounds: usize) -> Result<DistributedRun<'_>, SessionError> {
         self.routing_run("distributed-omd", rounds)
+    }
+
+    /// A streaming **sharded** distributed run: the `"sharded-omd"`
+    /// registry solver — K leader shards, staleness-bounded rounds, λ-sync
+    /// delta gossip — configured from the spec's `shards`/`staleness`
+    /// knobs. K = 1 (the default) degenerates to
+    /// [`Session::distributed_run`] bit for bit.
+    pub fn sharded_run(&self, rounds: usize) -> Result<DistributedRun<'_>, SessionError> {
+        self.routing_run("sharded-omd", rounds)
     }
 
     /// A streaming allocation run of `algo` with its matching oracle, from
@@ -566,6 +616,45 @@ mod tests {
             assert_eq!(a, b);
         }
         assert_eq!(by_builder.problem.workload, by_spec.problem.workload);
+    }
+
+    #[test]
+    fn shard_knobs_flow_from_builder_to_hyper() {
+        let s = Scenario::paper_default().shards(3).staleness(2).seed(4).build().unwrap();
+        assert_eq!(s.spec.shards, Some(3));
+        assert_eq!(s.spec.staleness, Some(2));
+        let h = s.hyper();
+        assert_eq!(h.shards, 3);
+        assert_eq!(h.staleness, 2);
+        let opts = s.solver_opts();
+        assert_eq!(opts.shards, 3);
+        assert_eq!(opts.staleness, 2);
+        // knobs survive the spec's JSON round trip
+        let back = ScenarioSpec::from_json(&s.spec.to_json().to_string()).unwrap();
+        assert_eq!(back.shards, Some(3));
+        assert_eq!(back.staleness, Some(2));
+        // and default sessions leave them unset (digest stability)
+        let d = Scenario::paper_default().build().unwrap();
+        assert_eq!(d.spec.shards, None);
+        assert_eq!(d.hyper().shards, 1);
+    }
+
+    #[test]
+    fn sharded_run_streams_like_any_other() {
+        let s = Scenario::paper_default()
+            .nodes(10)
+            .link_probability(0.3)
+            .shards(2)
+            .staleness(1)
+            .seed(8)
+            .build()
+            .unwrap();
+        let report = s.sharded_run(6).unwrap().finish();
+        assert_eq!(report.algo, "sharded-omd");
+        assert!(report.objective.is_finite());
+        let comm = report.comm.expect("sharded runs report comm stats");
+        assert_eq!(comm.shards.len(), 2);
+        assert!(comm.messages > 0);
     }
 
     #[test]

@@ -13,6 +13,8 @@ use super::error::SessionError;
 use crate::allocation::{gsoma::GsOma, omad::Omad, Allocator};
 use crate::config::ExperimentConfig;
 use crate::coordinator::leader::DistributedOmd;
+use crate::coordinator::shard::ShardedOmd;
+use crate::engine::BatchMode;
 use crate::routing::{gp::GpRouter, omd::OmdRouter, opt::OptRouter, sgp::SgpRouter, Router};
 
 /// Paper Section-IV default hyper-parameters — the single source of truth
@@ -39,6 +41,12 @@ pub struct Hyper {
     /// [`crate::engine::FlowEngine`] worker threads for the per-session
     /// sweeps (`0` = auto-detect). Bit-identical results at any value.
     pub workers: usize,
+    /// Leader shards for the sharded coordination plane (`"sharded-omd"`;
+    /// `1` = the single-leader degenerate case, ignored by other solvers).
+    pub shards: usize,
+    /// Staleness bound S for sharded rounds (peer aggregates may lag up to
+    /// S rounds; ignored by non-sharded solvers).
+    pub staleness: usize,
 }
 
 impl Default for Hyper {
@@ -49,6 +57,8 @@ impl Default for Hyper {
             eta_alloc: DEFAULT_ETA_ALLOC,
             delta: DEFAULT_DELTA,
             workers: 1,
+            shards: 1,
+            staleness: 1,
         }
     }
 }
@@ -62,6 +72,70 @@ impl Hyper {
             workers: cfg.workers,
             ..Hyper::default()
         }
+    }
+}
+
+/// The unified solver-configuration surface: one struct for every knob
+/// that used to be scattered across `Router::set_workers`,
+/// `Router::set_batch_mode`, `DistributedOmd::with_workers`, and the
+/// per-router η constructor arguments. Applied uniformly by
+/// [`router_opts`]/[`allocator_opts`] (and by
+/// [`crate::routing::Router::configure`] on an existing solver), and
+/// round-tripped through [`super::spec::ScenarioSpec`] JSON via the
+/// `workers`/`shards`/`staleness` fields.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SolverOpts {
+    /// Engine worker threads (`0` = auto-detect).
+    pub workers: usize,
+    /// Flow-engine sweep kernel selection.
+    pub batch_mode: BatchMode,
+    /// Step-size override: replaces the solver's primary η
+    /// (`eta_routing` for routers, `eta_alloc` for allocators) when set.
+    pub eta: Option<f64>,
+    /// Leader shards for the sharded plane (`1` = single leader).
+    pub shards: usize,
+    /// Staleness bound S for sharded rounds.
+    pub staleness: usize,
+}
+
+impl Default for SolverOpts {
+    fn default() -> Self {
+        SolverOpts {
+            workers: 1,
+            batch_mode: BatchMode::Auto,
+            eta: None,
+            shards: 1,
+            staleness: 1,
+        }
+    }
+}
+
+impl SolverOpts {
+    /// Lift the solver-relevant knobs out of a [`Hyper`] bundle.
+    pub fn from_hyper(h: &Hyper) -> Self {
+        SolverOpts {
+            workers: h.workers,
+            shards: h.shards,
+            staleness: h.staleness,
+            ..SolverOpts::default()
+        }
+    }
+
+    /// Lower into a [`Hyper`] bundle for the registry constructors: the η
+    /// override (when set) replaces both step sizes, since a solver only
+    /// ever reads its own.
+    pub fn hyper(&self) -> Hyper {
+        let mut h = Hyper {
+            workers: self.workers,
+            shards: self.shards,
+            staleness: self.staleness,
+            ..Hyper::default()
+        };
+        if let Some(eta) = self.eta {
+            h.eta_routing = eta;
+            h.eta_alloc = eta;
+        }
+        h
     }
 }
 
@@ -98,28 +172,35 @@ impl AllocatorEntry {
     }
 }
 
+// Constructors take the solver's own hyper-parameters only; the shared
+// execution knobs (workers, batch mode) are applied uniformly by
+// `router_with` after construction.
 fn make_omd(h: &Hyper) -> Box<dyn Router> {
-    Box::new(OmdRouter::new(h.eta_routing).with_workers(h.workers))
+    Box::new(OmdRouter::new(h.eta_routing))
 }
 
 fn make_omd_fixed(h: &Hyper) -> Box<dyn Router> {
-    Box::new(OmdRouter::fixed(h.eta_routing).with_workers(h.workers))
+    Box::new(OmdRouter::fixed(h.eta_routing))
 }
 
-fn make_sgp(h: &Hyper) -> Box<dyn Router> {
-    Box::new(SgpRouter::new().with_workers(h.workers))
+fn make_sgp(_h: &Hyper) -> Box<dyn Router> {
+    Box::new(SgpRouter::new())
 }
 
 fn make_gp(h: &Hyper) -> Box<dyn Router> {
-    Box::new(GpRouter::new(h.eta_gp).with_workers(h.workers))
+    Box::new(GpRouter::new(h.eta_gp))
 }
 
-fn make_opt(h: &Hyper) -> Box<dyn Router> {
-    Box::new(OptRouter::new().with_workers(h.workers))
+fn make_opt(_h: &Hyper) -> Box<dyn Router> {
+    Box::new(OptRouter::new())
 }
 
 fn make_distributed_omd(h: &Hyper) -> Box<dyn Router> {
-    Box::new(DistributedOmd::new(h.eta_routing).with_workers(h.workers))
+    Box::new(DistributedOmd::new(h.eta_routing))
+}
+
+fn make_sharded_omd(h: &Hyper) -> Box<dyn Router> {
+    Box::new(ShardedOmd::new(h.eta_routing, h.shards, h.staleness))
 }
 
 fn make_gsoma(h: &Hyper) -> Box<dyn Allocator> {
@@ -131,7 +212,7 @@ fn make_omad(h: &Hyper) -> Box<dyn Allocator> {
 }
 
 /// Every registered router, in presentation order.
-pub static ROUTERS: [RouterEntry; 6] = [
+pub static ROUTERS: [RouterEntry; 7] = [
     RouterEntry {
         name: "omd",
         description: "OMD-RT (Algorithm 2): entropic mirror descent with backtracking step size",
@@ -168,6 +249,13 @@ pub static ROUTERS: [RouterEntry; 6] = [
                       one step = one barriered round, CommStats on the report)",
         defaults: &[("eta_routing", DEFAULT_ETA_ROUTING)],
         make: make_distributed_omd,
+    },
+    RouterEntry {
+        name: "sharded-omd",
+        description: "OMD-RT over K leader shards with staleness-bounded rounds and \
+                      lambda-sync delta gossip (K=1 degenerates to distributed-omd)",
+        defaults: &[("eta_routing", DEFAULT_ETA_ROUTING), ("shards", 1.0), ("staleness", 1.0)],
+        make: make_sharded_omd,
     },
 ];
 
@@ -214,11 +302,27 @@ pub fn router(name: &str) -> Result<Box<dyn Router>, SessionError> {
     router_with(name, &Hyper::default())
 }
 
-/// Instantiate a router by name with explicit hyper-parameters.
+/// Instantiate a router by name with explicit hyper-parameters. The shared
+/// execution knobs (`workers`) apply uniformly here — individual `make`
+/// functions only consume the solver's own hyper-parameters.
 pub fn router_with(name: &str, h: &Hyper) -> Result<Box<dyn Router>, SessionError> {
     router_entry(name)
-        .map(|e| e.instantiate(h))
+        .map(|e| {
+            let mut r = e.instantiate(h);
+            r.set_workers(h.workers);
+            r
+        })
         .ok_or_else(|| SessionError::UnknownRouter { name: name.to_string() })
+}
+
+/// Instantiate a router from a unified [`SolverOpts`] bundle — the
+/// preferred entry point; [`router_with`] remains for callers that carry a
+/// full [`Hyper`]. Applies `workers` *and* `batch_mode` (and, for
+/// `"sharded-omd"`, `shards`/`staleness`) uniformly.
+pub fn router_opts(name: &str, opts: &SolverOpts) -> Result<Box<dyn Router>, SessionError> {
+    let mut r = router_with(name, &opts.hyper())?;
+    r.configure(opts);
+    Ok(r)
 }
 
 /// Instantiate an allocator by name with the paper-default hyper-parameters.
@@ -231,6 +335,12 @@ pub fn allocator_with(name: &str, h: &Hyper) -> Result<Box<dyn Allocator>, Sessi
     allocator_entry(name)
         .map(|e| e.instantiate(h))
         .ok_or_else(|| SessionError::UnknownAllocator { name: name.to_string() })
+}
+
+/// Instantiate an allocator from a unified [`SolverOpts`] bundle (the η
+/// override maps onto `eta_alloc`).
+pub fn allocator_opts(name: &str, opts: &SolverOpts) -> Result<Box<dyn Allocator>, SessionError> {
+    allocator_with(name, &opts.hyper())
 }
 
 #[cfg(test)]
@@ -267,6 +377,44 @@ mod tests {
     fn unknown_names_are_clean_errors() {
         assert!(matches!(router("nope"), Err(SessionError::UnknownRouter { .. })));
         assert!(matches!(allocator("nope"), Err(SessionError::UnknownAllocator { .. })));
+    }
+
+    #[test]
+    fn solver_opts_round_trip_through_hyper() {
+        let opts = SolverOpts { workers: 3, shards: 4, staleness: 2, ..SolverOpts::default() };
+        let h = opts.hyper();
+        assert_eq!(h.workers, 3);
+        assert_eq!(h.shards, 4);
+        assert_eq!(h.staleness, 2);
+        assert_eq!(h.eta_routing, DEFAULT_ETA_ROUTING, "no override: defaults stand");
+        assert_eq!(SolverOpts::from_hyper(&h), opts);
+        let h = SolverOpts { eta: Some(0.125), ..SolverOpts::default() }.hyper();
+        assert_eq!(h.eta_routing, 0.125);
+        assert_eq!(h.eta_alloc, 0.125);
+    }
+
+    #[test]
+    fn opts_entry_points_instantiate_every_solver() {
+        let opts = SolverOpts { workers: 2, shards: 2, staleness: 0, ..SolverOpts::default() };
+        for e in ROUTERS.iter() {
+            let r = router_opts(e.name, &opts).unwrap();
+            assert_eq!(r.name(), e.name);
+        }
+        for e in ALLOCATORS.iter() {
+            let a = allocator_opts(e.name, &opts).unwrap();
+            assert!(!a.name().is_empty());
+        }
+        assert!(matches!(
+            router_opts("nope", &opts),
+            Err(SessionError::UnknownRouter { .. })
+        ));
+    }
+
+    #[test]
+    fn sharded_entry_carries_its_knobs() {
+        let h = Hyper { shards: 3, staleness: 2, ..Hyper::default() };
+        let r = router_with("sharded-omd", &h).unwrap();
+        assert_eq!(r.name(), "sharded-omd");
     }
 
     #[test]

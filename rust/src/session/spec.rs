@@ -158,6 +158,13 @@ pub struct ScenarioSpec {
     pub delta: f64,
     pub seed: u64,
     pub workers: usize,
+    /// Leader shards for the sharded coordination plane (`"sharded-omd"`;
+    /// `None` = the single-leader default, omitted from canonical JSON so
+    /// existing spec digests are stable).
+    pub shards: Option<usize>,
+    /// Staleness bound S for sharded rounds (`None` = the default S = 1;
+    /// omitted from canonical JSON when absent).
+    pub staleness: Option<usize>,
 }
 
 impl ScenarioSpec {
@@ -196,6 +203,8 @@ impl ScenarioSpec {
             delta: cfg.delta,
             seed: cfg.seed,
             workers: cfg.workers,
+            shards: None,
+            staleness: None,
         }
     }
 
@@ -624,7 +633,7 @@ impl ScenarioSpec {
     pub fn from_json(text: &str) -> Result<Self, String> {
         let j = Json::parse(text).map_err(|e| e.to_string())?;
         let obj = j.as_obj().ok_or("scenario file must be a JSON object")?;
-        const KNOWN: [&str; 14] = [
+        const KNOWN: [&str; 16] = [
             "name",
             "topology",
             "n_versions",
@@ -639,6 +648,8 @@ impl ScenarioSpec {
             "delta",
             "seed",
             "workers",
+            "shards",
+            "staleness",
         ];
         for key in obj.keys() {
             if !KNOWN.contains(&key.as_str()) {
@@ -702,6 +713,12 @@ impl ScenarioSpec {
         }
         if let Some(x) = opt_usize(&j, "workers")? {
             spec.workers = x;
+        }
+        if let Some(x) = opt_usize(&j, "shards")? {
+            spec.shards = Some(x);
+        }
+        if let Some(x) = opt_usize(&j, "staleness")? {
+            spec.staleness = Some(x);
         }
         if !matches!(j.get("seed"), Json::Null) {
             spec.seed = j
@@ -821,6 +838,12 @@ impl ScenarioSpec {
         }
         if let Some(sim) = &self.sim {
             fields.push(("sim", sim.to_json()));
+        }
+        if let Some(k) = self.shards {
+            fields.push(("shards", Json::from(k)));
+        }
+        if let Some(s) = self.staleness {
+            fields.push(("staleness", Json::from(s)));
         }
         Json::obj(fields)
     }
@@ -1069,6 +1092,8 @@ mod tests {
         });
         spec.seed = u64::MAX; // exercises the string-seed path
         spec.workers = 4;
+        spec.shards = Some(4);
+        spec.staleness = Some(2);
         spec.cost = CostKind::Cubic;
         let text = spec.to_json().to_string();
         let back = ScenarioSpec::from_json(&text).unwrap();
@@ -1106,6 +1131,8 @@ mod tests {
         assert!(ScenarioSpec::from_json(r#"{"nodes": 3}"#).is_err());
         assert!(ScenarioSpec::from_json(r#"{"classes": "video"}"#).is_err());
         assert!(ScenarioSpec::from_json(r#"{"horizon": "soon"}"#).is_err());
+        assert!(ScenarioSpec::from_json(r#"{"shards": 2.5}"#).is_err());
+        assert!(ScenarioSpec::from_json(r#"{"staleness": -1}"#).is_err());
         assert!(ScenarioSpec::from_json(r#"{"name": 7}"#).is_err());
         assert!(ScenarioSpec::from_json(r#"{"sim": 3}"#).is_err());
         assert!(ScenarioSpec::from_json(r#"{"sim": {"horizon_s": "long"}}"#).is_err());

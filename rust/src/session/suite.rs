@@ -424,11 +424,13 @@ impl SuiteReport {
     }
 
     /// One CSV row per cell:
-    /// `scenario,solver,kind,seed,status,objective,iterations,routing_iterations,stop,elapsed_s,error`.
+    /// `scenario,solver,kind,seed,status,objective,iterations,routing_iterations,stop,elapsed_s,comm_msgs,comm_bytes,comm_stale,error`.
+    /// The comm columns are empty for cells whose solver reports no
+    /// [`crate::coordinator::net::CommStats`] (in-process routers).
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
             "scenario,solver,kind,seed,status,objective,iterations,routing_iterations,\
-             stop,elapsed_s,error\n",
+             stop,elapsed_s,comm_msgs,comm_bytes,comm_stale,error\n",
         );
         for c in &self.cells {
             let kind = match c.kind {
@@ -439,8 +441,14 @@ impl SuiteReport {
             match &c.outcome {
                 Ok(res) => {
                     let r = &res.report;
+                    let comm = match &r.comm {
+                        Some(cs) => {
+                            format!("{},{},{}", cs.messages, cs.bytes, cs.stale_rounds())
+                        }
+                        None => ",,".to_string(),
+                    };
                     out.push_str(&format!(
-                        "{},{},{kind},{},ok,{},{},{},{:?},{},\n",
+                        "{},{},{kind},{},ok,{},{},{},{:?},{},{comm},\n",
                         c.scenario,
                         c.solver,
                         c.seed,
@@ -454,7 +462,7 @@ impl SuiteReport {
                 Err(e) => {
                     let msg = e.replace(',', ";").replace('\n', " ");
                     out.push_str(&format!(
-                        "{},{},{kind},{},error,,,,,,{msg}\n",
+                        "{},{},{kind},{},error,,,,,,,,,{msg}\n",
                         c.scenario, c.solver, c.seed
                     ));
                 }
@@ -486,21 +494,56 @@ impl SuiteReport {
                             Ok(res) => {
                                 let r = &res.report;
                                 fields.push(("status", Json::from("ok")));
-                                fields.push((
-                                    "report",
-                                    Json::obj(vec![
-                                        ("algo", Json::from(r.algo.as_str())),
-                                        ("objective", Json::from(r.objective)),
-                                        ("iterations", Json::from(r.iterations)),
-                                        (
-                                            "routing_iterations",
-                                            Json::from(r.routing_iterations),
-                                        ),
-                                        ("stop", Json::from(format!("{:?}", r.stop).as_str())),
-                                        ("elapsed_s", Json::from(r.elapsed_s)),
-                                        ("lam", Json::from(r.lam.clone())),
-                                    ]),
-                                ));
+                                let mut rep = vec![
+                                    ("algo", Json::from(r.algo.as_str())),
+                                    ("objective", Json::from(r.objective)),
+                                    ("iterations", Json::from(r.iterations)),
+                                    ("routing_iterations", Json::from(r.routing_iterations)),
+                                    ("stop", Json::from(format!("{:?}", r.stop).as_str())),
+                                    ("elapsed_s", Json::from(r.elapsed_s)),
+                                    ("lam", Json::from(r.lam.clone())),
+                                ];
+                                if let Some(cs) = &r.comm {
+                                    rep.push((
+                                        "comm",
+                                        Json::obj(vec![
+                                            ("messages", Json::from_u64(cs.messages)),
+                                            ("bytes", Json::from_u64(cs.bytes)),
+                                            ("rounds", Json::from(cs.rounds)),
+                                            (
+                                                "stale_rounds",
+                                                Json::from_u64(cs.stale_rounds()),
+                                            ),
+                                            (
+                                                "shards",
+                                                Json::Arr(
+                                                    cs.shards
+                                                        .iter()
+                                                        .map(|s| {
+                                                            Json::obj(vec![
+                                                                (
+                                                                    "msgs",
+                                                                    Json::from_u64(s.msgs),
+                                                                ),
+                                                                (
+                                                                    "bytes",
+                                                                    Json::from_u64(s.bytes),
+                                                                ),
+                                                                (
+                                                                    "stale_rounds",
+                                                                    Json::from_u64(
+                                                                        s.stale_rounds,
+                                                                    ),
+                                                                ),
+                                                            ])
+                                                        })
+                                                        .collect(),
+                                                ),
+                                            ),
+                                        ]),
+                                    ));
+                                }
+                                fields.push(("report", Json::obj(rep)));
                                 fields.push((
                                     "trajectory",
                                     Json::from(res.trajectory.clone()),
@@ -727,5 +770,46 @@ mod tests {
         let json = report.to_json().to_string();
         let parsed = crate::util::json::Json::parse(&json).unwrap();
         assert_eq!(parsed.get("cells").as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn comm_columns_render_for_distributed_cells() {
+        let mut spec = small_spec();
+        spec.shards = Some(2);
+        spec.staleness = Some(1);
+        let report = Suite::new()
+            .spec("a", spec)
+            .router("sharded-omd")
+            .router("omd")
+            .iters(3)
+            .run();
+        assert_eq!(report.ok_count(), 2, "{:?}", report.cells[0].outcome);
+        let csv = report.to_csv();
+        let header = csv.lines().next().unwrap();
+        assert!(
+            header.ends_with("comm_msgs,comm_bytes,comm_stale,error"),
+            "{header}"
+        );
+        // every row (ok or error) carries the same column count as the header
+        let n_cols = header.split(',').count();
+        for line in csv.lines().skip(1) {
+            assert_eq!(line.split(',').count(), n_cols, "{line}");
+        }
+        let json = report.to_json().to_string();
+        let parsed = crate::util::json::Json::parse(&json).unwrap();
+        let cells = parsed.get("cells").as_arr().unwrap();
+        let sharded = cells
+            .iter()
+            .find(|c| c.get("solver").as_str() == Some("sharded-omd"))
+            .unwrap();
+        let comm = sharded.get("report").get("comm");
+        assert!(comm.get("messages").as_u64().unwrap() > 0);
+        assert_eq!(comm.get("shards").as_arr().unwrap().len(), 2);
+        // in-process routers stay comm-free in both dumps
+        let plain = cells
+            .iter()
+            .find(|c| c.get("solver").as_str() == Some("omd"))
+            .unwrap();
+        assert!(matches!(plain.get("report").get("comm"), Json::Null));
     }
 }

@@ -22,6 +22,20 @@ pub fn test_workers() -> usize {
         .unwrap_or(1)
 }
 
+/// Coordination-plane shard count under test: the `JOWR_TEST_SHARDS`
+/// environment variable, defaulting to 1. CI runs a matrix leg with 4 so
+/// the sharded plane's determinism and K=1 degeneration guarantees are
+/// exercised at a non-trivial partition; tests that build a
+/// [`crate::coordinator::shard::ShardedOmd`] (directly or through
+/// `Scenario::shards`) should include this value in their sweep.
+pub fn test_shards() -> usize {
+    std::env::var("JOWR_TEST_SHARDS")
+        .ok()
+        .and_then(|s| s.trim().parse().ok())
+        .unwrap_or(1)
+        .max(1)
+}
+
 /// Size-aware generator context.
 pub struct Gen<'a> {
     pub rng: &'a mut Rng,

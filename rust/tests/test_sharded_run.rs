@@ -1,0 +1,257 @@
+//! End-to-end tests of the sharded coordination plane: the `"sharded-omd"`
+//! registry router driven through the session API must (a) degenerate to
+//! the single-leader loopback plane *bit for bit* at K = 1 (and hence stay
+//! within the existing 1e-9 pin of centralized OMD-RT), (b) be a pure
+//! function of `(spec, seed, K, S)` — bitwise-deterministic across repeat
+//! runs, thread interleavings, and engine worker counts, (c) track the
+//! centralized router within tolerance at S = 0, and (d) surface a
+//! violated staleness bound as a typed [`SessionError::StalenessExceeded`],
+//! never a hang.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use jowr::model::flow::Phi;
+use jowr::prelude::*;
+use jowr::testkit::{test_shards, test_workers};
+
+fn session_for(shards: usize, staleness: usize, workers: usize) -> Session {
+    Scenario::paper_default()
+        .nodes(10)
+        .link_probability(0.3)
+        .seed(17)
+        .workers(workers)
+        .shards(shards)
+        .staleness(staleness)
+        .build()
+        .unwrap()
+}
+
+fn assert_phi_bits_eq(a: &RunReport, b: &RunReport, what: &str) {
+    let (pa, pb) = (a.phi.as_ref().unwrap(), b.phi.as_ref().unwrap());
+    for (w, (ra, rb)) in pa.frac.iter().zip(&pb.frac).enumerate() {
+        for (e, (x, y)) in ra.iter().zip(rb).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: phi[{w}][{e}]: {x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn k1_sharded_run_is_bit_identical_to_the_single_leader_plane() {
+    let session = session_for(1, 0, test_workers());
+    let rounds = 12;
+    let mut straj = Trajectory::default();
+    let sharded = session.sharded_run(rounds).unwrap().observe(&mut straj).finish();
+    let mut dtraj = Trajectory::default();
+    let dist = session.distributed_run(rounds).unwrap().observe(&mut dtraj).finish();
+
+    // K = 1 IS the single-leader plane: every iterate matches bitwise
+    assert_eq!(straj.values.len(), dtraj.values.len());
+    for (i, (a, b)) in straj.values.iter().zip(&dtraj.values).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "iter {i}: sharded {a} vs single-leader {b}");
+    }
+    assert_eq!(sharded.objective.to_bits(), dist.objective.to_bits());
+    assert_phi_bits_eq(&sharded, &dist, "K=1 vs single leader");
+
+    // ...and therefore inherits the centralized pin (loopback ≡ omd @1e-9)
+    let central = session.routing_run("omd", rounds).unwrap().finish();
+    assert!(
+        (sharded.objective - central.objective).abs()
+            <= 1e-9 * central.objective.abs().max(1.0),
+        "K=1 sharded {} vs centralized {}",
+        sharded.objective,
+        central.objective
+    );
+}
+
+#[test]
+fn sharded_runs_are_deterministic_for_fixed_spec_seed_and_staleness() {
+    // K ∈ {2, 4} (plus the CI matrix value): repeat runs over the same
+    // (spec, seed, S) must agree bit for bit — the staleness protocol is
+    // exact-lag, so no thread interleaving can perturb the arithmetic —
+    // and the engine worker knob (cost telemetry only) must not matter
+    for k in [2usize, 4, test_shards()] {
+        for s in [0usize, 2] {
+            // 4 versions → 4 single-class sessions, so K=4 deploys a real
+            // 4-way partition instead of clamping
+            let build = |workers: usize| {
+                Scenario::paper_default()
+                    .nodes(10)
+                    .link_probability(0.3)
+                    .versions(4)
+                    .seed(29)
+                    .workers(workers)
+                    .shards(k)
+                    .staleness(s)
+                    .build()
+                    .unwrap()
+            };
+            let run = |workers: usize| {
+                let session = build(workers);
+                let mut traj = Trajectory::default();
+                let report =
+                    session.sharded_run(10).unwrap().observe(&mut traj).finish();
+                report
+                    .phi
+                    .as_ref()
+                    .unwrap()
+                    .is_feasible(&session.problem.net, 1e-9)
+                    .unwrap();
+                (traj.values, report)
+            };
+            let (t1, r1) = run(1);
+            let (t2, r2) = run(1);
+            assert_eq!(t1.len(), t2.len());
+            for (i, (a, b)) in t1.iter().zip(&t2).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "K={k} S={s} iter {i}");
+            }
+            assert_eq!(r1.objective.to_bits(), r2.objective.to_bits(), "K={k} S={s}");
+            assert_phi_bits_eq(&r1, &r2, "repeat run");
+            for workers in [4usize, test_workers()] {
+                let (tw, rw) = run(workers);
+                for (i, (a, b)) in tw.iter().zip(&t1).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "K={k} S={s} iter {i} w={workers}");
+                }
+                assert_eq!(rw.objective.to_bits(), r1.objective.to_bits());
+                assert_phi_bits_eq(&rw, &r1, "worker sweep");
+            }
+            // the run made progress on finite costs
+            assert!(t1.iter().all(|c| c.is_finite()), "K={k} S={s}");
+            assert!(r1.objective < t1[0], "K={k} S={s}: no descent");
+        }
+    }
+}
+
+#[test]
+fn s0_sharded_rounds_track_centralized_omd_within_tolerance() {
+    // S = 0 prices every shard against the same-round global flows — the
+    // centralized gradient up to summation association — so a fixed-step
+    // sharded run tracks the fixed-step centralized router to 1e-9
+    let session = session_for(2, 0, test_workers());
+    let problem = &session.problem;
+    let lam = session.uniform_allocation();
+    let rounds = 10;
+    let eta = 0.05;
+    let mut straj = Trajectory::default();
+    let sharded = RoutingRun::new(
+        problem,
+        Box::new(ShardedOmd::fixed(eta, 2, 0)),
+        lam.clone(),
+        rounds,
+    )
+    .observe(&mut straj)
+    .finish();
+    let mut ctraj = Trajectory::default();
+    let central =
+        RoutingRun::new(problem, Box::new(OmdRouter::fixed(eta)), lam, rounds)
+            .observe(&mut ctraj)
+            .finish();
+    assert_eq!(straj.values.len(), ctraj.values.len());
+    for (i, (a, b)) in straj.values.iter().zip(&ctraj.values).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-9 * b.abs().max(1.0),
+            "iter {i}: sharded {a} vs centralized {b}"
+        );
+    }
+    assert!(
+        (sharded.objective - central.objective).abs()
+            <= 1e-9 * central.objective.abs().max(1.0),
+        "final: sharded {} vs centralized {}",
+        sharded.objective,
+        central.objective
+    );
+    let (sp, cp) = (sharded.phi.as_ref().unwrap(), central.phi.as_ref().unwrap());
+    for (ra, rb) in sp.frac.iter().zip(&cp.frac) {
+        for (a, b) in ra.iter().zip(rb) {
+            assert!((a - b).abs() <= 1e-9, "phi: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn violated_staleness_bound_is_a_typed_error_not_a_hang() {
+    // a transport that drops every delta: the sync must give up at the
+    // timeout and surface the typed fault, leaving φ untouched
+    let session = session_for(2, 1, 1);
+    let problem = &session.problem;
+    let lam = session.uniform_allocation();
+    let mut router = ShardedOmd::new(0.2, 2, 1)
+        .with_transport(Arc::new(Blackhole::new(2)))
+        .with_sync_timeout(Duration::from_millis(50));
+    let mut phi = Phi::uniform(&problem.net);
+    let before = phi.clone();
+    let t0 = std::time::Instant::now();
+    let err = router.try_step(problem, &lam, &mut phi).unwrap_err();
+    assert!(t0.elapsed() < Duration::from_secs(5), "sync did not give up at the timeout");
+    match &err {
+        SessionError::StalenessExceeded { shard, round, bound } => {
+            assert!(*shard < 2);
+            assert_eq!(*round, 0);
+            assert_eq!(*bound, 1);
+        }
+        other => panic!("expected StalenessExceeded, got {other:?}"),
+    }
+    let msg = String::from(err);
+    assert!(msg.contains("staleness"), "{msg}");
+    assert_eq!(phi, before, "a failed round must not leak partial φ updates");
+
+    // the infallible Router protocol parks the same fault instead of
+    // panicking or hanging: φ still untouched, pre-update cost returned
+    let cost = router.step(problem, &lam, &mut phi);
+    assert!(cost.is_finite(), "step reports the last evaluated cost");
+    assert!(matches!(
+        router.fault(),
+        Some(SessionError::StalenessExceeded { .. })
+    ));
+    assert_eq!(phi, before);
+}
+
+#[test]
+fn multi_class_sharded_runs_use_the_even_split_and_stay_deterministic() {
+    // class-major layouts interleave the version blocks, so the partition
+    // falls back to the even contiguous split — pin that path end to end
+    let build = || {
+        Scenario::paper_default()
+            .nodes(10)
+            .link_probability(0.35)
+            .versions(2)
+            .seed(23)
+            .workers(test_workers())
+            .shards(2)
+            .staleness(1)
+            .class("alpha", "log", 30.0, &[])
+            .class("beta", "linear", 20.0, &[3, 7])
+            .build()
+            .unwrap()
+    };
+    let session = build();
+    assert_eq!(session.problem.n_sessions(), 4, "two classes × two versions");
+    let mut t1 = Trajectory::default();
+    let r1 = session.sharded_run(8).unwrap().observe(&mut t1).finish();
+    let mut t2 = Trajectory::default();
+    let r2 = build().sharded_run(8).unwrap().observe(&mut t2).finish();
+    for (i, (a, b)) in t1.values.iter().zip(&t2.values).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "iter {i}");
+    }
+    assert_eq!(r1.objective.to_bits(), r2.objective.to_bits());
+    assert!(r1.objective.is_finite());
+    assert!(r1.objective < t1.values[0], "no descent on the multi-class fleet");
+    r1.phi.as_ref().unwrap().is_feasible(&session.problem.net, 1e-9).unwrap();
+}
+
+#[test]
+fn sharded_reports_carry_per_shard_comm_stats() {
+    let session = session_for(2, 1, 1);
+    let report = session.sharded_run(5).unwrap().finish();
+    assert_eq!(report.algo, "sharded-omd");
+    let n = report.iterations as u64;
+    assert!(n >= 2, "need at least two rounds to observe staleness");
+    let comm = report.comm.expect("sharded runs report CommStats");
+    assert_eq!(comm.rounds, report.iterations);
+    assert_eq!(comm.shards.len(), 2, "per-shard breakdown");
+    // each shard gossips exactly one delta per peer per round
+    assert_eq!(comm.messages, 2 * n);
+    assert!(comm.bytes > 0);
+    // S = 1: every round past the first prices against lagged peers
+    assert_eq!(comm.stale_rounds(), 2 * (n - 1));
+}
