@@ -1,0 +1,436 @@
+"""Python mirror of the rust determinism/safety auditor (``rust/xtask``).
+
+A line-for-line reimplementation of the lexer and rule engine in
+``rust/xtask/src/lib.rs`` — same lexer states, same token sets, same
+annotation grammar, same ``#[cfg(test)]`` region tracking — validated
+against the same fixture files under ``rust/xtask/tests/fixtures/`` and
+then run over the real ``rust/src`` tree. Like the other mirrors in this
+directory it makes the audit contract checkable where the rust toolchain
+is not installed: if this file passes, ``cargo run -p xtask -- audit``
+exits 0 at HEAD (the acceptance gate of the static-analysis PR), and any
+divergence between the two implementations shows up as a fixture
+mismatch here rather than only in CI.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+RUST = os.path.join(HERE, os.pardir, os.pardir, "rust")
+FIXTURES = os.path.join(RUST, "xtask", "tests", "fixtures")
+SRC = os.path.join(RUST, "src")
+
+AUDITED_PATH = "engine/fixture.rs"  # same anchor the rust fixture suite uses
+
+RULES = ("r1", "r2", "r3", "r4", "r5")
+
+R1_TOKENS = ("HashMap", "HashSet")
+R3_TOKENS = ("Instant::now", "SystemTime", "thread_rng")
+R4_TOKENS = ("thread::spawn", "thread::Builder", "thread::scope", ".spawn(")
+R5_FLOAT_TOKENS = (".sum::<f64>", "fold(0.0", "fold(0f64", "fold(f64::")
+R5_PAR_TOKENS = ("par_iter", "into_par_iter", "rayon", ".recv(", "recv_timeout", ".lock(")
+
+
+# --- lexer: code/comment channels per physical line (mirrors scan()) -------
+
+CODE, LINE_COMMENT, BLOCK_COMMENT, STR, RAW_STR = range(5)
+
+
+def _ident(c):
+    return c.isalnum() or c == "_"
+
+
+def scan(text):
+    """Return [(code, comment)] per line, strings blanked, comments split."""
+    chars = text
+    n = len(chars)
+    lines = [["", ""]]
+    state, depth_or_hashes = CODE, 0
+    prev_code_char = " "
+    i = 0
+    while i < n:
+        c = chars[i]
+        if c == "\n":
+            if state == LINE_COMMENT:
+                state = CODE
+            lines.append(["", ""])
+            i += 1
+            continue
+        cur = lines[-1]
+        if state == CODE:
+            nxt = chars[i + 1] if i + 1 < n else ""
+            if c == "/" and nxt == "/":
+                state = LINE_COMMENT
+                i += 2
+                continue
+            if c == "/" and nxt == "*":
+                state, depth_or_hashes = BLOCK_COMMENT, 1
+                i += 2
+                continue
+            if c == '"':
+                state = STR
+                cur[0] += " "
+                prev_code_char = " "
+                i += 1
+                continue
+            if c in "rb" and not _ident(prev_code_char):
+                j = i + 1
+                if c == "b" and j < n and chars[j] == "r":
+                    j += 1
+                if c == "b" and j < n and chars[j] == '"':
+                    state = STR  # plain byte string b".."
+                    cur[0] += " "
+                    prev_code_char = " "
+                    i = j + 1
+                    continue
+                if c == "r" or (c == "b" and j > i + 1):
+                    hashes = 0
+                    while j < n and chars[j] == "#":
+                        hashes += 1
+                        j += 1
+                    if j < n and chars[j] == '"':
+                        state, depth_or_hashes = RAW_STR, hashes
+                        cur[0] += " "
+                        prev_code_char = " "
+                        i = j + 1
+                        continue
+            if c == "'":
+                if nxt == "\\":
+                    j = i + 2
+                    while j < n and chars[j] != "'":
+                        j += 1
+                    cur[0] += " "
+                    prev_code_char = " "
+                    i = min(j + 1, n)
+                    continue
+                if i + 2 < n and chars[i + 2] == "'":
+                    cur[0] += " "
+                    prev_code_char = " "
+                    i += 3
+                    continue
+            cur[0] += c
+            prev_code_char = c
+            i += 1
+        elif state == LINE_COMMENT:
+            cur[1] += c
+            i += 1
+        elif state == BLOCK_COMMENT:
+            nxt = chars[i + 1] if i + 1 < n else ""
+            if c == "/" and nxt == "*":
+                depth_or_hashes += 1
+                i += 2
+                continue
+            if c == "*" and nxt == "/":
+                depth_or_hashes -= 1
+                if depth_or_hashes == 0:
+                    state = CODE
+                i += 2
+                continue
+            cur[1] += c
+            i += 1
+        elif state == STR:
+            if c == "\\":
+                i += 2
+                continue
+            if c == '"':
+                state = CODE
+            i += 1
+        else:  # RAW_STR
+            if c == '"':
+                j = i + 1
+                seen = 0
+                while seen < depth_or_hashes and j < n and chars[j] == "#":
+                    seen += 1
+                    j += 1
+                if seen == depth_or_hashes:
+                    state = CODE
+                    i = j
+                    continue
+            i += 1
+    return [(c, m) for c, m in lines]
+
+
+def has_token(code, word):
+    start = 0
+    while True:
+        at = code.find(word, start)
+        if at < 0:
+            return False
+        before_ok = at == 0 or not _ident(code[at - 1])
+        tail = code[at + len(word):]
+        if _ident(word[-1]):
+            after_ok = not tail or not _ident(tail[0])
+        else:
+            after_ok = True
+        if before_ok and after_ok:
+            return True
+        start = at + len(word)
+
+
+# --- annotations + test-region map (mirrors build_map()/parse_allow()) -----
+
+def parse_allow(s):
+    """Returns (rules, None) or (None, error-message)."""
+    grammar = "grammar: // audit:allow(r1[, r2]): reason"
+    rest = s[len("audit:allow"):].lstrip()
+    if not rest.startswith("("):
+        return None, f"missing rule list ({grammar})"
+    rest = rest[1:]
+    close = rest.find(")")
+    if close < 0:
+        return None, f"unterminated rule list ({grammar})"
+    rules = []
+    for name in rest[:close].split(","):
+        name = name.strip()
+        if name not in RULES:
+            return None, f"unknown rule `{name}` ({grammar})"
+        rules.append(name)
+    if not rules:
+        return None, f"empty rule list ({grammar})"
+    tail = rest[close + 1:].lstrip()
+    reason = tail[1:].strip() if tail.startswith(":") else ""
+    if not reason:
+        return None, f"missing reason — every exemption documents why ({grammar})"
+    return rules, None
+
+
+def build_map(lines):
+    n = len(lines)
+    allow = [set() for _ in range(n)]
+    annotation_findings = []
+    for i, (_, comment) in enumerate(lines):
+        pos = comment.find("audit:allow")
+        if pos < 0:
+            continue
+        rules, err = parse_allow(comment[pos:])
+        if err is not None:
+            annotation_findings.append((i + 1, err))
+            continue
+        allow[i].update(rules)
+        j = i + 1
+        while j < n and not lines[j][0].strip():
+            j += 1
+        if j < n:
+            allow[j].update(rules)
+
+    in_test = [False] * n
+    depth = 0
+    pending_attr = False
+    region_entry = []
+    for i, (code, _) in enumerate(lines):
+        code = code.strip()
+        if region_entry:
+            in_test[i] = True
+        test_attr = "cfg(test" in code and "#[" in code
+        if test_attr and not ("mod " in code and "{" in code):
+            pending_attr = True
+        elif (pending_attr or test_attr) and "mod " in code and "{" in code:
+            region_entry.append(depth)
+            in_test[i] = True
+            pending_attr = False
+        elif code and not code.startswith("#["):
+            pending_attr = False
+        for c in code:
+            if c == "{":
+                depth += 1
+            elif c == "}":
+                depth -= 1
+                if region_entry and depth <= region_entry[-1]:
+                    region_entry.pop()
+    return allow, in_test, annotation_findings
+
+
+def statements(lines):
+    """Yield (start, end, joined-code), grouped like xtask's statements()."""
+    out = []
+    start, buf, depth = None, "", 0
+    for i, (code, _) in enumerate(lines):
+        code = code.strip()
+        if not code:
+            continue
+        if start is None:
+            start = i
+        buf += " " + code
+        for c in code:
+            if c in "([":
+                depth += 1
+            elif c in ")]":
+                depth -= 1
+        if depth <= 0 and code[-1] in ";{}":
+            out.append((start, i, buf))
+            start, buf, depth = None, "", 0
+    if start is not None:
+        out.append((start, len(lines) - 1, buf))
+    return out
+
+
+# --- module classification + rule engine (mirrors audit_source()) ----------
+
+def ordering_sensitive(rel):
+    prefixes = ("engine/", "routing/", "coordinator/", "graph/", "sim/")
+    return rel.startswith(prefixes) or rel == "session/suite.rs"
+
+
+def clock_exempt(rel):
+    return rel.startswith("util/")
+
+
+def spawn_exempt(rel):
+    return rel == "engine/pool.rs" or rel.startswith("coordinator/")
+
+
+def _comment_has_safety(comment):
+    return "SAFETY:" in comment or "# Safety" in comment
+
+
+def audit_source(rel, text):
+    """Returns findings as (line, rule, message-stub) tuples."""
+    lines = scan(text)
+    allow, in_test, annotation_findings = build_map(lines)
+    findings = [(line, "annotation", msg) for line, msg in annotation_findings]
+
+    for i, (code, comment) in enumerate(lines):
+        if not code.strip():
+            continue
+        line = i + 1
+        if ordering_sensitive(rel) and not in_test[i] and "r1" not in allow[i]:
+            for tok in R1_TOKENS:
+                if has_token(code, tok):
+                    findings.append((line, "r1", tok))
+        if has_token(code, "unsafe") and "r2" not in allow[i]:
+            found = _comment_has_safety(comment)
+            j = i
+            while not found and j > 0:
+                j -= 1
+                if lines[j][0].strip() or i - j > 12:
+                    break
+                found = _comment_has_safety(lines[j][1])
+            if not found:
+                findings.append((line, "r2", "unsafe without SAFETY"))
+        if not clock_exempt(rel) and not in_test[i] and "r3" not in allow[i]:
+            for tok in R3_TOKENS:
+                if has_token(code, tok):
+                    findings.append((line, "r3", tok))
+        if not spawn_exempt(rel) and not in_test[i] and "r4" not in allow[i]:
+            for tok in R4_TOKENS:
+                if tok in code:
+                    findings.append((line, "r4", tok))
+
+    if ordering_sensitive(rel):
+        for start, end, code in statements(lines):
+            if in_test[start]:
+                continue
+            if any("r5" in allow[i] for i in range(start, end + 1)):
+                continue
+            ftok = next((t for t in R5_FLOAT_TOKENS if t in code), None)
+            ptok = next((t for t in R5_PAR_TOKENS if t in code), None)
+            if ftok and ptok:
+                findings.append((start + 1, "r5", f"{ftok} with {ptok}"))
+
+    return sorted(findings, key=lambda f: (f[0], f[1]))
+
+
+def audit_tree(root):
+    """Walk every .rs under root; returns (n_files, findings-with-paths)."""
+    files = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames.sort()
+        files += [
+            os.path.join(dirpath, f) for f in sorted(filenames) if f.endswith(".rs")
+        ]
+    findings = []
+    for path in sorted(files):
+        rel = os.path.relpath(path, root).replace(os.sep, "/")
+        with open(path, encoding="utf-8") as fh:
+            text = fh.read()
+        findings += [(rel, line, rule, msg) for line, rule, msg in audit_source(rel, text)]
+    return len(files), findings
+
+
+# --- fixture parity with the rust test suite -------------------------------
+
+def fixture(name):
+    with open(os.path.join(FIXTURES, name), encoding="utf-8") as fh:
+        return fh.read()
+
+
+def rules_for(text, rel=AUDITED_PATH):
+    return [rule for _, rule, _ in audit_source(rel, text)]
+
+
+def test_bad_fixtures_are_flagged():
+    for r in RULES:
+        got = rules_for(fixture(f"{r}_bad.rs"))
+        assert got and all(x == r for x in got), f"{r}_bad.rs -> {got}"
+
+
+def test_allowed_and_clean_fixtures_pass():
+    for r in RULES:
+        for kind in ("allowed", "clean"):
+            got = rules_for(fixture(f"{r}_{kind}.rs"))
+            assert got == [], f"{r}_{kind}.rs -> {got}"
+
+
+def test_module_scoping_matches_rust_suite():
+    # r1 is scoped: inert for session/spec.rs, active for session/suite.rs
+    assert rules_for(fixture("r1_bad.rs"), "session/spec.rs") == []
+    assert rules_for(fixture("r1_bad.rs"), "session/suite.rs") != []
+    # r2 applies everywhere
+    assert rules_for(fixture("r2_bad.rs"), "session/spec.rs") == ["r2"]
+    # r3 exempts util/, r4 exempts the pool and the coordinator
+    assert rules_for(fixture("r3_bad.rs"), "util/bench.rs") == []
+    assert rules_for(fixture("r4_bad.rs"), "engine/pool.rs") == []
+    assert rules_for(fixture("r4_bad.rs"), "coordinator/shard.rs") == []
+
+
+def test_malformed_annotation_is_a_finding_and_does_not_suppress():
+    got = rules_for("// audit:allow(r1)\nuse std::collections::HashMap;\n")
+    assert "annotation" in got and "r1" in got
+    assert rules_for("// audit:allow(r99): bogus\nfn f() {}\n") == ["annotation"]
+
+
+def test_finding_lines_are_exact():
+    found = audit_source(AUDITED_PATH, "fn f() {}\n\nuse std::collections::HashSet;\n")
+    assert [(line, rule) for line, rule, _ in found] == [(3, "r1")]
+
+
+def test_lexer_traps():
+    # tokens inside strings, raw strings, and comments never fire
+    assert rules_for('let x = "HashMap"; // HashMap\n') == []
+    assert rules_for('let s = r#"Instant::now"#;\n') == []
+    # lifetimes survive lexing, char literals are blanked
+    lines = scan("fn f<'scope>() { let q = 'x'; }\n")
+    assert "'scope" in lines[0][0] and "'x'" not in lines[0][0]
+    # cfg(test) modules are exempt from the scoped rules
+    src = "#[cfg(test)]\nmod tests {\n    use std::collections::HashMap;\n}\n"
+    assert rules_for(src) == []
+
+
+# --- the local acceptance gate ---------------------------------------------
+
+def test_rust_src_tree_is_clean_at_head():
+    """Mirror of xtask's repo_src_tree_is_clean_at_head: rust/src has no
+    unannotated findings, so `cargo run -p xtask -- audit` exits 0."""
+    n_files, findings = audit_tree(SRC)
+    assert n_files > 50, f"walked only {n_files} files — wrong root?"
+    rendered = "\n".join(f"{f}:{l}: [{r}] {m}" for f, l, r, m in findings)
+    assert not findings, f"unannotated findings at HEAD:\n{rendered}"
+
+
+def test_every_audit_annotation_in_src_is_well_formed():
+    """No stale or malformed audit:allow survives in the real tree."""
+    pat = re.compile(r"audit:allow")
+    for dirpath, _, filenames in os.walk(SRC):
+        for name in filenames:
+            if not name.endswith(".rs"):
+                continue
+            path = os.path.join(dirpath, name)
+            with open(path, encoding="utf-8") as fh:
+                text = fh.read()
+            if not pat.search(text):
+                continue
+            rel = os.path.relpath(path, SRC).replace(os.sep, "/")
+            bad = [f for f in audit_source(rel, text) if f[1] == "annotation"]
+            assert not bad, f"{rel}: malformed annotations {bad}"

@@ -47,7 +47,7 @@ pub trait Allocator {
     /// [`crate::session::Trajectory`] there when you need the
     /// per-iteration series.
     fn run(&mut self, oracle: &mut dyn UtilityOracle, max_outer: usize) -> RunReport {
-        let t0 = std::time::Instant::now();
+        let t0 = crate::util::clock::Stopwatch::start();
         let mut lam = oracle.uniform_allocation();
         let mut iterations = 0;
         let mut stop = StopReason::MaxIters;
@@ -78,7 +78,7 @@ pub trait Allocator {
             routing_iterations: oracle.routing_iterations(),
             comm: None,
             stop,
-            elapsed_s: t0.elapsed().as_secs_f64(),
+            elapsed_s: t0.elapsed_secs(),
         }
     }
 }

@@ -21,7 +21,7 @@
 //! [`super::node`], a distributed round is bit-identical to the
 //! centralized [`OmdRouter`] iteration — at any engine worker count.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::mpsc::Receiver;
 use std::thread::JoinHandle;
 
@@ -118,7 +118,7 @@ impl DistributedOmd {
             }
         };
         // per-session topo rank of every DAG node (S is topo-first)
-        let rank: Vec<HashMap<usize, usize>> = (0..net.n_sessions())
+        let rank: Vec<BTreeMap<usize, usize>> = (0..net.n_sessions())
             .map(|w| {
                 net.session_topo(w).iter().enumerate().map(|(k, &i)| (i, k)).collect()
             })
@@ -306,8 +306,8 @@ impl DistributedOmd {
             }
         }
         // collect all node reports (+ S's downstream marginals)
-        let mut reports: HashMap<usize, Vec<(usize, usize, f64)>> = HashMap::new();
-        let mut r_of: Vec<HashMap<usize, f64>> = vec![HashMap::new(); w_cnt];
+        let mut reports: BTreeMap<usize, Vec<(usize, usize, f64)>> = BTreeMap::new();
+        let mut r_of: Vec<BTreeMap<usize, f64>> = vec![BTreeMap::new(); w_cnt];
         while reports.len() < net.n_real {
             match dep.leader_rx.recv().expect("leader inbox closed mid-round") {
                 Msg::Marginal { w, from, value } => {
@@ -341,8 +341,10 @@ impl DistributedOmd {
                 phi.frac[w][e] = v;
             }
         }
-        // merge node reports into the global snapshot (metrics/state only;
-        // each node reports its own out-edges, so the writes are disjoint)
+        // merge node reports into the global snapshot in ascending node
+        // order (BTreeMap iteration; the writes are disjoint — each node
+        // reports its own out-edges — so the order is cosmetic, but audit
+        // rule r1 wants it deterministic by construction, not by argument)
         for (_from, rows) in reports {
             for (w, e, v) in rows {
                 phi.frac[w][e] = v;

@@ -236,8 +236,8 @@ impl NodeActor {
             // F_e sums every session's contribution on the shared physical
             // edge, in ascending session order (the engine's fixed-order
             // cross-session reduction); sessions may share an edge id
-            let mut flow_of: std::collections::HashMap<usize, f64> =
-                std::collections::HashMap::new();
+            let mut flow_of: std::collections::BTreeMap<usize, f64> =
+                std::collections::BTreeMap::new();
             for w in 0..w_cnt {
                 for (slot, lane) in spec.lanes[w].iter().enumerate() {
                     *flow_of.entry(lane.edge_id).or_insert(0.0) +=

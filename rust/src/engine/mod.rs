@@ -1092,8 +1092,12 @@ fn run_units<T: Send, F: Fn(&mut T) + Sync>(
                 }
             });
         }
+        // audit:allow(r4): bench baseline — the legacy per-sweep scoped
+        // spawn kept behind set_persistent_pool(false) so benches/hotpath
+        // can measure what the persistent pool buys
         None => std::thread::scope(|scope| {
             for group in units.chunks_mut(chunk) {
+                // audit:allow(r4): bench baseline — same legacy scope path
                 scope.spawn(move || {
                     for u in group.iter_mut() {
                         f(u);

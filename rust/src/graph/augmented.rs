@@ -875,7 +875,7 @@ mod tests {
                 routers.sort_unstable();
                 assert_eq!(row_nodes, routers, "w={w}");
                 // rows follow the session topo order
-                let pos: std::collections::HashMap<usize, usize> = net
+                let pos: std::collections::BTreeMap<usize, usize> = net
                     .session_topo(w)
                     .iter()
                     .enumerate()
@@ -991,7 +991,7 @@ mod tests {
             assert_eq!(net.version_topo.len(), 2, "one stored order per version");
             // the shared order is a valid topo order of every member DAG
             for s in 0..net.n_sessions() {
-                let pos: std::collections::HashMap<usize, usize> = net
+                let pos: std::collections::BTreeMap<usize, usize> = net
                     .session_topo(s)
                     .iter()
                     .enumerate()
@@ -1051,7 +1051,7 @@ mod tests {
         // subsequence)
         for (b, blk) in net.batch.blocks.iter().enumerate() {
             let order = net.session_topo(blk.sessions[0]);
-            let pos: std::collections::HashMap<usize, usize> =
+            let pos: std::collections::BTreeMap<usize, usize> =
                 order.iter().enumerate().map(|(k, &i)| (i, k)).collect();
             for pair in net.batch.rows(b).windows(2) {
                 assert!(pos[&pair[0].node] < pos[&pair[1].node]);

@@ -110,7 +110,7 @@ mod tests {
         let mut rng = Rng::seed_from(21);
         let net = topologies::connected_er(9, 0.4, 2, &mut rng);
         for p in enumerate_paths(&net, 1, 10_000) {
-            let mut seen = std::collections::HashSet::new();
+            let mut seen = std::collections::BTreeSet::new();
             seen.insert(AugmentedNet::SOURCE);
             for &e in &p.edges {
                 assert!(seen.insert(net.graph.edge(e).dst), "node repeated");

@@ -449,9 +449,9 @@ fn cmd_sim(args: &Args) -> Result<(), String> {
         session.cfg.seed
     );
     let optimized = session.routing_run(&router, iters)?.finish();
-    let t0 = std::time::Instant::now();
+    let t0 = jowr::util::clock::Stopwatch::start();
     let (report, sim) = session.sim_run(windows)?.warm_start_from(&optimized).finish();
-    let dt = t0.elapsed().as_secs_f64().max(1e-9);
+    let dt = t0.elapsed_secs().max(1e-9);
     println!(
         "replayed {} requests / {} events in {:.3}s ({:.0} events/s, {:.0} reqs/s)",
         sim.arrivals,

@@ -116,7 +116,7 @@ pub trait Router {
         phi: &mut Phi,
         max_iters: usize,
     ) -> RunReport {
-        let t0 = std::time::Instant::now();
+        let t0 = crate::util::clock::Stopwatch::start();
         let mut iterations = 0;
         let mut stop = StopReason::MaxIters;
         for _ in 0..max_iters {
@@ -140,7 +140,7 @@ pub trait Router {
             routing_iterations: iterations,
             comm: self.comm_stats(),
             stop,
-            elapsed_s: t0.elapsed().as_secs_f64(),
+            elapsed_s: t0.elapsed_secs(),
         }
     }
 }

@@ -70,7 +70,7 @@ impl OptRouter {
 
     /// Solve the path-flow program for allocation `lam`.
     pub fn solve(&self, problem: &Problem, lam: &[f64]) -> OptSolution {
-        let t0 = std::time::Instant::now();
+        let t0 = crate::util::clock::Stopwatch::start();
         let net = &problem.net;
         let w_cnt = net.n_sessions();
         assert_eq!(lam.len(), w_cnt);
@@ -198,7 +198,7 @@ impl OptRouter {
             path_flows: x,
             paths,
             iterations,
-            elapsed_s: t0.elapsed().as_secs_f64(),
+            elapsed_s: t0.elapsed_secs(),
         }
     }
 

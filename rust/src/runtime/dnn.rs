@@ -74,12 +74,12 @@ impl DnnVersion {
     /// Only the frame tensor is uploaded per call — weights stay resident.
     pub fn enhance(&self, rt: &mut XlaRuntime, frames: &[f32]) -> Result<(Vec<f32>, f64)> {
         assert_eq!(frames.len(), self.batch * self.frame_dim);
-        let t0 = std::time::Instant::now();
+        let t0 = crate::util::clock::Stopwatch::start();
         let frame_buf = rt.upload_f32(frames, &[self.batch, self.frame_dim])?;
         let mut inputs: Vec<&xla::PjRtBuffer> = vec![&frame_buf];
         inputs.extend(self.weights.iter());
         let outs = rt.execute_buffers(&self.artifact, &inputs)?;
-        let dt = t0.elapsed().as_secs_f64();
+        let dt = t0.elapsed_secs();
         let out = outs
             .into_iter()
             .next()

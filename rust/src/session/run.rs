@@ -28,7 +28,7 @@
 //! `tests/test_session.rs`.
 
 use std::ops::ControlFlow;
-use std::time::Instant;
+use crate::util::clock::Stopwatch;
 
 use crate::allocation::{Allocator, UtilityOracle};
 use crate::coordinator::net::CommStats;
@@ -212,14 +212,20 @@ fn lam_moved(a: &[f64], b: &[f64]) -> f64 {
 struct RunCore<'a> {
     stop_rules: Vec<Box<dyn StopRule + 'a>>,
     observers: Vec<&'a mut dyn Observer>,
-    t0: Instant,
+    t0: Stopwatch,
     iter: usize,
     finished: Option<RunReport>,
 }
 
 impl<'a> RunCore<'a> {
     fn new(stop_rules: Vec<Box<dyn StopRule + 'a>>) -> Self {
-        RunCore { stop_rules, observers: Vec::new(), t0: Instant::now(), iter: 0, finished: None }
+        RunCore {
+            stop_rules,
+            observers: Vec::new(),
+            t0: Stopwatch::start(),
+            iter: 0,
+            finished: None,
+        }
     }
 
     /// Re-report a finished run without advancing it.
@@ -228,7 +234,7 @@ impl<'a> RunCore<'a> {
     }
 
     fn elapsed_s(&self) -> f64 {
-        self.t0.elapsed().as_secs_f64()
+        self.t0.elapsed_secs()
     }
 
     /// Step epilogue: count the iteration, fan out to observers, and check

@@ -27,7 +27,7 @@
 //! println!("{}", report.to_csv());
 //! ```
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::ops::ControlFlow;
 use std::path::Path;
 use std::sync::Mutex;
@@ -47,7 +47,7 @@ use crate::util::json::Json;
 /// `(solver × seed)` cell. Problem construction is a pure function of the
 /// canonical spec, so cached cells are bit-identical to rebuilt ones
 /// (asserted by the suite tests).
-type ProblemCache = Mutex<HashMap<u64, Problem>>;
+type ProblemCache = Mutex<BTreeMap<u64, Problem>>;
 
 /// Which half of the solver registry a suite entry addresses — or the
 /// request-level simulator replaying a router's optimized configuration.
@@ -228,7 +228,7 @@ impl Suite {
         }
         let mut results: Vec<Option<SuiteCell>> = (0..grid.len()).map(|_| None).collect();
         let workers = self.effective_workers(grid.len());
-        let cache: ProblemCache = Mutex::new(HashMap::new());
+        let cache: ProblemCache = Mutex::new(BTreeMap::new());
         let cache = &cache;
         if workers <= 1 || grid.len() <= 1 {
             for (slot, desc) in results.iter_mut().zip(&grid) {

@@ -1,0 +1,51 @@
+//! The project's only wall-clock access point.
+//!
+//! Everything outside `util/` is wall-clock-free by contract (audit rule
+//! `r3`, enforced by `cargo run -p xtask -- audit`): engine sweeps, sim
+//! replays, and solver iterates are pure functions of their inputs, so a
+//! run is reproducible bit for bit. Timing *telemetry* — `elapsed_s` in
+//! run reports, the `Deadline` stop rule, CLI throughput lines — is still
+//! wanted, so it flows through [`Stopwatch`], keeping every clock read in
+//! one audited module. Durations only ever *report* or *stop* a run; they
+//! never feed an iterate.
+
+use std::time::{Duration, Instant};
+
+/// A started wall-clock timer. The only way to read time outside `util/`.
+#[derive(Clone, Copy, Debug)]
+pub struct Stopwatch {
+    t0: Instant,
+}
+
+impl Stopwatch {
+    /// Start timing now.
+    pub fn start() -> Stopwatch {
+        Stopwatch { t0: Instant::now() }
+    }
+
+    /// Time since [`Stopwatch::start`].
+    pub fn elapsed(&self) -> Duration {
+        self.t0.elapsed()
+    }
+
+    /// Time since [`Stopwatch::start`], in seconds (the unit every report
+    /// field and stop rule uses).
+    pub fn elapsed_secs(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elapsed_is_monotone() {
+        let sw = Stopwatch::start();
+        let a = sw.elapsed_secs();
+        let b = sw.elapsed_secs();
+        assert!(a >= 0.0);
+        assert!(b >= a);
+        assert_eq!(sw.elapsed().as_secs_f64().floor(), sw.elapsed_secs().floor());
+    }
+}

@@ -1,0 +1,204 @@
+//! Loom model checks for the hand-rolled concurrency plane.
+//!
+//! Compiled and run only under the model checker:
+//!
+//! ```text
+//! cargo add loom@0.7 --dev        # not vendored — offline registry
+//! RUSTFLAGS="--cfg loom" cargo test --release --test loom_models
+//! ```
+//!
+//! ## What is modeled (honest scope)
+//!
+//! Loom explores thread interleavings of *loom* primitives; it cannot
+//! instrument `std::sync::mpsc`, which is what `engine::pool::WorkerPool`
+//! and `coordinator::transport::Loopback` are built on. These tests
+//! therefore model-check the **protocols** — re-expressed 1:1 over a
+//! loom-backed bounded mailbox (`Mutex<VecDeque> + Condvar`, the textbook
+//! semantics of a bounded channel) — not the std channel internals:
+//!
+//! * `WorkerPool::run_scoped`: pinned dispatch → caller chunk → completion
+//!   barrier → outcome propagation. Checked: the barrier never returns
+//!   before every dispatched task ran (task effects are visible after it),
+//!   no interleaving deadlocks, and a task failure is *observed after* the
+//!   barrier instead of being lost (panic-forwarding, modeled as an `Err`
+//!   completion exactly like `pool.rs` forwards payloads).
+//! * `Loopback` round protocol at S=0: each shard sends its `FlowDelta`
+//!   then blocks on its own mailbox until the peer's round arrived.
+//!   Checked: no deadlock even at mailbox capacity 1 (stricter than the
+//!   real `shards*4+16` capacity), no lost delta, absolute-value
+//!   reconstruction is exact, and per-sender FIFO keeps round numbers in
+//!   order across two consecutive rounds.
+//!
+//! The *real* `WorkerPool`/`Loopback` code paths are exercised under Miri
+//! and ThreadSanitizer by the `miri`/`tsan` CI jobs (see
+//! `.github/workflows/ci.yml`), and bit-identity across worker counts is
+//! pinned by the equivalence suites. State spaces are kept tiny (≤ 3
+//! threads, ≤ 2 rounds) so the exhaustive exploration finishes in seconds.
+
+#![cfg(loom)]
+
+use std::collections::VecDeque;
+
+use loom::sync::{Arc, Condvar, Mutex};
+use loom::thread;
+
+/// A bounded FIFO mailbox with blocking send (when full) and blocking
+/// receive (when empty) — the protocol-level semantics of both the pool's
+/// per-thread job channels and the Loopback shard mailboxes.
+struct Mailbox<T> {
+    q: Mutex<VecDeque<T>>,
+    cv: Condvar,
+    cap: usize,
+}
+
+impl<T> Mailbox<T> {
+    fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        Mailbox { q: Mutex::new(VecDeque::new()), cv: Condvar::new(), cap }
+    }
+
+    fn send(&self, v: T) {
+        let mut q = self.q.lock().unwrap();
+        while q.len() >= self.cap {
+            q = self.cv.wait(q).unwrap();
+        }
+        q.push_back(v);
+        self.cv.notify_all();
+    }
+
+    fn recv(&self) -> T {
+        let mut q = self.q.lock().unwrap();
+        loop {
+            if let Some(v) = q.pop_front() {
+                self.cv.notify_all();
+                return v;
+            }
+            q = self.cv.wait(q).unwrap();
+        }
+    }
+}
+
+/// Completion outcome, as forwarded by `WorkerPool` (`Err` = caught panic
+/// payload).
+type Done = Result<(), &'static str>;
+
+/// Two pinned workers + the caller chunk: the barrier must not return
+/// until both tasks ran, and their effects must be visible afterwards.
+#[test]
+fn worker_pool_barrier_sees_every_task_effect() {
+    loom::model(|| {
+        let done = Arc::new(Mailbox::<Done>::new(2));
+        let cells = Arc::new([Mutex::new(0usize), Mutex::new(0usize)]);
+        let mut handles = Vec::new();
+        for (i, jobs) in [Mailbox::<usize>::new(1), Mailbox::<usize>::new(1)]
+            .map(Arc::new)
+            .into_iter()
+            .enumerate()
+        {
+            // pinned dispatch: task i goes to worker i's own channel
+            let (d, c, j) = (Arc::clone(&done), Arc::clone(&cells), Arc::clone(&jobs));
+            handles.push(thread::spawn(move || {
+                let task = j.recv();
+                *c[task].lock().unwrap() = task + 1; // "run the closure"
+                d.send(Ok(()));
+            }));
+            jobs.send(i);
+        }
+        // caller chunk runs concurrently, then the completion barrier
+        let mut caller_chunk = 41;
+        caller_chunk += 1;
+        for _ in 0..2 {
+            done.recv().unwrap();
+        }
+        // after the barrier every task effect is visible (this is the
+        // property that makes the lifetime erasure in pool.rs sound)
+        assert_eq!(*cells[0].lock().unwrap(), 1);
+        assert_eq!(*cells[1].lock().unwrap(), 2);
+        assert_eq!(caller_chunk, 42);
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+}
+
+/// A failing task must be *observed after* the barrier (forwarded, never
+/// lost, never unwinding past state that other tasks still borrow).
+#[test]
+fn worker_pool_failure_is_forwarded_after_the_barrier() {
+    loom::model(|| {
+        let jobs = Arc::new(Mailbox::<bool>::new(1));
+        let done = Arc::new(Mailbox::<Done>::new(1));
+        let (j, d) = (Arc::clone(&jobs), Arc::clone(&done));
+        let h = thread::spawn(move || {
+            let fail = j.recv();
+            // pool.rs: catch_unwind(job) → forward the payload as Err
+            d.send(if fail { Err("worker boom") } else { Ok(()) });
+        });
+        jobs.send(true);
+        // the barrier drains exactly n completions, then propagates
+        let outcome = done.recv();
+        assert_eq!(outcome, Err("worker boom"));
+        h.join().unwrap();
+    });
+}
+
+/// One `FlowDelta` of the sharded round protocol.
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct Delta {
+    shard: usize,
+    round: u32,
+    flow: f64,
+}
+
+/// S=0 round: both shards gossip their delta and then block until the
+/// peer's delta for the same round arrived. Capacity 1 (tighter than the
+/// real plane) must still never deadlock, and no delta may be lost.
+#[test]
+fn loopback_round_protocol_no_deadlock_no_lost_delta() {
+    loom::model(|| {
+        let boxes = Arc::new([Mailbox::<Delta>::new(1), Mailbox::<Delta>::new(1)]);
+        let mut handles = Vec::new();
+        for shard in 0..2usize {
+            let b = Arc::clone(&boxes);
+            handles.push(thread::spawn(move || {
+                let peer = 1 - shard;
+                // shard.rs: send own delta, then wait for peer round ≥ r − S
+                b[peer].send(Delta { shard, round: 0, flow: (shard + 1) as f64 });
+                let got = b[shard].recv();
+                assert_eq!(got.shard, peer, "delta from the peer");
+                assert_eq!(got.round, 0, "S=0: same-round aggregate");
+                // absolute values → exact reconstruction of the peer flow
+                assert_eq!(got.flow, (peer + 1) as f64);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+}
+
+/// Two consecutive rounds: per-sender FIFO (the property the Loopback
+/// channel provides) keeps the peer's rounds in order, so a round-r price
+/// never reads a round-(r+1) aggregate at S=0.
+#[test]
+fn loopback_rounds_stay_ordered_per_sender() {
+    loom::model(|| {
+        let boxes = Arc::new([Mailbox::<Delta>::new(2), Mailbox::<Delta>::new(2)]);
+        let mut handles = Vec::new();
+        for shard in 0..2usize {
+            let b = Arc::clone(&boxes);
+            handles.push(thread::spawn(move || {
+                let peer = 1 - shard;
+                for round in 0..2u32 {
+                    b[peer].send(Delta { shard, round, flow: round as f64 });
+                    let got = b[shard].recv();
+                    assert_eq!(got.round, round, "FIFO: rounds arrive in order");
+                    assert_eq!(got.flow, round as f64);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+}

@@ -1,0 +1,228 @@
+//! Determinism pins for the ordering-sensitive paths the audit rules
+//! guard (`cargo run -p xtask -- audit`, rules r1/r4/r5), plus std-level
+//! stress for the two concurrency primitives whose *protocols* are
+//! model-checked in `tests/loom_models.rs`:
+//!
+//! * repeat-run **bitwise** equality of the distributed leader report —
+//!   pins the `BTreeMap` conversions in `coordinator/leader.rs` /
+//!   `coordinator/node.rs` (the report-merge loop now iterates in
+//!   ascending node order; any drift back to hash-order iteration that
+//!   affects results would break these exact-bit comparisons across runs
+//!   and against the centralized solver),
+//! * repeat-run bitwise equality of every `Suite` cell — pins the
+//!   `ProblemCache` conversion in `session/suite.rs` (cells race to warm
+//!   a shared cache across worker threads; results must not depend on
+//!   who won),
+//! * a multi-threaded `Loopback` stress: no lost `FlowDelta`, per-sender
+//!   FIFO round ordering, exact message accounting,
+//! * a `WorkerPool` stress hammering `run_scoped` with interleaved panic
+//!   rounds: panics are forwarded after the completion barrier and the
+//!   pool stays usable, with every non-panicking task's effect intact.
+//!
+//! Comparisons deliberately use `f64::to_bits`, not `==`: the guarantee
+//! is bit-identity (same bits in, same bits out), which `==` would
+//! weaken around `-0.0` and NaN.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use jowr::coordinator::messages::Msg;
+use jowr::engine::pool::WorkerPool;
+use jowr::prelude::*;
+use jowr::testkit::test_workers;
+
+/// Bitwise equality of two f64 slices, with a labelled assert.
+fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}[{i}]: {x} vs {y} differ in bits");
+    }
+}
+
+fn assert_reports_bit_identical(a: &RunReport, b: &RunReport, what: &str) {
+    assert_eq!(a.algo, b.algo, "{what}: algo");
+    assert_eq!(a.objective.to_bits(), b.objective.to_bits(), "{what}: objective bits");
+    assert_bits_eq(&a.lam, &b.lam, what);
+    assert_eq!(a.iterations, b.iterations, "{what}: iterations");
+    assert_eq!(a.routing_iterations, b.routing_iterations, "{what}: routing iterations");
+    assert_eq!(a.comm, b.comm, "{what}: comm accounting");
+    match (&a.phi, &b.phi) {
+        (Some(pa), Some(pb)) => {
+            assert_eq!(pa.frac.len(), pb.frac.len(), "{what}: phi session count");
+            for (w, (ra, rb)) in pa.frac.iter().zip(&pb.frac).enumerate() {
+                assert_bits_eq(ra, rb, &format!("{what}: phi[{w}]"));
+            }
+        }
+        (None, None) => {}
+        _ => panic!("{what}: phi presence differs"),
+    }
+}
+
+fn session_for(workers: usize) -> Session {
+    Scenario::paper_default()
+        .nodes(10)
+        .link_probability(0.3)
+        .seed(11)
+        .workers(workers)
+        .build()
+        .unwrap()
+}
+
+/// The distributed leader's report merge iterates per-node row reports.
+/// Since the conversion to `BTreeMap` that iteration is in ascending node
+/// order; two independent runs (fresh sessions, fresh fabrics, fresh
+/// engine pools) must produce bit-identical reports.
+#[test]
+fn distributed_leader_report_is_bitwise_stable_across_runs() {
+    let rounds = 12;
+    let a = session_for(test_workers()).distributed_run(rounds).unwrap().finish();
+    let b = session_for(test_workers()).distributed_run(rounds).unwrap().finish();
+    assert_reports_bit_identical(&a, &b, "distributed repeat");
+    // and across engine worker counts (the merge must not depend on how
+    // node-local work was chunked)
+    let c = session_for(1).distributed_run(rounds).unwrap().finish();
+    assert_reports_bit_identical(&a, &c, "distributed workers=1 vs pooled");
+}
+
+/// Suite cells share a `ProblemCache` (now a `BTreeMap` behind a mutex)
+/// and run on a worker pool in nondeterministic completion order; the
+/// per-cell reports must not depend on either.
+#[test]
+fn suite_cells_are_bitwise_stable_across_repeat_runs() {
+    let run = || {
+        Suite::new()
+            .spec("paper", ScenarioSpec::paper_default())
+            .router("omd")
+            .router("sgp")
+            .seeds(&[1, 2])
+            .iters(8)
+            .workers(test_workers())
+            .cache_problems(true)
+            .run()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.cells.len(), b.cells.len());
+    assert!(!a.cells.is_empty(), "suite produced no cells");
+    for (ca, cb) in a.cells.iter().zip(&b.cells) {
+        assert_eq!(ca.scenario, cb.scenario);
+        assert_eq!(ca.solver, cb.solver);
+        assert_eq!(ca.seed, cb.seed);
+        let what = format!("cell ({}, {}, seed {})", ca.scenario, ca.solver, ca.seed);
+        match (&ca.outcome, &cb.outcome) {
+            (Ok(ra), Ok(rb)) => assert_reports_bit_identical(&ra.report, &rb.report, &what),
+            (Err(ea), Err(eb)) => assert_eq!(ea, eb, "{what}: error text"),
+            _ => panic!("{what}: outcome kind differs between runs"),
+        }
+    }
+    // CSV rows agree except the wall-clock column (elapsed_s, column 9)
+    for (la, lb) in a.to_csv().lines().zip(b.to_csv().lines()) {
+        let strip = |l: &str| {
+            let mut f: Vec<String> = l.split(',').map(str::to_string).collect();
+            if f.len() > 9 {
+                f[9] = String::new();
+            }
+            f.join(",")
+        };
+        assert_eq!(strip(la), strip(lb), "csv row differs beyond elapsed_s");
+    }
+}
+
+/// Two shards hammer a third over the real `Loopback` (bounded std mpsc
+/// channels, senders block when full): nothing may be lost, per-sender
+/// rounds must arrive in FIFO order, and the transport's communication
+/// accounting must be exact.
+#[test]
+fn loopback_stress_no_lost_deltas_per_sender_fifo() {
+    const PER_SENDER: u64 = 64; // well past the bounded mailbox capacity
+    let fabric = std::sync::Arc::new(Loopback::new(3));
+    let sent_bytes = std::sync::Arc::new(AtomicU64::new(0));
+    let mut handles = Vec::new();
+    for shard in [1usize, 2usize] {
+        let f = std::sync::Arc::clone(&fabric);
+        let sb = std::sync::Arc::clone(&sent_bytes);
+        handles.push(std::thread::spawn(move || {
+            for round in 0..PER_SENDER {
+                let msg = Msg::FlowDelta {
+                    shard,
+                    round,
+                    edges: vec![(shard, round as f64), (shard + 7, 0.5)],
+                };
+                sb.fetch_add(msg.wire_bytes() as u64, Ordering::Relaxed);
+                assert!(f.send(shard, 0, msg), "loopback send failed");
+            }
+        }));
+    }
+    let mut next_round = [0u64; 3]; // expected next round per sender
+    let mut received = 0u64;
+    while received < 2 * PER_SENDER {
+        let msg = fabric
+            .recv(0, Duration::from_secs(10))
+            .expect("loopback receive timed out mid-stress");
+        match msg {
+            Msg::FlowDelta { shard, round, edges } => {
+                assert_eq!(round, next_round[shard], "sender {shard}: rounds out of FIFO order");
+                next_round[shard] += 1;
+                // payload integrity: absolute values arrive untouched
+                assert_eq!(edges[0], (shard, round as f64));
+                received += 1;
+            }
+            other => panic!("unexpected message on the fabric: {other:?}"),
+        }
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(next_round, [0, PER_SENDER, PER_SENDER], "a sender lost deltas");
+    // exact accounting: every send was counted with its wire size
+    let comm = fabric.comm();
+    assert_eq!(comm.messages, 2 * PER_SENDER);
+    assert_eq!(comm.bytes, sent_bytes.load(Ordering::Relaxed));
+    assert_eq!(comm.shards[0].msgs, 0, "shard 0 sent nothing");
+    assert_eq!(comm.shards[1].msgs, PER_SENDER);
+    assert_eq!(comm.shards[2].msgs, PER_SENDER);
+}
+
+/// Hammer `run_scoped` across many rounds with interleaved panic rounds:
+/// every non-panicking task's effect must land before the barrier
+/// returns, a panicking task's payload must resume on the caller *after*
+/// the barrier, and the pool must stay fully usable afterwards.
+#[test]
+fn worker_pool_survives_contention_and_panic_rounds() {
+    let pool = WorkerPool::new(3);
+    let expect = |round: u64, slot: u64| round.wrapping_mul(0x9e37_79b9) ^ slot;
+    for round in 0..80u64 {
+        let panic_round = round % 40 == 17; // rounds 17 and 57
+        let mut out = vec![0u64; 4];
+        {
+            let mut slots: Vec<&mut u64> = out.iter_mut().collect();
+            let caller_slot = slots.pop().unwrap();
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = slots
+                .into_iter()
+                .enumerate()
+                .map(|(i, slot)| {
+                    let boom = panic_round && i == 1;
+                    Box::new(move || {
+                        *slot = expect(round, i as u64);
+                        if boom {
+                            panic!("task boom round {round}");
+                        }
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            let run = || pool.run_scoped(tasks, || *caller_slot = expect(round, 3));
+            if panic_round {
+                let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(run));
+                assert!(err.is_err(), "round {round}: panic was swallowed");
+            } else {
+                run();
+            }
+        }
+        // the barrier ran to completion either way: every effect is
+        // visible, including the panicking task's pre-panic write
+        for (slot, got) in out.iter().enumerate() {
+            assert_eq!(*got, expect(round, slot as u64), "round {round} slot {slot}");
+        }
+    }
+    assert_eq!(pool.n_threads(), 3, "pool degraded after panic rounds");
+}

@@ -1,0 +1,724 @@
+//! # The determinism & safety auditor
+//!
+//! Every bit-identity guarantee this reproduction makes — OMD/GS-OMA
+//! iterates identical at any `--workers`, `sharded-omd` K=1 ≡ single-leader
+//! bit for bit, SIMD ≡ scalar, dirty ≡ full — rests on ordering discipline
+//! (fixed-order reductions, sorted ingress, ascending shard sums) that a
+//! single stray `HashMap` iteration or completion-order float sum would
+//! silently break. This crate makes that discipline machine-checked:
+//! `cargo run -p xtask -- audit` walks `rust/src/` and fails the build on
+//! any unannotated violation of the project invariants.
+//!
+//! ## Rules
+//!
+//! | rule | invariant |
+//! |------|-----------|
+//! | `r1` | no `HashMap`/`HashSet` in ordering-sensitive modules (`engine/`, `routing/`, `coordinator/`, `graph/`, `sim/`, `session/suite.rs`) — their iteration order is nondeterministic; use `BTreeMap`/`BTreeSet` or a sorted collect |
+//! | `r2` | every `unsafe` block/fn/impl is preceded by a `// SAFETY:` comment (or a `# Safety` doc section) |
+//! | `r3` | no `Instant::now`/`SystemTime`/`thread_rng` outside `util/` — sim/engine results are a pure function of their inputs (wall clock only via `util::clock`) |
+//! | `r4` | no thread creation (`thread::spawn`/`thread::Builder`/`thread::scope`/`.spawn(`) outside `engine/pool.rs` and `coordinator/` — the persistent-`WorkerPool` contract from PR 3 |
+//! | `r5` | no f64 `.sum::<f64>()`/float `fold` in a statement that also touches a parallel/completion-order source (`recv`, `lock`, rayon-style `par_iter`) in ordering-sensitive modules — cross-thread reductions run in fixed order on the caller thread |
+//!
+//! ## Suppression grammar
+//!
+//! Findings are suppressible **only** via an inline annotation, so every
+//! exemption is a reviewed, documented decision:
+//!
+//! ```text
+//! // audit:allow(r4): bench baseline — the legacy per-sweep scope spawn
+//! ```
+//!
+//! The annotation applies to its own line and to the next line that holds
+//! code. Multiple rules: `audit:allow(r1, r5): reason`. A missing reason or
+//! an unknown rule name is itself a finding (`annotation`).
+//!
+//! ## Honest scope
+//!
+//! The offline registry has no `syn`, so the auditor runs on a
+//! purpose-built lexer, not a full AST: string literals and comments are
+//! stripped (no false positives from docs or log text), `#[cfg(test)]`
+//! modules are skipped for r1/r3/r4/r5 (r2 applies everywhere), and rules
+//! are token-level. r1 deliberately bans the *type*, not just iteration —
+//! a lexer cannot prove a map is never iterated, so order-independent uses
+//! must carry an annotation saying why. r5 is a heuristic tripwire: it
+//! pairs a float-reduction token with a completion-order token inside one
+//! statement. The fixture suite in `tests/` pins all of this behavior.
+
+use std::collections::BTreeSet;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// Audited invariant classes. `Annotation` marks a malformed
+/// `audit:allow` (never suppressible — fix the annotation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    R1,
+    R2,
+    R3,
+    R4,
+    R5,
+    Annotation,
+}
+
+impl Rule {
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::R1 => "r1",
+            Rule::R2 => "r2",
+            Rule::R3 => "r3",
+            Rule::R4 => "r4",
+            Rule::R5 => "r5",
+            Rule::Annotation => "annotation",
+        }
+    }
+
+    /// Parse a rule name as it appears inside `audit:allow(...)`. The
+    /// `annotation` pseudo-rule is intentionally not parseable.
+    pub fn parse(s: &str) -> Option<Rule> {
+        match s {
+            "r1" => Some(Rule::R1),
+            "r2" => Some(Rule::R2),
+            "r3" => Some(Rule::R3),
+            "r4" => Some(Rule::R4),
+            "r5" => Some(Rule::R5),
+            _ => None,
+        }
+    }
+}
+
+/// One violation: file (relative to the audited root, forward slashes),
+/// 1-based line, rule, and a human message.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: Rule,
+    pub msg: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule.id(), self.msg)
+    }
+}
+
+/// Result of walking a tree: how many files were scanned plus every
+/// finding, in deterministic (path, line) order.
+#[derive(Clone, Debug, Default)]
+pub struct AuditReport {
+    pub files: usize,
+    pub findings: Vec<Finding>,
+}
+
+impl AuditReport {
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lexer: split each physical line into code text (strings blanked) and
+// comment text, so rules never fire on docs, log strings, or fixtures.
+// ---------------------------------------------------------------------------
+
+/// One scanned physical line.
+#[derive(Clone, Debug, Default)]
+struct ScannedLine {
+    /// Source text with comments removed and string/char literals blanked.
+    code: String,
+    /// Concatenated comment text that appeared on this line.
+    comment: String,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum LexState {
+    Code,
+    LineComment,
+    /// Nesting depth of `/* */` (Rust block comments nest).
+    BlockComment(u32),
+    Str,
+    /// `r##"..."##` with the given number of `#`s.
+    RawStr(u32),
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Lex `text` into per-line code/comment channels. The lexer understands
+/// line and nested block comments, plain/raw/byte string literals, char
+/// literals vs lifetimes, and escape sequences — enough to keep every rule
+/// below free of string/comment false positives.
+fn scan(text: &str) -> Vec<ScannedLine> {
+    let chars: Vec<char> = text.chars().collect();
+    let mut lines: Vec<ScannedLine> = vec![ScannedLine::default()];
+    let mut state = LexState::Code;
+    let mut i = 0usize;
+    let n = chars.len();
+    let mut prev_code_char = ' ';
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            if state == LexState::LineComment {
+                state = LexState::Code;
+            }
+            lines.push(ScannedLine::default());
+            i += 1;
+            continue;
+        }
+        let cur = lines.last_mut().expect("at least one line");
+        match state {
+            LexState::Code => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    state = LexState::LineComment;
+                    i += 2;
+                    continue;
+                }
+                if c == '/' && next == Some('*') {
+                    state = LexState::BlockComment(1);
+                    i += 2;
+                    continue;
+                }
+                if c == '"' {
+                    state = LexState::Str;
+                    cur.code.push(' ');
+                    prev_code_char = ' ';
+                    i += 1;
+                    continue;
+                }
+                // raw (byte) strings: r"..", r#".."#, br".." — only when
+                // the `r`/`b` is not the tail of a longer identifier
+                if (c == 'r' || c == 'b') && !is_ident_char(prev_code_char) {
+                    let mut j = i + 1;
+                    if c == 'b' && chars.get(j) == Some(&'r') {
+                        j += 1;
+                    }
+                    if c == 'b' && chars.get(j) == Some(&'"') {
+                        // plain byte string b".." — reuse the Str state
+                        state = LexState::Str;
+                        cur.code.push(' ');
+                        prev_code_char = ' ';
+                        i = j + 1;
+                        continue;
+                    }
+                    if c == 'r' || (c == 'b' && j > i + 1) {
+                        let mut hashes = 0u32;
+                        while chars.get(j) == Some(&'#') {
+                            hashes += 1;
+                            j += 1;
+                        }
+                        if chars.get(j) == Some(&'"') {
+                            state = LexState::RawStr(hashes);
+                            cur.code.push(' ');
+                            prev_code_char = ' ';
+                            i = j + 1;
+                            continue;
+                        }
+                    }
+                }
+                if c == '\'' {
+                    // char literal vs lifetime: '\\x' / 'a' are literals,
+                    // 'scope is a lifetime (no closing quote after one char)
+                    if next == Some('\\') {
+                        let mut j = i + 2;
+                        while j < n && chars[j] != '\'' {
+                            j += 1;
+                        }
+                        cur.code.push(' ');
+                        prev_code_char = ' ';
+                        i = (j + 1).min(n);
+                        continue;
+                    }
+                    if chars.get(i + 2) == Some(&'\'') {
+                        cur.code.push(' ');
+                        prev_code_char = ' ';
+                        i += 3;
+                        continue;
+                    }
+                }
+                cur.code.push(c);
+                prev_code_char = c;
+                i += 1;
+            }
+            LexState::LineComment => {
+                cur.comment.push(c);
+                i += 1;
+            }
+            LexState::BlockComment(depth) => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('*') {
+                    state = LexState::BlockComment(depth + 1);
+                    i += 2;
+                    continue;
+                }
+                if c == '*' && next == Some('/') {
+                    state = if depth == 1 {
+                        LexState::Code
+                    } else {
+                        LexState::BlockComment(depth - 1)
+                    };
+                    i += 2;
+                    continue;
+                }
+                cur.comment.push(c);
+                i += 1;
+            }
+            LexState::Str => {
+                if c == '\\' {
+                    i += 2;
+                    continue;
+                }
+                if c == '"' {
+                    state = LexState::Code;
+                }
+                i += 1;
+            }
+            LexState::RawStr(hashes) => {
+                if c == '"' {
+                    let mut j = i + 1;
+                    let mut seen = 0u32;
+                    while seen < hashes && chars.get(j) == Some(&'#') {
+                        seen += 1;
+                        j += 1;
+                    }
+                    if seen == hashes {
+                        state = LexState::Code;
+                        i = j;
+                        continue;
+                    }
+                }
+                i += 1;
+            }
+        }
+    }
+    lines
+}
+
+/// Does `code` contain `word` as a standalone token (not as a substring of
+/// a longer identifier)? `word` itself may contain `::`/`.`/`(`.
+fn has_token(code: &str, word: &str) -> bool {
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(word) {
+        let at = start + pos;
+        let before_ok = at == 0 || !is_ident_char(code[..at].chars().next_back().unwrap());
+        let after = code[at + word.len()..].chars().next();
+        let after_ok = match word.chars().next_back() {
+            Some(t) if is_ident_char(t) => after.map_or(true, |c| !is_ident_char(c)),
+            _ => true,
+        };
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + word.len();
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// Annotations + test-region map
+// ---------------------------------------------------------------------------
+
+/// Per-line context computed once per file.
+struct FileMap {
+    lines: Vec<ScannedLine>,
+    /// Rules suppressed on each line via `audit:allow`.
+    allow: Vec<BTreeSet<Rule>>,
+    /// Lines inside a `#[cfg(test)] mod … { … }` region.
+    in_test: Vec<bool>,
+    /// Malformed-annotation findings (reported regardless of rules).
+    annotation_findings: Vec<(usize, String)>,
+}
+
+fn build_map(lines: Vec<ScannedLine>) -> FileMap {
+    let n = lines.len();
+    let mut allow: Vec<BTreeSet<Rule>> = vec![BTreeSet::new(); n];
+    let mut annotation_findings = Vec::new();
+
+    for i in 0..n {
+        let comment = &lines[i].comment;
+        let Some(pos) = comment.find("audit:allow") else { continue };
+        match parse_allow(&comment[pos..]) {
+            Ok(rules) => {
+                for &r in &rules {
+                    allow[i].insert(r);
+                }
+                // the annotation also covers the next line holding code
+                let mut j = i + 1;
+                while j < n && lines[j].code.trim().is_empty() {
+                    j += 1;
+                }
+                if j < n {
+                    for &r in &rules {
+                        allow[j].insert(r);
+                    }
+                }
+            }
+            Err(msg) => annotation_findings.push((i + 1, msg)),
+        }
+    }
+
+    // #[cfg(test)] mod … { … } regions, tracked by brace depth
+    let mut in_test = vec![false; n];
+    let mut depth: i64 = 0;
+    let mut pending_attr = false;
+    let mut region_entry: Vec<i64> = Vec::new();
+    for i in 0..n {
+        let code = lines[i].code.trim().to_string();
+        if !region_entry.is_empty() {
+            in_test[i] = true;
+        }
+        let test_attr = code.contains("cfg(test") && code.contains("#[");
+        if test_attr && !(code.contains("mod ") && code.contains('{')) {
+            pending_attr = true;
+        } else if (pending_attr || test_attr) && code.contains("mod ") && code.contains('{') {
+            region_entry.push(depth);
+            in_test[i] = true;
+            pending_attr = false;
+        } else if !code.is_empty() && !code.starts_with("#[") {
+            pending_attr = false;
+        }
+        for c in code.chars() {
+            match c {
+                '{' => depth += 1,
+                '}' => {
+                    depth -= 1;
+                    if let Some(&entry) = region_entry.last() {
+                        if depth <= entry {
+                            region_entry.pop();
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+
+    FileMap { lines, allow, in_test, annotation_findings }
+}
+
+/// Parse `audit:allow(r1[, r2]): reason`, returning the allowed rules.
+fn parse_allow(s: &str) -> Result<Vec<Rule>, String> {
+    let grammar = "grammar: // audit:allow(r1[, r2]): reason";
+    let rest = s.strip_prefix("audit:allow").expect("caller found the prefix");
+    let Some(rest) = rest.trim_start().strip_prefix('(') else {
+        return Err(format!("missing rule list ({grammar})"));
+    };
+    let Some(close) = rest.find(')') else {
+        return Err(format!("unterminated rule list ({grammar})"));
+    };
+    let mut rules = Vec::new();
+    for name in rest[..close].split(',') {
+        let name = name.trim();
+        match Rule::parse(name) {
+            Some(r) => rules.push(r),
+            None => return Err(format!("unknown rule `{name}` ({grammar})")),
+        }
+    }
+    if rules.is_empty() {
+        return Err(format!("empty rule list ({grammar})"));
+    }
+    let tail = rest[close + 1..].trim_start();
+    let reason = tail.strip_prefix(':').map(str::trim).unwrap_or("");
+    if reason.is_empty() {
+        return Err(format!("missing reason — every exemption documents why ({grammar})"));
+    }
+    Ok(rules)
+}
+
+// ---------------------------------------------------------------------------
+// Module classification
+// ---------------------------------------------------------------------------
+
+/// Ordering-sensitive modules: everything feeding the bit-identity
+/// guarantees (fixed-order reductions, sorted ingress, ascending shard
+/// sums, suite report ordering).
+fn ordering_sensitive(rel: &str) -> bool {
+    const PREFIXES: [&str; 5] = ["engine/", "routing/", "coordinator/", "graph/", "sim/"];
+    PREFIXES.iter().any(|p| rel.starts_with(p)) || rel == "session/suite.rs"
+}
+
+/// r3: the wall clock is reachable only through `util/` (`util::clock`).
+fn clock_exempt(rel: &str) -> bool {
+    rel.starts_with("util/")
+}
+
+/// r4: threads are created only by the persistent pool and the
+/// coordinator's actor/shard planes.
+fn spawn_exempt(rel: &str) -> bool {
+    rel == "engine/pool.rs" || rel.starts_with("coordinator/")
+}
+
+// ---------------------------------------------------------------------------
+// Rules
+// ---------------------------------------------------------------------------
+
+const R1_TOKENS: [&str; 2] = ["HashMap", "HashSet"];
+const R3_TOKENS: [&str; 3] = ["Instant::now", "SystemTime", "thread_rng"];
+const R4_TOKENS: [&str; 4] = ["thread::spawn", "thread::Builder", "thread::scope", ".spawn("];
+const R5_FLOAT_TOKENS: [&str; 4] = [".sum::<f64>", "fold(0.0", "fold(0f64", "fold(f64::"];
+const R5_PAR_TOKENS: [&str; 6] =
+    ["par_iter", "into_par_iter", "rayon", ".recv(", "recv_timeout", ".lock("];
+
+/// Audit one file's source text. `rel` is the path relative to the source
+/// root with forward slashes (it selects which module-scoped rules apply).
+pub fn audit_source(rel: &str, text: &str) -> Vec<Finding> {
+    let map = build_map(scan(text));
+    let mut findings = Vec::new();
+    let mut push = |line: usize, rule: Rule, msg: String| {
+        findings.push(Finding { file: rel.to_string(), line, rule, msg });
+    };
+
+    for (line, msg) in &map.annotation_findings {
+        push(*line, Rule::Annotation, msg.clone());
+    }
+
+    for (i, sl) in map.lines.iter().enumerate() {
+        let code = &sl.code;
+        if code.trim().is_empty() {
+            continue;
+        }
+        let line = i + 1;
+        let allowed = |r: Rule| map.allow[i].contains(&r);
+        let in_test = map.in_test[i];
+
+        // r1 — HashMap/HashSet banned in ordering-sensitive modules
+        if ordering_sensitive(rel) && !in_test && !allowed(Rule::R1) {
+            for tok in R1_TOKENS {
+                if has_token(code, tok) {
+                    push(
+                        line,
+                        Rule::R1,
+                        format!(
+                            "`{tok}` in an ordering-sensitive module: iteration order is \
+                             nondeterministic — use BTreeMap/BTreeSet or a sorted collect \
+                             (annotate provably order-independent uses)"
+                        ),
+                    );
+                }
+            }
+        }
+
+        // r2 — unsafe requires a SAFETY comment (everywhere, tests included)
+        if has_token(code, "unsafe") && !allowed(Rule::R2) {
+            let mut found = comment_has_safety(&sl.comment);
+            let mut j = i;
+            while !found && j > 0 {
+                j -= 1;
+                if !map.lines[j].code.trim().is_empty() || i - j > 12 {
+                    break;
+                }
+                found = comment_has_safety(&map.lines[j].comment);
+            }
+            if !found {
+                push(
+                    line,
+                    Rule::R2,
+                    "`unsafe` without a preceding `// SAFETY:` comment documenting why the \
+                     invariants hold"
+                        .to_string(),
+                );
+            }
+        }
+
+        // r3 — wall clock / ambient randomness only via util/
+        if !clock_exempt(rel) && !in_test && !allowed(Rule::R3) {
+            for tok in R3_TOKENS {
+                if has_token(code, tok) {
+                    push(
+                        line,
+                        Rule::R3,
+                        format!(
+                            "`{tok}` outside util/: results must be a pure function of inputs \
+                             — time via util::clock::Stopwatch, randomness via util::rng"
+                        ),
+                    );
+                }
+            }
+        }
+
+        // r4 — thread creation only in engine/pool.rs and coordinator/
+        if !spawn_exempt(rel) && !in_test && !allowed(Rule::R4) {
+            for tok in R4_TOKENS {
+                if code.contains(tok) {
+                    push(
+                        line,
+                        Rule::R4,
+                        format!(
+                            "`{tok}` outside engine/pool.rs and coordinator/: threads come \
+                             from the persistent WorkerPool (see engine::pool)"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+
+    // r5 — completion-order float reductions (statement-level heuristic)
+    if ordering_sensitive(rel) {
+        for stmt in statements(&map) {
+            if map.in_test[stmt.start] {
+                continue;
+            }
+            let allowed = (stmt.start..=stmt.end).any(|i| map.allow[i].contains(&Rule::R5));
+            if allowed {
+                continue;
+            }
+            let ftok = R5_FLOAT_TOKENS.iter().find(|t| stmt.code.contains(**t));
+            let ptok = R5_PAR_TOKENS.iter().find(|t| stmt.code.contains(**t));
+            if let (Some(f), Some(p)) = (ftok, ptok) {
+                findings.push(Finding {
+                    file: rel.to_string(),
+                    line: stmt.start + 1,
+                    rule: Rule::R5,
+                    msg: format!(
+                        "float reduction `{f}` in a statement touching `{p}`: cross-thread \
+                         sums must run in fixed order on the caller thread (see the engine \
+                         module docs)"
+                    ),
+                });
+            }
+        }
+    }
+
+    findings.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    findings
+}
+
+fn comment_has_safety(comment: &str) -> bool {
+    comment.contains("SAFETY:") || comment.contains("# Safety")
+}
+
+/// A multi-line statement: inclusive 0-based line range plus joined code.
+struct Stmt {
+    start: usize,
+    end: usize,
+    code: String,
+}
+
+/// Group physical lines into statements: a statement ends on a line whose
+/// code ends with `;`, `{`, or `}` while parentheses/brackets are
+/// balanced. Chained iterator pipelines therefore stay one statement.
+fn statements(map: &FileMap) -> Vec<Stmt> {
+    let mut out = Vec::new();
+    let mut start: Option<usize> = None;
+    let mut buf = String::new();
+    let mut depth: i64 = 0;
+    for (i, sl) in map.lines.iter().enumerate() {
+        let code = sl.code.trim();
+        if code.is_empty() {
+            continue;
+        }
+        if start.is_none() {
+            start = Some(i);
+        }
+        buf.push(' ');
+        buf.push_str(code);
+        for c in code.chars() {
+            match c {
+                '(' | '[' => depth += 1,
+                ')' | ']' => depth -= 1,
+                _ => {}
+            }
+        }
+        let last = code.chars().next_back().unwrap_or(' ');
+        if depth <= 0 && matches!(last, ';' | '{' | '}') {
+            out.push(Stmt { start: start.unwrap(), end: i, code: std::mem::take(&mut buf) });
+            start = None;
+            depth = 0;
+        }
+    }
+    if let Some(s) = start {
+        out.push(Stmt { start: s, end: map.lines.len() - 1, code: buf });
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Tree walking
+// ---------------------------------------------------------------------------
+
+/// Audit every `.rs` file under `src_root` (sorted walk — the report is
+/// deterministic, like everything else here).
+pub fn audit_tree(src_root: &Path) -> std::io::Result<AuditReport> {
+    let mut files = Vec::new();
+    collect_rs(src_root, &mut files)?;
+    files.sort();
+    let mut report = AuditReport::default();
+    for path in files {
+        let text = std::fs::read_to_string(&path)?;
+        let rel = path
+            .strip_prefix(src_root)
+            .expect("collected under root")
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        report.files += 1;
+        report.findings.extend(audit_source(&rel, &text));
+    }
+    Ok(report)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexer_strips_strings_and_comments() {
+        let lines = scan("let x = \"HashMap\"; // HashMap here\nlet y = 1;\n");
+        assert!(!lines[0].code.contains("HashMap"));
+        assert!(lines[0].comment.contains("HashMap here"));
+        assert_eq!(lines[1].code.trim(), "let y = 1;");
+    }
+
+    #[test]
+    fn lexer_handles_raw_strings_and_lifetimes() {
+        let lines = scan("let s = r#\"Instant::now\"#;\nfn f<'scope>(c: char) { let q = 'x'; }\n");
+        assert!(!lines[0].code.contains("Instant"));
+        assert!(lines[1].code.contains("'scope"), "lifetimes stay code");
+        assert!(!lines[1].code.contains("'x'"), "char literals are blanked");
+    }
+
+    #[test]
+    fn token_matching_respects_identifier_boundaries() {
+        assert!(has_token("use std::collections::HashMap;", "HashMap"));
+        assert!(!has_token("deny(unsafe_op_in_unsafe_fn)", "unsafe"));
+        assert!(!has_token("let MyHashMapLike = 1;", "HashMap"));
+    }
+
+    #[test]
+    fn allow_annotation_grammar() {
+        assert_eq!(parse_allow("audit:allow(r1): lookup only").unwrap(), vec![Rule::R1]);
+        assert_eq!(
+            parse_allow("audit:allow(r1, r5): reduction is order-free").unwrap(),
+            vec![Rule::R1, Rule::R5]
+        );
+        assert!(parse_allow("audit:allow(r1)").is_err(), "reason required");
+        assert!(parse_allow("audit:allow(r9): nope").is_err(), "unknown rule");
+        assert!(parse_allow("audit:allow: no list").is_err());
+    }
+
+    #[test]
+    fn module_classification() {
+        assert!(ordering_sensitive("engine/mod.rs"));
+        assert!(ordering_sensitive("session/suite.rs"));
+        assert!(!ordering_sensitive("session/spec.rs"));
+        assert!(!ordering_sensitive("util/rng.rs"));
+        assert!(spawn_exempt("coordinator/shard.rs"));
+        assert!(!spawn_exempt("engine/mod.rs"));
+    }
+}

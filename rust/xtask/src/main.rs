@@ -1,0 +1,93 @@
+//! Project automation entry point — `cargo run -p xtask -- <command>`.
+//!
+//! Commands:
+//!
+//! * `audit [--root DIR]` — run the determinism/safety auditor over the
+//!   main crate's `src/` tree (or `DIR`). Prints one line per finding and
+//!   exits nonzero when any unannotated finding remains. See the crate
+//!   docs ([`xtask`]) for the rule table and the `audit:allow` grammar.
+//! * `rules` — print the rule table (for docs and quick reference).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("audit") => audit(&args[1..]),
+        Some("rules") => {
+            print_rules();
+            ExitCode::SUCCESS
+        }
+        other => {
+            eprintln!("usage: cargo run -p xtask -- <audit [--root DIR] | rules>");
+            if let Some(cmd) = other {
+                eprintln!("unknown command: {cmd}");
+            }
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn audit(args: &[String]) -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--root" => {
+                i += 1;
+                match args.get(i) {
+                    Some(dir) => root = Some(PathBuf::from(dir)),
+                    None => {
+                        eprintln!("--root needs a directory");
+                        return ExitCode::FAILURE;
+                    }
+                }
+            }
+            other => {
+                eprintln!("unknown audit flag: {other}");
+                return ExitCode::FAILURE;
+            }
+        }
+        i += 1;
+    }
+    // default: the main crate's src/ next to this crate's manifest
+    let root = root.unwrap_or_else(|| {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("src")
+    });
+    let report = match xtask::audit_tree(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("audit: cannot walk {}: {e}", root.display());
+            return ExitCode::FAILURE;
+        }
+    };
+    for f in &report.findings {
+        println!("{f}");
+    }
+    if report.is_clean() {
+        println!("audit: OK — {} files clean", report.files);
+        ExitCode::SUCCESS
+    } else {
+        println!(
+            "audit: {} finding(s) in {} files — fix, or annotate with \
+             `// audit:allow(<rule>): <reason>`",
+            report.findings.len(),
+            report.files
+        );
+        ExitCode::FAILURE
+    }
+}
+
+fn print_rules() {
+    println!(
+        "r1  no HashMap/HashSet in ordering-sensitive modules (engine/, routing/, \
+         coordinator/, graph/, sim/, session/suite.rs)\n\
+         r2  every `unsafe` preceded by a // SAFETY: comment\n\
+         r3  no Instant::now/SystemTime/thread_rng outside util/ (use util::clock)\n\
+         r4  no thread creation outside engine/pool.rs and coordinator/\n\
+         r5  no float reductions over completion-order sources (recv/lock/par_iter)\n\
+         \n\
+         suppress: // audit:allow(<rule>[, <rule>]): <reason>"
+    );
+}

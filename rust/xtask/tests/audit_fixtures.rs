@@ -1,0 +1,177 @@
+//! Fixture suite for the determinism/safety auditor: every rule has a
+//! known-bad snippet (must produce exactly that rule's finding), an
+//! annotated snippet (finding suppressed via `audit:allow`), and a clean
+//! snippet (no finding — including the lexer traps: tokens inside strings,
+//! comments, and `#[cfg(test)]` modules). Plus the repo self-audit: the
+//! main crate's `src/` tree must be clean at HEAD.
+
+use xtask::{audit_source, audit_tree, Rule};
+
+/// Fixtures are audited under a path inside an ordering-sensitive module
+/// so every module-scoped rule is in force.
+const AUDITED_PATH: &str = "engine/fixture.rs";
+
+fn findings_for(fixture: &str, rel: &str) -> Vec<Rule> {
+    audit_source(rel, fixture).into_iter().map(|f| f.rule).collect()
+}
+
+macro_rules! fixture {
+    ($name:literal) => {
+        include_str!(concat!("fixtures/", $name))
+    };
+}
+
+// --- r1: HashMap/HashSet in ordering-sensitive modules ---------------------
+
+#[test]
+fn r1_bad_fixture_is_flagged() {
+    let rules = findings_for(fixture!("r1_bad.rs"), AUDITED_PATH);
+    assert!(!rules.is_empty() && rules.iter().all(|&r| r == Rule::R1), "{rules:?}");
+}
+
+#[test]
+fn r1_allowed_fixture_is_suppressed() {
+    assert_eq!(findings_for(fixture!("r1_allowed.rs"), AUDITED_PATH), vec![]);
+}
+
+#[test]
+fn r1_clean_fixture_passes() {
+    assert_eq!(findings_for(fixture!("r1_clean.rs"), AUDITED_PATH), vec![]);
+}
+
+#[test]
+fn r1_does_not_apply_outside_ordering_sensitive_modules() {
+    // same bad snippet under session/spec.rs (not audited for r1): clean
+    assert_eq!(findings_for(fixture!("r1_bad.rs"), "session/spec.rs"), vec![]);
+    // …but session/suite.rs is audited
+    assert!(!findings_for(fixture!("r1_bad.rs"), "session/suite.rs").is_empty());
+}
+
+// --- r2: unsafe requires SAFETY ---------------------------------------------
+
+#[test]
+fn r2_bad_fixture_is_flagged() {
+    let rules = findings_for(fixture!("r2_bad.rs"), AUDITED_PATH);
+    assert_eq!(rules, vec![Rule::R2]);
+}
+
+#[test]
+fn r2_allowed_fixture_is_suppressed() {
+    assert_eq!(findings_for(fixture!("r2_allowed.rs"), AUDITED_PATH), vec![]);
+}
+
+#[test]
+fn r2_clean_fixture_passes() {
+    // SAFETY comment and `# Safety` doc section both satisfy the rule
+    assert_eq!(findings_for(fixture!("r2_clean.rs"), AUDITED_PATH), vec![]);
+}
+
+#[test]
+fn r2_applies_everywhere_even_outside_audited_modules() {
+    assert_eq!(findings_for(fixture!("r2_bad.rs"), "session/spec.rs"), vec![Rule::R2]);
+}
+
+// --- r3: wall clock only via util/ ------------------------------------------
+
+#[test]
+fn r3_bad_fixture_is_flagged() {
+    assert_eq!(findings_for(fixture!("r3_bad.rs"), AUDITED_PATH), vec![Rule::R3]);
+}
+
+#[test]
+fn r3_allowed_fixture_is_suppressed() {
+    assert_eq!(findings_for(fixture!("r3_allowed.rs"), AUDITED_PATH), vec![]);
+}
+
+#[test]
+fn r3_clean_fixture_passes() {
+    assert_eq!(findings_for(fixture!("r3_clean.rs"), AUDITED_PATH), vec![]);
+}
+
+#[test]
+fn r3_exempts_util() {
+    assert_eq!(findings_for(fixture!("r3_bad.rs"), "util/bench.rs"), vec![]);
+}
+
+// --- r4: thread creation only in pool/coordinator ---------------------------
+
+#[test]
+fn r4_bad_fixture_is_flagged() {
+    assert_eq!(findings_for(fixture!("r4_bad.rs"), AUDITED_PATH), vec![Rule::R4]);
+}
+
+#[test]
+fn r4_allowed_fixture_is_suppressed() {
+    assert_eq!(findings_for(fixture!("r4_allowed.rs"), AUDITED_PATH), vec![]);
+}
+
+#[test]
+fn r4_clean_fixture_passes() {
+    assert_eq!(findings_for(fixture!("r4_clean.rs"), AUDITED_PATH), vec![]);
+}
+
+#[test]
+fn r4_exempts_pool_and_coordinator() {
+    assert_eq!(findings_for(fixture!("r4_bad.rs"), "engine/pool.rs"), vec![]);
+    assert_eq!(findings_for(fixture!("r4_bad.rs"), "coordinator/shard.rs"), vec![]);
+}
+
+// --- r5: completion-order float reductions ----------------------------------
+
+#[test]
+fn r5_bad_fixture_is_flagged() {
+    assert_eq!(findings_for(fixture!("r5_bad.rs"), AUDITED_PATH), vec![Rule::R5]);
+}
+
+#[test]
+fn r5_allowed_fixture_is_suppressed() {
+    assert_eq!(findings_for(fixture!("r5_allowed.rs"), AUDITED_PATH), vec![]);
+}
+
+#[test]
+fn r5_clean_fixture_passes() {
+    // collect-then-sorted-reduce (the project discipline) is clean
+    assert_eq!(findings_for(fixture!("r5_clean.rs"), AUDITED_PATH), vec![]);
+}
+
+// --- annotation grammar ------------------------------------------------------
+
+#[test]
+fn malformed_annotations_are_findings_not_suppressions() {
+    let src = "// audit:allow(r1)\nuse std::collections::HashMap;\n";
+    let found = audit_source(AUDITED_PATH, src);
+    let rules: Vec<Rule> = found.iter().map(|f| f.rule).collect();
+    // the reason-less annotation is itself flagged AND does not suppress r1
+    assert!(rules.contains(&Rule::Annotation), "{found:?}");
+    assert!(rules.contains(&Rule::R1), "{found:?}");
+}
+
+#[test]
+fn unknown_rule_names_are_rejected() {
+    let src = "// audit:allow(r99): bogus\nfn f() {}\n";
+    let rules = findings_for(src, AUDITED_PATH);
+    assert_eq!(rules, vec![Rule::Annotation]);
+}
+
+#[test]
+fn finding_lines_are_exact() {
+    let src = "fn f() {}\n\nuse std::collections::HashSet;\n";
+    let found = audit_source(AUDITED_PATH, src);
+    assert_eq!(found.len(), 1);
+    assert_eq!(found[0].line, 3);
+    assert_eq!(found[0].file, AUDITED_PATH);
+}
+
+// --- repo self-audit ---------------------------------------------------------
+
+/// The acceptance gate: `cargo run -p xtask -- audit` must exit 0 at HEAD.
+/// This test is the same walk, so a violating PR fails `cargo test -p
+/// xtask` too, not just the CI audit job.
+#[test]
+fn repo_src_tree_is_clean_at_head() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("src");
+    let report = audit_tree(&root).expect("walk rust/src");
+    assert!(report.files > 50, "walked only {} files — wrong root?", report.files);
+    let rendered: Vec<String> = report.findings.iter().map(|f| f.to_string()).collect();
+    assert!(report.is_clean(), "unannotated findings at HEAD:\n{}", rendered.join("\n"));
+}

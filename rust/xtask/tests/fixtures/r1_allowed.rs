@@ -1,0 +1,8 @@
+// r1 fixture: HashMap allowed via annotation (lookup-only use).
+// audit:allow(r1): keyed lookup only — never iterated, order-independent
+use std::collections::HashMap;
+
+// audit:allow(r1): keyed lookup only — never iterated, order-independent
+pub fn lookup(m: &HashMap<usize, f64>, k: usize) -> f64 {
+    m.get(&k).copied().unwrap_or(0.0)
+}

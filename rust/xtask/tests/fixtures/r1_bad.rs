@@ -1,0 +1,10 @@
+// r1 fixture: HashMap in an ordering-sensitive module, no annotation.
+use std::collections::HashMap;
+
+pub fn merge(reports: HashMap<usize, f64>) -> f64 {
+    let mut total = 0.0;
+    for (_k, v) in reports {
+        total += v;
+    }
+    total
+}

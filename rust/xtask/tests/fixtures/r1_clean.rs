@@ -1,0 +1,26 @@
+// r1 fixture: BTreeMap iterates in key order — deterministic, no finding.
+// The string and the comment below must not trip the lexer either:
+// HashMap HashMap HashMap
+use std::collections::BTreeMap;
+
+pub fn merge(reports: BTreeMap<usize, f64>) -> f64 {
+    let banner = "HashMap is only mentioned in this string";
+    let mut total = banner.len() as f64 * 0.0;
+    for (_k, v) in reports {
+        total += v;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    // test modules are exempt from r1 (assertion-side lookups are fine)
+    use std::collections::HashMap;
+
+    #[test]
+    fn uses_a_map() {
+        let mut m = HashMap::new();
+        m.insert(1usize, 2usize);
+        assert_eq!(m[&1], 2);
+    }
+}

@@ -1,0 +1,6 @@
+// r2 fixture: an explicit annotation also suppresses the finding (rarely
+// the right choice — prefer a SAFETY comment — but the grammar is uniform).
+pub fn erase<'a>(x: &'a mut i32) -> &'static mut i32 {
+    // audit:allow(r2): fixture demonstrating annotation-based suppression
+    unsafe { std::mem::transmute::<&'a mut i32, &'static mut i32>(x) }
+}

@@ -1,0 +1,4 @@
+// r2 fixture: unsafe block with no SAFETY comment anywhere near it.
+pub fn erase<'a>(x: &'a mut i32) -> &'static mut i32 {
+    unsafe { std::mem::transmute::<&'a mut i32, &'static mut i32>(x) }
+}

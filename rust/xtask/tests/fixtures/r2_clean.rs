@@ -1,0 +1,18 @@
+// r2 fixture: the SAFETY comment directly above the unsafe block (the
+// project convention) satisfies the rule; so does a `# Safety` doc
+// section on an unsafe fn.
+pub fn erase<'a>(x: &'a mut i32) -> &'static mut i32 {
+    // SAFETY: the caller guarantees the borrow outlives every use; this
+    // fixture only demonstrates the comment convention.
+    unsafe { std::mem::transmute::<&'a mut i32, &'static mut i32>(x) }
+}
+
+/// Reads a raw pointer.
+///
+/// # Safety
+///
+/// `p` must be valid for reads.
+pub unsafe fn read(p: *const i32) -> i32 {
+    // SAFETY: validity is the caller's documented obligation.
+    unsafe { *p }
+}

@@ -1,0 +1,6 @@
+// r3 fixture: annotated wall-clock read (telemetry-only path).
+pub fn stamp() -> f64 {
+    // audit:allow(r3): report-only telemetry, never feeds the iterates
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_secs_f64()
+}

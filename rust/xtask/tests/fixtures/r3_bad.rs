@@ -1,0 +1,6 @@
+// r3 fixture: wall-clock read outside util/ — breaks the pure-function
+// contract of the sim/engine plane.
+pub fn stamp() -> f64 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_secs_f64()
+}

@@ -1,0 +1,5 @@
+// r3 fixture: only the `Instant::now` *token* in a string/comment — the
+// lexer must not fire on it. Real timing goes through util::clock.
+pub fn describe() -> &'static str {
+    "never call Instant::now here; SystemTime neither"
+}

@@ -1,0 +1,10 @@
+// r4 fixture: annotated scoped spawn (e.g. a benchmark baseline).
+pub fn compute(xs: &mut [i32]) {
+    // audit:allow(r4): bench baseline — measures the pre-pool spawn cost
+    std::thread::scope(|scope| {
+        for x in xs.iter_mut() {
+            // audit:allow(r4): bench baseline — same scoped spawn
+            scope.spawn(move || *x += 1);
+        }
+    });
+}

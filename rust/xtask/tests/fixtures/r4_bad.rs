@@ -1,0 +1,6 @@
+// r4 fixture: ad-hoc thread creation outside engine/pool.rs and
+// coordinator/ — bypasses the persistent WorkerPool contract.
+pub fn compute() -> i32 {
+    let h = std::thread::spawn(|| 41 + 1);
+    h.join().unwrap()
+}

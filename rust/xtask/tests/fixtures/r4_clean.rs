@@ -1,0 +1,5 @@
+// r4 fixture: no thread creation; mentions in comments/strings are fine.
+// std::thread::spawn must not fire from this comment.
+pub fn compute() -> &'static str {
+    "thread::spawn only appears in this string"
+}

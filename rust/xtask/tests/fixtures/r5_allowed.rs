@@ -1,0 +1,10 @@
+// r5 fixture: the same completion-order reduction, annotated (e.g. the
+// addends are provably permutation-invariant integers widened to f64).
+use std::sync::mpsc::Receiver;
+
+pub fn total(rx: &Receiver<f64>, n: usize) -> f64 {
+    // audit:allow(r5): counts only — exact in f64, order-free by construction
+    (0..n)
+        .map(|_| rx.recv().unwrap())
+        .sum::<f64>()
+}

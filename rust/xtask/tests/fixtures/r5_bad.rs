@@ -1,0 +1,9 @@
+// r5 fixture: float reduction over a completion-order source — the sum
+// depends on thread scheduling, not on a fixed order.
+use std::sync::mpsc::Receiver;
+
+pub fn total(rx: &Receiver<f64>, n: usize) -> f64 {
+    (0..n)
+        .map(|_| rx.recv().unwrap())
+        .sum::<f64>()
+}

@@ -1,0 +1,13 @@
+// r5 fixture: collect in completion order, then reduce in fixed (sorted)
+// order on the caller thread — the project's reduction discipline.
+use std::sync::mpsc::Receiver;
+
+pub fn total(rx: &Receiver<(usize, f64)>, n: usize) -> f64 {
+    let mut parts: Vec<(usize, f64)> = (0..n).map(|_| rx.recv().unwrap()).collect();
+    parts.sort_by_key(|&(i, _)| i);
+    let mut t = 0.0;
+    for &(_, v) in &parts {
+        t += v;
+    }
+    t
+}
