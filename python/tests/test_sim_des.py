@@ -7,13 +7,27 @@ against the same closed forms the rust tests pin (M/M/1 sojourn/wait,
 M/M/c Erlang-C) plus bit-level determinism. No jax dependency: this file
 runs anywhere numpy does, so the queueing math is checkable even where
 the rust toolchain is not.
+
+Two structural mirrors ride along with the queueing math:
+
+* ``CalendarQueue`` — a faithful port of ``rust/src/sim/calendar.rs``
+  (bucketed scheduler, descending buckets, far-future overflow heap,
+  deterministic lazy resize), stress-tested for pop-order equivalence
+  against a plain heapq — the same randomized pin the rust suite runs
+  against ``BinaryHeap``.
+* ``LogHist`` — a port of ``rust/src/sim/hist.rs`` (f64-bit-pattern
+  bucketing, 1024 buckets per binade), pinned to the identical
+  ``SHIFT``/``BASE`` constants and to the ≤0.1%-relative quantile error
+  bound against exact interpolated percentiles.
 """
 
 from __future__ import annotations
 
+import bisect
 import heapq
 import math
 import random
+import struct
 from collections import deque
 
 ARRIVAL, DEPARTURE = 0, 1
@@ -145,3 +159,257 @@ def test_piecewise_poisson_counts_track_the_rate():
     assert abs(n_high - 250) < 5 * math.sqrt(250)
     # and the boundary crossing is exact: no arrival lands outside [0, 10)
     assert all(0.0 < t < 10.0 for t in times)
+
+
+# --- calendar-queue mirror (rust/src/sim/calendar.rs) --------------------
+#
+# Events are (time, seq) tuples; the scheduler must pop the identical
+# ascending (time, seq) total order a binary heap pops. The bucket index
+# floor((t - cal_start) / width) is monotone in t, so bucket-major order
+# equals global order; ties inside a bucket are kept sorted by seq.
+
+MIN_BUCKETS = 16
+
+
+class CalendarQueue:
+    """Port of ``CalendarQueue``: descending buckets (minimum at the
+    back), far-future overflow heap, deterministic grow/shrink."""
+
+    def __init__(self):
+        self.buckets = [[] for _ in range(MIN_BUCKETS)]
+        self.cal_start = 0.0
+        self.width = 1.0
+        self.overflow = []  # heapq of (time, seq)
+        self.len = 0
+        self.floor_time = 0.0
+
+    def _index_of(self, t):
+        return int((t - self.cal_start) / self.width)
+
+    @staticmethod
+    def _insert_sorted(bucket, ev):
+        # descending (time, seq): the bucket minimum lives at the back
+        bisect.insort(bucket, ev, key=lambda e: (-e[0], -e[1]))
+
+    def push(self, ev):
+        assert ev[0] >= self.floor_time, "monotone-push contract"
+        idx = self._index_of(ev[0])
+        if idx >= len(self.buckets):
+            heapq.heappush(self.overflow, ev)
+        else:
+            self._insert_sorted(self.buckets[idx], ev)
+        self.len += 1
+        if self.len > 2 * len(self.buckets):
+            self._rebuild(len(self.buckets) * 2)
+
+    def pop_at_most(self, t_end):
+        if self.len == 0:
+            return None
+        start = min(self._index_of(self.floor_time), len(self.buckets) - 1)
+        for b in range(start, len(self.buckets)):
+            if self.buckets[b]:
+                ev = self.buckets[b][-1]
+                if ev[0] > t_end:
+                    return None
+                self.buckets[b].pop()
+                self.len -= 1
+                self.floor_time = ev[0]
+                if self.len < len(self.buckets) // 8 and len(self.buckets) > MIN_BUCKETS:
+                    self._rebuild(len(self.buckets) // 2)
+                return ev
+        # buckets drained, overflow holds the minimum: re-anchor + retry
+        t_min = self.overflow[0][0]
+        if t_min > t_end:
+            return None
+        self._reanchor(t_min)
+        return self.pop_at_most(t_end)
+
+    def _reanchor(self, t):
+        self.cal_start = t
+        while self.overflow and self._index_of(self.overflow[0][0]) < len(self.buckets):
+            self._insert_sorted(
+                self.buckets[self._index_of(self.overflow[0][0])],
+                heapq.heappop(self.overflow),
+            )
+
+    def _rebuild(self, n_buckets):
+        n_buckets = max(n_buckets, MIN_BUCKETS)
+        scratch = [ev for bucket in self.buckets for ev in bucket]
+        while self.overflow:
+            scratch.append(heapq.heappop(self.overflow))
+        self.buckets = [[] for _ in range(n_buckets)]
+        span = max((ev[0] for ev in scratch), default=self.floor_time) - self.floor_time
+        if len(scratch) >= 2 and span > 0.0:
+            self.width = span * 2.0 / len(scratch)
+        self.cal_start = self.floor_time
+        self.len = 0
+        for ev in scratch:
+            idx = self._index_of(ev[0])
+            if idx >= len(self.buckets):
+                heapq.heappush(self.overflow, ev)
+            else:
+                self._insert_sorted(self.buckets[idx], ev)
+            self.len += 1
+
+
+def test_calendar_queue_matches_heapq_pop_order():
+    # the same randomized pin the rust suite runs: coarse-grid ties
+    # (resolved purely by seq), far-future overflow pushes, bursts that
+    # force bucket growth, drains that force it back down
+    rng = random.Random(0xC0FFEE)
+    cal, heap = CalendarQueue(), []
+    seq, cur = 0, 0.0
+    for round_ in range(40):
+        burst = 3000 if round_ % 10 == 0 else 50 + rng.randrange(200)
+        for _ in range(burst):
+            if rng.random() < 0.05:
+                t = cur + 500.0 + 1000.0 * rng.random()
+            else:
+                t = cur + rng.randrange(20) * 0.25
+            ev = (t, seq)
+            seq += 1
+            cal.push(ev)
+            heapq.heappush(heap, ev)
+        t_end = math.inf if rng.random() < 0.3 else cur + rng.random() * 8.0
+        while True:
+            want = heap[0] if heap and heap[0][0] <= t_end else None
+            got = cal.pop_at_most(t_end)
+            assert want == got, f"pop divergence: heap {want} vs calendar {got}"
+            if got is None:
+                break
+            heapq.heappop(heap)
+            cur = got[0]
+        assert cal.len == len(heap)
+    while heap:
+        assert heapq.heappop(heap) == cal.pop_at_most(math.inf)
+    assert cal.len == 0
+
+
+def test_calendar_queue_resizes_and_stays_ordered():
+    cal = CalendarQueue()
+    ref = []
+    for seq in range(500):
+        ev = ((seq % 13) * 0.25, seq)
+        cal.push(ev)
+        ref.append(ev)
+    assert len(cal.buckets) > MIN_BUCKETS, "500 events must trigger growth"
+    ref.sort()
+    for want in ref:
+        assert cal.pop_at_most(math.inf) == want
+    assert cal.len == 0
+    assert len(cal.buckets) == MIN_BUCKETS, "drain must shrink back"
+
+
+# --- log-histogram mirror (rust/src/sim/hist.rs) -------------------------
+#
+# Identical constants: the bucket of a sample is its f64 bit pattern
+# shifted right by SHIFT, minus BASE — 1024 buckets per binade, so the
+# relative bucket width is 2^-10 < 0.1%.
+
+HIST_SHIFT = 42
+HIST_SUB_BUCKETS = 1 << (52 - HIST_SHIFT)
+HIST_BASE = (1023 - 30) << (52 - HIST_SHIFT)
+HIST_N_BUCKETS = 47 * HIST_SUB_BUCKETS
+HIST_MIN = 2.0**-30
+HIST_MAX = 2.0**17
+
+
+def f64_bits(x):
+    return struct.unpack("<Q", struct.pack("<d", x))[0]
+
+
+def bits_f64(b):
+    return struct.unpack("<d", struct.pack("<Q", b))[0]
+
+
+def hist_index(x):
+    if not x >= HIST_MIN:
+        return 0
+    if x >= HIST_MAX:
+        return HIST_N_BUCKETS - 1
+    return (f64_bits(x) >> HIST_SHIFT) - HIST_BASE
+
+
+def hist_bucket_mid(i):
+    lo = bits_f64((HIST_BASE + i) << HIST_SHIFT)
+    hi = bits_f64((HIST_BASE + i + 1) << HIST_SHIFT)
+    return 0.5 * (lo + hi)
+
+
+class LogHist:
+    def __init__(self):
+        self.counts = {}
+        self.count = 0
+        self.sum = 0.0
+
+    def record(self, x):
+        i = hist_index(x)
+        self.counts[i] = self.counts.get(i, 0) + 1
+        self.count += 1
+        self.sum += x
+
+    def mean(self):
+        return self.sum / self.count if self.count else 0.0
+
+    def quantile(self, q):
+        if self.count == 0:
+            return 0.0
+        # .round() in rust rounds half away from zero; positive args only
+        rank = math.floor(q / 100.0 * (self.count - 1) + 0.5)
+        cum = 0
+        last = 0
+        for i in sorted(self.counts):
+            cum += self.counts[i]
+            last = i
+            if cum > rank:
+                return hist_bucket_mid(i)
+        return hist_bucket_mid(last)
+
+
+def exact_percentile(xs, q):
+    """Mirror of ``util::stats::percentile``: linear interpolation at
+    pos = q/100 * (len-1) over the sorted samples."""
+    ys = sorted(xs)
+    pos = q / 100.0 * (len(ys) - 1)
+    lo = int(pos)
+    hi = min(lo + 1, len(ys) - 1)
+    frac = pos - lo
+    return ys[lo] * (1.0 - frac) + ys[hi] * frac
+
+
+def test_log_hist_constants_match_the_rust_histogram():
+    assert hist_index(HIST_MIN) == 0
+    assert hist_index(HIST_MAX) == HIST_N_BUCKETS - 1
+    assert hist_index(1e-30) == 0  # clamps below range
+    assert hist_index(1e9) == HIST_N_BUCKETS - 1  # clamps above range
+    # monotone across a binade boundary
+    assert hist_index(0.9999) < hist_index(1.0) < hist_index(1.001)
+    # every in-range bucket is ≤ 2^-10 relative wide and brackets its mid
+    for x in (1e-6, 3.7e-3, 0.25, 1.0, 17.3, 40000.0):
+        i = hist_index(x)
+        lo = bits_f64((HIST_BASE + i) << HIST_SHIFT)
+        hi = bits_f64((HIST_BASE + i + 1) << HIST_SHIFT)
+        assert lo <= x < hi
+        assert (hi - lo) / lo <= 2.0**-10 + 1e-15
+
+
+def test_log_hist_quantiles_track_exact_percentiles():
+    # the bound the rust suite pins on M/M/1 sojourns, mirrored on the
+    # same exponential shape: bucket quantization ≤ 2^-10 relative plus a
+    # nearest-vs-interpolated order-statistic term at the tails
+    rng = random.Random(11)
+    hist = LogHist()
+    xs = []
+    for _ in range(200_000):
+        x = rng.expovariate(0.7)
+        hist.record(x)
+        xs.append(x)
+    assert hist.count == len(xs)
+    for q in (50.0, 90.0, 99.0, 99.9):
+        exact = exact_percentile(xs, q)
+        approx = hist.quantile(q)
+        rel = abs(approx - exact) / exact
+        assert rel < 2e-3, f"p{q}: exact {exact} vs hist {approx} (rel {rel})"
+    # the mean is the identical sequential sum, not an approximation:
+    # builtin sum() is the same left-to-right accumulation order
+    assert hist.mean() == sum(xs) / len(xs)

@@ -37,7 +37,13 @@
 //!   carrying 10⁵ sessions in the compact ShardBlock lane layout, K=4
 //!   shards over the loopback transport at staleness S=1, driven through
 //!   the real `ShardPlane::run_round` path — the session-rounds/sec figure
-//!   carries a CI-gated 250k floor (asserted in-bench too).
+//!   carries a CI-gated 250k floor (asserted in-bench too), and
+//! * the **request-level DES replay** (`sim_replay_{heap,calendar,hdr}`):
+//!   the two-class paper scenario replayed over an 18000 s horizon
+//!   (≥ 10⁶ requests in full mode) on the pinned PR-6 reference engine
+//!   vs. the optimized calendar-queue/CSR/slab core (asserted
+//!   bitwise-equal and ≥ 2× faster) vs. the streaming-histogram latency
+//!   mode; `sim_replay_events_per_sec` carries a CI-gated 600k floor.
 //!
 //! Emits every measurement plus the speedup ratios as JSON to
 //! `BENCH_hotpath.json` (written to the current directory) and asserts the
@@ -52,7 +58,7 @@ use jowr::model::flow::{self, Phi};
 use jowr::model::utility::family;
 use jowr::prelude::*;
 use jowr::routing::marginal;
-use jowr::util::bench::Bencher;
+use jowr::util::bench::{Bencher, Measurement};
 use jowr::util::json::Json;
 
 fn main() {
@@ -303,12 +309,23 @@ fn main() {
     }
 
     // request-level DES replay: drive the two-class paper scenario through
-    // an OMD warm-up, then replay the full horizon against the optimized φ
-    // and report raw event throughput. Full mode replays ≥ 10^6 requests
-    // (asserted); --quick shortens the horizon for the CI smoke run. The
-    // events/sec figure lands in the speedups table so the bench-regression
-    // gate can pin a floor under it.
+    // an OMD warm-up, then replay the full horizon three ways:
+    //   sim_replay_heap     — the pinned PR-6 reference engine (BinaryHeap
+    //                         scheduler, nested routing tables, no slab
+    //                         recycling, exact latency vectors)
+    //   sim_replay_calendar — the optimized core (calendar queue, CSR
+    //                         routes, slab pool), exact latency mode;
+    //                         asserted bitwise-equal to the heap row
+    //   sim_replay_hdr      — the optimized core with streaming latency
+    //                         histograms (O(1) telemetry memory)
+    // Full mode replays ≥ 10^6 requests (asserted) and enforces calendar
+    // ≥ 2× heap plus the 600k events/s floor (3× the PR-6 gate floor);
+    // --quick shortens the horizon for the CI smoke run. The events/sec
+    // figures and the ratio land in the speedups table so the
+    // bench-regression gate can pin floors under them.
     let sim_events_per_sec;
+    let sim_calendar_vs_heap;
+    let sim_hdr_events_per_sec;
     {
         let mut session = Scenario::paper_default()
             .nodes(20)
@@ -322,28 +339,92 @@ fn main() {
         let optimized =
             session.routing_run("omd", 30).expect("sim omd warm-up").finish();
         println!("--- request-level replay (two-class ER(20), {horizon_s}s horizon) ---");
-        let (sim_report, dt) = Bencher::once("sim_replay", || {
+        // the optimized (Λ, φ) and arrival streams, exactly as sim_run
+        // wires them, for the reference engine's one-shot entry point
+        let phi = optimized.final_phi().expect("omd run carries phi");
+        let traces: Vec<ArrivalTrace> = session
+            .spec
+            .classes
+            .iter()
+            .map(|class| match &class.rate {
+                RateSpec::Constant(r) => ArrivalTrace::constant(*r),
+                RateSpec::Trace(pts) => ArrivalTrace::from_breakpoints(pts, 1.0),
+            })
+            .collect();
+        let (heap_report, dt_heap) = Bencher::once("sim_replay_heap", || {
+            simulate_requests_reference(
+                &session.problem,
+                phi,
+                &optimized.lam,
+                traces.clone(),
+                SimSpec { horizon_s, ..SimSpec::default() },
+                session.cfg.seed,
+            )
+        });
+        let (cal_report, dt_cal) = Bencher::once("sim_replay_calendar", || {
             let run = session.sim_run(1).expect("sim run");
             let (_, report) = run.warm_start_from(&optimized).finish();
             report
         });
-        sim_events_per_sec = sim_report.events as f64 / dt.max(1e-12);
-        println!(
-            "sim replay: {} arrivals, {} events in {dt:.2}s  ({:.2}M events/s)",
-            sim_report.arrivals,
-            sim_report.events,
-            sim_events_per_sec / 1e6
-        );
         assert_eq!(
-            sim_report.arrivals,
-            sim_report.completed + sim_report.dropped + sim_report.in_flight,
+            cal_report, heap_report,
+            "calendar/CSR/slab hot path must reproduce the reference engine bitwise"
+        );
+        session.spec.sim =
+            Some(SimSpec { horizon_s, latency: LatencyMode::Hdr, ..SimSpec::default() });
+        let (hdr_report, dt_hdr) = Bencher::once("sim_replay_hdr", || {
+            let run = session.sim_run(1).expect("sim hdr run");
+            let (_, report) = run.warm_start_from(&optimized).finish();
+            report
+        });
+        assert_eq!(
+            hdr_report.events, cal_report.events,
+            "hdr telemetry must not alter the event history"
+        );
+        assert_eq!(hdr_report.peak_inflight, cal_report.peak_inflight);
+        sim_events_per_sec = cal_report.events as f64 / dt_cal.max(1e-12);
+        sim_calendar_vs_heap = dt_heap / dt_cal.max(1e-12);
+        sim_hdr_events_per_sec = hdr_report.events as f64 / dt_hdr.max(1e-12);
+        println!(
+            "sim replay: {} arrivals, {} events | heap {dt_heap:.2}s, calendar {dt_cal:.2}s \
+             ({:.2}M events/s, {:.2}x vs heap), hdr {dt_hdr:.2}s ({:.2}M events/s), \
+             peak in-flight {}",
+            cal_report.arrivals,
+            cal_report.events,
+            sim_events_per_sec / 1e6,
+            sim_calendar_vs_heap,
+            sim_hdr_events_per_sec / 1e6,
+            cal_report.peak_inflight
+        );
+        // the one-shot rows still enter the results table (single-sample
+        // measurements) so the baseline-relative regression gate tracks them
+        for (name, dt) in [
+            ("sim_replay_heap", dt_heap),
+            ("sim_replay_calendar", dt_cal),
+            ("sim_replay_hdr", dt_hdr),
+        ] {
+            b.results.push(Measurement { name: name.to_string(), samples: vec![dt] });
+        }
+        assert_eq!(
+            cal_report.arrivals,
+            cal_report.completed + cal_report.dropped + cal_report.in_flight,
             "sim replay must conserve requests"
         );
         if !quick {
             assert!(
-                sim_report.arrivals >= 1_000_000,
+                cal_report.arrivals >= 1_000_000,
                 "full-mode replay must cover ≥ 10^6 requests (got {})",
-                sim_report.arrivals
+                cal_report.arrivals
+            );
+            assert!(
+                sim_calendar_vs_heap >= 2.0,
+                "calendar/CSR/slab hot path must be ≥ 2x the reference engine on \
+                 the 10^6-request replay (got {sim_calendar_vs_heap:.2}x)"
+            );
+            assert!(
+                sim_events_per_sec >= 600_000.0,
+                "replay fell under the 600k events/s floor (3x the PR-6 gate floor): \
+                 {sim_events_per_sec:.0}"
             );
         }
     }
@@ -521,8 +602,12 @@ fn main() {
     ) {
         speedups.push(("clusters40/omd_probe_sparse_vs_dense".to_string(), dense / sparse));
     }
-    // not a ratio: raw DES throughput, floored by the CI regression gate
+    // not a ratio: raw DES throughput on the optimized core, floored by
+    // the CI regression gate, plus the calendar-vs-heap speedup and the
+    // streaming-histogram throughput for the trajectory
     speedups.push(("sim_replay_events_per_sec".to_string(), sim_events_per_sec));
+    speedups.push(("sim_replay_calendar_vs_heap".to_string(), sim_calendar_vs_heap));
+    speedups.push(("sim_replay_hdr_events_per_sec".to_string(), sim_hdr_events_per_sec));
     // not a ratio either: raw sharded-plane throughput on the 10⁴-node /
     // 10⁵-session fleet (sessions×rounds per second), floored by the gate
     speedups.push(("fleet1e4/sharded_round_throughput".to_string(), fleet_throughput));

@@ -100,6 +100,11 @@
 //! [`session::suite::Suite::sim`]. The roll-up [`sim::SimReport`] carries
 //! per-class p50/p99/p999 latency, per-node queue-depth telemetry, and
 //! drop rates — the request-granularity view the fluid model cannot see.
+//! The hot path runs on a calendar-queue scheduler, flat CSR routing
+//! tables, and a slab request pool — each pinned bitwise against the
+//! naive reference engine ([`sim::reference`]) — and scales to
+//! multi-million-request replays with O(peak in-flight) memory
+//! (opt-in streaming latency histograms via [`sim::LatencyMode::Hdr`]).
 //!
 //! ### Deprecation path
 //!
@@ -160,7 +165,8 @@ pub mod prelude {
     pub use crate::session::suite::{Suite, SuiteCell, SuiteReport};
     pub use crate::session::{registry, Hyper, Scenario, Session, SessionError};
     pub use crate::sim::{
-        simulate_requests, ArrivalTrace, Discipline, SimReport, SimSpec, Simulator,
+        simulate_requests, simulate_requests_reference, ArrivalTrace, Discipline, LatencyMode,
+        SimReport, SimSpec, Simulator,
     };
     pub use crate::util::rng::Rng;
 }

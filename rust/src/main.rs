@@ -77,7 +77,7 @@ fn usage() {
          allocate [--algo {allocators}]\n                                 run one allocation solve\n  \
          suite --scenarios <dir|files>  run a (scenario x solver x seed) grid:\n                                 [--routers a,b] [--allocators x] [--sims omd]\n                                 [--seeds 1,2] [--iters 50] [--out results/suite]\n  \
          solvers                        list the solver registry\n  \
-         sim [--router omd] [--iters 50] [--windows 1]\n                                 optimize phi, then replay the request stream\n                                 on the discrete-event core: [--horizon-s 30]\n                                 [--warmup-s 0] [--queue-cap 0] [--servers 1]\n                                 [--discipline fifo|lifo] [--out report.json]\n  \
+         sim [--router omd] [--iters 50] [--windows 1]\n                                 optimize phi, then replay the request stream\n                                 on the discrete-event core: [--horizon-s 30]\n                                 [--warmup-s 0] [--queue-cap 0] [--servers 1]\n                                 [--discipline fifo|lifo] [--latency exact|hdr]\n                                 [--out report.json]\n  \
          serve [--xla] [--router omd]   end-to-end serving demo\n  \
          runtime-check                  AOT artifact smoke test\n  \
          config --dump                  print default config JSON\n\n\
@@ -436,6 +436,10 @@ fn cmd_sim(args: &Args) -> Result<(), String> {
         sim_spec.discipline = Discipline::parse(d)
             .ok_or_else(|| format!("--discipline: unknown '{d}' (fifo|lifo)"))?;
     }
+    if let Some(m) = args.get("latency") {
+        sim_spec.latency = LatencyMode::parse(m)
+            .ok_or_else(|| format!("--latency: unknown '{m}' (exact|hdr)"))?;
+    }
     sim_spec.validate().map_err(|what| format!("sim spec: {what}"))?;
     session.spec.sim = Some(sim_spec.clone());
     println!(
@@ -453,12 +457,14 @@ fn cmd_sim(args: &Args) -> Result<(), String> {
     let (report, sim) = session.sim_run(windows)?.warm_start_from(&optimized).finish();
     let dt = t0.elapsed_secs().max(1e-9);
     println!(
-        "replayed {} requests / {} events in {:.3}s ({:.0} events/s, {:.0} reqs/s)",
+        "replayed {} requests / {} events in {:.3}s ({:.0} events/s, {:.0} reqs/s), \
+         peak in-flight {}",
         sim.arrivals,
         sim.events,
         dt,
         sim.events as f64 / dt,
-        sim.arrivals as f64 / dt
+        sim.arrivals as f64 / dt,
+        sim.peak_inflight
     );
     println!(
         "overall: completed {} dropped {} ({:.3}% loss), latency mean {:.4}s \

@@ -650,12 +650,13 @@ impl<'a> SimRun<'a> {
         }
         if let Some(driver) = self.driver.as_mut() {
             let _ = driver.step();
-            let lam = driver.lam().to_vec();
-            let phi = driver.oracle_mut().current_phi().cloned();
-            if let Some(phi) = phi {
-                self.sim.set_phi(&phi);
+            // borrow the iterate in place (disjoint fields): the per-window
+            // swap allocates nothing — set_phi refreshes the simulator's
+            // CSR tables in place and set_lam copies into its buffer
+            if let Some(phi) = driver.oracle_mut().current_phi() {
+                self.sim.set_phi(phi);
             }
-            self.sim.set_lam(&lam);
+            self.sim.set_lam(driver.lam());
         }
         let horizon = self.sim.spec().horizon_s;
         let target = (((self.core.iter + 1) as f64) * self.window_s).min(horizon);

@@ -1089,6 +1089,7 @@ mod tests {
             servers_per_node: 2,
             discipline: crate::sim::Discipline::Lifo,
             trace_window_s: 0.5,
+            latency: crate::sim::LatencyMode::Hdr,
         });
         spec.seed = u64::MAX; // exercises the string-seed path
         spec.workers = 4;

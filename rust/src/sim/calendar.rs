@@ -1,0 +1,358 @@
+//! Calendar-queue event scheduler — the O(1)-amortized replacement for
+//! the binary heap of the PR-6 core, popping the **identical** stable
+//! `(time, seq)` total order.
+//!
+//! ## Ordering invariant
+//!
+//! The queue's contract with the simulator is the classic calendar-queue
+//! precondition plus the repo's determinism discipline:
+//!
+//! 1. **Total order.** Events are popped in ascending `(time, seq)` —
+//!    exactly the order a `BinaryHeap<Ev>` over [`Ev`]'s `Ord` produces.
+//!    `seq` is the simulator's monotone push counter, so ties in `time`
+//!    resolve by insertion order and the pop sequence is a pure function
+//!    of the push sequence (pinned by the randomized pop-order
+//!    equivalence test in `rust/tests/test_sim.rs` and the Python mirror
+//!    in `python/tests/test_sim_des.py`).
+//! 2. **Monotone pushes.** A push never predates the last popped event
+//!    (`time >= floor_time`, debug-asserted). Discrete-event simulation
+//!    guarantees this by construction: every event is scheduled at or
+//!    after the current clock. The invariant is what lets the pop scan
+//!    start at the clock's bucket without ever revisiting earlier ones.
+//!
+//! ## Why the order is preserved *by construction*
+//!
+//! Bucket assignment is `floor((time - cal_start) * inv_width)` — a
+//! monotone non-decreasing function of `time` (multiplication by a
+//! positive constant and `floor` are both monotone), so bucket-major
+//! iteration visits events in time order, equal times always share a
+//! bucket (same index), and each bucket is kept sorted by `(time, seq)`.
+//! Events whose index falls past the last bucket overflow into a plain
+//! binary heap (the far-future fallback); the same monotone index
+//! function partitions them, so every bucketed event precedes every
+//! overflowed one and equal times never straddle the boundary. Lazy
+//! resize re-anchors the calendar at the current floor with a bucket
+//! width recomputed from the live event span — a pure function of queue
+//! contents, so resize points are seed-reproducible too.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Heap/calendar entry: min-first on `(time, seq)`. The monotone `seq`
+/// tie-break makes the event order total, hence seed-reproducible.
+#[derive(Clone, Copy, Debug)]
+pub struct Ev {
+    pub time: f64,
+    pub seq: u64,
+    pub kind: EvKind,
+}
+
+/// What happens when the event fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvKind {
+    /// Next admission of the class's Poisson stream.
+    Arrival { class: u32 },
+    /// A server of station `edge` finishes serving request `req`.
+    Depart { edge: u32, req: u32 },
+}
+
+impl PartialEq for Ev {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Ev {}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Ev {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed: BinaryHeap is a max-heap, we want earliest-first
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Initial bucket count (power of two; the queue resizes itself).
+const MIN_BUCKETS: usize = 16;
+
+/// A calendar queue over [`Ev`] popping ascending `(time, seq)` — see the
+/// module docs for the ordering argument. `push` is O(1) amortized
+/// (binary-search insert into a ~2-event bucket), `pop_at_most` is O(1)
+/// amortized (the scan from the clock's bucket to the next event's bucket
+/// advances monotonically, so each bucket is crossed once per calendar
+/// span).
+#[derive(Clone, Debug)]
+pub struct CalendarQueue {
+    /// Each bucket sorted by `(time, seq)` **descending** so the bucket
+    /// minimum pops from the back in O(1).
+    buckets: Vec<Vec<Ev>>,
+    /// Start time of bucket 0.
+    cal_start: f64,
+    /// Bucket time width and its reciprocal (index = `(t-start)*inv`).
+    width: f64,
+    inv_width: f64,
+    /// Far-future fallback: events whose index falls past the last bucket.
+    overflow: BinaryHeap<Ev>,
+    /// Events currently stored (buckets + overflow).
+    len: usize,
+    /// Time of the last popped event (pushes never predate it).
+    floor_time: f64,
+    /// Scratch for rebuilds (kept so steady-state resizes do not allocate
+    /// fresh vectors every time).
+    scratch: Vec<Ev>,
+}
+
+impl Default for CalendarQueue {
+    fn default() -> Self {
+        CalendarQueue::new()
+    }
+}
+
+impl CalendarQueue {
+    pub fn new() -> CalendarQueue {
+        CalendarQueue {
+            buckets: vec![Vec::new(); MIN_BUCKETS],
+            cal_start: 0.0,
+            width: 1.0,
+            inv_width: 1.0,
+            overflow: BinaryHeap::new(),
+            len: 0,
+            floor_time: 0.0,
+            scratch: Vec::new(),
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Bucket index of `time` under the current calendar anchor — the
+    /// monotone map the ordering argument rests on. May exceed the bucket
+    /// count (the caller overflows those into the heap).
+    #[inline]
+    fn index_of(&self, time: f64) -> usize {
+        // times are finite and >= cal_start (monotone-push invariant)
+        ((time - self.cal_start) * self.inv_width) as usize
+    }
+
+    /// Schedule an event. `ev.time` must be finite and not precede the
+    /// last popped event (the monotone-push contract of the module docs).
+    pub fn push(&mut self, ev: Ev) {
+        debug_assert!(ev.time.is_finite(), "calendar events carry finite times");
+        debug_assert!(
+            ev.time >= self.floor_time,
+            "push at {} predates the last pop at {}",
+            ev.time,
+            self.floor_time
+        );
+        let idx = self.index_of(ev.time);
+        if idx >= self.buckets.len() {
+            self.overflow.push(ev);
+        } else {
+            insert_sorted(&mut self.buckets[idx], ev);
+        }
+        self.len += 1;
+        if self.len > 2 * self.buckets.len() {
+            let target = self.buckets.len() * 2;
+            self.rebuild(target);
+        }
+    }
+
+    /// Pop the earliest event if its time is `<= t_end`; `None` when the
+    /// queue is empty or the minimum lies beyond `t_end` (the event stays
+    /// queued). `pop_at_most(f64::INFINITY)` is an unconditional pop.
+    pub fn pop_at_most(&mut self, t_end: f64) -> Option<Ev> {
+        if self.len == 0 {
+            return None;
+        }
+        // The global minimum is the first event in bucket-major order
+        // (see module docs); scan from the floor's bucket — everything
+        // earlier is provably empty by the monotone-push invariant.
+        let start = self.index_of(self.floor_time).min(self.buckets.len() - 1);
+        for b in start..self.buckets.len() {
+            if let Some(&ev) = self.buckets[b].last() {
+                if ev.time > t_end {
+                    return None;
+                }
+                self.buckets[b].pop();
+                self.len -= 1;
+                self.floor_time = ev.time;
+                if self.len < self.buckets.len() / 8 && self.buckets.len() > MIN_BUCKETS {
+                    let target = self.buckets.len() / 2;
+                    self.rebuild(target);
+                }
+                return Some(ev);
+            }
+        }
+        // Buckets drained but overflow still holds events: re-anchor the
+        // calendar at the overflow minimum and retry (at least that event
+        // lands in bucket 0, so the recursion terminates immediately).
+        debug_assert!(!self.overflow.is_empty());
+        let t_min = self.overflow.peek().expect("len > 0").time;
+        if t_min > t_end {
+            return None;
+        }
+        self.reanchor(t_min);
+        self.pop_at_most(t_end)
+    }
+
+    /// Re-anchor the calendar window at `t` (keeping size and width) and
+    /// migrate every overflow event that now fits into the buckets.
+    fn reanchor(&mut self, t: f64) {
+        self.cal_start = t;
+        while let Some(&ev) = self.overflow.peek() {
+            let idx = self.index_of(ev.time);
+            if idx >= self.buckets.len() {
+                break;
+            }
+            let ev = self.overflow.pop().expect("peeked event");
+            insert_sorted(&mut self.buckets[idx], ev);
+        }
+    }
+
+    /// Lazy resize: re-bucket everything into `n_buckets` (power of two,
+    /// floored at [`MIN_BUCKETS`]) with the width recomputed from the
+    /// live event span — a pure function of the queue contents, so
+    /// resize behavior is deterministic.
+    fn rebuild(&mut self, n_buckets: usize) {
+        let n_buckets = n_buckets.max(MIN_BUCKETS);
+        self.scratch.clear();
+        for b in &mut self.buckets {
+            self.scratch.append(b);
+        }
+        while let Some(ev) = self.overflow.pop() {
+            self.scratch.push(ev);
+        }
+        if self.buckets.len() < n_buckets {
+            self.buckets.resize(n_buckets, Vec::new());
+        } else {
+            self.buckets.truncate(n_buckets);
+        }
+        // aim for ~2 events per bucket over the live span; degenerate
+        // spans (all ties, single event) keep the old width
+        let mut max_t = self.floor_time;
+        for ev in &self.scratch {
+            max_t = max_t.max(ev.time);
+        }
+        let span = max_t - self.floor_time;
+        if self.scratch.len() >= 2 && span > 0.0 {
+            self.width = span * 2.0 / self.scratch.len() as f64;
+            self.inv_width = 1.0 / self.width;
+        }
+        self.cal_start = self.floor_time;
+        self.len = 0;
+        // re-push without the resize checks (len is already final-sized)
+        let mut scratch = std::mem::take(&mut self.scratch);
+        for ev in scratch.drain(..) {
+            let idx = self.index_of(ev.time);
+            if idx >= self.buckets.len() {
+                self.overflow.push(ev);
+            } else {
+                insert_sorted(&mut self.buckets[idx], ev);
+            }
+            self.len += 1;
+        }
+        self.scratch = scratch;
+    }
+}
+
+/// Insert into a bucket kept sorted by `(time, seq)` descending (the
+/// bucket minimum lives at the back). Buckets hold ~2 events in steady
+/// state, so the binary search + shift is effectively O(1).
+#[inline]
+fn insert_sorted(bucket: &mut Vec<Ev>, ev: Ev) {
+    let pos = bucket
+        .binary_search_by(|probe| {
+            // descending (time, seq): larger entries sort first
+            ev.time
+                .total_cmp(&probe.time)
+                .then_with(|| ev.seq.cmp(&probe.seq))
+                .reverse()
+        })
+        .unwrap_or_else(|p| p);
+    bucket.insert(pos, ev);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(time: f64, seq: u64) -> Ev {
+        Ev { time, seq, kind: EvKind::Arrival { class: 0 } }
+    }
+
+    #[test]
+    fn pops_in_time_then_seq_order() {
+        let mut q = CalendarQueue::new();
+        q.push(ev(2.0, 0));
+        q.push(ev(1.0, 1));
+        q.push(ev(1.0, 2));
+        q.push(ev(3.0, 3));
+        q.push(ev(1.0, 4));
+        let order: Vec<(f64, u64)> = std::iter::from_fn(|| q.pop_at_most(f64::INFINITY))
+            .map(|e| (e.time, e.seq))
+            .collect();
+        assert_eq!(order, vec![(1.0, 1), (1.0, 2), (1.0, 4), (2.0, 0), (3.0, 3)]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn pop_at_most_leaves_later_events() {
+        let mut q = CalendarQueue::new();
+        q.push(ev(5.0, 0));
+        q.push(ev(1.0, 1));
+        assert_eq!(q.pop_at_most(2.0).map(|e| e.seq), Some(1));
+        assert_eq!(q.pop_at_most(2.0), None);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pop_at_most(5.0).map(|e| e.seq), Some(0));
+        assert_eq!(q.pop_at_most(f64::INFINITY), None);
+    }
+
+    #[test]
+    fn far_future_overflow_and_reanchor() {
+        let mut q = CalendarQueue::new();
+        // default window is 16 buckets x width 1.0 = [0, 16): 1e6 overflows
+        q.push(ev(1_000_000.0, 0));
+        q.push(ev(0.5, 1));
+        q.push(ev(1_000_000.0, 2));
+        assert_eq!(q.pop_at_most(f64::INFINITY).map(|e| e.seq), Some(1));
+        // the overflow minimum is beyond t_end: nothing pops, nothing lost
+        assert_eq!(q.pop_at_most(10.0), None);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop_at_most(f64::INFINITY).map(|e| e.seq), Some(0));
+        assert_eq!(q.pop_at_most(f64::INFINITY).map(|e| e.seq), Some(2));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn grow_and_shrink_keep_the_order() {
+        let mut q = CalendarQueue::new();
+        let mut reference: Vec<(f64, u64)> = Vec::new();
+        // dense burst on a coarse grid (many exact ties) forces growth
+        for seq in 0..500u64 {
+            let t = (seq % 13) as f64 * 0.25;
+            q.push(ev(t, seq));
+            reference.push((t, seq));
+        }
+        assert!(q.buckets.len() > MIN_BUCKETS, "500 events must trigger growth");
+        reference.sort_by(|a, b| a.0.total_cmp(&b.0).then_with(|| a.1.cmp(&b.1)));
+        // drain most of it (forcing shrink) and compare the order
+        for want in &reference {
+            let got = q.pop_at_most(f64::INFINITY).expect("event");
+            assert_eq!((got.time, got.seq), *want);
+        }
+        assert!(q.is_empty());
+        assert_eq!(q.buckets.len(), MIN_BUCKETS, "drain must shrink back");
+    }
+}

@@ -1,55 +1,50 @@
-//! The deterministic discrete-event core: event heap, stations, arrival
-//! processes, and the per-request routing walk. See the module docs of
-//! [`crate::sim`] for the mapping onto the paper's cost model.
-
-use std::cmp::Ordering;
-use std::collections::{BinaryHeap, VecDeque};
+//! The deterministic discrete-event core: calendar-queue scheduler,
+//! stations, arrival processes, and the per-request routing walk. See the
+//! module docs of [`crate::sim`] for the mapping onto the paper's cost
+//! model and [`super::reference`] for the pinned naive engine this hot
+//! path must match bitwise.
+//!
+//! ## Hot-path structure
+//!
+//! Four structural optimizations over the reference, each behaviorally
+//! invisible by construction:
+//!
+//! * **Calendar-queue scheduler** ([`super::calendar::CalendarQueue`]):
+//!   O(1)-amortized push/pop popping the identical `(time, seq)` total
+//!   order as the reference's `BinaryHeap` (the ordering invariant is
+//!   argued in the calendar module docs and pinned by a randomized
+//!   pop-order equivalence test).
+//! * **CSR routing tables**: one flat lane array (`route_edge` /
+//!   `route_phi`) with per-`(session, node)` ranges in `route_off` and
+//!   the row sum precomputed in [`Simulator::set_phi`] — same
+//!   left-to-right summation order as the reference's per-hop
+//!   `row.iter().sum()`, so the inverse-CDF scan consumes the identical
+//!   RNG draw and selects the identical lane bitwise. The φ-independent
+//!   index is built once at construction; `set_phi` only overwrites the
+//!   `φ`/sum values in place — **no allocation after warm-up**.
+//! * **Slab request pool**: completed/dropped request slots are recycled
+//!   through a freelist, keeping `reqs` at O(peak in-flight) instead of
+//!   O(total admitted). Request ids are event payload only — they never
+//!   enter an ordering comparison or the RNG — so recycling cannot
+//!   perturb the event stream (the *slab-id non-ordering contract*).
+//!   [`super::SimReport::peak_inflight`] reports the pool's high-water
+//!   mark.
+//! * **Streaming latency telemetry** ([`super::LatencyMode::Hdr`]):
+//!   opt-in per-class log-histograms ([`super::hist::LogHist`]) replace
+//!   the unbounded latency vectors with O(1) memory and ≤ 0.1% relative
+//!   quantile error. Exact sampling stays the default and the
+//!   bit-identity reference.
 
 use crate::graph::augmented::AugmentedNet;
 use crate::model::flow::Phi;
 use crate::model::Problem;
 use crate::util::rng::Rng;
 
+use super::calendar::{CalendarQueue, Ev, EvKind};
+use super::hist::LogHist;
 use super::report::{latency_summary, ClassStats, NodeStats, SimReport};
-use super::{ArrivalTrace, Discipline, SimSpec};
-
-/// Heap entry: min-heap on `(time, seq)`. The monotone `seq` tie-break
-/// makes the event order total, hence seed-reproducible.
-#[derive(Clone, Copy, Debug)]
-struct Ev {
-    time: f64,
-    seq: u64,
-    kind: EvKind,
-}
-
-#[derive(Clone, Copy, Debug)]
-enum EvKind {
-    /// Next admission of the class's Poisson stream.
-    Arrival { class: u32 },
-    /// A server of station `edge` finishes serving request `req`.
-    Depart { edge: u32, req: u32 },
-}
-
-impl PartialEq for Ev {
-    fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.seq == other.seq
-    }
-}
-impl Eq for Ev {}
-impl PartialOrd for Ev {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for Ev {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // reversed: BinaryHeap is a max-heap, we want earliest-first
-        other
-            .time
-            .total_cmp(&self.time)
-            .then_with(|| other.seq.cmp(&self.seq))
-    }
-}
+use super::{ArrivalTrace, Discipline, LatencyMode, SimSpec};
+use std::collections::VecDeque;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum StationKind {
@@ -91,13 +86,53 @@ struct Req {
     t0: f64,
 }
 
-#[derive(Clone, Debug, Default)]
+/// Post-warm-up latency accounting — exact samples (the default and
+/// bit-identity reference) or the streaming histogram.
+#[derive(Clone, Debug)]
+enum LatAccum {
+    Exact(Vec<f64>),
+    Hdr(LogHist),
+}
+
+impl LatAccum {
+    fn new(mode: LatencyMode) -> LatAccum {
+        match mode {
+            LatencyMode::Exact => LatAccum::Exact(Vec::new()),
+            LatencyMode::Hdr => LatAccum::Hdr(LogHist::new()),
+        }
+    }
+
+    #[inline]
+    fn record(&mut self, lat: f64) {
+        match self {
+            LatAccum::Exact(v) => v.push(lat),
+            LatAccum::Hdr(h) => h.record(lat),
+        }
+    }
+
+    fn measured(&self) -> u64 {
+        match self {
+            LatAccum::Exact(v) => v.len() as u64,
+            LatAccum::Hdr(h) => h.count(),
+        }
+    }
+
+    /// `(mean, p50, p99, p999)` over the recorded completions.
+    fn summary(&self) -> (f64, f64, f64, f64) {
+        match self {
+            LatAccum::Exact(v) => latency_summary(v),
+            LatAccum::Hdr(h) => h.summary(),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
 struct ClassAccum {
     arrivals: u64,
     completed: u64,
     dropped: u64,
     /// End-to-end latencies of post-warm-up admissions.
-    lat: Vec<f64>,
+    lat: LatAccum,
 }
 
 /// Per-window deltas returned by [`Simulator::run_until`] — the streaming
@@ -111,8 +146,10 @@ pub struct WindowStats {
 }
 
 /// The discrete-event engine. A run is a pure function of
-/// `(problem, φ, Λ, SimSpec, seed)`: one event heap, one RNG consumed in
-/// event order, no wall-clock or thread dependence.
+/// `(problem, φ, Λ, SimSpec, seed)`: one calendar queue popping the stable
+/// `(time, seq)` order, one RNG consumed in event order, no wall-clock or
+/// thread dependence. Pinned bitwise (exact latency mode) against
+/// [`super::reference::simulate_requests_reference`].
 pub struct Simulator<'p> {
     problem: &'p Problem,
     spec: SimSpec,
@@ -120,16 +157,25 @@ pub struct Simulator<'p> {
     lam: Vec<f64>,
     /// Σ Λ over each class's session block (admission split normalizer).
     class_lam_sum: Vec<f64>,
-    /// `route[w][node]` — `(edge, φ)` lanes sampled per request.
-    route: Vec<Vec<Vec<(u32, f64)>>>,
+    /// CSR routing tables: row `w * n_nodes + i` spans
+    /// `route_off[row]..route_off[row+1]` of the flat lane arrays.
+    route_off: Vec<u32>,
+    route_edge: Vec<u32>,
+    route_phi: Vec<f64>,
+    /// Left-to-right Σ φ per row, precomputed in [`Simulator::set_phi`].
+    row_sum: Vec<f64>,
     stations: Vec<Station>,
     /// Computation-link edge of each real device (per-node telemetry).
     comp_edge: Vec<usize>,
-    heap: BinaryHeap<Ev>,
+    cal: CalendarQueue,
     seq: u64,
     clock: f64,
     rng: Rng,
+    /// Slab request pool: slots recycled through `free`.
     reqs: Vec<Req>,
+    free: Vec<u32>,
+    inflight: u64,
+    peak_inflight: u64,
     events: u64,
     admitted: u64,
     completed: u64,
@@ -193,25 +239,53 @@ impl<'p> Simulator<'p> {
                 max_depth: 0,
             });
         }
+        // φ-independent CSR index over the routing lanes, built once —
+        // set_phi only refreshes the φ values and row sums in place.
+        let n_nodes = net.n_nodes();
+        let mut route_off = Vec::with_capacity(net.n_sessions() * n_nodes + 1);
+        route_off.push(0u32);
+        let mut route_edge: Vec<u32> = Vec::new();
+        for w in 0..net.n_sessions() {
+            for i in 0..n_nodes {
+                route_edge.extend(net.lanes(w, i).iter().map(|&e| e as u32));
+                route_off.push(route_edge.len() as u32);
+            }
+        }
+        let route_phi = vec![0.0; route_edge.len()];
+        let row_sum = vec![0.0; net.n_sessions() * n_nodes];
+        let latency = spec.latency;
         let mut sim = Simulator {
             problem,
             spec,
             traces,
             lam,
             class_lam_sum: Vec::new(),
-            route: Vec::new(),
+            route_off,
+            route_edge,
+            route_phi,
+            row_sum,
             stations,
             comp_edge,
-            heap: BinaryHeap::new(),
+            cal: CalendarQueue::new(),
             seq: 0,
             clock: 0.0,
             rng: Rng::seed_from(seed),
             reqs: Vec::new(),
+            free: Vec::new(),
+            inflight: 0,
+            peak_inflight: 0,
             events: 0,
             admitted: 0,
             completed: 0,
             dropped: 0,
-            classes: vec![ClassAccum::default(); n_classes],
+            classes: (0..n_classes)
+                .map(|_| ClassAccum {
+                    arrivals: 0,
+                    completed: 0,
+                    dropped: 0,
+                    lat: LatAccum::new(latency),
+                })
+                .collect(),
             win_completed: 0,
             win_dropped: 0,
             win_lat_sum: 0.0,
@@ -222,9 +296,7 @@ impl<'p> Simulator<'p> {
         for c in 0..n_classes {
             let t = sim.next_arrival(c, 0.0);
             if t < sim.spec.horizon_s {
-                let seq = sim.seq;
-                sim.seq += 1;
-                sim.heap.push(Ev { time: t, seq, kind: EvKind::Arrival { class: c as u32 } });
+                sim.schedule(t, EvKind::Arrival { class: c as u32 });
             }
         }
         sim
@@ -232,7 +304,8 @@ impl<'p> Simulator<'p> {
 
     /// Swap in a new routing configuration (e.g. the next window's φ from
     /// a live `AllocationRun`). In-flight requests are unaffected; future
-    /// routing decisions sample the new split ratios.
+    /// routing decisions sample the new split ratios. Allocation-free:
+    /// only the CSR φ values and row sums are overwritten.
     pub fn set_phi(&mut self, phi: &Phi) {
         self.rebuild_route(phi);
     }
@@ -261,6 +334,20 @@ impl<'p> Simulator<'p> {
         &self.spec
     }
 
+    /// High-water mark of concurrently in-flight requests — the slab
+    /// pool's resident size (the reference derives the same number from
+    /// its counters, so the field is bit-comparable).
+    pub fn peak_inflight(&self) -> u64 {
+        self.peak_inflight
+    }
+
+    #[inline]
+    fn schedule(&mut self, time: f64, kind: EvKind) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.cal.push(Ev { time, seq, kind });
+    }
+
     fn refresh_class_sums(&mut self) {
         self.class_lam_sum = self
             .problem
@@ -271,20 +358,24 @@ impl<'p> Simulator<'p> {
             .collect();
     }
 
+    /// Refresh the CSR φ values and row sums in place. The sum runs
+    /// left-to-right over the same lane order as the reference's per-hop
+    /// `row.iter().sum()`, so [`Simulator::route_from`]'s inverse-CDF
+    /// scan sees bitwise-identical numbers.
     fn rebuild_route(&mut self, phi: &Phi) {
         let net = &self.problem.net;
-        self.route = (0..net.n_sessions())
-            .map(|w| {
-                (0..net.n_nodes())
-                    .map(|i| {
-                        net.lanes(w, i)
-                            .iter()
-                            .map(|&e| (e as u32, phi.frac[w][e]))
-                            .collect()
-                    })
-                    .collect()
-            })
-            .collect();
+        let n_nodes = net.n_nodes();
+        for w in 0..net.n_sessions() {
+            let frac = &phi.frac[w];
+            for i in 0..n_nodes {
+                let row = w * n_nodes + i;
+                let (a, b) = (self.route_off[row] as usize, self.route_off[row + 1] as usize);
+                for k in a..b {
+                    self.route_phi[k] = frac[self.route_edge[k] as usize];
+                }
+                self.row_sum[row] = self.route_phi[a..b].iter().sum();
+            }
+        }
     }
 
     /// Next event time of class `c`'s piecewise-constant Poisson stream
@@ -317,11 +408,7 @@ impl<'p> Simulator<'p> {
         self.win_completed = 0;
         self.win_dropped = 0;
         self.win_lat_sum = 0.0;
-        while let Some(top) = self.heap.peek() {
-            if top.time > t_end {
-                break;
-            }
-            let ev = self.heap.pop().expect("peeked event");
+        while let Some(ev) = self.cal.pop_at_most(t_end) {
             self.clock = ev.time;
             self.events += 1;
             match ev.kind {
@@ -351,14 +438,42 @@ impl<'p> Simulator<'p> {
         self.report()
     }
 
+    /// Claim a slab slot for a newly admitted request, recycling a freed
+    /// one when available. Ids are event payload only — never ordering
+    /// inputs — so recycling is behaviorally invisible.
+    #[inline]
+    fn alloc_req(&mut self, w: u32, t0: f64) -> u32 {
+        self.inflight += 1;
+        if self.inflight > self.peak_inflight {
+            self.peak_inflight = self.inflight;
+        }
+        match self.free.pop() {
+            Some(id) => {
+                self.reqs[id as usize] = Req { w, t0 };
+                id
+            }
+            None => {
+                let id = self.reqs.len() as u32;
+                self.reqs.push(Req { w, t0 });
+                id
+            }
+        }
+    }
+
+    /// Return a finished (completed or dropped) request's slot to the
+    /// freelist. Callers guarantee no pending event references `id`.
+    #[inline]
+    fn free_req(&mut self, id: u32) {
+        self.inflight -= 1;
+        self.free.push(id);
+    }
+
     fn on_arrival(&mut self, c: usize) {
         let t = self.clock;
         // schedule the class's next admission first (fixed RNG order)
         let nt = self.next_arrival(c, t);
         if nt < self.spec.horizon_s {
-            let seq = self.seq;
-            self.seq += 1;
-            self.heap.push(Ev { time: nt, seq, kind: EvKind::Arrival { class: c as u32 } });
+            self.schedule(nt, EvKind::Arrival { class: c as u32 });
         }
         // thin the class arrival onto a session ∝ Λ
         let (s0, s1) = self.problem.workload.class_spans[c];
@@ -379,8 +494,7 @@ impl<'p> Simulator<'p> {
         } else {
             s0
         };
-        let req = self.reqs.len() as u32;
-        self.reqs.push(Req { w: w as u32, t0: t });
+        let req = self.alloc_req(w as u32, t);
         self.admitted += 1;
         self.classes[c].arrivals += 1;
         self.route_from(AugmentedNet::SOURCE, req);
@@ -392,27 +506,30 @@ impl<'p> Simulator<'p> {
     fn route_from(&mut self, mut node: usize, req: u32) {
         let w = self.reqs[req as usize].w as usize;
         let dnode = self.problem.net.dnode(w);
+        let n_nodes = self.problem.net.n_nodes();
         loop {
             if node == dnode {
                 self.complete(req);
                 return;
             }
-            let row = &self.route[w][node];
-            if row.is_empty() {
+            let row = w * n_nodes + node;
+            let (a, b) = (self.route_off[row] as usize, self.route_off[row + 1] as usize);
+            if a == b {
                 // unreachable on validated nets; account rather than hang
                 self.drop_req(req, None);
                 return;
             }
-            let sum: f64 = row.iter().map(|&(_, f)| f).sum();
+            let sum = self.row_sum[row];
             let mut x = self.rng.f64() * sum.max(1e-300);
-            let mut chosen = row[0].0;
-            for &(e, f) in row {
+            let mut chosen = self.route_edge[a];
+            for k in a..b {
+                let f = self.route_phi[k];
                 if x < f {
-                    chosen = e;
+                    chosen = self.route_edge[k];
                     break;
                 }
                 x -= f;
-                chosen = e;
+                chosen = self.route_edge[k];
             }
             let e = chosen as usize;
             if self.stations[e].kind == StationKind::Admission {
@@ -433,13 +550,7 @@ impl<'p> Simulator<'p> {
             st.busy += 1;
             let service = self.rng.exponential(st.rate);
             st.busy_time += service;
-            let seq = self.seq;
-            self.seq += 1;
-            self.heap.push(Ev {
-                time: t + service,
-                seq,
-                kind: EvKind::Depart { edge: e as u32, req },
-            });
+            self.schedule(t + service, EvKind::Depart { edge: e as u32, req });
         } else if cap > 0 && st.queue.len() >= cap {
             st.dropped += 1;
             self.drop_req(req, Some(e));
@@ -471,13 +582,7 @@ impl<'p> Simulator<'p> {
                 st.wait_sum += t - at;
                 let service = self.rng.exponential(st.rate);
                 st.busy_time += service;
-                let seq = self.seq;
-                self.seq += 1;
-                self.heap.push(Ev {
-                    time: t + service,
-                    seq,
-                    kind: EvKind::Depart { edge: e as u32, req: nreq },
-                });
+                self.schedule(t + service, EvKind::Depart { edge: e as u32, req: nreq });
             }
             None => st.busy -= 1,
         }
@@ -490,10 +595,11 @@ impl<'p> Simulator<'p> {
         self.completed += 1;
         self.classes[c].completed += 1;
         if r.t0 >= self.spec.warmup_s {
-            self.classes[c].lat.push(lat);
+            self.classes[c].lat.record(lat);
         }
         self.win_completed += 1;
         self.win_lat_sum += lat;
+        self.free_req(req);
     }
 
     fn drop_req(&mut self, req: u32, _station: Option<usize>) {
@@ -502,29 +608,46 @@ impl<'p> Simulator<'p> {
         self.dropped += 1;
         self.classes[c].dropped += 1;
         self.win_dropped += 1;
+        self.free_req(req);
     }
 
     /// Snapshot the accumulated history into a [`SimReport`]. No
     /// wall-clock enters the report — same-seed runs are bit-comparable.
     pub fn report(&self) -> SimReport {
         let span = self.clock.max(1e-12);
-        let mut all: Vec<f64> = Vec::new();
-        for cl in &self.classes {
-            all.extend_from_slice(&cl.lat);
-        }
-        let (mean, p50, p99, p999) = latency_summary(&all);
+        // global roll-up over classes: concatenate (exact) or merge (hdr)
+        let (mean, p50, p99, p999) = match self.spec.latency {
+            LatencyMode::Exact => {
+                let mut all: Vec<f64> = Vec::new();
+                for cl in &self.classes {
+                    if let LatAccum::Exact(v) = &cl.lat {
+                        all.extend_from_slice(v);
+                    }
+                }
+                latency_summary(&all)
+            }
+            LatencyMode::Hdr => {
+                let mut all = LogHist::new();
+                for cl in &self.classes {
+                    if let LatAccum::Hdr(h) = &cl.lat {
+                        all.merge(h);
+                    }
+                }
+                all.summary()
+            }
+        };
         let classes = self
             .classes
             .iter()
             .enumerate()
             .map(|(c, cl)| {
-                let (m, q50, q99, q999) = latency_summary(&cl.lat);
+                let (m, q50, q99, q999) = cl.lat.summary();
                 ClassStats {
                     name: self.problem.workload.class_names[c].clone(),
                     arrivals: cl.arrivals,
                     completed: cl.completed,
                     dropped: cl.dropped,
-                    measured: cl.lat.len() as u64,
+                    measured: cl.lat.measured(),
                     mean_latency_s: m,
                     p50_latency_s: q50,
                     p99_latency_s: q99,
@@ -561,6 +684,7 @@ impl<'p> Simulator<'p> {
             completed: self.completed,
             dropped: self.dropped,
             in_flight: self.admitted - self.completed - self.dropped,
+            peak_inflight: self.peak_inflight,
             mean_latency_s: mean,
             p50_latency_s: p50,
             p99_latency_s: p99,
@@ -589,6 +713,7 @@ pub fn simulate_requests(
 mod tests {
     use super::*;
     use crate::graph::topologies;
+    use crate::sim::reference::simulate_requests_reference;
 
     fn small_problem(seed: u64) -> Problem {
         let mut rng = Rng::seed_from(seed);
@@ -621,6 +746,8 @@ mod tests {
             report.classes.iter().map(|c| c.arrivals).sum::<u64>()
         );
         assert!(report.events >= report.arrivals);
+        assert!(report.peak_inflight > 0);
+        assert!(report.peak_inflight <= report.arrivals);
         assert!(report.mean_latency_s > 0.0);
         assert!(report.p50_latency_s <= report.p99_latency_s);
         assert!(report.p99_latency_s <= report.p999_latency_s);
@@ -649,6 +776,33 @@ mod tests {
         );
         assert_eq!(a, b);
         assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    }
+
+    #[test]
+    fn matches_the_reference_engine_bitwise() {
+        for seed in [1u64, 5, 23] {
+            let problem = small_problem(seed);
+            let lam = problem.uniform_allocation();
+            let spec = SimSpec { horizon_s: 25.0, ..SimSpec::default() };
+            let phi = Phi::uniform(&problem.net);
+            let fast = simulate_requests(
+                &problem,
+                &phi,
+                &lam,
+                constant_traces(&problem),
+                spec.clone(),
+                seed,
+            );
+            let slow = simulate_requests_reference(
+                &problem,
+                &phi,
+                &lam,
+                constant_traces(&problem),
+                spec,
+                seed,
+            );
+            assert_eq!(fast, slow, "optimized core diverged from the reference (seed {seed})");
+        }
     }
 
     #[test]
@@ -687,5 +841,62 @@ mod tests {
         assert_eq!(report.arrivals, report.completed + report.dropped);
         let node_drops: u64 = report.nodes.iter().map(|n| n.dropped).sum();
         assert!(node_drops <= report.dropped, "node drops are a subset");
+    }
+
+    #[test]
+    fn slab_stays_bounded_by_peak_inflight() {
+        let problem = small_problem(13);
+        let lam = problem.uniform_allocation();
+        let spec = SimSpec { horizon_s: 60.0, ..SimSpec::default() };
+        let mut sim =
+            Simulator::new(&problem, spec, constant_traces(&problem), lam.clone(), 17);
+        sim.set_phi(&Phi::uniform(&problem.net));
+        let report = sim.run_to_end();
+        assert!(report.arrivals > 1000, "want a non-trivial run");
+        assert_eq!(sim.reqs.len() as u64, report.peak_inflight, "slab high-water = peak");
+        assert!(
+            report.peak_inflight < report.arrivals / 2,
+            "recycling must keep the pool well below total admissions \
+             (peak {} vs arrivals {})",
+            report.peak_inflight,
+            report.arrivals
+        );
+    }
+
+    #[test]
+    fn hdr_mode_tracks_exact_mode() {
+        let problem = small_problem(19);
+        let lam = problem.uniform_allocation();
+        let phi = Phi::uniform(&problem.net);
+        let exact_spec = SimSpec { horizon_s: 80.0, ..SimSpec::default() };
+        let hdr_spec = SimSpec { latency: LatencyMode::Hdr, ..exact_spec.clone() };
+        let exact = simulate_requests(
+            &problem,
+            &phi,
+            &lam,
+            constant_traces(&problem),
+            exact_spec,
+            31,
+        );
+        let hdr =
+            simulate_requests(&problem, &phi, &lam, constant_traces(&problem), hdr_spec, 31);
+        // identical event history: every counter matches bitwise
+        assert_eq!(hdr.arrivals, exact.arrivals);
+        assert_eq!(hdr.completed, exact.completed);
+        assert_eq!(hdr.events, exact.events);
+        assert_eq!(hdr.peak_inflight, exact.peak_inflight);
+        assert_eq!(hdr.end_s.to_bits(), exact.end_s.to_bits());
+        // per-class means share the same sequential sum: bitwise equal
+        for (h, e) in hdr.classes.iter().zip(exact.classes.iter()) {
+            assert_eq!(h.measured, e.measured);
+            assert_eq!(h.mean_latency_s.to_bits(), e.mean_latency_s.to_bits());
+        }
+        // quantiles agree to the histogram's resolution
+        for (h, e) in [(hdr.p50_latency_s, exact.p50_latency_s), (hdr.p99_latency_s, exact.p99_latency_s)]
+        {
+            if e > 0.0 {
+                assert!((h - e).abs() / e < 5e-3, "hdr {h} vs exact {e}");
+            }
+        }
     }
 }

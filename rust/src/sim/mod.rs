@@ -41,13 +41,42 @@
 //!
 //! ## Determinism
 //!
-//! The event core is a binary min-heap keyed on `(time, seq)` — the `seq`
-//! tie-break makes event order total, and a single seeded
+//! The event core pops a **total order** keyed on `(time, seq)` — the
+//! `seq` tie-break makes event order total, and a single seeded
 //! [`crate::util::rng::Rng`] is consumed in event order, so a run is a
 //! pure function of `(problem, φ, Λ, SimSpec, seed)`. The engine worker
 //! count never enters the simulation: the same seed produces a
 //! bit-identical [`SimReport`] at any `--workers` value (asserted by
 //! `rust/tests/test_sim.rs`).
+//!
+//! The scheduler is a [`calendar::CalendarQueue`] — time-bucketed with
+//! lazy resize and a heap fallback for far-future events. Its **ordering
+//! invariant**: bucket assignment is a monotone function of time, each
+//! bucket stays sorted, and pushes never predate the last pop, so the
+//! calendar pops the *identical* `(time, seq)` sequence a
+//! `BinaryHeap<Ev>` would (randomized equivalence test in
+//! `rust/tests/test_sim.rs`). Request ids come from a slab pool that
+//! recycles completed/dropped slots through a freelist — the **slab-id
+//! non-ordering contract**: ids are event payload only, never compared,
+//! never fed to the RNG, so recycling cannot change any simulated
+//! outcome while keeping memory at O(peak in-flight)
+//! ([`SimReport::peak_inflight`]).
+//!
+//! The PR-6 engine (binary heap, nested routing tables, no recycling) is
+//! kept verbatim in [`reference`] and every optimization is pinned
+//! bitwise against it in exact latency mode.
+//!
+//! ## Latency telemetry modes
+//!
+//! [`SimSpec::latency`] picks how post-warm-up completions are recorded:
+//! [`LatencyMode::Exact`] (default) keeps every sample and computes
+//! interpolated percentiles — the bit-identity reference;
+//! [`LatencyMode::Hdr`] streams samples into a fixed-resolution
+//! log-histogram ([`hist::LogHist`]) with ≤ 0.1% relative bucket width
+//! and O(1) memory — the right choice for multi-million-request replays.
+//! Hdr counters and per-class means stay bitwise-equal to exact mode
+//! (same event history, same sequential sum); quantiles are approximate
+//! within the documented bound.
 //!
 //! ## Validation
 //!
@@ -58,10 +87,14 @@
 //! `python/tests/test_sim_des.py` mirrors the same semantics in Python
 //! against the same formulas.
 
+pub mod calendar;
 pub mod core;
+pub mod hist;
+pub mod reference;
 pub mod report;
 
 pub use self::core::{simulate_requests, Simulator, WindowStats};
+pub use reference::simulate_requests_reference;
 pub use report::{ClassStats, NodeStats, SimReport};
 
 use crate::util::json::Json;
@@ -92,6 +125,36 @@ impl Discipline {
     }
 }
 
+/// How post-warm-up completion latencies are recorded.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LatencyMode {
+    /// Keep every sample; interpolated percentiles at report time. The
+    /// default and the bit-identity reference — O(completions) memory.
+    Exact,
+    /// Stream samples into a fixed-resolution log-histogram
+    /// ([`hist::LogHist`]): O(1) memory, ≤ 0.1% relative bucket width.
+    /// Counters and per-class means stay bitwise-equal to exact mode;
+    /// quantiles are approximate within the bound.
+    Hdr,
+}
+
+impl LatencyMode {
+    pub fn parse(name: &str) -> Option<LatencyMode> {
+        match name {
+            "exact" => Some(LatencyMode::Exact),
+            "hdr" => Some(LatencyMode::Hdr),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            LatencyMode::Exact => "exact",
+            LatencyMode::Hdr => "hdr",
+        }
+    }
+}
+
 /// The scenario-level simulation knobs (the `"sim"` object of a scenario
 /// file; every field optional there, falling back to these defaults).
 #[derive(Clone, Debug, PartialEq)]
@@ -115,6 +178,8 @@ pub struct SimSpec {
     /// Sim-seconds per outer-iteration unit when compiling
     /// `RateSpec::Trace` breakpoints into arrival-rate changes.
     pub trace_window_s: f64,
+    /// Latency recording mode ([`LatencyMode::Exact`] by default).
+    pub latency: LatencyMode,
 }
 
 impl Default for SimSpec {
@@ -126,6 +191,7 @@ impl Default for SimSpec {
             servers_per_node: 1,
             discipline: Discipline::Fifo,
             trace_window_s: 1.0,
+            latency: LatencyMode::Exact,
         }
     }
 }
@@ -159,13 +225,14 @@ impl SimSpec {
     /// and unknown fields are warned about, matching the spec layer.
     pub fn from_json(j: &Json) -> Result<SimSpec, String> {
         let obj = j.as_obj().ok_or_else(|| format!("bad sim '{j}' (want an object)"))?;
-        const KNOWN: [&str; 6] = [
+        const KNOWN: [&str; 7] = [
             "horizon_s",
             "warmup_s",
             "queue_capacity",
             "servers_per_node",
             "discipline",
             "trace_window_s",
+            "latency",
         ];
         for key in obj.keys() {
             if !KNOWN.contains(&key.as_str()) {
@@ -195,6 +262,13 @@ impl SimSpec {
         if let Some(x) = opt_f64(j, "trace_window_s")? {
             spec.trace_window_s = x;
         }
+        if !matches!(j.get("latency"), Json::Null) {
+            let m = j.get("latency");
+            spec.latency = m
+                .as_str()
+                .and_then(LatencyMode::parse)
+                .ok_or_else(|| format!("bad sim latency '{m}' (exact | hdr)"))?;
+        }
         Ok(spec)
     }
 
@@ -207,6 +281,7 @@ impl SimSpec {
             ("servers_per_node", Json::from(self.servers_per_node)),
             ("discipline", Json::from(self.discipline.name())),
             ("trace_window_s", Json::from(self.trace_window_s)),
+            ("latency", Json::from(self.latency.name())),
         ])
     }
 }
@@ -286,6 +361,7 @@ mod tests {
             servers_per_node: 3,
             discipline: Discipline::Lifo,
             trace_window_s: 0.25,
+            latency: LatencyMode::Hdr,
         };
         spec.validate().unwrap();
         let back = SimSpec::from_json(&spec.to_json()).unwrap();
@@ -294,6 +370,7 @@ mod tests {
         let partial = SimSpec::from_json(&Json::parse(r#"{"horizon_s": 5}"#).unwrap()).unwrap();
         assert_eq!(partial.horizon_s, 5.0);
         assert_eq!(partial.discipline, Discipline::Fifo);
+        assert_eq!(partial.latency, LatencyMode::Exact);
     }
 
     #[test]
@@ -302,6 +379,7 @@ mod tests {
             r#"{"horizon_s": "long"}"#,
             r#"{"queue_capacity": 2.5}"#,
             r#"{"discipline": "random"}"#,
+            r#"{"latency": "sampled"}"#,
             r#"7"#,
         ] {
             assert!(SimSpec::from_json(&Json::parse(text).unwrap()).is_err(), "{text}");

@@ -1,0 +1,481 @@
+//! The PR-6 discrete-event engine, kept as the **pinned bit-identity
+//! reference** for the optimized hot path in [`super::core`] — the same
+//! playbook as `routing::reference` (plain sweeps vs. the batched engine)
+//! and the scalar SIMD references: the naive structures stay in-tree,
+//! exercised by tests and the `sim_replay_heap` bench row, and every
+//! structural optimization must reproduce this engine's `SimReport`
+//! *bitwise* in exact latency mode.
+//!
+//! Differences from the optimized core — all behaviorally invisible:
+//!
+//! * `BinaryHeap<Ev>` scheduler instead of the calendar queue (identical
+//!   `(time, seq)` pop order by [`Ev`]'s `Ord`);
+//! * nested `Vec<Vec<Vec<(edge, φ)>>>` routing table with the row sum
+//!   recomputed on every hop (same left-to-right order as the CSR
+//!   tables' precomputed sums, so the inverse-CDF scan consumes the
+//!   identical RNG draw and picks the identical lane);
+//! * `reqs` grows monotonically — no slab recycling — so its length is
+//!   O(total admitted) rather than O(peak in-flight);
+//! * exact `Vec<f64>` latency logs only (the reference for the default
+//!   [`super::LatencyMode::Exact`]; the streaming histogram mode is an
+//!   explicitly approximate opt-in with no reference path).
+//!
+//! `peak_inflight` is derived from the same admitted/completed/dropped
+//! counters the optimized core's slab occupancy tracks, so the field is
+//! bit-comparable too.
+
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::graph::augmented::AugmentedNet;
+use crate::model::flow::Phi;
+use crate::model::Problem;
+use crate::util::rng::Rng;
+
+use super::calendar::{Ev, EvKind};
+use super::report::{latency_summary, ClassStats, NodeStats, SimReport};
+use super::{ArrivalTrace, Discipline, SimSpec};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum StationKind {
+    Admission,
+    Comm,
+    Compute { device: usize },
+}
+
+#[derive(Clone, Debug)]
+struct Station {
+    kind: StationKind,
+    servers: usize,
+    rate: f64,
+    busy: usize,
+    queue: VecDeque<(u32, f64)>,
+    arrivals: u64,
+    served: u64,
+    dropped: u64,
+    busy_time: f64,
+    wait_sum: f64,
+    queue_area: f64,
+    last_change: f64,
+    max_depth: usize,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Req {
+    w: u32,
+    t0: f64,
+}
+
+#[derive(Clone, Debug, Default)]
+struct ClassAccum {
+    arrivals: u64,
+    completed: u64,
+    dropped: u64,
+    lat: Vec<f64>,
+}
+
+/// The reference engine. Private mirror of the PR-6 `Simulator`; drive it
+/// through [`simulate_requests_reference`].
+struct ReferenceSimulator<'p> {
+    problem: &'p Problem,
+    spec: SimSpec,
+    traces: Vec<ArrivalTrace>,
+    lam: Vec<f64>,
+    class_lam_sum: Vec<f64>,
+    route: Vec<Vec<Vec<(u32, f64)>>>,
+    stations: Vec<Station>,
+    comp_edge: Vec<usize>,
+    heap: BinaryHeap<Ev>,
+    seq: u64,
+    clock: f64,
+    rng: Rng,
+    reqs: Vec<Req>,
+    events: u64,
+    admitted: u64,
+    completed: u64,
+    dropped: u64,
+    peak_inflight: u64,
+    classes: Vec<ClassAccum>,
+}
+
+impl<'p> ReferenceSimulator<'p> {
+    fn new(
+        problem: &'p Problem,
+        spec: SimSpec,
+        traces: Vec<ArrivalTrace>,
+        lam: Vec<f64>,
+        seed: u64,
+    ) -> ReferenceSimulator<'p> {
+        spec.validate().expect("invalid SimSpec");
+        let n_classes = problem.workload.n_classes();
+        assert_eq!(traces.len(), n_classes, "one arrival trace per class");
+        assert_eq!(lam.len(), problem.n_sessions(), "Λ must cover every session");
+        let net = &problem.net;
+        let n_real = net.n_real;
+        let mut stations = Vec::with_capacity(net.graph.n_edges());
+        let mut comp_edge = vec![usize::MAX; n_real];
+        for (eid, e) in net.graph.edges().iter().enumerate() {
+            let kind = if e.src == AugmentedNet::SOURCE {
+                StationKind::Admission
+            } else if e.dst > n_real {
+                StationKind::Compute { device: e.src - 1 }
+            } else {
+                StationKind::Comm
+            };
+            let (servers, rate) = match kind {
+                StationKind::Admission => (1, 1.0),
+                StationKind::Compute { device } => {
+                    comp_edge[device] = eid;
+                    let c = spec.servers_per_node;
+                    (c, e.capacity / c as f64)
+                }
+                StationKind::Comm => (1, e.capacity),
+            };
+            stations.push(Station {
+                kind,
+                servers,
+                rate,
+                busy: 0,
+                queue: VecDeque::new(),
+                arrivals: 0,
+                served: 0,
+                dropped: 0,
+                busy_time: 0.0,
+                wait_sum: 0.0,
+                queue_area: 0.0,
+                last_change: 0.0,
+                max_depth: 0,
+            });
+        }
+        let mut sim = ReferenceSimulator {
+            problem,
+            spec,
+            traces,
+            lam,
+            class_lam_sum: Vec::new(),
+            route: Vec::new(),
+            stations,
+            comp_edge,
+            heap: BinaryHeap::new(),
+            seq: 0,
+            clock: 0.0,
+            rng: Rng::seed_from(seed),
+            reqs: Vec::new(),
+            events: 0,
+            admitted: 0,
+            completed: 0,
+            dropped: 0,
+            peak_inflight: 0,
+            classes: vec![ClassAccum::default(); n_classes],
+        };
+        sim.refresh_class_sums();
+        sim.rebuild_route(&Phi::uniform(net));
+        for c in 0..n_classes {
+            let t = sim.next_arrival(c, 0.0);
+            if t < sim.spec.horizon_s {
+                let seq = sim.seq;
+                sim.seq += 1;
+                sim.heap.push(Ev { time: t, seq, kind: EvKind::Arrival { class: c as u32 } });
+            }
+        }
+        sim
+    }
+
+    fn set_phi(&mut self, phi: &Phi) {
+        self.rebuild_route(phi);
+    }
+
+    fn refresh_class_sums(&mut self) {
+        self.class_lam_sum = self
+            .problem
+            .workload
+            .class_spans
+            .iter()
+            .map(|&(s0, s1)| self.lam[s0..s1].iter().sum())
+            .collect();
+    }
+
+    fn rebuild_route(&mut self, phi: &Phi) {
+        let net = &self.problem.net;
+        self.route = (0..net.n_sessions())
+            .map(|w| {
+                (0..net.n_nodes())
+                    .map(|i| {
+                        net.lanes(w, i)
+                            .iter()
+                            .map(|&e| (e as u32, phi.frac[w][e]))
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect();
+    }
+
+    fn next_arrival(&mut self, c: usize, from: f64) -> f64 {
+        let mut t = from;
+        loop {
+            let (rate, end) = self.traces[c].segment_at(t);
+            if rate <= 0.0 {
+                if end.is_finite() {
+                    t = end;
+                    continue;
+                }
+                return f64::INFINITY;
+            }
+            let dt = self.rng.exponential(rate);
+            if t + dt < end {
+                return t + dt;
+            }
+            t = end;
+        }
+    }
+
+    fn run_until(&mut self, t_end: f64) {
+        while let Some(top) = self.heap.peek() {
+            if top.time > t_end {
+                break;
+            }
+            let ev = self.heap.pop().expect("peeked event");
+            self.clock = ev.time;
+            self.events += 1;
+            match ev.kind {
+                EvKind::Arrival { class } => self.on_arrival(class as usize),
+                EvKind::Depart { edge, req } => self.on_depart(edge as usize, req),
+            }
+        }
+        if t_end.is_finite() && t_end > self.clock {
+            self.clock = t_end;
+        }
+    }
+
+    fn on_arrival(&mut self, c: usize) {
+        let t = self.clock;
+        let nt = self.next_arrival(c, t);
+        if nt < self.spec.horizon_s {
+            let seq = self.seq;
+            self.seq += 1;
+            self.heap.push(Ev { time: nt, seq, kind: EvKind::Arrival { class: c as u32 } });
+        }
+        let (s0, s1) = self.problem.workload.class_spans[c];
+        let total = self.class_lam_sum[c];
+        let w = if total > 0.0 {
+            let mut x = self.rng.f64() * total;
+            let mut chosen = s0;
+            for s in s0..s1 {
+                let f = self.lam[s];
+                if x < f {
+                    chosen = s;
+                    break;
+                }
+                x -= f;
+                chosen = s;
+            }
+            chosen
+        } else {
+            s0
+        };
+        let req = self.reqs.len() as u32;
+        self.reqs.push(Req { w: w as u32, t0: t });
+        self.admitted += 1;
+        let inflight = self.admitted - self.completed - self.dropped;
+        if inflight > self.peak_inflight {
+            self.peak_inflight = inflight;
+        }
+        self.classes[c].arrivals += 1;
+        self.route_from(AugmentedNet::SOURCE, req);
+    }
+
+    fn route_from(&mut self, mut node: usize, req: u32) {
+        let w = self.reqs[req as usize].w as usize;
+        let dnode = self.problem.net.dnode(w);
+        loop {
+            if node == dnode {
+                self.complete(req);
+                return;
+            }
+            let row = &self.route[w][node];
+            if row.is_empty() {
+                self.drop_req(req);
+                return;
+            }
+            let sum: f64 = row.iter().map(|&(_, f)| f).sum();
+            let mut x = self.rng.f64() * sum.max(1e-300);
+            let mut chosen = row[0].0;
+            for &(e, f) in row {
+                if x < f {
+                    chosen = e;
+                    break;
+                }
+                x -= f;
+                chosen = e;
+            }
+            let e = chosen as usize;
+            if self.stations[e].kind == StationKind::Admission {
+                node = self.problem.net.graph.edge(e).dst;
+                continue;
+            }
+            self.enqueue(e, req);
+            return;
+        }
+    }
+
+    fn enqueue(&mut self, e: usize, req: u32) {
+        let t = self.clock;
+        let cap = self.spec.queue_capacity;
+        let st = &mut self.stations[e];
+        st.arrivals += 1;
+        if st.busy < st.servers {
+            st.busy += 1;
+            let service = self.rng.exponential(st.rate);
+            st.busy_time += service;
+            let seq = self.seq;
+            self.seq += 1;
+            self.heap.push(Ev {
+                time: t + service,
+                seq,
+                kind: EvKind::Depart { edge: e as u32, req },
+            });
+        } else if cap > 0 && st.queue.len() >= cap {
+            st.dropped += 1;
+            self.drop_req(req);
+        } else {
+            let depth = st.queue.len();
+            st.queue_area += depth as f64 * (t - st.last_change);
+            st.last_change = t;
+            st.queue.push_back((req, t));
+            st.max_depth = st.max_depth.max(st.queue.len());
+        }
+    }
+
+    fn on_depart(&mut self, e: usize, req: u32) {
+        let t = self.clock;
+        self.stations[e].served += 1;
+        let dst = self.problem.net.graph.edge(e).dst;
+        self.route_from(dst, req);
+        let disc = self.spec.discipline;
+        let st = &mut self.stations[e];
+        let next = match disc {
+            Discipline::Fifo => st.queue.pop_front(),
+            Discipline::Lifo => st.queue.pop_back(),
+        };
+        match next {
+            Some((nreq, at)) => {
+                st.queue_area += (st.queue.len() + 1) as f64 * (t - st.last_change);
+                st.last_change = t;
+                st.wait_sum += t - at;
+                let service = self.rng.exponential(st.rate);
+                st.busy_time += service;
+                let seq = self.seq;
+                self.seq += 1;
+                self.heap.push(Ev {
+                    time: t + service,
+                    seq,
+                    kind: EvKind::Depart { edge: e as u32, req: nreq },
+                });
+            }
+            None => st.busy -= 1,
+        }
+    }
+
+    fn complete(&mut self, req: u32) {
+        let r = self.reqs[req as usize];
+        let c = self.problem.workload.class_of_session(r.w as usize);
+        let lat = self.clock - r.t0;
+        self.completed += 1;
+        self.classes[c].completed += 1;
+        if r.t0 >= self.spec.warmup_s {
+            self.classes[c].lat.push(lat);
+        }
+    }
+
+    fn drop_req(&mut self, req: u32) {
+        let r = self.reqs[req as usize];
+        let c = self.problem.workload.class_of_session(r.w as usize);
+        self.dropped += 1;
+        self.classes[c].dropped += 1;
+    }
+
+    fn report(&self) -> SimReport {
+        let span = self.clock.max(1e-12);
+        let mut all: Vec<f64> = Vec::new();
+        for cl in &self.classes {
+            all.extend_from_slice(&cl.lat);
+        }
+        let (mean, p50, p99, p999) = latency_summary(&all);
+        let classes = self
+            .classes
+            .iter()
+            .enumerate()
+            .map(|(c, cl)| {
+                let (m, q50, q99, q999) = latency_summary(&cl.lat);
+                ClassStats {
+                    name: self.problem.workload.class_names[c].clone(),
+                    arrivals: cl.arrivals,
+                    completed: cl.completed,
+                    dropped: cl.dropped,
+                    measured: cl.lat.len() as u64,
+                    mean_latency_s: m,
+                    p50_latency_s: q50,
+                    p99_latency_s: q99,
+                    p999_latency_s: q999,
+                }
+            })
+            .collect();
+        let nodes = self
+            .comp_edge
+            .iter()
+            .enumerate()
+            .filter(|&(_, &e)| e != usize::MAX)
+            .map(|(d, &e)| {
+                let st = &self.stations[e];
+                let tail = st.queue.len() as f64 * (self.clock - st.last_change);
+                NodeStats {
+                    device: d,
+                    arrivals: st.arrivals,
+                    served: st.served,
+                    dropped: st.dropped,
+                    utilization: st.busy_time / (span * st.servers as f64),
+                    mean_queue_depth: (st.queue_area + tail) / span,
+                    max_queue_depth: st.max_depth,
+                    mean_wait_s: st.wait_sum / st.served.max(1) as f64,
+                }
+            })
+            .collect();
+        SimReport {
+            horizon_s: self.spec.horizon_s,
+            warmup_s: self.spec.warmup_s,
+            end_s: self.clock,
+            events: self.events,
+            arrivals: self.admitted,
+            completed: self.completed,
+            dropped: self.dropped,
+            in_flight: self.admitted - self.completed - self.dropped,
+            peak_inflight: self.peak_inflight,
+            mean_latency_s: mean,
+            p50_latency_s: p50,
+            p99_latency_s: p99,
+            p999_latency_s: p999,
+            classes,
+            nodes,
+        }
+    }
+}
+
+/// One-shot replay on the reference engine: run `(φ, Λ)` over the full
+/// horizon, drain, report. Exact latency mode only — the streaming
+/// histogram is an optimized-core opt-in with no reference semantics
+/// (`spec.latency` is ignored here).
+pub fn simulate_requests_reference(
+    problem: &Problem,
+    phi: &Phi,
+    lam: &[f64],
+    traces: Vec<ArrivalTrace>,
+    spec: SimSpec,
+    seed: u64,
+) -> SimReport {
+    let mut sim = ReferenceSimulator::new(problem, spec, traces, lam.to_vec(), seed);
+    sim.set_phi(phi);
+    let h = sim.spec.horizon_s;
+    sim.run_until(h);
+    sim.run_until(f64::INFINITY);
+    sim.report()
+}

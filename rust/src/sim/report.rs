@@ -63,6 +63,10 @@ pub struct SimReport {
     pub dropped: u64,
     /// Admitted but neither completed nor dropped yet (0 after a drain).
     pub in_flight: u64,
+    /// High-water mark of concurrently in-flight requests — the resident
+    /// size of the core's slab request pool (memory is O(this), not
+    /// O(arrivals)).
+    pub peak_inflight: u64,
     pub mean_latency_s: f64,
     pub p50_latency_s: f64,
     pub p99_latency_s: f64,
@@ -115,6 +119,7 @@ impl SimReport {
             ("completed", Json::from_u64(self.completed)),
             ("dropped", Json::from_u64(self.dropped)),
             ("in_flight", Json::from_u64(self.in_flight)),
+            ("peak_inflight", Json::from_u64(self.peak_inflight)),
             ("mean_latency_s", Json::from(self.mean_latency_s)),
             ("p50_latency_s", Json::from(self.p50_latency_s)),
             ("p99_latency_s", Json::from(self.p99_latency_s)),

@@ -306,6 +306,205 @@ fn lifo_discipline_changes_waits_not_counts() {
     );
 }
 
+#[test]
+fn calendar_queue_pops_the_heap_order_under_stress() {
+    // randomized equivalence against a plain BinaryHeap: the calendar
+    // queue must pop the identical stable (time, seq) total order through
+    // coarse-grid ties (distinct seq on equal times), far-future pushes
+    // that land in the overflow heap, bursts that force a bucket-table
+    // grow, and drains that force it back down
+    use jowr::sim::calendar::{CalendarQueue, Ev, EvKind};
+    use std::collections::BinaryHeap;
+    let mut rng = jowr::util::rng::Rng::seed_from(0xC0FFEE);
+    let mut cal = CalendarQueue::new();
+    let mut heap: BinaryHeap<Ev> = BinaryHeap::new();
+    let mut seq = 0u64;
+    let mut cur = 0.0f64;
+    for round in 0..40usize {
+        let burst = if round % 10 == 0 { 3000 } else { 50 + rng.below(200) };
+        for _ in 0..burst {
+            let t = if rng.chance(0.05) {
+                // far future: exercises the overflow heap + re-anchor
+                cur + 500.0 + 1000.0 * rng.f64()
+            } else {
+                // coarse grid: exact ties resolved purely by seq
+                cur + rng.below(20) as f64 * 0.25
+            };
+            let ev = Ev { time: t, seq, kind: EvKind::Arrival { class: (seq % 7) as u32 } };
+            seq += 1;
+            cal.push(ev);
+            heap.push(ev);
+        }
+        let t_end = if rng.chance(0.3) { f64::INFINITY } else { cur + rng.f64() * 8.0 };
+        loop {
+            let want = heap.peek().copied().filter(|e| e.time <= t_end);
+            let got = cal.pop_at_most(t_end);
+            match (want, got) {
+                (None, None) => break,
+                (Some(w), Some(g)) => {
+                    assert_eq!(
+                        (w.time.to_bits(), w.seq),
+                        (g.time.to_bits(), g.seq),
+                        "pop order diverged at seq {seq}"
+                    );
+                    assert_eq!(w.kind, g.kind);
+                    heap.pop();
+                    cur = g.time;
+                }
+                (w, g) => panic!("pop divergence: heap {w:?} vs calendar {g:?}"),
+            }
+        }
+        assert_eq!(cal.len(), heap.len(), "length diverged after round {round}");
+    }
+    // final full drain
+    while let Some(w) = heap.pop() {
+        let g = cal.pop_at_most(f64::INFINITY).expect("calendar drained early");
+        assert_eq!((w.time.to_bits(), w.seq), (g.time.to_bits(), g.seq));
+    }
+    assert!(cal.is_empty());
+}
+
+#[test]
+fn optimized_core_matches_the_reference_engine_on_the_config_grid() {
+    // the pinned PR-6 reference engine and the calendar/CSR/slab core
+    // must produce bitwise-equal reports across drop/block capacities,
+    // service disciplines, server counts, and seeds
+    let (rate, mu) = (30.0, 40.0);
+    let session = mm1_session(rate, mu);
+    let phi = mm1_phi(&session);
+    for &queue_capacity in &[0usize, 1] {
+        for &servers_per_node in &[1usize, 3] {
+            for discipline in [sim::Discipline::Fifo, sim::Discipline::Lifo] {
+                for seed in [1u64, 9] {
+                    let spec = SimSpec {
+                        horizon_s: 300.0,
+                        queue_capacity,
+                        servers_per_node,
+                        discipline,
+                        ..SimSpec::default()
+                    };
+                    let fast = sim::simulate_requests(
+                        &session.problem,
+                        &phi,
+                        &[rate],
+                        vec![ArrivalTrace::constant(rate)],
+                        spec.clone(),
+                        seed,
+                    );
+                    let reference = sim::simulate_requests_reference(
+                        &session.problem,
+                        &phi,
+                        &[rate],
+                        vec![ArrivalTrace::constant(rate)],
+                        spec,
+                        seed,
+                    );
+                    assert_eq!(
+                        fast, reference,
+                        "engines diverged at cap={queue_capacity} c={servers_per_node} \
+                         {discipline:?} seed={seed}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn slab_recycling_is_invisible_through_the_omd_pipeline() {
+    // slab-recycling bit-identity through the full OMD → replay pipeline:
+    // the windowed sim_run (which exercises set_lam/set_phi buffer reuse
+    // and slab recycling across a long horizon) must reproduce the
+    // reference engine's one-shot replay of the same (Λ, φ, traces, seed)
+    // bitwise, at 1 and 4 optimization workers
+    let base = ScenarioSpec::from_file(std::path::Path::new(
+        "../examples/scenarios/two_class_er.json",
+    ))
+    .unwrap();
+    for &workers in &[1usize, 4] {
+        let mut spec = base.clone();
+        spec.workers = workers;
+        spec.sim = Some(SimSpec { horizon_s: 30.0, ..SimSpec::default() });
+        let session = spec.build().unwrap();
+        let optimized = session.routing_run("omd", 15).unwrap().finish();
+        let (_, piped) =
+            session.sim_run(4).unwrap().warm_start_from(&optimized).finish();
+        // the reference engine replays the same optimized operating point
+        // through its never-recycled request store
+        let phi = optimized.final_phi().expect("omd run carries phi");
+        let traces: Vec<ArrivalTrace> = session
+            .spec
+            .classes
+            .iter()
+            .map(|class| match &class.rate {
+                RateSpec::Constant(r) => ArrivalTrace::constant(*r),
+                RateSpec::Trace(pts) => ArrivalTrace::from_breakpoints(pts, 1.0),
+            })
+            .collect();
+        let reference = sim::simulate_requests_reference(
+            &session.problem,
+            phi,
+            &optimized.lam,
+            traces,
+            SimSpec { horizon_s: 30.0, ..SimSpec::default() },
+            session.cfg.seed,
+        );
+        assert_eq!(piped, reference, "slab recycling changed the report at {workers} workers");
+        assert!(piped.peak_inflight > 0);
+        assert!(piped.peak_inflight <= piped.arrivals);
+    }
+}
+
+#[test]
+fn hdr_latency_mode_keeps_counters_and_bounds_quantiles() {
+    // the streaming log-histogram mode must leave the event history (and
+    // every counter) untouched, reproduce the mean bitwise on this
+    // single-class workload (same sequential summation order), and land
+    // every reported quantile within the histogram's relative-error
+    // bound of the exact-sample percentiles
+    let (rate, mu) = (30.0, 40.0);
+    let session = mm1_session(rate, mu);
+    let phi = mm1_phi(&session);
+    let run = |latency| {
+        sim::simulate_requests(
+            &session.problem,
+            &phi,
+            &[rate],
+            vec![ArrivalTrace::constant(rate)],
+            SimSpec { horizon_s: 2000.0, latency, ..SimSpec::default() },
+            13,
+        )
+    };
+    let exact = run(LatencyMode::Exact);
+    let hdr = run(LatencyMode::Hdr);
+    assert_eq!(exact.arrivals, hdr.arrivals);
+    assert_eq!(exact.events, hdr.events);
+    assert_eq!(exact.completed, hdr.completed);
+    assert_eq!(exact.dropped, hdr.dropped);
+    assert_eq!(exact.peak_inflight, hdr.peak_inflight);
+    assert_eq!(
+        exact.mean_latency_s.to_bits(),
+        hdr.mean_latency_s.to_bits(),
+        "hdr mean must be the identical sequential sum"
+    );
+    for (e, h) in exact.classes.iter().zip(&hdr.classes) {
+        assert_eq!(e.completed, h.completed);
+        assert_eq!(e.mean_latency_s.to_bits(), h.mean_latency_s.to_bits());
+    }
+    // quantiles: bucket quantization is ≤ 2⁻¹⁰ relative; the looser tail
+    // bounds absorb nearest-order-statistic vs interpolated percentiles
+    for (e, h, tol, which) in [
+        (exact.p50_latency_s, hdr.p50_latency_s, 2e-3, "p50"),
+        (exact.p99_latency_s, hdr.p99_latency_s, 5e-3, "p99"),
+        (exact.p999_latency_s, hdr.p999_latency_s, 2e-2, "p999"),
+    ] {
+        assert!(
+            (h - e).abs() <= tol * e + 1e-12,
+            "{which}: hdr {h} vs exact {e} (tol {tol})"
+        );
+    }
+}
+
 /// The acceptance-scale replay: ≥10⁶ requests through an OMD-optimized
 /// two-class scenario. Ignored by default (several seconds); the hotpath
 /// bench pins the events/sec floor in CI.
